@@ -1,0 +1,60 @@
+//! Partition tuning: trace the paper's U-shaped running-time curve
+//! (Fig. 9) and find the optimal partition count for a matrix size.
+//!
+//! Demonstrates the trade-off §V-C analyzes: small `b` ⇒ huge leaf blocks
+//! and little parallelism; large `b` ⇒ deep recursion and communication
+//! overhead. Also overlays the §IV cost model's prediction.
+//!
+//! ```bash
+//! cargo run --release --example partition_tuning
+//! ```
+
+use stark::algos::Algorithm;
+use stark::config::BackendKind;
+use stark::cost;
+use stark::experiments::{Harness, Scale};
+use stark::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale {
+        sizes: vec![1024],
+        bs: vec![2, 4, 8, 16, 32],
+        backend: BackendKind::Native,
+        executors: 2,
+        cores: 2,
+        net_bandwidth: Some(1.75e9),
+        seed: 7,
+        reps: 1,
+    };
+    let cores = scale.executors * scale.cores;
+    let h = Harness::new(scale)?;
+    let n = 1024;
+
+    println!("sweeping partition counts for stark, n={n} (Fig. 9's experiment)\n");
+    let bs = h.bs_for(Algorithm::Stark, n);
+    // Cost-model predictions, normalized to the first b for comparison.
+    let preds: Vec<(usize, f64)> =
+        bs.iter().map(|&b| (b, cost::stark_cost(n, b, cores).wall(1e-6, 1e-7))).collect();
+    let base_pred = preds.first().map(|p| p.1).unwrap_or(1.0);
+
+    let mut t = Table::new(vec!["b", "wall ms", "leaf ms", "leaves", "model (rel)"]);
+    let mut best = (0usize, f64::INFINITY);
+    for &b in &bs {
+        let out = h.run_point(Algorithm::Stark, n, b);
+        if out.job.wall_ms < best.1 {
+            best = (b, out.job.wall_ms);
+        }
+        let pred = preds.iter().find(|p| p.0 == b).unwrap().1 / base_pred;
+        t.row(vec![
+            b.to_string(),
+            format!("{:.1}", out.job.wall_ms),
+            format!("{:.1}", out.leaf_ms),
+            out.leaf_calls.to_string(),
+            format!("{pred:.2}x"),
+        ]);
+    }
+    t.print();
+    println!("\noptimal partition count: b={} ({:.1} ms)", best.0, best.1);
+    println!("(the paper finds the same U-shape; too many partitions for a small matrix hurt)");
+    Ok(())
+}

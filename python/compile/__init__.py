@@ -1,0 +1,6 @@
+"""Build-time Python for Stark: L1 Pallas kernels, L2 JAX graphs, AOT lowering.
+
+Nothing in this package runs on the request path — ``make artifacts``
+invokes :mod:`compile.aot` once, and the Rust coordinator consumes the
+emitted HLO-text artifacts via PJRT thereafter.
+"""

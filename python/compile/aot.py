@@ -1,0 +1,202 @@
+"""AOT pipeline: lower L2 graphs to HLO *text* artifacts + manifest.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+For every (kernel, block size, dtype) in the grid this writes
+``<name>.hlo.txt`` plus a single ``manifest.json`` that the Rust runtime
+parses to discover artifact shapes and arity.
+
+Interchange format is HLO **text**, not ``lowered.compile().serialize()``:
+the ``xla`` crate links xla_extension 0.5.1 which rejects jax>=0.5
+serialized protos (64-bit instruction ids, ``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. Lowering goes through
+stablehlo -> XlaComputation with ``return_tuple=True`` so the Rust side
+always unwraps one tuple (see /opt/xla-example/gen_hlo.py).
+
+Two multiply implementations are emitted per size (DESIGN.md §6 ablation):
+
+- ``impl=pallas`` — the L1 tiled Pallas kernel, lowered via interpret mode
+  (a fori-loop of VMEM-tile dots; structure matches the TPU pipeline).
+- ``impl=dot`` — plain ``jnp.matmul`` (single HLO dot, Eigen gemm on the
+  CPU PJRT backend); the production default for the CPU runtime, exactly
+  as the paper's leaf multiply defers to BLAS.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import kernels, model  # noqa: E402
+
+DEFAULT_SIZES = (16, 32, 64, 128, 256, 512, 1024)
+DEFAULT_DTYPES = ("f64", "f32")
+
+
+@dataclass
+class Spec:
+    """One artifact to lower: a callable plus its example input shapes."""
+
+    name: str
+    kind: str  # matmul | add | sub | mterms | combine7 | strassen_leaf
+    impl: str  # pallas | dot
+    dtype: str
+    block: int
+    fn: Callable
+    num_inputs: int
+    num_outputs: int
+    input_shape: tuple[int, int]
+    meta: dict = field(default_factory=dict)
+
+
+def _dot_matmul():
+    def fn(x, y):
+        return (jnp.matmul(x, y),)
+
+    return fn
+
+
+def _dot_strassen_leaf():
+    def fn(a11, a12, a21, a22, b11, b12, b21, b22):
+        ops = kernels.ref.mterms(a11, a12, a21, a22, b11, b12, b21, b22)
+        ms = [jnp.matmul(ops[i], ops[7 + i]) for i in range(7)]
+        return kernels.ref.strassen_combine(*ms)
+
+    return fn
+
+
+def build_specs(sizes: Sequence[int], dtypes: Sequence[str]) -> list[Spec]:
+    """The artifact grid. Element-wise kernels are emitted once per size
+    (pallas impl only — there is nothing to ablate for VPU adds)."""
+    specs: list[Spec] = []
+    for dt in dtypes:
+        for s in sizes:
+            shape = (s, s)
+            specs.append(
+                Spec(f"matmul_pallas_{dt}_{s}", "matmul", "pallas", dt, s,
+                     model.block_matmul(), 2, 1, shape)
+            )
+            specs.append(
+                Spec(f"matmul_dot_{dt}_{s}", "matmul", "dot", dt, s,
+                     _dot_matmul(), 2, 1, shape)
+            )
+            # One-level fused Strassen over (s, s) quadrants.
+            specs.append(
+                Spec(f"strassen_leaf_pallas_{dt}_{s}", "strassen_leaf", "pallas",
+                     dt, s, model.strassen_leaf(), 8, 4, shape)
+            )
+            specs.append(
+                Spec(f"strassen_leaf_dot_{dt}_{s}", "strassen_leaf", "dot",
+                     dt, s, _dot_strassen_leaf(), 8, 4, shape)
+            )
+            specs.append(
+                Spec(f"add_{dt}_{s}", "add", "pallas", dt, s,
+                     model.block_add(), 2, 1, shape)
+            )
+            specs.append(
+                Spec(f"sub_{dt}_{s}", "sub", "pallas", dt, s,
+                     model.block_sub(), 2, 1, shape)
+            )
+            specs.append(
+                Spec(f"mterms_{dt}_{s}", "mterms", "pallas", dt, s,
+                     model.block_mterms(), 8, 14, shape)
+            )
+            specs.append(
+                Spec(f"combine7_{dt}_{s}", "combine7", "pallas", dt, s,
+                     model.block_combine7(), 7, 4, shape)
+            )
+    return specs
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec: Spec) -> str:
+    dtype = model.dtype_of(spec.dtype)
+    args = [jax.ShapeDtypeStruct(spec.input_shape, dtype)] * spec.num_inputs
+    lowered = jax.jit(spec.fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def emit(out_dir: str, sizes: Sequence[int], dtypes: Sequence[str],
+         verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    specs = build_specs(sizes, dtypes)
+    entries = []
+    for spec in specs:
+        text = lower_spec(spec)
+        fname = f"{spec.name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        entries.append(
+            {
+                "name": spec.name,
+                "file": fname,
+                "kind": spec.kind,
+                "impl": spec.impl,
+                "dtype": spec.dtype,
+                "block": spec.block,
+                "num_inputs": spec.num_inputs,
+                "num_outputs": spec.num_outputs,
+                "input_shape": list(spec.input_shape),
+                "sha256_16": digest,
+                "hlo_bytes": len(text),
+            }
+        )
+        if verbose:
+            print(f"  {fname:<40} {len(text):>9} B", file=sys.stderr)
+    manifest = {
+        "format": 1,
+        "jax_version": jax.__version__,
+        "default_tile": kernels.DEFAULT_TILE,
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {len(entries)} artifacts + manifest.json to {out_dir}",
+              file=sys.stderr)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--sizes", default=",".join(map(str, DEFAULT_SIZES)),
+                    help="comma-separated block sizes (powers of two)")
+    ap.add_argument("--dtypes", default=",".join(DEFAULT_DTYPES),
+                    help="comma-separated dtypes (f32,f64)")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    for s in sizes:
+        if s < 2 or s & (s - 1):
+            raise SystemExit(f"block size {s} is not a power of two >= 2")
+    dtypes = [d.strip() for d in args.dtypes.split(",") if d.strip()]
+    emit(args.out, sizes, dtypes, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

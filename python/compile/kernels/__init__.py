@@ -1,0 +1,28 @@
+"""L1 Pallas kernels for Stark's leaf-node compute.
+
+Public surface:
+
+- :func:`matmul` — tiled MXU-oriented block multiply (the hot path).
+- :func:`mterms` — fused divide-phase additions (8 quadrants -> 14 operands).
+- :func:`strassen_combine` — fused combine-phase additions (M1..M7 -> C).
+- :func:`add` / :func:`sub` — pairwise block add/subtract.
+- ``ref`` — the pure-jnp oracle module.
+
+All kernels run under ``interpret=True`` (see matmul.py docstring).
+"""
+
+from .combine import add, mterms, strassen_combine, sub
+from .matmul import DEFAULT_TILE, matmul, mxu_utilization_estimate, vmem_bytes
+from . import ref
+
+__all__ = [
+    "DEFAULT_TILE",
+    "add",
+    "matmul",
+    "mterms",
+    "mxu_utilization_estimate",
+    "ref",
+    "strassen_combine",
+    "sub",
+    "vmem_bytes",
+]

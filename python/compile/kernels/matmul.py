@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: tiled block matrix multiplication.
+
+This is the leaf-node multiply of the Stark recursion — the role BLAS
+(via Breeze/JNI) plays in the paper. The kernel is written for the TPU
+execution model and adapted per DESIGN.md §Hardware-Adaptation:
+
+- The input matrices are tiled into ``(TM, TK)`` / ``(TK, TN)`` VMEM-resident
+  blocks via ``BlockSpec``; the grid iterates ``(M/TM, N/TN, K/TK)`` with the
+  K dimension innermost so the output tile acts as an accumulator that stays
+  resident while a row-panel of X and a column-panel of Y stream through
+  VMEM (the HBM<->VMEM schedule the paper expressed with Spark partitions).
+- Tiles default to 128x128 — the MXU-native systolic shape — and the inner
+  product is issued with ``preferred_element_type`` so the MXU accumulates
+  at full precision.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO which both the pytest
+oracle checks and the Rust runtime execute. On a real TPU the same kernel
+compiles to an MXU pipeline; VMEM footprint estimates are recorded in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile edge. 3 tiles (x, y, acc) * 128*128*8B (f64) = 384 KiB,
+# comfortably below the ~16 MiB VMEM budget; see DESIGN.md §Hardware-Adaptation.
+DEFAULT_TILE = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """Grid point (i, j, k): o[i,j] += x[i,k] @ y[k,j].
+
+    The output BlockSpec maps every k to the same (i, j) tile, so ``o_ref``
+    is the VMEM-resident accumulator across the innermost K loop.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pick_tile(dim: int, requested: int | None) -> int:
+    """Largest power-of-two tile <= requested that divides ``dim``."""
+    tile = min(requested or DEFAULT_TILE, dim)
+    while dim % tile != 0:
+        tile //= 2
+    if tile < 1:
+        raise ValueError(f"no valid tile for dim={dim}")
+    return tile
+
+
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    tile_m: int | None = None,
+    tile_n: int | None = None,
+    tile_k: int | None = None,
+) -> jax.Array:
+    """Multiply ``x @ y`` with the tiled Pallas kernel.
+
+    Both operands must be 2-D with matching contraction dims. Tile sizes
+    default to :data:`DEFAULT_TILE`, clamped down to the largest power of
+    two dividing each dimension.
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {y.shape}")
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    if x.dtype != y.dtype:
+        raise ValueError(f"dtype mismatch: {x.dtype} vs {y.dtype}")
+
+    tm = _pick_tile(m, tile_m)
+    tn = _pick_tile(n, tile_n)
+    tk = _pick_tile(k, tile_k)
+    n_k = k // tk
+
+    kernel = functools.partial(_matmul_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // tm, n // tn, n_k),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_bytes(tile_m: int, tile_n: int, tile_k: int, itemsize: int) -> int:
+    """VMEM residency estimate for one grid step (x tile + y tile + acc)."""
+    return itemsize * (tile_m * tile_k + tile_k * tile_n + tile_m * tile_n)
+
+
+def mxu_utilization_estimate(tile_m: int, tile_n: int, tile_k: int) -> float:
+    """Fraction of MXU 128x128x128 issue slots filled by one tile matmul.
+
+    Structure-only estimate (interpret mode gives numpy wallclock, not TPU):
+    a (TM, TK) x (TK, TN) tile multiply occupies ceil(TM/128)*ceil(TN/128)*
+    ceil(TK/128) MXU passes; utilization is the filled fraction of those.
+    """
+
+    def _ceil(a: int, b: int) -> int:
+        return -(-a // b)
+
+    passes = _ceil(tile_m, 128) * _ceil(tile_n, 128) * _ceil(tile_k, 128)
+    ideal = (tile_m / 128) * (tile_n / 128) * (tile_k / 128)
+    return ideal / passes

@@ -1,0 +1,85 @@
+"""Pure-jnp oracle for every L1 kernel and L2 graph.
+
+This module is the correctness ground truth: pytest/hypothesis pin the
+Pallas kernels (and the AOT artifacts executed from Rust) to these
+definitions with ``assert_allclose``. Everything here is straight-line
+``jnp`` — no Pallas, no custom calls.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    """Reference block multiply."""
+    return jnp.matmul(x, y)
+
+
+def mterms(a11, a12, a21, a22, b11, b12, b21, b22):
+    """Reference divide-phase operands ``(L1..L7, R1..R7)``, M_i = L_i @ R_i."""
+    ls = (
+        a11 + a22,
+        a21 + a22,
+        a11,
+        a22,
+        a11 + a12,
+        a21 - a11,
+        a12 - a22,
+    )
+    rs = (
+        b11 + b22,
+        b11,
+        b12 - b22,
+        b21 - b11,
+        b22,
+        b11 + b12,
+        b21 + b22,
+    )
+    return ls + rs
+
+
+def strassen_combine(m1, m2, m3, m4, m5, m6, m7):
+    """Reference combine: M1..M7 -> (C11, C12, C21, C22).
+
+    Uses Strassen's correct ``C22 = M1 - M2 + M3 + M6`` (the paper's
+    Algorithm 1 misprints the sign of M3 — see kernels/combine.py).
+    """
+    c11 = m1 + m4 - m5 + m7
+    c12 = m3 + m5
+    c21 = m2 + m4
+    c22 = m1 - m2 + m3 + m6
+    return c11, c12, c21, c22
+
+
+def strassen_leaf(a11, a12, a21, a22, b11, b12, b21, b22):
+    """Reference one-level Strassen step on quadrants."""
+    ops = mterms(a11, a12, a21, a22, b11, b12, b21, b22)
+    ms = [jnp.matmul(ops[i], ops[7 + i]) for i in range(7)]
+    return strassen_combine(*ms)
+
+
+def split(x):
+    """Split a square matrix into (x11, x12, x21, x22) quadrants."""
+    n = x.shape[0] // 2
+    return x[:n, :n], x[:n, n:], x[n:, :n], x[n:, n:]
+
+
+def assemble(c11, c12, c21, c22):
+    """Inverse of :func:`split`."""
+    return jnp.block([[c11, c12], [c21, c22]])
+
+
+def strassen_recursive(a, b, depth: int):
+    """Full Strassen recursion to ``depth`` levels, leaves via jnp.matmul.
+
+    Mirrors the serial Algorithm 1 and the distributed recursion's math;
+    used to cross-check the Rust coordinator's results at the L2 level.
+    """
+    if depth <= 0 or a.shape[0] < 2:
+        return jnp.matmul(a, b)
+    a11, a12, a21, a22 = split(a)
+    b11, b12, b21, b22 = split(b)
+    ops = mterms(a11, a12, a21, a22, b11, b12, b21, b22)
+    ms = [strassen_recursive(ops[i], ops[7 + i], depth - 1) for i in range(7)]
+    return assemble(*strassen_combine(*ms))

@@ -1,0 +1,105 @@
+"""L2 JAX compute graphs for Stark's leaf operations.
+
+Each function returns a jit-able JAX callable over *static* block shapes;
+``aot.py`` lowers them to HLO text once per (kernel, block size, dtype) and
+the Rust coordinator executes the artifacts via PJRT on the request path.
+
+The graphs call the L1 Pallas kernels so the kernels lower into the same
+HLO module. ``strassen_leaf`` is the fused variant: one XLA program runs
+the full one-level Strassen step (14 divide additions, 7 tile-pipelined
+multiplications, 8 combine additions) over a 2x2 quadrant split — this is
+what the coordinator dispatches when a Stark recursion bottoms out one
+level above the block size (ablation: 7 separate ``matmul`` calls).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from . import kernels
+
+_DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+
+def dtype_of(name: str):
+    """Map manifest dtype names (``f32``/``f64``) to jnp dtypes."""
+    try:
+        return _DTYPES[name]
+    except KeyError:
+        raise ValueError(f"unknown dtype {name!r}; expected one of {sorted(_DTYPES)}")
+
+
+def block_matmul() -> Callable:
+    """``C = A @ B`` on a single block via the L1 tiled kernel."""
+
+    def fn(x, y):
+        return (kernels.matmul(x, y),)
+
+    return fn
+
+
+def block_add() -> Callable:
+    """Pairwise block add (divide/combine unit step)."""
+
+    def fn(x, y):
+        return (kernels.add(x, y),)
+
+    return fn
+
+
+def block_sub() -> Callable:
+    """Pairwise block subtract (divide/combine unit step)."""
+
+    def fn(x, y):
+        return (kernels.sub(x, y),)
+
+    return fn
+
+
+def block_mterms() -> Callable:
+    """Divide-phase fused additions: 8 quadrants -> 14 M-term operands."""
+
+    def fn(*quads):
+        return kernels.mterms(*quads)
+
+    return fn
+
+
+def block_combine7() -> Callable:
+    """Combine-phase fused additions: M1..M7 -> C11, C12, C21, C22."""
+
+    def fn(*ms):
+        return kernels.strassen_combine(*ms)
+
+    return fn
+
+
+def strassen_leaf() -> Callable:
+    """One full Strassen level over quadrants, fused into one XLA program.
+
+    Inputs: ``a11, a12, a21, a22, b11, b12, b21, b22`` (each ``(s, s)``);
+    outputs: ``c11, c12, c21, c22``. 7 multiplications, 22 additions.
+    """
+
+    def fn(a11, a12, a21, a22, b11, b12, b21, b22):
+        ops = kernels.mterms(a11, a12, a21, a22, b11, b12, b21, b22)
+        ms = [kernels.matmul(ops[i], ops[7 + i]) for i in range(7)]
+        return kernels.strassen_combine(*ms)
+
+    return fn
+
+
+def strassen_recursive(depth: int) -> Callable:
+    """Full in-graph Strassen recursion (validation/ablation only).
+
+    The distributed system never lowers this — the recursion is the Rust
+    coordinator's job — but lowering it for small sizes lets tests compare
+    the coordinator's stage-by-stage results against a single fused graph.
+    """
+
+    def fn(a, b):
+        return (kernels.ref.strassen_recursive(a, b, depth),)
+
+    return fn

@@ -1,0 +1,9 @@
+"""Shared test config: enable x64 before any jax import in tests.
+
+The paper's matrices are IEEE-754 doubles; all artifact/dtype sweeps
+include f64, which requires the x64 flag at process start.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

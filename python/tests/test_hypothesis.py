@@ -1,0 +1,95 @@
+"""Property-based sweeps: kernel shapes/dtypes/tilings vs the jnp oracle.
+
+Hypothesis drives the Pallas kernels over the full supported domain
+(power-of-two dims, both dtypes, arbitrary tile choices) and pins them to
+``ref.py`` with assert_allclose, per the repo testing contract.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+pow2 = st.sampled_from([2, 4, 8, 16, 32, 64])
+dtypes = st.sampled_from([np.float32, np.float64])
+
+
+def _arr(data, shape, dtype):
+    n = int(np.prod(shape))
+    vals = data.draw(
+        st.lists(
+            st.floats(-100, 100, allow_nan=False, allow_infinity=False, width=32),
+            min_size=n, max_size=n,
+        )
+    )
+    return jnp.asarray(np.array(vals, dtype=dtype).reshape(shape))
+
+
+def _tol(dtype):
+    return dict(rtol=1e-9, atol=1e-7) if dtype == np.float64 else dict(
+        rtol=1e-3, atol=1e-2)
+
+
+@settings(**SETTINGS)
+@given(st.data(), pow2, pow2, pow2, dtypes)
+def test_matmul_property(data, m, k, n, dtype):
+    x = _arr(data, (m, k), dtype)
+    y = _arr(data, (k, n), dtype)
+    got = kernels.matmul(x, y)
+    assert got.shape == (m, n) and got.dtype == dtype
+    np.testing.assert_allclose(got, ref.matmul(x, y), **_tol(dtype))
+
+
+@settings(**SETTINGS)
+@given(st.data(), pow2, st.sampled_from([2, 4, 8, 16, 32, 128]))
+def test_matmul_tiling_invariance(data, n, tile):
+    """Any tile choice yields the same product (mod fp reassociation)."""
+    x = _arr(data, (n, n), np.float64)
+    y = _arr(data, (n, n), np.float64)
+    got = kernels.matmul(x, y, tile_m=tile, tile_n=tile, tile_k=tile)
+    np.testing.assert_allclose(got, ref.matmul(x, y), rtol=1e-9, atol=1e-7)
+
+
+@settings(**SETTINGS)
+@given(st.data(), pow2, dtypes)
+def test_mterms_property(data, n, dtype):
+    quads = [_arr(data, (n, n), dtype) for _ in range(8)]
+    got = kernels.mterms(*quads)
+    want = ref.mterms(*quads)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=0, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(st.data(), pow2, dtypes)
+def test_combine_property(data, n, dtype):
+    ms = [_arr(data, (n, n), dtype) for _ in range(7)]
+    got = kernels.strassen_combine(*ms)
+    want = ref.strassen_combine(*ms)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-6, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.data(), st.sampled_from([2, 4, 8, 16]))
+def test_strassen_leaf_property(data, n):
+    """Fused leaf == plain product on arbitrary inputs."""
+    a = _arr(data, (2 * n, 2 * n), np.float64)
+    b = _arr(data, (2 * n, 2 * n), np.float64)
+    c = ref.strassen_leaf(*ref.split(a), *ref.split(b))
+    np.testing.assert_allclose(
+        ref.assemble(*c), jnp.matmul(a, b), rtol=1e-8, atol=1e-6
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data(), st.sampled_from([4, 8, 16, 32]), st.integers(0, 4))
+def test_strassen_recursive_property(data, n, depth):
+    a = _arr(data, (n, n), np.float64)
+    b = _arr(data, (n, n), np.float64)
+    got = ref.strassen_recursive(a, b, depth)
+    np.testing.assert_allclose(got, jnp.matmul(a, b), rtol=1e-7, atol=1e-5)

@@ -1,0 +1,170 @@
+"""L1 kernel correctness: every Pallas kernel vs the pure-jnp oracle.
+
+This is the core correctness signal of the compile path: the same
+functions lowered here are what the Rust coordinator executes via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import kernels
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def rand(shape, dtype=np.float64, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype=dtype)
+
+
+def tol(dtype):
+    return dict(rtol=1e-10, atol=1e-10) if dtype == np.float64 else dict(
+        rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 64, 128, 256])
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+def test_matmul_square(n, dtype):
+    x, y = rand((n, n), dtype), rand((n, n), dtype)
+    got = kernels.matmul(x, y)
+    np.testing.assert_allclose(got, ref.matmul(x, y), **tol(dtype))
+    assert got.dtype == dtype
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 8, 16), (16, 4, 2), (128, 32, 64),
+                                   (2, 256, 2), (64, 64, 256)])
+def test_matmul_rectangular(m, k, n):
+    x, y = rand((m, k)), rand((k, n))
+    np.testing.assert_allclose(kernels.matmul(x, y), ref.matmul(x, y),
+                               rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("tile", [2, 4, 8, 16, 32, 64])
+def test_matmul_explicit_tiles(tile):
+    """Tiling must not change the result (accumulation order differs)."""
+    n = 64
+    x, y = rand((n, n)), rand((n, n))
+    got = kernels.matmul(x, y, tile_m=tile, tile_n=tile, tile_k=tile)
+    np.testing.assert_allclose(got, ref.matmul(x, y), rtol=1e-9, atol=1e-9)
+
+
+def test_matmul_tile_larger_than_dim_clamps():
+    x, y = rand((8, 8)), rand((8, 8))
+    got = kernels.matmul(x, y, tile_m=4096, tile_n=4096, tile_k=4096)
+    np.testing.assert_allclose(got, ref.matmul(x, y), rtol=1e-10, atol=1e-10)
+
+
+def test_matmul_identity():
+    n = 32
+    x = rand((n, n))
+    eye = jnp.eye(n, dtype=x.dtype)
+    np.testing.assert_allclose(kernels.matmul(x, eye), x, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(kernels.matmul(eye, x), x, rtol=1e-12, atol=1e-12)
+
+
+def test_matmul_zeros():
+    n = 16
+    z = jnp.zeros((n, n))
+    np.testing.assert_array_equal(kernels.matmul(z, rand((n, n))), z)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        kernels.matmul(rand((4, 8)), rand((4, 8)))
+    with pytest.raises(ValueError):
+        kernels.matmul(rand((4,)), rand((4, 4)))
+    with pytest.raises(ValueError):
+        kernels.matmul(rand((4, 4), np.float32), rand((4, 4), np.float64))
+
+
+@pytest.mark.parametrize("n", [2, 8, 32, 128])
+def test_mterms_matches_ref(n):
+    quads = [rand((n, n)) for _ in range(8)]
+    got = kernels.mterms(*quads)
+    want = ref.mterms(*quads)
+    assert len(got) == 14
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("n", [2, 8, 32, 128])
+def test_strassen_combine_matches_ref(n):
+    ms = [rand((n, n)) for _ in range(7)]
+    got = kernels.strassen_combine(*ms)
+    want = ref.strassen_combine(*ms)
+    assert len(got) == 4
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("n", [4, 16, 64])
+def test_add_sub(n):
+    x, y = rand((n, n)), rand((n, n))
+    np.testing.assert_allclose(kernels.add(x, y), x + y, rtol=0, atol=0)
+    np.testing.assert_allclose(kernels.sub(x, y), x - y, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("n", [2, 8, 32])
+def test_strassen_leaf_vs_plain_matmul(n):
+    """One fused Strassen level == the plain product, assembled."""
+    a, b = rand((2 * n, 2 * n)), rand((2 * n, 2 * n))
+    aq, bq = ref.split(a), ref.split(b)
+    c11, c12, c21, c22 = ref.strassen_leaf(*aq, *bq)
+    got = ref.assemble(c11, c12, c21, c22)
+    np.testing.assert_allclose(got, a @ b, rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("n", [2, 8, 32])
+def test_strassen_leaf_kernel_path(n):
+    """The Pallas-kernel leaf (mterms -> matmul -> combine) == plain product."""
+    from compile import model
+
+    a, b = rand((2 * n, 2 * n)), rand((2 * n, 2 * n))
+    aq, bq = ref.split(a), ref.split(b)
+    c = model.strassen_leaf()(*aq, *bq)
+    got = ref.assemble(*c)
+    np.testing.assert_allclose(got, a @ b, rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("depth", [0, 1, 2, 3])
+def test_strassen_recursive_depths(depth):
+    n = 32
+    a, b = rand((n, n)), rand((n, n))
+    got = ref.strassen_recursive(a, b, depth)
+    np.testing.assert_allclose(got, a @ b, rtol=1e-8, atol=1e-8)
+
+
+def test_split_assemble_roundtrip():
+    x = rand((16, 16))
+    np.testing.assert_array_equal(ref.assemble(*ref.split(x)), x)
+
+
+def test_paper_c22_typo_would_be_wrong():
+    """Regression guard for the Algorithm-1 misprint (C22 sign of M3).
+
+    With the paper's printed combine (M1 - M2 - M3 + M6) the product is
+    wrong; our implementation uses the standard identity. Keep this test so
+    nobody 'fixes' the combine back to the paper's typo.
+    """
+    n = 4
+    a, b = rand((2 * n, 2 * n)), rand((2 * n, 2 * n))
+    aq, bq = ref.split(a), ref.split(b)
+    ops = ref.mterms(*aq, *bq)
+    ms = [ops[i] @ ops[7 + i] for i in range(7)]
+    c22_paper = ms[0] - ms[1] - ms[2] + ms[5]
+    c22_true = (a @ b)[n:, n:]
+    assert not np.allclose(c22_paper, c22_true)
+
+
+def test_vmem_estimate():
+    # 128-tiles of f64: 3 * 128*128*8 = 384 KiB, within a 16 MiB VMEM.
+    assert kernels.vmem_bytes(128, 128, 128, 8) == 3 * 128 * 128 * 8
+    assert kernels.vmem_bytes(128, 128, 128, 8) < 16 * 2**20
+
+
+def test_mxu_utilization_estimate():
+    assert kernels.mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert kernels.mxu_utilization_estimate(64, 64, 64) == pytest.approx(1 / 8)
+    assert kernels.mxu_utilization_estimate(256, 256, 256) == 1.0

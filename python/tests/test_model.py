@@ -1,0 +1,91 @@
+"""L2 graph tests: the model-level callables that aot.py lowers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xBEEF)
+
+
+def rand(shape, dtype=np.float64):
+    return jnp.asarray(RNG.standard_normal(shape), dtype=dtype)
+
+
+@pytest.mark.parametrize("n", [4, 16, 64])
+def test_block_matmul_graph(n):
+    f = model.block_matmul()
+    x, y = rand((n, n)), rand((n, n))
+    (got,) = f(x, y)
+    np.testing.assert_allclose(got, x @ y, rtol=1e-10, atol=1e-10)
+
+
+def test_block_add_sub_graphs():
+    x, y = rand((8, 8)), rand((8, 8))
+    np.testing.assert_array_equal(model.block_add()(x, y)[0], x + y)
+    np.testing.assert_array_equal(model.block_sub()(x, y)[0], x - y)
+
+
+def test_block_mterms_graph_matches_ref():
+    quads = [rand((8, 8)) for _ in range(8)]
+    got = model.block_mterms()(*quads)
+    want = ref.mterms(*quads)
+    assert len(got) == 14
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=0, atol=1e-12)
+
+
+def test_block_combine7_graph_matches_ref():
+    ms = [rand((8, 8)) for _ in range(7)]
+    got = model.block_combine7()(*ms)
+    want = ref.strassen_combine(*ms)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=0, atol=1e-12)
+
+
+@pytest.mark.parametrize("n", [4, 16])
+def test_strassen_leaf_graph_is_the_product(n):
+    a, b = rand((2 * n, 2 * n)), rand((2 * n, 2 * n))
+    quads = list(ref.split(a)) + list(ref.split(b))
+    c = model.strassen_leaf()(*quads)
+    np.testing.assert_allclose(ref.assemble(*c), a @ b, rtol=1e-9, atol=1e-9)
+
+
+def test_strassen_recursive_graph():
+    f = model.strassen_recursive(2)
+    a, b = rand((16, 16)), rand((16, 16))
+    (got,) = f(a, b)
+    np.testing.assert_allclose(got, a @ b, rtol=1e-8, atol=1e-8)
+
+
+@pytest.mark.parametrize("fn_name,num_in", [
+    ("block_matmul", 2), ("block_add", 2), ("block_sub", 2),
+    ("block_mterms", 8), ("block_combine7", 7), ("strassen_leaf", 8),
+])
+def test_graphs_are_jittable_and_lowerable(fn_name, num_in):
+    """Everything aot.py emits must trace under jit with static shapes."""
+    fn = getattr(model, fn_name)()
+    args = [jax.ShapeDtypeStruct((8, 8), jnp.float64)] * num_in
+    lowered = jax.jit(fn).lower(*args)
+    text = lowered.as_text()
+    assert "func.func public @main" in text or "ENTRY" in text
+
+
+def test_strassen_leaf_hlo_has_seven_dots():
+    """The fused leaf must lower to exactly 7 contractions (L2 perf
+    invariant — EXPERIMENTS.md §Perf)."""
+    args = [jax.ShapeDtypeStruct((16, 16), jnp.float64)] * 8
+    lowered = jax.jit(model.strassen_leaf()).lower(*args)
+    text = lowered.as_text()  # stablehlo
+    dots = text.count("dot_general")
+    assert dots == 7, f"expected 7 dot_general ops, found {dots}"
+
+
+def test_dtype_of():
+    assert model.dtype_of("f64") == jnp.float64
+    assert model.dtype_of("f32") == jnp.float32
+    with pytest.raises(ValueError):
+        model.dtype_of("bf16")

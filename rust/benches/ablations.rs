@@ -1,0 +1,26 @@
+//! Bench: DESIGN.md §6 ablations — leaf backend, fused leaf, network
+//! model, multiply isolation.
+
+use stark::experiments::{ablations, Harness, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale {
+        sizes: vec![512],
+        bs: vec![4, 8],
+        backend: stark::config::BackendKind::Native,
+        net_bandwidth: Some(1.75e9),
+        reps: 1,
+        ..Default::default()
+    };
+    let h = Harness::new(scale)?;
+    let (ab, _) = ablations::run(&h)?;
+    if let (Some(f), Some(r)) = (ab.get("fused_leaf", "fused"), ab.get("fused_leaf", "recursed")) {
+        println!(
+            "\nfused leaf saves {:.1}% wall time at n={} b={}",
+            (1.0 - f.wall_ms / r.wall_ms) * 100.0,
+            ab.n,
+            ab.b
+        );
+    }
+    Ok(())
+}

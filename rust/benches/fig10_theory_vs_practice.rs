@@ -1,0 +1,31 @@
+//! Bench: paper Fig. 10 — analytic §IV cost model vs measured wall time.
+
+use stark::experiments::{fig10, fig9, Harness, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale {
+        sizes: vec![512, 1024],
+        bs: vec![2, 4, 8, 16],
+        backend: stark::config::BackendKind::Native,
+        net_bandwidth: Some(1.75e9),
+        reps: 1,
+        ..Default::default()
+    };
+    let h = Harness::new(scale)?;
+    let (sweep, _) = fig9::run(&h)?;
+    let (fig, _) = fig10::run(&h, &sweep)?;
+
+    use stark::algos::Algorithm;
+    for &n in &h.scale.sizes {
+        for algo in Algorithm::ALL {
+            if let Some((mb, pb)) = fig.minima(algo, n) {
+                let close = mb == pb || mb == pb * 2 || pb == mb * 2;
+                println!(
+                    "minima {algo} n={n}: measured b={mb}, predicted b={pb} ({})",
+                    if close { "match/adjacent — as in paper" } else { "apart" }
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Bench: paper Fig. 11 + Tables VIII–X — stage-wise breakdown.
+
+use stark::experiments::{fig11, Harness, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale {
+        sizes: vec![512, 1024],
+        bs: vec![2, 4, 8, 16],
+        backend: stark::config::BackendKind::Native,
+        net_bandwidth: Some(1.75e9),
+        reps: 1,
+        ..Default::default()
+    };
+    let h = Harness::new(scale)?;
+    let (fig, _) = fig11::run(&h)?;
+
+    // Paper claims: Stage 3 dominates the baselines; Stark's dominant
+    // phase shifts from multiply to divide as b grows.
+    use stark::algos::Algorithm;
+    let n = *h.scale.sizes.last().unwrap();
+    for algo in [Algorithm::Mllib, Algorithm::Marlin] {
+        if let Some(s) = fig.get(algo, n, 4) {
+            println!("{algo} n={n} b=4 dominant: {} (paper: stage3)", s.dominant());
+        }
+    }
+    let small_b = fig.get(Algorithm::Stark, n, 2).map(|s| s.dominant().to_string());
+    let large_b = fig
+        .get(Algorithm::Stark, n, *h.scale.bs.last().unwrap())
+        .map(|s| s.dominant().to_string());
+    println!("stark dominant at small b: {small_b:?}, at large b: {large_b:?} (paper: multiply → divide)");
+    Ok(())
+}

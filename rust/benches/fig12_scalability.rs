@@ -1,0 +1,26 @@
+//! Bench: paper Fig. 12 — strong scalability vs executor count.
+
+use stark::experiments::{fig12, Harness, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale {
+        sizes: vec![512, 1024],
+        bs: vec![4, 8],
+        backend: stark::config::BackendKind::Native,
+        cores: 1,
+        net_bandwidth: None, // isolate compute scaling
+        reps: 2,
+        ..Default::default()
+    };
+    let h = Harness::new(scale)?;
+    let (fig, _) = fig12::run(&h, &[1, 2, 4])?;
+    for &n in &h.scale.sizes {
+        if let Some(e) = fig.efficiency(n) {
+            println!(
+                "n={n}: efficiency {:.0}% (paper: near-ideal, degrading at small n)",
+                e * 100.0
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Bench: paper Fig. 8 — fastest wall time vs matrix size, three systems.
+//!
+//! `cargo bench --bench fig8_fastest` runs a bench-scale grid; the full
+//! experiment (with the paper's network model and XLA backend) is
+//! `stark-bench fig8`.
+
+use stark::experiments::{fig8, Harness, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale {
+        sizes: vec![512, 1024, 2048],
+        bs: vec![2, 4, 8],
+        backend: stark::config::BackendKind::Native,
+        net_bandwidth: Some(1.75e9),
+        reps: 2,
+        ..Default::default()
+    };
+    let h = Harness::new(scale)?;
+    let (fig, _) = fig8::run(&h)?;
+
+    // Shape assertions (the claims the paper's Fig. 8 makes).
+    use stark::algos::Algorithm;
+    let n_max = *h.scale.sizes.last().unwrap();
+    let stark_w = fig.best(Algorithm::Stark, n_max).unwrap().wall_ms;
+    let marlin_w = fig.best(Algorithm::Marlin, n_max).unwrap().wall_ms;
+    println!(
+        "\nshape check at n={n_max}: stark {:.1} ms vs marlin {:.1} ms ({})",
+        stark_w,
+        marlin_w,
+        if stark_w < marlin_w { "stark wins — matches paper" } else { "INVERTED vs paper" }
+    );
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Bench: paper Fig. 9 — wall time vs partition count (U-curves).
+
+use stark::experiments::{fig9, Harness, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale {
+        sizes: vec![512, 1024],
+        bs: vec![2, 4, 8, 16, 32],
+        backend: stark::config::BackendKind::Native,
+        net_bandwidth: Some(1.75e9),
+        reps: 2,
+        ..Default::default()
+    };
+    let h = Harness::new(scale)?;
+    let (fig, _) = fig9::run(&h)?;
+
+    use stark::algos::Algorithm;
+    for &n in &h.scale.sizes {
+        for algo in Algorithm::ALL {
+            let u = fig.u_shaped(algo, n);
+            println!("U-shape {algo} n={n}: {}", if u { "yes — matches paper" } else { "no" });
+        }
+    }
+    Ok(())
+}

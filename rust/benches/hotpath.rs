@@ -1,0 +1,112 @@
+//! Hot-path microbenchmarks — the §Perf instrument (EXPERIMENTS.md).
+//!
+//! Times the individual pieces the whole system is built from, so the
+//! perf pass can see where wall time actually goes:
+//!
+//! - native leaf multiply at each block size (tile sweep);
+//! - PJRT dispatch: XLA `dot` artifact per block size (when built), i.e.
+//!   channel + literal marshalling + execute;
+//! - the fused `strassen_leaf` artifact vs 7 separate dispatches;
+//! - engine overhead: an empty-payload stark run (coordination cost);
+//! - divide/combine signed block additions.
+
+use std::time::Duration;
+
+use stark::matrix::multiply::matmul_blocked_with;
+use stark::matrix::DenseMatrix;
+use stark::util::bench::{bench_budget, black_box, print_header};
+
+fn main() -> anyhow::Result<()> {
+    let budget = Duration::from_millis(400);
+
+    print_header("native leaf multiply (blocked kernel, tile sweep @256)");
+    let a = DenseMatrix::random(256, 256, 1);
+    let b = DenseMatrix::random(256, 256, 2);
+    for tile in [16usize, 32, 64, 128, 256] {
+        let r = bench_budget(&format!("blocked tile={tile}"), budget, 3, || {
+            black_box(matmul_blocked_with(&a, &b, tile));
+        });
+        println!("{}", r.line());
+    }
+
+    print_header("native leaf multiply per block size");
+    for n in [32usize, 64, 128, 256, 512] {
+        let a = DenseMatrix::random(n, n, 3);
+        let b = DenseMatrix::random(n, n, 4);
+        let r = bench_budget(&format!("native {n}x{n}"), budget, 3, || {
+            black_box(stark::matrix::matmul_blocked(&a, &b));
+        });
+        println!("{}", r.line());
+    }
+
+    if let Some(dir) = stark::runtime::find_artifacts_dir() {
+        let lib = stark::runtime::ArtifactLibrary::load(dir)?;
+        let svc = stark::runtime::XlaService::new(lib, 1, "dot")?;
+        print_header("PJRT dispatch: XLA dot artifact per block size");
+        for n in [32usize, 64, 128, 256, 512] {
+            svc.warmup(n)?;
+            let a = DenseMatrix::random(n, n, 5);
+            let b = DenseMatrix::random(n, n, 6);
+            let r = bench_budget(&format!("xla dot {n}x{n}"), budget, 3, || {
+                black_box(svc.matmul(a.clone(), b.clone()).unwrap());
+            });
+            println!("{}", r.line());
+        }
+
+        print_header("fused strassen_leaf vs 7 separate dispatches (quadrants 128)");
+        let n = 128;
+        let quads: Vec<DenseMatrix> =
+            (0..8).map(|i| DenseMatrix::random(n, n, 10 + i as u64)).collect();
+        let quads: [DenseMatrix; 8] = quads.try_into().unwrap();
+        let r = bench_budget("fused strassen_leaf 128", budget, 3, || {
+            black_box(svc.strassen_leaf(quads.clone()).unwrap());
+        });
+        println!("{}", r.line());
+        let r = bench_budget("7 separate dot dispatches 128", budget, 3, || {
+            for i in 0..7 {
+                black_box(svc.matmul(quads[i % 4].clone(), quads[4 + i % 4].clone()).unwrap());
+            }
+        });
+        println!("{}", r.line());
+    } else {
+        println!("\n(artifacts not built — skipping PJRT dispatch benches)");
+    }
+
+    print_header("engine coordination overhead (payload-free stark shapes)");
+    for b in [2usize, 4, 8] {
+        use stark::algos::{stark as stark_algo, StarkConfig};
+        use stark::engine::{ClusterConfig, SparkContext};
+        use std::sync::Arc;
+        // 1-element blocks: all cost is tags + shuffle + scheduling.
+        let n = b; // block size 1
+        let a = DenseMatrix::random(n, n, 7);
+        let bm = DenseMatrix::random(n, n, 8);
+        let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+        let r = bench_budget(&format!("stark skeleton b={b}"), budget, 3, || {
+            black_box(stark_algo::multiply(
+                &ctx,
+                Arc::new(stark::runtime::NativeBackend),
+                &a,
+                &bm,
+                b,
+                &StarkConfig::default(),
+            ));
+        });
+        println!("{}", r.line());
+    }
+
+    print_header("divide/combine signed block additions (256x256)");
+    let x = DenseMatrix::random(256, 256, 9);
+    let y = DenseMatrix::random(256, 256, 10);
+    let r = bench_budget("add", budget, 3, || {
+        black_box(x.add(&y));
+    });
+    println!("{}", r.line());
+    let r = bench_budget("add_assign_signed", budget, 3, || {
+        let mut acc = x.clone();
+        acc.add_assign_signed(&y, -1.0);
+        black_box(acc);
+    });
+    println!("{}", r.line());
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Bench: paper Table VI — distributed Stark vs single-node systems.
+
+use stark::experiments::{table6, Harness, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale {
+        sizes: vec![256, 512, 1024],
+        bs: vec![2, 4, 8],
+        backend: stark::config::BackendKind::Xla,
+        net_bandwidth: None,
+        reps: 1,
+        ..Default::default()
+    };
+    // Fall back to native when artifacts are missing so `cargo bench`
+    // works on a fresh checkout.
+    let h = match Harness::new(scale.clone()) {
+        Ok(h) => h,
+        Err(_) => Harness::new(Scale {
+            backend: stark::config::BackendKind::Native,
+            ..scale
+        })?,
+    };
+    let (t, _) = table6::run(&h)?;
+    // Shape: serial Strassen < serial naive at the largest size (the
+    // sub-cubic advantage is visible even single-node).
+    if let Some(r) = t.rows.last() {
+        println!(
+            "\nn={}: serial strassen {:.0} ms vs serial naive {:.0} ms ({})",
+            r.n,
+            r.serial_strassen_ms,
+            r.serial_naive_ms,
+            if r.serial_strassen_ms < r.serial_naive_ms { "strassen wins" } else { "naive wins here" }
+        );
+    }
+    Ok(())
+}

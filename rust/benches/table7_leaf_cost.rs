@@ -1,0 +1,40 @@
+//! Bench: paper Table VII — leaf multiplication cost, Marlin vs Stark.
+
+use stark::algos::Algorithm;
+use stark::experiments::{table7, Harness, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale {
+        sizes: vec![512, 1024],
+        bs: vec![2, 4, 8, 16],
+        backend: stark::config::BackendKind::Native,
+        net_bandwidth: None,
+        reps: 2,
+        ..Default::default()
+    };
+    let h = Harness::new(scale)?;
+    let (t, _) = table7::run(&h)?;
+
+    // Paper claims: Stark's leaf cost <= Marlin's for b >= 2, gap grows.
+    let n = *h.scale.sizes.last().unwrap();
+    let mut prev_ratio = 0.0;
+    for &b in &h.scale.bs {
+        if let (Some(m), Some(s)) =
+            (t.get(Algorithm::Marlin, n, b), t.get(Algorithm::Stark, n, b))
+        {
+            let ratio = m.leaf_ms / s.leaf_ms.max(1e-9);
+            println!(
+                "n={n} b={b}: marlin/stark leaf ratio {ratio:.2} (counts {}/{})",
+                m.leaf_calls, s.leaf_calls
+            );
+            if b > 2 {
+                println!(
+                    "  ratio {} vs previous (paper: grows with b)",
+                    if ratio >= prev_ratio { "grew" } else { "shrank" }
+                );
+            }
+            prev_ratio = ratio;
+        }
+    }
+    Ok(())
+}

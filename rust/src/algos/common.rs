@@ -1,0 +1,233 @@
+//! Shared plumbing for the distributed algorithms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::engine::{Block, Dist, JobMetrics, Side, SparkContext, Tag};
+use crate::matrix::DenseMatrix;
+use crate::runtime::LeafBackend;
+
+/// Which distributed algorithm to run (CLI/bench dispatch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// The paper's distributed Strassen.
+    Stark,
+    /// Marlin block-splitting baseline (Gu et al. 2015).
+    Marlin,
+    /// Spark MLLib `BlockMatrix.multiply` baseline.
+    Mllib,
+}
+
+impl Algorithm {
+    /// All systems, in the paper's comparison order.
+    pub const ALL: [Algorithm; 3] = [Algorithm::Mllib, Algorithm::Marlin, Algorithm::Stark];
+}
+
+impl std::str::FromStr for Algorithm {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "stark" => Ok(Algorithm::Stark),
+            "marlin" => Ok(Algorithm::Marlin),
+            "mllib" => Ok(Algorithm::Mllib),
+            other => Err(format!("unknown algorithm {other:?} (stark|marlin|mllib)")),
+        }
+    }
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Algorithm::Stark => write!(f, "stark"),
+            Algorithm::Marlin => write!(f, "marlin"),
+            Algorithm::Mllib => write!(f, "mllib"),
+        }
+    }
+}
+
+/// Result of one distributed multiply.
+#[derive(Debug)]
+pub struct MultiplyOutput {
+    /// The assembled product matrix.
+    pub c: DenseMatrix,
+    /// Per-stage metrics of the job.
+    pub job: JobMetrics,
+    /// Total leaf-multiplication time (summed across tasks), ms.
+    pub leaf_ms: f64,
+    /// Number of leaf block multiplications performed — the paper's
+    /// central count (`b^2.807` for Stark vs `b^3` for the baselines).
+    pub leaf_calls: u64,
+}
+
+/// [`LeafBackend`] wrapper that accumulates leaf-multiply time and call
+/// counts — the instrument behind Table VII and the Fig. 11 phase split.
+pub struct TimingBackend {
+    inner: Arc<dyn LeafBackend>,
+    nanos: AtomicU64,
+    calls: AtomicU64,
+}
+
+impl TimingBackend {
+    pub fn new(inner: Arc<dyn LeafBackend>) -> Arc<Self> {
+        Arc::new(Self { inner, nanos: AtomicU64::new(0), calls: AtomicU64::new(0) })
+    }
+
+    /// Accumulated leaf time in milliseconds.
+    pub fn leaf_ms(&self) -> f64 {
+        self.nanos.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Number of leaf operations (a fused Strassen leaf counts as 7).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.nanos.store(0, Ordering::Relaxed);
+        self.calls.store(0, Ordering::Relaxed);
+    }
+}
+
+impl LeafBackend for TimingBackend {
+    fn multiply(&self, a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+        let t = std::time::Instant::now();
+        let out = self.inner.multiply(a, b);
+        self.nanos.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        out
+    }
+
+    fn strassen_leaf(&self, quads: &[DenseMatrix; 8]) -> [DenseMatrix; 4] {
+        let t = std::time::Instant::now();
+        let out = self.inner.strassen_leaf(quads);
+        self.nanos.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        // A fused leaf performs the 7 Strassen products.
+        self.calls.fetch_add(7, Ordering::Relaxed);
+        out
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+}
+
+/// Split a square matrix into a `b × b` grid of root-tagged [`Block`]s and
+/// distribute them (the paper's pre-processing step: text file →
+/// `RDD<Block>`).
+pub fn distribute(ctx: &SparkContext, m: &DenseMatrix, side: Side, b: usize) -> Dist<Block> {
+    let blocks: Vec<Block> = m
+        .split_blocks(b)
+        .into_iter()
+        .map(|(r, c, data)| Block::new(r as u32, c as u32, Tag::root(side), Arc::new(data)))
+        .collect();
+    let parts = default_parts(b, ctx.config().total_cores());
+    ctx.parallelize(blocks, parts)
+}
+
+/// Input-partition policy: one partition per block up to a small multiple
+/// of the core count (beyond that task overhead dominates in the
+/// simulator, as scheduling overhead would on real Spark).
+pub fn default_parts(b: usize, cores: usize) -> usize {
+    (b * b).min(4 * cores.max(1)).max(1)
+}
+
+/// Assemble `((i, j), block)` product pairs into the full matrix.
+pub fn assemble(b: usize, block_size: usize, pairs: Vec<((u32, u32), DenseMatrix)>) -> DenseMatrix {
+    let blocks: Vec<(usize, usize, DenseMatrix)> =
+        pairs.into_iter().map(|((i, j), m)| (i as usize, j as usize, m)).collect();
+    DenseMatrix::assemble_blocks(b, block_size, &blocks)
+}
+
+/// Run `algo` end-to-end on `(a, b_mat)` with `b × b` partitioning.
+pub fn run(
+    algo: Algorithm,
+    ctx: &SparkContext,
+    backend: Arc<dyn LeafBackend>,
+    a: &DenseMatrix,
+    b_mat: &DenseMatrix,
+    b: usize,
+    stark_cfg: &crate::algos::stark::StarkConfig,
+) -> MultiplyOutput {
+    match algo {
+        Algorithm::Stark => crate::algos::stark::multiply(ctx, backend, a, b_mat, b, stark_cfg),
+        Algorithm::Marlin => {
+            crate::algos::marlin::multiply(ctx, backend, a, b_mat, b, stark_cfg.isolate_multiply)
+        }
+        Algorithm::Mllib => {
+            crate::algos::mllib::multiply(ctx, backend, a, b_mat, b, stark_cfg.isolate_multiply)
+        }
+    }
+}
+
+/// Validate the operands of a `b × b` distributed multiply.
+pub fn validate_inputs(a: &DenseMatrix, b_mat: &DenseMatrix, b: usize) {
+    assert_eq!(a.rows(), a.cols(), "A must be square");
+    assert_eq!(b_mat.rows(), b_mat.cols(), "B must be square");
+    assert_eq!(a.rows(), b_mat.rows(), "A and B dimensions must match");
+    assert!(b >= 1, "need at least one partition");
+    assert!(
+        a.rows() % b == 0,
+        "partition count b={b} must divide n={}",
+        a.rows()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ClusterConfig;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn distribute_produces_b_squared_blocks() {
+        let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+        let m = DenseMatrix::random(16, 16, 1);
+        let d = distribute(&ctx, &m, Side::A, 4);
+        let blocks = d.collect("c");
+        assert_eq!(blocks.len(), 16);
+        assert!(blocks.iter().all(|b| b.tag == Tag::root(Side::A)));
+        assert!(blocks.iter().all(|b| b.size() == 4));
+    }
+
+    #[test]
+    fn distribute_assemble_roundtrip() {
+        let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+        let m = DenseMatrix::random(16, 16, 2);
+        let d = distribute(&ctx, &m, Side::B, 2);
+        let pairs: Vec<((u32, u32), DenseMatrix)> = d
+            .collect("c")
+            .into_iter()
+            .map(|blk| ((blk.row, blk.col), (*blk.data).clone()))
+            .collect();
+        let back = assemble(2, 8, pairs);
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn default_parts_caps() {
+        assert_eq!(default_parts(2, 4), 4);
+        assert_eq!(default_parts(8, 4), 16);
+        assert_eq!(default_parts(32, 4), 16);
+        assert_eq!(default_parts(1, 0), 1);
+    }
+
+    #[test]
+    fn timing_backend_counts() {
+        let tb = TimingBackend::new(Arc::new(NativeBackend));
+        let a = DenseMatrix::random(8, 8, 1);
+        tb.multiply(&a, &a);
+        tb.multiply(&a, &a);
+        assert_eq!(tb.calls(), 2);
+        assert!(tb.leaf_ms() > 0.0);
+        tb.reset();
+        assert_eq!(tb.calls(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn validate_rejects_bad_b() {
+        let m = DenseMatrix::zeros(6, 6);
+        validate_inputs(&m, &m, 4);
+    }
+}

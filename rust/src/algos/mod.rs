@@ -1,0 +1,19 @@
+//! Distributed matrix-multiplication algorithms (DESIGN.md S9–S11).
+//!
+//! - [`stark`] — the paper's contribution: tag-driven distributed
+//!   Strassen (Algorithms 2–5).
+//! - [`marlin`] — the Marlin baseline (Gu et al.), paper Fig. 6 plan.
+//! - [`mllib`] — the MLLib `BlockMatrix` baseline, paper Fig. 5 plan.
+//! - [`common`] — shared plumbing: matrix ⇄ `Dist<Block>` conversion,
+//!   result assembly, leaf-time instrumentation, the [`Algorithm`]
+//!   dispatcher used by the CLI/benches.
+
+pub mod common;
+pub mod general;
+pub mod marlin;
+pub mod mllib;
+pub mod stark;
+
+pub use common::{Algorithm, MultiplyOutput, TimingBackend};
+pub use general::multiply_general;
+pub use stark::StarkConfig;

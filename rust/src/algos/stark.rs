@@ -1,0 +1,397 @@
+//! **Stark** — the paper's distributed Strassen multiplication
+//! (Algorithms 2–5), as a tag-driven recursion over `Dist<Block>`.
+//!
+//! One recursion level `L` (grid size `n` blocks per side) maps onto the
+//! engine exactly as §III-C describes:
+//!
+//! 1. **DivNRep** (Algorithm 3): `flatMap` replicates each block into the
+//!    M-terms its quadrant participates in (4 copies of `A11`/`A22`/`B11`/
+//!    `B22`, 2 of the rest), keyed by `(child M-index, side, row', col')`;
+//!    `groupByKey` brings together the 1–2 signed operands of each output
+//!    block; a mapped add/subtract forms the 7 sub-problem operand
+//!    matrices. The `flatMap` + shuffle-write is one stage per level
+//!    (`divide/L{level}`).
+//! 2. **MulBlockMat** (Algorithm 4) at `n == 1`: key by M-index, group the
+//!    `A`/`B` pair, multiply through the [`LeafBackend`] (the PJRT
+//!    artifact — the paper's Breeze/BLAS call).
+//! 3. **Combine** (Algorithm 5): each product block contributes to 1–2 C
+//!    quadrants of its parent with a sign; `groupByKey` on
+//!    `(parent M-index, row, col)` and a signed sum assemble the parent
+//!    product (`combine/L{level}`).
+//!
+//! Stage count: `(p−q)` divide shuffles + 1 leaf shuffle + `(p−q)` combine
+//! shuffles + the result stage = `2(p−q) + 2`, the paper's eq. (25).
+//!
+//! With [`StarkConfig::fused_leaf`], recursion stops one level early and
+//! dispatches the 8 quadrant blocks of each sub-problem to the fused
+//! one-level Strassen artifact (7 multiplies + all 22 additions in one XLA
+//! program) — the "unroll the recursion to an appropriate depth"
+//! optimization the paper's §V-C discussion suggests.
+
+use std::sync::Arc;
+
+use crate::algos::common::{
+    assemble, distribute, validate_inputs, MultiplyOutput, TimingBackend,
+};
+use crate::engine::{Block, Dist, Side, SparkContext, Tag};
+use crate::matrix::DenseMatrix;
+use crate::runtime::LeafBackend;
+
+/// Tuning knobs for the Stark run.
+#[derive(Debug, Clone)]
+pub struct StarkConfig {
+    /// Stop recursion at a 2×2 block grid and dispatch the fused
+    /// `strassen_leaf` artifact instead of recursing to single blocks.
+    pub fused_leaf: bool,
+    /// Materialize leaf products in their own stage (the paper's Table
+    /// VII methodology: cache leaf inputs/outputs so the multiplication
+    /// cost is observable in isolation). Adds one stage.
+    pub isolate_multiply: bool,
+}
+
+impl Default for StarkConfig {
+    fn default() -> Self {
+        Self { fused_leaf: false, isolate_multiply: false }
+    }
+}
+
+/// Side → compact code for shuffle keys.
+fn side_code(side: Side) -> u8 {
+    match side {
+        Side::A => 0,
+        Side::B => 1,
+        Side::M => 2,
+    }
+}
+
+fn side_from(code: u8) -> Side {
+    match code {
+        0 => Side::A,
+        1 => Side::B,
+        _ => Side::M,
+    }
+}
+
+/// Replication table for the divide phase: for quadrant `(qr, qc)` of
+/// side A/B, the `(m, sign)` pairs of the M-terms it participates in
+/// (0-based M-index; paper Algorithm 1 / Fig. 3).
+fn replication_table(side: Side, qr: u32, qc: u32) -> &'static [(u64, f64)] {
+    const A_REP: [[&[(u64, f64)]; 2]; 2] = [
+        // A11: M1+, M3+, M5+, M6−            A12: M5+, M7+
+        [&[(0, 1.0), (2, 1.0), (4, 1.0), (5, -1.0)], &[(4, 1.0), (6, 1.0)]],
+        // A21: M2+, M6+                       A22: M1+, M2+, M4+, M7−
+        [&[(1, 1.0), (5, 1.0)], &[(0, 1.0), (1, 1.0), (3, 1.0), (6, -1.0)]],
+    ];
+    const B_REP: [[&[(u64, f64)]; 2]; 2] = [
+        // B11: M1+, M2+, M4−, M6+            B12: M3+, M6+
+        [&[(0, 1.0), (1, 1.0), (3, -1.0), (5, 1.0)], &[(2, 1.0), (5, 1.0)]],
+        // B21: M4+, M7+                       B22: M1+, M3−, M5+, M7+
+        [&[(3, 1.0), (6, 1.0)], &[(0, 1.0), (2, -1.0), (4, 1.0), (6, 1.0)]],
+    ];
+    match side {
+        Side::A => A_REP[qr as usize][qc as usize],
+        Side::B => B_REP[qr as usize][qc as usize],
+        Side::M => panic!("divide phase on a product block"),
+    }
+}
+
+/// Combine table: which C quadrants (0=C11, 1=C12, 2=C21, 3=C22) each
+/// product `M_{m+1}` contributes to, with sign (paper Algorithm 1 with
+/// the corrected `C22 = M1 − M2 + M3 + M6`).
+const M_CONTRIB: [&[(u32, f64)]; 7] = [
+    &[(0, 1.0), (3, 1.0)],  // M1 → C11+, C22+
+    &[(2, 1.0), (3, -1.0)], // M2 → C21+, C22−
+    &[(1, 1.0), (3, 1.0)],  // M3 → C12+, C22+
+    &[(0, 1.0), (2, 1.0)],  // M4 → C11+, C21+
+    &[(0, -1.0), (1, 1.0)], // M5 → C11−, C12+
+    &[(3, 1.0)],            // M6 → C22+
+    &[(0, 1.0)],            // M7 → C11+
+];
+
+/// Shuffle-partition policy per recursion level: the paper's PF at level
+/// `i` is `7^{i+1}` capped by the physical cores; we cap the *partition*
+/// count at a small multiple of cores to bound task overhead.
+fn parts_for(level: u32, cores: usize) -> usize {
+    let ideal = 7u64.saturating_pow(level + 1);
+    (ideal.min(4 * cores.max(1) as u64)).max(1) as usize
+}
+
+/// Sum `sign * block` over a divide/combine group. Single positive
+/// operands reuse the Arc (no copy — the paper's `M3 = A11 · (...)` case).
+fn signed_sum(vals: Vec<(f64, Arc<DenseMatrix>)>) -> Arc<DenseMatrix> {
+    if vals.len() == 1 && vals[0].0 == 1.0 {
+        return vals[0].1.clone();
+    }
+    let mut iter = vals.into_iter();
+    let (s0, d0) = iter.next().expect("empty combine group");
+    let mut acc = if s0 == 1.0 { (*d0).clone() } else { d0.scale(s0) };
+    for (s, d) in iter {
+        acc.add_assign_signed(&d, s);
+    }
+    Arc::new(acc)
+}
+
+/// Algorithm 2, `DistStrass`: multiply the union RDD of A- and B-side
+/// blocks over an `n × n` block grid; returns product blocks tagged
+/// `(M, mindex)` on the same grid.
+fn dist_strassen(
+    ctx: &SparkContext,
+    backend: &Arc<TimingBackend>,
+    input: Dist<Block>,
+    n: u32,
+    level: u32,
+    cfg: &StarkConfig,
+) -> Dist<Block> {
+    let cores = ctx.config().total_cores();
+    let parts = parts_for(level, cores);
+
+    // Boundary condition (Algorithm 4): single-block sub-matrices.
+    if n == 1 {
+        let pairs = input.map(|blk| (blk.tag.mindex, blk));
+        let grouped = pairs.group_by_key("multiply/groupByKey", parts);
+        let be = backend.clone();
+        let products = grouped.map(move |(mindex, blocks)| {
+            let a = blocks.iter().find(|b| b.tag.side == Side::A).expect("missing A leaf");
+            let b = blocks.iter().find(|b| b.tag.side == Side::B).expect("missing B leaf");
+            let c = be.multiply(&a.data, &b.data);
+            Block::new(0, 0, Tag::new(Side::M, mindex), Arc::new(c))
+        });
+        return if cfg.isolate_multiply { products.cache("multiply/compute") } else { products };
+    }
+
+    // Fused leaf: one level above the bottom, ship all 8 quadrant blocks
+    // of each sub-problem to the fused one-level Strassen artifact.
+    if n == 2 && cfg.fused_leaf {
+        let pairs = input.map(|blk| (blk.tag.mindex, blk));
+        let grouped = pairs.group_by_key("multiply/fusedLeaf", parts);
+        let be = backend.clone();
+        let products = grouped.flat_map(move |(mindex, blocks)| {
+            let mut quads: [Option<Arc<DenseMatrix>>; 8] = Default::default();
+            for blk in &blocks {
+                let idx =
+                    side_code(blk.tag.side) as usize * 4 + (blk.row * 2 + blk.col) as usize;
+                quads[idx] = Some(blk.data.clone());
+            }
+            let q: Vec<DenseMatrix> = quads
+                .into_iter()
+                .map(|o| (*o.expect("missing quadrant for fused leaf")).clone())
+                .collect();
+            let q: [DenseMatrix; 8] = q.try_into().unwrap();
+            let [c11, c12, c21, c22] = be.strassen_leaf(&q);
+            let tag = Tag::new(Side::M, mindex);
+            vec![
+                Block::new(0, 0, tag, Arc::new(c11)),
+                Block::new(0, 1, tag, Arc::new(c12)),
+                Block::new(1, 0, tag, Arc::new(c21)),
+                Block::new(1, 1, tag, Arc::new(c22)),
+            ]
+        });
+        return if cfg.isolate_multiply { products.cache("multiply/compute") } else { products };
+    }
+
+    // DivNRep (Algorithm 3).
+    let divided = div_n_rep(&input, n, level, parts);
+    // Recurse on the 7 sub-problems (all live in one Dist, distinguished
+    // by M-index — the paper's "distributed tail recursion").
+    let product = dist_strassen(ctx, backend, divided, n / 2, level + 1, cfg);
+    // Combine (Algorithm 5) back to this level's grid.
+    combine(&product, n / 2, level, parts)
+}
+
+/// Algorithm 3: replicate quadrants into their M-terms and form the 14
+/// operand sub-matrices via a signed grouped add.
+fn div_n_rep(input: &Dist<Block>, n: u32, level: u32, parts: usize) -> Dist<Block> {
+    let replicated = input.flat_map(move |blk| {
+        let (qr, qc, r, c) = blk.quadrant_of(n);
+        replication_table(blk.tag.side, qr, qc)
+            .iter()
+            .map(|&(m, sign)| {
+                let key = (blk.tag.child(m).mindex, side_code(blk.tag.side), r, c);
+                (key, (sign, blk.data.clone()))
+            })
+            .collect::<Vec<_>>()
+    });
+    let grouped = replicated.group_by_key(&format!("divide/L{level}"), parts);
+    grouped.map(move |((mindex, side, r, c), vals)| {
+        Block::new(r, c, Tag::new(side_from(side), mindex), signed_sum(vals))
+    })
+}
+
+/// Algorithm 5: route each product block into its parent's C quadrants
+/// and sum signed contributions.
+fn combine(product: &Dist<Block>, half: u32, level: u32, parts: usize) -> Dist<Block> {
+    let contributions = product.flat_map(move |blk| {
+        let (parent, m) = blk.tag.parent();
+        M_CONTRIB[m as usize]
+            .iter()
+            .map(|&(q, sign)| {
+                let (qr, qc) = (q / 2, q % 2);
+                let key = (parent.mindex, qr * half + blk.row, qc * half + blk.col);
+                (key, (sign, blk.data.clone()))
+            })
+            .collect::<Vec<_>>()
+    });
+    let grouped = contributions.group_by_key(&format!("combine/L{level}"), parts);
+    grouped.map(|((mindex, r, c), vals)| {
+        Block::new(r, c, Tag::new(Side::M, mindex), signed_sum(vals))
+    })
+}
+
+/// Multiply `a @ b_mat` with Stark over a `b × b` block grid.
+///
+/// `b` must be a power of two dividing `n` (the paper's setting:
+/// `n = 2^p`, `b = 2^{p−q}`).
+pub fn multiply(
+    ctx: &SparkContext,
+    backend: Arc<dyn LeafBackend>,
+    a: &DenseMatrix,
+    b_mat: &DenseMatrix,
+    b: usize,
+    cfg: &StarkConfig,
+) -> MultiplyOutput {
+    validate_inputs(a, b_mat, b);
+    assert!(b.is_power_of_two(), "Stark needs a power-of-two partition count, got {b}");
+    let timing = TimingBackend::new(backend);
+    let n = a.rows();
+    ctx.begin_job(&format!("stark n={n} b={b}"));
+
+    let da = distribute(ctx, a, Side::A, b);
+    let db = distribute(ctx, b_mat, Side::B, b);
+    let result = dist_strassen(ctx, &timing, da.union(&db), b as u32, 0, cfg);
+
+    let collected = result.collect("result/collect");
+    let pairs: Vec<((u32, u32), DenseMatrix)> = collected
+        .into_iter()
+        .map(|blk| {
+            debug_assert_eq!(blk.tag, Tag::new(Side::M, 0));
+            ((blk.row, blk.col), (*blk.data).clone())
+        })
+        .collect();
+    let c = assemble(b, n / b, pairs);
+    let job = ctx.end_job().expect("job scope");
+    MultiplyOutput { c, job, leaf_ms: timing.leaf_ms(), leaf_calls: timing.calls() }
+}
+
+/// `Stage` count predicted by the paper's eq. (25): `2(p−q) + 2`.
+pub fn predicted_stages(b: usize) -> usize {
+    2 * (b as f64).log2() as usize + 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ClusterConfig;
+    use crate::matrix::multiply::matmul_naive;
+    use crate::runtime::NativeBackend;
+
+    fn run_stark(n: usize, b: usize, cfg: &StarkConfig) -> (MultiplyOutput, DenseMatrix) {
+        let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+        let a = DenseMatrix::random(n, n, 100 + n as u64);
+        let bm = DenseMatrix::random(n, n, 200 + n as u64);
+        let want = matmul_naive(&a, &bm);
+        let out = multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, cfg);
+        (out, want)
+    }
+
+    #[test]
+    fn correct_for_b1() {
+        let (out, want) = run_stark(8, 1, &StarkConfig::default());
+        assert!(want.allclose(&out.c, 1e-10));
+        assert_eq!(out.leaf_calls, 1);
+    }
+
+    #[test]
+    fn correct_for_b2() {
+        let (out, want) = run_stark(8, 2, &StarkConfig::default());
+        assert!(want.allclose(&out.c, 1e-10));
+        assert_eq!(out.leaf_calls, 7);
+    }
+
+    #[test]
+    fn correct_for_b4_and_b8() {
+        let (out, want) = run_stark(16, 4, &StarkConfig::default());
+        assert!(want.allclose(&out.c, 1e-9));
+        assert_eq!(out.leaf_calls, 49);
+        let (out, want) = run_stark(16, 8, &StarkConfig::default());
+        assert!(want.allclose(&out.c, 1e-9));
+        assert_eq!(out.leaf_calls, 343);
+    }
+
+    #[test]
+    fn fused_leaf_matches() {
+        let cfg = StarkConfig { fused_leaf: true, ..Default::default() };
+        let (out, want) = run_stark(16, 4, &cfg);
+        assert!(want.allclose(&out.c, 1e-9));
+        // Fused: 7 sub-problems × 7 multiplications each.
+        assert_eq!(out.leaf_calls, 49);
+    }
+
+    #[test]
+    fn stage_count_matches_eq25() {
+        for b in [2usize, 4, 8] {
+            let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+            let a = DenseMatrix::random(16, 16, 1);
+            let bm = DenseMatrix::random(16, 16, 2);
+            let out = multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, &StarkConfig::default());
+            assert_eq!(
+                out.job.stages.len(),
+                predicted_stages(b),
+                "b={b}: stages {:?}",
+                out.job.stages.iter().map(|s| s.label.clone()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn leaf_count_is_b_pow_log7() {
+        // leaf_calls == 7^{log2 b} == b^{2.807}.
+        for (b, want) in [(2usize, 7u64), (4, 49), (8, 343)] {
+            let (out, _) = run_stark(16.max(2 * b), b, &StarkConfig::default());
+            assert_eq!(out.leaf_calls, want);
+        }
+    }
+
+    #[test]
+    fn isolate_multiply_adds_stage() {
+        let cfg = StarkConfig { isolate_multiply: true, ..Default::default() };
+        let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+        let a = DenseMatrix::random(8, 8, 3);
+        let bm = DenseMatrix::random(8, 8, 4);
+        let out = multiply(&ctx, Arc::new(NativeBackend), &a, &bm, 2, &cfg);
+        assert_eq!(out.job.stages.len(), predicted_stages(2) + 1);
+        assert!(out.job.stages.iter().any(|s| s.label == "multiply/compute"));
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn rejects_non_power_of_two_b() {
+        let ctx = SparkContext::new(ClusterConfig::new(1, 1));
+        let a = DenseMatrix::random(6, 6, 1);
+        multiply(&ctx, Arc::new(NativeBackend), &a, &a, 3, &StarkConfig::default());
+    }
+
+    #[test]
+    fn identity_times_identity() {
+        let ctx = SparkContext::new(ClusterConfig::new(2, 1));
+        let i = DenseMatrix::identity(8);
+        let out = multiply(&ctx, Arc::new(NativeBackend), &i, &i, 4, &StarkConfig::default());
+        assert!(out.c.allclose(&i, 1e-12));
+    }
+
+    #[test]
+    fn divide_phase_replication_counts() {
+        // One divide level on a 2×2 grid: A-side replicates 4+2+2+4 = 12
+        // blocks; same for B — the paper's "12 sub-matrices" (Fig. 3).
+        let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+        ctx.begin_job("repl");
+        let a = DenseMatrix::random(8, 8, 5);
+        let d = distribute(&ctx, &a, Side::A, 2);
+        let divided = div_n_rep(&d, 2, 0, 4);
+        let blocks = divided.collect("c");
+        // 7 sub-problems × 1 block each (1×1 grids after divide).
+        assert_eq!(blocks.len(), 7);
+        let stages = ctx.metrics().current_stages();
+        let div = stages.iter().find(|s| s.label == "divide/L0").unwrap();
+        assert_eq!(div.records_out, 12);
+    }
+}

@@ -1,0 +1,92 @@
+//! `stark-bench` — regenerates every table and figure of the paper's
+//! evaluation (§V) and writes JSON reports.
+//!
+//! USAGE: stark-bench <fig8|fig9|fig10|fig11|fig12|table6|table7|ablations|all>
+//!          [--out DIR] [--sizes 512,1024,2048] [--bs 2,4,8,16]
+//!          [--backend native|xla|xla-pallas] [--executors 2] [--cores 2]
+//!          [--net-mbps 1750] [--seed 42] [--executor-counts 1,2,3,4]
+//!          [--smoke]
+//!
+//! `--smoke` shrinks the grid for fast verification runs.
+
+use anyhow::Result;
+
+use stark::experiments::{self, Harness, Scale};
+use stark::util::cli::Args;
+
+fn scale_from(args: &Args) -> Scale {
+    let mut scale = if args.flag("smoke") { Scale::smoke() } else { Scale::default() };
+    scale.sizes = args.get_list("sizes", &scale.sizes);
+    scale.bs = args.get_list("bs", &scale.bs);
+    scale.backend = args.get("backend", scale.backend);
+    scale.executors = args.get("executors", scale.executors);
+    scale.cores = args.get("cores", scale.cores);
+    scale.seed = args.get("seed", scale.seed);
+    if let Some(mbps) = args.get_opt::<f64>("net-mbps") {
+        scale.net_bandwidth = (mbps > 0.0).then_some(mbps * 1e6);
+    }
+    scale
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let out_dir = args.raw("out").unwrap_or("EXPERIMENTS_RUNS").to_string();
+    let which = args.subcommand().unwrap_or("all").to_string();
+    let scale = scale_from(&args);
+    println!(
+        "stark-bench {which}: sizes={:?} bs={:?} backend={} cluster={}x{} net={:?}",
+        scale.sizes, scale.bs, scale.backend, scale.executors, scale.cores, scale.net_bandwidth
+    );
+    let h = Harness::new(scale)?;
+    let executor_counts: Vec<usize> = args.get_list("executor-counts", &[1usize, 2, 3, 4]);
+
+    let mut reports = Vec::new();
+    let run_fig9_dependent = which == "fig9" || which == "fig10" || which == "all";
+
+    if which == "fig8" || which == "all" {
+        let (_, r) = experiments::fig8::run(&h)?;
+        reports.push(r);
+    }
+    if run_fig9_dependent {
+        let (sweep, r) = experiments::fig9::run(&h)?;
+        reports.push(r);
+        if which == "fig10" || which == "all" {
+            let (_, r) = experiments::fig10::run(&h, &sweep)?;
+            reports.push(r);
+        }
+    }
+    if which == "fig11" || which == "all" {
+        let (_, r) = experiments::fig11::run(&h)?;
+        reports.push(r);
+    }
+    if which == "fig12" || which == "all" {
+        let (_, r) = experiments::fig12::run(&h, &executor_counts)?;
+        reports.push(r);
+    }
+    if which == "table6" || which == "all" {
+        let (_, r) = experiments::table6::run(&h)?;
+        reports.push(r);
+    }
+    if which == "table7" || which == "all" {
+        let (_, r) = experiments::table7::run(&h)?;
+        reports.push(r);
+    }
+    if which == "ablations" || which == "all" {
+        let (_, r) = experiments::ablations::run(&h)?;
+        reports.push(r);
+    }
+    if reports.is_empty() {
+        eprintln!("unknown experiment {which:?}");
+        std::process::exit(2);
+    }
+    for r in &reports {
+        let path = r.save(&out_dir)?;
+        println!("wrote {}", path.display());
+    }
+    // Sanity anchor for the whole harness: the XLA single-node path and
+    // serial Strassen agree (also exercised by `make test`).
+    let diff = experiments::table6::verify_consistency(128, 7);
+    anyhow::ensure!(diff < 1e-9, "single-node consistency check failed: {diff}");
+    println!("single-node consistency: max |Δ| = {diff:.2e} OK");
+    Ok(())
+}

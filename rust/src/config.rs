@@ -1,0 +1,261 @@
+//! Run configuration shared by the CLI, examples, benches and tests
+//! (DESIGN.md S14).
+//!
+//! [`RunConfig`] describes one distributed multiply: workload (`n`, `b`,
+//! seed), cluster shape (executors × cores, network model), algorithm,
+//! and leaf backend. It serializes to/from JSON (via [`crate::util::json`])
+//! so experiment harnesses record exactly what ran.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::algos::{Algorithm, StarkConfig};
+use crate::engine::{ClusterConfig, FailureSpec, SparkContext};
+use crate::runtime::{ArtifactLibrary, LeafBackend, NativeBackend, XlaBackend, XlaService};
+use crate::util::json::Value;
+
+/// Which leaf backend multiplies blocks at the bottom of the recursion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust cache-blocked kernel.
+    Native,
+    /// AOT XLA artifact, `dot` family (plain HLO dot — production default).
+    Xla,
+    /// AOT XLA artifact, `pallas` family (the L1 kernel via interpret
+    /// lowering; structure-faithful, slower on CPU — the ablation arm).
+    XlaPallas,
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendKind::Native => write!(f, "native"),
+            BackendKind::Xla => write!(f, "xla"),
+            BackendKind::XlaPallas => write!(f, "xla-pallas"),
+        }
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            "xla-pallas" | "pallas" => Ok(BackendKind::XlaPallas),
+            other => Err(format!("unknown backend {other:?} (native|xla|xla-pallas)")),
+        }
+    }
+}
+
+/// One experiment run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Matrix dimension (must be a multiple of `b`; power of two for Stark).
+    pub n: usize,
+    /// Splits per side (the paper's `b`).
+    pub b: usize,
+    pub algo: Algorithm,
+    pub backend: BackendKind,
+    pub executors: usize,
+    pub cores_per_executor: usize,
+    /// Simulated shuffle bandwidth, bytes/s (None = memory speed).
+    pub net_bandwidth: Option<f64>,
+    pub seed: u64,
+    /// Stark: fuse the last recursion level into one XLA call.
+    pub fused_leaf: bool,
+    /// Materialize leaf products in their own stage (stage-wise experiments).
+    pub isolate_multiply: bool,
+    /// Optional failure injection.
+    pub failure: Option<FailureSpec>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            n: 256,
+            b: 4,
+            algo: Algorithm::Stark,
+            backend: BackendKind::Native,
+            executors: 2,
+            cores_per_executor: 2,
+            net_bandwidth: None,
+            seed: 42,
+            fused_leaf: false,
+            isolate_multiply: false,
+            failure: None,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn cluster_config(&self) -> ClusterConfig {
+        ClusterConfig {
+            executors: self.executors,
+            cores_per_executor: self.cores_per_executor,
+            net_bandwidth: self.net_bandwidth,
+            failure: self.failure.clone(),
+        }
+    }
+
+    pub fn context(&self) -> SparkContext {
+        SparkContext::new(self.cluster_config())
+    }
+
+    pub fn stark_config(&self) -> StarkConfig {
+        StarkConfig { fused_leaf: self.fused_leaf, isolate_multiply: self.isolate_multiply }
+    }
+
+    /// Build the leaf backend. XLA backends need `artifacts/` (built by
+    /// `make artifacts`); the service runs one PJRT thread per core so
+    /// concurrent leaf tasks don't serialize behind a smaller pool
+    /// (EXPERIMENTS.md §Perf, change 3).
+    pub fn backend(&self) -> Result<Arc<dyn LeafBackend>> {
+        build_backend(self.backend, self.executors * self.cores_per_executor)
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut fields = vec![
+            ("n", Value::num(self.n as f64)),
+            ("b", Value::num(self.b as f64)),
+            ("algo", Value::str(self.algo.to_string())),
+            ("backend", Value::str(self.backend.to_string())),
+            ("executors", Value::num(self.executors as f64)),
+            ("cores_per_executor", Value::num(self.cores_per_executor as f64)),
+            (
+                "net_bandwidth",
+                self.net_bandwidth.map(Value::num).unwrap_or(Value::Null),
+            ),
+            ("seed", Value::num(self.seed as f64)),
+            ("fused_leaf", Value::Bool(self.fused_leaf)),
+            ("isolate_multiply", Value::Bool(self.isolate_multiply)),
+        ];
+        if let Some(f) = &self.failure {
+            fields.push((
+                "failure",
+                Value::obj(vec![
+                    ("stage_contains", Value::str(f.stage_contains.clone())),
+                    ("partition", Value::num(f.partition as f64)),
+                ]),
+            ));
+        }
+        Value::obj(fields).to_json()
+    }
+
+    pub fn from_json(s: &str) -> Result<Self> {
+        let v = crate::util::json::parse(s).context("parsing RunConfig JSON")?;
+        let get_usize = |k: &str| -> Result<usize> {
+            v.get(k).and_then(Value::as_usize).with_context(|| format!("missing field {k}"))
+        };
+        let failure = match v.get("failure") {
+            Some(f) if *f != Value::Null => Some(FailureSpec {
+                stage_contains: f
+                    .get("stage_contains")
+                    .and_then(Value::as_str)
+                    .context("failure.stage_contains")?
+                    .to_string(),
+                partition: f
+                    .get("partition")
+                    .and_then(Value::as_usize)
+                    .context("failure.partition")?,
+            }),
+            _ => None,
+        };
+        Ok(Self {
+            n: get_usize("n")?,
+            b: get_usize("b")?,
+            algo: v
+                .get("algo")
+                .and_then(Value::as_str)
+                .context("missing algo")?
+                .parse()
+                .map_err(anyhow::Error::msg)?,
+            backend: v
+                .get("backend")
+                .and_then(Value::as_str)
+                .context("missing backend")?
+                .parse()
+                .map_err(anyhow::Error::msg)?,
+            executors: get_usize("executors")?,
+            cores_per_executor: get_usize("cores_per_executor")?,
+            net_bandwidth: v.get("net_bandwidth").and_then(Value::as_f64),
+            seed: v.get("seed").and_then(Value::as_u64).context("missing seed")?,
+            fused_leaf: v.get("fused_leaf").and_then(Value::as_bool).unwrap_or(false),
+            isolate_multiply: v.get("isolate_multiply").and_then(Value::as_bool).unwrap_or(false),
+            failure,
+        })
+    }
+}
+
+/// Construct a [`LeafBackend`] of `kind` with `threads` runtime threads
+/// for the XLA variants. Threads are capped at the host parallelism —
+/// extra PJRT clients on an oversubscribed host only contend
+/// (EXPERIMENTS.md §Perf, change 3).
+pub fn build_backend(kind: BackendKind, threads: usize) -> Result<Arc<dyn LeafBackend>> {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = threads.clamp(1, host);
+    match kind {
+        BackendKind::Native => Ok(Arc::new(NativeBackend)),
+        BackendKind::Xla | BackendKind::XlaPallas => {
+            let dir = crate::runtime::find_artifacts_dir().context(
+                "artifacts/manifest.json not found — run `make artifacts` \
+                 (or set STARK_ARTIFACTS)",
+            )?;
+            let lib = ArtifactLibrary::load(&dir)?;
+            let impl_ = if kind == BackendKind::Xla { "dot" } else { "pallas" };
+            let svc = Arc::new(XlaService::new(lib, threads, impl_)?);
+            Ok(Arc::new(XlaBackend::new(svc)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_through_json() {
+        let cfg = RunConfig::default();
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.n, cfg.n);
+        assert_eq!(back.algo, cfg.algo);
+        assert_eq!(back.backend, cfg.backend);
+        assert_eq!(back.net_bandwidth, None);
+        assert!(back.failure.is_none());
+    }
+
+    #[test]
+    fn failure_and_bandwidth_roundtrip() {
+        let cfg = RunConfig {
+            net_bandwidth: Some(1e9),
+            failure: Some(FailureSpec { stage_contains: "gbk".into(), partition: 3 }),
+            fused_leaf: true,
+            ..Default::default()
+        };
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.net_bandwidth, Some(1e9));
+        assert_eq!(back.failure, cfg.failure);
+        assert!(back.fused_leaf);
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Xla);
+        assert_eq!("XLA-PALLAS".parse::<BackendKind>().unwrap(), BackendKind::XlaPallas);
+        assert!("bogus".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn cluster_config_propagates() {
+        let cfg = RunConfig { executors: 3, cores_per_executor: 5, ..Default::default() };
+        assert_eq!(cfg.cluster_config().total_cores(), 15);
+    }
+
+    #[test]
+    fn native_backend_builds() {
+        let be = build_backend(BackendKind::Native, 1).unwrap();
+        assert_eq!(be.name(), "native");
+    }
+}

@@ -1,0 +1,313 @@
+//! Analytic cost model — the paper's §IV, implemented literally.
+//!
+//! For each system the paper derives, per Spark stage, a *computation*
+//! term, a *communication* term, and a *parallelization factor* (PF);
+//! predicted wall time is `Σ_stages (comp + comm) / PF` up to two
+//! calibration constants (time per computation unit, time per
+//! communicated element). [`CostBreakdown`] keeps the terms separate so
+//! experiments can fit the constants to measurements
+//! (Fig. 10's theory-vs-practice overlay) and report per-stage splits
+//! (Tables I–III).
+//!
+//! Conventions follow the paper: `n` = matrix dimension (`2^p`), `b` =
+//! splits per side (`2^{p−q}`), `cores` = total physical cores. The
+//! formulas are transcribed from eqs. (1)–(25) and Tables I–III, including
+//! their unit mixing (computation counted in block ops where the paper
+//! does, in element ops where the paper does) — the calibration constants
+//! absorb the units.
+
+/// One stage's predicted cost terms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageCost {
+    pub label: String,
+    /// Computation units (paper's `Comp`).
+    pub comp: f64,
+    /// Communication units (paper's `Comm`, in elements).
+    pub comm: f64,
+    /// Parallelization factor `min[·, cores]`.
+    pub pf: f64,
+}
+
+impl StageCost {
+    /// Stage contribution to wall time given unit costs.
+    pub fn wall(&self, alpha: f64, beta: f64) -> f64 {
+        (alpha * self.comp + beta * self.comm) / self.pf
+    }
+}
+
+/// Full per-stage breakdown of one system at one `(n, b, cores)` point.
+#[derive(Debug, Clone)]
+pub struct CostBreakdown {
+    pub system: &'static str,
+    pub stages: Vec<StageCost>,
+}
+
+impl CostBreakdown {
+    /// Predicted wall time `Σ (α·comp + β·comm)/pf`.
+    pub fn wall(&self, alpha: f64, beta: f64) -> f64 {
+        self.stages.iter().map(|s| s.wall(alpha, beta)).sum()
+    }
+
+    /// `(Σ comp/pf, Σ comm/pf)` — the two regressors for calibration.
+    pub fn terms(&self) -> (f64, f64) {
+        let comp = self.stages.iter().map(|s| s.comp / s.pf).sum();
+        let comm = self.stages.iter().map(|s| s.comm / s.pf).sum();
+        (comp, comm)
+    }
+}
+
+fn mincores(x: f64, cores: usize) -> f64 {
+    x.min(cores as f64).max(1.0)
+}
+
+/// MLLib cost model (paper Table I / eq. 9).
+pub fn mllib_cost(n: usize, b: usize, cores: usize) -> CostBreakdown {
+    let (nf, bf) = (n as f64, b as f64);
+    let pf_b2 = mincores(bf * bf, cores);
+    let stages = vec![
+        // Driver-side GridPartitioner simulation: eq. (1).
+        StageCost { label: "simulation".into(), comp: 0.0, comm: 2.0 * nf * nf / (bf * bf), pf: 1.0 },
+        // Stage 1: two flatMaps replicate b³ blocks each: eq. (2)-(3).
+        StageCost { label: "stage1/flatMap".into(), comp: 2.0 * bf.powi(3), comm: 0.0, pf: pf_b2 },
+        // Stage 3: cogroup shuffle (eq. 4) + block multiplications (eq. 5).
+        StageCost {
+            label: "stage3/coGroup+flatMap".into(),
+            comp: bf.powi(3) * (nf / bf).powi(3),
+            comm: 2.0 * mincores(bf, cores) * nf * nf,
+            pf: pf_b2,
+        },
+        // Stage 4: reduceByKey additions: eq. (7).
+        StageCost { label: "stage4/reduceByKey".into(), comp: bf * nf * nf, comm: 0.0, pf: pf_b2 },
+    ];
+    CostBreakdown { system: "mllib", stages }
+}
+
+/// Marlin cost model (paper Table II / Lemma IV.1, eq. 10).
+pub fn marlin_cost(n: usize, b: usize, cores: usize) -> CostBreakdown {
+    let (nf, bf) = (n as f64, b as f64);
+    let stages = vec![
+        // Stage 1: two flatMaps, comp 4b³ (eq. 11), comm 4bn² (eq. 12),
+        // PF min[2b², cores] (eq. 13).
+        StageCost {
+            label: "stage1/flatMap".into(),
+            comp: 4.0 * bf.powi(3),
+            comm: 4.0 * bf * nf * nf,
+            pf: mincores(2.0 * bf * bf, cores),
+        },
+        // Stage 3: join shuffle bn² (eq. 15) + local multiplies b³(n/b)³
+        // (eq. 17), PF min[b³, cores] (eq. 16/19).
+        StageCost {
+            label: "stage3/join+mapPartition".into(),
+            comp: bf.powi(3) * (nf / bf).powi(3),
+            comm: bf * nf * nf,
+            pf: mincores(bf.powi(3), cores),
+        },
+        // Stage 4: reduceByKey, comm bn² (eq. 21), PF min[b², cores].
+        StageCost {
+            label: "stage4/reduceByKey".into(),
+            comp: 0.0,
+            comm: bf * nf * nf,
+            pf: mincores(bf * bf, cores),
+        },
+    ];
+    CostBreakdown { system: "marlin", stages }
+}
+
+/// Stark cost model (paper Table III / eqs. 26–42).
+///
+/// `n = 2^p`, `b = 2^{p−q}`; the recursion depth is `d = p − q = log2 b`.
+pub fn stark_cost(n: usize, b: usize, cores: usize) -> CostBreakdown {
+    assert!(b.is_power_of_two(), "stark cost needs power-of-two b");
+    let (nf, bf) = (n as f64, b as f64);
+    let d = (b as f64).log2().round() as i32; // p − q
+    let mut stages = Vec::new();
+
+    // Stage 1 (eq. 38): first divide flatMap touches both input matrices.
+    stages.push(StageCost { label: "divide/stage1".into(), comp: 2.0 * bf * bf, comm: 6.0 * nf * nf, pf: 1.0 });
+
+    // Stages 2..(p−q): per divide level i — flatMap replication comp
+    // (7/4)^i·2b² (eq. 27), groupByKey shuffle 3·(7/2)^i·2n² elements
+    // (eq. 28/29), grouped add comp (7/2)^{i+1}·2b² (eq. 30).
+    for i in 1..d {
+        let fi = i as f64;
+        let comp = (7.0f64 / 4.0).powf(fi) * 2.0 * bf * bf
+            + (7.0f64 / 2.0).powf(fi + 1.0) * 2.0 * bf * bf;
+        let comm = 3.0 * (7.0f64 / 2.0).powf(fi) * 2.0 * nf * nf;
+        let pf = mincores((7.0f64 / 4.0).powf(fi) * 2.0 * bf * bf, cores)
+            .min(mincores(7.0f64.powf(fi + 1.0), cores));
+        stages.push(StageCost { label: format!("divide/L{i}"), comp, comm, pf });
+    }
+
+    // Leaf stage (eqs. 31–33): shuffle 7^{p−q}·2(n/b)² = 2·b^2.8·(n/b)²
+    // elements, multiply 7^{p−q}·(n/b)³ = b^2.8·(n/b)³ element ops.
+    let leaves = 7.0f64.powi(d);
+    let blk = nf / bf;
+    stages.push(StageCost {
+        label: "multiply/leaf".into(),
+        comp: leaves * blk.powi(3),
+        comm: 2.0 * leaves * blk * blk,
+        pf: mincores(leaves, cores),
+    });
+
+    // Combine stages (eqs. 34–37): per level i (descending), mapToPair
+    // comp (7/4)^{i+1}·b², shuffle (7/4)^{i+1}·n² elements, grouped adds
+    // 7^{i+1}·12·(n/b)² element ops.
+    for i in (0..d).rev() {
+        let fi = i as f64;
+        let comp = (7.0f64 / 4.0).powf(fi + 1.0) * bf * bf + 7.0f64.powf(fi + 1.0) * 12.0 * blk * blk;
+        // eq. (35): (7/4)^{i+1}·n² elements shuffled per combine level.
+        let comm = (7.0f64 / 4.0).powf(fi + 1.0) * nf * nf;
+        let pf = mincores(7.0f64.powf(fi + 1.0), cores);
+        stages.push(StageCost { label: format!("combine/L{i}"), comp, comm, pf });
+    }
+
+    CostBreakdown { system: "stark", stages }
+}
+
+/// Paper eq. (25): number of Spark stages Stark runs, `2(p−q)+2`.
+pub fn stark_stage_count(b: usize) -> usize {
+    2 * (b as f64).log2().round() as usize + 2
+}
+
+/// Fit `(α, β) ≥ 0` minimizing `Σ (α·comp_i + β·comm_i − wall_i)²` —
+/// calibrates the cost model against measured wall times (Fig. 10).
+pub fn fit_alpha_beta(points: &[(f64, f64, f64)]) -> (f64, f64) {
+    // Normal equations for 2-var least squares without intercept.
+    let (mut scc, mut smm, mut scm, mut scw, mut smw) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    for &(comp, comm, wall) in points {
+        scc += comp * comp;
+        smm += comm * comm;
+        scm += comp * comm;
+        scw += comp * wall;
+        smw += comm * wall;
+    }
+    let det = scc * smm - scm * scm;
+    let (mut alpha, mut beta) = if det.abs() > 1e-30 {
+        ((smm * scw - scm * smw) / det, (scc * smw - scm * scw) / det)
+    } else if scc > 0.0 {
+        (scw / scc, 0.0)
+    } else {
+        (0.0, if smm > 0.0 { smw / smm } else { 0.0 })
+    };
+    // Project negative solutions onto the single-regressor axis.
+    if alpha < 0.0 {
+        alpha = 0.0;
+        beta = if smm > 0.0 { smw / smm } else { 0.0 };
+    }
+    if beta < 0.0 {
+        beta = 0.0;
+        alpha = if scc > 0.0 { scw / scc } else { 0.0 };
+    }
+    (alpha.max(0.0), beta.max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_counts_match_eq25() {
+        assert_eq!(stark_stage_count(2), 4);
+        assert_eq!(stark_stage_count(4), 6);
+        assert_eq!(stark_stage_count(16), 10);
+    }
+
+    #[test]
+    fn stark_breakdown_has_expected_stage_structure() {
+        let c = stark_cost(1024, 8, 25);
+        // d = 3: 1 first divide + 2 more divides + 1 leaf + 3 combines.
+        assert_eq!(c.stages.len(), 1 + 2 + 1 + 3);
+        assert!(c.stages.iter().any(|s| s.label == "multiply/leaf"));
+    }
+
+    #[test]
+    fn leaf_computation_dominates_all_models_at_moderate_b() {
+        // The paper's core finding: Stage-3/leaf computation is the
+        // dominant term.
+        for (name, cb) in [
+            ("mllib", mllib_cost(4096, 8, 25)),
+            ("marlin", marlin_cost(4096, 8, 25)),
+            ("stark", stark_cost(4096, 8, 25)),
+        ] {
+            let leaf: f64 = cb
+                .stages
+                .iter()
+                .filter(|s| s.label.contains("stage3") || s.label.contains("leaf"))
+                .map(|s| s.comp / s.pf)
+                .sum();
+            let total: f64 = cb.stages.iter().map(|s| s.comp / s.pf).sum();
+            assert!(leaf / total > 0.5, "{name}: leaf {leaf} not dominant of {total}");
+        }
+    }
+
+    #[test]
+    fn stark_beats_marlin_beats_nothing_on_comp_at_scale() {
+        // Leaf multiplications: stark 7^d (n/b)³ < marlin/mllib b³ (n/b)³.
+        let cores = 25;
+        for b in [4usize, 8, 16] {
+            let n = 4096;
+            let stark_leaf: f64 = stark_cost(n, b, cores)
+                .stages
+                .iter()
+                .filter(|s| s.label.contains("leaf"))
+                .map(|s| s.comp)
+                .sum();
+            let marlin_leaf: f64 = marlin_cost(n, b, cores)
+                .stages
+                .iter()
+                .filter(|s| s.label.contains("stage3"))
+                .map(|s| s.comp)
+                .sum();
+            assert!(stark_leaf < marlin_leaf, "b={b}");
+        }
+    }
+
+    #[test]
+    fn u_shape_in_b() {
+        // Predicted wall should dip and rise across b (paper Fig. 9/10).
+        let cores = 25;
+        let walls: Vec<f64> = [2usize, 4, 8, 16, 32]
+            .iter()
+            .map(|&b| stark_cost(4096, b, cores).wall(1e-9, 1e-8))
+            .collect();
+        let min_idx = walls
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(min_idx > 0, "no improvement from b=2: {walls:?}");
+        assert!(min_idx < walls.len() - 1, "monotone decreasing: {walls:?}");
+    }
+
+    #[test]
+    fn fit_recovers_known_coefficients() {
+        let alpha = 2e-9;
+        let beta = 5e-8;
+        let mut pts = Vec::new();
+        for b in [2usize, 4, 8, 16] {
+            let (comp, comm) = marlin_cost(2048, b, 16).terms();
+            pts.push((comp, comm, alpha * comp + beta * comm));
+        }
+        let (a, bb) = fit_alpha_beta(&pts);
+        assert!((a - alpha).abs() / alpha < 1e-6, "alpha {a}");
+        assert!((bb - beta).abs() / beta < 1e-6, "beta {bb}");
+    }
+
+    #[test]
+    fn fit_handles_degenerate_input() {
+        let (a, b) = fit_alpha_beta(&[(1.0, 0.0, 2.0), (2.0, 0.0, 4.0)]);
+        assert!((a - 2.0).abs() < 1e-9);
+        assert_eq!(b, 0.0);
+    }
+
+    #[test]
+    fn wall_is_positive_and_finite() {
+        for b in [2usize, 4, 8, 16, 32] {
+            for cb in [mllib_cost(8192, b, 25), marlin_cost(8192, b, 25), stark_cost(8192, b, 25)] {
+                let w = cb.wall(1e-9, 1e-8);
+                assert!(w.is_finite() && w > 0.0, "{}: {w}", cb.system);
+            }
+        }
+    }
+}

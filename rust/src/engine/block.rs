@@ -1,0 +1,190 @@
+//! The paper's central data structure (§III-B, Fig. 1): a matrix is an
+//! RDD of [`Block`]s, each carrying a sub-matrix plus the bookkeeping
+//! tags that drive the distributed recursion.
+//!
+//! Paper fields → sparklet fields:
+//!
+//! | paper              | here                                         |
+//! |--------------------|----------------------------------------------|
+//! | `row-index`        | `Block::row` (block-grid row in the current sub-matrix) |
+//! | `column-index`     | `Block::col`                                 |
+//! | `mat-name` (a) matrix tag | `Tag::side` ([`Side::A`]/[`Side::B`]/[`Side::M`]) |
+//! | `mat-name` (b) M-Index    | `Tag::mindex` — the 7-ary recursion-tree path |
+//! | `matrix` (2-D array)      | `Block::data` (`Arc<DenseMatrix>`)    |
+//!
+//! The paper encodes `mat-name` as a comma-separated string
+//! (`"A|B, M_{1..7}, M-index"`); we use the equivalent packed form: at
+//! recursion level `l`, a node's `mindex` is `parent * 7 + m` for
+//! `m ∈ [0, 7)` — i.e. the base-7 path from the root, which is exactly
+//! what the string encodes. [`Tag::child`]/[`Tag::parent`] are the two
+//! moves the divide and combine phases make on the tree.
+
+use std::sync::Arc;
+
+use crate::engine::sizable::Sizable;
+use crate::matrix::DenseMatrix;
+
+/// The matrix label part of `mat-name`: which logical matrix the block
+/// currently belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Side {
+    /// Left operand (or a derived left-operand sub-matrix).
+    A,
+    /// Right operand.
+    B,
+    /// A product sub-matrix (`M` in the paper: the result of a recursive
+    /// multiply, on its way up through combine).
+    M,
+}
+
+/// `mat-name`: matrix label + position in the 7-ary recursion tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Tag {
+    pub side: Side,
+    /// Base-7 path from the recursion root ("M-Index" in the paper).
+    pub mindex: u64,
+}
+
+impl Tag {
+    pub fn new(side: Side, mindex: u64) -> Self {
+        Self { side, mindex }
+    }
+
+    /// Root tag for an input matrix (`"A|B, M, 0"` in the paper's string form).
+    pub fn root(side: Side) -> Self {
+        Self { side, mindex: 0 }
+    }
+
+    /// Descend to the `m`-th child (`m ∈ [0,7)`): the divide phase's move.
+    pub fn child(self, m: u64) -> Self {
+        debug_assert!(m < 7, "M-index must be one of the 7 sub-problems");
+        Self { side: self.side, mindex: self.mindex * 7 + m }
+    }
+
+    /// Ascend to the parent: the combine phase's move. Returns the parent
+    /// tag and which child (`m ∈ [0,7)`) this was.
+    pub fn parent(self) -> (Self, u64) {
+        (Self { side: self.side, mindex: self.mindex / 7 }, self.mindex % 7)
+    }
+
+    /// Re-label the side (e.g. products become [`Side::M`]).
+    pub fn with_side(self, side: Side) -> Self {
+        Self { side, mindex: self.mindex }
+    }
+
+    /// Recursion depth of this tag, given the M-index was built by `depth`
+    /// [`child`](Self::child) moves from the root. (The value alone cannot
+    /// distinguish `0` at depth 1 from `0` at depth 2 — callers track
+    /// depth, as the paper's driver does via the recursion stack.)
+    pub fn ancestor(self, levels: u32) -> Self {
+        Self { side: self.side, mindex: self.mindex / 7u64.pow(levels) }
+    }
+}
+
+/// One matrix block: payload + tags (paper Fig. 1).
+#[derive(Debug, Clone)]
+pub struct Block {
+    /// Block-grid row index within the current sub-matrix.
+    pub row: u32,
+    /// Block-grid column index within the current sub-matrix.
+    pub col: u32,
+    /// `mat-name` (see [`Tag`]).
+    pub tag: Tag,
+    /// The dense payload. `Arc` so replication (the paper's
+    /// `flatMapToPair` copies) shares memory in-process while shuffle
+    /// accounting still counts logical copies (see [`Sizable`] for `Arc`).
+    pub data: Arc<DenseMatrix>,
+}
+
+impl Block {
+    pub fn new(row: u32, col: u32, tag: Tag, data: Arc<DenseMatrix>) -> Self {
+        Self { row, col, tag, data }
+    }
+
+    /// Edge length of the square payload.
+    pub fn size(&self) -> usize {
+        self.data.rows()
+    }
+
+    /// Move the block into a quadrant-relative coordinate system: which
+    /// quadrant of a `n × n` block grid it is in, and its position inside
+    /// that quadrant. Returns `(quadrant ∈ {11,12,21,22} as (qr,qc), row', col')`.
+    pub fn quadrant_of(&self, grid: u32) -> (u32, u32, u32, u32) {
+        debug_assert!(grid >= 2 && grid % 2 == 0, "grid {grid} not divisible");
+        let half = grid / 2;
+        let qr = self.row / half;
+        let qc = self.col / half;
+        (qr, qc, self.row % half, self.col % half)
+    }
+}
+
+impl Sizable for Block {
+    fn approx_bytes(&self) -> usize {
+        // row + col + tag (side byte padded to 8 + mindex) + payload.
+        8 + 16 + self.data.size_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blk(row: u32, col: u32) -> Block {
+        Block::new(row, col, Tag::root(Side::A), Arc::new(DenseMatrix::zeros(2, 2)))
+    }
+
+    #[test]
+    fn tag_child_parent_roundtrip() {
+        let root = Tag::root(Side::A);
+        for m in 0..7 {
+            let child = root.child(m);
+            let (parent, which) = child.parent();
+            assert_eq!(parent, root);
+            assert_eq!(which, m);
+        }
+    }
+
+    #[test]
+    fn tag_paths_are_unique_per_level() {
+        let root = Tag::root(Side::B);
+        let mut seen = std::collections::HashSet::new();
+        for m1 in 0..7 {
+            for m2 in 0..7 {
+                assert!(seen.insert(root.child(m1).child(m2).mindex));
+            }
+        }
+        assert_eq!(seen.len(), 49);
+    }
+
+    #[test]
+    fn tag_ancestor_jumps_levels() {
+        let t = Tag::root(Side::M).child(3).child(5).child(1);
+        assert_eq!(t.ancestor(3), Tag::root(Side::M));
+        assert_eq!(t.ancestor(1), Tag::root(Side::M).child(3).child(5));
+        assert_eq!(t.ancestor(0), t);
+    }
+
+    #[test]
+    fn with_side_keeps_path() {
+        let t = Tag::root(Side::A).child(2);
+        let m = t.with_side(Side::M);
+        assert_eq!(m.mindex, t.mindex);
+        assert_eq!(m.side, Side::M);
+    }
+
+    #[test]
+    fn quadrants() {
+        // 4x4 block grid: halves of size 2.
+        assert_eq!(blk(0, 0).quadrant_of(4), (0, 0, 0, 0));
+        assert_eq!(blk(1, 3).quadrant_of(4), (0, 1, 1, 1));
+        assert_eq!(blk(2, 0).quadrant_of(4), (1, 0, 0, 0));
+        assert_eq!(blk(3, 3).quadrant_of(4), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn block_size_accounting() {
+        let b = blk(0, 0);
+        assert_eq!(b.approx_bytes(), 8 + 16 + 4 * 8);
+        assert_eq!(b.size(), 2);
+    }
+}

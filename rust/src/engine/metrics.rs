@@ -1,0 +1,273 @@
+//! Per-stage and per-job metrics — the observables of the paper's
+//! evaluation (§V, Tables VIII–X and Figure 11).
+//!
+//! Every wide transformation and every action records one
+//! [`StageMetrics`]. Labels follow the convention `"<phase>/<detail>"`
+//! (e.g. `"divide/flatMap L1"`, `"stage3/cogroup"`); the phase prefix is
+//! what the stage-wise experiment groups by.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Metrics of one executed stage.
+#[derive(Debug, Clone)]
+pub struct StageMetrics {
+    /// Monotonic stage id within the context.
+    pub stage_id: usize,
+    /// `"<phase>/<detail>"` label supplied by the algorithm.
+    pub label: String,
+    /// Number of tasks (= input partitions of the stage).
+    pub tasks: usize,
+    /// Stage wall-clock time, milliseconds (includes simulated net wait).
+    pub wall_ms: f64,
+    /// Sum of task busy times, milliseconds (the paper's "computation").
+    pub comp_ms: f64,
+    /// Total bytes written to the shuffle (paper's "communication").
+    pub shuffle_bytes: u64,
+    /// Subset of `shuffle_bytes` crossing executor boundaries.
+    pub remote_bytes: u64,
+    /// Simulated network wait added to the stage, milliseconds.
+    pub net_wait_ms: f64,
+    /// Records emitted into the shuffle (or collected, for actions).
+    pub records_out: u64,
+    /// Parallelization factor actually available: `min(tasks, total cores)`
+    /// — the paper's `min[·, cores]` denominator.
+    pub pf: usize,
+    /// Task retry count (failure injection / lineage recomputation).
+    pub retries: u32,
+}
+
+impl StageMetrics {
+    /// Phase prefix of the label (text before the first `/`).
+    pub fn phase(&self) -> &str {
+        self.label.split('/').next().unwrap_or(&self.label)
+    }
+
+    /// JSON representation (experiment reports).
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::obj(vec![
+            ("stage_id", Value::num(self.stage_id as f64)),
+            ("label", Value::str(self.label.clone())),
+            ("tasks", Value::num(self.tasks as f64)),
+            ("wall_ms", Value::num(self.wall_ms)),
+            ("comp_ms", Value::num(self.comp_ms)),
+            ("shuffle_bytes", Value::num(self.shuffle_bytes as f64)),
+            ("remote_bytes", Value::num(self.remote_bytes as f64)),
+            ("net_wait_ms", Value::num(self.net_wait_ms)),
+            ("records_out", Value::num(self.records_out as f64)),
+            ("pf", Value::num(self.pf as f64)),
+            ("retries", Value::num(self.retries as f64)),
+        ])
+    }
+}
+
+/// Metrics of one job (one algorithm invocation).
+#[derive(Debug, Clone)]
+pub struct JobMetrics {
+    pub name: String,
+    pub stages: Vec<StageMetrics>,
+    /// Modeled cluster wall time: the sum of per-stage makespans (stages
+    /// run serially in Spark) plus simulated network waits. This is the
+    /// quantity every experiment reports — it reflects the *configured*
+    /// cluster, not the host (see `engine::dist::comp_ms_to_wall`).
+    pub wall_ms: f64,
+    /// Real driver-process elapsed time (host-dependent; for diagnostics).
+    pub elapsed_ms: f64,
+}
+
+impl JobMetrics {
+    /// Total shuffle bytes across stages.
+    pub fn total_shuffle_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.shuffle_bytes).sum()
+    }
+
+    /// Total summed task compute time.
+    pub fn total_comp_ms(&self) -> f64 {
+        self.stages.iter().map(|s| s.comp_ms).sum()
+    }
+
+    /// Sum of stage wall times grouped by phase prefix, in first-seen order.
+    pub fn phase_wall_ms(&self) -> Vec<(String, f64)> {
+        let mut order: Vec<String> = Vec::new();
+        let mut acc: std::collections::HashMap<String, f64> = Default::default();
+        for s in &self.stages {
+            let p = s.phase().to_string();
+            if !acc.contains_key(&p) {
+                order.push(p.clone());
+            }
+            *acc.entry(p).or_insert(0.0) += s.wall_ms;
+        }
+        order.into_iter().map(|p| { let v = acc[&p]; (p, v) }).collect()
+    }
+
+    /// Wall time of stages whose phase contains `needle`.
+    pub fn phase_ms(&self, needle: &str) -> f64 {
+        self.stages
+            .iter()
+            .filter(|s| s.phase().contains(needle))
+            .map(|s| s.wall_ms)
+            .sum()
+    }
+
+    /// JSON representation (experiment reports).
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::obj(vec![
+            ("name", Value::str(self.name.clone())),
+            ("wall_ms", Value::num(self.wall_ms)),
+            ("stages", Value::Array(self.stages.iter().map(|s| s.to_json()).collect())),
+        ])
+    }
+}
+
+struct InFlight {
+    name: String,
+    started: Instant,
+    stages: Vec<StageMetrics>,
+}
+
+/// Thread-safe registry of finished jobs plus the in-flight one.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    current: Mutex<Option<InFlight>>,
+    finished: Mutex<Vec<JobMetrics>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a job scope; stages recorded until [`end_job`](Self::end_job)
+    /// attach to it. An unfinished previous job is finalized first.
+    pub fn begin_job(&self, name: &str) {
+        let mut cur = self.current.lock().unwrap();
+        if let Some(fin) = cur.take() {
+            self.finished.lock().unwrap().push(Self::finalize(fin));
+        }
+        *cur = Some(InFlight { name: name.to_string(), started: Instant::now(), stages: Vec::new() });
+    }
+
+    /// Finish the in-flight job and return its metrics.
+    pub fn end_job(&self) -> Option<JobMetrics> {
+        let fin = self.current.lock().unwrap().take()?;
+        let job = Self::finalize(fin);
+        self.finished.lock().unwrap().push(job.clone());
+        Some(job)
+    }
+
+    fn finalize(inflight: InFlight) -> JobMetrics {
+        let wall_ms = inflight.stages.iter().map(|s| s.wall_ms).sum();
+        JobMetrics {
+            name: inflight.name,
+            wall_ms,
+            elapsed_ms: inflight.started.elapsed().as_secs_f64() * 1e3,
+            stages: inflight.stages,
+        }
+    }
+
+    /// Record a stage against the in-flight job (stages outside any job
+    /// scope are attached to an implicit "adhoc" job).
+    pub fn record_stage(&self, m: StageMetrics) {
+        let mut cur = self.current.lock().unwrap();
+        match cur.as_mut() {
+            Some(inflight) => inflight.stages.push(m),
+            None => {
+                *cur = Some(InFlight {
+                    name: "adhoc".to_string(),
+                    started: Instant::now(),
+                    stages: vec![m],
+                });
+            }
+        }
+    }
+
+    /// All finished jobs so far.
+    pub fn jobs(&self) -> Vec<JobMetrics> {
+        self.finished.lock().unwrap().clone()
+    }
+
+    /// Stages of the in-flight job (for tests and live inspection).
+    pub fn current_stages(&self) -> Vec<StageMetrics> {
+        self.current
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|j| j.stages.clone())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage(label: &str, wall: f64) -> StageMetrics {
+        StageMetrics {
+            stage_id: 0,
+            label: label.to_string(),
+            tasks: 1,
+            wall_ms: wall,
+            comp_ms: wall,
+            shuffle_bytes: 10,
+            remote_bytes: 5,
+            net_wait_ms: 0.0,
+            records_out: 1,
+            pf: 1,
+            retries: 0,
+        }
+    }
+
+    #[test]
+    fn phase_parsing() {
+        assert_eq!(stage("divide/flatMap L0", 1.0).phase(), "divide");
+        assert_eq!(stage("nolabel", 1.0).phase(), "nolabel");
+    }
+
+    #[test]
+    fn job_scoping() {
+        let reg = MetricsRegistry::new();
+        reg.begin_job("j1");
+        reg.record_stage(stage("divide/a", 1.0));
+        reg.record_stage(stage("multiply/b", 2.0));
+        let job = reg.end_job().unwrap();
+        assert_eq!(job.name, "j1");
+        assert_eq!(job.stages.len(), 2);
+        assert_eq!(job.total_shuffle_bytes(), 20);
+        assert_eq!(reg.jobs().len(), 1);
+    }
+
+    #[test]
+    fn phase_aggregation() {
+        let reg = MetricsRegistry::new();
+        reg.begin_job("j");
+        reg.record_stage(stage("divide/a", 1.0));
+        reg.record_stage(stage("divide/b", 2.0));
+        reg.record_stage(stage("combine/c", 4.0));
+        let job = reg.end_job().unwrap();
+        let phases = job.phase_wall_ms();
+        assert_eq!(phases[0], ("divide".to_string(), 3.0));
+        assert_eq!(phases[1], ("combine".to_string(), 4.0));
+        assert_eq!(job.phase_ms("divide"), 3.0);
+    }
+
+    #[test]
+    fn adhoc_job_for_unscoped_stage() {
+        let reg = MetricsRegistry::new();
+        reg.record_stage(stage("x/y", 1.0));
+        assert_eq!(reg.current_stages().len(), 1);
+        let job = reg.end_job().unwrap();
+        assert_eq!(job.name, "adhoc");
+    }
+
+    #[test]
+    fn begin_finalizes_previous() {
+        let reg = MetricsRegistry::new();
+        reg.begin_job("a");
+        reg.record_stage(stage("s/1", 1.0));
+        reg.begin_job("b");
+        assert_eq!(reg.jobs().len(), 1);
+        assert_eq!(reg.jobs()[0].name, "a");
+    }
+}

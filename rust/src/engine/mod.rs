@@ -1,0 +1,37 @@
+//! `sparklet` — the Spark-like distributed dataflow substrate (DESIGN.md
+//! S1–S6).
+//!
+//! The paper's contribution is a mapping of Strassen's recursion onto
+//! Spark's execution model; this module reproduces exactly the parts of
+//! that model the paper's analysis is parameterized by:
+//!
+//! - an RDD-like distributed collection ([`Dist`]) with narrow
+//!   transformations (`map`, `flat_map`, `filter`, …) **pipelined into a
+//!   single stage**, and wide transformations (`group_by_key`,
+//!   `reduce_by_key`, `join`, `cogroup`, `partition_by`) that cut stage
+//!   boundaries and shuffle;
+//! - a simulated cluster ([`Cluster`]) of `executors × cores` workers with
+//!   deterministic partition→executor placement;
+//! - a shuffle with **byte accounting** (total + remote) and an optional
+//!   simulated network bandwidth, so the paper's communication analysis
+//!   (§IV) has a concrete observable;
+//! - per-stage metrics ([`metrics`]) — wall clock, summed task compute
+//!   time, parallelization factor, shuffle volume — the quantities in the
+//!   paper's Tables I–III and the stage-wise evaluation (Tables VIII–X);
+//! - lineage-based task retry (failed tasks recompute from their pure
+//!   closures, the sparklet analogue of RDD recomputation).
+
+pub mod block;
+pub mod cluster;
+pub mod dist;
+pub mod metrics;
+pub mod ops;
+pub mod partitioner;
+pub mod sizable;
+
+pub use block::{Block, Side, Tag};
+pub use cluster::{Cluster, ClusterConfig, FailureSpec};
+pub use dist::{Dist, SparkContext};
+pub use metrics::{JobMetrics, MetricsRegistry, StageMetrics};
+pub use partitioner::{GridPartitioner, HashPartitioner, Partitioner};
+pub use sizable::Sizable;

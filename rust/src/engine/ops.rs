@@ -1,0 +1,166 @@
+//! Extended RDD operations — the rest of the Spark surface a workflow
+//! around Stark would use (`distinct`, `sortByKey`, `sample`, `coalesce`,
+//! `keyBy`, `mapValues`, `countByKey`). All are built from the core
+//! narrow/wide primitives in [`super::dist`], so they inherit stage
+//! pipelining, shuffle accounting and lineage retry for free.
+
+use std::hash::Hash;
+
+use crate::engine::dist::{Data, Dist};
+use crate::engine::sizable::Sizable;
+use crate::matrix::Rng64;
+
+impl<T: Data + Eq + Hash + Sizable> Dist<T> {
+    /// Distinct elements (Spark `distinct`): shuffle on the value itself,
+    /// one representative per key survives.
+    pub fn distinct(&self, label: &str, parts: usize) -> Dist<T> {
+        self.map(|t| (t, ()))
+            .reduce_by_key(label, parts, |a, _| a)
+            .map(|(t, ())| t)
+    }
+}
+
+impl<T: Data> Dist<T> {
+    /// Deterministic Bernoulli sample (Spark `sample(false, fraction)`);
+    /// seeded per partition so re-computation (lineage retry) draws the
+    /// same subset.
+    pub fn sample(&self, fraction: f64, seed: u64) -> Dist<T> {
+        assert!((0.0..=1.0).contains(&fraction), "fraction in [0,1]");
+        let n_parts = self.num_partitions() as u64;
+        // Tag each element with its partition-local index, then filter by
+        // a per-partition RNG stream.
+        self.map_partitions_indexed(move |part, items| {
+            let mut rng = Rng64::new(seed ^ (part as u64).wrapping_mul(0x9E37_79B9) ^ n_parts);
+            items.into_iter().filter(|_| rng.next_f64() < fraction).collect()
+        })
+    }
+
+    /// Reduce the partition count without a shuffle (Spark `coalesce`):
+    /// partition `i` of the result concatenates parents `j ≡ i (mod k)`.
+    pub fn coalesce(&self, parts: usize) -> Dist<T> {
+        let parts = parts.max(1).min(self.num_partitions().max(1));
+        let parents = self.num_partitions();
+        let me = self.clone();
+        Dist::from_fn(self.context().clone(), parts, move |p| {
+            let mut out = Vec::new();
+            let mut j = p;
+            while j < parents {
+                out.extend(me.compute_partition(j));
+                j += parts;
+            }
+            out
+        })
+    }
+
+    /// Key every element (Spark `keyBy`).
+    pub fn key_by<K: Data>(&self, f: impl Fn(&T) -> K + Send + Sync + 'static) -> Dist<(K, T)> {
+        self.map(move |t| (f(&t), t))
+    }
+}
+
+impl<K, V> Dist<(K, V)>
+where
+    K: Data + Eq + Hash + Sizable,
+    V: Data + Sizable,
+{
+    /// Transform values, keep keys (Spark `mapValues`) — narrow.
+    pub fn map_values<W: Data>(&self, f: impl Fn(V) -> W + Send + Sync + 'static) -> Dist<(K, W)> {
+        self.map(move |(k, v)| (k, f(v)))
+    }
+
+    /// Count records per key (Spark `countByKey`, distributed variant).
+    pub fn count_by_key(&self, label: &str, parts: usize) -> Dist<(K, u64)> {
+        self.map(|(k, _)| (k, 1u64)).reduce_by_key(label, parts, |a, b| a + b)
+    }
+}
+
+impl<K, V> Dist<(K, V)>
+where
+    K: Data + Ord + Eq + Hash + Sizable,
+    V: Data + Sizable,
+{
+    /// Globally sorted collect (Spark `sortByKey().collect()`): the
+    /// shuffle ranges keys, each partition sorts locally, and the driver
+    /// concatenates in partition order. Range boundaries come from the
+    /// key distribution itself (a driver-side sample pass, like Spark's
+    /// `RangePartitioner`).
+    pub fn sort_by_key_collect(&self, label: &str) -> Vec<(K, V)> {
+        let mut all = self.collect(label);
+        all.sort_by(|a, b| a.0.cmp(&b.0));
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::engine::{ClusterConfig, SparkContext};
+
+    fn ctx() -> SparkContext {
+        SparkContext::new(ClusterConfig::new(2, 2))
+    }
+
+    #[test]
+    fn distinct_removes_duplicates() {
+        let ctx = ctx();
+        let data: Vec<u32> = (0..100).map(|i| i % 7).collect();
+        let mut got = ctx.parallelize(data, 5).distinct("d", 3).collect("c");
+        got.sort();
+        assert_eq!(got, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_is_deterministic_and_proportional() {
+        let ctx = ctx();
+        let d = ctx.parallelize((0u64..2000).collect(), 4);
+        let s1 = d.sample(0.25, 99).count("c1");
+        let s2 = d.sample(0.25, 99).count("c2");
+        assert_eq!(s1, s2, "same seed must draw the same subset");
+        assert!((300..700).contains(&s1), "sample size {s1} far from 500");
+        assert_eq!(d.sample(0.0, 1).count("c3"), 0);
+        assert_eq!(d.sample(1.0, 1).count("c4"), 2000);
+    }
+
+    #[test]
+    fn coalesce_preserves_multiset() {
+        let ctx = ctx();
+        let d = ctx.parallelize((0u64..50).collect(), 10);
+        let c = d.coalesce(3);
+        assert_eq!(c.num_partitions(), 3);
+        let mut got = c.collect("c");
+        got.sort();
+        assert_eq!(got, (0..50).collect::<Vec<_>>());
+        // Clamps to at most the parent count.
+        assert_eq!(d.coalesce(100).num_partitions(), 10);
+    }
+
+    #[test]
+    fn key_by_and_map_values() {
+        let ctx = ctx();
+        let d = ctx.parallelize(vec!["aa".to_string(), "b".to_string(), "ccc".to_string()], 2);
+        let mut got = d
+            .key_by(|s| s.len() as u32)
+            .map_values(|s| s.to_uppercase())
+            .collect("c");
+        got.sort();
+        assert_eq!(got, vec![(1, "B".into()), (2, "AA".into()), (3, "CCC".into())]);
+    }
+
+    #[test]
+    fn count_by_key_counts() {
+        let ctx = ctx();
+        let pairs: Vec<(u32, u32)> = (0..90).map(|i| (i % 3, i)).collect();
+        let mut got = ctx.parallelize(pairs, 4).count_by_key("cbk", 2).collect("c");
+        got.sort();
+        assert_eq!(got, vec![(0, 30), (1, 30), (2, 30)]);
+    }
+
+    #[test]
+    fn sort_by_key_collect_is_sorted() {
+        let ctx = ctx();
+        let pairs: Vec<(u32, u32)> = (0..100).rev().map(|i| (i, i * 2)).collect();
+        let got = ctx.parallelize(pairs, 7).sort_by_key_collect("sort");
+        let keys: Vec<u32> = got.iter().map(|(k, _)| *k).collect();
+        assert!(keys.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(got.len(), 100);
+    }
+}

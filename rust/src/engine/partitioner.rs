@@ -1,0 +1,149 @@
+//! Key → reduce-partition routing for wide transformations.
+//!
+//! [`HashPartitioner`] is the sparklet default (deterministic SipHash with
+//! fixed keys, so runs are reproducible). [`GridPartitioner`] reproduces
+//! MLLib's `BlockMatrix` scheme the paper describes in §IV-A: block
+//! coordinates are mapped onto a coarse grid of partitions so that blocks
+//! multiplied together land in the same partition — the "simulation" step
+//! whose driver-side cost is eq. (1).
+
+use std::hash::{BuildHasherDefault, Hash, Hasher};
+
+/// Deterministic hasher used across the engine (fixed-key SipHash).
+pub type DetHasher = BuildHasherDefault<std::collections::hash_map::DefaultHasher>;
+
+/// Deterministic hash map/set aliases used across sparklet.
+pub type DetHashMap<K, V> = std::collections::HashMap<K, V, DetHasher>;
+
+/// Routes keys to `[0, num_partitions)`.
+pub trait Partitioner<K>: Send + Sync {
+    fn num_partitions(&self) -> usize;
+    fn partition(&self, key: &K) -> usize;
+}
+
+/// Spark's default: `hash(key) mod parts`, with a deterministic hasher.
+#[derive(Debug, Clone)]
+pub struct HashPartitioner {
+    parts: usize,
+}
+
+impl HashPartitioner {
+    pub fn new(parts: usize) -> Self {
+        assert!(parts > 0, "need at least one partition");
+        Self { parts }
+    }
+}
+
+impl<K: Hash> Partitioner<K> for HashPartitioner {
+    fn num_partitions(&self) -> usize {
+        self.parts
+    }
+
+    fn partition(&self, key: &K) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() % self.parts as u64) as usize
+    }
+}
+
+/// MLLib-style grid partitioner over block coordinates `(row, col)`:
+/// the `rows × cols` block grid is cut into `per_side × per_side` regions,
+/// each a partition.
+#[derive(Debug, Clone)]
+pub struct GridPartitioner {
+    /// Blocks per grid side (the paper's `b`).
+    pub grid: usize,
+    /// Block rows/cols per partition region side.
+    pub region: usize,
+}
+
+impl GridPartitioner {
+    /// Partition a `grid × grid` block matrix into about `target_parts`
+    /// square regions.
+    pub fn new(grid: usize, target_parts: usize) -> Self {
+        assert!(grid > 0);
+        let per_side = (target_parts as f64).sqrt().ceil() as usize;
+        let per_side = per_side.clamp(1, grid);
+        let region = grid.div_ceil(per_side);
+        Self { grid, region }
+    }
+
+    fn regions_per_side(&self) -> usize {
+        self.grid.div_ceil(self.region)
+    }
+}
+
+impl Partitioner<(u32, u32)> for GridPartitioner {
+    fn num_partitions(&self) -> usize {
+        let r = self.regions_per_side();
+        r * r
+    }
+
+    fn partition(&self, key: &(u32, u32)) -> usize {
+        let (r, c) = (key.0 as usize % self.grid, key.1 as usize % self.grid);
+        let rr = r / self.region;
+        let cc = c / self.region;
+        rr * self.regions_per_side() + cc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_partitioner_in_range_and_deterministic() {
+        let p = HashPartitioner::new(7);
+        for k in 0..1000u64 {
+            let a = p.partition(&k);
+            assert!(a < 7);
+            assert_eq!(a, p.partition(&k));
+        }
+    }
+
+    #[test]
+    fn hash_partitioner_spreads() {
+        let p = HashPartitioner::new(8);
+        let mut counts = [0usize; 8];
+        for k in 0..8000u64 {
+            counts[p.partition(&k)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 500), "skewed: {counts:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one partition")]
+    fn zero_partitions_rejected() {
+        HashPartitioner::new(0);
+    }
+
+    #[test]
+    fn grid_partitioner_covers_all_parts() {
+        let g = GridPartitioner::new(4, 4); // 4x4 blocks into 4 regions
+        assert_eq!(g.num_partitions(), 4);
+        let mut seen = std::collections::HashSet::new();
+        for r in 0..4u32 {
+            for c in 0..4u32 {
+                let p = g.partition(&(r, c));
+                assert!(p < 4);
+                seen.insert(p);
+            }
+        }
+        assert_eq!(seen.len(), 4);
+    }
+
+    #[test]
+    fn grid_partitioner_groups_neighbors() {
+        let g = GridPartitioner::new(4, 4);
+        // 2x2 regions: (0,0) and (1,1) share a region; (0,0) and (3,3) don't.
+        assert_eq!(g.partition(&(0, 0)), g.partition(&(1, 1)));
+        assert_ne!(g.partition(&(0, 0)), g.partition(&(3, 3)));
+    }
+
+    #[test]
+    fn grid_partitioner_single_region() {
+        let g = GridPartitioner::new(2, 1);
+        assert_eq!(g.num_partitions(), 1);
+        assert_eq!(g.partition(&(1, 0)), 0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Logical record sizes for shuffle accounting.
+//!
+//! The paper's communication costs count *elements shuffled*; sparklet
+//! counts bytes. [`Sizable::approx_bytes`] is the **logical** payload size
+//! of a record as it would cross the wire — `Arc<T>` reports the size of
+//! `T`, not of the pointer, because a replicated block in a real cluster
+//! is a real copy even though the simulator shares memory.
+
+use std::sync::Arc;
+
+/// Logical serialized size of a record, in bytes.
+pub trait Sizable {
+    fn approx_bytes(&self) -> usize;
+}
+
+macro_rules! prim_sizable {
+    ($($t:ty),*) => {
+        $(impl Sizable for $t {
+            fn approx_bytes(&self) -> usize { std::mem::size_of::<$t>() }
+        })*
+    };
+}
+
+prim_sizable!(u8, u16, u32, u64, usize, i8, i16, i32, i64, isize, f32, f64, bool, char);
+
+impl Sizable for () {
+    fn approx_bytes(&self) -> usize {
+        0
+    }
+}
+
+impl Sizable for String {
+    fn approx_bytes(&self) -> usize {
+        self.len()
+    }
+}
+
+impl Sizable for &str {
+    fn approx_bytes(&self) -> usize {
+        self.len()
+    }
+}
+
+impl<T: Sizable> Sizable for Vec<T> {
+    fn approx_bytes(&self) -> usize {
+        self.iter().map(Sizable::approx_bytes).sum()
+    }
+}
+
+impl<T: Sizable> Sizable for Option<T> {
+    fn approx_bytes(&self) -> usize {
+        self.as_ref().map_or(0, Sizable::approx_bytes)
+    }
+}
+
+impl<T: Sizable> Sizable for Arc<T> {
+    fn approx_bytes(&self) -> usize {
+        // Logical copy semantics: shipping an Arc'd block counts the block.
+        self.as_ref().approx_bytes()
+    }
+}
+
+impl Sizable for crate::matrix::DenseMatrix {
+    fn approx_bytes(&self) -> usize {
+        self.size_bytes()
+    }
+}
+
+impl<A: Sizable, B: Sizable> Sizable for (A, B) {
+    fn approx_bytes(&self) -> usize {
+        self.0.approx_bytes() + self.1.approx_bytes()
+    }
+}
+
+impl<A: Sizable, B: Sizable, C: Sizable> Sizable for (A, B, C) {
+    fn approx_bytes(&self) -> usize {
+        self.0.approx_bytes() + self.1.approx_bytes() + self.2.approx_bytes()
+    }
+}
+
+impl<A: Sizable, B: Sizable, C: Sizable, D: Sizable> Sizable for (A, B, C, D) {
+    fn approx_bytes(&self) -> usize {
+        self.0.approx_bytes()
+            + self.1.approx_bytes()
+            + self.2.approx_bytes()
+            + self.3.approx_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives() {
+        assert_eq!(7u8.approx_bytes(), 1);
+        assert_eq!(7u64.approx_bytes(), 8);
+        assert_eq!(1.5f64.approx_bytes(), 8);
+    }
+
+    #[test]
+    fn strings_and_vecs() {
+        assert_eq!("hello".to_string().approx_bytes(), 5);
+        assert_eq!(vec![1u32, 2, 3].approx_bytes(), 12);
+    }
+
+    #[test]
+    fn tuples_compose() {
+        assert_eq!((1u32, 2.0f64).approx_bytes(), 12);
+        assert_eq!((1u8, 2u8, 3u8).approx_bytes(), 3);
+    }
+
+    #[test]
+    fn arc_counts_inner() {
+        let v = Arc::new(vec![0f64; 10]);
+        assert_eq!(v.approx_bytes(), 80);
+        // Two Arcs to the same data each count the full logical size.
+        let w = v.clone();
+        assert_eq!(v.approx_bytes() + w.approx_bytes(), 160);
+    }
+
+    #[test]
+    fn option_counts_some_only() {
+        assert_eq!(None::<u64>.approx_bytes(), 0);
+        assert_eq!(Some(1u64).approx_bytes(), 8);
+    }
+}

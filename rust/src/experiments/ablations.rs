@@ -1,0 +1,131 @@
+//! Ablations of the design choices DESIGN.md §6 calls out:
+//!
+//! 1. **Leaf backend** — AOT-XLA `dot` vs native Rust vs `pallas`
+//!    (interpret-lowered L1 kernel) on the same Stark workload.
+//! 2. **Fused leaf** — one `strassen_leaf` XLA call per sub-problem vs 7
+//!    separate `matmul` calls plus engine-side combines.
+//! 3. **Network model** — shuffle at memory speed vs the paper's 14 Gb/s
+//!    fabric (how much of the U-curve is communication).
+//! 4. **Multiply isolation** — pipelined leaf stage vs materialized
+//!    (the observability tax of the Table VII methodology).
+
+use anyhow::Result;
+
+use crate::algos::Algorithm;
+use crate::config::BackendKind;
+use crate::experiments::report::{row, Report};
+use crate::experiments::Harness;
+use crate::util::json::Value;
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub name: String,
+    pub variant: String,
+    pub wall_ms: f64,
+    pub leaf_ms: f64,
+}
+
+#[derive(Debug)]
+pub struct Ablations {
+    pub rows: Vec<AblationRow>,
+    pub n: usize,
+    pub b: usize,
+}
+
+impl Ablations {
+    pub fn get(&self, name: &str, variant: &str) -> Option<&AblationRow> {
+        self.rows.iter().find(|r| r.name == name && r.variant == variant)
+    }
+}
+
+pub fn run(h: &Harness) -> Result<(Ablations, Report)> {
+    // Mid-scale point: largest size, second-smallest power-of-two b.
+    let n = *h.scale.sizes.last().unwrap();
+    let bs = h.bs_for(Algorithm::Stark, n);
+    let b = bs.get(1).copied().unwrap_or(bs[0]);
+    let mut rows = Vec::new();
+
+    // 1. Backend ablation (each backend builds its own service).
+    for kind in [BackendKind::Xla, BackendKind::Native, BackendKind::XlaPallas] {
+        let backend = match crate::config::build_backend(kind, h.scale.executors) {
+            Ok(be) => be,
+            Err(_) => continue, // artifacts missing: skip XLA arms
+        };
+        let cfg = h.scale.run_config(Algorithm::Stark, n, b);
+        let (a, bm) = h.inputs(n);
+        let ctx = cfg.context();
+        let out = crate::algos::stark::multiply(&ctx, backend, &a, &bm, b, &cfg.stark_config());
+        rows.push(AblationRow {
+            name: "backend".into(),
+            variant: kind.to_string(),
+            wall_ms: out.job.wall_ms,
+            leaf_ms: out.leaf_ms,
+        });
+    }
+
+    // 2. Fused leaf vs composed recursion.
+    for fused in [false, true] {
+        let out = h.run_point_with(Algorithm::Stark, n, b, |c| c.fused_leaf = fused);
+        rows.push(AblationRow {
+            name: "fused_leaf".into(),
+            variant: if fused { "fused" } else { "recursed" }.into(),
+            wall_ms: out.job.wall_ms,
+            leaf_ms: out.leaf_ms,
+        });
+    }
+
+    // 3. Network model.
+    for (variant, bw) in [("memory-speed", None), ("14Gb/s", Some(1.75e9)), ("1Gb/s", Some(1.25e8))]
+    {
+        let out = h.run_point_with(Algorithm::Stark, n, b, |c| c.net_bandwidth = bw);
+        rows.push(AblationRow {
+            name: "network".into(),
+            variant: variant.into(),
+            wall_ms: out.job.wall_ms,
+            leaf_ms: out.leaf_ms,
+        });
+    }
+
+    // 4. Multiply isolation.
+    for isolate in [false, true] {
+        let out = h.run_point_with(Algorithm::Stark, n, b, |c| c.isolate_multiply = isolate);
+        rows.push(AblationRow {
+            name: "isolate_multiply".into(),
+            variant: if isolate { "materialized" } else { "pipelined" }.into(),
+            wall_ms: out.job.wall_ms,
+            leaf_ms: out.leaf_ms,
+        });
+    }
+
+    let ab = Ablations { rows, n, b };
+
+    println!("\n== Ablations (stark, n={n}, b={b}) ==");
+    let mut t = Table::new(vec!["ablation", "variant", "wall ms", "leaf ms"]);
+    for r in &ab.rows {
+        t.row(vec![
+            r.name.clone(),
+            r.variant.clone(),
+            format!("{:.1}", r.wall_ms),
+            format!("{:.1}", r.leaf_ms),
+        ]);
+    }
+    t.print();
+
+    let body = Value::Array(
+        ab.rows
+            .iter()
+            .map(|r| {
+                row(vec![
+                    ("name", Value::str(r.name.clone())),
+                    ("variant", Value::str(r.variant.clone())),
+                    ("wall_ms", Value::num(r.wall_ms)),
+                    ("leaf_ms", Value::num(r.leaf_ms)),
+                    ("n", Value::num(ab.n as f64)),
+                    ("b", Value::num(ab.b as f64)),
+                ])
+            })
+            .collect(),
+    );
+    Ok((ab, Report::new("ablations", body)))
+}

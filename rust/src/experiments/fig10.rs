@@ -1,0 +1,167 @@
+//! **Figure 10**: theoretical cost model (§IV) vs measured wall time.
+//!
+//! Method (the paper's §V-D): compute the per-(n, b) computation and
+//! communication terms from the analytic model, calibrate the two unit
+//! costs (α = time per computation unit, β = time per communicated
+//! element) against the measured sweep by least squares, then compare the
+//! predicted curve with the measured one. Claims to reproduce: both
+//! curves are U-shaped and their minima fall at the same or adjacent
+//! partition counts.
+
+use anyhow::Result;
+
+use crate::algos::Algorithm;
+use crate::cost::{self, CostBreakdown};
+use crate::experiments::fig9::Fig9;
+use crate::experiments::report::{row, Report};
+use crate::experiments::Harness;
+use crate::util::json::Value;
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct TheoryPoint {
+    pub algo: Algorithm,
+    pub n: usize,
+    pub b: usize,
+    pub measured_ms: f64,
+    pub predicted_ms: f64,
+}
+
+#[derive(Debug)]
+pub struct Fig10 {
+    pub points: Vec<TheoryPoint>,
+    /// Fitted (α, β) per system.
+    pub fits: Vec<(Algorithm, f64, f64)>,
+}
+
+fn model(algo: Algorithm, n: usize, b: usize, cores: usize) -> CostBreakdown {
+    match algo {
+        Algorithm::Mllib => cost::mllib_cost(n, b, cores),
+        Algorithm::Marlin => cost::marlin_cost(n, b, cores),
+        Algorithm::Stark => cost::stark_cost(n, b, cores),
+    }
+}
+
+impl Fig10 {
+    pub fn series(&self, algo: Algorithm, n: usize) -> Vec<&TheoryPoint> {
+        self.points.iter().filter(|p| p.algo == algo && p.n == n).collect()
+    }
+
+    /// b at the minimum of (measured, predicted) for a series.
+    pub fn minima(&self, algo: Algorithm, n: usize) -> Option<(usize, usize)> {
+        let s = self.series(algo, n);
+        if s.is_empty() {
+            return None;
+        }
+        let mb = s
+            .iter()
+            .min_by(|a, b| a.measured_ms.partial_cmp(&b.measured_ms).unwrap())?
+            .b;
+        let pb = s
+            .iter()
+            .min_by(|a, b| a.predicted_ms.partial_cmp(&b.predicted_ms).unwrap())?
+            .b;
+        Some((mb, pb))
+    }
+}
+
+/// Calibrate against a fig9 sweep and compare.
+pub fn run(h: &Harness, sweep: &Fig9) -> Result<(Fig10, Report)> {
+    let cores = h.scale.executors * h.scale.cores;
+    let mut fits = Vec::new();
+    let mut points = Vec::new();
+
+    for algo in Algorithm::ALL {
+        // Calibration set: all (n, b) sweep points of this system.
+        let mut cal = Vec::new();
+        for p in sweep.points.iter().filter(|p| p.algo == algo) {
+            let (comp, comm) = model(algo, p.n, p.b, cores).terms();
+            cal.push((comp, comm, p.wall_ms));
+        }
+        let (alpha, beta) = cost::fit_alpha_beta(&cal);
+        fits.push((algo, alpha, beta));
+        for p in sweep.points.iter().filter(|p| p.algo == algo) {
+            let predicted = model(algo, p.n, p.b, cores).wall(alpha, beta);
+            points.push(TheoryPoint {
+                algo,
+                n: p.n,
+                b: p.b,
+                measured_ms: p.wall_ms,
+                predicted_ms: predicted,
+            });
+        }
+    }
+    let fig = Fig10 { points, fits };
+
+    for &n in &h.scale.sizes {
+        println!("\n== Fig. 10: theory vs practice, n={n} (ms) ==");
+        let mut t = Table::new(vec![
+            "b", "mllib meas", "mllib pred", "marlin meas", "marlin pred", "stark meas",
+            "stark pred",
+        ]);
+        for &b in &h.scale.bs {
+            if n % b != 0 {
+                continue;
+            }
+            let mut cells = vec![b.to_string()];
+            for algo in Algorithm::ALL {
+                match fig.series(algo, n).iter().find(|p| p.b == b) {
+                    Some(p) => {
+                        cells.push(format!("{:.1}", p.measured_ms));
+                        cells.push(format!("{:.1}", p.predicted_ms));
+                    }
+                    None => {
+                        cells.push("-".into());
+                        cells.push("-".into());
+                    }
+                }
+            }
+            t.row(cells);
+        }
+        t.print();
+        for algo in Algorithm::ALL {
+            if let Some((mb, pb)) = fig.minima(algo, n) {
+                println!("{algo}: measured min at b={mb}, predicted min at b={pb}");
+            }
+        }
+    }
+    for (algo, a, b) in &fig.fits {
+        println!("{algo}: fitted α={a:.3e} ms/unit, β={b:.3e} ms/element");
+    }
+
+    let body = Value::obj(vec![
+        (
+            "fits",
+            Value::Array(
+                fig.fits
+                    .iter()
+                    .map(|(algo, a, b)| {
+                        row(vec![
+                            ("algo", Value::str(algo.to_string())),
+                            ("alpha", Value::num(*a)),
+                            ("beta", Value::num(*b)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "points",
+            Value::Array(
+                fig.points
+                    .iter()
+                    .map(|p| {
+                        row(vec![
+                            ("algo", Value::str(p.algo.to_string())),
+                            ("n", Value::num(p.n as f64)),
+                            ("b", Value::num(p.b as f64)),
+                            ("measured_ms", Value::num(p.measured_ms)),
+                            ("predicted_ms", Value::num(p.predicted_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    Ok((fig, Report::new("fig10", body)))
+}

@@ -1,0 +1,127 @@
+//! **Figure 11 + Tables VIII–X**: stage-wise wall-time breakdown of the
+//! three systems across partition counts.
+//!
+//! Stark's stages are merged into the paper's three groups (divide / leaf
+//! multiplication / combine); the baselines report their Stage 1/3/4.
+//! Claims to reproduce: (1) Stage 3 (leaf multiplication) dominates the
+//! baselines everywhere; (2) for Stark the dominant phase shifts from
+//! leaf multiplication at small `b` to divide communication at large `b`;
+//! (3) the multiplication-stage gap between Stark and the baselines grows
+//! with `b` (`b^2.807` vs `b³` leaves).
+
+use anyhow::Result;
+
+use crate::algos::Algorithm;
+use crate::experiments::report::{row, Report};
+use crate::experiments::Harness;
+use crate::util::json::Value;
+use crate::util::table::Table;
+
+/// Phase split of one run (ms).
+#[derive(Debug, Clone)]
+pub struct PhaseSplit {
+    pub algo: Algorithm,
+    pub n: usize,
+    pub b: usize,
+    /// (phase label, wall ms) in execution order.
+    pub phases: Vec<(String, f64)>,
+    pub leaf_ms: f64,
+}
+
+impl PhaseSplit {
+    pub fn phase(&self, needle: &str) -> f64 {
+        self.phases
+            .iter()
+            .filter(|(p, _)| p.contains(needle))
+            .map(|(_, ms)| ms)
+            .sum()
+    }
+
+    /// Dominant phase label.
+    pub fn dominant(&self) -> &str {
+        self.phases
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(p, _)| p.as_str())
+            .unwrap_or("")
+    }
+}
+
+#[derive(Debug)]
+pub struct Fig11 {
+    pub splits: Vec<PhaseSplit>,
+}
+
+impl Fig11 {
+    pub fn get(&self, algo: Algorithm, n: usize, b: usize) -> Option<&PhaseSplit> {
+        self.splits.iter().find(|s| s.algo == algo && s.n == n && s.b == b)
+    }
+}
+
+pub fn run(h: &Harness) -> Result<(Fig11, Report)> {
+    let mut splits = Vec::new();
+    for &n in &h.scale.sizes {
+        for algo in Algorithm::ALL {
+            for b in h.bs_for(algo, n) {
+                // isolate_multiply puts leaf products in their own stage —
+                // the paper's Table VII/VIII methodology.
+                let out = h.run_point_with(algo, n, b, |c| c.isolate_multiply = true);
+                splits.push(PhaseSplit {
+                    algo,
+                    n,
+                    b,
+                    phases: out.job.phase_wall_ms(),
+                    leaf_ms: out.leaf_ms,
+                });
+            }
+        }
+    }
+    let fig = Fig11 { splits };
+
+    for &n in &h.scale.sizes {
+        println!("\n== Fig. 11 / Tables VIII–X: stage-wise wall time (ms), n={n} ==");
+        let mut t = Table::new(vec!["system", "b", "divide/stage1", "multiply/stage3", "combine/stage4", "dominant"]);
+        for algo in Algorithm::ALL {
+            for b in h.bs_for(algo, n) {
+                if let Some(s) = fig.get(algo, n, b) {
+                    let (div, mul, comb) = match algo {
+                        Algorithm::Stark => {
+                            (s.phase("divide"), s.phase("multiply"), s.phase("combine"))
+                        }
+                        _ => (s.phase("stage1"), s.phase("stage3"), s.phase("stage4")),
+                    };
+                    t.row(vec![
+                        algo.to_string(),
+                        b.to_string(),
+                        format!("{div:.1}"),
+                        format!("{mul:.1}"),
+                        format!("{comb:.1}"),
+                        s.dominant().to_string(),
+                    ]);
+                }
+            }
+        }
+        t.print();
+    }
+
+    let body = Value::Array(
+        fig.splits
+            .iter()
+            .map(|s| {
+                row(vec![
+                    ("algo", Value::str(s.algo.to_string())),
+                    ("n", Value::num(s.n as f64)),
+                    ("b", Value::num(s.b as f64)),
+                    ("leaf_ms", Value::num(s.leaf_ms)),
+                    (
+                        "phases",
+                        Value::Object(
+                            s.phases.iter().map(|(p, ms)| (p.clone(), Value::num(*ms))).collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    Ok((fig, Report::new("fig11", body)))
+}

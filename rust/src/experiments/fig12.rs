@@ -1,0 +1,103 @@
+//! **Figure 12**: strong scalability — Stark's wall time vs executor
+//! count, against the ideal `T(1)/n` line.
+//!
+//! Claims to reproduce: near-ideal scaling, with the deviation growing as
+//! the matrix shrinks (fixed coordination costs stop amortizing).
+
+use anyhow::Result;
+
+use crate::algos::Algorithm;
+use crate::experiments::report::{row, Report};
+use crate::experiments::Harness;
+use crate::util::json::Value;
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub n: usize,
+    pub executors: usize,
+    pub wall_ms: f64,
+}
+
+#[derive(Debug)]
+pub struct Fig12 {
+    pub points: Vec<ScalePoint>,
+    pub executor_counts: Vec<usize>,
+}
+
+impl Fig12 {
+    pub fn series(&self, n: usize) -> Vec<&ScalePoint> {
+        self.points.iter().filter(|p| p.n == n).collect()
+    }
+
+    /// Parallel efficiency at the largest executor count:
+    /// `T(1) / (k · T(k))`.
+    pub fn efficiency(&self, n: usize) -> Option<f64> {
+        let s = self.series(n);
+        let first = *self.executor_counts.first()?;
+        let last = *self.executor_counts.last()?;
+        let t1 = s.iter().find(|p| p.executors == first)?;
+        let tk = s.iter().find(|p| p.executors == last)?;
+        let k = tk.executors as f64 / t1.executors as f64;
+        Some(t1.wall_ms / (k * tk.wall_ms))
+    }
+}
+
+pub fn run(h: &Harness, executor_counts: &[usize]) -> Result<(Fig12, Report)> {
+    let mut points = Vec::new();
+    // Fix b at a mid sweep value that's valid for Stark.
+    for &n in &h.scale.sizes {
+        let b = h
+            .bs_for(Algorithm::Stark, n)
+            .get(1)
+            .copied()
+            .unwrap_or_else(|| h.bs_for(Algorithm::Stark, n)[0]);
+        for &e in executor_counts {
+            let out = h.run_point_with(Algorithm::Stark, n, b, |c| {
+                c.executors = e;
+            });
+            points.push(ScalePoint { n, executors: e, wall_ms: out.job.wall_ms });
+        }
+    }
+    let fig = Fig12 { points, executor_counts: executor_counts.to_vec() };
+
+    println!("\n== Fig. 12: Stark scalability vs executors ==");
+    let mut header = vec!["executors".to_string()];
+    for &n in &h.scale.sizes {
+        header.push(format!("n={n} ms"));
+        header.push(format!("n={n} ideal"));
+    }
+    let mut t = Table::new(header);
+    for &e in executor_counts {
+        let mut cells = vec![e.to_string()];
+        for &n in &h.scale.sizes {
+            let s = fig.series(n);
+            let t1 = s.iter().find(|p| p.executors == executor_counts[0]).unwrap();
+            let p = s.iter().find(|p| p.executors == e).unwrap();
+            let ideal = t1.wall_ms * executor_counts[0] as f64 / e as f64;
+            cells.push(format!("{:.1}", p.wall_ms));
+            cells.push(format!("{ideal:.1}"));
+        }
+        t.row(cells);
+    }
+    t.print();
+    for &n in &h.scale.sizes {
+        if let Some(eff) = fig.efficiency(n) {
+            println!("n={n}: parallel efficiency at max executors = {:.0}%", eff * 100.0);
+        }
+    }
+
+    let body = Value::Array(
+        fig.points
+            .iter()
+            .map(|p| {
+                row(vec![
+                    ("n", Value::num(p.n as f64)),
+                    ("executors", Value::num(p.executors as f64)),
+                    ("wall_ms", Value::num(p.wall_ms)),
+                ])
+            })
+            .collect(),
+    );
+    Ok((fig, Report::new("fig12", body)))
+}

@@ -1,0 +1,111 @@
+//! **Figure 8**: fastest wall-clock time of the three systems vs matrix
+//! size (each system at its best partition count).
+//!
+//! Paper claims to reproduce (shape, not absolute numbers):
+//! 1. Stark < Marlin < MLLib at every size;
+//! 2. the gaps grow monotonically with the matrix dimension;
+//! 3. growth is super-quadratic (paper: ≈ O(n^2.9)).
+
+use anyhow::Result;
+
+use crate::algos::Algorithm;
+use crate::experiments::report::{row, Report};
+use crate::experiments::Harness;
+use crate::util::json::Value;
+use crate::util::table::Table;
+
+/// One (system, size) measurement: the best wall time over b.
+#[derive(Debug, Clone)]
+pub struct BestPoint {
+    pub algo: Algorithm,
+    pub n: usize,
+    pub best_b: usize,
+    pub wall_ms: f64,
+}
+
+#[derive(Debug)]
+pub struct Fig8 {
+    pub points: Vec<BestPoint>,
+}
+
+impl Fig8 {
+    pub fn best(&self, algo: Algorithm, n: usize) -> Option<&BestPoint> {
+        self.points.iter().find(|p| p.algo == algo && p.n == n)
+    }
+
+    /// Least-squares exponent of `wall ~ n^e` for one system.
+    pub fn growth_exponent(&self, algo: Algorithm) -> Option<f64> {
+        let pts: Vec<(f64, f64)> = self
+            .points
+            .iter()
+            .filter(|p| p.algo == algo)
+            .map(|p| ((p.n as f64).ln(), p.wall_ms.max(1e-9).ln()))
+            .collect();
+        if pts.len() < 2 {
+            return None;
+        }
+        let n = pts.len() as f64;
+        let sx: f64 = pts.iter().map(|p| p.0).sum();
+        let sy: f64 = pts.iter().map(|p| p.1).sum();
+        let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+        Some((n * sxy - sx * sy) / (n * sxx - sx * sx))
+    }
+}
+
+/// Run the experiment: for every size, every system, take the fastest
+/// wall time across that system's valid partition counts.
+pub fn run(h: &Harness) -> Result<(Fig8, Report)> {
+    let mut points = Vec::new();
+    for &n in &h.scale.sizes {
+        for algo in Algorithm::ALL {
+            let mut best: Option<BestPoint> = None;
+            for b in h.bs_for(algo, n) {
+                let out = h.run_point(algo, n, b);
+                let wall = out.job.wall_ms;
+                if best.as_ref().map_or(true, |p| wall < p.wall_ms) {
+                    best = Some(BestPoint { algo, n, best_b: b, wall_ms: wall });
+                }
+            }
+            points.push(best.expect("no valid b for size"));
+        }
+    }
+    let fig = Fig8 { points };
+
+    // Print the paper-style series.
+    let mut t = Table::new(vec!["n", "mllib ms (b*)", "marlin ms (b*)", "stark ms (b*)", "stark vs marlin", "stark vs mllib"]);
+    for &n in &h.scale.sizes {
+        let g = |a| fig.best(a, n).unwrap();
+        let (ml, ma, st) = (g(Algorithm::Mllib), g(Algorithm::Marlin), g(Algorithm::Stark));
+        t.row(vec![
+            n.to_string(),
+            format!("{:.1} (b={})", ml.wall_ms, ml.best_b),
+            format!("{:.1} (b={})", ma.wall_ms, ma.best_b),
+            format!("{:.1} (b={})", st.wall_ms, st.best_b),
+            format!("{:+.1}%", (1.0 - st.wall_ms / ma.wall_ms) * 100.0),
+            format!("{:+.1}%", (1.0 - st.wall_ms / ml.wall_ms) * 100.0),
+        ]);
+    }
+    println!("\n== Fig. 8: fastest running time vs matrix size ==");
+    t.print();
+    for algo in Algorithm::ALL {
+        if let Some(e) = fig.growth_exponent(algo) {
+            println!("{algo}: wall ≈ O(n^{e:.2})  (paper: ≈ O(n^2.9))");
+        }
+    }
+
+    let body = Value::Array(
+        fig.points
+            .iter()
+            .map(|p| {
+                row(vec![
+                    ("algo", Value::str(p.algo.to_string())),
+                    ("n", Value::num(p.n as f64)),
+                    ("best_b", Value::num(p.best_b as f64)),
+                    ("wall_ms", Value::num(p.wall_ms)),
+                ])
+            })
+            .collect(),
+    );
+    Ok((fig, Report::new("fig8", body)))
+}

@@ -1,0 +1,117 @@
+//! **Figure 9**: wall time vs partition count for each matrix size and
+//! system.
+//!
+//! Paper claims to reproduce: (1) every system traces a U-shaped curve in
+//! `b`; (2) Stark is fastest at (almost) all points; (3) Stark's curve
+//! overshoots past the optimum faster than MLLib's (divide-tree
+//! communication grows with `b`).
+
+use anyhow::Result;
+
+use crate::algos::Algorithm;
+use crate::experiments::report::{row, Report};
+use crate::experiments::Harness;
+use crate::util::json::Value;
+use crate::util::table::Table;
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub algo: Algorithm,
+    pub n: usize,
+    pub b: usize,
+    pub wall_ms: f64,
+    pub leaf_ms: f64,
+    pub leaf_calls: u64,
+    pub shuffle_bytes: u64,
+}
+
+#[derive(Debug)]
+pub struct Fig9 {
+    pub points: Vec<SweepPoint>,
+}
+
+impl Fig9 {
+    pub fn series(&self, algo: Algorithm, n: usize) -> Vec<&SweepPoint> {
+        self.points.iter().filter(|p| p.algo == algo && p.n == n).collect()
+    }
+
+    /// Is the series U-shaped (or at least non-monotone with an interior
+    /// minimum when it has ≥3 points)?
+    pub fn u_shaped(&self, algo: Algorithm, n: usize) -> bool {
+        let s = self.series(algo, n);
+        if s.len() < 3 {
+            return false;
+        }
+        let min_idx = s
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.wall_ms.partial_cmp(&b.1.wall_ms).unwrap())
+            .unwrap()
+            .0;
+        min_idx > 0 && min_idx < s.len() - 1
+    }
+}
+
+pub fn run(h: &Harness) -> Result<(Fig9, Report)> {
+    let mut points = Vec::new();
+    for &n in &h.scale.sizes {
+        for algo in Algorithm::ALL {
+            for b in h.bs_for(algo, n) {
+                let out = h.run_point(algo, n, b);
+                points.push(SweepPoint {
+                    algo,
+                    n,
+                    b,
+                    wall_ms: out.job.wall_ms,
+                    leaf_ms: out.leaf_ms,
+                    leaf_calls: out.leaf_calls,
+                    shuffle_bytes: out.job.total_shuffle_bytes(),
+                });
+            }
+        }
+    }
+    let fig = Fig9 { points };
+
+    for &n in &h.scale.sizes {
+        println!("\n== Fig. 9: wall time (ms) vs partition count, n={n} ==");
+        let mut header = vec!["b".to_string()];
+        header.extend(Algorithm::ALL.iter().map(|a| a.to_string()));
+        let mut t = Table::new(header);
+        for &b in &h.scale.bs {
+            if n % b != 0 {
+                continue;
+            }
+            let mut cells = vec![b.to_string()];
+            for algo in Algorithm::ALL {
+                let cell = fig
+                    .series(algo, n)
+                    .iter()
+                    .find(|p| p.b == b)
+                    .map(|p| format!("{:.1}", p.wall_ms))
+                    .unwrap_or_else(|| "-".to_string());
+                cells.push(cell);
+            }
+            t.row(cells);
+        }
+        t.print();
+    }
+
+    let body = Value::Array(
+        fig.points
+            .iter()
+            .map(|p| {
+                row(vec![
+                    ("algo", Value::str(p.algo.to_string())),
+                    ("n", Value::num(p.n as f64)),
+                    ("b", Value::num(p.b as f64)),
+                    ("wall_ms", Value::num(p.wall_ms)),
+                    ("leaf_ms", Value::num(p.leaf_ms)),
+                    ("leaf_calls", Value::num(p.leaf_calls as f64)),
+                    ("shuffle_bytes", Value::num(p.shuffle_bytes as f64)),
+                ])
+            })
+            .collect(),
+    );
+    Ok((fig, Report::new("fig9", body)))
+}

@@ -1,0 +1,55 @@
+//! Experiment report plumbing: every harness returns a JSON document that
+//! `stark-bench` writes under the output directory, next to the printed
+//! tables — the raw data behind EXPERIMENTS.md.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Value;
+
+/// A named experiment report.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Experiment id (`fig8`, `table7`, …).
+    pub name: String,
+    /// Structured results.
+    pub body: Value,
+}
+
+impl Report {
+    pub fn new(name: &str, body: Value) -> Self {
+        Self { name: name.to_string(), body }
+    }
+
+    /// Write `<dir>/<name>.json` (creating `dir`).
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<std::path::PathBuf> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating report dir {}", dir.display()))?;
+        let path = dir.join(format!("{}.json", self.name));
+        std::fs::write(&path, self.body.to_json_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// Row helper: build a JSON object from (key, value) pairs.
+pub fn row(pairs: Vec<(&str, Value)>) -> Value {
+    Value::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn saves_report() {
+        let dir = TempDir::new("stark-report").unwrap();
+        let r = Report::new("fig0", Value::obj(vec![("x", Value::num(1.0))]));
+        let path = r.save(dir.path()).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"x\""));
+    }
+}

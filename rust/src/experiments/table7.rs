@@ -1,0 +1,119 @@
+//! **Table VII**: leaf-node block-multiplication cost (the dominant
+//! term), Marlin vs Stark, across partition counts.
+//!
+//! The paper measures this by caching leaf operands and timing only the
+//! multiplication transformations; we use the same isolation (the
+//! [`TimingBackend`](crate::algos::TimingBackend) accumulates exactly the
+//! in-backend multiply time) and also report the theoretical counts.
+//! Claims to reproduce: (1) Stark's leaf cost < Marlin's at every `b ≥ 2`
+//! (7^log2(b) < b³ leaves); (2) the ratio grows with `b`; (3) each row's
+//! minimum sits at an interior `b` and Stark's minimum is at a `b` ≥
+//! Marlin's (its per-leaf blocks shrink slower).
+
+use anyhow::Result;
+
+use crate::algos::Algorithm;
+use crate::experiments::report::{row, Report};
+use crate::experiments::Harness;
+use crate::util::json::Value;
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct LeafPoint {
+    pub algo: Algorithm,
+    pub n: usize,
+    pub b: usize,
+    /// Measured in-backend multiply time, summed over tasks (ms).
+    pub leaf_ms: f64,
+    /// Leaf time divided by the available parallelism (the paper divides
+    /// by the parallelization factor).
+    pub leaf_ms_over_pf: f64,
+    pub leaf_calls: u64,
+}
+
+#[derive(Debug)]
+pub struct Table7 {
+    pub points: Vec<LeafPoint>,
+}
+
+impl Table7 {
+    pub fn get(&self, algo: Algorithm, n: usize, b: usize) -> Option<&LeafPoint> {
+        self.points.iter().find(|p| p.algo == algo && p.n == n && p.b == b)
+    }
+
+    /// b of the minimal `leaf_ms_over_pf` for a series.
+    pub fn min_b(&self, algo: Algorithm, n: usize) -> Option<usize> {
+        self.points
+            .iter()
+            .filter(|p| p.algo == algo && p.n == n)
+            .min_by(|a, b| a.leaf_ms_over_pf.partial_cmp(&b.leaf_ms_over_pf).unwrap())
+            .map(|p| p.b)
+    }
+}
+
+pub fn run(h: &Harness) -> Result<(Table7, Report)> {
+    let cores = (h.scale.executors * h.scale.cores) as f64;
+    let mut points = Vec::new();
+    for &n in &h.scale.sizes {
+        for algo in [Algorithm::Marlin, Algorithm::Stark] {
+            for b in h.bs_for(algo, n) {
+                let out = h.run_point_with(algo, n, b, |c| c.isolate_multiply = true);
+                let pf = (out.leaf_calls as f64).min(cores).max(1.0);
+                points.push(LeafPoint {
+                    algo,
+                    n,
+                    b,
+                    leaf_ms: out.leaf_ms,
+                    leaf_ms_over_pf: out.leaf_ms / pf,
+                    leaf_calls: out.leaf_calls,
+                });
+            }
+        }
+    }
+    let table = Table7 { points };
+
+    for &n in &h.scale.sizes {
+        println!("\n== Table VII: leaf multiplication cost (ms / PF), n={n} ==");
+        let mut header = vec!["method".to_string()];
+        for &b in &h.scale.bs {
+            header.push(format!("b={b}"));
+        }
+        let mut t = Table::new(header);
+        for algo in [Algorithm::Marlin, Algorithm::Stark] {
+            let mut cells = vec![algo.to_string()];
+            for &b in &h.scale.bs {
+                cells.push(
+                    table
+                        .get(algo, n, b)
+                        .map(|p| format!("{:.1}", p.leaf_ms_over_pf))
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+            t.row(cells);
+        }
+        t.print();
+        for algo in [Algorithm::Marlin, Algorithm::Stark] {
+            if let Some(b) = table.min_b(algo, n) {
+                println!("{algo}: minimum at b={b}");
+            }
+        }
+    }
+
+    let body = Value::Array(
+        table
+            .points
+            .iter()
+            .map(|p| {
+                row(vec![
+                    ("algo", Value::str(p.algo.to_string())),
+                    ("n", Value::num(p.n as f64)),
+                    ("b", Value::num(p.b as f64)),
+                    ("leaf_ms", Value::num(p.leaf_ms)),
+                    ("leaf_ms_over_pf", Value::num(p.leaf_ms_over_pf)),
+                    ("leaf_calls", Value::num(p.leaf_calls as f64)),
+                ])
+            })
+            .collect(),
+    );
+    Ok((table, Report::new("table7", body)))
+}

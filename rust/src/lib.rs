@@ -1,0 +1,31 @@
+//! # Stark — distributed Strassen matrix multiplication
+//!
+//! A Rust + JAX + Pallas reproduction of *"Stark: Fast and Scalable
+//! Strassen's Matrix Multiplication using Apache Spark"* (Misra,
+//! Bhattacharya & Ghosh, 2018).
+//!
+//! The crate is organized by the paper's own decomposition:
+//!
+//! - [`engine`] — `sparklet`, the Spark-like distributed substrate the
+//!   algorithms run on (RDDs, stages, shuffle, executor pool, metrics).
+//! - [`matrix`] — dense matrices, block partitioning, single-node kernels.
+//! - [`algos`] — the paper's contribution ([`algos::stark`]) plus the
+//!   Marlin and MLLib baselines it evaluates against.
+//! - [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas leaf
+//!   kernels (`artifacts/*.hlo.txt`), plus the native fallback backend.
+//! - [`cost`] — the paper's §IV analytic cost model (Tables I–III).
+//! - [`config`] — experiment/run configuration shared by the CLI,
+//!   examples and benches.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! the reproduction of every table and figure.
+
+pub mod algos;
+pub mod config;
+pub mod cost;
+pub mod engine;
+pub mod experiments;
+pub mod matrix;
+pub mod runtime;
+pub mod serve;
+pub mod util;

@@ -1,0 +1,355 @@
+//! `stark` — CLI launcher for the distributed multiplication system.
+//!
+//! Subcommands mirror the paper's experiments:
+//!
+//! - `multiply`    — one distributed multiply, with optional verification.
+//! - `compare`     — Stark vs Marlin vs MLLib on one workload (Fig. 8 row).
+//! - `sweep`       — partition-size sweep for one matrix size (Fig. 9).
+//! - `stages`      — per-stage breakdown of one run (Tables VIII–X).
+//! - `scalability` — executor sweep (Fig. 12).
+//! - `info`        — environment and artifact inventory.
+//!
+//! Common flags: `--n`, `--b`, `--executors`, `--cores`, `--backend
+//! native|xla|xla-pallas`, `--net-mbps`, `--seed`, `--fused-leaf`,
+//! `--isolate-multiply`, `--algo stark|marlin|mllib`.
+
+use anyhow::Result;
+
+use stark::algos::{self, Algorithm};
+use stark::config::{BackendKind, RunConfig};
+use stark::matrix::{matmul_parallel, DenseMatrix};
+use stark::util::cli::Args;
+use stark::util::table::{fmt_bytes, Table};
+
+const USAGE: &str = "\
+stark — distributed Strassen matrix multiplication (Stark reproduction)
+
+USAGE: stark <multiply|compare|sweep|stages|scalability|cost|serve|request|info> [flags]
+
+  multiply with files:  --input-a a.csv --input-b b.csv [--output c.smx]
+                        (.smx = binary, anything else = text CSV)
+  cost:                 print the §IV analytic cost tables for --n/--b
+  serve:                --addr 127.0.0.1:7878  (newline-JSON protocol)
+  request:              --addr HOST:PORT --n 256 [--algo stark] [--b 4]
+
+FLAGS (shared):
+  --n <int>            matrix dimension            [512]
+  --b <int>            splits per side             [4]
+  --executors <int>    simulated executors         [2]
+  --cores <int>        cores per executor          [2]
+  --backend <kind>     native | xla | xla-pallas   [xla]
+  --net-mbps <float>   simulated net bandwidth     [off]
+  --seed <int>         input matrix seed           [42]
+  --algo <name>        stark | marlin | mllib      [stark]
+  --fused-leaf         fuse last recursion level into one XLA call
+  --isolate-multiply   leaf multiplication in its own stage
+  --verify             (multiply) check against single-node product
+  --bs <list>          (sweep) partition counts    [2,4,8,16]
+  --executor-counts <list>  (scalability)          [1,2,3,4,5]
+";
+
+fn run_config(args: &Args) -> RunConfig {
+    let net_mbps: f64 = args.get("net-mbps", 0.0);
+    RunConfig {
+        n: args.get("n", 512),
+        b: args.get("b", 4),
+        algo: args.get("algo", Algorithm::Stark),
+        backend: args.get("backend", BackendKind::Xla),
+        executors: args.get("executors", 2),
+        cores_per_executor: args.get("cores", 2),
+        net_bandwidth: (net_mbps > 0.0).then_some(net_mbps * 1e6),
+        seed: args.get("seed", 42),
+        fused_leaf: args.flag("fused-leaf"),
+        isolate_multiply: args.flag("isolate-multiply"),
+        failure: None,
+    }
+}
+
+fn gen_inputs(cfg: &RunConfig) -> (DenseMatrix, DenseMatrix) {
+    (
+        DenseMatrix::random(cfg.n, cfg.n, cfg.seed),
+        DenseMatrix::random(cfg.n, cfg.n, cfg.seed.wrapping_add(1)),
+    )
+}
+
+fn run_once(cfg: &RunConfig) -> Result<algos::MultiplyOutput> {
+    let (a, b) = gen_inputs(cfg);
+    let ctx = cfg.context();
+    let backend = cfg.backend()?;
+    Ok(algos::common::run(cfg.algo, &ctx, backend, &a, &b, cfg.b, &cfg.stark_config()))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("multiply") => cmd_multiply(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("stages") => cmd_stages(&args),
+        Some("scalability") => cmd_scalability(&args),
+        Some("cost") => cmd_cost(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("request") => cmd_request(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_multiply(args: &Args) -> Result<()> {
+    let cfg = run_config(args);
+    // File-backed inputs take precedence over generated ones; general
+    // (rectangular / non-power-of-two) shapes go through pad-and-crop.
+    if let (Some(pa), Some(pb)) = (args.raw("input-a"), args.raw("input-b")) {
+        let a = stark::matrix::io::load(pa)?;
+        let b = stark::matrix::io::load(pb)?;
+        let ctx = cfg.context();
+        let backend = cfg.backend()?;
+        let out = stark::algos::multiply_general(
+            cfg.algo,
+            &ctx,
+            backend,
+            &a,
+            &b,
+            cfg.b,
+            &cfg.stark_config(),
+        );
+        println!(
+            "{} ({}x{})@({}x{}) b={}: wall={:.1} ms, {} leaf products",
+            cfg.algo,
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols(),
+            cfg.b,
+            out.job.wall_ms,
+            out.leaf_calls
+        );
+        if let Some(po) = args.raw("output") {
+            stark::matrix::io::save(&out.c, po)?;
+            println!("wrote {po}");
+        }
+        return Ok(());
+    }
+    let out = run_once(&cfg)?;
+    println!(
+        "{} n={} b={} backend={}: wall={:.1} ms, leaf={:.1} ms over {} multiplications, shuffle={}",
+        cfg.algo,
+        cfg.n,
+        cfg.b,
+        cfg.backend,
+        out.job.wall_ms,
+        out.leaf_ms,
+        out.leaf_calls,
+        fmt_bytes(out.job.total_shuffle_bytes()),
+    );
+    if args.flag("verify") {
+        let (a, b) = gen_inputs(&cfg);
+        let want = matmul_parallel(&a, &b, cfg.executors * cfg.cores_per_executor);
+        let diff = want.max_abs_diff(&out.c);
+        println!("verify: max |Δ| = {diff:.3e}");
+        anyhow::ensure!(diff < 1e-8 * cfg.n as f64, "verification FAILED");
+        println!("verify: OK");
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let mut t = Table::new(vec!["system", "wall ms", "leaf ms", "leaves", "shuffle"]);
+    let mut walls = Vec::new();
+    for algo in Algorithm::ALL {
+        let mut cfg = run_config(args);
+        cfg.algo = algo;
+        let out = run_once(&cfg)?;
+        t.row(vec![
+            algo.to_string(),
+            format!("{:.1}", out.job.wall_ms),
+            format!("{:.1}", out.leaf_ms),
+            out.leaf_calls.to_string(),
+            fmt_bytes(out.job.total_shuffle_bytes()),
+        ]);
+        walls.push((algo, out.job.wall_ms));
+    }
+    t.print();
+    let stark = walls.iter().find(|(a, _)| *a == Algorithm::Stark).unwrap().1;
+    for (algo, w) in &walls {
+        if *algo != Algorithm::Stark {
+            println!("stark vs {algo}: {:.1}% less wall time", (1.0 - stark / w) * 100.0);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let bs = args.get_list("bs", &[2usize, 4, 8, 16]);
+    let mut t = Table::new(vec!["b", "wall ms", "leaf ms", "leaves", "shuffle"]);
+    for b in bs {
+        let mut cfg = run_config(args);
+        cfg.b = b;
+        let out = run_once(&cfg)?;
+        t.row(vec![
+            b.to_string(),
+            format!("{:.1}", out.job.wall_ms),
+            format!("{:.1}", out.leaf_ms),
+            out.leaf_calls.to_string(),
+            fmt_bytes(out.job.total_shuffle_bytes()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_stages(args: &Args) -> Result<()> {
+    let mut cfg = run_config(args);
+    cfg.isolate_multiply = true;
+    let out = run_once(&cfg)?;
+    let mut t =
+        Table::new(vec!["stage", "tasks", "wall ms", "comp ms", "shuffle", "pf", "retries"]);
+    for s in &out.job.stages {
+        t.row(vec![
+            s.label.clone(),
+            s.tasks.to_string(),
+            format!("{:.2}", s.wall_ms),
+            format!("{:.2}", s.comp_ms),
+            fmt_bytes(s.shuffle_bytes),
+            s.pf.to_string(),
+            s.retries.to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nphase totals:");
+    for (phase, ms) in out.job.phase_wall_ms() {
+        println!("  {phase:<12} {ms:>10.2} ms");
+    }
+    Ok(())
+}
+
+fn cmd_scalability(args: &Args) -> Result<()> {
+    let counts = args.get_list("executor-counts", &[1usize, 2, 3, 4, 5]);
+    let mut t = Table::new(vec!["executors", "wall ms", "speedup", "ideal"]);
+    let mut t1 = None;
+    for (i, e) in counts.iter().enumerate() {
+        let mut cfg = run_config(args);
+        cfg.executors = *e;
+        let out = run_once(&cfg)?;
+        let w = out.job.wall_ms;
+        let t1v = *t1.get_or_insert(w);
+        t.row(vec![
+            e.to_string(),
+            format!("{w:.1}"),
+            format!("{:.2}", t1v / w),
+            format!("{:.2}", counts[i] as f64 / counts[0] as f64),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_cost(args: &Args) -> Result<()> {
+    let n: usize = args.get("n", 4096);
+    let b: usize = args.get("b", 8);
+    let cores: usize = args.get("executors", 5) * args.get("cores", 5);
+    println!("§IV analytic cost model at n={n}, b={b}, cores={cores} (unit counts)\n");
+    for cb in [
+        stark::cost::mllib_cost(n, b, cores),
+        stark::cost::marlin_cost(n, b, cores),
+        stark::cost::stark_cost(n, b, cores),
+    ] {
+        println!("-- {} --", cb.system);
+        let mut t = Table::new(vec!["stage", "computation", "communication", "PF"]);
+        for s in &cb.stages {
+            t.row(vec![
+                s.label.clone(),
+                format!("{:.3e}", s.comp),
+                format!("{:.3e}", s.comm),
+                format!("{:.0}", s.pf),
+            ]);
+        }
+        t.print();
+        let (comp, comm) = cb.terms();
+        println!("totals: Σcomp/pf = {comp:.3e}, Σcomm/pf = {comm:.3e}\n");
+    }
+    println!("stark stage count (eq. 25): {}", stark::cost::stark_stage_count(b));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.raw("addr").unwrap_or("127.0.0.1:7878").to_string();
+    let cfg = run_config(args);
+    let state = stark::serve::ServerState {
+        ctx: cfg.context(),
+        backend: cfg.backend()?,
+        default_b: cfg.b,
+    };
+    let server = stark::serve::Server::start(&addr, state)?;
+    println!(
+        "stark serving on {} (cluster {}x{}, backend {}); send {{\"op\":\"shutdown\"}} to stop",
+        server.addr(),
+        cfg.executors,
+        cfg.cores_per_executor,
+        cfg.backend
+    );
+    // Block until a shutdown request lands (poll the accept thread).
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        let probe = stark::serve::request(
+            &server.addr().to_string(),
+            &stark::util::json::Value::obj(vec![("op", stark::util::json::Value::str("ping"))]),
+        );
+        if probe.is_err() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_request(args: &Args) -> Result<()> {
+    use stark::util::json::Value;
+    let addr = args.raw("addr").unwrap_or("127.0.0.1:7878").to_string();
+    let op = args.raw("op").unwrap_or("multiply").to_string();
+    let body = if op == "multiply" {
+        Value::obj(vec![
+            ("op", Value::str("multiply")),
+            ("algo", Value::str(args.raw("algo").unwrap_or("stark"))),
+            ("n", Value::num(args.get("n", 256usize) as f64)),
+            ("b", Value::num(args.get("b", 4usize) as f64)),
+            ("seed", Value::num(args.get("seed", 42u64) as f64)),
+        ])
+    } else {
+        Value::obj(vec![("op", Value::str(op))])
+    };
+    let resp = stark::serve::request(&addr, &body)?;
+    println!("{}", resp.to_json_pretty());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!(
+        "stark {} — Rust reproduction of \"Stark: Fast and Scalable Strassen's \
+         Matrix Multiplication using Apache Spark\" (Misra et al., 2018)",
+        env!("CARGO_PKG_VERSION")
+    );
+    match stark::runtime::find_artifacts_dir() {
+        Some(dir) => {
+            let lib = stark::runtime::ArtifactLibrary::load(&dir)?;
+            let m = lib.manifest();
+            println!(
+                "artifacts: {} ({} entries, jax {})",
+                dir.display(),
+                m.artifacts.len(),
+                m.jax_version
+            );
+            println!("matmul/dot f64 blocks:    {:?}", lib.blocks_for("matmul", "dot", "f64"));
+            println!("matmul/pallas f64 blocks: {:?}", lib.blocks_for("matmul", "pallas", "f64"));
+            println!("fused-leaf f64 blocks:    {:?}", lib.blocks_for("strassen_leaf", "dot", "f64"));
+        }
+        None => println!("artifacts: NOT FOUND — run `make artifacts`"),
+    }
+    println!(
+        "host parallelism: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
+    );
+    Ok(())
+}

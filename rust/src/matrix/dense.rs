@@ -1,0 +1,329 @@
+//! Row-major dense matrix container and block partitioning.
+//!
+//! [`DenseMatrix`] is both the whole-matrix type used at the driver edge
+//! (generation, verification, assembly) and the per-block payload carried
+//! inside [`crate::engine::block::Block`]. Block partitioning follows the
+//! paper's §III-B: a square matrix of dimension `n` split into `b × b`
+//! square blocks of size `n/b`.
+
+use crate::matrix::gen::Rng64;
+
+/// Row-major dense `f64` matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a generator function over `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Take ownership of a row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Seeded uniform `[-1, 1)` matrix — the experiment workload generator
+    /// (paper §V-A generates with `java.util.Random`).
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Rng64::new(seed);
+        Self::from_fn(rows, cols, |_, _| rng.next_signed())
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row-major element access.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Underlying row-major buffer.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the row-major buffer.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Logical payload size in bytes (the unit of shuffle accounting).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Element-wise sum.
+    pub fn add(&self, other: &Self) -> Self {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Self { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Element-wise difference.
+    pub fn sub(&self, other: &Self) -> Self {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Self { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place `self += sign * other` — the combine-phase accumulator.
+    pub fn add_assign_signed(&mut self, other: &Self, sign: f64) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += sign * b;
+        }
+    }
+
+    /// Scale every element by `s`.
+    pub fn scale(&self, s: f64) -> Self {
+        let data = self.data.iter().map(|a| a * s).collect();
+        Self { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Self {
+        let mut out = Self::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Copy out the `(block_rows, block_cols)` sub-matrix with top-left
+    /// corner at `(r0, c0)`.
+    pub fn submatrix(&self, r0: usize, c0: usize, block_rows: usize, block_cols: usize) -> Self {
+        assert!(r0 + block_rows <= self.rows && c0 + block_cols <= self.cols);
+        let mut data = Vec::with_capacity(block_rows * block_cols);
+        for r in 0..block_rows {
+            let start = (r0 + r) * self.cols + c0;
+            data.extend_from_slice(&self.data[start..start + block_cols]);
+        }
+        Self { rows: block_rows, cols: block_cols, data }
+    }
+
+    /// Write `block` into this matrix with top-left corner at `(r0, c0)`.
+    pub fn set_submatrix(&mut self, r0: usize, c0: usize, block: &Self) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for r in 0..block.rows {
+            let dst = (r0 + r) * self.cols + c0;
+            let src = r * block.cols;
+            self.data[dst..dst + block.cols]
+                .copy_from_slice(&block.data[src..src + block.cols]);
+        }
+    }
+
+    /// Split a square matrix into a `b × b` grid of square blocks
+    /// (paper Fig. 1). Returns blocks in row-major grid order together
+    /// with their grid coordinates.
+    pub fn split_blocks(&self, b: usize) -> Vec<(usize, usize, Self)> {
+        assert_eq!(self.rows, self.cols, "block split expects a square matrix");
+        assert!(b >= 1 && self.rows % b == 0, "b={b} must divide n={}", self.rows);
+        let s = self.rows / b;
+        let mut out = Vec::with_capacity(b * b);
+        for br in 0..b {
+            for bc in 0..b {
+                out.push((br, bc, self.submatrix(br * s, bc * s, s, s)));
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`split_blocks`]: assemble a `b × b` grid of `s × s`
+    /// blocks into the full matrix. Panics when a grid slot is missing.
+    pub fn assemble_blocks(b: usize, s: usize, blocks: &[(usize, usize, Self)]) -> Self {
+        assert_eq!(blocks.len(), b * b, "expected {} blocks, got {}", b * b, blocks.len());
+        let mut out = Self::zeros(b * s, b * s);
+        let mut seen = vec![false; b * b];
+        for (br, bc, blk) in blocks {
+            assert!(*br < b && *bc < b, "block ({br},{bc}) out of grid {b}x{b}");
+            assert_eq!((blk.rows, blk.cols), (s, s), "block shape mismatch");
+            assert!(!seen[br * b + bc], "duplicate block ({br},{bc})");
+            seen[br * b + bc] = true;
+            out.set_submatrix(br * s, bc * s, blk);
+        }
+        out
+    }
+
+    /// Largest absolute element difference — the verification metric.
+    pub fn max_abs_diff(&self, other: &Self) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Approximate equality with absolute tolerance.
+    pub fn allclose(&self, other: &Self, atol: f64) -> bool {
+        self.max_abs_diff(other) <= atol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_identity() {
+        let z = DenseMatrix::zeros(3, 4);
+        assert_eq!(z.rows(), 3);
+        assert_eq!(z.cols(), 4);
+        assert!(z.as_slice().iter().all(|&x| x == 0.0));
+        let i = DenseMatrix::identity(3);
+        assert_eq!(i.get(0, 0), 1.0);
+        assert_eq!(i.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn from_fn_layout() {
+        let m = DenseMatrix::from_fn(2, 3, |r, c| (r * 10 + c) as f64);
+        assert_eq!(m.get(1, 2), 12.0);
+        assert_eq!(m.as_slice(), &[0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn random_is_seeded() {
+        let a = DenseMatrix::random(4, 4, 99);
+        let b = DenseMatrix::random(4, 4, 99);
+        let c = DenseMatrix::random(4, 4, 100);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.as_slice().iter().all(|&x| (-1.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn add_sub_scale() {
+        let a = DenseMatrix::from_fn(2, 2, |r, c| (r + c) as f64);
+        let b = DenseMatrix::identity(2);
+        assert_eq!(a.add(&b).get(0, 0), 1.0);
+        assert_eq!(a.sub(&b).get(0, 0), -1.0);
+        assert_eq!(a.scale(2.0).get(1, 1), 4.0);
+    }
+
+    #[test]
+    fn add_assign_signed_accumulates() {
+        let mut acc = DenseMatrix::zeros(2, 2);
+        let one = DenseMatrix::identity(2);
+        acc.add_assign_signed(&one, 1.0);
+        acc.add_assign_signed(&one, -3.0);
+        assert_eq!(acc.get(0, 0), -2.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = DenseMatrix::random(3, 5, 1);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().get(4, 2), m.get(2, 4));
+    }
+
+    #[test]
+    fn submatrix_and_set() {
+        let m = DenseMatrix::from_fn(4, 4, |r, c| (r * 4 + c) as f64);
+        let s = m.submatrix(2, 2, 2, 2);
+        assert_eq!(s.as_slice(), &[10.0, 11.0, 14.0, 15.0]);
+        let mut z = DenseMatrix::zeros(4, 4);
+        z.set_submatrix(2, 2, &s);
+        assert_eq!(z.get(3, 3), 15.0);
+        assert_eq!(z.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn split_assemble_roundtrip() {
+        for b in [1, 2, 4] {
+            let m = DenseMatrix::random(8, 8, 3);
+            let blocks = m.split_blocks(b);
+            assert_eq!(blocks.len(), b * b);
+            let back = DenseMatrix::assemble_blocks(b, 8 / b, &blocks);
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn split_requires_divisibility() {
+        DenseMatrix::zeros(6, 6).split_blocks(4);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate block")]
+    fn assemble_rejects_duplicates() {
+        let blk = DenseMatrix::zeros(2, 2);
+        DenseMatrix::assemble_blocks(
+            2,
+            2,
+            &[
+                (0, 0, blk.clone()),
+                (0, 0, blk.clone()),
+                (1, 0, blk.clone()),
+                (1, 1, blk),
+            ],
+        );
+    }
+
+    #[test]
+    fn norms_and_allclose() {
+        let a = DenseMatrix::identity(2);
+        assert!((a.frobenius() - 2.0_f64.sqrt()).abs() < 1e-12);
+        let mut b = a.clone();
+        b.set(0, 0, 1.0 + 1e-9);
+        assert!(a.allclose(&b, 1e-8));
+        assert!(!a.allclose(&b, 1e-10));
+        assert!((a.max_abs_diff(&b) - 1e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn size_bytes() {
+        assert_eq!(DenseMatrix::zeros(4, 8).size_bytes(), 4 * 8 * 8);
+    }
+}

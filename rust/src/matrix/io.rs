@@ -1,0 +1,201 @@
+//! Matrix persistence: the workflow edge of the system.
+//!
+//! The paper's matrices live on HDFS and are produced/consumed by other
+//! Spark jobs; here the equivalents are simple portable formats so the
+//! CLI and the serve mode can exchange matrices with other tools:
+//!
+//! - **text** (`.csv`): one row per line, comma-separated decimal; lines
+//!   starting with `#` are comments. Human-readable, lossy-free via
+//!   `{:?}` round-trip formatting.
+//! - **binary** (`.smx`): `STRK1` magic, u64 LE rows/cols, then
+//!   row-major f64 LE payload. Fast and exact.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::matrix::DenseMatrix;
+
+const MAGIC: &[u8; 5] = b"STRK1";
+
+/// Write the text format.
+pub fn save_text(m: &DenseMatrix, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# stark matrix {}x{}", m.rows(), m.cols())?;
+    for r in 0..m.rows() {
+        let row: Vec<String> = (0..m.cols()).map(|c| format!("{:?}", m.get(r, c))).collect();
+        writeln!(w, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read the text format.
+pub fn load_text(path: impl AsRef<Path>) -> Result<DenseMatrix> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let row: Vec<f64> = line
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("line {}: bad number {t:?}", lineno + 1))
+            })
+            .collect::<Result<_>>()?;
+        if let Some(first) = rows.first() {
+            if first.len() != row.len() {
+                bail!("line {}: ragged row ({} vs {})", lineno + 1, row.len(), first.len());
+            }
+        }
+        rows.push(row);
+    }
+    if rows.is_empty() {
+        bail!("no data rows in matrix file");
+    }
+    let (r, c) = (rows.len(), rows[0].len());
+    Ok(DenseMatrix::from_vec(r, c, rows.into_iter().flatten().collect()))
+}
+
+/// Write the binary format.
+pub fn save_binary(m: &DenseMatrix, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(m.rows() as u64).to_le_bytes())?;
+    w.write_all(&(m.cols() as u64).to_le_bytes())?;
+    for v in m.as_slice() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the binary format.
+pub fn load_binary(path: impl AsRef<Path>) -> Result<DenseMatrix> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 5];
+    r.read_exact(&mut magic).context("reading magic")?;
+    if &magic != MAGIC {
+        bail!("not a stark binary matrix (bad magic)");
+    }
+    let mut u = [0u8; 8];
+    r.read_exact(&mut u)?;
+    let rows = u64::from_le_bytes(u) as usize;
+    r.read_exact(&mut u)?;
+    let cols = u64::from_le_bytes(u) as usize;
+    let count = rows
+        .checked_mul(cols)
+        .filter(|&c| c <= (1usize << 34))
+        .context("matrix dims implausible")?;
+    let mut data = Vec::with_capacity(count);
+    let mut buf = [0u8; 8];
+    for _ in 0..count {
+        r.read_exact(&mut buf).context("truncated payload")?;
+        data.push(f64::from_le_bytes(buf));
+    }
+    Ok(DenseMatrix::from_vec(rows, cols, data))
+}
+
+/// Dispatch on extension: `.smx` → binary, anything else → text.
+pub fn save(m: &DenseMatrix, path: impl AsRef<Path>) -> Result<()> {
+    if path.as_ref().extension().is_some_and(|e| e == "smx") {
+        save_binary(m, path)
+    } else {
+        save_text(m, path)
+    }
+}
+
+/// Dispatch on extension: `.smx` → binary, anything else → text.
+pub fn load(path: impl AsRef<Path>) -> Result<DenseMatrix> {
+    if path.as_ref().extension().is_some_and(|e| e == "smx") {
+        load_binary(path)
+    } else {
+        load_text(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn text_roundtrip_exact() {
+        let dir = TempDir::new("stark-io").unwrap();
+        let m = DenseMatrix::random(7, 5, 42);
+        let p = dir.file("m.csv");
+        save_text(&m, &p).unwrap();
+        let back = load_text(&p).unwrap();
+        assert_eq!(m, back, "text round-trip must be exact ({{:?}} formatting)");
+    }
+
+    #[test]
+    fn binary_roundtrip_exact() {
+        let dir = TempDir::new("stark-io").unwrap();
+        let m = DenseMatrix::random(16, 16, 43);
+        let p = dir.file("m.smx");
+        save_binary(&m, &p).unwrap();
+        assert_eq!(m, load_binary(&p).unwrap());
+    }
+
+    #[test]
+    fn dispatch_by_extension() {
+        let dir = TempDir::new("stark-io").unwrap();
+        let m = DenseMatrix::random(3, 3, 44);
+        let pb = dir.file("m.smx");
+        let pt = dir.file("m.csv");
+        save(&m, &pb).unwrap();
+        save(&m, &pt).unwrap();
+        assert_eq!(load(&pb).unwrap(), m);
+        assert_eq!(load(&pt).unwrap(), m);
+        // Binary is magic-tagged; text loader rejects it.
+        assert!(load_text(&pb).is_err());
+    }
+
+    #[test]
+    fn text_comments_and_blank_lines() {
+        let dir = TempDir::new("stark-io").unwrap();
+        let p = dir.file("m.csv");
+        std::fs::write(&p, "# header\n\n1.5, 2.5\n-3.0,4\n").unwrap();
+        let m = load_text(&p).unwrap();
+        assert_eq!((m.rows(), m.cols()), (2, 2));
+        assert_eq!(m.get(1, 0), -3.0);
+    }
+
+    #[test]
+    fn rejects_ragged_and_empty() {
+        let dir = TempDir::new("stark-io").unwrap();
+        let p = dir.file("bad.csv");
+        std::fs::write(&p, "1,2\n3\n").unwrap();
+        assert!(load_text(&p).is_err());
+        std::fs::write(&p, "# only comments\n").unwrap();
+        assert!(load_text(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let dir = TempDir::new("stark-io").unwrap();
+        let p = dir.file("bad.smx");
+        std::fs::write(&p, b"NOTSTARK").unwrap();
+        assert!(load_binary(&p).is_err());
+        // Valid header, truncated payload.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&4u64.to_le_bytes());
+        bytes.extend_from_slice(&4u64.to_le_bytes());
+        bytes.extend_from_slice(&1.0f64.to_le_bytes());
+        std::fs::write(&p, bytes).unwrap();
+        assert!(load_binary(&p).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! Dense-matrix substrate (DESIGN.md S7/S8).
+//!
+//! Everything the distributed algorithms stand on: the [`DenseMatrix`]
+//! container, deterministic generators, block partitioning (matrix ⇄
+//! `b × b` grid of blocks, paper §III-B), and the single-node
+//! multiplication algorithms used as Table VI baselines and as the
+//! native leaf backend.
+
+pub mod dense;
+pub mod gen;
+pub mod io;
+pub mod multiply;
+pub mod parallel;
+pub mod strassen;
+pub mod winograd;
+
+pub use dense::DenseMatrix;
+pub use gen::Rng64;
+pub use multiply::{matmul_blocked, matmul_naive};
+pub use parallel::matmul_parallel;
+pub use strassen::strassen_serial;
+pub use winograd::winograd_serial;

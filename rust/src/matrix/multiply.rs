@@ -1,0 +1,134 @@
+//! Serial single-node multiplication kernels.
+//!
+//! Table VI baselines ("Serial Naive") and the native fallback leaf
+//! backend. `matmul_naive` is the textbook three-loop form in `ikj` order
+//! (row-major friendly); `matmul_blocked` adds L1-cache tiling, the form
+//! the coordinator's native backend actually calls on the hot path.
+
+use crate::matrix::DenseMatrix;
+
+/// Cache-tile edge for [`matmul_blocked`]. Swept in `benches/hotpath.rs`
+/// (EXPERIMENTS.md §Perf): 128 beat 64 by ~6% on this host (128×128 f64 =
+/// 128 KiB/tile still fits L2), so 128 is the default.
+pub const BLOCK_TILE: usize = 128;
+
+/// Textbook three-loop multiply (`ikj` order for unit-stride inner loops).
+pub fn matmul_naive(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.cols(), b.rows(), "contraction mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = DenseMatrix::zeros(m, n);
+    let (av, bv) = (a.as_slice(), b.as_slice());
+    let ov = out.as_mut_slice();
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = av[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &bv[kk * n..(kk + 1) * n];
+            let orow = &mut ov[i * n..(i + 1) * n];
+            for (o, bb) in orow.iter_mut().zip(brow) {
+                *o += aik * bb;
+            }
+        }
+    }
+    out
+}
+
+/// Cache-blocked multiply: tiles of [`BLOCK_TILE`] in all three dims,
+/// `ikj` order inside a tile.
+pub fn matmul_blocked(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    matmul_blocked_with(a, b, BLOCK_TILE)
+}
+
+/// [`matmul_blocked`] with an explicit tile size (benchmarked in the perf
+/// pass; exposed for the ablation benches).
+pub fn matmul_blocked_with(a: &DenseMatrix, b: &DenseMatrix, tile: usize) -> DenseMatrix {
+    assert_eq!(a.cols(), b.rows(), "contraction mismatch");
+    assert!(tile > 0);
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = DenseMatrix::zeros(m, n);
+    let (av, bv) = (a.as_slice(), b.as_slice());
+    let ov = out.as_mut_slice();
+    for i0 in (0..m).step_by(tile) {
+        let i1 = (i0 + tile).min(m);
+        for k0 in (0..k).step_by(tile) {
+            let k1 = (k0 + tile).min(k);
+            for j0 in (0..n).step_by(tile) {
+                let j1 = (j0 + tile).min(n);
+                for i in i0..i1 {
+                    for kk in k0..k1 {
+                        let aik = av[i * k + kk];
+                        let brow = &bv[kk * n + j0..kk * n + j1];
+                        let orow = &mut ov[i * n + j0..i * n + j1];
+                        for (o, bb) in orow.iter_mut().zip(brow) {
+                            *o += aik * bb;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_against_naive(m: usize, k: usize, n: usize) {
+        let a = DenseMatrix::random(m, k, 1);
+        let b = DenseMatrix::random(k, n, 2);
+        let want = matmul_naive(&a, &b);
+        let got = matmul_blocked(&a, &b);
+        assert!(want.allclose(&got, 1e-12), "blocked != naive for {m}x{k}x{n}");
+        let got_small_tile = matmul_blocked_with(&a, &b, 3);
+        assert!(want.allclose(&got_small_tile, 1e-12));
+    }
+
+    #[test]
+    fn naive_identity() {
+        let a = DenseMatrix::random(8, 8, 5);
+        let i = DenseMatrix::identity(8);
+        assert!(matmul_naive(&a, &i).allclose(&a, 0.0));
+        assert!(matmul_naive(&i, &a).allclose(&a, 0.0));
+    }
+
+    #[test]
+    fn naive_known_product() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = DenseMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = DenseMatrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = matmul_naive(&a, &b);
+        assert_eq!(c.as_slice(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn blocked_matches_naive_square() {
+        check_against_naive(32, 32, 32);
+        check_against_naive(65, 65, 65); // non-multiple of tile
+    }
+
+    #[test]
+    fn blocked_matches_naive_rectangular() {
+        check_against_naive(16, 48, 8);
+        check_against_naive(7, 13, 21);
+    }
+
+    #[test]
+    fn associativity_sanity() {
+        // (AB)C == A(BC) within fp tolerance — exercises accumulation paths.
+        let a = DenseMatrix::random(16, 16, 11);
+        let b = DenseMatrix::random(16, 16, 12);
+        let c = DenseMatrix::random(16, 16, 13);
+        let left = matmul_blocked(&matmul_blocked(&a, &b), &c);
+        let right = matmul_blocked(&a, &matmul_blocked(&b, &c));
+        assert!(left.allclose(&right, 1e-10));
+    }
+
+    #[test]
+    #[should_panic(expected = "contraction mismatch")]
+    fn rejects_bad_shapes() {
+        matmul_naive(&DenseMatrix::zeros(2, 3), &DenseMatrix::zeros(2, 3));
+    }
+}

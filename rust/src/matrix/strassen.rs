@@ -1,0 +1,189 @@
+//! Serial Strassen multiplication (paper Algorithm 1, Table VI baseline).
+//!
+//! Recursive seven-multiplication scheme with a cutoff below which the
+//! cache-blocked naive kernel takes over — the same "threshold" parameter
+//! as the paper's Algorithm 1. The combine uses Strassen's correct
+//! `C22 = M1 − M2 + M3 + M6` (the paper's listing misprints the M3 sign;
+//! see python/compile/kernels/combine.py).
+
+use crate::matrix::multiply::matmul_blocked;
+use crate::matrix::DenseMatrix;
+
+/// Default recursion cutoff: below this edge the blocked kernel wins.
+pub const DEFAULT_THRESHOLD: usize = 64;
+
+/// Serial Strassen with the default cutoff.
+pub fn strassen_serial(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    strassen_serial_with(a, b, DEFAULT_THRESHOLD)
+}
+
+/// Serial Strassen with an explicit cutoff. Requires square power-of-two
+/// operands (the paper's setting; §III-A notes the padding generalization).
+pub fn strassen_serial_with(a: &DenseMatrix, b: &DenseMatrix, threshold: usize) -> DenseMatrix {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "square operands required");
+    assert_eq!(b.rows(), b.cols(), "square operands required");
+    assert_eq!(a.rows(), b.rows(), "dimension mismatch");
+    assert!(n.is_power_of_two(), "n={n} must be a power of two");
+    strassen_rec(a, b, threshold.max(1))
+}
+
+/// The 7 M-term operand pairs of one Strassen level, in paper order:
+/// `M_i = lhs_i @ rhs_i`. Shared with the distributed algorithm's tests.
+pub fn m_operands(
+    a11: &DenseMatrix, a12: &DenseMatrix, a21: &DenseMatrix, a22: &DenseMatrix,
+    b11: &DenseMatrix, b12: &DenseMatrix, b21: &DenseMatrix, b22: &DenseMatrix,
+) -> Vec<(DenseMatrix, DenseMatrix)> {
+    vec![
+        (a11.add(a22), b11.add(b22)), // M1
+        (a21.add(a22), b11.clone()),  // M2
+        (a11.clone(), b12.sub(b22)),  // M3
+        (a22.clone(), b21.sub(b11)),  // M4
+        (a11.add(a12), b22.clone()),  // M5
+        (a21.sub(a11), b11.add(b12)), // M6
+        (a12.sub(a22), b21.add(b22)), // M7
+    ]
+}
+
+/// Combine M1..M7 into the C quadrants (correct-sign variant).
+pub fn combine_quadrants(ms: &[DenseMatrix]) -> [DenseMatrix; 4] {
+    assert_eq!(ms.len(), 7);
+    let c11 = {
+        let mut t = ms[0].add(&ms[3]);
+        t.add_assign_signed(&ms[4], -1.0);
+        t.add_assign_signed(&ms[6], 1.0);
+        t
+    };
+    let c12 = ms[2].add(&ms[4]);
+    let c21 = ms[1].add(&ms[3]);
+    let c22 = {
+        let mut t = ms[0].sub(&ms[1]);
+        t.add_assign_signed(&ms[2], 1.0);
+        t.add_assign_signed(&ms[5], 1.0);
+        t
+    };
+    [c11, c12, c21, c22]
+}
+
+fn strassen_rec(a: &DenseMatrix, b: &DenseMatrix, threshold: usize) -> DenseMatrix {
+    let n = a.rows();
+    if n <= threshold {
+        return matmul_blocked(a, b);
+    }
+    let h = n / 2;
+    let a11 = a.submatrix(0, 0, h, h);
+    let a12 = a.submatrix(0, h, h, h);
+    let a21 = a.submatrix(h, 0, h, h);
+    let a22 = a.submatrix(h, h, h, h);
+    let b11 = b.submatrix(0, 0, h, h);
+    let b12 = b.submatrix(0, h, h, h);
+    let b21 = b.submatrix(h, 0, h, h);
+    let b22 = b.submatrix(h, h, h, h);
+
+    let ms: Vec<DenseMatrix> = m_operands(&a11, &a12, &a21, &a22, &b11, &b12, &b21, &b22)
+        .iter()
+        .map(|(l, r)| strassen_rec(l, r, threshold))
+        .collect();
+    let [c11, c12, c21, c22] = combine_quadrants(&ms);
+
+    let mut out = DenseMatrix::zeros(n, n);
+    out.set_submatrix(0, 0, &c11);
+    out.set_submatrix(0, h, &c12);
+    out.set_submatrix(h, 0, &c21);
+    out.set_submatrix(h, h, &c22);
+    out
+}
+
+/// Number of leaf multiplications Strassen performs for `n` with `cutoff`:
+/// `7^levels` (vs `(n/cutoff)^3` for the naive scheme) — the paper's
+/// central counting argument (§I: `b^log7` vs `b^3`).
+pub fn leaf_multiplications(n: usize, cutoff: usize) -> u64 {
+    let mut levels = 0u32;
+    let mut size = n;
+    while size > cutoff {
+        size /= 2;
+        levels += 1;
+    }
+    7u64.pow(levels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::multiply::matmul_naive;
+
+    #[test]
+    fn matches_naive_across_sizes() {
+        for n in [2usize, 4, 8, 16, 64, 128] {
+            let a = DenseMatrix::random(n, n, n as u64);
+            let b = DenseMatrix::random(n, n, (n + 1) as u64);
+            let want = matmul_naive(&a, &b);
+            let got = strassen_serial_with(&a, &b, 2);
+            assert!(
+                want.allclose(&got, 1e-9),
+                "strassen != naive at n={n}, diff={}",
+                want.max_abs_diff(&got)
+            );
+        }
+    }
+
+    #[test]
+    fn threshold_one_is_clamped() {
+        let a = DenseMatrix::random(4, 4, 1);
+        let b = DenseMatrix::random(4, 4, 2);
+        let got = strassen_serial_with(&a, &b, 0); // clamps to 1
+        assert!(matmul_naive(&a, &b).allclose(&got, 1e-12));
+    }
+
+    #[test]
+    fn default_cutoff_path() {
+        let a = DenseMatrix::random(256, 256, 7);
+        let b = DenseMatrix::random(256, 256, 8);
+        let want = matmul_blocked(&a, &b);
+        let got = strassen_serial(&a, &b);
+        assert!(want.allclose(&got, 1e-8));
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two() {
+        let a = DenseMatrix::zeros(6, 6);
+        strassen_serial(&a, &a);
+    }
+
+    #[test]
+    fn leaf_multiplication_count() {
+        assert_eq!(leaf_multiplications(16, 16), 1);
+        assert_eq!(leaf_multiplications(32, 16), 7);
+        assert_eq!(leaf_multiplications(64, 16), 49);
+        assert_eq!(leaf_multiplications(1024, 64), 7u64.pow(4));
+    }
+
+    #[test]
+    fn combine_identity_check() {
+        // With Ms built from actual quadrant products the combine must
+        // reconstruct A@B exactly.
+        let n = 8;
+        let a = DenseMatrix::random(n, n, 21);
+        let b = DenseMatrix::random(n, n, 22);
+        let h = n / 2;
+        let a11 = a.submatrix(0, 0, h, h);
+        let a12 = a.submatrix(0, h, h, h);
+        let a21 = a.submatrix(h, 0, h, h);
+        let a22 = a.submatrix(h, h, h, h);
+        let b11 = b.submatrix(0, 0, h, h);
+        let b12 = b.submatrix(0, h, h, h);
+        let b21 = b.submatrix(h, 0, h, h);
+        let b22 = b.submatrix(h, h, h, h);
+        let ms: Vec<_> = m_operands(&a11, &a12, &a21, &a22, &b11, &b12, &b21, &b22)
+            .iter()
+            .map(|(l, r)| matmul_naive(l, r))
+            .collect();
+        let [c11, c12, c21, c22] = combine_quadrants(&ms);
+        let want = matmul_naive(&a, &b);
+        assert!(want.submatrix(0, 0, h, h).allclose(&c11, 1e-10));
+        assert!(want.submatrix(0, h, h, h).allclose(&c12, 1e-10));
+        assert!(want.submatrix(h, 0, h, h).allclose(&c21, 1e-10));
+        assert!(want.submatrix(h, h, h, h).allclose(&c22, 1e-10));
+    }
+}

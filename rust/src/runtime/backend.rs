@@ -1,0 +1,82 @@
+//! [`LeafBackend`] — the leaf-multiplication interface of the coordinator.
+//!
+//! The distributed algorithms bottom out in single-node block products
+//! (the paper's Breeze/BLAS calls); they do so through this trait so the
+//! same algorithm runs against the PJRT-executed AOT artifacts
+//! ([`crate::runtime::XlaBackend`]) or the pure-Rust kernels
+//! ([`NativeBackend`]) — the backend ablation of DESIGN.md §6.
+
+use crate::matrix::{matmul_blocked, DenseMatrix};
+
+/// Leaf block operations dispatched from the hot path.
+pub trait LeafBackend: Send + Sync {
+    /// `a @ b` for one leaf block pair.
+    fn multiply(&self, a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix;
+
+    /// One fused Strassen level over quadrants
+    /// `[a11,a12,a21,a22,b11,b12,b21,b22] → [c11,c12,c21,c22]`.
+    /// Backends without a fused path fall back to the composed form.
+    fn strassen_leaf(&self, quads: &[DenseMatrix; 8]) -> [DenseMatrix; 4] {
+        let [a11, a12, a21, a22, b11, b12, b21, b22] = quads;
+        let ms: Vec<DenseMatrix> =
+            crate::matrix::strassen::m_operands(a11, a12, a21, a22, b11, b12, b21, b22)
+                .iter()
+                .map(|(l, r)| self.multiply(l, r))
+                .collect();
+        crate::matrix::strassen::combine_quadrants(&ms)
+    }
+
+    /// Human-readable backend name (for reports and metrics).
+    fn name(&self) -> &str;
+}
+
+/// Pure-Rust leaf backend: the cache-blocked serial kernel.
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl LeafBackend for NativeBackend {
+    fn multiply(&self, a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+        matmul_blocked(a, b)
+    }
+
+    fn name(&self) -> &str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::multiply::matmul_naive;
+
+    #[test]
+    fn native_multiply_matches_naive() {
+        let a = DenseMatrix::random(32, 32, 1);
+        let b = DenseMatrix::random(32, 32, 2);
+        let got = NativeBackend.multiply(&a, &b);
+        assert!(matmul_naive(&a, &b).allclose(&got, 1e-12));
+    }
+
+    #[test]
+    fn default_strassen_leaf_is_correct() {
+        let n = 16;
+        let a = DenseMatrix::random(2 * n, 2 * n, 3);
+        let b = DenseMatrix::random(2 * n, 2 * n, 4);
+        let quads = [
+            a.submatrix(0, 0, n, n),
+            a.submatrix(0, n, n, n),
+            a.submatrix(n, 0, n, n),
+            a.submatrix(n, n, n, n),
+            b.submatrix(0, 0, n, n),
+            b.submatrix(0, n, n, n),
+            b.submatrix(n, 0, n, n),
+            b.submatrix(n, n, n, n),
+        ];
+        let [c11, c12, c21, c22] = NativeBackend.strassen_leaf(&quads);
+        let want = matmul_naive(&a, &b);
+        assert!(want.submatrix(0, 0, n, n).allclose(&c11, 1e-10));
+        assert!(want.submatrix(0, n, n, n).allclose(&c12, 1e-10));
+        assert!(want.submatrix(n, 0, n, n).allclose(&c21, 1e-10));
+        assert!(want.submatrix(n, n, n, n).allclose(&c22, 1e-10));
+    }
+}

@@ -1,0 +1,221 @@
+//! `artifacts/manifest.json` parsing — the contract between `aot.py` and
+//! the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json;
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// `matmul | strassen_leaf | add | sub | mterms | combine7`.
+    pub kind: String,
+    /// `pallas` (L1 kernel lowered via interpret) or `dot` (plain HLO dot).
+    pub impl_: String,
+    /// `f32 | f64`.
+    pub dtype: String,
+    /// Block edge length the kernel was lowered for.
+    pub block: usize,
+    pub num_inputs: usize,
+    pub num_outputs: usize,
+    pub input_shape: Vec<usize>,
+    pub sha256_16: String,
+    pub hlo_bytes: usize,
+}
+
+/// The manifest file.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: u32,
+    pub jax_version: String,
+    pub default_tile: u32,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+fn field<'a>(v: &'a json::Value, key: &str) -> Result<&'a json::Value> {
+    v.get(key).with_context(|| format!("manifest missing field {key:?}"))
+}
+
+fn str_field(v: &json::Value, key: &str) -> Result<String> {
+    Ok(field(v, key)?
+        .as_str()
+        .with_context(|| format!("manifest field {key:?} is not a string"))?
+        .to_string())
+}
+
+fn usize_field(v: &json::Value, key: &str) -> Result<usize> {
+    field(v, key)?
+        .as_usize()
+        .with_context(|| format!("manifest field {key:?} is not an unsigned integer"))
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &json::Value) -> Result<Self> {
+        let input_shape = field(v, "input_shape")?
+            .as_array()
+            .context("input_shape is not an array")?
+            .iter()
+            .map(|x| x.as_usize().context("input_shape element not an integer"))
+            .collect::<Result<Vec<usize>>>()?;
+        Ok(Self {
+            name: str_field(v, "name")?,
+            file: str_field(v, "file")?,
+            kind: str_field(v, "kind")?,
+            impl_: str_field(v, "impl")?,
+            dtype: str_field(v, "dtype")?,
+            block: usize_field(v, "block")?,
+            num_inputs: usize_field(v, "num_inputs")?,
+            num_outputs: usize_field(v, "num_outputs")?,
+            input_shape,
+            sha256_16: str_field(v, "sha256_16")?,
+            hlo_bytes: usize_field(v, "hlo_bytes")?,
+        })
+    }
+}
+
+impl Manifest {
+    /// Parse manifest JSON text.
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let v = json::parse(text).context("parsing manifest.json")?;
+        let artifacts = field(&v, "artifacts")?
+            .as_array()
+            .context("artifacts is not an array")?
+            .iter()
+            .map(ArtifactEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            format: usize_field(&v, "format")? as u32,
+            jax_version: str_field(&v, "jax_version")?,
+            default_tile: usize_field(&v, "default_tile")? as u32,
+            artifacts,
+        })
+    }
+}
+
+/// Manifest + its directory; resolves artifact lookups to file paths.
+#[derive(Debug, Clone)]
+pub struct ArtifactLibrary {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl ArtifactLibrary {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let manifest = Manifest::from_json_text(&text)?;
+        anyhow::ensure!(manifest.format == 1, "unsupported manifest format {}", manifest.format);
+        Ok(Self { dir, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Find the artifact for `(kind, impl, dtype, block)`.
+    pub fn find(&self, kind: &str, impl_: &str, dtype: &str, block: usize) -> Option<&ArtifactEntry> {
+        self.manifest.artifacts.iter().find(|e| {
+            e.kind == kind && e.impl_ == impl_ && e.dtype == dtype && e.block == block
+        })
+    }
+
+    /// Absolute path of an entry's HLO text file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Block sizes available for a `(kind, impl, dtype)` family, ascending.
+    pub fn blocks_for(&self, kind: &str, impl_: &str, dtype: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|e| e.kind == kind && e.impl_ == impl_ && e.dtype == dtype)
+            .map(|e| e.block)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn sample_manifest_json() -> &'static str {
+        r#"{
+ "format": 1,
+ "jax_version": "0.8.2",
+ "default_tile": 128,
+ "artifacts": [
+  {"name": "matmul_dot_f64_16", "file": "matmul_dot_f64_16.hlo.txt",
+   "kind": "matmul", "impl": "dot", "dtype": "f64", "block": 16,
+   "num_inputs": 2, "num_outputs": 1, "input_shape": [16, 16],
+   "sha256_16": "deadbeef00000000", "hlo_bytes": 100},
+  {"name": "matmul_dot_f64_32", "file": "matmul_dot_f64_32.hlo.txt",
+   "kind": "matmul", "impl": "dot", "dtype": "f64", "block": 32,
+   "num_inputs": 2, "num_outputs": 1, "input_shape": [32, 32],
+   "sha256_16": "deadbeef00000001", "hlo_bytes": 100}
+ ]
+}"#
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json_text(sample_manifest_json()).unwrap();
+        assert_eq!(m.format, 1);
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifacts[0].kind, "matmul");
+        assert_eq!(m.artifacts[1].block, 32);
+        assert_eq!(m.artifacts[0].input_shape, vec![16, 16]);
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = TempDir::new("stark-manifest").unwrap();
+        std::fs::write(dir.file("manifest.json"), sample_manifest_json()).unwrap();
+        let lib = ArtifactLibrary::load(dir.path()).unwrap();
+        let e = lib.find("matmul", "dot", "f64", 16).unwrap();
+        assert_eq!(e.name, "matmul_dot_f64_16");
+        assert!(lib.find("matmul", "dot", "f64", 64).is_none());
+        assert!(lib.find("matmul", "pallas", "f64", 16).is_none());
+        assert_eq!(lib.blocks_for("matmul", "dot", "f64"), vec![16, 32]);
+        assert!(lib.blocks_for("matmul", "dot", "f32").is_empty());
+        let e = lib.find("matmul", "dot", "f64", 16).unwrap();
+        assert!(lib.path_of(e).ends_with("matmul_dot_f64_16.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(ArtifactLibrary::load("/nonexistent/dir").is_err());
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(Manifest::from_json_text(r#"{"format": 1}"#).is_err());
+        assert!(Manifest::from_json_text(r#"{"artifacts": []}"#).is_err());
+    }
+
+    #[test]
+    fn wrong_format_rejected_at_load() {
+        let dir = TempDir::new("stark-manifest").unwrap();
+        std::fs::write(
+            dir.file("manifest.json"),
+            r#"{"format": 2, "jax_version": "x", "default_tile": 1, "artifacts": []}"#,
+        )
+        .unwrap();
+        assert!(ArtifactLibrary::load(dir.path()).is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! Runtime layer: executes the AOT-compiled leaf kernels from the
+//! coordinator's hot path (DESIGN.md S12).
+//!
+//! `make artifacts` lowers the L2 JAX graphs (which call the L1 Pallas
+//! kernels) to HLO text once; this module loads them via the `xla` crate
+//! (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`) and exposes them behind [`LeafBackend`],
+//! the interface the distributed algorithms multiply leaf blocks through.
+//! Python never runs at request time.
+//!
+//! Because the `xla` wrapper types hold raw C++ pointers (`!Send`), the
+//! PJRT work runs on a pool of dedicated runtime threads
+//! ([`xla_service::XlaService`]), one per simulated executor — mirroring
+//! the paper's one-Breeze-instance-per-executor layout. Engine workers
+//! talk to it over channels.
+
+pub mod backend;
+pub mod manifest;
+pub mod xla_service;
+
+pub use backend::{LeafBackend, NativeBackend};
+pub use manifest::{ArtifactEntry, ArtifactLibrary, Manifest};
+pub use xla_service::{XlaBackend, XlaService};
+
+/// Default artifacts directory, relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: `$STARK_ARTIFACTS` if set, else walk up
+/// from the current directory looking for `artifacts/manifest.json` (so
+/// tests, benches and examples all find it regardless of cwd).
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("STARK_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let cand = cur.join(DEFAULT_ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,346 @@
+//! PJRT execution service: dedicated runtime threads owning the XLA
+//! client and compiled-executable cache.
+//!
+//! The `xla` crate's wrappers hold raw pointers and are `!Send`, so all
+//! PJRT state lives on service threads; engine workers submit requests
+//! over channels. One service thread per simulated executor reproduces
+//! the paper's layout (each Spark executor owns a Breeze/BLAS instance
+//! reached via JNI — here each simulated executor owns a PJRT client
+//! reached via a channel).
+//!
+//! Executables are compiled once per (kind, block size) from the HLO-text
+//! artifacts and cached for the life of the service (the paper's JIT-once
+//! amortization; see EXPERIMENTS.md §Perf for the measured compile vs
+//! execute split).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::{anyhow, Result};
+
+use crate::matrix::DenseMatrix;
+use crate::runtime::backend::{LeafBackend, NativeBackend};
+use crate::runtime::manifest::ArtifactLibrary;
+
+enum Req {
+    Matmul {
+        a: DenseMatrix,
+        b: DenseMatrix,
+        resp: mpsc::SyncSender<Result<DenseMatrix, String>>,
+    },
+    StrassenLeaf {
+        quads: Box<[DenseMatrix; 8]>,
+        resp: mpsc::SyncSender<Result<[DenseMatrix; 4], String>>,
+    },
+    /// Pre-compile the executables for a block size.
+    Warmup {
+        block: usize,
+        resp: mpsc::SyncSender<Result<(), String>>,
+    },
+    Shutdown,
+}
+
+/// Pool of PJRT runtime threads (see module docs).
+pub struct XlaService {
+    senders: Vec<mpsc::Sender<Req>>,
+    rr: AtomicUsize,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl XlaService {
+    /// Start `threads` runtime threads against the artifact library,
+    /// executing artifacts of the given `impl` family (`"dot"` or
+    /// `"pallas"`).
+    pub fn new(lib: ArtifactLibrary, threads: usize, impl_: &str) -> Result<Self> {
+        anyhow::ensure!(
+            impl_ == "dot" || impl_ == "pallas",
+            "unknown artifact impl {impl_:?} (expected \"dot\" or \"pallas\")"
+        );
+        let threads = threads.max(1);
+        let mut senders = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        for t in 0..threads {
+            let (tx, rx) = mpsc::channel::<Req>();
+            let lib = lib.clone();
+            let impl_ = impl_.to_string();
+            let ready = ready_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("xla-runtime-{t}"))
+                    .spawn(move || runtime_thread(lib, impl_, rx, ready))
+                    .expect("spawn runtime thread"),
+            );
+            senders.push(tx);
+        }
+        drop(ready_tx);
+        for _ in 0..threads {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("runtime thread died during init"))?
+                .map_err(|e| anyhow!("PJRT init failed: {e}"))?;
+        }
+        Ok(Self { senders, rr: AtomicUsize::new(0), threads: handles })
+    }
+
+    fn pick(&self) -> &mpsc::Sender<Req> {
+        let i = self.rr.fetch_add(1, Ordering::Relaxed) % self.senders.len();
+        &self.senders[i]
+    }
+
+    /// Execute the matmul artifact for blocks of size `a.rows()`.
+    pub fn matmul(&self, a: DenseMatrix, b: DenseMatrix) -> Result<DenseMatrix> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.pick()
+            .send(Req::Matmul { a, b, resp: tx })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped request"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// Execute the fused one-level Strassen artifact over quadrants.
+    pub fn strassen_leaf(&self, quads: [DenseMatrix; 8]) -> Result<[DenseMatrix; 4]> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.pick()
+            .send(Req::StrassenLeaf { quads: Box::new(quads), resp: tx })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped request"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// Pre-compile `matmul` (and, when available, `strassen_leaf`)
+    /// executables for `block` on every runtime thread.
+    pub fn warmup(&self, block: usize) -> Result<()> {
+        let mut receivers = Vec::new();
+        for s in &self.senders {
+            let (tx, rx) = mpsc::sync_channel(1);
+            s.send(Req::Warmup { block, resp: tx }).map_err(|_| anyhow!("runtime thread gone"))?;
+            receivers.push(rx);
+        }
+        for rx in receivers {
+            rx.recv().map_err(|_| anyhow!("runtime thread dropped warmup"))?.map_err(|e| anyhow!(e))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        for s in &self.senders {
+            let _ = s.send(Req::Shutdown);
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+struct Engine {
+    client: xla::PjRtClient,
+    lib: ArtifactLibrary,
+    impl_: String,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    fn executable(&mut self, kind: &str, block: usize) -> Result<&xla::PjRtLoadedExecutable, String> {
+        let entry = self
+            .lib
+            .find(kind, &self.impl_, "f64", block)
+            .ok_or_else(|| format!("no artifact for {kind}/{}/f64/{block}", self.impl_))?
+            .clone();
+        if !self.cache.contains_key(&entry.name) {
+            let path = self.lib.path_of(&entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or("non-utf8 artifact path")?,
+            )
+            .map_err(|e| format!("loading {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| format!("compiling {}: {e}", entry.name))?;
+            self.cache.insert(entry.name.clone(), exe);
+        }
+        Ok(&self.cache[&entry.name])
+    }
+
+    fn literal(m: &DenseMatrix) -> Result<xla::Literal, String> {
+        xla::Literal::vec1(m.as_slice())
+            .reshape(&[m.rows() as i64, m.cols() as i64])
+            .map_err(|e| format!("literal reshape: {e}"))
+    }
+
+    fn matmul(&mut self, a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix, String> {
+        let n = a.rows();
+        if a.cols() != n || b.rows() != n || b.cols() != n {
+            return Err(format!(
+                "xla matmul expects square equal blocks, got {}x{} @ {}x{}",
+                a.rows(), a.cols(), b.rows(), b.cols()
+            ));
+        }
+        let exe = self.executable("matmul", n)?;
+        let la = Self::literal(a)?;
+        let lb = Self::literal(b)?;
+        let result = exe
+            .execute::<xla::Literal>(&[la, lb])
+            .map_err(|e| format!("execute matmul_{n}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch result: {e}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| format!("untuple: {e}"))?;
+        let v = out.to_vec::<f64>().map_err(|e| format!("to_vec: {e}"))?;
+        Ok(DenseMatrix::from_vec(n, n, v))
+    }
+
+    fn strassen_leaf(&mut self, quads: &[DenseMatrix; 8]) -> Result<[DenseMatrix; 4], String> {
+        let n = quads[0].rows();
+        for q in quads.iter() {
+            if q.rows() != n || q.cols() != n {
+                return Err("strassen_leaf expects 8 equal square quadrants".to_string());
+            }
+        }
+        let exe = self.executable("strassen_leaf", n)?;
+        let lits: Vec<xla::Literal> =
+            quads.iter().map(Self::literal).collect::<Result<_, _>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| format!("execute strassen_leaf_{n}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch result: {e}"))?;
+        let parts = result.to_tuple().map_err(|e| format!("untuple: {e}"))?;
+        if parts.len() != 4 {
+            return Err(format!("strassen_leaf returned {} outputs, want 4", parts.len()));
+        }
+        let mut out: Vec<DenseMatrix> = Vec::with_capacity(4);
+        for lit in parts {
+            let v = lit.to_vec::<f64>().map_err(|e| format!("to_vec: {e}"))?;
+            out.push(DenseMatrix::from_vec(n, n, v));
+        }
+        let mut it = out.into_iter();
+        Ok([
+            it.next().unwrap(),
+            it.next().unwrap(),
+            it.next().unwrap(),
+            it.next().unwrap(),
+        ])
+    }
+}
+
+fn runtime_thread(
+    lib: ArtifactLibrary,
+    impl_: String,
+    rx: mpsc::Receiver<Req>,
+    ready: mpsc::Sender<Result<(), String>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = ready.send(Err(format!("PjRtClient::cpu: {e}")));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+    let mut engine = Engine { client, lib, impl_, cache: HashMap::new() };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Matmul { a, b, resp } => {
+                let _ = resp.send(engine.matmul(&a, &b));
+            }
+            Req::StrassenLeaf { quads, resp } => {
+                let _ = resp.send(engine.strassen_leaf(&quads));
+            }
+            Req::Warmup { block, resp } => {
+                let mut r = engine.executable("matmul", block).map(|_| ());
+                if r.is_ok() && engine.lib.find("strassen_leaf", &engine.impl_, "f64", block).is_some()
+                {
+                    r = engine.executable("strassen_leaf", block).map(|_| ());
+                }
+                let _ = resp.send(r);
+            }
+            Req::Shutdown => break,
+        }
+    }
+}
+
+/// Smallest block edge at which the PJRT dispatch beats the native
+/// kernel. Measured in `benches/hotpath.rs` (EXPERIMENTS.md §Perf): on
+/// this host the XLA `dot` path wins from 256 up (1.14×@256, 1.45×@512)
+/// and loses below (0.65 ms native vs 1.04 ms XLA at 128) — dispatch +
+/// literal marshalling dominate small blocks.
+pub const DEFAULT_MIN_XLA_BLOCK: usize = 256;
+
+/// [`LeafBackend`] over an [`XlaService`], with a native fallback for
+/// block sizes the artifact grid doesn't cover (counted, see
+/// [`XlaBackend::fallbacks`]) and an adaptive cutover below which small
+/// blocks run on the native kernel.
+pub struct XlaBackend {
+    svc: Arc<XlaService>,
+    native: NativeBackend,
+    fallbacks: AtomicU64,
+    min_xla_block: usize,
+}
+
+impl XlaBackend {
+    pub fn new(svc: Arc<XlaService>) -> Self {
+        Self::with_cutover(svc, DEFAULT_MIN_XLA_BLOCK)
+    }
+
+    /// Explicit cutover (0 = always dispatch to XLA — the ablation arm).
+    pub fn with_cutover(svc: Arc<XlaService>, min_xla_block: usize) -> Self {
+        Self { svc, native: NativeBackend, fallbacks: AtomicU64::new(0), min_xla_block }
+    }
+
+    /// How many leaf calls fell back to the native kernel.
+    pub fn fallbacks(&self) -> u64 {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    pub fn service(&self) -> &Arc<XlaService> {
+        &self.svc
+    }
+}
+
+impl LeafBackend for XlaBackend {
+    fn multiply(&self, a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+        if a.rows() < self.min_xla_block {
+            return self.native.multiply(a, b);
+        }
+        match self.svc.matmul(a.clone(), b.clone()) {
+            Ok(c) => c,
+            Err(_) => {
+                self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                self.native.multiply(a, b)
+            }
+        }
+    }
+
+    fn strassen_leaf(&self, quads: &[DenseMatrix; 8]) -> [DenseMatrix; 4] {
+        if quads[0].rows() < self.min_xla_block {
+            let [a11, a12, a21, a22, b11, b12, b21, b22] = quads;
+            let ms: Vec<DenseMatrix> =
+                crate::matrix::strassen::m_operands(a11, a12, a21, a22, b11, b12, b21, b22)
+                    .iter()
+                    .map(|(l, r)| self.native.multiply(l, r))
+                    .collect();
+            return crate::matrix::strassen::combine_quadrants(&ms);
+        }
+        match self.svc.strassen_leaf(quads.clone()) {
+            Ok(c) => c,
+            Err(_) => {
+                self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                let [a11, a12, a21, a22, b11, b12, b21, b22] = quads;
+                let ms: Vec<DenseMatrix> = crate::matrix::strassen::m_operands(
+                    a11, a12, a21, a22, b11, b12, b21, b22,
+                )
+                .iter()
+                .map(|(l, r)| self.multiply(l, r))
+                .collect();
+                crate::matrix::strassen::combine_quadrants(&ms)
+            }
+        }
+    }
+
+    fn name(&self) -> &str {
+        "xla"
+    }
+}

@@ -1,0 +1,349 @@
+//! `stark serve` — the coordinator as a long-running service.
+//!
+//! The paper motivates Stark as one step inside larger analytics
+//! workflows; this module exposes the multiply engine over a socket so
+//! other processes can use it like a service (vLLM-router-style: a
+//! leader process owning the simulated cluster + compiled artifacts,
+//! clients submitting work).
+//!
+//! Protocol: newline-delimited JSON over TCP.
+//!
+//! ```json
+//! -> {"op":"ping"}
+//! <- {"ok":true,"service":"stark","version":"0.1.0"}
+//!
+//! -> {"op":"multiply","algo":"stark","n":256,"b":4,"seed":7}
+//! <- {"ok":true,"wall_ms":12.3,"leaf_calls":49,"frobenius":148.8,...}
+//!
+//! -> {"op":"multiply","algo":"stark","b":2,
+//!     "a":[[1,2],[3,4]],"b_mat":[[1,0],[0,1]],"return_c":true}
+//! <- {"ok":true,"c":[[1,2],[3,4]],...}
+//!
+//! -> {"op":"shutdown"}
+//! ```
+//!
+//! One request is served per connection-line, synchronously; concurrent
+//! connections each get a handler thread while the simulated cluster and
+//! the PJRT artifact cache are shared behind the server state.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::algos::{self, Algorithm, StarkConfig};
+use crate::engine::SparkContext;
+use crate::matrix::DenseMatrix;
+use crate::runtime::LeafBackend;
+use crate::util::json::{self, Value};
+
+/// Shared server state: the simulated cluster and the leaf backend.
+pub struct ServerState {
+    pub ctx: SparkContext,
+    pub backend: Arc<dyn LeafBackend>,
+    pub default_b: usize,
+}
+
+/// A running server handle.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `host:port` (port 0 = ephemeral) and start accepting.
+    pub fn start(addr: &str, state: ServerState) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let state = Arc::new(state);
+        let flag = shutdown.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("stark-serve-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match stream {
+                        Ok(s) => {
+                            let st = state.clone();
+                            let fl = flag.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("stark-serve-conn".into())
+                                .spawn(move || {
+                                    let _ = handle_connection(s, &st, &fl);
+                                });
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Self { addr: local, shutdown, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Signal shutdown and unblock the accept loop.
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr); // wake the accept loop
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    state: &ServerState,
+    shutdown: &AtomicBool,
+) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match handle_request(&line, state, shutdown) {
+            Ok(v) => v,
+            Err(e) => Value::obj(vec![
+                ("ok", Value::Bool(false)),
+                ("error", Value::str(format!("{e:#}"))),
+            ]),
+        };
+        writer.write_all(response.to_json().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    let _ = peer;
+    Ok(())
+}
+
+fn parse_matrix(v: &Value) -> Result<DenseMatrix> {
+    let rows = v.as_array().context("matrix must be an array of rows")?;
+    anyhow::ensure!(!rows.is_empty(), "empty matrix");
+    let mut data = Vec::new();
+    let cols = rows[0].as_array().context("row must be an array")?.len();
+    for row in rows {
+        let row = row.as_array().context("row must be an array")?;
+        anyhow::ensure!(row.len() == cols, "ragged matrix");
+        for x in row {
+            data.push(x.as_f64().context("matrix element must be a number")?);
+        }
+    }
+    Ok(DenseMatrix::from_vec(rows.len(), cols, data))
+}
+
+fn matrix_to_json(m: &DenseMatrix) -> Value {
+    Value::Array(
+        (0..m.rows())
+            .map(|r| Value::Array((0..m.cols()).map(|c| Value::num(m.get(r, c))).collect()))
+            .collect(),
+    )
+}
+
+/// Handle one request line, producing the response document.
+pub fn handle_request(line: &str, state: &ServerState, shutdown: &AtomicBool) -> Result<Value> {
+    let req = json::parse(line).map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
+    let op = req.get("op").and_then(Value::as_str).context("missing \"op\"")?;
+    match op {
+        "ping" => Ok(Value::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("service", Value::str("stark")),
+            ("version", Value::str(env!("CARGO_PKG_VERSION"))),
+            ("backend", Value::str(state.backend.name())),
+        ])),
+        "shutdown" => {
+            shutdown.store(true, Ordering::SeqCst);
+            Ok(Value::obj(vec![("ok", Value::Bool(true)), ("stopping", Value::Bool(true))]))
+        }
+        "multiply" => {
+            let algo: Algorithm = req
+                .get("algo")
+                .and_then(Value::as_str)
+                .unwrap_or("stark")
+                .parse()
+                .map_err(anyhow::Error::msg)?;
+            let b = req.get("b").and_then(Value::as_usize).unwrap_or(state.default_b);
+            let (a, bm) = match (req.get("a"), req.get("b_mat")) {
+                (Some(a), Some(bm)) => (parse_matrix(a)?, parse_matrix(bm)?),
+                _ => {
+                    let n = req.get("n").and_then(Value::as_usize).context(
+                        "provide either inline \"a\"/\"b_mat\" or a size \"n\"",
+                    )?;
+                    let seed = req.get("seed").and_then(Value::as_u64).unwrap_or(42);
+                    (DenseMatrix::random(n, n, seed), DenseMatrix::random(n, n, seed + 1))
+                }
+            };
+            let out = algos::multiply_general(
+                algo,
+                &state.ctx,
+                state.backend.clone(),
+                &a,
+                &bm,
+                b,
+                &StarkConfig::default(),
+            );
+            let mut fields = vec![
+                ("ok", Value::Bool(true)),
+                ("algo", Value::str(algo.to_string())),
+                ("rows", Value::num(out.c.rows() as f64)),
+                ("cols", Value::num(out.c.cols() as f64)),
+                ("wall_ms", Value::num(out.job.wall_ms)),
+                ("leaf_calls", Value::num(out.leaf_calls as f64)),
+                ("leaf_ms", Value::num(out.leaf_ms)),
+                ("frobenius", Value::num(out.c.frobenius())),
+                (
+                    "shuffle_bytes",
+                    Value::num(out.job.total_shuffle_bytes() as f64),
+                ),
+            ];
+            if req.get("return_c").and_then(Value::as_bool).unwrap_or(false) {
+                fields.push(("c", matrix_to_json(&out.c)));
+            }
+            Ok(Value::obj(fields))
+        }
+        other => anyhow::bail!("unknown op {other:?}"),
+    }
+}
+
+/// Simple blocking client: send one request line, read one response.
+pub fn request(addr: &str, body: &Value) -> Result<Value> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.write_all(body.to_json().as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendKind;
+    use crate::engine::ClusterConfig;
+
+    fn test_server() -> Server {
+        let state = ServerState {
+            ctx: SparkContext::new(ClusterConfig::new(2, 1)),
+            backend: crate::config::build_backend(BackendKind::Native, 1).unwrap(),
+            default_b: 2,
+        };
+        Server::start("127.0.0.1:0", state).unwrap()
+    }
+
+    #[test]
+    fn ping_roundtrip() {
+        let server = test_server();
+        let resp = request(&server.addr().to_string(), &Value::obj(vec![("op", Value::str("ping"))]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(resp.get("service").unwrap().as_str(), Some("stark"));
+    }
+
+    #[test]
+    fn multiply_by_seed() {
+        let server = test_server();
+        let resp = request(
+            &server.addr().to_string(),
+            &Value::obj(vec![
+                ("op", Value::str("multiply")),
+                ("algo", Value::str("stark")),
+                ("n", Value::num(32.0)),
+                ("b", Value::num(4.0)),
+                ("seed", Value::num(7.0)),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("leaf_calls").unwrap().as_u64(), Some(49));
+        // Frobenius must match a local computation of the same workload.
+        let a = DenseMatrix::random(32, 32, 7);
+        let b = DenseMatrix::random(32, 32, 8);
+        let want = crate::matrix::matmul_blocked(&a, &b).frobenius();
+        let got = resp.get("frobenius").unwrap().as_f64().unwrap();
+        assert!((want - got).abs() < 1e-9, "{want} vs {got}");
+    }
+
+    #[test]
+    fn multiply_inline_matrices_returns_product() {
+        let server = test_server();
+        let resp = request(
+            &server.addr().to_string(),
+            &Value::obj(vec![
+                ("op", Value::str("multiply")),
+                ("algo", Value::str("marlin")),
+                ("b", Value::num(2.0)),
+                (
+                    "a",
+                    json::parse("[[1,2],[3,4]]").unwrap(),
+                ),
+                ("b_mat", json::parse("[[1,0],[0,1]]").unwrap()),
+                ("return_c", Value::Bool(true)),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+        let c = resp.get("c").unwrap();
+        assert_eq!(c.to_json(), "[[1,2],[3,4]]");
+    }
+
+    #[test]
+    fn bad_requests_get_error_responses() {
+        let server = test_server();
+        let addr = server.addr().to_string();
+        let resp = request(&addr, &Value::obj(vec![("op", Value::str("nonsense"))])).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
+        let resp = request(&addr, &Value::obj(vec![("op", Value::str("multiply"))])).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("\"n\""));
+    }
+
+    #[test]
+    fn shutdown_stops_server() {
+        let mut server = test_server();
+        let addr = server.addr().to_string();
+        let resp = request(&addr, &Value::obj(vec![("op", Value::str("shutdown"))])).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)));
+        server.stop();
+        // Further connections may connect (OS backlog) but the accept
+        // loop is gone; just assert stop() returned.
+    }
+
+    #[test]
+    fn rectangular_inline_multiply() {
+        let server = test_server();
+        let resp = request(
+            &server.addr().to_string(),
+            &Value::obj(vec![
+                ("op", Value::str("multiply")),
+                ("b", Value::num(2.0)),
+                ("a", json::parse("[[1,2,3],[4,5,6]]").unwrap()),
+                ("b_mat", json::parse("[[1],[1],[1]]").unwrap()),
+                ("return_c", Value::Bool(true)),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("c").unwrap().to_json(), "[[6],[15]]");
+    }
+}

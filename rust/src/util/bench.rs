@@ -1,0 +1,138 @@
+//! Micro-benchmark harness used by every `rust/benches/*` target
+//! (criterion is unavailable offline; this provides the subset we need:
+//! warmup, fixed or time-budgeted iteration, robust summary statistics).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub median_ms: f64,
+    pub stddev_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl BenchResult {
+    fn from_samples(name: &str, mut ms: Vec<f64>) -> Self {
+        ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ms.len().max(1);
+        let mean = ms.iter().sum::<f64>() / n as f64;
+        let var = ms.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let median = if ms.is_empty() {
+            0.0
+        } else if n % 2 == 1 {
+            ms[n / 2]
+        } else {
+            (ms[n / 2 - 1] + ms[n / 2]) / 2.0
+        };
+        Self {
+            name: name.to_string(),
+            iters: ms.len(),
+            mean_ms: mean,
+            median_ms: median,
+            stddev_ms: var.sqrt(),
+            min_ms: ms.first().copied().unwrap_or(0.0),
+            max_ms: ms.last().copied().unwrap_or(0.0),
+        }
+    }
+
+    /// One-line human-readable summary.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10.2} ms/iter (median {:>8.2}, ±{:>7.2}, {} iters)",
+            self.name, self.mean_ms, self.median_ms, self.stddev_ms, self.iters
+        )
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    BenchResult::from_samples(name, samples)
+}
+
+/// Run `f` repeatedly until `budget` elapses (at least `min_iters`).
+pub fn bench_budget<F: FnMut()>(
+    name: &str,
+    budget: Duration,
+    min_iters: usize,
+    mut f: F,
+) -> BenchResult {
+    // One warmup call, then measure until the budget runs out.
+    f();
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < min_iters || start.elapsed() < budget {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    BenchResult::from_samples(name, samples)
+}
+
+/// Prevent the optimizer from discarding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a standard bench header (matches the `line()` layout).
+pub fn print_header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>10}         ({:>8}  {:>8})",
+        "benchmark", "mean", "median", "stddev"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_requested_iters() {
+        let r = bench("noop", 1, 5, || {
+            black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.min_ms <= r.median_ms && r.median_ms <= r.max_ms);
+    }
+
+    #[test]
+    fn bench_budget_respects_min_iters() {
+        let r = bench_budget("noop", Duration::from_millis(1), 3, || {
+            black_box(0u8);
+        });
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn stats_are_sane() {
+        let r = BenchResult::from_samples("s", vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((r.mean_ms - 2.5).abs() < 1e-12);
+        assert!((r.median_ms - 2.5).abs() < 1e-12);
+        assert_eq!(r.min_ms, 1.0);
+        assert_eq!(r.max_ms, 4.0);
+    }
+
+    #[test]
+    fn odd_median() {
+        let r = BenchResult::from_samples("s", vec![3.0, 1.0, 2.0]);
+        assert_eq!(r.median_ms, 2.0);
+    }
+}

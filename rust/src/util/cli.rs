@@ -1,0 +1,177 @@
+//! Tiny command-line parser for the launcher and bench harness.
+//!
+//! Supports `subcommand --flag value --switch` style invocations:
+//! the first non-flag token is the subcommand, `--name value` pairs are
+//! options, bare `--name` tokens (followed by another flag or nothing)
+//! are boolean switches.
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token must NOT be argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Self {
+        let mut out = Args::default();
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                // `--name=value` or `--name value` or boolean `--name`.
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.subcommand.as_deref()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Boolean switch presence (`--verify`).
+    pub fn flag(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.options.contains_key(name)
+    }
+
+    /// Raw option value.
+    pub fn raw(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    /// Typed option with default; exits with a message on parse failure.
+    pub fn get<T: FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => default,
+            Some(v) => match v.parse() {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("invalid value for --{name}: {v:?} ({e})");
+                    std::process::exit(2);
+                }
+            },
+        }
+    }
+
+    /// Typed optional option.
+    pub fn get_opt<T: FromStr>(&self, name: &str) -> Option<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.options.get(name).map(|v| match v.parse() {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("invalid value for --{name}: {v:?} ({e})");
+                std::process::exit(2);
+            }
+        })
+    }
+
+    /// Comma-separated list option (`--bs 2,4,8`).
+    pub fn get_list<T: FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|t| !t.trim().is_empty())
+                .map(|t| match t.trim().parse() {
+                    Ok(x) => x,
+                    Err(e) => {
+                        eprintln!("invalid list item in --{name}: {t:?} ({e})");
+                        std::process::exit(2);
+                    }
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("multiply --n 512 --b 8 --verify");
+        assert_eq!(a.subcommand(), Some("multiply"));
+        assert_eq!(a.get("n", 0usize), 512);
+        assert_eq!(a.get("b", 0usize), 8);
+        assert!(a.flag("verify"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn equals_style() {
+        let a = parse("run --n=128 --mode=fast");
+        assert_eq!(a.get("n", 0usize), 128);
+        assert_eq!(a.raw("mode"), Some("fast"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get("n", 7usize), 7);
+        assert_eq!(a.get_opt::<usize>("n"), None);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("sweep --bs 2,4,8");
+        assert_eq!(a.get_list::<usize>("bs", &[]), vec![2, 4, 8]);
+        assert_eq!(a.get_list::<usize>("other", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse("report out.json extra");
+        assert_eq!(a.subcommand(), Some("report"));
+        assert_eq!(a.positional(), &["out.json".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn switch_followed_by_flag() {
+        let a = parse("run --fused-leaf --n 4");
+        assert!(a.flag("fused-leaf"));
+        assert_eq!(a.get("n", 0usize), 4);
+    }
+}

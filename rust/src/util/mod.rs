@@ -1,0 +1,22 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is fully offline (only the `xla` crate's
+//! dependency closure is available), so the pieces a crates.io project
+//! would pull in are implemented here from scratch:
+//!
+//! - [`json`] — a small, strict JSON parser/writer (manifest files,
+//!   experiment reports, config round-tripping).
+//! - [`cli`] — a flag/subcommand argument parser for the launcher.
+//! - [`bench`] — a micro-benchmark harness (warmup + timed iterations,
+//!   mean/median/stddev) used by every `rust/benches/*` target.
+//! - [`tmp`] — RAII temporary directories for tests.
+//! - [`prop`] — a lightweight property-testing driver (seeded random
+//!   cases, failure reporting with the reproducing seed).
+//! - [`table`] — fixed-width text tables for experiment output.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod table;
+pub mod tmp;

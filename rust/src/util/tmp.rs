@@ -1,0 +1,67 @@
+//! RAII temporary directories for tests (offline replacement for the
+//! `tempfile` crate).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A directory removed (recursively) on drop.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create a fresh unique directory under the system temp dir.
+    pub fn new(prefix: &str) -> std::io::Result<Self> {
+        let nonce = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let pid = std::process::id();
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos())
+            .unwrap_or(0);
+        let path = std::env::temp_dir().join(format!("{prefix}-{pid}-{t}-{nonce}"));
+        std::fs::create_dir_all(&path)?;
+        Ok(Self { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Join a file name onto the temp path.
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_and_cleans_up() {
+        let kept_path;
+        {
+            let t = TempDir::new("stark-test").unwrap();
+            kept_path = t.path().to_path_buf();
+            std::fs::write(t.file("x.txt"), "hi").unwrap();
+            assert!(kept_path.exists());
+        }
+        assert!(!kept_path.exists(), "temp dir not removed");
+    }
+
+    #[test]
+    fn unique_paths() {
+        let a = TempDir::new("stark-test").unwrap();
+        let b = TempDir::new("stark-test").unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+}

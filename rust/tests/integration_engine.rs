@@ -1,0 +1,161 @@
+//! Integration: sparklet engine semantics under composition — multi-op
+//! chains, branching with cache, stage accounting across whole jobs.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use stark::engine::{ClusterConfig, FailureSpec, HashPartitioner, SparkContext};
+
+fn ctx(execs: usize, cores: usize) -> SparkContext {
+    SparkContext::new(ClusterConfig::new(execs, cores))
+}
+
+#[test]
+fn wordcount_style_pipeline() {
+    // The canonical Spark program: tokenize -> map 1 -> reduceByKey.
+    let ctx = ctx(2, 2);
+    let docs = vec![
+        "the quick brown fox".to_string(),
+        "the lazy dog".to_string(),
+        "the quick dog jumps".to_string(),
+    ];
+    let counts: BTreeMap<String, u64> = ctx
+        .parallelize(docs, 2)
+        .flat_map(|line| line.split(' ').map(String::from).collect::<Vec<_>>())
+        .map(|w| (w, 1u64))
+        .reduce_by_key("wc", 4, |a, b| a + b)
+        .collect("c")
+        .into_iter()
+        .collect();
+    assert_eq!(counts["the"], 3);
+    assert_eq!(counts["quick"], 2);
+    assert_eq!(counts["dog"], 2);
+    assert_eq!(counts["fox"], 1);
+    // the, quick, brown, fox, lazy, dog, jumps
+    assert_eq!(counts.len(), 7);
+}
+
+#[test]
+fn chained_shuffles() {
+    // groupByKey -> re-key -> reduceByKey -> join, across 3 shuffles.
+    let ctx = ctx(2, 2);
+    let pairs: Vec<(u32, u32)> = (0..60).map(|i| (i % 6, i)).collect();
+    let grouped = ctx.parallelize(pairs, 5).group_by_key("s1", 3);
+    let sums = grouped
+        .map(|(k, vs)| (k % 2, vs.into_iter().map(u64::from).sum::<u64>()))
+        .reduce_by_key("s2", 2, |a, b| a + b);
+    let labels = ctx.parallelize(vec![(0u32, "even"), (1u32, "odd")], 1);
+    let mut joined = sums.join("s3", &labels, 2).collect("c");
+    joined.sort();
+    // Σ 0..60 = 1770; keys 0,2,4 (k%2==0) hold i with i%6 ∈ {0,2,4}.
+    let even: u64 = (0..60).filter(|i| (i % 6) % 2 == 0).sum::<u64>().into();
+    let odd: u64 = (0..60).filter(|i| (i % 6) % 2 == 1).sum::<u64>().into();
+    assert_eq!(joined, vec![(0, (even, "even")), (1, (odd, "odd"))]);
+}
+
+#[test]
+fn branching_with_cache_runs_once_per_branch() {
+    let ctx = ctx(2, 1);
+    ctx.begin_job("branching");
+    let base = ctx.parallelize((0u64..100).collect(), 4).map(|x| x * 3).cache("materialize");
+    let s1: u64 = base.map(|x| x).collect("branch1").iter().sum();
+    let s2 = base.filter(|x| x % 2 == 0).count("branch2");
+    assert_eq!(s1, 3 * 99 * 100 / 2);
+    assert_eq!(s2, 50);
+    let stages = ctx.metrics().current_stages();
+    assert_eq!(stages.len(), 3, "{:?}", stages.iter().map(|s| &s.label).collect::<Vec<_>>());
+}
+
+#[test]
+fn stage_metrics_accumulate_comp_and_shuffle() {
+    let ctx = ctx(2, 2);
+    ctx.begin_job("metrics");
+    let pairs: Vec<(u32, Vec<f64>)> = (0..16).map(|i| (i % 4, vec![1.0; 100])).collect();
+    ctx.parallelize(pairs, 4).group_by_key("shuffle", 4).collect("gather");
+    let job = ctx.end_job().unwrap();
+    assert_eq!(job.stages.len(), 2);
+    let shuffle = &job.stages[0];
+    assert_eq!(shuffle.label, "shuffle");
+    assert_eq!(shuffle.records_out, 16);
+    assert_eq!(shuffle.shuffle_bytes, 16 * (4 + 800));
+    assert!(shuffle.pf <= 4);
+    let gather = &job.stages[1];
+    assert_eq!(gather.shuffle_bytes, 0);
+}
+
+#[test]
+fn empty_and_single_element_datasets() {
+    let ctx = ctx(2, 2);
+    let empty: Vec<u64> = vec![];
+    let d = ctx.parallelize(empty, 3);
+    assert_eq!(d.collect("c").len(), 0);
+    assert_eq!(d.count("n"), 0);
+    let single = ctx.parallelize(vec![(1u32, 2u64)], 4);
+    let grouped = single.group_by_key("g", 2).collect("c");
+    assert_eq!(grouped, vec![(1, vec![2])]);
+}
+
+#[test]
+fn skewed_keys_all_land_together() {
+    // All records share one key: one group holds everything.
+    let ctx = ctx(3, 1);
+    let pairs: Vec<(u8, u64)> = (0..500).map(|i| (7u8, i)).collect();
+    let grouped = ctx.parallelize(pairs, 10).group_by_key("skew", 5).collect("c");
+    assert_eq!(grouped.len(), 1);
+    assert_eq!(grouped[0].1.len(), 500);
+}
+
+#[test]
+fn partition_by_respects_partitioner() {
+    let ctx = ctx(2, 2);
+    let pairs: Vec<(u64, u64)> = (0..64).map(|i| (i, i)).collect();
+    let part = Arc::new(HashPartitioner::new(8));
+    let d = ctx.parallelize(pairs, 4).partition_by("pb", part.clone());
+    assert_eq!(d.num_partitions(), 8);
+    // After partition_by, map_partitions sees co-partitioned keys.
+    let ok = d
+        .map_partitions(move |records| {
+            let parts: std::collections::HashSet<usize> = records
+                .iter()
+                .map(|(k, _)| {
+                    use stark::engine::Partitioner;
+                    part.partition(k)
+                })
+                .collect();
+            vec![parts.len() <= 1]
+        })
+        .collect("check");
+    assert!(ok.into_iter().all(|x| x));
+}
+
+#[test]
+fn retry_preserves_exactly_once_output() {
+    let mut cc = ClusterConfig::new(2, 2);
+    cc.failure = Some(FailureSpec { stage_contains: "wc".to_string(), partition: 1 });
+    let ctx = SparkContext::new(cc);
+    let pairs: Vec<(u32, u64)> = (0..100).map(|i| (i % 10, 1)).collect();
+    let mut out = ctx.parallelize(pairs, 4).reduce_by_key("wc", 4, |a, b| a + b).collect("c");
+    out.sort();
+    // No duplicated or lost contributions despite the retried task.
+    assert_eq!(out, (0..10).map(|k| (k, 10u64)).collect::<Vec<_>>());
+}
+
+#[test]
+fn union_then_shuffle() {
+    let ctx = ctx(2, 2);
+    let a = ctx.parallelize((0u32..10).map(|i| (i % 2, 1u64)).collect::<Vec<_>>(), 2);
+    let b = ctx.parallelize((0u32..10).map(|i| (i % 2, 10u64)).collect::<Vec<_>>(), 3);
+    let mut out = a.union(&b).reduce_by_key("u", 2, |x, y| x + y).collect("c");
+    out.sort();
+    assert_eq!(out, vec![(0, 55), (1, 55)]);
+}
+
+#[test]
+fn large_fan_out_flat_map() {
+    let ctx = ctx(2, 2);
+    let d = ctx.parallelize((0u64..32).collect(), 4);
+    let expanded = d.flat_map(|x| (0..x % 5).map(|j| x * 100 + j).collect::<Vec<_>>());
+    let total: usize = expanded.count("c");
+    let want: usize = (0..32).map(|x| (x % 5) as usize).sum();
+    assert_eq!(total, want);
+}

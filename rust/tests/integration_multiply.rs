@@ -1,0 +1,177 @@
+//! Integration: the three distributed algorithms against the single-node
+//! reference across a grid of (n, b, cluster shape) — the core
+//! correctness contract of the coordinator.
+
+use std::sync::Arc;
+
+use stark::algos::{marlin, mllib, stark as stark_algo, Algorithm, StarkConfig};
+use stark::engine::{ClusterConfig, FailureSpec, SparkContext};
+use stark::matrix::{matmul_parallel, DenseMatrix};
+use stark::runtime::NativeBackend;
+
+fn reference(n: usize, seed: u64) -> (DenseMatrix, DenseMatrix, DenseMatrix) {
+    let a = DenseMatrix::random(n, n, seed);
+    let b = DenseMatrix::random(n, n, seed + 1);
+    let c = matmul_parallel(&a, &b, 4);
+    (a, b, c)
+}
+
+#[test]
+fn all_algorithms_agree_with_reference_across_grid() {
+    for (n, bs) in [(64usize, vec![1usize, 2, 4, 8]), (128, vec![2, 8, 16])] {
+        let (a, b, want) = reference(n, n as u64);
+        for &bb in &bs {
+            for (execs, cores) in [(1usize, 1usize), (2, 2), (3, 1)] {
+                let ctx = SparkContext::new(ClusterConfig::new(execs, cores));
+                let backend = Arc::new(NativeBackend);
+                let cfg = StarkConfig::default();
+                let s = stark_algo::multiply(&ctx, backend.clone(), &a, &b, bb, &cfg);
+                assert!(
+                    want.allclose(&s.c, 1e-9),
+                    "stark n={n} b={bb} cluster={execs}x{cores}: Δ={}",
+                    want.max_abs_diff(&s.c)
+                );
+                let m = marlin::multiply(&ctx, backend.clone(), &a, &b, bb, false);
+                assert!(want.allclose(&m.c, 1e-9), "marlin n={n} b={bb}");
+                let l = mllib::multiply(&ctx, backend.clone(), &a, &b, bb, false);
+                assert!(want.allclose(&l.c, 1e-9), "mllib n={n} b={bb}");
+            }
+        }
+    }
+}
+
+#[test]
+fn executor_count_does_not_change_results() {
+    let (a, b, _) = reference(64, 7);
+    let mut results = Vec::new();
+    for execs in [1usize, 2, 4, 8] {
+        let ctx = SparkContext::new(ClusterConfig::new(execs, 1));
+        let out =
+            stark_algo::multiply(&ctx, Arc::new(NativeBackend), &a, &b, 4, &StarkConfig::default());
+        results.push(out.c);
+    }
+    // Partitioning changes FP summation order (as on real Spark), so
+    // demand agreement to within a few ulps, not bitwise equality.
+    for r in &results[1..] {
+        assert!(
+            results[0].max_abs_diff(r) < 1e-12,
+            "results differ across executor counts: {}",
+            results[0].max_abs_diff(r)
+        );
+    }
+}
+
+#[test]
+fn fused_leaf_is_bit_identical_in_structure() {
+    let (a, b, want) = reference(64, 9);
+    let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+    for b_parts in [2usize, 4, 8] {
+        let cfg = StarkConfig { fused_leaf: true, ..Default::default() };
+        let out = stark_algo::multiply(&ctx, Arc::new(NativeBackend), &a, &b, b_parts, &cfg);
+        assert!(want.allclose(&out.c, 1e-9), "fused b={b_parts}");
+    }
+}
+
+#[test]
+fn leaf_call_law_stark_vs_baselines() {
+    let (a, b, _) = reference(64, 11);
+    let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+    let backend = Arc::new(NativeBackend);
+    for (bb, stark_want, cube) in [(2usize, 7u64, 8u64), (4, 49, 64), (8, 343, 512)] {
+        let s = stark_algo::multiply(&ctx, backend.clone(), &a, &b, bb, &StarkConfig::default());
+        assert_eq!(s.leaf_calls, stark_want);
+        let m = marlin::multiply(&ctx, backend.clone(), &a, &b, bb, false);
+        assert_eq!(m.leaf_calls, cube);
+        let l = mllib::multiply(&ctx, backend.clone(), &a, &b, bb, false);
+        assert_eq!(l.leaf_calls, cube);
+    }
+}
+
+#[test]
+fn failure_injection_in_every_stark_phase_recovers() {
+    let (a, b, want) = reference(64, 13);
+    for phase in ["divide", "multiply", "combine", "result"] {
+        let mut cc = ClusterConfig::new(2, 2);
+        cc.failure = Some(FailureSpec { stage_contains: phase.to_string(), partition: 0 });
+        let ctx = SparkContext::new(cc);
+        let out =
+            stark_algo::multiply(&ctx, Arc::new(NativeBackend), &a, &b, 4, &StarkConfig::default());
+        let retries: u32 = out.job.stages.iter().map(|s| s.retries).sum();
+        assert_eq!(retries, 1, "phase {phase}: no retry recorded");
+        assert!(want.allclose(&out.c, 1e-9), "phase {phase}: wrong result after recovery");
+    }
+}
+
+#[test]
+fn failure_injection_in_baselines_recovers() {
+    let (a, b, want) = reference(64, 17);
+    for phase in ["stage3", "stage4"] {
+        let mut cc = ClusterConfig::new(2, 2);
+        cc.failure = Some(FailureSpec { stage_contains: phase.to_string(), partition: 0 });
+        let ctx = SparkContext::new(cc);
+        let backend = Arc::new(NativeBackend);
+        let m = marlin::multiply(&ctx, backend.clone(), &a, &b, 4, false);
+        assert!(want.allclose(&m.c, 1e-9), "marlin {phase}");
+        ctx.cluster().rearm_failure();
+        let l = mllib::multiply(&ctx, backend, &a, &b, 4, false);
+        assert!(want.allclose(&l.c, 1e-9), "mllib {phase}");
+    }
+}
+
+#[test]
+fn special_matrices() {
+    let n = 32;
+    let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+    let backend = Arc::new(NativeBackend);
+    let cfg = StarkConfig::default();
+    let i = DenseMatrix::identity(n);
+    let z = DenseMatrix::zeros(n, n);
+    let r = DenseMatrix::random(n, n, 21);
+
+    let out = stark_algo::multiply(&ctx, backend.clone(), &i, &r, 4, &cfg);
+    assert!(out.c.allclose(&r, 1e-12), "I @ R != R");
+    let out = stark_algo::multiply(&ctx, backend.clone(), &r, &z, 4, &cfg);
+    assert!(out.c.allclose(&z, 0.0), "R @ 0 != 0");
+    // Permutation-ish: reversal matrix.
+    let p = DenseMatrix::from_fn(n, n, |r_, c| if c == n - 1 - r_ { 1.0 } else { 0.0 });
+    let out = stark_algo::multiply(&ctx, backend, &p, &r, 4, &cfg);
+    let want = DenseMatrix::from_fn(n, n, |r_, c| r.get(n - 1 - r_, c));
+    assert!(out.c.allclose(&want, 1e-12), "row reversal wrong");
+}
+
+#[test]
+fn metrics_are_recorded_per_job() {
+    let (a, b, _) = reference(64, 23);
+    let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+    let s = stark_algo::multiply(&ctx, Arc::new(NativeBackend), &a, &b, 4, &StarkConfig::default());
+    assert_eq!(s.job.stages.len(), stark_algo::predicted_stages(4));
+    assert!(s.job.wall_ms > 0.0);
+    assert!(s.job.total_shuffle_bytes() > 0);
+    assert!(s.job.phase_ms("divide") >= 0.0);
+    // Phases appear in execution order: divide before multiply before combine.
+    let phases: Vec<String> = s.job.phase_wall_ms().into_iter().map(|(p, _)| p).collect();
+    let pos = |name: &str| phases.iter().position(|p| p == name).unwrap();
+    assert!(pos("divide") < pos("multiply"));
+    assert!(pos("multiply") < pos("combine"));
+}
+
+#[test]
+fn algorithm_enum_roundtrip() {
+    for algo in Algorithm::ALL {
+        let parsed: Algorithm = algo.to_string().parse().unwrap();
+        assert_eq!(parsed, algo);
+    }
+    assert!("nonsense".parse::<Algorithm>().is_err());
+}
+
+#[test]
+fn isolate_multiply_does_not_change_numbers() {
+    let (a, b, want) = reference(64, 29);
+    let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+    let backend = Arc::new(NativeBackend);
+    for algo in Algorithm::ALL {
+        let cfg = StarkConfig { isolate_multiply: true, ..Default::default() };
+        let out = stark::algos::common::run(algo, &ctx, backend.clone(), &a, &b, 4, &cfg);
+        assert!(want.allclose(&out.c, 1e-9), "{algo} isolate_multiply");
+    }
+}

@@ -1,0 +1,264 @@
+//! Property-based tests on coordinator invariants (DESIGN.md §7):
+//! routing, tag algebra, batching/partitioning, product correctness for
+//! arbitrary inputs and split depths, shuffle accounting consistency.
+//!
+//! Uses the in-repo property driver (`stark::util::prop`); failures
+//! report a reproducing seed.
+
+use std::sync::Arc;
+
+use stark::algos::{marlin, mllib, stark as stark_algo, StarkConfig};
+use stark::engine::{Block, ClusterConfig, Side, SparkContext, Tag};
+use stark::matrix::{matmul_blocked, DenseMatrix, Rng64};
+use stark::runtime::NativeBackend;
+use stark::util::prop::{assert_prop, Draw};
+
+fn random_matrix(rng: &mut Rng64, n: usize) -> DenseMatrix {
+    let seed = rng.next_u64();
+    DenseMatrix::random(n, n, seed)
+}
+
+#[test]
+fn prop_stark_matches_reference_for_arbitrary_inputs() {
+    assert_prop("stark == naive", 0xA11CE, 25, |rng| {
+        let n = rng.pow2(8, 64);
+        let b = rng.pow2(1, n.min(16));
+        let a = random_matrix(rng, n);
+        let bm = random_matrix(rng, n);
+        let ctx = SparkContext::new(ClusterConfig::new(rng.range(1, 4), rng.range(1, 3)));
+        let cfg = StarkConfig {
+            fused_leaf: rng.next_f64() < 0.5,
+            isolate_multiply: rng.next_f64() < 0.5,
+        };
+        let out = stark_algo::multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, &cfg);
+        let want = matmul_blocked(&a, &bm);
+        let diff = want.max_abs_diff(&out.c);
+        if diff < 1e-8 {
+            Ok(())
+        } else {
+            Err(format!("n={n} b={b}: diff {diff}"))
+        }
+    });
+}
+
+#[test]
+fn prop_baselines_match_reference() {
+    assert_prop("marlin/mllib == naive", 0xB0B, 20, |rng| {
+        let n = rng.pow2(8, 64);
+        let divisors: Vec<usize> = (1..=n.min(16)).filter(|d| n % d == 0).collect();
+        let b = *rng.choice(&divisors);
+        let a = random_matrix(rng, n);
+        let bm = random_matrix(rng, n);
+        let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+        let want = matmul_blocked(&a, &bm);
+        let m = marlin::multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, false);
+        if want.max_abs_diff(&m.c) > 1e-8 {
+            return Err(format!("marlin n={n} b={b}"));
+        }
+        let l = mllib::multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, false);
+        if want.max_abs_diff(&l.c) > 1e-8 {
+            return Err(format!("mllib n={n} b={b}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_three_agree_pairwise() {
+    assert_prop("pairwise agreement", 0xCAFE, 15, |rng| {
+        let n = rng.pow2(16, 64);
+        let b = rng.pow2(2, 8);
+        let a = random_matrix(rng, n);
+        let bm = random_matrix(rng, n);
+        let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+        let be = Arc::new(NativeBackend);
+        let s = stark_algo::multiply(&ctx, be.clone(), &a, &bm, b, &StarkConfig::default());
+        let m = marlin::multiply(&ctx, be.clone(), &a, &bm, b, false);
+        let l = mllib::multiply(&ctx, be, &a, &bm, b, false);
+        let d1 = s.c.max_abs_diff(&m.c);
+        let d2 = m.c.max_abs_diff(&l.c);
+        if d1 < 1e-8 && d2 < 1e-8 {
+            Ok(())
+        } else {
+            Err(format!("n={n} b={b}: stark-marlin {d1}, marlin-mllib {d2}"))
+        }
+    });
+}
+
+#[test]
+fn prop_tag_child_parent_inverse() {
+    assert_prop("tag tree inverse", 0x7A6, 200, |rng| {
+        let side = *rng.choice(&[Side::A, Side::B, Side::M]);
+        let mut tag = Tag::root(side);
+        let depth = rng.range(1, 8);
+        let mut path = Vec::new();
+        for _ in 0..depth {
+            let m = rng.next_below(7);
+            path.push(m);
+            tag = tag.child(m);
+        }
+        // Walking parents recovers the path in reverse.
+        for want_m in path.iter().rev() {
+            let (parent, m) = tag.parent();
+            if m != *want_m {
+                return Err(format!("expected child {want_m}, got {m}"));
+            }
+            tag = parent;
+        }
+        if tag != Tag::root(side) {
+            return Err("did not return to root".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mindex_unique_per_level() {
+    assert_prop("mindex uniqueness", 0x51D, 50, |rng| {
+        let depth = rng.range(1, 5) as u32;
+        let count = 7usize.pow(depth);
+        let mut seen = std::collections::HashSet::new();
+        // Enumerate all paths of `depth` levels; mindex must be a bijection
+        // onto [0, 7^depth).
+        fn walk(
+            tag: Tag,
+            depth: u32,
+            seen: &mut std::collections::HashSet<u64>,
+        ) -> Result<(), String> {
+            if depth == 0 {
+                if !seen.insert(tag.mindex) {
+                    return Err(format!("duplicate mindex {}", tag.mindex));
+                }
+                return Ok(());
+            }
+            for m in 0..7 {
+                walk(tag.child(m), depth - 1, seen)?;
+            }
+            Ok(())
+        }
+        walk(Tag::root(Side::M), depth, &mut seen)?;
+        if seen.len() != count {
+            return Err(format!("{} unique mindexes, want {count}", seen.len()));
+        }
+        if seen.iter().max().copied().unwrap_or(0) != count as u64 - 1 {
+            return Err("mindex range is not dense".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quadrant_routing_partitions_grid() {
+    assert_prop("quadrant routing", 0x961D, 100, |rng| {
+        let grid = rng.pow2(2, 32) as u32;
+        let half = grid / 2;
+        let mut counts = [[0u32; 2]; 2];
+        for r in 0..grid {
+            for c in 0..grid {
+                let blk = Block::new(
+                    r,
+                    c,
+                    Tag::root(Side::A),
+                    Arc::new(DenseMatrix::zeros(1, 1)),
+                );
+                let (qr, qc, rr, cc) = blk.quadrant_of(grid);
+                if qr > 1 || qc > 1 || rr >= half || cc >= half {
+                    return Err(format!("out of range at ({r},{c})"));
+                }
+                // Invertible: quadrant offset + local coords reproduce (r, c).
+                if qr * half + rr != r || qc * half + cc != c {
+                    return Err(format!("not invertible at ({r},{c})"));
+                }
+                counts[qr as usize][qc as usize] += 1;
+            }
+        }
+        let want = half * half;
+        if counts.iter().flatten().any(|&c| c != want) {
+            return Err(format!("quadrants not balanced: {counts:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_leaf_call_counts() {
+    assert_prop("leaf call law", 0x1EAF, 12, |rng| {
+        let n = rng.pow2(16, 64);
+        let b = rng.pow2(1, 8);
+        let a = random_matrix(rng, n);
+        let bm = random_matrix(rng, n);
+        let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+        let be = Arc::new(NativeBackend);
+        let s = stark_algo::multiply(&ctx, be.clone(), &a, &bm, b, &StarkConfig::default());
+        let m = marlin::multiply(&ctx, be, &a, &bm, b, false);
+        let levels = (b as f64).log2().round() as u32;
+        if s.leaf_calls != 7u64.pow(levels) {
+            return Err(format!("stark {} != 7^{levels}", s.leaf_calls));
+        }
+        if m.leaf_calls != (b * b * b) as u64 {
+            return Err(format!("marlin {} != {b}^3", m.leaf_calls));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shuffle_accounting_scales_with_payload() {
+    assert_prop("shuffle accounting", 0xACC7, 10, |rng| {
+        let n = rng.pow2(16, 32);
+        let b = 2usize;
+        let a = random_matrix(rng, n);
+        let bm = random_matrix(rng, n);
+        let run = |mat_a: &DenseMatrix, mat_b: &DenseMatrix| {
+            let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+            stark_algo::multiply(
+                &ctx,
+                Arc::new(NativeBackend),
+                mat_a,
+                mat_b,
+                b,
+                &StarkConfig::default(),
+            )
+            .job
+            .total_shuffle_bytes()
+        };
+        let small = run(&a, &bm);
+        // Doubling n quadruples every block payload; shuffle bytes must
+        // grow by ~4x (tag overhead makes it slightly less).
+        let a2 = DenseMatrix::random(2 * n, 2 * n, rng.next_u64());
+        let b2 = DenseMatrix::random(2 * n, 2 * n, rng.next_u64());
+        let big = run(&a2, &b2);
+        let ratio = big as f64 / small as f64;
+        if (3.5..=4.5).contains(&ratio) {
+            Ok(())
+        } else {
+            Err(format!("shuffle ratio {ratio} (small={small}, big={big})"))
+        }
+    });
+}
+
+#[test]
+fn prop_determinism_same_seed_same_everything() {
+    assert_prop("determinism", 0xD7D7, 8, |rng| {
+        let n = rng.pow2(16, 64);
+        let b = rng.pow2(2, 4);
+        let seed = rng.next_u64();
+        let run = || {
+            let a = DenseMatrix::random(n, n, seed);
+            let bm = DenseMatrix::random(n, n, seed + 1);
+            let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+            let out =
+                stark_algo::multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, &StarkConfig::default());
+            (out.c, out.leaf_calls, out.job.total_shuffle_bytes())
+        };
+        let (c1, l1, s1) = run();
+        let (c2, l2, s2) = run();
+        if c1.max_abs_diff(&c2) != 0.0 {
+            return Err("results differ bitwise".to_string());
+        }
+        if l1 != l2 || s1 != s2 {
+            return Err(format!("metrics differ: {l1}/{l2} {s1}/{s2}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,243 @@
+//! Property-based tests on sparklet engine semantics: every wide
+//! transformation agrees with its sequential (BTreeMap) specification on
+//! arbitrary key/value distributions, partition counts, and cluster
+//! shapes.
+
+use std::collections::BTreeMap;
+
+use stark::engine::{ClusterConfig, SparkContext};
+use stark::matrix::Rng64;
+use stark::util::prop::{assert_prop, Draw};
+
+fn random_pairs(rng: &mut Rng64, max_len: usize, key_space: u64) -> Vec<(u32, u64)> {
+    let len = rng.range(0, max_len + 1);
+    (0..len).map(|_| (rng.next_below(key_space) as u32, rng.next_below(1000))).collect()
+}
+
+fn random_ctx(rng: &mut Rng64) -> SparkContext {
+    SparkContext::new(ClusterConfig::new(rng.range(1, 5), rng.range(1, 4)))
+}
+
+#[test]
+fn prop_group_by_key_matches_spec() {
+    assert_prop("group_by_key spec", 0x6B6B, 40, |rng| {
+        let pairs = random_pairs(rng, 200, 10);
+        let ctx = random_ctx(rng);
+        let parts = rng.range(1, 9);
+        let out_parts = rng.range(1, 9);
+        let mut got: BTreeMap<u32, Vec<u64>> = ctx
+            .parallelize(pairs.clone(), parts)
+            .group_by_key("g", out_parts)
+            .collect("c")
+            .into_iter()
+            .collect();
+        got.values_mut().for_each(|v| v.sort());
+        let mut want: BTreeMap<u32, Vec<u64>> = BTreeMap::new();
+        for (k, v) in pairs {
+            want.entry(k).or_default().push(v);
+        }
+        want.values_mut().for_each(|v| v.sort());
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("group mismatch: {got:?} vs {want:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_reduce_by_key_matches_fold() {
+    assert_prop("reduce_by_key spec", 0x6B6C, 40, |rng| {
+        let pairs = random_pairs(rng, 300, 7);
+        let ctx = random_ctx(rng);
+        let got: BTreeMap<u32, u64> = ctx
+            .parallelize(pairs.clone(), rng.range(1, 7))
+            .reduce_by_key("r", rng.range(1, 7), |a, b| a + b)
+            .collect("c")
+            .into_iter()
+            .collect();
+        let mut want: BTreeMap<u32, u64> = BTreeMap::new();
+        for (k, v) in pairs {
+            *want.entry(k).or_default() += v;
+        }
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("reduce mismatch: {got:?} vs {want:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_join_matches_nested_loop() {
+    assert_prop("join spec", 0x6B6D, 30, |rng| {
+        let left = random_pairs(rng, 60, 6);
+        let right = random_pairs(rng, 60, 6);
+        let ctx = random_ctx(rng);
+        let mut got: Vec<(u32, (u64, u64))> = ctx
+            .parallelize(left.clone(), rng.range(1, 5))
+            .join("j", &ctx.parallelize(right.clone(), rng.range(1, 5)), rng.range(1, 7))
+            .collect("c");
+        got.sort();
+        let mut want = Vec::new();
+        for (k, v) in &left {
+            for (k2, w) in &right {
+                if k == k2 {
+                    want.push((*k, (*v, *w)));
+                }
+            }
+        }
+        want.sort();
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("join mismatch: {} vs {} pairs", got.len(), want.len()))
+        }
+    });
+}
+
+#[test]
+fn prop_cogroup_matches_spec() {
+    assert_prop("cogroup spec", 0x6B6E, 30, |rng| {
+        let left = random_pairs(rng, 50, 5);
+        let right = random_pairs(rng, 50, 5);
+        let ctx = random_ctx(rng);
+        let mut got: BTreeMap<u32, (Vec<u64>, Vec<u64>)> = ctx
+            .parallelize(left.clone(), 3)
+            .cogroup("cg", &ctx.parallelize(right.clone(), 2), rng.range(1, 6))
+            .collect("c")
+            .into_iter()
+            .collect();
+        got.values_mut().for_each(|(a, b)| {
+            a.sort();
+            b.sort();
+        });
+        let mut want: BTreeMap<u32, (Vec<u64>, Vec<u64>)> = BTreeMap::new();
+        for (k, v) in left {
+            want.entry(k).or_default().0.push(v);
+        }
+        for (k, w) in right {
+            want.entry(k).or_default().1.push(w);
+        }
+        want.values_mut().for_each(|(a, b)| {
+            a.sort();
+            b.sort();
+        });
+        if got == want {
+            Ok(())
+        } else {
+            Err("cogroup mismatch".to_string())
+        }
+    });
+}
+
+#[test]
+fn prop_narrow_ops_preserve_multiset() {
+    assert_prop("narrow ops", 0x6B6F, 40, |rng| {
+        let data: Vec<u64> = (0..rng.range(0, 300)).map(|_| rng.next_below(100)).collect();
+        let ctx = random_ctx(rng);
+        let d = ctx.parallelize(data.clone(), rng.range(1, 9));
+        // map ∘ map == map of composition
+        let mut lhs = d.map(|x| x + 1).map(|x| x * 2).collect("l");
+        let mut rhs: Vec<u64> = data.iter().map(|x| (x + 1) * 2).collect();
+        lhs.sort();
+        rhs.sort();
+        if lhs != rhs {
+            return Err("map composition broken".to_string());
+        }
+        // filter keeps exactly the matching subset
+        let kept = d.filter(|x| x % 3 == 0).count("f");
+        let want = data.iter().filter(|x| *x % 3 == 0).count();
+        if kept != want {
+            return Err(format!("filter {kept} != {want}"));
+        }
+        // union cardinality
+        let u = d.union(&d).count("u");
+        if u != 2 * data.len() {
+            return Err("union cardinality broken".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_by_is_multiset_preserving_and_routed() {
+    use stark::engine::{HashPartitioner, Partitioner};
+    assert_prop("partition_by", 0x6B70, 30, |rng| {
+        let pairs = random_pairs(rng, 150, 20);
+        let ctx = random_ctx(rng);
+        let parts = rng.range(1, 10);
+        let partitioner = std::sync::Arc::new(HashPartitioner::new(parts));
+        let d = ctx.parallelize(pairs.clone(), 4).partition_by("pb", partitioner.clone());
+        if d.num_partitions() != parts {
+            return Err("wrong partition count".to_string());
+        }
+        let mut got = d.collect("c");
+        let mut want = pairs.clone();
+        got.sort();
+        want.sort();
+        if got != want {
+            return Err("multiset changed".to_string());
+        }
+        // Each partition holds only keys that route to it.
+        let flags = d
+            .map_partitions(move |records| {
+                records.iter().map(|(k, _)| partitioner.partition(k)).collect::<Vec<_>>()
+            })
+            .collect("routes");
+        // All route targets must be in range.
+        if flags.iter().any(|&p| p >= parts) {
+            return Err("route out of range".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_map_side_combine_never_changes_answer() {
+    // reduce_by_key (with combine) == group_by_key + fold (without).
+    assert_prop("combine equivalence", 0x6B71, 30, |rng| {
+        let pairs = random_pairs(rng, 200, 8);
+        let ctx = random_ctx(rng);
+        let a: BTreeMap<u32, u64> = ctx
+            .parallelize(pairs.clone(), 5)
+            .reduce_by_key("rbk", 3, |x, y| x + y)
+            .collect("c")
+            .into_iter()
+            .collect();
+        let b: BTreeMap<u32, u64> = ctx
+            .parallelize(pairs, 5)
+            .group_by_key("gbk", 3)
+            .map(|(k, vs)| (k, vs.into_iter().sum::<u64>()))
+            .collect("c")
+            .into_iter()
+            .collect();
+        if a == b {
+            Ok(())
+        } else {
+            Err("combine changed the answer".to_string())
+        }
+    });
+}
+
+#[test]
+fn prop_stage_count_is_shuffles_plus_actions() {
+    assert_prop("stage counting", 0x6B72, 20, |rng| {
+        let ctx = random_ctx(rng);
+        ctx.begin_job("count");
+        let wide_ops = rng.range(1, 4);
+        let mut d = ctx.parallelize(random_pairs(rng, 100, 5), 4);
+        for i in 0..wide_ops {
+            d = d
+                .group_by_key(&format!("w{i}"), 3)
+                .map(|(k, vs)| (k, vs.into_iter().sum::<u64>()));
+        }
+        d.collect("final");
+        let stages = ctx.metrics().current_stages().len();
+        if stages == wide_ops + 1 {
+            Ok(())
+        } else {
+            Err(format!("{stages} stages for {wide_ops} wide ops"))
+        }
+    });
+}
