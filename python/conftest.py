@@ -1,0 +1,8 @@
+"""Make the in-repo ``compile`` package importable no matter where
+pytest is invoked from (repo root via ``python -m pytest python/tests``,
+or ``python/`` directly)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))

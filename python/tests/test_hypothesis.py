@@ -7,6 +7,10 @@ Hypothesis drives the Pallas kernels over the full supported domain
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
 from hypothesis import given, settings, strategies as st
 
 from compile import kernels

@@ -95,6 +95,63 @@ fn main() -> anyhow::Result<()> {
         println!("{}", r.line());
     }
 
+    print_header("map-side signed combining vs group-by-key shuffle (stark n=512 b=8)");
+    {
+        use stark::algos::{stark as stark_algo, StarkConfig};
+        use stark::engine::{ClusterConfig, SparkContext};
+        use stark::util::table::{fmt_bytes, Table};
+        use std::sync::Arc;
+        let n = 512;
+        let b = 8;
+        let a = DenseMatrix::random(n, n, 11);
+        let bm = DenseMatrix::random(n, n, 12);
+        let run = |map_side: bool| {
+            let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+            let cfg = StarkConfig { map_side_combine: map_side, ..Default::default() };
+            stark_algo::multiply(&ctx, Arc::new(stark::runtime::NativeBackend), &a, &bm, b, &cfg)
+        };
+        let baseline = run(false);
+        let folded = run(true);
+        assert!(baseline.c.allclose(&folded.c, 1e-7), "fold changed the product");
+        let mut t =
+            Table::new(vec!["stage", "group-by-key", "fold-by-key", "reduction", "combined"]);
+        let mut all_lower = true;
+        for (base, fold) in baseline.job.stages.iter().zip(&folded.job.stages) {
+            if !(base.label.starts_with("divide/") || base.label.starts_with("combine/")) {
+                continue;
+            }
+            let ratio = base.shuffle_bytes as f64 / fold.shuffle_bytes.max(1) as f64;
+            all_lower &= fold.shuffle_bytes < base.shuffle_bytes;
+            t.row(vec![
+                base.label.clone(),
+                fmt_bytes(base.shuffle_bytes),
+                fmt_bytes(fold.shuffle_bytes),
+                format!("{ratio:.2}x"),
+                fold.combined_records.to_string(),
+            ]);
+        }
+        let (bt, ft) =
+            (baseline.job.total_shuffle_bytes(), folded.job.total_shuffle_bytes());
+        t.row(vec![
+            "TOTAL (all stages)".to_string(),
+            fmt_bytes(bt),
+            fmt_bytes(ft),
+            format!("{:.2}x", bt as f64 / ft.max(1) as f64),
+            folded.job.total_combined_records().to_string(),
+        ]);
+        t.print();
+        println!(
+            "wall: group-by-key {:.1} ms vs fold-by-key {:.1} ms — divide/combine bytes {}",
+            baseline.job.wall_ms,
+            folded.job.wall_ms,
+            if all_lower {
+                "strictly lower at every level (WIN)"
+            } else {
+                "NOT strictly lower (REGRESSION)"
+            }
+        );
+    }
+
     print_header("divide/combine signed block additions (256x256)");
     let x = DenseMatrix::random(256, 256, 9);
     let y = DenseMatrix::random(256, 256, 10);

@@ -112,6 +112,52 @@ impl LeafBackend for TimingBackend {
     }
 }
 
+/// A signed block operand/contribution as it flows through the divide
+/// and combine shuffles: logically `sign * block`.
+pub type SignedBlock = (f64, Arc<DenseMatrix>);
+
+/// Fold a signed operand into a signed accumulator — the map- and
+/// reduce-side merge of the signed fold-by-key path. Materialization is
+/// lazy: a pristine `(sign, Arc)` value that never meets a second
+/// operand keeps sharing its `Arc` (the paper's `M3 = A11 · (B12 − B22)`
+/// case never copies `A11`); the first real merge copies the payload —
+/// or takes it when uniquely owned — and later operands add in place.
+pub fn signed_merge(acc: SignedBlock, val: SignedBlock) -> SignedBlock {
+    let (sa, da) = acc;
+    let (sv, dv) = val;
+    let mut m = match Arc::try_unwrap(da) {
+        Ok(owned) => owned,
+        Err(shared) => (*shared).clone(),
+    };
+    if sa != 1.0 {
+        m = m.scale(sa);
+    }
+    m.add_assign_signed(&dv, sv);
+    (1.0, Arc::new(m))
+}
+
+/// Resolve a signed accumulator into the final block payload, keeping
+/// the Arc-reuse fast path for single-positive-operand groups.
+pub fn signed_finalize((sign, data): SignedBlock) -> Arc<DenseMatrix> {
+    if sign == 1.0 {
+        data
+    } else {
+        Arc::new(data.scale(sign))
+    }
+}
+
+/// Fold an unsigned partial-product block into an accumulator, adding in
+/// place when the accumulator is uniquely owned (Marlin's and MLLib's
+/// stage-4 summation through `fold_by_key`).
+pub fn arc_add(acc: Arc<DenseMatrix>, val: Arc<DenseMatrix>) -> Arc<DenseMatrix> {
+    let mut m = match Arc::try_unwrap(acc) {
+        Ok(owned) => owned,
+        Err(shared) => (*shared).clone(),
+    };
+    m.add_assign_signed(&val, 1.0);
+    Arc::new(m)
+}
+
 /// Split a square matrix into a `b × b` grid of root-tagged [`Block`]s and
 /// distribute them (the paper's pre-processing step: text file →
 /// `RDD<Block>`).
@@ -229,5 +275,30 @@ mod tests {
     fn validate_rejects_bad_b() {
         let m = DenseMatrix::zeros(6, 6);
         validate_inputs(&m, &m, 4);
+    }
+
+    #[test]
+    fn signed_merge_accumulates_and_finalize_reuses_arc() {
+        let a = Arc::new(DenseMatrix::random(4, 4, 1));
+        let b = Arc::new(DenseMatrix::random(4, 4, 2));
+        // (1·a) + (−1·b) then finalized.
+        let acc = signed_merge((1.0, a.clone()), (-1.0, b.clone()));
+        let out = signed_finalize(acc);
+        assert!(a.sub(&b).allclose(&out, 1e-12));
+        // A single positive operand passes through without copying.
+        let solo = signed_finalize((1.0, a.clone()));
+        assert!(Arc::ptr_eq(&solo, &a));
+        // A single negative operand is scaled (new allocation).
+        let neg = signed_finalize((-1.0, a.clone()));
+        assert!(a.scale(-1.0).allclose(&neg, 0.0));
+    }
+
+    #[test]
+    fn arc_add_sums_in_place() {
+        let a = Arc::new(DenseMatrix::random(3, 3, 5));
+        let b = Arc::new(DenseMatrix::random(3, 3, 6));
+        let c = Arc::new(DenseMatrix::random(3, 3, 7));
+        let sum = arc_add(arc_add(a.clone(), b.clone()), c.clone());
+        assert!(a.add(&b).add(&c).allclose(&sum, 1e-12));
     }
 }

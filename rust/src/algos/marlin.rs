@@ -16,7 +16,7 @@
 use std::sync::Arc;
 
 use crate::algos::common::{
-    assemble, default_parts, distribute, validate_inputs, MultiplyOutput, TimingBackend,
+    arc_add, assemble, default_parts, distribute, validate_inputs, MultiplyOutput, TimingBackend,
 };
 use crate::engine::{Side, SparkContext};
 use crate::matrix::DenseMatrix;
@@ -67,10 +67,12 @@ pub fn multiply(
         products
     };
 
-    // Stage 4: sum the b partials per product block.
+    // Stage 4: sum the b partials per product block — map-side combined
+    // through the fold path, accumulating in place instead of allocating
+    // a fresh matrix per pair.
     let reduce_parts = default_parts(b, cores);
     let summed =
-        products.reduce_by_key("stage4/reduceByKey", reduce_parts, |x, y| Arc::new(x.add(&y)));
+        products.fold_by_key("stage4/reduceByKey", reduce_parts, |v| v, arc_add, arc_add);
 
     let pairs = summed
         .collect("result/collect")

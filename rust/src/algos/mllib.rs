@@ -16,7 +16,7 @@
 use std::sync::Arc;
 
 use crate::algos::common::{
-    assemble, default_parts, distribute, validate_inputs, MultiplyOutput, TimingBackend,
+    arc_add, assemble, default_parts, distribute, validate_inputs, MultiplyOutput, TimingBackend,
 };
 use crate::engine::{GridPartitioner, Side, SparkContext, StageMetrics};
 use crate::matrix::DenseMatrix;
@@ -51,6 +51,7 @@ pub fn multiply(
         remote_bytes: sim_bytes,
         net_wait_ms: 0.0,
         records_out: (2 * b * b) as u64,
+        combined_records: 0,
         pf: 1,
         retries: 0,
     });
@@ -91,10 +92,13 @@ pub fn multiply(
     let products = if isolate_multiply { products.cache("stage3/flatMap") } else { products };
 
     // Stage 4: sum partials. (In real MLLib the grid partitioner makes
-    // this shuffle-free; the reduce here routes by the same key so the
-    // remote volume is what a co-partitioned reduce would see.)
+    // this shuffle-free; the fold here routes by the same key so the
+    // remote volume is what a co-partitioned reduce would see.) The
+    // cogroup output is grid-partitioned, so every partial of a product
+    // block already co-resides and the map-side fold collapses the sum
+    // to a single record per block.
     let summed =
-        products.reduce_by_key("stage4/reduceByKey", grid_parts, |x, y| Arc::new(x.add(&y)));
+        products.fold_by_key("stage4/reduceByKey", grid_parts, |v| v, arc_add, arc_add);
 
     let pairs = summed
         .collect("result/collect")

@@ -7,17 +7,26 @@
 //! 1. **DivNRep** (Algorithm 3): `flatMap` replicates each block into the
 //!    M-terms its quadrant participates in (4 copies of `A11`/`A22`/`B11`/
 //!    `B22`, 2 of the rest), keyed by `(child M-index, side, row', col')`;
-//!    `groupByKey` brings together the 1–2 signed operands of each output
-//!    block; a mapped add/subtract forms the 7 sub-problem operand
-//!    matrices. The `flatMap` + shuffle-write is one stage per level
+//!    a signed fold brings together the 1–2 signed operands of each
+//!    output block and forms the 7 sub-problem operand matrices. The
+//!    `flatMap` + shuffle-write is one stage per level
 //!    (`divide/L{level}`).
 //! 2. **MulBlockMat** (Algorithm 4) at `n == 1`: key by M-index, group the
 //!    `A`/`B` pair, multiply through the [`LeafBackend`] (the PJRT
 //!    artifact — the paper's Breeze/BLAS call).
 //! 3. **Combine** (Algorithm 5): each product block contributes to 1–2 C
-//!    quadrants of its parent with a sign; `groupByKey` on
-//!    `(parent M-index, row, col)` and a signed sum assemble the parent
-//!    product (`combine/L{level}`).
+//!    quadrants of its parent with a sign; a signed fold on
+//!    `(parent M-index, row, col)` assembles the parent product
+//!    (`combine/L{level}`).
+//!
+//! The signed folds run **map-side** by default
+//! ([`StarkConfig::map_side_combine`]): every shuffle routes records with
+//! an alignment partitioner to where the *next* phase groups them
+//! ([`DivideAlign`]/[`MultiplyAlign`]/[`CombineAlign`] +
+//! [`distribute_aligned`]), so `fold_by_key` collapses whole groups
+//! before the shuffle write — the group-by-key + reduce-side-sum
+//! baseline remains available for comparison (`map_side_combine: false`,
+//! measured in `benches/hotpath.rs`).
 //!
 //! Stage count: `(p−q)` divide shuffles + 1 leaf shuffle + `(p−q)` combine
 //! shuffles + the result stage = `2(p−q) + 2`, the paper's eq. (25).
@@ -31,9 +40,10 @@
 use std::sync::Arc;
 
 use crate::algos::common::{
-    assemble, distribute, validate_inputs, MultiplyOutput, TimingBackend,
+    assemble, default_parts, distribute, signed_finalize, signed_merge, validate_inputs,
+    MultiplyOutput, SignedBlock, TimingBackend,
 };
-use crate::engine::{Block, Dist, Side, SparkContext, Tag};
+use crate::engine::{det_partition, Block, Dist, Partitioner, Side, SparkContext, Tag};
 use crate::matrix::DenseMatrix;
 use crate::runtime::LeafBackend;
 
@@ -47,11 +57,17 @@ pub struct StarkConfig {
     /// VII methodology: cache leaf inputs/outputs so the multiplication
     /// cost is observable in isolation). Adds one stage.
     pub isolate_multiply: bool,
+    /// Sum signed divide/combine groups **map-side** (fold-by-key with
+    /// alignment partitioners) instead of shipping every replica through
+    /// the shuffle and summing after it. On by default; the off arm is
+    /// the group-by-key baseline kept for benchmarking the reduction
+    /// (`benches/hotpath.rs`).
+    pub map_side_combine: bool,
 }
 
 impl Default for StarkConfig {
     fn default() -> Self {
-        Self { fused_leaf: false, isolate_multiply: false }
+        Self { fused_leaf: false, isolate_multiply: false, map_side_combine: true }
     }
 }
 
@@ -64,11 +80,15 @@ fn side_code(side: Side) -> u8 {
     }
 }
 
+/// Inverse of [`side_code`]. Codes come back out of shuffle keys, so a
+/// value outside `0..=2` means the key stream is corrupt — panic with a
+/// diagnostic instead of silently mislabeling the block as a product.
 fn side_from(code: u8) -> Side {
     match code {
         0 => Side::A,
         1 => Side::B,
-        _ => Side::M,
+        2 => Side::M,
+        other => panic!("corrupt side code {other} in shuffle key (expected 0..=2)"),
     }
 }
 
@@ -116,6 +136,92 @@ fn parts_for(level: u32, cores: usize) -> usize {
     (ideal.min(4 * cores.max(1) as u64)).max(1) as usize
 }
 
+/// How the stage *after* a divide shuffle will group its records — the
+/// divide shuffle routes so each future group co-resides in one
+/// partition and the future fold can collapse it map-side.
+#[derive(Debug, Clone, Copy)]
+enum NextGrouping {
+    /// Next consumer groups by sub-problem M-index alone (the leaf
+    /// multiply or the fused leaf): co-locate each sub-problem.
+    Subproblem,
+    /// Next consumer is another divide over the grid this shuffle
+    /// emits; its groups pair quadrant partners, i.e. records sharing
+    /// `(mindex, side, row mod half, col mod half)` where `half` is the
+    /// *next* grid's half.
+    Quadrant { half: u32 },
+}
+
+/// Divide-shuffle router over keys `(mindex, side, row, col)` (see
+/// [`NextGrouping`]).
+struct DivideAlign {
+    parts: usize,
+    next: NextGrouping,
+}
+
+impl Partitioner<(u64, u8, u32, u32)> for DivideAlign {
+    fn num_partitions(&self) -> usize {
+        self.parts
+    }
+
+    fn partition(&self, key: &(u64, u8, u32, u32)) -> usize {
+        match self.next {
+            NextGrouping::Subproblem => det_partition(&key.0, self.parts),
+            NextGrouping::Quadrant { half } => {
+                det_partition(&(key.0, key.1, key.2 % half, key.3 % half), self.parts)
+            }
+        }
+    }
+}
+
+/// Leaf-shuffle router over M-index keys: grouping a parent's seven
+/// products together lets the following combine fold map-side. Falls
+/// back to per-M-index hashing when parent-level placement would choke
+/// leaf parallelism below the core count (shallow recursions).
+struct MultiplyAlign {
+    parts: usize,
+    by_parent: bool,
+}
+
+impl Partitioner<u64> for MultiplyAlign {
+    fn num_partitions(&self) -> usize {
+        self.parts
+    }
+
+    fn partition(&self, key: &u64) -> usize {
+        if self.by_parent {
+            det_partition(&(key / 7), self.parts)
+        } else {
+            det_partition(key, self.parts)
+        }
+    }
+}
+
+/// Whether the leaf/fused-leaf shuffle at `level` should co-locate by
+/// parent: only when enough distinct parents exist to keep every core
+/// busy (`7^{level-1} >= cores`).
+fn align_multiply_by_parent(level: u32, cores: usize) -> bool {
+    level >= 1 && 7u64.saturating_pow(level - 1) >= cores.max(1) as u64
+}
+
+/// Combine-shuffle router over keys `(parent mindex, row, col)`: the
+/// contributions to one *next-level* C-position all come from sibling
+/// products at the same in-quadrant position, so routing by
+/// `(grandparent, row, col)` co-locates them without collapsing the
+/// positional parallelism.
+struct CombineAlign {
+    parts: usize,
+}
+
+impl Partitioner<(u64, u32, u32)> for CombineAlign {
+    fn num_partitions(&self) -> usize {
+        self.parts
+    }
+
+    fn partition(&self, key: &(u64, u32, u32)) -> usize {
+        det_partition(&(key.0 / 7, key.1, key.2), self.parts)
+    }
+}
+
 /// Sum `sign * block` over a divide/combine group. Single positive
 /// operands reuse the Arc (no copy — the paper's `M3 = A11 · (...)` case).
 fn signed_sum(vals: Vec<(f64, Arc<DenseMatrix>)>) -> Arc<DenseMatrix> {
@@ -148,7 +254,11 @@ fn dist_strassen(
     // Boundary condition (Algorithm 4): single-block sub-matrices.
     if n == 1 {
         let pairs = input.map(|blk| (blk.tag.mindex, blk));
-        let grouped = pairs.group_by_key("multiply/groupByKey", parts);
+        let by_parent = cfg.map_side_combine && align_multiply_by_parent(level, cores);
+        let grouped = pairs.group_by_key_with(
+            "multiply/groupByKey",
+            Arc::new(MultiplyAlign { parts, by_parent }),
+        );
         let be = backend.clone();
         let products = grouped.map(move |(mindex, blocks)| {
             let a = blocks.iter().find(|b| b.tag.side == Side::A).expect("missing A leaf");
@@ -163,7 +273,11 @@ fn dist_strassen(
     // of each sub-problem to the fused one-level Strassen artifact.
     if n == 2 && cfg.fused_leaf {
         let pairs = input.map(|blk| (blk.tag.mindex, blk));
-        let grouped = pairs.group_by_key("multiply/fusedLeaf", parts);
+        let by_parent = cfg.map_side_combine && align_multiply_by_parent(level, cores);
+        let grouped = pairs.group_by_key_with(
+            "multiply/fusedLeaf",
+            Arc::new(MultiplyAlign { parts, by_parent }),
+        );
         let be = backend.clone();
         let products = grouped.flat_map(move |(mindex, blocks)| {
             let mut quads: [Option<Arc<DenseMatrix>>; 8] = Default::default();
@@ -189,18 +303,36 @@ fn dist_strassen(
         return if cfg.isolate_multiply { products.cache("multiply/compute") } else { products };
     }
 
-    // DivNRep (Algorithm 3).
-    let divided = div_n_rep(&input, n, level, parts);
+    // DivNRep (Algorithm 3). The divide shuffle routes each record to
+    // where the *next* phase will group it, so the next fold combines
+    // whole groups map-side.
+    let g = n / 2;
+    let next = if g == 1 || (g == 2 && cfg.fused_leaf) {
+        NextGrouping::Subproblem
+    } else {
+        NextGrouping::Quadrant { half: (g / 2).max(1) }
+    };
+    let divided = div_n_rep(&input, n, level, parts, next, cfg.map_side_combine);
     // Recurse on the 7 sub-problems (all live in one Dist, distinguished
     // by M-index — the paper's "distributed tail recursion").
     let product = dist_strassen(ctx, backend, divided, n / 2, level + 1, cfg);
     // Combine (Algorithm 5) back to this level's grid.
-    combine(&product, n / 2, level, parts)
+    combine(&product, n / 2, level, parts, cfg.map_side_combine)
 }
 
 /// Algorithm 3: replicate quadrants into their M-terms and form the 14
-/// operand sub-matrices via a signed grouped add.
-fn div_n_rep(input: &Dist<Block>, n: u32, level: u32, parts: usize) -> Dist<Block> {
+/// operand sub-matrices via a signed add — applied **map-side** through
+/// the fold-by-key path (only one accumulator block per operand crosses
+/// the shuffle when its group co-resides), or reduce-side through the
+/// group-by-key baseline when `map_side` is off.
+fn div_n_rep(
+    input: &Dist<Block>,
+    n: u32,
+    level: u32,
+    parts: usize,
+    next: NextGrouping,
+    map_side: bool,
+) -> Dist<Block> {
     let replicated = input.flat_map(move |blk| {
         let (qr, qc, r, c) = blk.quadrant_of(n);
         replication_table(blk.tag.side, qr, qc)
@@ -211,15 +343,34 @@ fn div_n_rep(input: &Dist<Block>, n: u32, level: u32, parts: usize) -> Dist<Bloc
             })
             .collect::<Vec<_>>()
     });
-    let grouped = replicated.group_by_key(&format!("divide/L{level}"), parts);
-    grouped.map(move |((mindex, side, r, c), vals)| {
-        Block::new(r, c, Tag::new(side_from(side), mindex), signed_sum(vals))
-    })
+    let label = format!("divide/L{level}");
+    let partitioner: Arc<dyn Partitioner<(u64, u8, u32, u32)>> =
+        Arc::new(DivideAlign { parts, next });
+    if map_side {
+        replicated
+            .fold_by_key_with(&label, partitioner, |v: SignedBlock| v, signed_merge, signed_merge)
+            .map(move |((mindex, side, r, c), acc)| {
+                Block::new(r, c, Tag::new(side_from(side), mindex), signed_finalize(acc))
+            })
+    } else {
+        replicated.group_by_key_with(&label, partitioner).map(
+            move |((mindex, side, r, c), vals)| {
+                Block::new(r, c, Tag::new(side_from(side), mindex), signed_sum(vals))
+            },
+        )
+    }
 }
 
 /// Algorithm 5: route each product block into its parent's C quadrants
-/// and sum signed contributions.
-fn combine(product: &Dist<Block>, half: u32, level: u32, parts: usize) -> Dist<Block> {
+/// and sum signed contributions — map-side via fold-by-key (see
+/// [`div_n_rep`]) or reduce-side via the group-by-key baseline.
+fn combine(
+    product: &Dist<Block>,
+    half: u32,
+    level: u32,
+    parts: usize,
+    map_side: bool,
+) -> Dist<Block> {
     let contributions = product.flat_map(move |blk| {
         let (parent, m) = blk.tag.parent();
         M_CONTRIB[m as usize]
@@ -231,10 +382,51 @@ fn combine(product: &Dist<Block>, half: u32, level: u32, parts: usize) -> Dist<B
             })
             .collect::<Vec<_>>()
     });
-    let grouped = contributions.group_by_key(&format!("combine/L{level}"), parts);
-    grouped.map(|((mindex, r, c), vals)| {
-        Block::new(r, c, Tag::new(Side::M, mindex), signed_sum(vals))
-    })
+    let label = format!("combine/L{level}");
+    let partitioner: Arc<dyn Partitioner<(u64, u32, u32)>> = Arc::new(CombineAlign { parts });
+    if map_side {
+        contributions
+            .fold_by_key_with(&label, partitioner, |v: SignedBlock| v, signed_merge, signed_merge)
+            .map(|((mindex, r, c), acc)| {
+                Block::new(r, c, Tag::new(Side::M, mindex), signed_finalize(acc))
+            })
+    } else {
+        contributions.group_by_key_with(&label, partitioner).map(|((mindex, r, c), vals)| {
+            Block::new(r, c, Tag::new(Side::M, mindex), signed_sum(vals))
+        })
+    }
+}
+
+/// Stark-aware input distribution: blocks grouped by divide-L0 quadrant
+/// class `(row mod b/2, col mod b/2)` so each partner set shares a
+/// partition — the very first divide then combines map-side too (deeper
+/// levels are aligned by the shuffle partitioners). Falls back to the
+/// plain contiguous [`distribute`] when there are fewer classes than
+/// cores (b = 2, or small b on big clusters): class-level placement
+/// would throttle the first stage's parallelism below the core count
+/// for a shuffle saving that is tiny at that scale.
+fn distribute_aligned(ctx: &SparkContext, m: &DenseMatrix, side: Side, b: usize) -> Dist<Block> {
+    let cores = ctx.config().total_cores();
+    let classes = if b >= 2 { (b / 2) * (b / 2) } else { 0 };
+    if classes < cores.max(1) {
+        return distribute(ctx, m, side, b);
+    }
+    let half = (b / 2) as u32;
+    let mut blocks: Vec<Block> = m
+        .split_blocks(b)
+        .into_iter()
+        .map(|(r, c, data)| Block::new(r as u32, c as u32, Tag::root(side), Arc::new(data)))
+        .collect();
+    blocks.sort_by_key(|blk| (blk.row % half, blk.col % half, blk.row / half, blk.col / half));
+    let parts = default_parts(b, cores).min(classes).max(1);
+    // Chunk class-by-class (each class is the 4 consecutive quadrant
+    // partners after the sort) so no partner set ever straddles a
+    // partition boundary, whatever the core count.
+    let mut chunks: Vec<Vec<Block>> = vec![Vec::new(); parts];
+    for (i, blk) in blocks.into_iter().enumerate() {
+        chunks[(i / 4) % parts].push(blk);
+    }
+    ctx.from_partitions(chunks)
 }
 
 /// Multiply `a @ b_mat` with Stark over a `b × b` block grid.
@@ -255,8 +447,11 @@ pub fn multiply(
     let n = a.rows();
     ctx.begin_job(&format!("stark n={n} b={b}"));
 
-    let da = distribute(ctx, a, Side::A, b);
-    let db = distribute(ctx, b_mat, Side::B, b);
+    let (da, db) = if cfg.map_side_combine {
+        (distribute_aligned(ctx, a, Side::A, b), distribute_aligned(ctx, b_mat, Side::B, b))
+    } else {
+        (distribute(ctx, a, Side::A, b), distribute(ctx, b_mat, Side::B, b))
+    };
     let result = dist_strassen(ctx, &timing, da.union(&db), b as u32, 0, cfg);
 
     let collected = result.collect("result/collect");
@@ -382,16 +577,79 @@ mod tests {
     fn divide_phase_replication_counts() {
         // One divide level on a 2×2 grid: A-side replicates 4+2+2+4 = 12
         // blocks; same for B — the paper's "12 sub-matrices" (Fig. 3).
+        // With plain `distribute` every block sits in its own partition,
+        // so map-side combining finds nothing and all 12 replicas cross.
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
         ctx.begin_job("repl");
         let a = DenseMatrix::random(8, 8, 5);
         let d = distribute(&ctx, &a, Side::A, 2);
-        let divided = div_n_rep(&d, 2, 0, 4);
+        let divided = div_n_rep(&d, 2, 0, 4, NextGrouping::Subproblem, true);
         let blocks = divided.collect("c");
         // 7 sub-problems × 1 block each (1×1 grids after divide).
         assert_eq!(blocks.len(), 7);
         let stages = ctx.metrics().current_stages();
         let div = stages.iter().find(|s| s.label == "divide/L0").unwrap();
         assert_eq!(div.records_out, 12);
+        assert_eq!(div.combined_records, 0);
+    }
+
+    #[test]
+    fn aligned_divide_combines_map_side() {
+        // Aligned distribution packs each quadrant-partner set into one
+        // partition; the divide fold then collapses the 12 replicas per
+        // class into the 7 operand blocks before the shuffle write.
+        let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+        ctx.begin_job("aligned");
+        let a = DenseMatrix::random(8, 8, 6);
+        let d = distribute_aligned(&ctx, &a, Side::A, 4);
+        // Grid 4 divides towards grid 2 (no fused leaf): quadrant mode.
+        let divided =
+            div_n_rep(&d, 4, 0, 8, NextGrouping::Quadrant { half: 1 }, true);
+        let blocks = divided.collect("c");
+        // 7 sub-problems × 2×2 operand grids.
+        assert_eq!(blocks.len(), 28);
+        let stages = ctx.metrics().current_stages();
+        let div = stages.iter().find(|s| s.label == "divide/L0").unwrap();
+        // 4 position classes × 12 replicas fold to 4 × 7 operands.
+        assert_eq!(div.records_out, 28);
+        assert_eq!(div.combined_records, 48 - 28);
+    }
+
+    #[test]
+    fn map_side_combine_matches_baseline_and_cuts_shuffle() {
+        let n = 32;
+        let b = 8;
+        let a = DenseMatrix::random(n, n, 61);
+        let bm = DenseMatrix::random(n, n, 62);
+        let run = |map_side: bool| {
+            let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+            let cfg = StarkConfig { map_side_combine: map_side, ..Default::default() };
+            multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, &cfg)
+        };
+        let baseline = run(false);
+        let folded = run(true);
+        assert!(baseline.c.allclose(&folded.c, 1e-9), "fold changed the product");
+        assert_eq!(baseline.job.stages.len(), folded.job.stages.len());
+        // Every divide and combine stage must ship strictly fewer bytes.
+        for (base, fold) in baseline.job.stages.iter().zip(&folded.job.stages) {
+            assert_eq!(base.label, fold.label);
+            if base.label.starts_with("divide/") || base.label.starts_with("combine/") {
+                assert!(
+                    fold.shuffle_bytes < base.shuffle_bytes,
+                    "{}: folded {} >= baseline {}",
+                    base.label,
+                    fold.shuffle_bytes,
+                    base.shuffle_bytes
+                );
+                assert!(fold.combined_records > 0, "{}: nothing combined", base.label);
+            }
+        }
+        assert!(folded.job.total_combined_records() > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "corrupt side code")]
+    fn side_from_rejects_corrupt_codes() {
+        side_from(9);
     }
 }

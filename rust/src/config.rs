@@ -68,6 +68,13 @@ pub struct RunConfig {
     pub fused_leaf: bool,
     /// Materialize leaf products in their own stage (stage-wise experiments).
     pub isolate_multiply: bool,
+    /// Stark: sum signed divide/combine groups map-side (fold-by-key).
+    /// `false` selects the group-by-key baseline the paper's cost model
+    /// (§IV) transcribes — the arm shuffle-volume comparisons run against.
+    pub map_side_combine: bool,
+    /// Sleep for real on the simulated shuffle-read wait (wall-clock
+    /// faithful demos); the wait always accrues to the metrics.
+    pub real_net_sleep: bool,
     /// Optional failure injection.
     pub failure: Option<FailureSpec>,
 }
@@ -85,6 +92,8 @@ impl Default for RunConfig {
             seed: 42,
             fused_leaf: false,
             isolate_multiply: false,
+            map_side_combine: true,
+            real_net_sleep: false,
             failure: None,
         }
     }
@@ -96,6 +105,7 @@ impl RunConfig {
             executors: self.executors,
             cores_per_executor: self.cores_per_executor,
             net_bandwidth: self.net_bandwidth,
+            real_net_sleep: self.real_net_sleep,
             failure: self.failure.clone(),
         }
     }
@@ -105,7 +115,11 @@ impl RunConfig {
     }
 
     pub fn stark_config(&self) -> StarkConfig {
-        StarkConfig { fused_leaf: self.fused_leaf, isolate_multiply: self.isolate_multiply }
+        StarkConfig {
+            fused_leaf: self.fused_leaf,
+            isolate_multiply: self.isolate_multiply,
+            map_side_combine: self.map_side_combine,
+        }
     }
 
     /// Build the leaf backend. XLA backends need `artifacts/` (built by
@@ -131,6 +145,8 @@ impl RunConfig {
             ("seed", Value::num(self.seed as f64)),
             ("fused_leaf", Value::Bool(self.fused_leaf)),
             ("isolate_multiply", Value::Bool(self.isolate_multiply)),
+            ("map_side_combine", Value::Bool(self.map_side_combine)),
+            ("real_net_sleep", Value::Bool(self.real_net_sleep)),
         ];
         if let Some(f) = &self.failure {
             fields.push((
@@ -184,6 +200,8 @@ impl RunConfig {
             seed: v.get("seed").and_then(Value::as_u64).context("missing seed")?,
             fused_leaf: v.get("fused_leaf").and_then(Value::as_bool).unwrap_or(false),
             isolate_multiply: v.get("isolate_multiply").and_then(Value::as_bool).unwrap_or(false),
+            map_side_combine: v.get("map_side_combine").and_then(Value::as_bool).unwrap_or(true),
+            real_net_sleep: v.get("real_net_sleep").and_then(Value::as_bool).unwrap_or(false),
             failure,
         })
     }
@@ -224,6 +242,8 @@ mod tests {
         assert_eq!(back.backend, cfg.backend);
         assert_eq!(back.net_bandwidth, None);
         assert!(back.failure.is_none());
+        assert!(back.map_side_combine, "map-side combining is the default");
+        assert!(!back.real_net_sleep);
     }
 
     #[test]

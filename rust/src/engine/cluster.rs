@@ -29,13 +29,24 @@ pub struct ClusterConfig {
     /// Simulated network bandwidth for shuffle reads, bytes/second.
     /// `None` disables the network model (shuffles are memory-speed).
     pub net_bandwidth: Option<f64>,
+    /// When true, the simulated shuffle-read wait is also *slept* for
+    /// real (wall-clock-faithful demos). Off by default: the wait always
+    /// accrues to the stage's `net_wait_ms` and modeled wall time, but
+    /// tests and benches should not burn real time on it.
+    pub real_net_sleep: bool,
     /// Inject one task failure (see [`FailureSpec`]).
     pub failure: Option<FailureSpec>,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        Self { executors: 2, cores_per_executor: 2, net_bandwidth: None, failure: None }
+        Self {
+            executors: 2,
+            cores_per_executor: 2,
+            net_bandwidth: None,
+            real_net_sleep: false,
+            failure: None,
+        }
     }
 }
 
@@ -293,5 +304,13 @@ mod tests {
         let cfg = ClusterConfig::paper_plan();
         assert_eq!(cfg.executors, 5);
         assert_eq!(cfg.total_cores(), 25);
+    }
+
+    #[test]
+    fn real_net_sleep_defaults_off() {
+        // Tests and benches must not burn wall-clock on the simulated
+        // network wait; sleeping is an explicit opt-in.
+        assert!(!ClusterConfig::default().real_net_sleep);
+        assert!(!ClusterConfig::paper_plan().real_net_sleep);
     }
 }

@@ -5,11 +5,15 @@
 //! transformations (`map`, `flat_map`, `filter`, `map_partitions`,
 //! `union`) compose the closure — they are **pipelined into one stage**,
 //! exactly like Spark's DAG scheduler pipelines narrow dependencies. Wide
-//! transformations (`group_by_key`, `reduce_by_key`, `join`, `cogroup`,
-//! `partition_by`) force the pipeline to run as a *map stage* on the
-//! cluster, write hash-partitioned shuffle buckets with byte accounting,
-//! and return a new `Dist` sourced from the buckets; grouping happens in
-//! the *next* stage's pipeline (Spark's reduce-side semantics).
+//! transformations (`group_by_key`, `reduce_by_key`, `fold_by_key`,
+//! `join`, `cogroup`, `partition_by`) force the pipeline to run as a
+//! *map stage* on the cluster, write hash-partitioned shuffle buckets
+//! with byte accounting, and return a new `Dist` sourced from the
+//! buckets; grouping happens in the *next* stage's pipeline (Spark's
+//! reduce-side semantics). The combining forms (`reduce_by_key`,
+//! `fold_by_key`) fold per key **map-side** first, so only accumulators
+//! cross the shuffle (`StageMetrics::combined_records` reports what the
+//! map side absorbed).
 //!
 //! Because compute closures are pure, a lost task is re-run from lineage
 //! (see [`crate::engine::cluster`]'s failure injection).
@@ -281,6 +285,7 @@ impl<T: Data> Dist<T> {
             remote_bytes: 0,
             net_wait_ms: 0.0,
             records_out,
+            combined_records: 0,
             pf: outcomes.len().min(total_cores),
             retries,
         });
@@ -320,9 +325,79 @@ fn comp_ms_to_wall<R>(
     loads.into_iter().fold(0.0, f64::max)
 }
 
-/// Result of a shuffle write: per-reduce-partition buckets plus accounting.
+/// Result of a shuffle write: per-reduce-partition buckets.
 struct ShuffleOut<K, V> {
     buckets: Arc<Vec<Vec<(K, V)>>>,
+}
+
+/// Per-map-task shuffle output: buckets, per-bucket bytes, input records.
+type MapOut<K, V> = (Vec<Vec<(K, V)>>, Vec<u64>, u64);
+
+/// Merge map-task buckets, account bytes/records, apply the (simulated)
+/// network wait, and record the stage. `records_out` counts what actually
+/// crossed the wire; the difference to the task input counts is reported
+/// as [`StageMetrics::combined_records`] (what map-side combining
+/// absorbed).
+fn collect_shuffle<K: Data, V: Data>(
+    ctx: &SparkContext,
+    label: &str,
+    map_parts: usize,
+    out_parts: usize,
+    outcomes: Vec<crate::engine::cluster::TaskOutcome<MapOut<K, V>>>,
+    retries: u32,
+) -> ShuffleOut<K, V> {
+    let cluster = ctx.cluster();
+    let mut merged: Vec<Vec<(K, V)>> = (0..out_parts).map(|_| Vec::new()).collect();
+    let (mut total, mut remote, mut records, mut in_records) = (0u64, 0u64, 0u64, 0u64);
+    let comp_ms: f64 = outcomes.iter().map(|o| o.busy_ms).sum();
+    let wall_ms = comp_ms_to_wall(&outcomes, ctx.config().total_cores());
+    for o in outcomes {
+        let src_exec = cluster.executor_of(o.part);
+        let (buckets, bucket_bytes, task_in) = o.result;
+        in_records += task_in;
+        for (dst, bucket) in buckets.into_iter().enumerate() {
+            records += bucket.len() as u64;
+            total += bucket_bytes[dst];
+            if cluster.executor_of(dst) != src_exec {
+                remote += bucket_bytes[dst];
+            }
+            merged[dst].extend(bucket);
+        }
+    }
+
+    // Simulated shuffle-read time: remote bytes cross the network at
+    // `net_bandwidth`, in parallel across executors. The wait always
+    // accrues to the stage metrics; it is only slept for real when the
+    // cluster opts in (`ClusterConfig::real_net_sleep`) — tests and
+    // benches must not burn wall-clock on simulated waiting.
+    let mut net_wait_ms = 0.0;
+    if let Some(bw) = ctx.config().net_bandwidth {
+        if bw > 0.0 && remote > 0 {
+            let secs = remote as f64 / bw / ctx.config().executors.max(1) as f64;
+            net_wait_ms = secs * 1e3;
+            if ctx.config().real_net_sleep {
+                std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+            }
+        }
+    }
+
+    let total_cores = ctx.config().total_cores();
+    ctx.record(StageMetrics {
+        stage_id: ctx.next_stage_id(),
+        label: label.to_string(),
+        tasks: map_parts,
+        wall_ms: wall_ms + net_wait_ms,
+        comp_ms,
+        shuffle_bytes: total,
+        remote_bytes: remote,
+        net_wait_ms,
+        records_out: records,
+        combined_records: in_records.saturating_sub(records),
+        pf: map_parts.min(total_cores),
+        retries,
+    });
+
+    ShuffleOut { buckets: Arc::new(merged) }
 }
 
 impl<K, V> Dist<(K, V)>
@@ -332,7 +407,7 @@ where
 {
     /// Wide: repartition by key without grouping (Spark `partitionBy`).
     pub fn partition_by(&self, label: &str, partitioner: Arc<dyn Partitioner<K>>) -> Dist<(K, V)> {
-        let out = self.shuffle_write(label, partitioner, None);
+        let out = self.shuffle_write(label, partitioner);
         let buckets = out.buckets;
         Dist {
             ctx: self.ctx.clone(),
@@ -352,7 +427,7 @@ where
         label: &str,
         partitioner: Arc<dyn Partitioner<K>>,
     ) -> Dist<(K, Vec<V>)> {
-        let out = self.shuffle_write(label, partitioner, None);
+        let out = self.shuffle_write(label, partitioner);
         let buckets = out.buckets;
         Dist {
             ctx: self.ctx.clone(),
@@ -376,24 +451,55 @@ where
         f: impl Fn(V, V) -> V + Send + Sync + 'static,
     ) -> Dist<(K, V)> {
         let f = Arc::new(f);
-        let out = self.shuffle_write(
-            label,
-            Arc::new(HashPartitioner::new(parts)),
-            Some(f.clone()),
-        );
+        let g = f.clone();
+        self.fold_by_key(label, parts, |v| v, move |a, v| f(a, v), move |a, b| g(a, b))
+    }
+
+    /// Wide: combine values per key with map-side combining and a
+    /// distinct accumulator type (Spark `combineByKey`): `lift` seeds the
+    /// accumulator from a key's first map-side value, `merge` folds
+    /// further map-side values in, and `combine` merges accumulators from
+    /// different map tasks on the reduce side. Only accumulators cross
+    /// the shuffle; `StageMetrics::combined_records` reports what the map
+    /// side absorbed.
+    pub fn fold_by_key<A: Data + Sizable>(
+        &self,
+        label: &str,
+        parts: usize,
+        lift: impl Fn(V) -> A + Send + Sync + 'static,
+        merge: impl Fn(A, V) -> A + Send + Sync + 'static,
+        combine: impl Fn(A, A) -> A + Send + Sync + 'static,
+    ) -> Dist<(K, A)> {
+        self.fold_by_key_with(label, Arc::new(HashPartitioner::new(parts)), lift, merge, combine)
+    }
+
+    /// [`fold_by_key`](Self::fold_by_key) with an explicit partitioner —
+    /// the hook for co-partitioning-aware callers: Stark routes every
+    /// shuffle so the *next* phase's groups co-reside in one partition,
+    /// which is what lets the map-side combine collapse whole groups
+    /// instead of only same-task coincidences.
+    pub fn fold_by_key_with<A: Data + Sizable>(
+        &self,
+        label: &str,
+        partitioner: Arc<dyn Partitioner<K>>,
+        lift: impl Fn(V) -> A + Send + Sync + 'static,
+        merge: impl Fn(A, V) -> A + Send + Sync + 'static,
+        combine: impl Fn(A, A) -> A + Send + Sync + 'static,
+    ) -> Dist<(K, A)> {
+        let out = self.shuffle_write_folded(label, partitioner, Arc::new(lift), Arc::new(merge));
         let buckets = out.buckets;
         Dist {
             ctx: self.ctx.clone(),
             num_parts: buckets.len(),
             compute: Arc::new(move |p| {
-                let mut acc: DetHashMap<K, V> = Default::default();
-                for (k, v) in buckets[p].iter().cloned() {
+                let mut acc: DetHashMap<K, A> = Default::default();
+                for (k, a) in buckets[p].iter().cloned() {
                     match acc.remove(&k) {
                         Some(prev) => {
-                            acc.insert(k, f(prev, v));
+                            acc.insert(k, combine(prev, a));
                         }
                         None => {
-                            acc.insert(k, v);
+                            acc.insert(k, a);
                         }
                     }
                 }
@@ -411,8 +517,8 @@ where
         parts: usize,
     ) -> Dist<(K, (V, W))> {
         let partitioner: Arc<dyn Partitioner<K>> = Arc::new(HashPartitioner::new(parts));
-        let left = self.shuffle_write(&format!("{label}/left"), partitioner.clone(), None);
-        let right = other.shuffle_write(&format!("{label}/right"), partitioner, None);
+        let left = self.shuffle_write(&format!("{label}/left"), partitioner.clone());
+        let right = other.shuffle_write(&format!("{label}/right"), partitioner);
         let (lb, rb) = (left.buckets, right.buckets);
         Dist {
             ctx: self.ctx.clone(),
@@ -454,8 +560,8 @@ where
         other: &Dist<(K, W)>,
         partitioner: Arc<dyn Partitioner<K>>,
     ) -> Dist<(K, (Vec<V>, Vec<W>))> {
-        let left = self.shuffle_write(&format!("{label}/left"), partitioner.clone(), None);
-        let right = other.shuffle_write(&format!("{label}/right"), partitioner, None);
+        let left = self.shuffle_write(&format!("{label}/left"), partitioner.clone());
+        let right = other.shuffle_write(&format!("{label}/right"), partitioner);
         let (lb, rb) = (left.buckets, right.buckets);
         Dist {
             ctx: self.ctx.clone(),
@@ -473,13 +579,12 @@ where
         }
     }
 
-    /// Map stage + shuffle write. When `combine` is given, values are
-    /// folded per key map-side before bucketing.
+    /// Map stage + shuffle write, no combining (gather semantics: every
+    /// record crosses the wire as-is).
     fn shuffle_write(
         &self,
         label: &str,
         partitioner: Arc<dyn Partitioner<K>>,
-        combine: Option<Arc<dyn Fn(V, V) -> V + Send + Sync>>,
     ) -> ShuffleOut<K, V> {
         let out_parts = partitioner.num_partitions();
         let compute = self.compute.clone();
@@ -487,82 +592,71 @@ where
             .map(|p| {
                 let compute = compute.clone();
                 let partitioner = partitioner.clone();
-                let combine = combine.clone();
                 move || {
-                    let mut records = compute(p);
-                    if let Some(f) = &combine {
-                        let mut acc: DetHashMap<K, V> = Default::default();
-                        for (k, v) in records.drain(..) {
-                            match acc.remove(&k) {
-                                Some(prev) => {
-                                    acc.insert(k, f(prev, v));
-                                }
-                                None => {
-                                    acc.insert(k, v);
-                                }
-                            }
-                        }
-                        records = acc.into_iter().collect();
-                    }
-                    let mut buckets: Vec<Vec<(K, V)>> = (0..out_parts).map(|_| Vec::new()).collect();
+                    let records = compute(p);
+                    let in_count = records.len() as u64;
+                    let mut buckets: Vec<Vec<(K, V)>> =
+                        (0..out_parts).map(|_| Vec::new()).collect();
                     let mut bucket_bytes = vec![0u64; out_parts];
                     for (k, v) in records {
                         let dst = partitioner.partition(&k);
                         bucket_bytes[dst] += (k.approx_bytes() + v.approx_bytes()) as u64;
                         buckets[dst].push((k, v));
                     }
-                    (buckets, bucket_bytes)
+                    (buckets, bucket_bytes, in_count)
                 }
             })
             .collect();
-
         let (outcomes, retries) = self.ctx.cluster().run_stage(label, tasks);
+        collect_shuffle(&self.ctx, label, self.num_parts, out_parts, outcomes, retries)
+    }
 
-        let cluster = self.ctx.cluster();
-        let mut merged: Vec<Vec<(K, V)>> = (0..out_parts).map(|_| Vec::new()).collect();
-        let (mut total, mut remote, mut records) = (0u64, 0u64, 0u64);
-        let comp_ms: f64 = outcomes.iter().map(|o| o.busy_ms).sum();
-        let wall_ms = comp_ms_to_wall(&outcomes, self.ctx.config().total_cores());
-        for o in outcomes {
-            let src_exec = cluster.executor_of(o.part);
-            let (buckets, bucket_bytes) = o.result;
-            for (dst, bucket) in buckets.into_iter().enumerate() {
-                records += bucket.len() as u64;
-                total += bucket_bytes[dst];
-                if cluster.executor_of(dst) != src_exec {
-                    remote += bucket_bytes[dst];
+    /// Map stage + shuffle write with map-side combining into an
+    /// accumulator type `A` (the write side of
+    /// [`fold_by_key_with`](Self::fold_by_key_with)).
+    fn shuffle_write_folded<A: Data + Sizable>(
+        &self,
+        label: &str,
+        partitioner: Arc<dyn Partitioner<K>>,
+        lift: Arc<dyn Fn(V) -> A + Send + Sync>,
+        merge: Arc<dyn Fn(A, V) -> A + Send + Sync>,
+    ) -> ShuffleOut<K, A> {
+        let out_parts = partitioner.num_partitions();
+        let compute = self.compute.clone();
+        let tasks: Vec<_> = (0..self.num_parts)
+            .map(|p| {
+                let compute = compute.clone();
+                let partitioner = partitioner.clone();
+                let lift = lift.clone();
+                let merge = merge.clone();
+                move || {
+                    let records = compute(p);
+                    let in_count = records.len() as u64;
+                    let mut acc: DetHashMap<K, A> = Default::default();
+                    for (k, v) in records {
+                        match acc.remove(&k) {
+                            Some(prev) => {
+                                acc.insert(k, merge(prev, v));
+                            }
+                            None => {
+                                acc.insert(k, lift(v));
+                            }
+                        }
+                    }
+                    let mut buckets: Vec<Vec<(K, A)>> =
+                        (0..out_parts).map(|_| Vec::new()).collect();
+                    let mut bucket_bytes = vec![0u64; out_parts];
+                    for (k, a) in acc {
+                        let dst = partitioner.partition(&k);
+                        bucket_bytes[dst] += (k.approx_bytes() + a.approx_bytes()) as u64;
+                        buckets[dst].push((k, a));
+                    }
+                    (buckets, bucket_bytes, in_count)
                 }
-                merged[dst].extend(bucket);
-            }
-        }
-
-        // Simulated shuffle-read time: remote bytes cross the network at
-        // `net_bandwidth`, in parallel across executors.
-        let mut net_wait_ms = 0.0;
-        if let Some(bw) = self.ctx.config().net_bandwidth {
-            if bw > 0.0 && remote > 0 {
-                let secs = remote as f64 / bw / self.ctx.config().executors.max(1) as f64;
-                net_wait_ms = secs * 1e3;
-                std::thread::sleep(std::time::Duration::from_secs_f64(secs));
-            }
-        }
-
-        let total_cores = self.ctx.config().total_cores();
-        self.ctx.record(StageMetrics {
-            stage_id: self.ctx.next_stage_id(),
-            label: label.to_string(),
-            tasks: self.num_parts,
-            wall_ms: wall_ms + net_wait_ms,
-            comp_ms,
-            shuffle_bytes: total,
-            remote_bytes: remote,
-            net_wait_ms,
-            records_out: records,
-            pf: self.num_parts.min(total_cores),
-            retries,
-        });
-
-        ShuffleOut { buckets: Arc::new(merged) }
+            })
+            .collect();
+        let (outcomes, retries) = self.ctx.cluster().run_stage(label, tasks);
+        collect_shuffle(&self.ctx, label, self.num_parts, out_parts, outcomes, retries)
     }
 }
 
@@ -671,6 +765,57 @@ mod tests {
             .map(|s| s.records_out)
             .sum();
         assert_eq!(gbk_records, 1000);
+    }
+
+    #[test]
+    fn fold_by_key_with_distinct_accumulator() {
+        let ctx = ctx();
+        ctx.begin_job("fold");
+        let pairs: Vec<(u32, u64)> = (0..100).map(|i| (i % 4, i)).collect();
+        let mut out = ctx
+            .parallelize(pairs, 5)
+            .fold_by_key(
+                "fbk",
+                3,
+                |v| vec![v],
+                |mut a, v| {
+                    a.push(v);
+                    a
+                },
+                |mut a, mut b| {
+                    a.append(&mut b);
+                    a
+                },
+            )
+            .map(|(k, vs)| (k, vs.len()))
+            .collect("c");
+        out.sort();
+        assert_eq!(out, vec![(0, 25), (1, 25), (2, 25), (3, 25)]);
+        let fbk = ctx
+            .metrics()
+            .current_stages()
+            .into_iter()
+            .find(|s| s.label == "fbk")
+            .unwrap();
+        // 100 records folded into at most (keys × map tasks) accumulators.
+        assert!(fbk.records_out <= 20, "records_out={}", fbk.records_out);
+        assert_eq!(fbk.combined_records, 100 - fbk.records_out);
+    }
+
+    #[test]
+    fn combined_records_zero_for_gather_shuffles() {
+        let ctx = ctx();
+        ctx.begin_job("gather");
+        let pairs: Vec<(u32, u64)> = (0..50).map(|i| (i % 5, i)).collect();
+        ctx.parallelize(pairs, 4).group_by_key("gbk", 2).collect("c");
+        let gbk = ctx
+            .metrics()
+            .current_stages()
+            .into_iter()
+            .find(|s| s.label == "gbk")
+            .unwrap();
+        assert_eq!(gbk.combined_records, 0);
+        assert_eq!(gbk.records_out, 50);
     }
 
     #[test]

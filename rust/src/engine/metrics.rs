@@ -29,7 +29,13 @@ pub struct StageMetrics {
     /// Simulated network wait added to the stage, milliseconds.
     pub net_wait_ms: f64,
     /// Records emitted into the shuffle (or collected, for actions).
+    /// For combining shuffles this is the **post-combine** count — the
+    /// records that actually cross the wire.
     pub records_out: u64,
+    /// Records absorbed by map-side combining before the shuffle write
+    /// (input records minus `records_out`); 0 for non-combining stages.
+    /// The observable behind the fold-by-key shuffle reduction.
+    pub combined_records: u64,
     /// Parallelization factor actually available: `min(tasks, total cores)`
     /// — the paper's `min[·, cores]` denominator.
     pub pf: usize,
@@ -56,6 +62,7 @@ impl StageMetrics {
             ("remote_bytes", Value::num(self.remote_bytes as f64)),
             ("net_wait_ms", Value::num(self.net_wait_ms)),
             ("records_out", Value::num(self.records_out as f64)),
+            ("combined_records", Value::num(self.combined_records as f64)),
             ("pf", Value::num(self.pf as f64)),
             ("retries", Value::num(self.retries as f64)),
         ])
@@ -80,6 +87,11 @@ impl JobMetrics {
     /// Total shuffle bytes across stages.
     pub fn total_shuffle_bytes(&self) -> u64 {
         self.stages.iter().map(|s| s.shuffle_bytes).sum()
+    }
+
+    /// Total records absorbed by map-side combining across stages.
+    pub fn total_combined_records(&self) -> u64 {
+        self.stages.iter().map(|s| s.combined_records).sum()
     }
 
     /// Total summed task compute time.
@@ -214,6 +226,7 @@ mod tests {
             remote_bytes: 5,
             net_wait_ms: 0.0,
             records_out: 1,
+            combined_records: 0,
             pf: 1,
             retries: 0,
         }

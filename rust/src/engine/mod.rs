@@ -33,5 +33,5 @@ pub use block::{Block, Side, Tag};
 pub use cluster::{Cluster, ClusterConfig, FailureSpec};
 pub use dist::{Dist, SparkContext};
 pub use metrics::{JobMetrics, MetricsRegistry, StageMetrics};
-pub use partitioner::{GridPartitioner, HashPartitioner, Partitioner};
+pub use partitioner::{det_partition, GridPartitioner, HashPartitioner, Partitioner};
 pub use sizable::Sizable;

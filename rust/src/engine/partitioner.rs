@@ -21,6 +21,15 @@ pub trait Partitioner<K>: Send + Sync {
     fn partition(&self, key: &K) -> usize;
 }
 
+/// Deterministic `hash(key) mod parts` routing — the shared primitive
+/// behind [`HashPartitioner`] and the algorithm-specific alignment
+/// partitioners (e.g. Stark's divide/combine co-partitioning).
+pub fn det_partition<T: Hash>(key: &T, parts: usize) -> usize {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() % parts.max(1) as u64) as usize
+}
+
 /// Spark's default: `hash(key) mod parts`, with a deterministic hasher.
 #[derive(Debug, Clone)]
 pub struct HashPartitioner {
@@ -40,9 +49,7 @@ impl<K: Hash> Partitioner<K> for HashPartitioner {
     }
 
     fn partition(&self, key: &K) -> usize {
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        key.hash(&mut h);
-        (h.finish() % self.parts as u64) as usize
+        det_partition(key, self.parts)
     }
 }
 

@@ -100,6 +100,8 @@ impl Scale {
             seed: self.seed,
             fused_leaf: false,
             isolate_multiply: false,
+            map_side_combine: true,
+            real_net_sleep: false,
             failure: None,
         }
     }

@@ -43,6 +43,9 @@ FLAGS (shared):
   --algo <name>        stark | marlin | mllib      [stark]
   --fused-leaf         fuse last recursion level into one XLA call
   --isolate-multiply   leaf multiplication in its own stage
+  --no-map-side-combine  (stark) group-by-key baseline instead of the
+                       map-side signed fold (shuffle-volume comparisons)
+  --real-net-sleep     really sleep the simulated shuffle-read wait
   --verify             (multiply) check against single-node product
   --bs <list>          (sweep) partition counts    [2,4,8,16]
   --executor-counts <list>  (scalability)          [1,2,3,4,5]
@@ -61,6 +64,8 @@ fn run_config(args: &Args) -> RunConfig {
         seed: args.get("seed", 42),
         fused_leaf: args.flag("fused-leaf"),
         isolate_multiply: args.flag("isolate-multiply"),
+        map_side_combine: !args.flag("no-map-side-combine"),
+        real_net_sleep: args.flag("real-net-sleep"),
         failure: None,
     }
 }

@@ -13,6 +13,7 @@
 //! amortization; see EXPERIMENTS.md §Perf for the measured compile vs
 //! execute split).
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -134,6 +135,7 @@ impl Drop for XlaService {
     }
 }
 
+#[cfg(feature = "xla")]
 struct Engine {
     client: xla::PjRtClient,
     lib: ArtifactLibrary,
@@ -141,6 +143,7 @@ struct Engine {
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "xla")]
 impl Engine {
     fn executable(&mut self, kind: &str, block: usize) -> Result<&xla::PjRtLoadedExecutable, String> {
         let entry = self
@@ -226,6 +229,27 @@ impl Engine {
     }
 }
 
+/// Stub runtime thread for builds without the `xla` crate: report a
+/// clean initialization error so `XlaService::new` fails with a
+/// diagnostic instead of the crate failing to compile. Callers
+/// (config::build_backend, benches, tests) already handle the error by
+/// falling back to the native backend or skipping.
+#[cfg(not(feature = "xla"))]
+fn runtime_thread(
+    lib: ArtifactLibrary,
+    impl_: String,
+    _rx: mpsc::Receiver<Req>,
+    ready: mpsc::Sender<Result<(), String>>,
+) {
+    let _ = (lib, impl_);
+    let _ = ready.send(Err(
+        "xla support not compiled in (add the vendored `xla` crate to rust/Cargo.toml \
+         [dependencies] and rebuild with `--features xla`)"
+            .to_string(),
+    ));
+}
+
+#[cfg(feature = "xla")]
 fn runtime_thread(
     lib: ArtifactLibrary,
     impl_: String,

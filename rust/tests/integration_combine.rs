@@ -1,0 +1,135 @@
+//! Integration: the map-side signed combining path (fold-by-key) against
+//! its sequential specification, the Arc-reuse guarantee for
+//! single-positive-operand groups, and a serve-layer round-trip through
+//! the converted multiply pipeline.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use stark::algos::common::{signed_finalize, signed_merge, SignedBlock};
+use stark::engine::{ClusterConfig, SparkContext};
+use stark::matrix::DenseMatrix;
+use stark::util::prop::{assert_prop, Draw};
+
+#[test]
+fn prop_fold_by_key_equals_group_then_sum() {
+    assert_prop("signed fold == group+sum", 0xF01D, 25, |rng| {
+        let keys = rng.range(1, 6) as u32;
+        let n = rng.pow2(2, 8);
+        let count = rng.range(1, 40);
+        let pairs: Vec<(u32, SignedBlock)> = (0..count)
+            .map(|_| {
+                let k = rng.range(0, keys as usize) as u32;
+                let sign = if rng.next_f64() < 0.4 { -1.0 } else { 1.0 };
+                let seed = rng.next_u64();
+                (k, (sign, Arc::new(DenseMatrix::random(n, n, seed))))
+            })
+            .collect();
+        let ctx = SparkContext::new(ClusterConfig::new(rng.range(1, 4), rng.range(1, 3)));
+        let parts = rng.range(1, 7);
+        let folded: BTreeMap<u32, DenseMatrix> = ctx
+            .parallelize(pairs.clone(), rng.range(1, 6))
+            .fold_by_key("fold", parts, |v: SignedBlock| v, signed_merge, signed_merge)
+            .collect("c")
+            .into_iter()
+            .map(|(k, acc)| (k, (*signed_finalize(acc)).clone()))
+            .collect();
+        // Sequential specification: Σ sign · block per key.
+        let mut want: BTreeMap<u32, DenseMatrix> = BTreeMap::new();
+        for (k, (s, d)) in &pairs {
+            want.entry(*k)
+                .and_modify(|acc| acc.add_assign_signed(d, *s))
+                .or_insert_with(|| d.scale(*s));
+        }
+        if folded.len() != want.len() {
+            return Err(format!("{} keys, want {}", folded.len(), want.len()));
+        }
+        for (k, w) in &want {
+            let got = folded.get(k).ok_or_else(|| format!("missing key {k}"))?;
+            if !w.allclose(got, 1e-9) {
+                return Err(format!("key {k}: diff {}", w.max_abs_diff(got)));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn single_positive_operand_reuses_arc_across_the_shuffle() {
+    let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+    let payload = Arc::new(DenseMatrix::random(8, 8, 42));
+    let other = Arc::new(DenseMatrix::random(8, 8, 43));
+    let pairs = vec![
+        (0u32, (1.0f64, payload.clone())),
+        (1u32, (-1.0f64, payload.clone())),
+        (1u32, (1.0f64, other.clone())),
+    ];
+    let out = ctx
+        .parallelize(pairs, 1)
+        .fold_by_key("fold", 2, |v: SignedBlock| v, signed_merge, signed_merge)
+        .collect("c");
+    assert_eq!(out.len(), 2);
+    for (k, acc) in out {
+        let fin = signed_finalize(acc);
+        match k {
+            // Single positive operand: the payload Arc crosses untouched.
+            0 => assert!(Arc::ptr_eq(&fin, &payload), "singleton +1 group must share the Arc"),
+            // Merged group: other − payload.
+            1 => assert!(other.sub(&payload).allclose(&fin, 1e-12)),
+            _ => panic!("unexpected key {k}"),
+        }
+    }
+}
+
+#[test]
+fn serve_round_trip_matches_naive() {
+    use stark::config::{build_backend, BackendKind};
+    use stark::matrix::multiply::matmul_naive;
+    use stark::serve::{request, Server, ServerState};
+    use stark::util::json::Value;
+
+    let state = ServerState {
+        ctx: SparkContext::new(ClusterConfig::new(2, 1)),
+        backend: build_backend(BackendKind::Native, 1).unwrap(),
+        default_b: 2,
+    };
+    let mut server = Server::start("127.0.0.1:0", state).unwrap();
+    let a = DenseMatrix::random(8, 8, 7);
+    let b = DenseMatrix::random(8, 8, 8);
+    let to_json = |m: &DenseMatrix| {
+        Value::Array(
+            (0..m.rows())
+                .map(|r| {
+                    Value::Array((0..m.cols()).map(|c| Value::num(m.get(r, c))).collect())
+                })
+                .collect(),
+        )
+    };
+    let resp = request(
+        &server.addr().to_string(),
+        &Value::obj(vec![
+            ("op", Value::str("multiply")),
+            ("algo", Value::str("stark")),
+            ("b", Value::num(4.0)),
+            ("a", to_json(&a)),
+            ("b_mat", to_json(&b)),
+            ("return_c", Value::Bool(true)),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+    let want = matmul_naive(&a, &b);
+    let rows = resp.get("c").unwrap().as_array().unwrap();
+    assert_eq!(rows.len(), 8);
+    for (r, rowv) in rows.iter().enumerate() {
+        for (c, x) in rowv.as_array().unwrap().iter().enumerate() {
+            let got = x.as_f64().unwrap();
+            assert!(
+                (want.get(r, c) - got).abs() < 1e-9,
+                "({r},{c}): {} vs {got}",
+                want.get(r, c)
+            );
+        }
+    }
+    server.stop();
+}

@@ -29,6 +29,7 @@ fn prop_stark_matches_reference_for_arbitrary_inputs() {
         let cfg = StarkConfig {
             fused_leaf: rng.next_f64() < 0.5,
             isolate_multiply: rng.next_f64() < 0.5,
+            map_side_combine: rng.next_f64() < 0.75,
         };
         let out = stark_algo::multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, &cfg);
         let want = matmul_blocked(&a, &bm);
