@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
         None => {
             println!("[1/5] artifacts NOT found — falling back to the native leaf backend");
             println!("      (run `make artifacts` to exercise the JAX/Pallas path)");
-            BackendKind::Native
+            BackendKind::Packed
         }
     };
 
@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
     let scale = Scale {
         sizes: vec![512, 1024, 2048],
         bs: vec![2, 4, 8, 16],
-        backend: stark::config::BackendKind::Native,
+        backend: stark::config::BackendKind::Packed,
         executors: 2,
         cores: 2,
         net_bandwidth: Some(1.75e9), // the paper's 14 Gb/s InfiniBand

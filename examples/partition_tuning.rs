@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
     let scale = Scale {
         sizes: vec![1024],
         bs: vec![2, 4, 8, 16, 32],
-        backend: BackendKind::Native,
+        backend: BackendKind::Packed,
         executors: 2,
         cores: 2,
         net_bandwidth: Some(1.75e9),

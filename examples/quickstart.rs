@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
     // Leaf blocks multiply through a backend; use the pure-Rust one here
     // (swap in `stark::config::build_backend(BackendKind::Xla, 2)?` to run
     // the AOT-compiled JAX/Pallas artifacts via PJRT).
-    let backend = Arc::new(NativeBackend);
+    let backend = Arc::new(NativeBackend::default());
 
     let out = stark_algo::multiply(&ctx, backend, &a, &bm, b, &StarkConfig::default());
 

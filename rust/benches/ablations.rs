@@ -7,7 +7,7 @@ fn main() -> anyhow::Result<()> {
     let scale = Scale {
         sizes: vec![512],
         bs: vec![4, 8],
-        backend: stark::config::BackendKind::Native,
+        backend: stark::config::BackendKind::Packed,
         net_bandwidth: Some(1.75e9),
         reps: 1,
         ..Default::default()

@@ -6,7 +6,7 @@ fn main() -> anyhow::Result<()> {
     let scale = Scale {
         sizes: vec![512, 1024],
         bs: vec![2, 4, 8, 16],
-        backend: stark::config::BackendKind::Native,
+        backend: stark::config::BackendKind::Packed,
         net_bandwidth: Some(1.75e9),
         reps: 1,
         ..Default::default()

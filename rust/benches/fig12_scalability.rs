@@ -6,7 +6,7 @@ fn main() -> anyhow::Result<()> {
     let scale = Scale {
         sizes: vec![512, 1024],
         bs: vec![4, 8],
-        backend: stark::config::BackendKind::Native,
+        backend: stark::config::BackendKind::Packed,
         cores: 1,
         net_bandwidth: None, // isolate compute scaling
         reps: 2,

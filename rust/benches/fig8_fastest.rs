@@ -10,7 +10,7 @@ fn main() -> anyhow::Result<()> {
     let scale = Scale {
         sizes: vec![512, 1024, 2048],
         bs: vec![2, 4, 8],
-        backend: stark::config::BackendKind::Native,
+        backend: stark::config::BackendKind::Packed,
         net_bandwidth: Some(1.75e9),
         reps: 2,
         ..Default::default()

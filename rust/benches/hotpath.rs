@@ -4,6 +4,10 @@
 //! perf pass can see where wall time actually goes:
 //!
 //! - native leaf multiply at each block size (tile sweep);
+//! - kernel ablation: naive vs blocked vs packed vs fused-packed
+//!   GFLOP/s, plus full Strassen fused vs materialized packing (§Perf
+//!   change 6 — the packed kernel must beat blocked ≥ 2× at n=1024 and
+//!   fusion must beat temporaries, printed as WIN/REGRESSION verdicts);
 //! - PJRT dispatch: XLA `dot` artifact per block size (when built), i.e.
 //!   channel + literal marshalling + execute;
 //! - the fused `strassen_leaf` artifact vs 7 separate dispatches;
@@ -37,6 +41,43 @@ fn main() -> anyhow::Result<()> {
             black_box(stark::matrix::matmul_blocked(&a, &b));
         });
         println!("{}", r.line());
+    }
+
+    // Kernel ablation (§Perf change 6): the full ladder the `stark_bench
+    // kernel` subcommand persists to BENCH_kernel.json, plus the two
+    // pass/fail verdicts the acceptance bar asks for.
+    {
+        use stark::experiments::kernel;
+        let sizes = [128usize, 256, 512, 1024];
+        let points = kernel::run(&sizes, budget);
+        kernel::print_table(&points);
+        let rate = |backend: &str, n: usize| {
+            points
+                .iter()
+                .find(|p| p.backend == backend && p.n == n)
+                .map(|p| p.gflops)
+                .unwrap_or(0.0)
+        };
+        let packed = rate("packed", 1024);
+        let blocked = rate("blocked", 1024);
+        println!(
+            "packed vs blocked @1024: {packed:.2} vs {blocked:.2} GFLOP/s = {:.2}x ({})",
+            packed / blocked.max(1e-12),
+            if packed >= 2.0 * blocked { "WIN (>= 2x)" } else { "REGRESSION (< 2x)" }
+        );
+        let sf = points.iter().find(|p| p.backend == "strassen-fused");
+        let sm = points.iter().find(|p| p.backend == "strassen-materialized");
+        if let (Some(sf), Some(sm)) = (sf, sm) {
+            println!(
+                "strassen fused-packing vs materialized temporaries @{}: \
+                 {:.1} ms vs {:.1} ms = {:.2}x ({})",
+                sf.n,
+                sf.wall_ms,
+                sm.wall_ms,
+                sm.wall_ms / sf.wall_ms.max(1e-12),
+                if sf.wall_ms < sm.wall_ms { "WIN" } else { "REGRESSION" }
+            );
+        }
     }
 
     if let Some(dir) = stark::runtime::find_artifacts_dir() {
@@ -85,7 +126,7 @@ fn main() -> anyhow::Result<()> {
         let r = bench_budget(&format!("stark skeleton b={b}"), budget, 3, || {
             black_box(stark_algo::multiply(
                 &ctx,
-                Arc::new(stark::runtime::NativeBackend),
+                Arc::new(stark::runtime::NativeBackend::default()),
                 &a,
                 &bm,
                 b,
@@ -108,7 +149,7 @@ fn main() -> anyhow::Result<()> {
         let run = |map_side: bool| {
             let ctx = SparkContext::new(ClusterConfig::new(2, 2));
             let cfg = StarkConfig { map_side_combine: map_side, ..Default::default() };
-            stark_algo::multiply(&ctx, Arc::new(stark::runtime::NativeBackend), &a, &bm, b, &cfg)
+            stark_algo::multiply(&ctx, Arc::new(stark::runtime::NativeBackend::default()), &a, &bm, b, &cfg)
         };
         let baseline = run(false);
         let folded = run(true);

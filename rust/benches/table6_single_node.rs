@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
     let h = match Harness::new(scale.clone()) {
         Ok(h) => h,
         Err(_) => Harness::new(Scale {
-            backend: stark::config::BackendKind::Native,
+            backend: stark::config::BackendKind::Packed,
             ..scale
         })?,
     };

@@ -7,7 +7,7 @@ fn main() -> anyhow::Result<()> {
     let scale = Scale {
         sizes: vec![512, 1024],
         bs: vec![2, 4, 8, 16],
-        backend: stark::config::BackendKind::Native,
+        backend: stark::config::BackendKind::Packed,
         net_bandwidth: None,
         reps: 2,
         ..Default::default()

@@ -260,7 +260,7 @@ mod tests {
 
     #[test]
     fn timing_backend_counts() {
-        let tb = TimingBackend::new(Arc::new(NativeBackend));
+        let tb = TimingBackend::new(Arc::new(NativeBackend::default()));
         let a = DenseMatrix::random(8, 8, 1);
         tb.multiply(&a, &a);
         tb.multiply(&a, &a);

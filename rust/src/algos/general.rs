@@ -69,7 +69,7 @@ mod tests {
         let out = multiply_general(
             algo,
             &ctx,
-            Arc::new(NativeBackend),
+            Arc::new(NativeBackend::default()),
             &a,
             &bm,
             b,
@@ -129,7 +129,7 @@ mod tests {
         multiply_general(
             Algorithm::Stark,
             &ctx,
-            Arc::new(NativeBackend),
+            Arc::new(NativeBackend::default()),
             &a,
             &b,
             2,

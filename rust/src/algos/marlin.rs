@@ -96,7 +96,7 @@ mod tests {
         let a = DenseMatrix::random(n, n, 300 + n as u64);
         let bm = DenseMatrix::random(n, n, 400 + n as u64);
         let want = matmul_naive(&a, &bm);
-        let out = multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, false);
+        let out = multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, false);
         (out, want)
     }
 

@@ -122,7 +122,7 @@ mod tests {
         let a = DenseMatrix::random(n, n, 500 + n as u64);
         let bm = DenseMatrix::random(n, n, 600 + n as u64);
         let want = matmul_naive(&a, &bm);
-        let out = multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, false);
+        let out = multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, false);
         (out, want)
     }
 

@@ -484,7 +484,7 @@ mod tests {
         let a = DenseMatrix::random(n, n, 100 + n as u64);
         let bm = DenseMatrix::random(n, n, 200 + n as u64);
         let want = matmul_naive(&a, &bm);
-        let out = multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, cfg);
+        let out = multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, cfg);
         (out, want)
     }
 
@@ -527,7 +527,7 @@ mod tests {
             let ctx = SparkContext::new(ClusterConfig::new(2, 2));
             let a = DenseMatrix::random(16, 16, 1);
             let bm = DenseMatrix::random(16, 16, 2);
-            let out = multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, &StarkConfig::default());
+            let out = multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &StarkConfig::default());
             assert_eq!(
                 out.job.stages.len(),
                 predicted_stages(b),
@@ -552,7 +552,7 @@ mod tests {
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
         let a = DenseMatrix::random(8, 8, 3);
         let bm = DenseMatrix::random(8, 8, 4);
-        let out = multiply(&ctx, Arc::new(NativeBackend), &a, &bm, 2, &cfg);
+        let out = multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, 2, &cfg);
         assert_eq!(out.job.stages.len(), predicted_stages(2) + 1);
         assert!(out.job.stages.iter().any(|s| s.label == "multiply/compute"));
     }
@@ -562,14 +562,14 @@ mod tests {
     fn rejects_non_power_of_two_b() {
         let ctx = SparkContext::new(ClusterConfig::new(1, 1));
         let a = DenseMatrix::random(6, 6, 1);
-        multiply(&ctx, Arc::new(NativeBackend), &a, &a, 3, &StarkConfig::default());
+        multiply(&ctx, Arc::new(NativeBackend::default()), &a, &a, 3, &StarkConfig::default());
     }
 
     #[test]
     fn identity_times_identity() {
         let ctx = SparkContext::new(ClusterConfig::new(2, 1));
         let i = DenseMatrix::identity(8);
-        let out = multiply(&ctx, Arc::new(NativeBackend), &i, &i, 4, &StarkConfig::default());
+        let out = multiply(&ctx, Arc::new(NativeBackend::default()), &i, &i, 4, &StarkConfig::default());
         assert!(out.c.allclose(&i, 1e-12));
     }
 
@@ -624,7 +624,7 @@ mod tests {
         let run = |map_side: bool| {
             let ctx = SparkContext::new(ClusterConfig::new(2, 2));
             let cfg = StarkConfig { map_side_combine: map_side, ..Default::default() };
-            multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, &cfg)
+            multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &cfg)
         };
         let baseline = run(false);
         let folded = run(true);
@@ -651,5 +651,34 @@ mod tests {
     #[should_panic(expected = "corrupt side code")]
     fn side_from_rejects_corrupt_codes() {
         side_from(9);
+    }
+
+    #[test]
+    fn leaf_backend_swap_is_bit_invariant() {
+        // All native kernels accumulate each output element in the same
+        // ascending-k order, so changing only the leaf backend must not
+        // move a single bit of the distributed product — for the plain
+        // leaf and for the fused Strassen leaf alike.
+        use crate::matrix::multiply::Kernel;
+        let n = 32;
+        let b = 4;
+        let a = DenseMatrix::random(n, n, 81);
+        let bm = DenseMatrix::random(n, n, 82);
+        for fused in [false, true] {
+            let cfg = StarkConfig { fused_leaf: fused, ..Default::default() };
+            let run = |k: Kernel| {
+                let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+                multiply(&ctx, Arc::new(NativeBackend::new(k)), &a, &bm, b, &cfg).c
+            };
+            let naive = run(Kernel::Naive);
+            for k in [Kernel::Blocked, Kernel::Packed] {
+                let got = run(k);
+                assert_eq!(
+                    naive.as_slice(),
+                    got.as_slice(),
+                    "kernel {k} changed the product bits (fused_leaf={fused})"
+                );
+            }
+        }
     }
 }

@@ -1,13 +1,18 @@
 //! `stark-bench` — regenerates every table and figure of the paper's
 //! evaluation (§V) and writes JSON reports.
 //!
-//! USAGE: stark-bench <fig8|fig9|fig10|fig11|fig12|table6|table7|ablations|all>
+//! USAGE: stark-bench <fig8|fig9|fig10|fig11|fig12|table6|table7|ablations|kernel|all>
 //!          [--out DIR] [--sizes 512,1024,2048] [--bs 2,4,8,16]
-//!          [--backend native|xla|xla-pallas] [--executors 2] [--cores 2]
-//!          [--net-mbps 1750] [--seed 42] [--executor-counts 1,2,3,4]
-//!          [--smoke]
+//!          [--backend naive|blocked|packed|xla|xla-pallas] [--executors 2]
+//!          [--cores 2] [--net-mbps 1750] [--seed 42]
+//!          [--executor-counts 1,2,3,4] [--smoke]
 //!
 //! `--smoke` shrinks the grid for fast verification runs.
+//!
+//! `kernel` is the leaf-kernel ablation (EXPERIMENTS.md §Perf change 6):
+//! it needs no cluster or artifacts and writes the machine-readable
+//! `BENCH_kernel.json` to `--out` (default: the current directory, i.e.
+//! the repo root when run from it — the file is tracked across PRs).
 
 use anyhow::Result;
 
@@ -30,8 +35,19 @@ fn scale_from(args: &Args) -> Scale {
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let out_dir = args.raw("out").unwrap_or("EXPERIMENTS_RUNS").to_string();
     let which = args.subcommand().unwrap_or("all").to_string();
+    if which == "kernel" {
+        // Pure single-node kernel ablation: no cluster, no artifacts.
+        let default_sizes: &[usize] =
+            if args.flag("smoke") { &[64, 128] } else { &[128, 256, 512, 1024] };
+        let sizes = args.get_list("sizes", default_sizes);
+        let out = args.raw("out").unwrap_or(".").to_string();
+        let budget = std::time::Duration::from_millis(args.get("budget-ms", 300u64));
+        let path = experiments::kernel::run_and_save(&sizes, budget, &out)?;
+        println!("wrote {}", path.display());
+        return Ok(());
+    }
+    let out_dir = args.raw("out").unwrap_or("EXPERIMENTS_RUNS").to_string();
     let scale = scale_from(&args);
     println!(
         "stark-bench {which}: sizes={:?} bs={:?} backend={} cluster={}x{} net={:?}",

@@ -12,15 +12,27 @@ use anyhow::{Context, Result};
 
 use crate::algos::{Algorithm, StarkConfig};
 use crate::engine::{ClusterConfig, FailureSpec, SparkContext};
+use crate::matrix::multiply::Kernel;
 use crate::runtime::{ArtifactLibrary, LeafBackend, NativeBackend, XlaBackend, XlaService};
 use crate::util::json::Value;
 
-/// Which leaf backend multiplies blocks at the bottom of the recursion.
+/// Which leaf backend multiplies blocks at the bottom of the recursion —
+/// the single selector threaded from the CLI (`--backend`) through every
+/// algorithm. The three pure-Rust kernels are the ablation ladder of
+/// EXPERIMENTS.md §Perf change 6 (`stark_bench kernel`); they produce
+/// bit-identical products, so switching between them never changes a
+/// distributed result.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
-    /// Pure-Rust cache-blocked kernel.
-    Native,
-    /// AOT XLA artifact, `dot` family (plain HLO dot — production default).
+    /// Pure-Rust textbook `ikj` kernel (ablation baseline).
+    Naive,
+    /// Pure-Rust cache-blocked `ikj` kernel (the pre-PR native default).
+    Blocked,
+    /// Pure-Rust packed register-tiled GEMM with fused Strassen operand
+    /// packing (`matrix/gemm.rs`) — the native default.
+    Packed,
+    /// AOT XLA artifact, `dot` family (plain HLO dot — production
+    /// default; stubbed without the `xla` feature).
     Xla,
     /// AOT XLA artifact, `pallas` family (the L1 kernel via interpret
     /// lowering; structure-faithful, slower on CPU — the ablation arm).
@@ -30,7 +42,9 @@ pub enum BackendKind {
 impl std::fmt::Display for BackendKind {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            BackendKind::Native => write!(f, "native"),
+            BackendKind::Naive => write!(f, "naive"),
+            BackendKind::Blocked => write!(f, "blocked"),
+            BackendKind::Packed => write!(f, "packed"),
             BackendKind::Xla => write!(f, "xla"),
             BackendKind::XlaPallas => write!(f, "xla-pallas"),
         }
@@ -42,10 +56,17 @@ impl std::str::FromStr for BackendKind {
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s.to_ascii_lowercase().as_str() {
-            "native" => Ok(BackendKind::Native),
+            "naive" => Ok(BackendKind::Naive),
+            "blocked" => Ok(BackendKind::Blocked),
+            // "native" is the pre-kernel-ablation name for the pure-Rust
+            // default, kept as an alias so recorded RunConfig JSON and
+            // muscle-memory CLI invocations keep working.
+            "packed" | "native" => Ok(BackendKind::Packed),
             "xla" => Ok(BackendKind::Xla),
             "xla-pallas" | "pallas" => Ok(BackendKind::XlaPallas),
-            other => Err(format!("unknown backend {other:?} (native|xla|xla-pallas)")),
+            other => {
+                Err(format!("unknown backend {other:?} (naive|blocked|packed|xla|xla-pallas)"))
+            }
         }
     }
 }
@@ -85,7 +106,7 @@ impl Default for RunConfig {
             n: 256,
             b: 4,
             algo: Algorithm::Stark,
-            backend: BackendKind::Native,
+            backend: BackendKind::Packed,
             executors: 2,
             cores_per_executor: 2,
             net_bandwidth: None,
@@ -215,7 +236,9 @@ pub fn build_backend(kind: BackendKind, threads: usize) -> Result<Arc<dyn LeafBa
     let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let threads = threads.clamp(1, host);
     match kind {
-        BackendKind::Native => Ok(Arc::new(NativeBackend)),
+        BackendKind::Naive => Ok(Arc::new(NativeBackend::new(Kernel::Naive))),
+        BackendKind::Blocked => Ok(Arc::new(NativeBackend::new(Kernel::Blocked))),
+        BackendKind::Packed => Ok(Arc::new(NativeBackend::new(Kernel::Packed))),
         BackendKind::Xla | BackendKind::XlaPallas => {
             let dir = crate::runtime::find_artifacts_dir().context(
                 "artifacts/manifest.json not found — run `make artifacts` \
@@ -264,6 +287,11 @@ mod tests {
     fn backend_kind_parses() {
         assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Xla);
         assert_eq!("XLA-PALLAS".parse::<BackendKind>().unwrap(), BackendKind::XlaPallas);
+        assert_eq!("naive".parse::<BackendKind>().unwrap(), BackendKind::Naive);
+        assert_eq!("blocked".parse::<BackendKind>().unwrap(), BackendKind::Blocked);
+        assert_eq!("packed".parse::<BackendKind>().unwrap(), BackendKind::Packed);
+        // Back-compat alias for recorded configs.
+        assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Packed);
         assert!("bogus".parse::<BackendKind>().is_err());
     }
 
@@ -274,8 +302,14 @@ mod tests {
     }
 
     #[test]
-    fn native_backend_builds() {
-        let be = build_backend(BackendKind::Native, 1).unwrap();
-        assert_eq!(be.name(), "native");
+    fn native_backends_build() {
+        for (kind, name) in [
+            (BackendKind::Naive, "naive"),
+            (BackendKind::Blocked, "blocked"),
+            (BackendKind::Packed, "packed"),
+        ] {
+            let be = build_backend(kind, 1).unwrap();
+            assert_eq!(be.name(), name);
+        }
     }
 }

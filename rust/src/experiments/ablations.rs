@@ -46,8 +46,13 @@ pub fn run(h: &Harness) -> Result<(Ablations, Report)> {
     let b = bs.get(1).copied().unwrap_or(bs[0]);
     let mut rows = Vec::new();
 
-    // 1. Backend ablation (each backend builds its own service).
-    for kind in [BackendKind::Xla, BackendKind::Native, BackendKind::XlaPallas] {
+    // 1. Backend ablation (each backend builds its own service). The
+    // native kernel ladder (naive arm included) runs at micro scale in
+    // `stark_bench kernel`; here blocked-vs-packed shows what the
+    // register-tiled leaf is worth end-to-end on a distributed run.
+    for kind in
+        [BackendKind::Xla, BackendKind::Packed, BackendKind::Blocked, BackendKind::XlaPallas]
+    {
         let backend = match crate::config::build_backend(kind, h.scale.executors) {
             Ok(be) => be,
             Err(_) => continue, // artifacts missing: skip XLA arms

@@ -1,0 +1,215 @@
+//! Kernel ablation (EXPERIMENTS.md §Perf change 6): GFLOP/s of the
+//! native leaf kernels — naive vs blocked vs packed vs fused-packed —
+//! across block sizes, plus full serial Strassen with fused vs
+//! materialized operand packing. `stark_bench kernel` prints the table
+//! and writes the machine-readable `BENCH_kernel.json` so the kernel
+//! perf trajectory is tracked across PRs instead of asserted.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::matrix::gemm::{gemm_fused, gemm_packed, materialize, MatRef};
+use crate::matrix::multiply::Kernel;
+use crate::matrix::strassen::{strassen_serial_materialized_with, strassen_serial_with};
+use crate::matrix::DenseMatrix;
+use crate::util::bench::{bench_budget, black_box};
+use crate::util::json::Value;
+use crate::util::table::Table;
+
+/// One measured `(backend, n)` point.
+#[derive(Debug, Clone)]
+pub struct KernelPoint {
+    pub backend: String,
+    pub n: usize,
+    pub wall_ms: f64,
+    pub gflops: f64,
+}
+
+/// Effective GFLOP/s of an `n³` product (2n³ flops; Strassen rows use
+/// the same denominator, so their "effective rate" folds the flop saving
+/// in — higher is faster wall-clock, comparable across rows).
+fn gflops(n: usize, ms: f64) -> f64 {
+    2.0 * (n as f64).powi(3) / (ms / 1e3) / 1e9
+}
+
+/// Run the ablation over `sizes`. Naive is skipped above 512 (its
+/// O(n³) at scalar speed would dominate the whole run); the skip is
+/// printed so the gap in the table is explained, not silent.
+pub fn run(sizes: &[usize], budget: Duration) -> Vec<KernelPoint> {
+    let mut points = Vec::new();
+    for &n in sizes {
+        let a = DenseMatrix::random(n, n, n as u64);
+        let b = DenseMatrix::random(n, n, n as u64 + 1);
+        for kernel in Kernel::ALL {
+            if kernel == Kernel::Naive && n > 512 {
+                println!("(naive skipped at n={n}: scalar O(n³) would dominate the run)");
+                continue;
+            }
+            let r = bench_budget(&format!("{kernel} {n}"), budget, 3, || {
+                black_box(kernel.multiply(&a, &b));
+            });
+            points.push(KernelPoint {
+                backend: kernel.name().to_string(),
+                n,
+                wall_ms: r.median_ms,
+                gflops: gflops(n, r.median_ms),
+            });
+        }
+
+        // Fused two-term operands (one Strassen add/sub folded into the
+        // packing) vs materializing the sums first — same math, the
+        // temporaries are the only difference.
+        let a2 = DenseMatrix::random(n, n, n as u64 + 2);
+        let b2 = DenseMatrix::random(n, n, n as u64 + 3);
+        let r = bench_budget(&format!("fused-packed {n}"), budget, 3, || {
+            let lhs = [(1.0, MatRef::new(&a)), (1.0, MatRef::new(&a2))];
+            let rhs = [(1.0, MatRef::new(&b)), (-1.0, MatRef::new(&b2))];
+            black_box(gemm_fused(&lhs, &rhs));
+        });
+        points.push(KernelPoint {
+            backend: "fused-packed".into(),
+            n,
+            wall_ms: r.median_ms,
+            gflops: gflops(n, r.median_ms),
+        });
+        let r = bench_budget(&format!("packed+temps {n}"), budget, 3, || {
+            let lhs = materialize(&[(1.0, MatRef::new(&a)), (1.0, MatRef::new(&a2))]);
+            let rhs = materialize(&[(1.0, MatRef::new(&b)), (-1.0, MatRef::new(&b2))]);
+            black_box(gemm_packed(&lhs, &rhs));
+        });
+        points.push(KernelPoint {
+            backend: "packed+temps".into(),
+            n,
+            wall_ms: r.median_ms,
+            gflops: gflops(n, r.median_ms),
+        });
+    }
+
+    // Full serial Strassen at the largest size: fused term-list
+    // recursion vs per-level materialization, 2 recursion levels.
+    if let Some(&n) = sizes.iter().filter(|&&n| n.is_power_of_two() && n >= 8).max() {
+        let cutoff = (n / 4).max(1);
+        let a = DenseMatrix::random(n, n, 91);
+        let b = DenseMatrix::random(n, n, 92);
+        let r = bench_budget(&format!("strassen-fused {n}"), budget, 3, || {
+            black_box(strassen_serial_with(&a, &b, cutoff));
+        });
+        points.push(KernelPoint {
+            backend: "strassen-fused".into(),
+            n,
+            wall_ms: r.median_ms,
+            gflops: gflops(n, r.median_ms),
+        });
+        let r = bench_budget(&format!("strassen-materialized {n}"), budget, 3, || {
+            black_box(strassen_serial_materialized_with(&a, &b, cutoff));
+        });
+        points.push(KernelPoint {
+            backend: "strassen-materialized".into(),
+            n,
+            wall_ms: r.median_ms,
+            gflops: gflops(n, r.median_ms),
+        });
+    }
+    points
+}
+
+/// Render the points as the EXPERIMENTS.md-style table.
+pub fn print_table(points: &[KernelPoint]) {
+    println!("\n== kernel ablation (GFLOP/s, median) ==");
+    let mut t = Table::new(vec!["backend", "n", "wall ms", "GFLOP/s"]);
+    for p in points {
+        t.row(vec![
+            p.backend.clone(),
+            p.n.to_string(),
+            format!("{:.2}", p.wall_ms),
+            format!("{:.2}", p.gflops),
+        ]);
+    }
+    t.print();
+}
+
+/// Machine-readable report body (`BENCH_kernel.json` schema). The
+/// `provenance` field distinguishes rows this harness measured from
+/// hand-written projections (the bootstrap file committed before the
+/// first real run) — consumers diffing the perf trajectory should
+/// ignore any file not marked `measured`.
+pub fn to_json(points: &[KernelPoint]) -> Value {
+    Value::obj(vec![
+        ("schema", Value::str("stark/kernel-ablation/v1")),
+        ("provenance", Value::str("measured: stark_bench kernel")),
+        (
+            "note",
+            Value::str(
+                "regenerate with: cargo run --release --bin stark_bench -- kernel \
+                 [--sizes 128,256,512,1024]",
+            ),
+        ),
+        (
+            "rows",
+            Value::Array(
+                points
+                    .iter()
+                    .map(|p| {
+                        Value::obj(vec![
+                            ("backend", Value::str(p.backend.clone())),
+                            ("n", Value::num(p.n as f64)),
+                            ("wall_ms", Value::num(p.wall_ms)),
+                            ("gflops", Value::num(p.gflops)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Run, print, and write `<dir>/BENCH_kernel.json`.
+pub fn run_and_save(sizes: &[usize], budget: Duration, dir: impl AsRef<Path>) -> Result<PathBuf> {
+    let points = run(sizes, budget);
+    print_table(&points);
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating output dir {}", dir.display()))?;
+    let path = dir.join("BENCH_kernel.json");
+    std::fs::write(&path, to_json(&points).to_json_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micro_run_covers_all_backends() {
+        let points = run(&[16], Duration::from_millis(1));
+        let backends: Vec<&str> = points.iter().map(|p| p.backend.as_str()).collect();
+        for want in
+            ["naive", "blocked", "packed", "fused-packed", "packed+temps", "strassen-fused"]
+        {
+            assert!(backends.contains(&want), "missing {want} in {backends:?}");
+        }
+        assert!(points.iter().all(|p| p.gflops > 0.0 && p.wall_ms > 0.0));
+    }
+
+    #[test]
+    fn json_schema_has_rows() {
+        let points = run(&[8], Duration::from_millis(1));
+        let v = to_json(&points);
+        assert_eq!(v.get("schema").and_then(Value::as_str), Some("stark/kernel-ablation/v1"));
+        assert_eq!(
+            v.get("provenance").and_then(Value::as_str),
+            Some("measured: stark_bench kernel")
+        );
+        let rows = v.get("rows").and_then(Value::as_array).unwrap();
+        assert_eq!(rows.len(), points.len());
+        for r in rows {
+            assert!(r.get("backend").is_some());
+            assert!(r.get("n").is_some());
+            assert!(r.get("wall_ms").is_some());
+            assert!(r.get("gflops").is_some());
+        }
+    }
+}

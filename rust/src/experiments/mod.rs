@@ -24,6 +24,7 @@ pub mod fig11;
 pub mod fig12;
 pub mod fig8;
 pub mod fig9;
+pub mod kernel;
 pub mod report;
 pub mod table6;
 pub mod table7;
@@ -65,7 +66,7 @@ impl Default for Scale {
             // Native leaf for timing experiments: measured task times stay
             // free of single-host PJRT queueing (§Perf). The XLA/Pallas
             // path is exercised by table6, the ablations, and the tests.
-            backend: BackendKind::Native,
+            backend: BackendKind::Packed,
             executors: 2,
             cores: 2,
             net_bandwidth: Some(1.75e9), // 14 Gb/s, the paper's fabric
@@ -81,7 +82,7 @@ impl Scale {
         Self {
             sizes: vec![128, 256],
             bs: vec![2, 4],
-            backend: BackendKind::Native,
+            backend: BackendKind::Packed,
             net_bandwidth: None,
             reps: 1,
             ..Default::default()

@@ -10,8 +10,8 @@
 //! - `info`        — environment and artifact inventory.
 //!
 //! Common flags: `--n`, `--b`, `--executors`, `--cores`, `--backend
-//! native|xla|xla-pallas`, `--net-mbps`, `--seed`, `--fused-leaf`,
-//! `--isolate-multiply`, `--algo stark|marlin|mllib`.
+//! naive|blocked|packed|xla|xla-pallas`, `--net-mbps`, `--seed`,
+//! `--fused-leaf`, `--isolate-multiply`, `--algo stark|marlin|mllib`.
 
 use anyhow::Result;
 
@@ -37,7 +37,9 @@ FLAGS (shared):
   --b <int>            splits per side             [4]
   --executors <int>    simulated executors         [2]
   --cores <int>        cores per executor          [2]
-  --backend <kind>     native | xla | xla-pallas   [xla]
+  --backend <kind>     naive | blocked | packed (pure Rust)
+                       | xla | xla-pallas (AOT artifacts)   [xla]
+                       ("native" = alias for packed)
   --net-mbps <float>   simulated net bandwidth     [off]
   --seed <int>         input matrix seed           [42]
   --algo <name>        stark | marlin | mllib      [stark]

@@ -123,12 +123,24 @@ impl DenseMatrix {
         Self { rows: self.rows, cols: self.cols, data }
     }
 
-    /// Transposed copy.
+    /// Transposed copy, cache-tiled: both the read and the write touch
+    /// at most a `TILE × TILE` window at a time (32² × 8 B = 8 KiB, two
+    /// L1-resident tiles), instead of the column-strided whole-matrix
+    /// write whose every store missed for large `n`. (The GEMM packers
+    /// read strided views directly and never transpose; this is the
+    /// driver-edge data-prep utility.)
     pub fn transpose(&self) -> Self {
+        const TILE: usize = 32;
         let mut out = Self::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+        for r0 in (0..self.rows).step_by(TILE) {
+            let r1 = (r0 + TILE).min(self.rows);
+            for c0 in (0..self.cols).step_by(TILE) {
+                let c1 = (c0 + TILE).min(self.cols);
+                for r in r0..r1 {
+                    for c in c0..c1 {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
             }
         }
         out
@@ -265,6 +277,21 @@ mod tests {
         let m = DenseMatrix::random(3, 5, 1);
         assert_eq!(m.transpose().transpose(), m);
         assert_eq!(m.transpose().get(4, 2), m.get(2, 4));
+    }
+
+    #[test]
+    fn transpose_tiled_edges() {
+        // Shapes straddling the 32-tile boundary in both dimensions.
+        for (r, c) in [(32, 32), (33, 31), (70, 33), (1, 100)] {
+            let m = DenseMatrix::random(r, c, (r * 100 + c) as u64);
+            let t = m.transpose();
+            assert_eq!((t.rows(), t.cols()), (c, r));
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t.get(j, i), m.get(i, j), "({i},{j}) of {r}x{c}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,463 @@
+//! Packed register-tiled GEMM with fused Strassen operand packing —
+//! the leaf kernel behind [`crate::matrix::multiply::Kernel::Packed`]
+//! (EXPERIMENTS.md §Perf change 6).
+//!
+//! The BLIS decomposition (Van Zee & van de Geijn; Huang et al.,
+//! *Implementing Strassen's Algorithm with BLIS*, arXiv:1605.01078):
+//!
+//! ```text
+//! for jc in steps of NC:                 (B column macro-panel)
+//!   for pc in steps of KC:               (contraction block)
+//!     pack B[pc.., jc..] into row-panels of NR   (fits L3)
+//!     for ic in steps of MC:             (A row macro-panel, ∥ across threads)
+//!       pack A[ic.., pc..] into col-panels of MR (fits L2)
+//!       for each (MR × NR) tile: micro-kernel over the packed panels
+//! ```
+//!
+//! The micro-kernel keeps an `MR × NR` accumulator block in registers and
+//! streams the packed panels with unit stride, so every loaded `a` value
+//! is reused NR times and every `b` value MR times — versus 1× in the
+//! `ikj` kernels, which is the entire speedup.
+//!
+//! **Fused operand packing** is what makes this a *Strassen* kernel:
+//! [`gemm_fused`] takes each operand as a signed sum of matrix views
+//! (`Σ αᵢ·Aᵢ`, `Σ βⱼ·Bⱼ`) and evaluates the sum *inside the packing
+//! loops*. One Strassen level's `M6 = (A21 − A11)(B11 + B12)` therefore
+//! reads the quadrants in place — no `A21 − A11` temporary is ever
+//! materialized (the `m_operands` allocations this replaces; see
+//! `matrix/strassen.rs`).
+//!
+//! **Bitwise reproducibility.** Per output element, products are
+//! accumulated in ascending-`k` order starting from the existing C value
+//! (the micro-kernel loads the C tile, accumulates KC terms, stores it
+//! back — one read-modify-write per `pc` block). That is exactly the
+//! summation order of `matmul_naive`/`matmul_blocked`, and Rust never
+//! contracts `mul + add` into FMA, so all three kernels produce
+//! bit-identical results — asserted in `tests/proptest_gemm.rs` and
+//! relied on by the leaf-backend swap test in `algos/stark.rs`.
+
+use crate::matrix::DenseMatrix;
+
+/// Micro-tile rows: 8 × f64 = one cache line, 8 register accumulator
+/// rows of NR lanes each on AVX2-class hardware.
+pub const MR: usize = 8;
+/// Micro-tile columns: 4 × f64 = one 256-bit vector register per row.
+pub const NR: usize = 4;
+/// Contraction block: KC × (MR + NR) × 8 B of panel data live per tile
+/// sweep; 256 keeps the A macro-panel within a 256 KiB L2 share.
+pub const KC: usize = 256;
+/// A macro-panel rows (multiple of MR): MC × KC × 8 B = 256 KiB.
+pub const MC: usize = 128;
+/// B macro-panel columns (multiple of NR): KC × NC × 8 B = 4 MiB in L3.
+pub const NC: usize = 2048;
+
+/// Borrowed strided view of a row-major matrix (or a rectangular window
+/// of one). Lets the packers read Strassen quadrants in place.
+#[derive(Debug, Clone, Copy)]
+pub struct MatRef<'a> {
+    data: &'a [f64],
+    rows: usize,
+    cols: usize,
+    /// Distance between consecutive rows in `data`.
+    row_stride: usize,
+}
+
+impl<'a> MatRef<'a> {
+    /// Whole-matrix view.
+    pub fn new(m: &'a DenseMatrix) -> Self {
+        Self { data: m.as_slice(), rows: m.rows(), cols: m.cols(), row_stride: m.cols() }
+    }
+
+    /// Window with top-left corner `(r0, c0)` — no copy, unlike
+    /// [`DenseMatrix::submatrix`].
+    pub fn view(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> MatRef<'a> {
+        assert!(r0 + rows <= self.rows && c0 + cols <= self.cols, "view out of bounds");
+        MatRef {
+            data: &self.data[r0 * self.row_stride + c0..],
+            rows,
+            cols,
+            row_stride: self.row_stride,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Element access (strided).
+    #[inline(always)]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.row_stride + c]
+    }
+
+    /// One row as a slice.
+    #[inline(always)]
+    fn row(&self, r: usize) -> &'a [f64] {
+        &self.data[r * self.row_stride..r * self.row_stride + self.cols]
+    }
+}
+
+/// One signed operand term `coefficient · matrix`. A Strassen operand is
+/// a slice of 1–2 of these; recursive fused algorithms chain them (the
+/// recursions in `strassen.rs`/`winograd.rs` compact any list longer
+/// than [`MAX_FUSED_TERMS`] back into one owned term, bounding the
+/// per-element packing cost).
+pub type Term<'a> = (f64, MatRef<'a>);
+
+/// Longest operand term list worth packing fused: beyond this the
+/// per-element multiply-accumulate chain in the packers costs more than
+/// one materialization pass, and recursive chains (Winograd's `s4`/`t4`
+/// grow 4× per level) would otherwise explode multiplicatively.
+pub const MAX_FUSED_TERMS: usize = 4;
+
+/// Narrow every term of a square operand to quadrant `(qr, qc)` — the
+/// "division" step of the fused Strassen/Winograd recursions (no copy,
+/// every view just shrinks).
+pub fn quad_terms<'a>(terms: &[Term<'a>], qr: usize, qc: usize) -> Vec<Term<'a>> {
+    let h = terms[0].1.rows() / 2;
+    terms.iter().map(|&(s, m)| (s, m.view(qr * h, qc * h, h, h))).collect()
+}
+
+/// Signed concatenation `x + sign·y` of two operand term lists.
+pub fn cat_terms<'a>(x: &[Term<'a>], sign: f64, y: &[Term<'a>]) -> Vec<Term<'a>> {
+    let mut out = x.to_vec();
+    out.extend(y.iter().map(|&(s, m)| (sign * s, m)));
+    out
+}
+
+fn check_terms(terms: &[Term], what: &str) -> (usize, usize) {
+    assert!(!terms.is_empty(), "{what}: empty operand term list");
+    let (r, c) = (terms[0].1.rows(), terms[0].1.cols());
+    for (_, m) in terms {
+        assert_eq!((m.rows(), m.cols()), (r, c), "{what}: term shape mismatch");
+    }
+    (r, c)
+}
+
+/// Materialize a signed sum of views into an owned matrix — the
+/// unfused fallback (and the reference the fused path is tested
+/// against). Sum order matches the packers: term 0 first.
+pub fn materialize(terms: &[Term]) -> DenseMatrix {
+    let (rows, cols) = check_terms(terms, "materialize");
+    let mut out = DenseMatrix::zeros(rows, cols);
+    let ov = out.as_mut_slice();
+    for r in 0..rows {
+        let orow = &mut ov[r * cols..(r + 1) * cols];
+        for (t, &(coef, m)) in terms.iter().enumerate() {
+            let mrow = m.row(r);
+            if t == 0 {
+                for (o, &x) in orow.iter_mut().zip(mrow) {
+                    *o = coef * x;
+                }
+            } else {
+                for (o, &x) in orow.iter_mut().zip(mrow) {
+                    *o += coef * x;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pack `rows × kc` of the fused A operand (rows `r0..`, contraction
+/// `k0..k0+kc`) into column-major panels of MR rows. Partial panels are
+/// zero-padded so the micro-kernel never branches.
+fn pack_a(terms: &[Term], r0: usize, rows: usize, k0: usize, kc: usize, ap: &mut Vec<f64>) {
+    let panels = rows.div_ceil(MR);
+    ap.clear();
+    ap.resize(panels * kc * MR, 0.0);
+    for p in 0..panels {
+        let pr = p * MR;
+        let h = MR.min(rows - pr);
+        let dst = &mut ap[p * kc * MR..(p + 1) * kc * MR];
+        for (t, &(coef, m)) in terms.iter().enumerate() {
+            for r in 0..h {
+                let src = &m.row(r0 + pr + r)[k0..k0 + kc];
+                if t == 0 {
+                    for (k, &x) in src.iter().enumerate() {
+                        dst[k * MR + r] = coef * x;
+                    }
+                } else {
+                    for (k, &x) in src.iter().enumerate() {
+                        dst[k * MR + r] += coef * x;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack `kc × cols` of the fused B operand (contraction `k0..`, columns
+/// `c0..c0+cols`) into row-major panels of NR columns, zero-padded.
+fn pack_b(terms: &[Term], k0: usize, kc: usize, c0: usize, cols: usize, bp: &mut Vec<f64>) {
+    let panels = cols.div_ceil(NR);
+    bp.clear();
+    bp.resize(panels * kc * NR, 0.0);
+    for p in 0..panels {
+        let pc = p * NR;
+        let w = NR.min(cols - pc);
+        let dst = &mut bp[p * kc * NR..(p + 1) * kc * NR];
+        for (t, &(coef, m)) in terms.iter().enumerate() {
+            for k in 0..kc {
+                let src = &m.row(k0 + k)[c0 + pc..c0 + pc + w];
+                let d = &mut dst[k * NR..k * NR + w];
+                if t == 0 {
+                    for (o, &x) in d.iter_mut().zip(src) {
+                        *o = coef * x;
+                    }
+                } else {
+                    for (o, &x) in d.iter_mut().zip(src) {
+                        *o += coef * x;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The register kernel: `acc[MR][NR] += Ap(:, k) ⊗ Bp(k, :)` over one
+/// packed panel pair. Fixed trip counts on the inner loops let LLVM keep
+/// the whole accumulator block in vector registers.
+#[inline(always)]
+fn micro_kernel(kc: usize, ap: &[f64], bp: &[f64], acc: &mut [[f64; NR]; MR]) {
+    for (a, b) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)).take(kc) {
+        for i in 0..MR {
+            let ai = a[i];
+            for j in 0..NR {
+                acc[i][j] += ai * b[j];
+            }
+        }
+    }
+}
+
+/// Sweep the packed panels over one `mc × nc` block of C (C tile
+/// read-modify-write keeps ascending-`k` accumulation per element).
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    c: &mut [f64],
+    ldc: usize,
+    ic: usize,
+    jc: usize,
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    ap: &[f64],
+    bp: &[f64],
+) {
+    for jp in 0..nc.div_ceil(NR) {
+        let j0 = jp * NR;
+        let w = NR.min(nc - j0);
+        let bpanel = &bp[jp * kc * NR..(jp + 1) * kc * NR];
+        for ip in 0..mc.div_ceil(MR) {
+            let i0 = ip * MR;
+            let h = MR.min(mc - i0);
+            let apanel = &ap[ip * kc * MR..(ip + 1) * kc * MR];
+            let mut acc = [[0.0f64; NR]; MR];
+            for i in 0..h {
+                let crow = (ic + i0 + i) * ldc + jc + j0;
+                for j in 0..w {
+                    acc[i][j] = c[crow + j];
+                }
+            }
+            micro_kernel(kc, apanel, bpanel, &mut acc);
+            for i in 0..h {
+                let crow = (ic + i0 + i) * ldc + jc + j0;
+                for j in 0..w {
+                    c[crow + j] = acc[i][j];
+                }
+            }
+        }
+    }
+}
+
+/// `C += (Σ αᵢ·Aᵢ) · (Σ βⱼ·Bⱼ)` — the fused-packing driver. `c` must be
+/// `(Σα·A).rows × (Σβ·B).cols`; pass a zeroed matrix for plain `=`.
+pub fn gemm_fused_into(c: &mut DenseMatrix, a_terms: &[Term], b_terms: &[Term]) {
+    let (m, k) = check_terms(a_terms, "gemm A operand");
+    let (kb, n) = check_terms(b_terms, "gemm B operand");
+    assert_eq!(k, kb, "contraction mismatch");
+    assert_eq!((c.rows(), c.cols()), (m, n), "output shape mismatch");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let ldc = n;
+    let cs = c.as_mut_slice();
+    let mut ap = Vec::new();
+    let mut bp = Vec::new();
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            pack_b(b_terms, pc, kc, jc, nc, &mut bp);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                pack_a(a_terms, ic, mc, pc, kc, &mut ap);
+                macro_kernel(cs, ldc, ic, jc, mc, nc, kc, &ap, &bp);
+            }
+        }
+    }
+}
+
+/// Allocate-and-multiply form of [`gemm_fused_into`].
+pub fn gemm_fused(a_terms: &[Term], b_terms: &[Term]) -> DenseMatrix {
+    let (m, _) = check_terms(a_terms, "gemm A operand");
+    let (_, n) = check_terms(b_terms, "gemm B operand");
+    let mut c = DenseMatrix::zeros(m, n);
+    gemm_fused_into(&mut c, a_terms, b_terms);
+    c
+}
+
+/// Plain packed product `A @ B` (single-term fused call).
+pub fn gemm_packed(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.cols(), b.rows(), "contraction mismatch");
+    gemm_fused(&[(1.0, MatRef::new(a))], &[(1.0, MatRef::new(b))])
+}
+
+/// Threaded packed product: the row dimension is split into contiguous
+/// MR-aligned ranges, one per worker (the `matrix/parallel.rs` row-panel
+/// idea applied at the macro level — MR granularity so a many-core host
+/// stays busy even at moderate `m`). Each worker reads A through a view
+/// — no panel copies — and packs its own B panels (an O(k·n) cost per
+/// worker, negligible against its O(m/threads·k·n) flops once each
+/// worker owns a few MR rows).
+pub fn gemm_packed_parallel(a: &DenseMatrix, b: &DenseMatrix, threads: usize) -> DenseMatrix {
+    assert_eq!(a.cols(), b.rows(), "contraction mismatch");
+    let (m, n) = (a.rows(), b.cols());
+    let chunks = m.div_ceil(MR);
+    let threads = threads.max(1).min(chunks.max(1));
+    if threads <= 1 {
+        return gemm_packed(a, b);
+    }
+    let rows_per = m.div_ceil(threads).div_ceil(MR) * MR;
+    let panels: Vec<(usize, DenseMatrix)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let r0 = t * rows_per;
+            if r0 >= m {
+                break;
+            }
+            let rows = rows_per.min(m - r0);
+            let (a, b) = (&*a, &*b);
+            handles.push(scope.spawn(move || {
+                let mut c = DenseMatrix::zeros(rows, n);
+                gemm_fused_into(
+                    &mut c,
+                    &[(1.0, MatRef::new(a).view(r0, 0, rows, a.cols()))],
+                    &[(1.0, MatRef::new(b))],
+                );
+                (r0, c)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("gemm worker panicked")).collect()
+    });
+    let mut out = DenseMatrix::zeros(m, n);
+    for (r0, panel) in panels {
+        out.set_submatrix(r0, 0, &panel);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::multiply::{matmul_blocked, matmul_naive};
+
+    fn packed_vs_naive(m: usize, k: usize, n: usize) {
+        let a = DenseMatrix::random(m, k, (m * 31 + k) as u64);
+        let b = DenseMatrix::random(k, n, (k * 17 + n) as u64);
+        let want = matmul_naive(&a, &b);
+        let got = gemm_packed(&a, &b);
+        assert_eq!(want.as_slice(), got.as_slice(), "packed != naive for {m}x{k}x{n}");
+    }
+
+    #[test]
+    fn packed_matches_naive_bitwise() {
+        // Tile multiples, off-by-one edges, tiny and rectangular shapes.
+        packed_vs_naive(8, 8, 8);
+        packed_vs_naive(1, 1, 1);
+        packed_vs_naive(7, 13, 21);
+        packed_vs_naive(16, 48, 8);
+        packed_vs_naive(MR + 1, KC + 3, NR + 1);
+        packed_vs_naive(65, 65, 65);
+    }
+
+    #[test]
+    fn packed_matches_blocked_bitwise() {
+        let a = DenseMatrix::random(130, 70, 1);
+        let b = DenseMatrix::random(70, 90, 2);
+        assert_eq!(gemm_packed(&a, &b).as_slice(), matmul_blocked(&a, &b).as_slice());
+    }
+
+    #[test]
+    fn fused_signs_match_materialized() {
+        let n = 33;
+        let mats: Vec<DenseMatrix> =
+            (0..4).map(|i| DenseMatrix::random(n, n, 50 + i as u64)).collect();
+        for sa in [1.0, -1.0] {
+            for sb in [1.0, -1.0] {
+                let a_terms = [(1.0, MatRef::new(&mats[0])), (sa, MatRef::new(&mats[1]))];
+                let b_terms = [(1.0, MatRef::new(&mats[2])), (sb, MatRef::new(&mats[3]))];
+                let want = matmul_naive(&materialize(&a_terms), &materialize(&b_terms));
+                let got = gemm_fused(&a_terms, &b_terms);
+                assert_eq!(want.as_slice(), got.as_slice(), "signs ({sa},{sb})");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_reads_views_in_place() {
+        // M6-style operand: (A21 − A11)(B11 + B12) from quadrant views.
+        let n = 24;
+        let a = DenseMatrix::random(n, n, 7);
+        let b = DenseMatrix::random(n, n, 8);
+        let h = n / 2;
+        let av = MatRef::new(&a);
+        let bv = MatRef::new(&b);
+        let lhs = [(1.0, av.view(h, 0, h, h)), (-1.0, av.view(0, 0, h, h))];
+        let rhs = [(1.0, bv.view(0, 0, h, h)), (1.0, bv.view(0, h, h, h))];
+        let want = matmul_naive(
+            &a.submatrix(h, 0, h, h).sub(&a.submatrix(0, 0, h, h)),
+            &b.submatrix(0, 0, h, h).add(&b.submatrix(0, h, h, h)),
+        );
+        assert_eq!(want.as_slice(), gemm_fused(&lhs, &rhs).as_slice());
+    }
+
+    #[test]
+    fn gemm_into_accumulates() {
+        let a = DenseMatrix::random(9, 5, 1);
+        let b = DenseMatrix::random(5, 11, 2);
+        let mut c = matmul_naive(&a, &b);
+        gemm_fused_into(&mut c, &[(1.0, MatRef::new(&a))], &[(1.0, MatRef::new(&b))]);
+        let twice = matmul_naive(&a, &b).scale(2.0);
+        assert!(twice.allclose(&c, 1e-12));
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let a = DenseMatrix::random(300, 80, 3);
+        let b = DenseMatrix::random(80, 50, 4);
+        let want = gemm_packed(&a, &b);
+        for threads in [1, 2, 3, 8] {
+            let got = gemm_packed_parallel(&a, &b, threads);
+            assert_eq!(want.as_slice(), got.as_slice(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "contraction mismatch")]
+    fn rejects_bad_shapes() {
+        gemm_packed(&DenseMatrix::zeros(2, 3), &DenseMatrix::zeros(2, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "term shape mismatch")]
+    fn rejects_mismatched_terms() {
+        let a = DenseMatrix::zeros(2, 2);
+        let b = DenseMatrix::zeros(3, 3);
+        materialize(&[(1.0, MatRef::new(&a)), (1.0, MatRef::new(&b))]);
+    }
+}

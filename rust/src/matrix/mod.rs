@@ -7,6 +7,7 @@
 //! native leaf backend.
 
 pub mod dense;
+pub mod gemm;
 pub mod gen;
 pub mod io;
 pub mod multiply;
@@ -15,8 +16,9 @@ pub mod strassen;
 pub mod winograd;
 
 pub use dense::DenseMatrix;
+pub use gemm::{gemm_fused, gemm_packed, gemm_packed_parallel, MatRef, Term};
 pub use gen::Rng64;
-pub use multiply::{matmul_blocked, matmul_naive};
-pub use parallel::matmul_parallel;
+pub use multiply::{matmul_blocked, matmul_naive, Kernel};
+pub use parallel::{matmul_parallel, matmul_parallel_with};
 pub use strassen::strassen_serial;
 pub use winograd::winograd_serial;

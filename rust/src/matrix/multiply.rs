@@ -1,19 +1,106 @@
 //! Serial single-node multiplication kernels.
 //!
-//! Table VI baselines ("Serial Naive") and the native fallback leaf
-//! backend. `matmul_naive` is the textbook three-loop form in `ikj` order
-//! (row-major friendly); `matmul_blocked` adds L1-cache tiling, the form
-//! the coordinator's native backend actually calls on the hot path.
+//! Table VI baselines ("Serial Naive") and the native leaf-backend
+//! kernels. `matmul_naive` is the textbook three-loop form in `ikj` order
+//! (row-major friendly); `matmul_blocked` adds L1-cache tiling; the
+//! packed register-tiled kernel lives in [`crate::matrix::gemm`] and is
+//! what the coordinator's native backend calls on the hot path. All
+//! three accumulate each output element in ascending-`k` order, so their
+//! results are bit-identical — [`Kernel`] selects between them without
+//! perturbing any distributed result.
 
 use crate::matrix::DenseMatrix;
+
+/// Which native kernel multiplies leaf blocks — the pure-Rust arms of
+/// the `config::BackendKind` leaf-backend ablation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Kernel {
+    /// Textbook three-loop `ikj` multiply.
+    Naive,
+    /// Cache-blocked `ikj` multiply ([`BLOCK_TILE`] tiles).
+    Blocked,
+    /// Packed register-tiled GEMM ([`crate::matrix::gemm`]) — default.
+    #[default]
+    Packed,
+}
+
+impl Kernel {
+    /// All native kernels, slowest first (the ablation order).
+    pub const ALL: [Kernel; 3] = [Kernel::Naive, Kernel::Blocked, Kernel::Packed];
+
+    /// Multiply through the selected kernel.
+    pub fn multiply(self, a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+        match self {
+            Kernel::Naive => matmul_naive(a, b),
+            Kernel::Blocked => matmul_blocked(a, b),
+            Kernel::Packed => crate::matrix::gemm::gemm_packed(a, b),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Naive => "naive",
+            Kernel::Blocked => "blocked",
+            Kernel::Packed => "packed",
+        }
+    }
+}
+
+impl std::fmt::Display for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Kernel {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" => Ok(Kernel::Naive),
+            "blocked" => Ok(Kernel::Blocked),
+            "packed" => Ok(Kernel::Packed),
+            other => Err(format!("unknown kernel {other:?} (naive|blocked|packed)")),
+        }
+    }
+}
 
 /// Cache-tile edge for [`matmul_blocked`]. Swept in `benches/hotpath.rs`
 /// (EXPERIMENTS.md §Perf): 128 beat 64 by ~6% on this host (128×128 f64 =
 /// 128 KiB/tile still fits L2), so 128 is the default.
 pub const BLOCK_TILE: usize = 128;
 
-/// Textbook three-loop multiply (`ikj` order for unit-stride inner loops).
+/// Textbook three-loop multiply (`ikj` order for unit-stride inner
+/// loops). Dense-workload reference: no per-`k` branching, so flop
+/// accounting is exact and the inner loop stays branch-free (the old
+/// `aik == 0.0` skip lives on in [`matmul_naive_sparse`]).
 pub fn matmul_naive(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.cols(), b.rows(), "contraction mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = DenseMatrix::zeros(m, n);
+    let (av, bv) = (a.as_slice(), b.as_slice());
+    let ov = out.as_mut_slice();
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = av[i * k + kk];
+            let brow = &bv[kk * n..(kk + 1) * n];
+            let orow = &mut ov[i * n..(i + 1) * n];
+            for (o, bb) in orow.iter_mut().zip(brow) {
+                *o += aik * bb;
+            }
+        }
+    }
+    out
+}
+
+/// Sparse-aware `ikj` multiply: skips the row update when `A(i,k)` is an
+/// exact zero. Wins only when A has *structural* zeros (identity-like
+/// blocks, masks); on dense workloads the per-`k` branch just pessimizes
+/// the common case, which is why [`matmul_naive`] no longer carries it.
+/// Note the skip changes signed-zero propagation (`-0.0` outputs may
+/// surface where the dense kernel writes `+0.0`), another reason it is
+/// opt-in rather than the default.
+pub fn matmul_naive_sparse(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
     assert_eq!(a.cols(), b.rows(), "contraction mismatch");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     let mut out = DenseMatrix::zeros(m, n);
@@ -130,5 +217,32 @@ mod tests {
     #[should_panic(expected = "contraction mismatch")]
     fn rejects_bad_shapes() {
         matmul_naive(&DenseMatrix::zeros(2, 3), &DenseMatrix::zeros(2, 3));
+    }
+
+    #[test]
+    fn sparse_variant_matches_dense_kernel() {
+        // Dense inputs: identical results.
+        let a = DenseMatrix::random(17, 9, 31);
+        let b = DenseMatrix::random(9, 23, 32);
+        assert_eq!(matmul_naive(&a, &b).as_slice(), matmul_naive_sparse(&a, &b).as_slice());
+        // Structurally sparse A: still the same product.
+        let mut sp = DenseMatrix::zeros(8, 8);
+        sp.set(0, 3, 2.0);
+        sp.set(5, 1, -1.5);
+        let d = DenseMatrix::random(8, 8, 33);
+        assert!(matmul_naive(&sp, &d).allclose(&matmul_naive_sparse(&sp, &d), 0.0));
+    }
+
+    #[test]
+    fn kernel_enum_dispatches_and_parses() {
+        let a = DenseMatrix::random(19, 11, 41);
+        let b = DenseMatrix::random(11, 7, 42);
+        let want = matmul_naive(&a, &b);
+        for k in Kernel::ALL {
+            assert_eq!(want.as_slice(), k.multiply(&a, &b).as_slice(), "kernel {k}");
+            assert_eq!(k.name().parse::<Kernel>().unwrap(), k);
+        }
+        assert_eq!(Kernel::default(), Kernel::Packed);
+        assert!("bogus".parse::<Kernel>().is_err());
     }
 }

@@ -1,17 +1,38 @@
 //! Multi-threaded single-node multiply — the "ParallelColt" analogue of
 //! Table VI: automatically uses all requested threads on one machine,
-//! splitting the output into row panels.
+//! splitting the output into row panels. Each worker multiplies its
+//! panel through the selected [`Kernel`]; the packed default delegates
+//! to [`gemm_packed_parallel`], which reads A through views (no panel
+//! copies).
 
-use crate::matrix::multiply::matmul_blocked;
+use crate::matrix::gemm::gemm_packed_parallel;
+use crate::matrix::multiply::Kernel;
 use crate::matrix::DenseMatrix;
 
-/// Threaded multiply with `threads` workers, each computing a contiguous
-/// row panel `A[rows_i, :] @ B` with the cache-blocked kernel.
+/// Threaded multiply with `threads` workers over the default (packed)
+/// kernel.
 pub fn matmul_parallel(a: &DenseMatrix, b: &DenseMatrix, threads: usize) -> DenseMatrix {
+    matmul_parallel_with(a, b, threads, Kernel::Packed)
+}
+
+/// Threaded multiply through an explicit kernel, each worker computing a
+/// contiguous row panel `A[rows_i, :] @ B`. The packed kernel delegates
+/// to [`gemm_packed_parallel`] (MR-aligned row split, A read through
+/// views — no panel copies); the `ikj` kernels copy their panel out
+/// first, as they always did.
+pub fn matmul_parallel_with(
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    threads: usize,
+    kernel: Kernel,
+) -> DenseMatrix {
     assert_eq!(a.cols(), b.rows(), "contraction mismatch");
+    if kernel == Kernel::Packed {
+        return gemm_packed_parallel(a, b, threads);
+    }
     let threads = threads.max(1).min(a.rows().max(1));
     if threads == 1 {
-        return matmul_blocked(a, b);
+        return kernel.multiply(a, b);
     }
     let (m, n) = (a.rows(), b.cols());
     let rows_per = m.div_ceil(threads);
@@ -26,8 +47,7 @@ pub fn matmul_parallel(a: &DenseMatrix, b: &DenseMatrix, threads: usize) -> Dens
             let r1 = ((t + 1) * rows_per).min(m);
             let (a, b) = (&*a, &*b);
             handles.push(scope.spawn(move || {
-                let panel = a.submatrix(r0, 0, r1 - r0, a.cols());
-                (r0, matmul_blocked(&panel, b))
+                (r0, kernel.multiply(&a.submatrix(r0, 0, r1 - r0, a.cols()), b))
             }));
         }
         handles.into_iter().map(|h| h.join().expect("panel worker panicked")).collect()
@@ -52,7 +72,20 @@ mod tests {
         let want = matmul_naive(&a, &b);
         for threads in [1, 2, 3, 8, 64] {
             let got = matmul_parallel(&a, &b, threads);
-            assert!(want.allclose(&got, 1e-12), "threads={threads}");
+            // Row-panel splits keep per-element accumulation order, so
+            // the threaded product is bit-identical to the serial one.
+            assert_eq!(want.as_slice(), got.as_slice(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn all_kernels_agree_threaded() {
+        let a = DenseMatrix::random(41, 23, 5);
+        let b = DenseMatrix::random(23, 19, 6);
+        let want = matmul_naive(&a, &b);
+        for kernel in Kernel::ALL {
+            let got = matmul_parallel_with(&a, &b, 3, kernel);
+            assert_eq!(want.as_slice(), got.as_slice(), "kernel={kernel}");
         }
     }
 

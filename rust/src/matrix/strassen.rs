@@ -1,16 +1,35 @@
 //! Serial Strassen multiplication (paper Algorithm 1, Table VI baseline).
 //!
 //! Recursive seven-multiplication scheme with a cutoff below which the
-//! cache-blocked naive kernel takes over — the same "threshold" parameter
-//! as the paper's Algorithm 1. The combine uses Strassen's correct
+//! packed GEMM takes over — the same "threshold" parameter as the
+//! paper's Algorithm 1. The combine uses Strassen's correct
 //! `C22 = M1 − M2 + M3 + M6` (the paper's listing misprints the M3 sign;
 //! see python/compile/kernels/combine.py).
+//!
+//! **Fused operand packing.** The recursion carries each operand as a
+//! signed *term list* over views of the original inputs (`A21 − A11` is
+//! `[(+1, A21), (−1, A11)]`, never a materialized matrix). Quadrant
+//! "division" just narrows every view, and the leaf hands its term lists
+//! to [`gemm_fused`], which evaluates the signed sums inside the packing
+//! loops (Huang et al., arXiv:1605.01078). Net effect: the 10+ operand
+//! temporaries the old `m_operands` allocated per recursion level are
+//! gone at *every* level — the only allocations left are the seven
+//! M-results and the output, which any Strassen must produce.
+//! `strassen_serial_materialized_with` keeps the old materialize-then-
+//! multiply structure as the "packed-with-temporaries" ablation arm
+//! (`benches/hotpath.rs`).
 
-use crate::matrix::multiply::matmul_blocked;
+use crate::matrix::gemm::{
+    cat_terms as cat, gemm_fused, materialize, quad_terms as quad, MatRef, Term,
+    MAX_FUSED_TERMS,
+};
 use crate::matrix::DenseMatrix;
 
-/// Default recursion cutoff: below this edge the blocked kernel wins.
-pub const DEFAULT_THRESHOLD: usize = 64;
+/// Default recursion cutoff: below this edge the packed GEMM wins.
+/// Re-tuned for the register-tiled kernel (EXPERIMENTS.md §Perf change
+/// 6): the faster leaf moves the 7-vs-8-multiplications crossover up
+/// from the 64 that suited `matmul_blocked`.
+pub const DEFAULT_THRESHOLD: usize = 256;
 
 /// Serial Strassen with the default cutoff.
 pub fn strassen_serial(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
@@ -20,29 +39,116 @@ pub fn strassen_serial(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
 /// Serial Strassen with an explicit cutoff. Requires square power-of-two
 /// operands (the paper's setting; §III-A notes the padding generalization).
 pub fn strassen_serial_with(a: &DenseMatrix, b: &DenseMatrix, threshold: usize) -> DenseMatrix {
+    validate(a, b);
+    strassen_terms(&[(1.0, MatRef::new(a))], &[(1.0, MatRef::new(b))], threshold.max(1))
+}
+
+/// The packed-with-temporaries ablation arm: same recursion, same packed
+/// leaf kernel, but every operand sum is materialized into a fresh
+/// matrix before multiplying (the pre-fusion structure). Exists so the
+/// fused-packing win is measured, not asserted.
+pub fn strassen_serial_materialized_with(
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    threshold: usize,
+) -> DenseMatrix {
+    validate(a, b);
+    strassen_terms_materialized(
+        &[(1.0, MatRef::new(a))],
+        &[(1.0, MatRef::new(b))],
+        threshold.max(1),
+    )
+}
+
+fn validate(a: &DenseMatrix, b: &DenseMatrix) {
     let n = a.rows();
     assert_eq!(a.rows(), a.cols(), "square operands required");
     assert_eq!(b.rows(), b.cols(), "square operands required");
     assert_eq!(a.rows(), b.rows(), "dimension mismatch");
     assert!(n.is_power_of_two(), "n={n} must be a power of two");
-    strassen_rec(a, b, threshold.max(1))
 }
 
-/// The 7 M-term operand pairs of one Strassen level, in paper order:
-/// `M_i = lhs_i @ rhs_i`. Shared with the distributed algorithm's tests.
+/// The single source of truth for Strassen's 7 M-term operand pairs, in
+/// paper order, over quadrant term lists `[q11, q12, q21, q22]` per
+/// side: `M_i = (Σ lhs_i)(Σ rhs_i)`. Every consumer — the serial fused
+/// recursion, the fused leaf, and the materialized forms — derives its
+/// table from here, so a sign can only ever be fixed in one place.
+fn m_pairs<'a>(
+    aq: &[Vec<Term<'a>>; 4],
+    bq: &[Vec<Term<'a>>; 4],
+) -> Vec<(Vec<Term<'a>>, Vec<Term<'a>>)> {
+    let [a11, a12, a21, a22] = aq;
+    let [b11, b12, b21, b22] = bq;
+    vec![
+        (cat(a11, 1.0, a22), cat(b11, 1.0, b22)), // M1
+        (cat(a21, 1.0, a22), b11.clone()),        // M2
+        (a11.clone(), cat(b12, -1.0, b22)),       // M3
+        (a22.clone(), cat(b21, -1.0, b11)),       // M4
+        (cat(a11, 1.0, a12), b22.clone()),        // M5
+        (cat(a21, -1.0, a11), cat(b11, 1.0, b12)), // M6
+        (cat(a12, -1.0, a22), cat(b21, 1.0, b22)), // M7
+    ]
+}
+
+/// [`m_pairs`] over eight owned quadrant matrices — the fused leaf paths
+/// (`strassen_leaf_fused`, the native backend) feed these straight into
+/// the packing loops; [`m_operands`] materializes them for backends that
+/// need owned matrices.
+#[allow(clippy::too_many_arguments)]
+pub fn m_operand_terms<'a>(
+    a11: &'a DenseMatrix, a12: &'a DenseMatrix, a21: &'a DenseMatrix, a22: &'a DenseMatrix,
+    b11: &'a DenseMatrix, b12: &'a DenseMatrix, b21: &'a DenseMatrix, b22: &'a DenseMatrix,
+) -> Vec<(Vec<Term<'a>>, Vec<Term<'a>>)> {
+    let t = |m: &'a DenseMatrix| vec![(1.0, MatRef::new(m))];
+    m_pairs(
+        &[t(a11), t(a12), t(a21), t(a22)],
+        &[t(b11), t(b12), t(b21), t(b22)],
+    )
+}
+
+/// Materialized form of [`m_operand_terms`] — owned `(lhs, rhs)` operand
+/// matrices for consumers that cannot pack fused (the composed
+/// `LeafBackend::strassen_leaf` default, tests).
+#[allow(clippy::too_many_arguments)]
 pub fn m_operands(
     a11: &DenseMatrix, a12: &DenseMatrix, a21: &DenseMatrix, a22: &DenseMatrix,
     b11: &DenseMatrix, b12: &DenseMatrix, b21: &DenseMatrix, b22: &DenseMatrix,
 ) -> Vec<(DenseMatrix, DenseMatrix)> {
-    vec![
-        (a11.add(a22), b11.add(b22)), // M1
-        (a21.add(a22), b11.clone()),  // M2
-        (a11.clone(), b12.sub(b22)),  // M3
-        (a22.clone(), b21.sub(b11)),  // M4
-        (a11.add(a12), b22.clone()),  // M5
-        (a21.sub(a11), b11.add(b12)), // M6
-        (a12.sub(a22), b21.add(b22)), // M7
-    ]
+    m_operand_terms(a11, a12, a21, a22, b11, b12, b21, b22)
+        .into_iter()
+        .map(|(l, r)| (materialize(&l), materialize(&r)))
+        .collect()
+}
+
+/// One fused Strassen level over owned quadrants
+/// `[a11,a12,a21,a22,b11,b12,b21,b22] → [c11,c12,c21,c22]`: the seven
+/// products run through [`gemm_fused`] with the add/sub folded into the
+/// packing — no operand temporaries. The native backend's
+/// `strassen_leaf` and the distributed fused-leaf path land here.
+pub fn strassen_leaf_fused(quads: &[DenseMatrix; 8]) -> [DenseMatrix; 4] {
+    let [a11, a12, a21, a22, b11, b12, b21, b22] = quads;
+    let ms: Vec<DenseMatrix> = m_operand_terms(a11, a12, a21, a22, b11, b12, b21, b22)
+        .iter()
+        .map(|(l, r)| gemm_fused(l, r))
+        .collect();
+    combine_quadrants(&ms)
+}
+
+/// The composed (non-fused) one-level Strassen: materialize the seven
+/// operand pairs, run each through `mul`, combine. The single shared
+/// implementation behind every backend that dispatches leaf products
+/// one at a time (`LeafBackend::strassen_leaf`'s default, the native
+/// non-packed kernels, the XLA small-block and error fallbacks).
+pub fn strassen_leaf_composed(
+    quads: &[DenseMatrix; 8],
+    mul: impl Fn(&DenseMatrix, &DenseMatrix) -> DenseMatrix,
+) -> [DenseMatrix; 4] {
+    let [a11, a12, a21, a22, b11, b12, b21, b22] = quads;
+    let ms: Vec<DenseMatrix> = m_operands(a11, a12, a21, a22, b11, b12, b21, b22)
+        .iter()
+        .map(|(l, r)| mul(l, r))
+        .collect();
+    combine_quadrants(&ms)
 }
 
 /// Combine M1..M7 into the C quadrants (correct-sign variant).
@@ -65,33 +171,77 @@ pub fn combine_quadrants(ms: &[DenseMatrix]) -> [DenseMatrix; 4] {
     [c11, c12, c21, c22]
 }
 
-fn strassen_rec(a: &DenseMatrix, b: &DenseMatrix, threshold: usize) -> DenseMatrix {
-    let n = a.rows();
-    if n <= threshold {
-        return matmul_blocked(a, b);
-    }
+/// The 7 recursive term-list pairs of one level: quadrant the incoming
+/// operands, then apply the shared [`m_pairs`] table.
+fn level_terms<'a>(
+    a: &[Term<'a>],
+    b: &[Term<'a>],
+) -> Vec<(Vec<Term<'a>>, Vec<Term<'a>>)> {
+    m_pairs(
+        &[quad(a, 0, 0), quad(a, 0, 1), quad(a, 1, 0), quad(a, 1, 1)],
+        &[quad(b, 0, 0), quad(b, 0, 1), quad(b, 1, 0), quad(b, 1, 1)],
+    )
+}
+
+fn assemble_level(n: usize, ms: &[DenseMatrix]) -> DenseMatrix {
     let h = n / 2;
-    let a11 = a.submatrix(0, 0, h, h);
-    let a12 = a.submatrix(0, h, h, h);
-    let a21 = a.submatrix(h, 0, h, h);
-    let a22 = a.submatrix(h, h, h, h);
-    let b11 = b.submatrix(0, 0, h, h);
-    let b12 = b.submatrix(0, h, h, h);
-    let b21 = b.submatrix(h, 0, h, h);
-    let b22 = b.submatrix(h, h, h, h);
-
-    let ms: Vec<DenseMatrix> = m_operands(&a11, &a12, &a21, &a22, &b11, &b12, &b21, &b22)
-        .iter()
-        .map(|(l, r)| strassen_rec(l, r, threshold))
-        .collect();
-    let [c11, c12, c21, c22] = combine_quadrants(&ms);
-
+    let [c11, c12, c21, c22] = combine_quadrants(ms);
     let mut out = DenseMatrix::zeros(n, n);
     out.set_submatrix(0, 0, &c11);
     out.set_submatrix(0, h, &c12);
     out.set_submatrix(h, 0, &c21);
     out.set_submatrix(h, h, &c22);
     out
+}
+
+fn strassen_terms(a: &[Term], b: &[Term], threshold: usize) -> DenseMatrix {
+    // Term lists grow 2x per level down the M1 chain; past
+    // MAX_FUSED_TERMS one materialization pass is cheaper than dragging
+    // the chain through every deeper pack, so compact and keep going.
+    if a.len() > MAX_FUSED_TERMS {
+        let am = materialize(a);
+        return strassen_terms(&[(1.0, MatRef::new(&am))], b, threshold);
+    }
+    if b.len() > MAX_FUSED_TERMS {
+        let bm = materialize(b);
+        return strassen_terms(a, &[(1.0, MatRef::new(&bm))], threshold);
+    }
+    let n = a[0].1.rows();
+    if n <= threshold {
+        return gemm_fused(a, b);
+    }
+    let ms: Vec<DenseMatrix> = level_terms(a, b)
+        .iter()
+        .map(|(l, r)| strassen_terms(l, r, threshold))
+        .collect();
+    assemble_level(n, &ms)
+}
+
+fn strassen_terms_materialized(a: &[Term], b: &[Term], threshold: usize) -> DenseMatrix {
+    let n = a[0].1.rows();
+    if n <= threshold {
+        // Operand sums were already materialized on the way down (every
+        // recursive call receives single-term lists), so the leaf packs
+        // straight from them — the same kernel-on-owned-operands
+        // structure as the pre-fusion code, with no extra copy that
+        // would bias the fused-vs-materialized ablation.
+        debug_assert!(a.len() == 1 && b.len() == 1);
+        return gemm_fused(a, b);
+    }
+    let ms: Vec<DenseMatrix> = level_terms(a, b)
+        .iter()
+        .map(|(l, r)| {
+            // Materialize both operand sums before recursing — the old
+            // per-level `m_operands` allocations.
+            let (lm, rm) = (materialize(l), materialize(r));
+            strassen_terms_materialized(
+                &[(1.0, MatRef::new(&lm))],
+                &[(1.0, MatRef::new(&rm))],
+                threshold,
+            )
+        })
+        .collect();
+    assemble_level(n, &ms)
 }
 
 /// Number of leaf multiplications Strassen performs for `n` with `cutoff`:
@@ -110,7 +260,7 @@ pub fn leaf_multiplications(n: usize, cutoff: usize) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::multiply::matmul_naive;
+    use crate::matrix::multiply::{matmul_blocked, matmul_naive};
 
     #[test]
     fn matches_naive_across_sizes() {
@@ -125,6 +275,24 @@ mod tests {
                 want.max_abs_diff(&got)
             );
         }
+    }
+
+    #[test]
+    fn fused_matches_materialized() {
+        // One recursion level: operand lists have ≤ 2 terms, so the fused
+        // pack performs the exact adds materialization would — bitwise
+        // equal. Deeper recursion re-associates the (≤ 2^levels)-term
+        // sums ((x1+x2)+x3)+x4 vs (x1+x2)+(x3+x4), so equality there is
+        // up to fp tolerance only.
+        let n = 64;
+        let a = DenseMatrix::random(n, n, 900);
+        let b = DenseMatrix::random(n, n, 901);
+        let one_fused = strassen_serial_with(&a, &b, 32);
+        let one_mat = strassen_serial_materialized_with(&a, &b, 32);
+        assert_eq!(one_fused.as_slice(), one_mat.as_slice());
+        let deep_fused = strassen_serial_with(&a, &b, 4);
+        let deep_mat = strassen_serial_materialized_with(&a, &b, 4);
+        assert!(deep_fused.allclose(&deep_mat, 1e-10));
     }
 
     #[test]
@@ -185,5 +353,31 @@ mod tests {
         assert!(want.submatrix(0, h, h, h).allclose(&c12, 1e-10));
         assert!(want.submatrix(h, 0, h, h).allclose(&c21, 1e-10));
         assert!(want.submatrix(h, h, h, h).allclose(&c22, 1e-10));
+    }
+
+    #[test]
+    fn fused_leaf_matches_composed() {
+        let n = 16;
+        let a = DenseMatrix::random(2 * n, 2 * n, 23);
+        let b = DenseMatrix::random(2 * n, 2 * n, 24);
+        let quads = [
+            a.submatrix(0, 0, n, n),
+            a.submatrix(0, n, n, n),
+            a.submatrix(n, 0, n, n),
+            a.submatrix(n, n, n, n),
+            b.submatrix(0, 0, n, n),
+            b.submatrix(0, n, n, n),
+            b.submatrix(n, 0, n, n),
+            b.submatrix(n, n, n, n),
+        ];
+        let fused = strassen_leaf_fused(&quads);
+        let want = matmul_naive(&a, &b);
+        for (q, c) in fused.iter().enumerate() {
+            let (qr, qc) = (q / 2, q % 2);
+            assert!(
+                want.submatrix(qr * n, qc * n, n, n).allclose(c, 1e-10),
+                "quadrant {q}"
+            );
+        }
     }
 }

@@ -4,15 +4,20 @@
 //! instead of 18 — the ablation quantifies what the divide/combine
 //! addition count is worth.
 //!
-//! Derivation (quadrants `a11..a22`, `b11..b22`):
+//! Like `matrix/strassen.rs`, the recursion carries operands as signed
+//! term lists over views and the leaf multiplies through
+//! [`gemm_fused`], folding the pre-additions into the packing loops —
+//! the 8 `s`/`t` operand temporaries per level are not allocated (deep
+//! recursions compact lists longer than [`MAX_FUSED_TERMS`], trading one
+//! materialization for bounded packing cost).
+//! Expanded over quadrant views, the classic schedule's chained sums are
+//! plain signed combinations:
 //! ```text
-//! s1 = a21 + a22      t1 = b12 − b11
-//! s2 = s1 − a11       t2 = b22 − t1... (standard schedule below)
-//! ```
-//! We use the widely-cited schedule:
-//! ```text
-//! s1 = a21 + a22   s2 = s1 − a11   s3 = a11 − a21   s4 = a12 − s2
-//! t1 = b12 − b11   t2 = b22 − t1   t3 = b22 − b12   t4 = t2 − b21
+//! s1 = a21 + a22                 t1 = b12 − b11
+//! s2 = s1 − a11 = a21 + a22 − a11    t2 = b22 − t1 = b22 − b12 + b11
+//! s3 = a11 − a21                 t3 = b22 − b12
+//! s4 = a12 − s2 = a12 − a21 − a22 + a11
+//!                                t4 = t2 − b21 = b22 − b12 + b11 − b21
 //! p1 = a11·b11  p2 = a12·b21  p3 = s4·b22   p4 = a22·t4
 //! p5 = s1·t1    p6 = s2·t2    p7 = s3·t3
 //! u2 = p1 + p6  u3 = u2 + p7  u4 = u2 + p5
@@ -20,11 +25,14 @@
 //! c21 = u3 − p4        c22 = u3 + p5
 //! ```
 
-use crate::matrix::multiply::matmul_blocked;
+use crate::matrix::gemm::{
+    cat_terms as cat, gemm_fused, materialize, quad_terms as quad, MatRef, Term,
+    MAX_FUSED_TERMS,
+};
 use crate::matrix::DenseMatrix;
 
-/// Default recursion cutoff (same as plain Strassen's).
-pub const DEFAULT_THRESHOLD: usize = 64;
+/// Default recursion cutoff (same as plain Strassen's re-tuned value).
+pub const DEFAULT_THRESHOLD: usize = 256;
 
 /// Serial Strassen–Winograd with the default cutoff.
 pub fn winograd_serial(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
@@ -39,33 +47,38 @@ pub fn winograd_serial_with(a: &DenseMatrix, b: &DenseMatrix, threshold: usize) 
     assert_eq!(b.rows(), b.cols(), "square operands required");
     assert_eq!(a.rows(), b.rows(), "dimension mismatch");
     assert!(n.is_power_of_two(), "n={n} must be a power of two");
-    rec(a, b, threshold.max(1))
+    rec(&[(1.0, MatRef::new(a))], &[(1.0, MatRef::new(b))], threshold.max(1))
 }
 
-fn rec(a: &DenseMatrix, b: &DenseMatrix, threshold: usize) -> DenseMatrix {
-    let n = a.rows();
+fn rec(a: &[Term], b: &[Term], threshold: usize) -> DenseMatrix {
+    // Winograd's chained operands (s4 = a12 − s2, t4 = t2 − b21) grow
+    // the term lists 4x per level — compact past MAX_FUSED_TERMS so the
+    // packing cost stays bounded instead of exploding multiplicatively.
+    if a.len() > MAX_FUSED_TERMS {
+        let am = materialize(a);
+        return rec(&[(1.0, MatRef::new(&am))], b, threshold);
+    }
+    if b.len() > MAX_FUSED_TERMS {
+        let bm = materialize(b);
+        return rec(a, &[(1.0, MatRef::new(&bm))], threshold);
+    }
+    let n = a[0].1.rows();
     if n <= threshold {
-        return matmul_blocked(a, b);
+        return gemm_fused(a, b);
     }
     let h = n / 2;
-    let a11 = a.submatrix(0, 0, h, h);
-    let a12 = a.submatrix(0, h, h, h);
-    let a21 = a.submatrix(h, 0, h, h);
-    let a22 = a.submatrix(h, h, h, h);
-    let b11 = b.submatrix(0, 0, h, h);
-    let b12 = b.submatrix(0, h, h, h);
-    let b21 = b.submatrix(h, 0, h, h);
-    let b22 = b.submatrix(h, h, h, h);
+    let (a11, a12, a21, a22) = (quad(a, 0, 0), quad(a, 0, 1), quad(a, 1, 0), quad(a, 1, 1));
+    let (b11, b12, b21, b22) = (quad(b, 0, 0), quad(b, 0, 1), quad(b, 1, 0), quad(b, 1, 1));
 
-    // 8 pre-additions.
-    let s1 = a21.add(&a22);
-    let s2 = s1.sub(&a11);
-    let s3 = a11.sub(&a21);
-    let s4 = a12.sub(&s2);
-    let t1 = b12.sub(&b11);
-    let t2 = b22.sub(&t1);
-    let t3 = b22.sub(&b12);
-    let t4 = t2.sub(&b21);
+    // 8 pre-additions, as term lists (nothing materialized).
+    let s1 = cat(&a21, 1.0, &a22);
+    let s2 = cat(&s1, -1.0, &a11);
+    let s3 = cat(&a11, -1.0, &a21);
+    let s4 = cat(&a12, -1.0, &s2);
+    let t1 = cat(&b12, -1.0, &b11);
+    let t2 = cat(&b22, -1.0, &t1);
+    let t3 = cat(&b22, -1.0, &b12);
+    let t4 = cat(&t2, -1.0, &b21);
 
     // 7 multiplications.
     let p1 = rec(&a11, &b11, threshold);
@@ -96,7 +109,7 @@ fn rec(a: &DenseMatrix, b: &DenseMatrix, threshold: usize) -> DenseMatrix {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matrix::multiply::matmul_naive;
+    use crate::matrix::multiply::{matmul_blocked, matmul_naive};
     use crate::matrix::strassen::strassen_serial_with;
 
     #[test]
@@ -144,5 +157,16 @@ mod tests {
         let i = DenseMatrix::identity(32);
         let r = DenseMatrix::random(32, 32, 9);
         assert!(winograd_serial_with(&i, &r, 4).allclose(&r, 1e-12));
+    }
+
+    #[test]
+    fn chained_term_lists_expand_correctly() {
+        // s4/t4 are the 4-term chains; check one level against the
+        // explicitly materialized schedule.
+        let n = 16;
+        let a = DenseMatrix::random(n, n, 70);
+        let b = DenseMatrix::random(n, n, 71);
+        let got = winograd_serial_with(&a, &b, n / 2);
+        assert!(matmul_naive(&a, &b).allclose(&got, 1e-10));
     }
 }

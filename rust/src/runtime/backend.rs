@@ -4,9 +4,13 @@
 //! (the paper's Breeze/BLAS calls); they do so through this trait so the
 //! same algorithm runs against the PJRT-executed AOT artifacts
 //! ([`crate::runtime::XlaBackend`]) or the pure-Rust kernels
-//! ([`NativeBackend`]) — the backend ablation of DESIGN.md §6.
+//! ([`NativeBackend`]) — the backend ablation of DESIGN.md §6. The
+//! native arm itself is kernel-selectable (`naive | blocked | packed`,
+//! see [`Kernel`]); all three accumulate in the same per-element order,
+//! so swapping them never changes a distributed result by even one bit.
 
-use crate::matrix::{matmul_blocked, DenseMatrix};
+use crate::matrix::multiply::Kernel;
+use crate::matrix::DenseMatrix;
 
 /// Leaf block operations dispatched from the hot path.
 pub trait LeafBackend: Send + Sync {
@@ -15,32 +19,57 @@ pub trait LeafBackend: Send + Sync {
 
     /// One fused Strassen level over quadrants
     /// `[a11,a12,a21,a22,b11,b12,b21,b22] → [c11,c12,c21,c22]`.
-    /// Backends without a fused path fall back to the composed form.
+    /// Backends without a fused path fall back to the composed form
+    /// (operands materialized, 7 dispatches through `multiply`).
     fn strassen_leaf(&self, quads: &[DenseMatrix; 8]) -> [DenseMatrix; 4] {
-        let [a11, a12, a21, a22, b11, b12, b21, b22] = quads;
-        let ms: Vec<DenseMatrix> =
-            crate::matrix::strassen::m_operands(a11, a12, a21, a22, b11, b12, b21, b22)
-                .iter()
-                .map(|(l, r)| self.multiply(l, r))
-                .collect();
-        crate::matrix::strassen::combine_quadrants(&ms)
+        crate::matrix::strassen::strassen_leaf_composed(quads, |l, r| self.multiply(l, r))
     }
 
     /// Human-readable backend name (for reports and metrics).
     fn name(&self) -> &str;
 }
 
-/// Pure-Rust leaf backend: the cache-blocked serial kernel.
-#[derive(Debug, Default)]
-pub struct NativeBackend;
+/// Pure-Rust leaf backend over a selectable [`Kernel`]. Default is the
+/// packed register-tiled GEMM.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeBackend {
+    kernel: Kernel,
+}
+
+impl NativeBackend {
+    pub fn new(kernel: Kernel) -> Self {
+        Self { kernel }
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new(Kernel::Packed)
+    }
+}
 
 impl LeafBackend for NativeBackend {
     fn multiply(&self, a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
-        matmul_blocked(a, b)
+        self.kernel.multiply(a, b)
+    }
+
+    fn strassen_leaf(&self, quads: &[DenseMatrix; 8]) -> [DenseMatrix; 4] {
+        match self.kernel {
+            // Fused operand packing: the quadrant add/subs happen inside
+            // the GEMM packing loops — no operand temporaries.
+            Kernel::Packed => crate::matrix::strassen::strassen_leaf_fused(quads),
+            _ => crate::matrix::strassen::strassen_leaf_composed(quads, |l, r| {
+                self.multiply(l, r)
+            }),
+        }
     }
 
     fn name(&self) -> &str {
-        "native"
+        self.kernel.name()
     }
 }
 
@@ -50,19 +79,20 @@ mod tests {
     use crate::matrix::multiply::matmul_naive;
 
     #[test]
-    fn native_multiply_matches_naive() {
+    fn native_multiply_matches_naive_for_every_kernel() {
         let a = DenseMatrix::random(32, 32, 1);
         let b = DenseMatrix::random(32, 32, 2);
-        let got = NativeBackend.multiply(&a, &b);
-        assert!(matmul_naive(&a, &b).allclose(&got, 1e-12));
+        let want = matmul_naive(&a, &b);
+        for kernel in Kernel::ALL {
+            let be = NativeBackend::new(kernel);
+            assert_eq!(want.as_slice(), be.multiply(&a, &b).as_slice(), "kernel {kernel}");
+            assert_eq!(be.name(), kernel.name());
+        }
+        assert_eq!(NativeBackend::default().kernel(), Kernel::Packed);
     }
 
-    #[test]
-    fn default_strassen_leaf_is_correct() {
-        let n = 16;
-        let a = DenseMatrix::random(2 * n, 2 * n, 3);
-        let b = DenseMatrix::random(2 * n, 2 * n, 4);
-        let quads = [
+    fn quads_of(a: &DenseMatrix, b: &DenseMatrix, n: usize) -> [DenseMatrix; 8] {
+        [
             a.submatrix(0, 0, n, n),
             a.submatrix(0, n, n, n),
             a.submatrix(n, 0, n, n),
@@ -71,12 +101,37 @@ mod tests {
             b.submatrix(0, n, n, n),
             b.submatrix(n, 0, n, n),
             b.submatrix(n, n, n, n),
-        ];
-        let [c11, c12, c21, c22] = NativeBackend.strassen_leaf(&quads);
+        ]
+    }
+
+    #[test]
+    fn strassen_leaf_is_correct_fused_and_composed() {
+        let n = 16;
+        let a = DenseMatrix::random(2 * n, 2 * n, 3);
+        let b = DenseMatrix::random(2 * n, 2 * n, 4);
+        let quads = quads_of(&a, &b, n);
         let want = matmul_naive(&a, &b);
-        assert!(want.submatrix(0, 0, n, n).allclose(&c11, 1e-10));
-        assert!(want.submatrix(0, n, n, n).allclose(&c12, 1e-10));
-        assert!(want.submatrix(n, 0, n, n).allclose(&c21, 1e-10));
-        assert!(want.submatrix(n, n, n, n).allclose(&c22, 1e-10));
+        for kernel in Kernel::ALL {
+            let [c11, c12, c21, c22] = NativeBackend::new(kernel).strassen_leaf(&quads);
+            assert!(want.submatrix(0, 0, n, n).allclose(&c11, 1e-10), "{kernel}");
+            assert!(want.submatrix(0, n, n, n).allclose(&c12, 1e-10), "{kernel}");
+            assert!(want.submatrix(n, 0, n, n).allclose(&c21, 1e-10), "{kernel}");
+            assert!(want.submatrix(n, n, n, n).allclose(&c22, 1e-10), "{kernel}");
+        }
+    }
+
+    #[test]
+    fn fused_leaf_bitwise_matches_composed_leaf() {
+        // The fused path folds the same adds into packing; one level is
+        // bitwise-neutral relative to materialize-then-multiply.
+        let n = 8;
+        let a = DenseMatrix::random(2 * n, 2 * n, 5);
+        let b = DenseMatrix::random(2 * n, 2 * n, 6);
+        let quads = quads_of(&a, &b, n);
+        let fused = NativeBackend::new(Kernel::Packed).strassen_leaf(&quads);
+        let composed = NativeBackend::new(Kernel::Blocked).strassen_leaf(&quads);
+        for (f, c) in fused.iter().zip(&composed) {
+            assert_eq!(f.as_slice(), c.as_slice());
+        }
     }
 }

@@ -311,7 +311,7 @@ impl XlaBackend {
 
     /// Explicit cutover (0 = always dispatch to XLA — the ablation arm).
     pub fn with_cutover(svc: Arc<XlaService>, min_xla_block: usize) -> Self {
-        Self { svc, native: NativeBackend, fallbacks: AtomicU64::new(0), min_xla_block }
+        Self { svc, native: NativeBackend::default(), fallbacks: AtomicU64::new(0), min_xla_block }
     }
 
     /// How many leaf calls fell back to the native kernel.
@@ -340,26 +340,17 @@ impl LeafBackend for XlaBackend {
 
     fn strassen_leaf(&self, quads: &[DenseMatrix; 8]) -> [DenseMatrix; 4] {
         if quads[0].rows() < self.min_xla_block {
-            let [a11, a12, a21, a22, b11, b12, b21, b22] = quads;
-            let ms: Vec<DenseMatrix> =
-                crate::matrix::strassen::m_operands(a11, a12, a21, a22, b11, b12, b21, b22)
-                    .iter()
-                    .map(|(l, r)| self.native.multiply(l, r))
-                    .collect();
-            return crate::matrix::strassen::combine_quadrants(&ms);
+            // Below the cutover the native kernel owns the whole level
+            // (its strassen_leaf picks the fused path when packed).
+            return self.native.strassen_leaf(quads);
         }
         match self.svc.strassen_leaf(quads.clone()) {
             Ok(c) => c,
             Err(_) => {
                 self.fallbacks.fetch_add(1, Ordering::Relaxed);
-                let [a11, a12, a21, a22, b11, b12, b21, b22] = quads;
-                let ms: Vec<DenseMatrix> = crate::matrix::strassen::m_operands(
-                    a11, a12, a21, a22, b11, b12, b21, b22,
-                )
-                .iter()
-                .map(|(l, r)| self.multiply(l, r))
-                .collect();
-                crate::matrix::strassen::combine_quadrants(&ms)
+                crate::matrix::strassen::strassen_leaf_composed(quads, |l, r| {
+                    self.multiply(l, r)
+                })
             }
         }
     }

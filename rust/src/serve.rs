@@ -245,7 +245,7 @@ mod tests {
     fn test_server() -> Server {
         let state = ServerState {
             ctx: SparkContext::new(ClusterConfig::new(2, 1)),
-            backend: crate::config::build_backend(BackendKind::Native, 1).unwrap(),
+            backend: crate::config::build_backend(BackendKind::Packed, 1).unwrap(),
             default_b: 2,
         };
         Server::start("127.0.0.1:0", state).unwrap()

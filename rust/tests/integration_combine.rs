@@ -90,7 +90,7 @@ fn serve_round_trip_matches_naive() {
 
     let state = ServerState {
         ctx: SparkContext::new(ClusterConfig::new(2, 1)),
-        backend: build_backend(BackendKind::Native, 1).unwrap(),
+        backend: build_backend(BackendKind::Packed, 1).unwrap(),
         default_b: 2,
     };
     let mut server = Server::start("127.0.0.1:0", state).unwrap();

@@ -23,7 +23,7 @@ fn all_algorithms_agree_with_reference_across_grid() {
         for &bb in &bs {
             for (execs, cores) in [(1usize, 1usize), (2, 2), (3, 1)] {
                 let ctx = SparkContext::new(ClusterConfig::new(execs, cores));
-                let backend = Arc::new(NativeBackend);
+                let backend = Arc::new(NativeBackend::default());
                 let cfg = StarkConfig::default();
                 let s = stark_algo::multiply(&ctx, backend.clone(), &a, &b, bb, &cfg);
                 assert!(
@@ -47,7 +47,7 @@ fn executor_count_does_not_change_results() {
     for execs in [1usize, 2, 4, 8] {
         let ctx = SparkContext::new(ClusterConfig::new(execs, 1));
         let out =
-            stark_algo::multiply(&ctx, Arc::new(NativeBackend), &a, &b, 4, &StarkConfig::default());
+            stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &b, 4, &StarkConfig::default());
         results.push(out.c);
     }
     // Partitioning changes FP summation order (as on real Spark), so
@@ -67,7 +67,7 @@ fn fused_leaf_is_bit_identical_in_structure() {
     let ctx = SparkContext::new(ClusterConfig::new(2, 2));
     for b_parts in [2usize, 4, 8] {
         let cfg = StarkConfig { fused_leaf: true, ..Default::default() };
-        let out = stark_algo::multiply(&ctx, Arc::new(NativeBackend), &a, &b, b_parts, &cfg);
+        let out = stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &b, b_parts, &cfg);
         assert!(want.allclose(&out.c, 1e-9), "fused b={b_parts}");
     }
 }
@@ -76,7 +76,7 @@ fn fused_leaf_is_bit_identical_in_structure() {
 fn leaf_call_law_stark_vs_baselines() {
     let (a, b, _) = reference(64, 11);
     let ctx = SparkContext::new(ClusterConfig::new(2, 2));
-    let backend = Arc::new(NativeBackend);
+    let backend = Arc::new(NativeBackend::default());
     for (bb, stark_want, cube) in [(2usize, 7u64, 8u64), (4, 49, 64), (8, 343, 512)] {
         let s = stark_algo::multiply(&ctx, backend.clone(), &a, &b, bb, &StarkConfig::default());
         assert_eq!(s.leaf_calls, stark_want);
@@ -95,7 +95,7 @@ fn failure_injection_in_every_stark_phase_recovers() {
         cc.failure = Some(FailureSpec { stage_contains: phase.to_string(), partition: 0 });
         let ctx = SparkContext::new(cc);
         let out =
-            stark_algo::multiply(&ctx, Arc::new(NativeBackend), &a, &b, 4, &StarkConfig::default());
+            stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &b, 4, &StarkConfig::default());
         let retries: u32 = out.job.stages.iter().map(|s| s.retries).sum();
         assert_eq!(retries, 1, "phase {phase}: no retry recorded");
         assert!(want.allclose(&out.c, 1e-9), "phase {phase}: wrong result after recovery");
@@ -109,7 +109,7 @@ fn failure_injection_in_baselines_recovers() {
         let mut cc = ClusterConfig::new(2, 2);
         cc.failure = Some(FailureSpec { stage_contains: phase.to_string(), partition: 0 });
         let ctx = SparkContext::new(cc);
-        let backend = Arc::new(NativeBackend);
+        let backend = Arc::new(NativeBackend::default());
         let m = marlin::multiply(&ctx, backend.clone(), &a, &b, 4, false);
         assert!(want.allclose(&m.c, 1e-9), "marlin {phase}");
         ctx.cluster().rearm_failure();
@@ -122,7 +122,7 @@ fn failure_injection_in_baselines_recovers() {
 fn special_matrices() {
     let n = 32;
     let ctx = SparkContext::new(ClusterConfig::new(2, 2));
-    let backend = Arc::new(NativeBackend);
+    let backend = Arc::new(NativeBackend::default());
     let cfg = StarkConfig::default();
     let i = DenseMatrix::identity(n);
     let z = DenseMatrix::zeros(n, n);
@@ -143,7 +143,7 @@ fn special_matrices() {
 fn metrics_are_recorded_per_job() {
     let (a, b, _) = reference(64, 23);
     let ctx = SparkContext::new(ClusterConfig::new(2, 2));
-    let s = stark_algo::multiply(&ctx, Arc::new(NativeBackend), &a, &b, 4, &StarkConfig::default());
+    let s = stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &b, 4, &StarkConfig::default());
     assert_eq!(s.job.stages.len(), stark_algo::predicted_stages(4));
     assert!(s.job.wall_ms > 0.0);
     assert!(s.job.total_shuffle_bytes() > 0);
@@ -168,7 +168,7 @@ fn algorithm_enum_roundtrip() {
 fn isolate_multiply_does_not_change_numbers() {
     let (a, b, want) = reference(64, 29);
     let ctx = SparkContext::new(ClusterConfig::new(2, 2));
-    let backend = Arc::new(NativeBackend);
+    let backend = Arc::new(NativeBackend::default());
     for algo in Algorithm::ALL {
         let cfg = StarkConfig { isolate_multiply: true, ..Default::default() };
         let out = stark::algos::common::run(algo, &ctx, backend.clone(), &a, &b, 4, &cfg);

@@ -126,7 +126,7 @@ fn service_is_safe_under_concurrency() {
     let lib = require_artifacts!();
     let svc = Arc::new(XlaService::new(lib, 2, "dot").unwrap());
     svc.warmup(32).unwrap();
-    let native = NativeBackend;
+    let native = NativeBackend::default();
     std::thread::scope(|scope| {
         for t in 0..8 {
             let svc = svc.clone();

@@ -31,7 +31,7 @@ fn prop_stark_matches_reference_for_arbitrary_inputs() {
             isolate_multiply: rng.next_f64() < 0.5,
             map_side_combine: rng.next_f64() < 0.75,
         };
-        let out = stark_algo::multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, &cfg);
+        let out = stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &cfg);
         let want = matmul_blocked(&a, &bm);
         let diff = want.max_abs_diff(&out.c);
         if diff < 1e-8 {
@@ -52,11 +52,11 @@ fn prop_baselines_match_reference() {
         let bm = random_matrix(rng, n);
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
         let want = matmul_blocked(&a, &bm);
-        let m = marlin::multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, false);
+        let m = marlin::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, false);
         if want.max_abs_diff(&m.c) > 1e-8 {
             return Err(format!("marlin n={n} b={b}"));
         }
-        let l = mllib::multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, false);
+        let l = mllib::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, false);
         if want.max_abs_diff(&l.c) > 1e-8 {
             return Err(format!("mllib n={n} b={b}"));
         }
@@ -72,7 +72,7 @@ fn prop_all_three_agree_pairwise() {
         let a = random_matrix(rng, n);
         let bm = random_matrix(rng, n);
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
-        let be = Arc::new(NativeBackend);
+        let be = Arc::new(NativeBackend::default());
         let s = stark_algo::multiply(&ctx, be.clone(), &a, &bm, b, &StarkConfig::default());
         let m = marlin::multiply(&ctx, be.clone(), &a, &bm, b, false);
         let l = mllib::multiply(&ctx, be, &a, &bm, b, false);
@@ -189,7 +189,7 @@ fn prop_leaf_call_counts() {
         let a = random_matrix(rng, n);
         let bm = random_matrix(rng, n);
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
-        let be = Arc::new(NativeBackend);
+        let be = Arc::new(NativeBackend::default());
         let s = stark_algo::multiply(&ctx, be.clone(), &a, &bm, b, &StarkConfig::default());
         let m = marlin::multiply(&ctx, be, &a, &bm, b, false);
         let levels = (b as f64).log2().round() as u32;
@@ -214,7 +214,7 @@ fn prop_shuffle_accounting_scales_with_payload() {
             let ctx = SparkContext::new(ClusterConfig::new(2, 2));
             stark_algo::multiply(
                 &ctx,
-                Arc::new(NativeBackend),
+                Arc::new(NativeBackend::default()),
                 mat_a,
                 mat_b,
                 b,
@@ -249,7 +249,7 @@ fn prop_determinism_same_seed_same_everything() {
             let bm = DenseMatrix::random(n, n, seed + 1);
             let ctx = SparkContext::new(ClusterConfig::new(2, 2));
             let out =
-                stark_algo::multiply(&ctx, Arc::new(NativeBackend), &a, &bm, b, &StarkConfig::default());
+                stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &StarkConfig::default());
             (out.c, out.leaf_calls, out.job.total_shuffle_bytes())
         };
         let (c1, l1, s1) = run();
