@@ -3,7 +3,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::engine::{Block, Dist, JobMetrics, Side, SparkContext, Tag};
+use crate::engine::{Block, Dist, JobCtx, JobMetrics, Side, SparkContext, Tag};
 use crate::matrix::DenseMatrix;
 use crate::runtime::LeafBackend;
 
@@ -159,16 +159,16 @@ pub fn arc_add(acc: Arc<DenseMatrix>, val: Arc<DenseMatrix>) -> Arc<DenseMatrix>
 }
 
 /// Split a square matrix into a `b × b` grid of root-tagged [`Block`]s and
-/// distribute them (the paper's pre-processing step: text file →
-/// `RDD<Block>`).
-pub fn distribute(ctx: &SparkContext, m: &DenseMatrix, side: Side, b: usize) -> Dist<Block> {
+/// distribute them within `job`'s scope (the paper's pre-processing
+/// step: text file → `RDD<Block>`).
+pub fn distribute(job: &JobCtx, m: &DenseMatrix, side: Side, b: usize) -> Dist<Block> {
     let blocks: Vec<Block> = m
         .split_blocks(b)
         .into_iter()
         .map(|(r, c, data)| Block::new(r as u32, c as u32, Tag::root(side), Arc::new(data)))
         .collect();
-    let parts = default_parts(b, ctx.config().total_cores());
-    ctx.parallelize(blocks, parts)
+    let parts = default_parts(b, job.config().total_cores());
+    job.parallelize(blocks, parts)
 }
 
 /// Input-partition policy: one partition per block up to a small multiple
@@ -228,8 +228,9 @@ mod tests {
     #[test]
     fn distribute_produces_b_squared_blocks() {
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+        let job = ctx.run_job("distribute");
         let m = DenseMatrix::random(16, 16, 1);
-        let d = distribute(&ctx, &m, Side::A, 4);
+        let d = distribute(&job, &m, Side::A, 4);
         let blocks = d.collect("c");
         assert_eq!(blocks.len(), 16);
         assert!(blocks.iter().all(|b| b.tag == Tag::root(Side::A)));
@@ -239,8 +240,9 @@ mod tests {
     #[test]
     fn distribute_assemble_roundtrip() {
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+        let job = ctx.run_job("roundtrip");
         let m = DenseMatrix::random(16, 16, 2);
-        let d = distribute(&ctx, &m, Side::B, 2);
+        let d = distribute(&job, &m, Side::B, 2);
         let pairs: Vec<((u32, u32), DenseMatrix)> = d
             .collect("c")
             .into_iter()

@@ -35,10 +35,10 @@ pub fn multiply(
     validate_inputs(a, b_mat, b);
     let timing = TimingBackend::new(backend);
     let n = a.rows();
-    ctx.begin_job(&format!("marlin n={n} b={b}"));
+    let job = ctx.run_job(&format!("marlin n={n} b={b}"));
 
-    let da = distribute(ctx, a, Side::A, b);
-    let db = distribute(ctx, b_mat, Side::B, b);
+    let da = distribute(&job, a, Side::A, b);
+    let db = distribute(&job, b_mat, Side::B, b);
     let bb = b as u32;
 
     // Stage 1: replicate A blocks across product columns, B blocks across
@@ -80,7 +80,7 @@ pub fn multiply(
         .map(|(k, v)| (k, Arc::try_unwrap(v).unwrap_or_else(|a| (*a).clone())))
         .collect();
     let c = assemble(b, n / b, pairs);
-    let job = ctx.end_job().expect("job scope");
+    let job = job.finish();
     MultiplyOutput { c, job, leaf_ms: timing.leaf_ms(), leaf_calls: timing.calls() }
 }
 

@@ -35,13 +35,13 @@ pub fn multiply(
     validate_inputs(a, b_mat, b);
     let timing = TimingBackend::new(backend);
     let n = a.rows();
-    ctx.begin_job(&format!("mllib n={n} b={b}"));
+    let job = ctx.run_job(&format!("mllib n={n} b={b}"));
 
     // GridPartitioner simulation (driver side): 2·b² partition ids cross
     // to the master — eq. (1)'s communication, recorded as a synthetic
     // stage so the analysis has its observable.
     let sim_bytes = (2 * b * b * std::mem::size_of::<u64>()) as u64;
-    ctx.metrics().record_stage(StageMetrics {
+    job.record_stage(StageMetrics {
         stage_id: usize::MAX, // driver-side, outside the stage sequence
         label: "stage0/gridSimulation".to_string(),
         tasks: 1,
@@ -56,8 +56,8 @@ pub fn multiply(
         retries: 0,
     });
 
-    let da = distribute(ctx, a, Side::A, b);
-    let db = distribute(ctx, b_mat, Side::B, b);
+    let da = distribute(&job, a, Side::A, b);
+    let db = distribute(&job, b_mat, Side::B, b);
     let bb = b as u32;
 
     // Stage 1: replicate towards destination blocks. The payload keeps
@@ -106,7 +106,7 @@ pub fn multiply(
         .map(|(k, v)| (k, Arc::try_unwrap(v).unwrap_or_else(|a| (*a).clone())))
         .collect();
     let c = assemble(b, n / b, pairs);
-    let job = ctx.end_job().expect("job scope");
+    let job = job.finish();
     MultiplyOutput { c, job, leaf_ms: timing.leaf_ms(), leaf_calls: timing.calls() }
 }
 

@@ -43,7 +43,7 @@ use crate::algos::common::{
     assemble, default_parts, distribute, signed_finalize, signed_merge, validate_inputs,
     MultiplyOutput, SignedBlock, TimingBackend,
 };
-use crate::engine::{det_partition, Block, Dist, Partitioner, Side, SparkContext, Tag};
+use crate::engine::{det_partition, Block, Dist, JobCtx, Partitioner, Side, SparkContext, Tag};
 use crate::matrix::DenseMatrix;
 use crate::runtime::LeafBackend;
 
@@ -239,16 +239,16 @@ fn signed_sum(vals: Vec<(f64, Arc<DenseMatrix>)>) -> Arc<DenseMatrix> {
 
 /// Algorithm 2, `DistStrass`: multiply the union RDD of A- and B-side
 /// blocks over an `n × n` block grid; returns product blocks tagged
-/// `(M, mindex)` on the same grid.
+/// `(M, mindex)` on the same grid. Stages record into the job scope the
+/// input `Dist` carries — no ambient job state.
 fn dist_strassen(
-    ctx: &SparkContext,
     backend: &Arc<TimingBackend>,
     input: Dist<Block>,
     n: u32,
     level: u32,
     cfg: &StarkConfig,
 ) -> Dist<Block> {
-    let cores = ctx.config().total_cores();
+    let cores = input.job().config().total_cores();
     let parts = parts_for(level, cores);
 
     // Boundary condition (Algorithm 4): single-block sub-matrices.
@@ -315,7 +315,7 @@ fn dist_strassen(
     let divided = div_n_rep(&input, n, level, parts, next, cfg.map_side_combine);
     // Recurse on the 7 sub-problems (all live in one Dist, distinguished
     // by M-index — the paper's "distributed tail recursion").
-    let product = dist_strassen(ctx, backend, divided, n / 2, level + 1, cfg);
+    let product = dist_strassen(backend, divided, n / 2, level + 1, cfg);
     // Combine (Algorithm 5) back to this level's grid.
     combine(&product, n / 2, level, parts, cfg.map_side_combine)
 }
@@ -405,11 +405,11 @@ fn combine(
 /// cores (b = 2, or small b on big clusters): class-level placement
 /// would throttle the first stage's parallelism below the core count
 /// for a shuffle saving that is tiny at that scale.
-fn distribute_aligned(ctx: &SparkContext, m: &DenseMatrix, side: Side, b: usize) -> Dist<Block> {
-    let cores = ctx.config().total_cores();
+fn distribute_aligned(job: &JobCtx, m: &DenseMatrix, side: Side, b: usize) -> Dist<Block> {
+    let cores = job.config().total_cores();
     let classes = if b >= 2 { (b / 2) * (b / 2) } else { 0 };
     if classes < cores.max(1) {
-        return distribute(ctx, m, side, b);
+        return distribute(job, m, side, b);
     }
     let half = (b / 2) as u32;
     let mut blocks: Vec<Block> = m
@@ -426,7 +426,7 @@ fn distribute_aligned(ctx: &SparkContext, m: &DenseMatrix, side: Side, b: usize)
     for (i, blk) in blocks.into_iter().enumerate() {
         chunks[(i / 4) % parts].push(blk);
     }
-    ctx.from_partitions(chunks)
+    job.from_partitions(chunks)
 }
 
 /// Multiply `a @ b_mat` with Stark over a `b × b` block grid.
@@ -445,14 +445,14 @@ pub fn multiply(
     assert!(b.is_power_of_two(), "Stark needs a power-of-two partition count, got {b}");
     let timing = TimingBackend::new(backend);
     let n = a.rows();
-    ctx.begin_job(&format!("stark n={n} b={b}"));
+    let job = ctx.run_job(&format!("stark n={n} b={b}"));
 
     let (da, db) = if cfg.map_side_combine {
-        (distribute_aligned(ctx, a, Side::A, b), distribute_aligned(ctx, b_mat, Side::B, b))
+        (distribute_aligned(&job, a, Side::A, b), distribute_aligned(&job, b_mat, Side::B, b))
     } else {
-        (distribute(ctx, a, Side::A, b), distribute(ctx, b_mat, Side::B, b))
+        (distribute(&job, a, Side::A, b), distribute(&job, b_mat, Side::B, b))
     };
-    let result = dist_strassen(ctx, &timing, da.union(&db), b as u32, 0, cfg);
+    let result = dist_strassen(&timing, da.union(&db), b as u32, 0, cfg);
 
     let collected = result.collect("result/collect");
     let pairs: Vec<((u32, u32), DenseMatrix)> = collected
@@ -463,7 +463,7 @@ pub fn multiply(
         })
         .collect();
     let c = assemble(b, n / b, pairs);
-    let job = ctx.end_job().expect("job scope");
+    let job = job.finish();
     MultiplyOutput { c, job, leaf_ms: timing.leaf_ms(), leaf_calls: timing.calls() }
 }
 
@@ -580,14 +580,14 @@ mod tests {
         // With plain `distribute` every block sits in its own partition,
         // so map-side combining finds nothing and all 12 replicas cross.
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
-        ctx.begin_job("repl");
+        let job = ctx.run_job("repl");
         let a = DenseMatrix::random(8, 8, 5);
-        let d = distribute(&ctx, &a, Side::A, 2);
+        let d = distribute(&job, &a, Side::A, 2);
         let divided = div_n_rep(&d, 2, 0, 4, NextGrouping::Subproblem, true);
         let blocks = divided.collect("c");
         // 7 sub-problems × 1 block each (1×1 grids after divide).
         assert_eq!(blocks.len(), 7);
-        let stages = ctx.metrics().current_stages();
+        let stages = job.stages();
         let div = stages.iter().find(|s| s.label == "divide/L0").unwrap();
         assert_eq!(div.records_out, 12);
         assert_eq!(div.combined_records, 0);
@@ -599,16 +599,16 @@ mod tests {
         // partition; the divide fold then collapses the 12 replicas per
         // class into the 7 operand blocks before the shuffle write.
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
-        ctx.begin_job("aligned");
+        let job = ctx.run_job("aligned");
         let a = DenseMatrix::random(8, 8, 6);
-        let d = distribute_aligned(&ctx, &a, Side::A, 4);
+        let d = distribute_aligned(&job, &a, Side::A, 4);
         // Grid 4 divides towards grid 2 (no fused leaf): quadrant mode.
         let divided =
             div_n_rep(&d, 4, 0, 8, NextGrouping::Quadrant { half: 1 }, true);
         let blocks = divided.collect("c");
         // 7 sub-problems × 2×2 operand grids.
         assert_eq!(blocks.len(), 28);
-        let stages = ctx.metrics().current_stages();
+        let stages = job.stages();
         let div = stages.iter().find(|s| s.label == "divide/L0").unwrap();
         // 4 position classes × 12 replicas fold to 4 × 7 operands.
         assert_eq!(div.records_out, 28);

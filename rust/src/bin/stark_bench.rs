@@ -13,6 +13,9 @@
 //! it needs no cluster or artifacts and writes the machine-readable
 //! `BENCH_kernel.json` to `--out` (default: the current directory, i.e.
 //! the repo root when run from it — the file is tracked across PRs).
+//! `kernel --cutoff-sweep [--cutoff-n 512] [--cutoffs 64,128,256,512]`
+//! additionally measures the Strassen/Winograd recursion cutoff and
+//! prints a CONFIRMED/RETUNE verdict against `DEFAULT_THRESHOLD`.
 
 use anyhow::Result;
 
@@ -43,7 +46,16 @@ fn main() -> Result<()> {
         let sizes = args.get_list("sizes", default_sizes);
         let out = args.raw("out").unwrap_or(".").to_string();
         let budget = std::time::Duration::from_millis(args.get("budget-ms", 300u64));
-        let path = experiments::kernel::run_and_save(&sizes, budget, &out)?;
+        // --cutoff-sweep re-measures the Strassen/Winograd recursion
+        // cutoff on THIS machine and prints a CONFIRMED/RETUNE verdict
+        // against the compiled-in DEFAULT_THRESHOLD (see EXPERIMENTS.md).
+        let sweep = args.flag("cutoff-sweep").then(|| {
+            (
+                args.get("cutoff-n", 512usize),
+                args.get_list("cutoffs", &[64usize, 128, 256, 512]),
+            )
+        });
+        let path = experiments::kernel::run_and_save(&sizes, budget, &out, sweep)?;
         println!("wrote {}", path.display());
         return Ok(());
     }

@@ -11,7 +11,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::algos::{Algorithm, StarkConfig};
-use crate::engine::{ClusterConfig, FailureSpec, SparkContext};
+use crate::engine::{ClusterConfig, FailureSpec, SchedulerPolicy, SparkContext};
 use crate::matrix::multiply::Kernel;
 use crate::runtime::{ArtifactLibrary, LeafBackend, NativeBackend, XlaBackend, XlaService};
 use crate::util::json::Value;
@@ -96,6 +96,11 @@ pub struct RunConfig {
     /// Sleep for real on the simulated shuffle-read wait (wall-clock
     /// faithful demos); the wait always accrues to the metrics.
     pub real_net_sleep: bool,
+    /// Task ordering across concurrent jobs (fair = round-robin across
+    /// runnable jobs, the serve-mode default; fifo = one global queue).
+    pub scheduler: SchedulerPolicy,
+    /// Fair scheduler: how many distinct jobs share the rotation at once.
+    pub max_concurrent_jobs: usize,
     /// Optional failure injection.
     pub failure: Option<FailureSpec>,
 }
@@ -115,6 +120,8 @@ impl Default for RunConfig {
             isolate_multiply: false,
             map_side_combine: true,
             real_net_sleep: false,
+            scheduler: SchedulerPolicy::Fair,
+            max_concurrent_jobs: 4,
             failure: None,
         }
     }
@@ -127,6 +134,8 @@ impl RunConfig {
             cores_per_executor: self.cores_per_executor,
             net_bandwidth: self.net_bandwidth,
             real_net_sleep: self.real_net_sleep,
+            scheduler: self.scheduler,
+            max_concurrent_jobs: self.max_concurrent_jobs,
             failure: self.failure.clone(),
         }
     }
@@ -168,6 +177,8 @@ impl RunConfig {
             ("isolate_multiply", Value::Bool(self.isolate_multiply)),
             ("map_side_combine", Value::Bool(self.map_side_combine)),
             ("real_net_sleep", Value::Bool(self.real_net_sleep)),
+            ("scheduler", Value::str(self.scheduler.to_string())),
+            ("max_concurrent_jobs", Value::num(self.max_concurrent_jobs as f64)),
         ];
         if let Some(f) = &self.failure {
             fields.push((
@@ -223,6 +234,16 @@ impl RunConfig {
             isolate_multiply: v.get("isolate_multiply").and_then(Value::as_bool).unwrap_or(false),
             map_side_combine: v.get("map_side_combine").and_then(Value::as_bool).unwrap_or(true),
             real_net_sleep: v.get("real_net_sleep").and_then(Value::as_bool).unwrap_or(false),
+            // Pre-scheduler RunConfig JSON carries neither knob: default
+            // to the fair policy the cluster itself defaults to.
+            scheduler: match v.get("scheduler").and_then(Value::as_str) {
+                Some(s) => s.parse().map_err(anyhow::Error::msg)?,
+                None => SchedulerPolicy::Fair,
+            },
+            max_concurrent_jobs: v
+                .get("max_concurrent_jobs")
+                .and_then(Value::as_usize)
+                .unwrap_or(4),
             failure,
         })
     }
@@ -267,6 +288,26 @@ mod tests {
         assert!(back.failure.is_none());
         assert!(back.map_side_combine, "map-side combining is the default");
         assert!(!back.real_net_sleep);
+        assert_eq!(back.scheduler, SchedulerPolicy::Fair);
+        assert_eq!(back.max_concurrent_jobs, 4);
+    }
+
+    #[test]
+    fn scheduler_knobs_roundtrip_and_default_on_old_json() {
+        let cfg = RunConfig {
+            scheduler: SchedulerPolicy::Fifo,
+            max_concurrent_jobs: 9,
+            ..Default::default()
+        };
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.scheduler, SchedulerPolicy::Fifo);
+        assert_eq!(back.max_concurrent_jobs, 9);
+        // Pre-scheduler recorded configs (no knobs) keep parsing.
+        let legacy = r#"{"n":64,"b":2,"algo":"stark","backend":"packed",
+            "executors":2,"cores_per_executor":2,"seed":1}"#;
+        let parsed = RunConfig::from_json(legacy).unwrap();
+        assert_eq!(parsed.scheduler, SchedulerPolicy::Fair);
+        assert_eq!(parsed.max_concurrent_jobs, 4);
     }
 
     #[test]

@@ -1,13 +1,23 @@
-//! Simulated cluster: a persistent pool of `executors × cores` workers.
+//! Simulated cluster: a persistent pool of `executors × cores` workers
+//! fed by a **job-aware scheduler**.
 //!
 //! This is the substitution for the paper's 3-node YARN cluster (DESIGN.md
 //! §2): the paper's analysis depends on the cluster only through the
 //! number of physical cores (`min[·, cores]` parallelization factors) and
 //! the shuffle volume, both of which are first-class here. Partition `p`
 //! of any dataset is *placed* on executor `p % executors`; workers steal
-//! from a global queue (real Spark's delay scheduling is irrelevant at
+//! from the scheduler (real Spark's delay scheduling is irrelevant at
 //! this scale) while placement determines which shuffled bytes count as
 //! remote.
+//!
+//! Scheduling: every task is tagged with the id of the job that
+//! submitted it. Under [`SchedulerPolicy::Fair`] (the default, Spark's
+//! FAIR scheduler) workers round-robin across runnable jobs and serve
+//! FIFO within a job, so N concurrent multiplications interleave on the
+//! shared pool without a long job starving a short one;
+//! [`ClusterConfig::max_concurrent_jobs`] bounds how many distinct jobs
+//! share the rotation at once (excess jobs wait in arrival order).
+//! [`SchedulerPolicy::Fifo`] restores the old single global queue.
 //!
 //! Failure injection: [`FailureSpec`] makes the first matching task fail
 //! after computing (simulating a lost executor mid-stage); the stage
@@ -18,6 +28,38 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+/// How the worker pool orders tasks from concurrent jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerPolicy {
+    /// One global queue in submission order (the pre-scheduler behavior;
+    /// a job that floods the queue starves everyone behind it).
+    Fifo,
+    /// Round-robin across runnable jobs, FIFO within each job (Spark's
+    /// FAIR scheduler pools, one pool per job).
+    Fair,
+}
+
+impl std::fmt::Display for SchedulerPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchedulerPolicy::Fifo => write!(f, "fifo"),
+            SchedulerPolicy::Fair => write!(f, "fair"),
+        }
+    }
+}
+
+impl std::str::FromStr for SchedulerPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Ok(SchedulerPolicy::Fifo),
+            "fair" => Ok(SchedulerPolicy::Fair),
+            other => Err(format!("unknown scheduler policy {other:?} (fifo|fair)")),
+        }
+    }
+}
 
 /// Cluster shape and behaviour knobs.
 #[derive(Debug, Clone)]
@@ -34,6 +76,12 @@ pub struct ClusterConfig {
     /// accrues to the stage's `net_wait_ms` and modeled wall time, but
     /// tests and benches should not burn real time on it.
     pub real_net_sleep: bool,
+    /// Task ordering across concurrent jobs (default: fair).
+    pub scheduler: SchedulerPolicy,
+    /// Fair policy: how many distinct jobs share the round-robin rotation
+    /// at once; jobs beyond the bound wait in arrival order for a slot
+    /// (clamped to ≥ 1). Ignored under FIFO.
+    pub max_concurrent_jobs: usize,
     /// Inject one task failure (see [`FailureSpec`]).
     pub failure: Option<FailureSpec>,
 }
@@ -45,6 +93,8 @@ impl Default for ClusterConfig {
             cores_per_executor: 2,
             net_bandwidth: None,
             real_net_sleep: false,
+            scheduler: SchedulerPolicy::Fair,
+            max_concurrent_jobs: 4,
             failure: None,
         }
     }
@@ -85,8 +135,74 @@ pub struct TaskOutcome<R> {
 
 type Job = Box<dyn FnOnce() + Send>;
 
-struct Queue {
-    jobs: Mutex<VecDeque<Job>>,
+/// Pure scheduling state: per-job FIFO queues in job-arrival order plus
+/// a rotating cursor. Kept free of locks/condvars so the policy is
+/// directly unit-testable.
+struct SchedState {
+    policy: SchedulerPolicy,
+    max_jobs: usize,
+    /// FIFO policy: the single global queue.
+    fifo: VecDeque<Job>,
+    /// Fair policy: `(job_id, tasks)` for every job with pending tasks,
+    /// in first-pending order. Queues are removed the moment they drain,
+    /// so every entry is non-empty.
+    jobs: VecDeque<(u64, VecDeque<Job>)>,
+    /// Rotation cursor into the eligible window of `jobs`.
+    rr: usize,
+}
+
+impl SchedState {
+    fn new(policy: SchedulerPolicy, max_jobs: usize) -> Self {
+        Self {
+            policy,
+            max_jobs: max_jobs.max(1),
+            fifo: VecDeque::new(),
+            jobs: VecDeque::new(),
+            rr: 0,
+        }
+    }
+
+    fn push(&mut self, job_id: u64, task: Job) {
+        match self.policy {
+            SchedulerPolicy::Fifo => self.fifo.push_back(task),
+            SchedulerPolicy::Fair => {
+                match self.jobs.iter_mut().find(|(id, _)| *id == job_id) {
+                    Some((_, q)) => q.push_back(task),
+                    None => self.jobs.push_back((job_id, VecDeque::from([task]))),
+                }
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<Job> {
+        match self.policy {
+            SchedulerPolicy::Fifo => self.fifo.pop_front(),
+            SchedulerPolicy::Fair => {
+                if self.jobs.is_empty() {
+                    return None;
+                }
+                // Only the first `max_jobs` runnable jobs are eligible
+                // (admission window in arrival order); round-robin
+                // inside the window.
+                let window = self.jobs.len().min(self.max_jobs);
+                let idx = self.rr % window;
+                let task = self.jobs[idx].1.pop_front().expect("scheduler queues are non-empty");
+                if self.jobs[idx].1.is_empty() {
+                    let _ = self.jobs.remove(idx);
+                    // The next job slides into this slot; keep the cursor
+                    // here so it is served next.
+                    self.rr = idx;
+                } else {
+                    self.rr = idx + 1;
+                }
+                Some(task)
+            }
+        }
+    }
+}
+
+struct Scheduler {
+    state: Mutex<SchedState>,
     cv: Condvar,
     shutdown: AtomicBool,
 }
@@ -94,15 +210,15 @@ struct Queue {
 /// Persistent worker pool with executor identities.
 pub struct Cluster {
     cfg: ClusterConfig,
-    queue: Arc<Queue>,
+    sched: Arc<Scheduler>,
     workers: Vec<std::thread::JoinHandle<()>>,
     failure_armed: AtomicBool,
 }
 
 impl Cluster {
     pub fn new(cfg: ClusterConfig) -> Self {
-        let queue = Arc::new(Queue {
-            jobs: Mutex::new(VecDeque::new()),
+        let sched = Arc::new(Scheduler {
+            state: Mutex::new(SchedState::new(cfg.scheduler, cfg.max_concurrent_jobs)),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
@@ -117,7 +233,7 @@ impl Cluster {
         let total = cfg.total_cores().clamp(1, host);
         let mut workers = Vec::with_capacity(total);
         for w in 0..total {
-            let q = queue.clone();
+            let q = sched.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("sparklet-worker-{w}"))
@@ -125,7 +241,7 @@ impl Cluster {
                     .expect("spawn worker"),
             );
         }
-        Self { cfg, queue, workers, failure_armed: AtomicBool::new(true) }
+        Self { cfg, sched, workers, failure_armed: AtomicBool::new(true) }
     }
 
     pub fn config(&self) -> &ClusterConfig {
@@ -137,10 +253,27 @@ impl Cluster {
         part % self.cfg.executors.max(1)
     }
 
-    /// Run one stage: `tasks[i]` computes partition `i`. Tasks must be
-    /// pure (lineage): on injected failure the task is re-run. Returns
-    /// outcomes ordered by partition plus the number of retries.
+    /// [`run_stage_for`](Self::run_stage_for) under the adhoc job id 0 —
+    /// convenience for tests and single-job callers.
     pub fn run_stage<R, F>(&self, label: &str, tasks: Vec<F>) -> (Vec<TaskOutcome<R>>, u32)
+    where
+        R: Send + 'static,
+        F: Fn() -> R + Send + Sync + 'static,
+    {
+        self.run_stage_for(0, label, tasks)
+    }
+
+    /// Run one stage of job `job_id`: `tasks[i]` computes partition `i`.
+    /// Every task is tagged with the job id, so the fair scheduler can
+    /// rotate service across concurrent jobs. Tasks must be pure
+    /// (lineage): on injected failure the task is re-run. Returns
+    /// outcomes ordered by partition plus the number of retries.
+    pub fn run_stage_for<R, F>(
+        &self,
+        job_id: u64,
+        label: &str,
+        tasks: Vec<F>,
+    ) -> (Vec<TaskOutcome<R>>, u32)
     where
         R: Send + 'static,
         F: Fn() -> R + Send + Sync + 'static,
@@ -185,7 +318,7 @@ impl Cluster {
                     break;
                 }
             });
-            self.submit(job);
+            self.submit(job_id, job);
         }
         drop(tx);
 
@@ -195,10 +328,10 @@ impl Cluster {
         (outcomes, retries.load(Ordering::Relaxed))
     }
 
-    fn submit(&self, job: Job) {
-        let mut q = self.queue.jobs.lock().unwrap();
-        q.push_back(job);
-        self.queue.cv.notify_one();
+    fn submit(&self, job_id: u64, job: Job) {
+        let mut st = self.sched.state.lock().unwrap();
+        st.push(job_id, job);
+        self.sched.cv.notify_one();
     }
 
     /// Re-arm the one-shot failure injection (tests).
@@ -209,29 +342,34 @@ impl Cluster {
 
 impl Drop for Cluster {
     fn drop(&mut self) {
-        self.queue.shutdown.store(true, Ordering::SeqCst);
-        self.queue.cv.notify_all();
+        self.sched.shutdown.store(true, Ordering::SeqCst);
+        self.sched.cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-fn worker_loop(queue: Arc<Queue>) {
+fn worker_loop(sched: Arc<Scheduler>) {
     loop {
         let job = {
-            let mut jobs = queue.jobs.lock().unwrap();
+            let mut st = sched.state.lock().unwrap();
             loop {
-                if let Some(job) = jobs.pop_front() {
+                if let Some(job) = st.pop() {
                     break job;
                 }
-                if queue.shutdown.load(Ordering::SeqCst) {
+                if sched.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                jobs = queue.cv.wait(jobs).unwrap();
+                st = sched.cv.wait(st).unwrap();
             }
         };
-        job();
+        // A panicking task must not take the worker thread with it — on
+        // a long-lived multi-job server that would shrink the pool one
+        // panic at a time until every stage hangs. The panicked task
+        // never sends its outcome, so the submitting driver fails loudly
+        // on its own "stage lost tasks" assert instead.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
     }
 }
 
@@ -312,5 +450,110 @@ mod tests {
         // network wait; sleeping is an explicit opt-in.
         assert!(!ClusterConfig::default().real_net_sleep);
         assert!(!ClusterConfig::paper_plan().real_net_sleep);
+    }
+
+    #[test]
+    fn default_scheduler_is_fair() {
+        let cfg = ClusterConfig::default();
+        assert_eq!(cfg.scheduler, SchedulerPolicy::Fair);
+        assert!(cfg.max_concurrent_jobs >= 1);
+    }
+
+    #[test]
+    fn scheduler_policy_parses() {
+        assert_eq!("fair".parse::<SchedulerPolicy>().unwrap(), SchedulerPolicy::Fair);
+        assert_eq!("FIFO".parse::<SchedulerPolicy>().unwrap(), SchedulerPolicy::Fifo);
+        assert!("lifo".parse::<SchedulerPolicy>().is_err());
+        assert_eq!(SchedulerPolicy::Fair.to_string(), "fair");
+    }
+
+    /// Drive a bare [`SchedState`] and record which (job, seq) tag each
+    /// popped task carries.
+    fn pop_order(state: &mut SchedState, pushes: &[(u64, u32)]) -> Vec<(u64, u32)> {
+        let log: Arc<Mutex<Vec<(u64, u32)>>> = Arc::new(Mutex::new(Vec::new()));
+        for &(job, seq) in pushes {
+            let log = log.clone();
+            state.push(job, Box::new(move || log.lock().unwrap().push((job, seq))));
+        }
+        while let Some(task) = state.pop() {
+            task();
+        }
+        let out = log.lock().unwrap().clone();
+        out
+    }
+
+    #[test]
+    fn fair_round_robins_across_jobs_fifo_within() {
+        let mut st = SchedState::new(SchedulerPolicy::Fair, 8);
+        // Job 1 floods first; job 2 arrives after.
+        let order = pop_order(
+            &mut st,
+            &[(1, 0), (1, 1), (1, 2), (1, 3), (2, 0), (2, 1)],
+        );
+        assert_eq!(
+            order,
+            vec![(1, 0), (2, 0), (1, 1), (2, 1), (1, 2), (1, 3)],
+            "fair must alternate jobs and stay FIFO within each"
+        );
+    }
+
+    #[test]
+    fn fifo_preserves_global_submission_order() {
+        let mut st = SchedState::new(SchedulerPolicy::Fifo, 8);
+        let order = pop_order(&mut st, &[(1, 0), (2, 0), (1, 1), (2, 1)]);
+        assert_eq!(order, vec![(1, 0), (2, 0), (1, 1), (2, 1)]);
+    }
+
+    #[test]
+    fn max_concurrent_jobs_bounds_the_window() {
+        // With a window of 1, the first-arrived job drains completely
+        // before the second gets any service.
+        let mut st = SchedState::new(SchedulerPolicy::Fair, 1);
+        let order = pop_order(&mut st, &[(1, 0), (2, 0), (1, 1), (2, 1)]);
+        assert_eq!(order, vec![(1, 0), (1, 1), (2, 0), (2, 1)]);
+    }
+
+    #[test]
+    fn fair_window_admits_next_job_when_one_drains() {
+        let mut st = SchedState::new(SchedulerPolicy::Fair, 2);
+        // Three jobs pending; only the first two rotate until one drains.
+        let order = pop_order(
+            &mut st,
+            &[(1, 0), (1, 1), (2, 0), (3, 0), (3, 1)],
+        );
+        // Window {1,2}: 1/0, 2/0 (job 2 drains, job 3 enters), then
+        // rotation over {1,3}.
+        assert_eq!(order, vec![(1, 0), (2, 0), (3, 0), (1, 1), (3, 1)]);
+    }
+
+    #[test]
+    fn panicking_task_does_not_kill_the_worker_pool() {
+        let cluster = Cluster::new(ClusterConfig::new(1, 1));
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let tasks: Vec<_> = (0..1).map(|_| move || -> u8 { panic!("task boom") }).collect();
+            cluster.run_stage("boom", tasks);
+        }));
+        assert!(boom.is_err(), "driver must fail loudly on the lost task");
+        // The pool survives the task panic: a follow-up stage completes.
+        let tasks: Vec<_> = (0..4).map(|i| move || i).collect();
+        let (out, _) = cluster.run_stage("after", tasks);
+        assert_eq!(out.len(), 4);
+    }
+
+    #[test]
+    fn concurrent_stages_from_two_jobs_both_complete() {
+        let cluster = Arc::new(Cluster::new(ClusterConfig::new(2, 2)));
+        let mut handles = Vec::new();
+        for job in 1u64..=2 {
+            let cl = cluster.clone();
+            handles.push(std::thread::spawn(move || {
+                let tasks: Vec<_> = (0..32).map(|i| move || i + job as usize).collect();
+                let (out, _) = cl.run_stage_for(job, "concurrent", tasks);
+                out.iter().map(|o| o.result).sum::<usize>()
+            }));
+        }
+        let sums: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let base: usize = (0..32).sum();
+        assert_eq!(sums, vec![base + 32, base + 64]);
     }
 }

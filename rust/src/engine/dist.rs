@@ -15,15 +15,24 @@
 //! cross the shuffle (`StageMetrics::combined_records` reports what the
 //! map side absorbed).
 //!
+//! **Job identity is explicit**: [`SparkContext::run_job`] returns a
+//! [`JobCtx`] — job id plus that job's own stage recorder — and every
+//! `Dist` carries the `JobCtx` of the job that created it through its
+//! lineage. Stage execution records into the carried scope and tags
+//! cluster tasks with the job id (the fair scheduler's unit of service),
+//! so N concurrent jobs on one context interleave on the shared worker
+//! pool with isolated metrics by construction. Datasets made directly on
+//! a `SparkContext` (no `run_job`) share the context's fallback "adhoc"
+//! scope.
+//!
 //! Because compute closures are pure, a lost task is re-run from lineage
 //! (see [`crate::engine::cluster`]'s failure injection).
 
 use std::hash::Hash;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::engine::cluster::{Cluster, ClusterConfig};
-use crate::engine::metrics::{JobMetrics, MetricsRegistry, StageMetrics};
+use crate::engine::metrics::{JobMetrics, JobScope, MetricsRegistry, StageMetrics};
 use crate::engine::partitioner::{DetHashMap, HashPartitioner, Partitioner};
 use crate::engine::sizable::Sizable;
 
@@ -34,7 +43,8 @@ impl<T: Clone + Send + Sync + 'static> Data for T {}
 struct CtxInner {
     cluster: Cluster,
     metrics: MetricsRegistry,
-    stage_seq: AtomicUsize,
+    /// Fallback scope for datasets created outside any `run_job`.
+    adhoc: Arc<JobScope>,
 }
 
 /// Driver handle: owns the simulated cluster and the metrics registry.
@@ -49,7 +59,7 @@ impl SparkContext {
             inner: Arc::new(CtxInner {
                 cluster: Cluster::new(cfg),
                 metrics: MetricsRegistry::new(),
-                stage_seq: AtomicUsize::new(0),
+                adhoc: Arc::new(JobScope::adhoc()),
             }),
         }
     }
@@ -71,21 +81,71 @@ impl SparkContext {
         &self.inner.metrics
     }
 
-    /// Begin a named job scope (stages record under it).
-    pub fn begin_job(&self, name: &str) {
-        self.inner.metrics.begin_job(name);
+    /// Open a named job scope: the returned [`JobCtx`] owns a fresh job
+    /// id and stage recorder. Datasets created through it carry the
+    /// scope through their lineage; call [`JobCtx::finish`] to finalize
+    /// and archive the job's metrics. Any number of jobs may run
+    /// concurrently on one context.
+    pub fn run_job(&self, name: &str) -> JobCtx {
+        JobCtx { ctx: self.clone(), scope: Arc::new(self.inner.metrics.new_scope(name)) }
     }
 
-    /// End the job scope, returning its metrics.
-    pub fn end_job(&self) -> Option<JobMetrics> {
-        self.inner.metrics.end_job()
+    /// The context's fallback scope (job id 0) for work outside any
+    /// `run_job` — quick tests and exploratory pipelines. The scope is
+    /// shared for the context's lifetime and cannot be `finish()`ed;
+    /// inspect it with [`JobCtx::stages`].
+    pub fn adhoc_job(&self) -> JobCtx {
+        JobCtx { ctx: self.clone(), scope: self.inner.adhoc.clone() }
     }
 
-    /// Distribute `data` over `parts` contiguous chunks.
+    /// Distribute `data` over `parts` contiguous chunks (adhoc scope).
+    pub fn parallelize<T: Data>(&self, data: Vec<T>, parts: usize) -> Dist<T> {
+        self.adhoc_job().parallelize(data, parts)
+    }
+
+    /// Wrap pre-partitioned data (adhoc scope).
+    pub fn from_partitions<T: Data>(&self, parts: Vec<Vec<T>>) -> Dist<T> {
+        self.adhoc_job().from_partitions(parts)
+    }
+}
+
+/// A scoped job handle: `(SparkContext, this job's recorder)`. Cloneable
+/// and cheap — every `Dist` the job creates carries one, so stage
+/// execution never consults shared mutable "current job" state.
+#[derive(Clone)]
+pub struct JobCtx {
+    ctx: SparkContext,
+    scope: Arc<JobScope>,
+}
+
+impl JobCtx {
+    /// Registry-unique job id (0 = the context's adhoc scope); the tag
+    /// on every cluster task this job submits.
+    pub fn id(&self) -> u64 {
+        self.scope.id()
+    }
+
+    pub fn name(&self) -> &str {
+        self.scope.name()
+    }
+
+    pub fn context(&self) -> &SparkContext {
+        &self.ctx
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        self.ctx.cluster()
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        self.ctx.config()
+    }
+
+    /// Distribute `data` over `parts` contiguous chunks, bound to this job.
     pub fn parallelize<T: Data>(&self, data: Vec<T>, parts: usize) -> Dist<T> {
         let parts = parts.max(1);
         let n = data.len();
-        let per = n.div_ceil(parts.max(1)).max(1);
+        let per = n.div_ceil(parts).max(1);
         let mut chunks: Vec<Vec<T>> = Vec::with_capacity(parts);
         let mut it = data.into_iter();
         for _ in 0..parts {
@@ -94,23 +154,47 @@ impl SparkContext {
         self.from_partitions(chunks)
     }
 
-    /// Wrap pre-partitioned data.
+    /// Wrap pre-partitioned data, bound to this job.
     pub fn from_partitions<T: Data>(&self, parts: Vec<Vec<T>>) -> Dist<T> {
         let src = Arc::new(parts);
         let n = src.len();
         Dist {
-            ctx: self.clone(),
+            job: self.clone(),
             num_parts: n,
             compute: Arc::new(move |p| src[p].clone()),
         }
     }
 
-    fn next_stage_id(&self) -> usize {
-        self.inner.stage_seq.fetch_add(1, Ordering::Relaxed)
+    /// Record a stage against this job (engine-internal and synthetic
+    /// driver-side stages, e.g. MLLib's grid simulation).
+    pub fn record_stage(&self, m: StageMetrics) {
+        self.scope.record_stage(m);
     }
 
-    fn record(&self, m: StageMetrics) {
-        self.inner.metrics.record_stage(m);
+    /// Next job-local stage id.
+    pub(crate) fn next_stage_id(&self) -> usize {
+        self.scope.next_stage_id()
+    }
+
+    /// Snapshot of the stages recorded so far (tests, live inspection).
+    pub fn stages(&self) -> Vec<StageMetrics> {
+        self.scope.stages()
+    }
+
+    /// Finalize the job: build its [`JobMetrics`], archive them in the
+    /// context's registry, and return them. Panics if called twice, and
+    /// refuses the shared adhoc scope (finalizing it would poison every
+    /// later context-level dataset for the context's whole lifetime —
+    /// snapshot it with [`stages`](Self::stages) instead).
+    pub fn finish(&self) -> JobMetrics {
+        assert!(
+            self.id() != 0,
+            "the shared adhoc scope cannot be finished — open a scoped job with \
+             run_job(), or snapshot adhoc stages via stages()"
+        );
+        let job = self.scope.finalize();
+        self.ctx.metrics().register(job.clone());
+        job
     }
 }
 
@@ -118,14 +202,14 @@ type Compute<T> = Arc<dyn Fn(usize) -> Vec<T> + Send + Sync>;
 
 /// A distributed collection (see module docs).
 pub struct Dist<T> {
-    ctx: SparkContext,
+    job: JobCtx,
     num_parts: usize,
     compute: Compute<T>,
 }
 
 impl<T> Clone for Dist<T> {
     fn clone(&self) -> Self {
-        Self { ctx: self.ctx.clone(), num_parts: self.num_parts, compute: self.compute.clone() }
+        Self { job: self.job.clone(), num_parts: self.num_parts, compute: self.compute.clone() }
     }
 }
 
@@ -135,14 +219,19 @@ impl<T: Data> Dist<T> {
     }
 
     pub fn context(&self) -> &SparkContext {
-        &self.ctx
+        self.job.context()
+    }
+
+    /// The job scope this dataset's stages record into.
+    pub fn job(&self) -> &JobCtx {
+        &self.job
     }
 
     /// Narrow: element-wise transform, pipelined.
     pub fn map<U: Data>(&self, f: impl Fn(T) -> U + Send + Sync + 'static) -> Dist<U> {
         let parent = self.compute.clone();
         Dist {
-            ctx: self.ctx.clone(),
+            job: self.job.clone(),
             num_parts: self.num_parts,
             compute: Arc::new(move |p| parent(p).into_iter().map(&f).collect()),
         }
@@ -152,7 +241,7 @@ impl<T: Data> Dist<T> {
     pub fn flat_map<U: Data>(&self, f: impl Fn(T) -> Vec<U> + Send + Sync + 'static) -> Dist<U> {
         let parent = self.compute.clone();
         Dist {
-            ctx: self.ctx.clone(),
+            job: self.job.clone(),
             num_parts: self.num_parts,
             compute: Arc::new(move |p| parent(p).into_iter().flat_map(&f).collect()),
         }
@@ -162,7 +251,7 @@ impl<T: Data> Dist<T> {
     pub fn filter(&self, f: impl Fn(&T) -> bool + Send + Sync + 'static) -> Dist<T> {
         let parent = self.compute.clone();
         Dist {
-            ctx: self.ctx.clone(),
+            job: self.job.clone(),
             num_parts: self.num_parts,
             compute: Arc::new(move |p| parent(p).into_iter().filter(|t| f(t)).collect()),
         }
@@ -175,7 +264,7 @@ impl<T: Data> Dist<T> {
     ) -> Dist<U> {
         let parent = self.compute.clone();
         Dist {
-            ctx: self.ctx.clone(),
+            job: self.job.clone(),
             num_parts: self.num_parts,
             compute: Arc::new(move |p| f(parent(p))),
         }
@@ -189,7 +278,7 @@ impl<T: Data> Dist<T> {
     ) -> Dist<U> {
         let parent = self.compute.clone();
         Dist {
-            ctx: self.ctx.clone(),
+            job: self.job.clone(),
             num_parts: self.num_parts,
             compute: Arc::new(move |p| f(p, parent(p))),
         }
@@ -198,11 +287,11 @@ impl<T: Data> Dist<T> {
     /// Build a `Dist` directly from a partition-compute function (used by
     /// engine-internal operators like `coalesce`).
     pub fn from_fn(
-        ctx: SparkContext,
+        job: JobCtx,
         num_parts: usize,
         f: impl Fn(usize) -> Vec<T> + Send + Sync + 'static,
     ) -> Dist<T> {
-        Dist { ctx, num_parts: num_parts.max(1), compute: Arc::new(f) }
+        Dist { job, num_parts: num_parts.max(1), compute: Arc::new(f) }
     }
 
     /// Compute one partition's contents in the calling thread (lineage
@@ -211,13 +300,24 @@ impl<T: Data> Dist<T> {
         (self.compute)(p)
     }
 
-    /// Narrow: concatenation of partition lists (Spark `union`).
+    /// Narrow: concatenation of partition lists (Spark `union`). Both
+    /// sides must belong to the same job scope — a cross-job union
+    /// would silently record the other job's stages here, exactly the
+    /// metric bleed scoped jobs exist to prevent, so it fails loudly
+    /// (once per operator call; the cost is nil).
     pub fn union(&self, other: &Dist<T>) -> Dist<T> {
+        assert_eq!(
+            self.job.id(),
+            other.job.id(),
+            "union across job scopes ('{}' vs '{}')",
+            self.job.name(),
+            other.job.name()
+        );
         let left = self.compute.clone();
         let right = other.compute.clone();
         let split = self.num_parts;
         Dist {
-            ctx: self.ctx.clone(),
+            job: self.job.clone(),
             num_parts: self.num_parts + other.num_parts,
             compute: Arc::new(move |p| if p < split { left(p) } else { right(p - split) }),
         }
@@ -238,7 +338,7 @@ impl<T: Data> Dist<T> {
                 move || compute(p).len()
             })
             .collect();
-        let (outcomes, retries) = self.ctx.cluster().run_stage(label, tasks);
+        let (outcomes, retries) = self.job.cluster().run_stage_for(self.job.id(), label, tasks);
         self.record_compute_stage(label, &outcomes, retries, 0);
         outcomes.into_iter().map(|o| o.result).sum()
     }
@@ -247,7 +347,7 @@ impl<T: Data> Dist<T> {
     /// returns a source-backed `Dist`, so later branches don't recompute.
     pub fn cache(&self, label: &str) -> Dist<T> {
         let parts = self.run_result_stage(label);
-        self.ctx.from_partitions(parts)
+        self.job.from_partitions(parts)
     }
 
     /// Run each partition's pipeline, return per-partition outputs.
@@ -259,7 +359,7 @@ impl<T: Data> Dist<T> {
                 move || compute(p)
             })
             .collect();
-        let (outcomes, retries) = self.ctx.cluster().run_stage(label, tasks);
+        let (outcomes, retries) = self.job.cluster().run_stage_for(self.job.id(), label, tasks);
         let records: u64 = outcomes.iter().map(|o| o.result.len() as u64).sum();
         self.record_compute_stage(label, &outcomes, retries, records);
         outcomes.into_iter().map(|o| o.result).collect()
@@ -273,10 +373,10 @@ impl<T: Data> Dist<T> {
         records_out: u64,
     ) {
         let comp_ms: f64 = outcomes.iter().map(|o| o.busy_ms).sum();
-        let total_cores = self.ctx.config().total_cores();
+        let total_cores = self.job.config().total_cores();
         let wall_ms = comp_ms_to_wall(outcomes, total_cores);
-        self.ctx.record(StageMetrics {
-            stage_id: self.ctx.next_stage_id(),
+        self.job.record_stage(StageMetrics {
+            stage_id: self.job.next_stage_id(),
             label: label.to_string(),
             tasks: outcomes.len(),
             wall_ms,
@@ -334,23 +434,23 @@ struct ShuffleOut<K, V> {
 type MapOut<K, V> = (Vec<Vec<(K, V)>>, Vec<u64>, u64);
 
 /// Merge map-task buckets, account bytes/records, apply the (simulated)
-/// network wait, and record the stage. `records_out` counts what actually
-/// crossed the wire; the difference to the task input counts is reported
-/// as [`StageMetrics::combined_records`] (what map-side combining
-/// absorbed).
+/// network wait, and record the stage against `job`. `records_out`
+/// counts what actually crossed the wire; the difference to the task
+/// input counts is reported as [`StageMetrics::combined_records`] (what
+/// map-side combining absorbed).
 fn collect_shuffle<K: Data, V: Data>(
-    ctx: &SparkContext,
+    job: &JobCtx,
     label: &str,
     map_parts: usize,
     out_parts: usize,
     outcomes: Vec<crate::engine::cluster::TaskOutcome<MapOut<K, V>>>,
     retries: u32,
 ) -> ShuffleOut<K, V> {
-    let cluster = ctx.cluster();
+    let cluster = job.cluster();
     let mut merged: Vec<Vec<(K, V)>> = (0..out_parts).map(|_| Vec::new()).collect();
     let (mut total, mut remote, mut records, mut in_records) = (0u64, 0u64, 0u64, 0u64);
     let comp_ms: f64 = outcomes.iter().map(|o| o.busy_ms).sum();
-    let wall_ms = comp_ms_to_wall(&outcomes, ctx.config().total_cores());
+    let wall_ms = comp_ms_to_wall(&outcomes, job.config().total_cores());
     for o in outcomes {
         let src_exec = cluster.executor_of(o.part);
         let (buckets, bucket_bytes, task_in) = o.result;
@@ -371,19 +471,19 @@ fn collect_shuffle<K: Data, V: Data>(
     // cluster opts in (`ClusterConfig::real_net_sleep`) — tests and
     // benches must not burn wall-clock on simulated waiting.
     let mut net_wait_ms = 0.0;
-    if let Some(bw) = ctx.config().net_bandwidth {
+    if let Some(bw) = job.config().net_bandwidth {
         if bw > 0.0 && remote > 0 {
-            let secs = remote as f64 / bw / ctx.config().executors.max(1) as f64;
+            let secs = remote as f64 / bw / job.config().executors.max(1) as f64;
             net_wait_ms = secs * 1e3;
-            if ctx.config().real_net_sleep {
+            if job.config().real_net_sleep {
                 std::thread::sleep(std::time::Duration::from_secs_f64(secs));
             }
         }
     }
 
-    let total_cores = ctx.config().total_cores();
-    ctx.record(StageMetrics {
-        stage_id: ctx.next_stage_id(),
+    let total_cores = job.config().total_cores();
+    job.record_stage(StageMetrics {
+        stage_id: job.next_stage_id(),
         label: label.to_string(),
         tasks: map_parts,
         wall_ms: wall_ms + net_wait_ms,
@@ -410,7 +510,7 @@ where
         let out = self.shuffle_write(label, partitioner);
         let buckets = out.buckets;
         Dist {
-            ctx: self.ctx.clone(),
+            job: self.job.clone(),
             num_parts: buckets.len(),
             compute: Arc::new(move |p| buckets[p].clone()),
         }
@@ -430,7 +530,7 @@ where
         let out = self.shuffle_write(label, partitioner);
         let buckets = out.buckets;
         Dist {
-            ctx: self.ctx.clone(),
+            job: self.job.clone(),
             num_parts: buckets.len(),
             compute: Arc::new(move |p| {
                 let mut groups: DetHashMap<K, Vec<V>> = Default::default();
@@ -489,7 +589,7 @@ where
         let out = self.shuffle_write_folded(label, partitioner, Arc::new(lift), Arc::new(merge));
         let buckets = out.buckets;
         Dist {
-            ctx: self.ctx.clone(),
+            job: self.job.clone(),
             num_parts: buckets.len(),
             compute: Arc::new(move |p| {
                 let mut acc: DetHashMap<K, A> = Default::default();
@@ -516,12 +616,13 @@ where
         other: &Dist<(K, W)>,
         parts: usize,
     ) -> Dist<(K, (V, W))> {
+        assert_eq!(self.job.id(), other.job.id(), "join across job scopes");
         let partitioner: Arc<dyn Partitioner<K>> = Arc::new(HashPartitioner::new(parts));
         let left = self.shuffle_write(&format!("{label}/left"), partitioner.clone());
         let right = other.shuffle_write(&format!("{label}/right"), partitioner);
         let (lb, rb) = (left.buckets, right.buckets);
         Dist {
-            ctx: self.ctx.clone(),
+            job: self.job.clone(),
             num_parts: lb.len(),
             compute: Arc::new(move |p| {
                 let mut lmap: DetHashMap<K, Vec<V>> = Default::default();
@@ -560,11 +661,12 @@ where
         other: &Dist<(K, W)>,
         partitioner: Arc<dyn Partitioner<K>>,
     ) -> Dist<(K, (Vec<V>, Vec<W>))> {
+        assert_eq!(self.job.id(), other.job.id(), "cogroup across job scopes");
         let left = self.shuffle_write(&format!("{label}/left"), partitioner.clone());
         let right = other.shuffle_write(&format!("{label}/right"), partitioner);
         let (lb, rb) = (left.buckets, right.buckets);
         Dist {
-            ctx: self.ctx.clone(),
+            job: self.job.clone(),
             num_parts: lb.len(),
             compute: Arc::new(move |p| {
                 let mut groups: DetHashMap<K, (Vec<V>, Vec<W>)> = Default::default();
@@ -607,8 +709,8 @@ where
                 }
             })
             .collect();
-        let (outcomes, retries) = self.ctx.cluster().run_stage(label, tasks);
-        collect_shuffle(&self.ctx, label, self.num_parts, out_parts, outcomes, retries)
+        let (outcomes, retries) = self.job.cluster().run_stage_for(self.job.id(), label, tasks);
+        collect_shuffle(&self.job, label, self.num_parts, out_parts, outcomes, retries)
     }
 
     /// Map stage + shuffle write with map-side combining into an
@@ -655,8 +757,8 @@ where
                 }
             })
             .collect();
-        let (outcomes, retries) = self.ctx.cluster().run_stage(label, tasks);
-        collect_shuffle(&self.ctx, label, self.num_parts, out_parts, outcomes, retries)
+        let (outcomes, retries) = self.job.cluster().run_stage_for(self.job.id(), label, tasks);
+        collect_shuffle(&self.job, label, self.num_parts, out_parts, outcomes, retries)
     }
 }
 
@@ -682,7 +784,8 @@ mod tests {
     #[test]
     fn map_filter_flatmap_pipeline() {
         let ctx = ctx();
-        let d = ctx.parallelize((0u64..10).collect(), 3);
+        let job = ctx.run_job("pipeline");
+        let d = job.parallelize((0u64..10).collect(), 3);
         let out = d
             .map(|x| x * 2)
             .filter(|x| x % 4 == 0)
@@ -690,9 +793,8 @@ mod tests {
         let mut got = out.collect("pipeline");
         got.sort();
         assert_eq!(got, vec![0, 1, 4, 5, 8, 9, 12, 13, 16, 17]);
-        // The whole pipeline ran as ONE stage.
-        let stages = ctx.metrics().current_stages();
-        assert_eq!(stages.len(), 1);
+        // The whole pipeline ran as ONE stage, recorded in THIS job.
+        assert_eq!(job.stages().len(), 1);
     }
 
     #[test]
@@ -741,13 +843,12 @@ mod tests {
     fn reduce_by_key_map_side_combine_shrinks_shuffle() {
         let ctx = ctx();
         let pairs: Vec<(u32, u64)> = (0..1000).map(|i| (i % 2, 1u64)).collect();
-        ctx.begin_job("combine-test");
-        ctx.parallelize(pairs.clone(), 4)
+        let job = ctx.run_job("combine-test");
+        job.parallelize(pairs.clone(), 4)
             .reduce_by_key("rbk", 2, |a, b| a + b)
             .collect("c");
-        let rbk_records: u64 = ctx
-            .metrics()
-            .current_stages()
+        let rbk_records: u64 = job
+            .stages()
             .iter()
             .filter(|s| s.label == "rbk")
             .map(|s| s.records_out)
@@ -756,10 +857,9 @@ mod tests {
         // not 1000.
         assert!(rbk_records <= 8, "records_out={rbk_records}");
 
-        ctx.parallelize(pairs, 4).group_by_key("gbk", 2).collect("c2");
-        let gbk_records: u64 = ctx
-            .metrics()
-            .current_stages()
+        job.parallelize(pairs, 4).group_by_key("gbk", 2).collect("c2");
+        let gbk_records: u64 = job
+            .stages()
             .iter()
             .filter(|s| s.label == "gbk")
             .map(|s| s.records_out)
@@ -770,9 +870,9 @@ mod tests {
     #[test]
     fn fold_by_key_with_distinct_accumulator() {
         let ctx = ctx();
-        ctx.begin_job("fold");
+        let job = ctx.run_job("fold");
         let pairs: Vec<(u32, u64)> = (0..100).map(|i| (i % 4, i)).collect();
-        let mut out = ctx
+        let mut out = job
             .parallelize(pairs, 5)
             .fold_by_key(
                 "fbk",
@@ -791,9 +891,8 @@ mod tests {
             .collect("c");
         out.sort();
         assert_eq!(out, vec![(0, 25), (1, 25), (2, 25), (3, 25)]);
-        let fbk = ctx
-            .metrics()
-            .current_stages()
+        let fbk = job
+            .stages()
             .into_iter()
             .find(|s| s.label == "fbk")
             .unwrap();
@@ -805,12 +904,11 @@ mod tests {
     #[test]
     fn combined_records_zero_for_gather_shuffles() {
         let ctx = ctx();
-        ctx.begin_job("gather");
+        let job = ctx.run_job("gather");
         let pairs: Vec<(u32, u64)> = (0..50).map(|i| (i % 5, i)).collect();
-        ctx.parallelize(pairs, 4).group_by_key("gbk", 2).collect("c");
-        let gbk = ctx
-            .metrics()
-            .current_stages()
+        job.parallelize(pairs, 4).group_by_key("gbk", 2).collect("c");
+        let gbk = job
+            .stages()
             .into_iter()
             .find(|s| s.label == "gbk")
             .unwrap();
@@ -854,10 +952,10 @@ mod tests {
     #[test]
     fn shuffle_accounting_nonzero() {
         let ctx = ctx();
-        ctx.begin_job("acct");
+        let job = ctx.run_job("acct");
         let pairs: Vec<(u32, u64)> = (0..64).map(|i| (i, i as u64)).collect();
-        ctx.parallelize(pairs, 4).group_by_key("gbk", 4).collect("c");
-        let stages = ctx.metrics().current_stages();
+        job.parallelize(pairs, 4).group_by_key("gbk", 4).collect("c");
+        let stages = job.stages();
         let gbk = stages.iter().find(|s| s.label == "gbk").unwrap();
         assert_eq!(gbk.shuffle_bytes, 64 * 12); // (u32 + u64) per record
         assert!(gbk.remote_bytes <= gbk.shuffle_bytes);
@@ -883,16 +981,16 @@ mod tests {
         let mut cfg = ClusterConfig::new(2, 1);
         cfg.failure = Some(FailureSpecAlias { stage_contains: "gbk".into(), partition: 0 });
         let ctx = SparkContext::new(cfg);
-        ctx.begin_job("failure");
+        let job = ctx.run_job("failure");
         let pairs: Vec<(u32, u64)> = (0..20).map(|i| (i % 4, 1)).collect();
-        let mut out = ctx
+        let mut out = job
             .parallelize(pairs, 4)
             .group_by_key("gbk", 2)
             .map(|(k, vs)| (k, vs.len()))
             .collect("c");
         out.sort();
         assert_eq!(out, vec![(0, 5), (1, 5), (2, 5), (3, 5)]);
-        let stages = ctx.metrics().current_stages();
+        let stages = job.stages();
         let gbk = stages.iter().find(|s| s.label == "gbk").unwrap();
         assert_eq!(gbk.retries, 1, "injected failure must surface as a retry");
     }
@@ -904,12 +1002,66 @@ mod tests {
         let mut cfg = ClusterConfig::new(2, 1);
         cfg.net_bandwidth = Some(1e6); // 1 MB/s — slow enough to observe
         let ctx = SparkContext::new(cfg);
-        ctx.begin_job("net");
+        let job = ctx.run_job("net");
         let pairs: Vec<(u32, Vec<f64>)> = (0..8).map(|i| (i, vec![0.0; 1000])).collect();
-        ctx.parallelize(pairs, 4).group_by_key("gbk", 4).collect("c");
-        let stages = ctx.metrics().current_stages();
+        job.parallelize(pairs, 4).group_by_key("gbk", 4).collect("c");
+        let stages = job.stages();
         let gbk = stages.iter().find(|s| s.label == "gbk").unwrap();
         assert!(gbk.net_wait_ms > 0.0);
         assert!(gbk.wall_ms >= gbk.net_wait_ms);
+    }
+
+    #[test]
+    fn run_job_scopes_are_isolated_and_archived() {
+        // Two jobs interleaved on ONE context: stages land in their own
+        // scopes, and finish() archives both in the registry.
+        let ctx = ctx();
+        let a = ctx.run_job("job-a");
+        let b = ctx.run_job("job-b");
+        assert_ne!(a.id(), b.id());
+        a.parallelize((0u32..10).map(|i| (i % 2, i)).collect(), 2)
+            .group_by_key("a/gbk", 2)
+            .collect("a/collect");
+        b.parallelize((0u32..10).collect(), 2).collect("b/collect");
+        a.parallelize((0u32..4).collect(), 2).count("a/count");
+        let sa = a.stages();
+        let sb = b.stages();
+        assert_eq!(sa.len(), 3);
+        assert_eq!(sb.len(), 1);
+        assert!(sa.iter().all(|s| s.label.starts_with("a/")));
+        assert!(sb.iter().all(|s| s.label.starts_with("b/")));
+        let ja = a.finish();
+        let jb = b.finish();
+        assert_eq!(ja.name, "job-a");
+        assert_eq!(jb.stages.len(), 1);
+        let archived = ctx.metrics().jobs();
+        assert_eq!(archived.len(), 2);
+    }
+
+    #[test]
+    fn adhoc_datasets_share_the_fallback_scope() {
+        let ctx = ctx();
+        let d = ctx.parallelize((0u64..8).collect(), 2);
+        assert_eq!(d.job().id(), 0);
+        d.collect("adhoc-collect");
+        assert_eq!(ctx.adhoc_job().stages().len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "union across job scopes")]
+    fn union_across_job_scopes_panics() {
+        let ctx = ctx();
+        let a = ctx.run_job("a").parallelize(vec![1u32], 1);
+        let b = ctx.run_job("b").parallelize(vec![2u32], 1);
+        let _ = a.union(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "adhoc scope cannot be finished")]
+    fn adhoc_scope_refuses_finish() {
+        // Finalizing the shared fallback scope would poison every later
+        // ctx.parallelize for the context's lifetime — reject it loudly.
+        let ctx = ctx();
+        let _ = ctx.adhoc_job().finish();
     }
 }

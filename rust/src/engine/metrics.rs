@@ -5,14 +5,23 @@
 //! [`StageMetrics`]. Labels follow the convention `"<phase>/<detail>"`
 //! (e.g. `"divide/flatMap L1"`, `"stage3/cogroup"`); the phase prefix is
 //! what the stage-wise experiment groups by.
+//!
+//! Job identity is **scoped, not ambient**: each job owns a
+//! [`JobScope`] — its own stage recorder — created by
+//! `SparkContext::run_job` and carried through `Dist` lineage (inside
+//! `JobCtx`). There is no registry-wide "current job" slot, so N
+//! concurrent jobs record into N disjoint recorders by construction;
+//! the [`MetricsRegistry`] only allocates job ids and archives finished
+//! [`JobMetrics`].
 
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
 /// Metrics of one executed stage.
 #[derive(Debug, Clone)]
 pub struct StageMetrics {
-    /// Monotonic stage id within the context.
+    /// Monotonic stage id within the job scope.
     pub stage_id: usize,
     /// `"<phase>/<detail>"` label supplied by the algorithm.
     pub label: String,
@@ -72,6 +81,8 @@ impl StageMetrics {
 /// Metrics of one job (one algorithm invocation).
 #[derive(Debug, Clone)]
 pub struct JobMetrics {
+    /// Registry-unique job id (0 is the per-context adhoc scope).
+    pub id: u64,
     pub name: String,
     pub stages: Vec<StageMetrics>,
     /// Modeled cluster wall time: the sum of per-stage makespans (stages
@@ -126,6 +137,7 @@ impl JobMetrics {
     pub fn to_json(&self) -> crate::util::json::Value {
         use crate::util::json::Value;
         Value::obj(vec![
+            ("job_id", Value::num(self.id as f64)),
             ("name", Value::str(self.name.clone())),
             ("wall_ms", Value::num(self.wall_ms)),
             ("stages", Value::Array(self.stages.iter().map(|s| s.to_json()).collect())),
@@ -133,81 +145,145 @@ impl JobMetrics {
     }
 }
 
-struct InFlight {
+/// One job's private stage recorder. Stages recorded here belong to this
+/// job and no other; two scopes never share mutable state, which is what
+/// makes concurrent jobs isolated *by construction* rather than by
+/// locking discipline.
+pub struct JobScope {
+    id: u64,
     name: String,
     started: Instant,
-    stages: Vec<StageMetrics>,
+    stages: Mutex<Vec<StageMetrics>>,
+    stage_seq: AtomicUsize,
+    finished: AtomicBool,
 }
 
-/// Thread-safe registry of finished jobs plus the in-flight one.
-#[derive(Default)]
+impl JobScope {
+    pub(crate) fn new(id: u64, name: &str) -> Self {
+        Self {
+            id,
+            name: name.to_string(),
+            started: Instant::now(),
+            stages: Mutex::new(Vec::new()),
+            stage_seq: AtomicUsize::new(0),
+            finished: AtomicBool::new(false),
+        }
+    }
+
+    /// The per-context fallback scope for stages run outside any
+    /// `run_job` (quick tests, REPL-style exploration). Id 0 is reserved
+    /// for it; `MetricsRegistry` hands out ids from 1.
+    pub(crate) fn adhoc() -> Self {
+        Self::new(0, "adhoc")
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Record a stage against this job. Panics if the job already
+    /// finished — a late recording would silently diverge from the
+    /// archived [`JobMetrics`], so it fails loudly like double-finalize.
+    /// The flag is checked under the stages mutex (as `finalize` flips
+    /// it under the same lock), so a stage can never slip in between
+    /// the snapshot and the flip.
+    pub fn record_stage(&self, m: StageMetrics) {
+        let mut stages = self.stages.lock().unwrap();
+        assert!(
+            !self.finished.load(Ordering::SeqCst),
+            "stage {:?} recorded after job '{}' (id {}) finished",
+            m.label,
+            self.name,
+            self.id
+        );
+        stages.push(m);
+    }
+
+    /// Next job-local stage id.
+    pub fn next_stage_id(&self) -> usize {
+        self.stage_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Snapshot of the stages recorded so far (tests, live inspection).
+    pub fn stages(&self) -> Vec<StageMetrics> {
+        self.stages.lock().unwrap().clone()
+    }
+
+    /// Finalize into [`JobMetrics`]. Panics on a second call — a job
+    /// finishing twice is a driver bug, not a recoverable state. The
+    /// finished flag flips under the stages mutex so no concurrent
+    /// `record_stage` can land between the snapshot and the flip.
+    pub(crate) fn finalize(&self) -> JobMetrics {
+        let stages = {
+            let stages = self.stages.lock().unwrap();
+            assert!(
+                !self.finished.swap(true, Ordering::SeqCst),
+                "job '{}' (id {}) finished twice",
+                self.name,
+                self.id
+            );
+            stages.clone()
+        };
+        let wall_ms = stages.iter().map(|s| s.wall_ms).sum();
+        JobMetrics {
+            id: self.id,
+            name: self.name.clone(),
+            wall_ms,
+            elapsed_ms: self.started.elapsed().as_secs_f64() * 1e3,
+            stages,
+        }
+    }
+}
+
+/// Upper bound on archived finished jobs: the oldest entries roll off
+/// once a context has run this many, so a long-lived serving context's
+/// memory does not grow with its lifetime job count. Experiments and
+/// tests run far fewer jobs than this and see every one.
+pub const MAX_ARCHIVED_JOBS: usize = 256;
+
+/// Thread-safe archive of finished jobs plus the job-id allocator.
+/// Deliberately has **no** notion of a current/in-flight job: in-flight
+/// recording lives in each job's own [`JobScope`].
 pub struct MetricsRegistry {
-    current: Mutex<Option<InFlight>>,
-    finished: Mutex<Vec<JobMetrics>>,
+    job_seq: AtomicU64,
+    finished: Mutex<std::collections::VecDeque<JobMetrics>>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl MetricsRegistry {
     pub fn new() -> Self {
-        Self::default()
+        // Id 0 is reserved for the per-context adhoc scope.
+        Self { job_seq: AtomicU64::new(1), finished: Mutex::new(Default::default()) }
     }
 
-    /// Start a job scope; stages recorded until [`end_job`](Self::end_job)
-    /// attach to it. An unfinished previous job is finalized first.
-    pub fn begin_job(&self, name: &str) {
-        let mut cur = self.current.lock().unwrap();
-        if let Some(fin) = cur.take() {
-            self.finished.lock().unwrap().push(Self::finalize(fin));
+    /// Allocate a fresh scoped recorder for a named job.
+    pub(crate) fn new_scope(&self, name: &str) -> JobScope {
+        JobScope::new(self.job_seq.fetch_add(1, Ordering::Relaxed), name)
+    }
+
+    /// Archive a finished job's metrics (bounded: beyond
+    /// [`MAX_ARCHIVED_JOBS`] the oldest archived job rolls off).
+    pub fn register(&self, job: JobMetrics) {
+        let mut finished = self.finished.lock().unwrap();
+        if finished.len() >= MAX_ARCHIVED_JOBS {
+            finished.pop_front();
         }
-        *cur = Some(InFlight { name: name.to_string(), started: Instant::now(), stages: Vec::new() });
+        finished.push_back(job);
     }
 
-    /// Finish the in-flight job and return its metrics.
-    pub fn end_job(&self) -> Option<JobMetrics> {
-        let fin = self.current.lock().unwrap().take()?;
-        let job = Self::finalize(fin);
-        self.finished.lock().unwrap().push(job.clone());
-        Some(job)
-    }
-
-    fn finalize(inflight: InFlight) -> JobMetrics {
-        let wall_ms = inflight.stages.iter().map(|s| s.wall_ms).sum();
-        JobMetrics {
-            name: inflight.name,
-            wall_ms,
-            elapsed_ms: inflight.started.elapsed().as_secs_f64() * 1e3,
-            stages: inflight.stages,
-        }
-    }
-
-    /// Record a stage against the in-flight job (stages outside any job
-    /// scope are attached to an implicit "adhoc" job).
-    pub fn record_stage(&self, m: StageMetrics) {
-        let mut cur = self.current.lock().unwrap();
-        match cur.as_mut() {
-            Some(inflight) => inflight.stages.push(m),
-            None => {
-                *cur = Some(InFlight {
-                    name: "adhoc".to_string(),
-                    started: Instant::now(),
-                    stages: vec![m],
-                });
-            }
-        }
-    }
-
-    /// All finished jobs so far.
+    /// The archived finished jobs, oldest first (at most
+    /// [`MAX_ARCHIVED_JOBS`] are retained).
     pub fn jobs(&self) -> Vec<JobMetrics> {
-        self.finished.lock().unwrap().clone()
-    }
-
-    /// Stages of the in-flight job (for tests and live inspection).
-    pub fn current_stages(&self) -> Vec<StageMetrics> {
-        self.current
-            .lock()
-            .unwrap()
-            .as_ref()
-            .map(|j| j.stages.clone())
-            .unwrap_or_default()
+        self.finished.lock().unwrap().iter().cloned().collect()
     }
 }
 
@@ -241,11 +317,13 @@ mod tests {
     #[test]
     fn job_scoping() {
         let reg = MetricsRegistry::new();
-        reg.begin_job("j1");
-        reg.record_stage(stage("divide/a", 1.0));
-        reg.record_stage(stage("multiply/b", 2.0));
-        let job = reg.end_job().unwrap();
+        let scope = reg.new_scope("j1");
+        scope.record_stage(stage("divide/a", 1.0));
+        scope.record_stage(stage("multiply/b", 2.0));
+        let job = scope.finalize();
+        reg.register(job.clone());
         assert_eq!(job.name, "j1");
+        assert!(job.id >= 1, "registry ids start above the adhoc id 0");
         assert_eq!(job.stages.len(), 2);
         assert_eq!(job.total_shuffle_bytes(), 20);
         assert_eq!(reg.jobs().len(), 1);
@@ -253,12 +331,11 @@ mod tests {
 
     #[test]
     fn phase_aggregation() {
-        let reg = MetricsRegistry::new();
-        reg.begin_job("j");
-        reg.record_stage(stage("divide/a", 1.0));
-        reg.record_stage(stage("divide/b", 2.0));
-        reg.record_stage(stage("combine/c", 4.0));
-        let job = reg.end_job().unwrap();
+        let scope = JobScope::new(1, "j");
+        scope.record_stage(stage("divide/a", 1.0));
+        scope.record_stage(stage("divide/b", 2.0));
+        scope.record_stage(stage("combine/c", 4.0));
+        let job = scope.finalize();
         let phases = job.phase_wall_ms();
         assert_eq!(phases[0], ("divide".to_string(), 3.0));
         assert_eq!(phases[1], ("combine".to_string(), 4.0));
@@ -266,21 +343,65 @@ mod tests {
     }
 
     #[test]
-    fn adhoc_job_for_unscoped_stage() {
+    fn concurrent_scopes_are_disjoint() {
+        // Two scopes from one registry: recording into one is invisible
+        // to the other — no shared current slot to corrupt.
         let reg = MetricsRegistry::new();
-        reg.record_stage(stage("x/y", 1.0));
-        assert_eq!(reg.current_stages().len(), 1);
-        let job = reg.end_job().unwrap();
-        assert_eq!(job.name, "adhoc");
+        let a = reg.new_scope("a");
+        let b = reg.new_scope("b");
+        assert_ne!(a.id(), b.id());
+        a.record_stage(stage("a/1", 1.0));
+        b.record_stage(stage("b/1", 2.0));
+        a.record_stage(stage("a/2", 3.0));
+        assert_eq!(a.stages().len(), 2);
+        assert_eq!(b.stages().len(), 1);
+        assert!(a.stages().iter().all(|s| s.label.starts_with("a/")));
+        assert!(b.stages().iter().all(|s| s.label.starts_with("b/")));
     }
 
     #[test]
-    fn begin_finalizes_previous() {
+    fn stage_ids_are_job_local() {
         let reg = MetricsRegistry::new();
-        reg.begin_job("a");
-        reg.record_stage(stage("s/1", 1.0));
-        reg.begin_job("b");
-        assert_eq!(reg.jobs().len(), 1);
-        assert_eq!(reg.jobs()[0].name, "a");
+        let a = reg.new_scope("a");
+        let b = reg.new_scope("b");
+        assert_eq!(a.next_stage_id(), 0);
+        assert_eq!(a.next_stage_id(), 1);
+        assert_eq!(b.next_stage_id(), 0, "stage ids restart per job scope");
+    }
+
+    #[test]
+    #[should_panic(expected = "finished twice")]
+    fn double_finalize_panics() {
+        let scope = JobScope::new(7, "dup");
+        let _ = scope.finalize();
+        let _ = scope.finalize();
+    }
+
+    #[test]
+    #[should_panic(expected = "recorded after job")]
+    fn record_after_finalize_panics() {
+        let scope = JobScope::new(8, "late");
+        let _ = scope.finalize();
+        scope.record_stage(stage("late/stage", 1.0));
+    }
+
+    #[test]
+    fn registry_archive_is_bounded() {
+        let reg = MetricsRegistry::new();
+        for _ in 0..(MAX_ARCHIVED_JOBS + 5) {
+            let scope = reg.new_scope("j");
+            reg.register(scope.finalize());
+        }
+        let jobs = reg.jobs();
+        assert_eq!(jobs.len(), MAX_ARCHIVED_JOBS);
+        // Oldest rolled off: the first retained id is the 6th allocated.
+        assert_eq!(jobs[0].id, 6);
+    }
+
+    #[test]
+    fn adhoc_scope_has_reserved_id() {
+        let scope = JobScope::adhoc();
+        assert_eq!(scope.id(), 0);
+        assert_eq!(scope.name(), "adhoc");
     }
 }

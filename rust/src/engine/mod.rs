@@ -17,7 +17,10 @@
 //!   (§IV) has a concrete observable;
 //! - per-stage metrics ([`metrics`]) — wall clock, summed task compute
 //!   time, parallelization factor, shuffle volume — the quantities in the
-//!   paper's Tables I–III and the stage-wise evaluation (Tables VIII–X);
+//!   paper's Tables I–III and the stage-wise evaluation (Tables VIII–X),
+//!   recorded into **scoped job handles** ([`JobCtx`], from
+//!   [`SparkContext::run_job`]) so concurrent jobs on one cluster keep
+//!   isolated metrics and are scheduled fairly ([`SchedulerPolicy`]);
 //! - lineage-based task retry (failed tasks recompute from their pure
 //!   closures, the sparklet analogue of RDD recomputation).
 
@@ -30,8 +33,8 @@ pub mod partitioner;
 pub mod sizable;
 
 pub use block::{Block, Side, Tag};
-pub use cluster::{Cluster, ClusterConfig, FailureSpec};
-pub use dist::{Dist, SparkContext};
-pub use metrics::{JobMetrics, MetricsRegistry, StageMetrics};
+pub use cluster::{Cluster, ClusterConfig, FailureSpec, SchedulerPolicy};
+pub use dist::{Dist, JobCtx, SparkContext};
+pub use metrics::{JobMetrics, JobScope, MetricsRegistry, StageMetrics};
 pub use partitioner::{det_partition, GridPartitioner, HashPartitioner, Partitioner};
 pub use sizable::Sizable;

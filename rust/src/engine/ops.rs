@@ -41,7 +41,7 @@ impl<T: Data> Dist<T> {
         let parts = parts.max(1).min(self.num_partitions().max(1));
         let parents = self.num_partitions();
         let me = self.clone();
-        Dist::from_fn(self.context().clone(), parts, move |p| {
+        Dist::from_fn(self.job().clone(), parts, move |p| {
             let mut out = Vec::new();
             let mut j = p;
             while j < parents {

@@ -115,6 +115,129 @@ pub fn run(sizes: &[usize], budget: Duration) -> Vec<KernelPoint> {
     points
 }
 
+/// One measured Strassen/Winograd recursion-cutoff point.
+#[derive(Debug, Clone)]
+pub struct CutoffPoint {
+    /// `"strassen"` or `"winograd"`.
+    pub kind: &'static str,
+    pub cutoff: usize,
+    pub wall_ms: f64,
+}
+
+/// Measure serial Strassen and Strassen–Winograd at `n` across recursion
+/// `cutoffs` — the instrument that validates (or refutes) the committed
+/// `DEFAULT_THRESHOLD` retune on the machine actually running. `n` must
+/// be a power of two; cutoffs above `n` are skipped.
+pub fn cutoff_sweep(n: usize, cutoffs: &[usize], budget: Duration) -> Vec<CutoffPoint> {
+    assert!(n.is_power_of_two(), "cutoff sweep needs a power-of-two n, got {n}");
+    let a = DenseMatrix::random(n, n, 93);
+    let b = DenseMatrix::random(n, n, 94);
+    let mut points = Vec::new();
+    for &cutoff in cutoffs.iter().filter(|&&c| c >= 1 && c <= n) {
+        let r = bench_budget(&format!("strassen cutoff={cutoff} n={n}"), budget, 3, || {
+            black_box(strassen_serial_with(&a, &b, cutoff));
+        });
+        points.push(CutoffPoint { kind: "strassen", cutoff, wall_ms: r.median_ms });
+        let r = bench_budget(&format!("winograd cutoff={cutoff} n={n}"), budget, 3, || {
+            black_box(crate::matrix::winograd::winograd_serial_with(&a, &b, cutoff));
+        });
+        points.push(CutoffPoint { kind: "winograd", cutoff, wall_ms: r.median_ms });
+    }
+    points
+}
+
+/// Print the cutoff sweep with a CONFIRMED/RETUNE verdict against the
+/// compiled-in defaults. Returns the best measured cutoff per kind.
+pub fn print_cutoff_report(n: usize, points: &[CutoffPoint]) -> Vec<(&'static str, usize)> {
+    println!("\n== Strassen/Winograd recursion-cutoff sweep (n={n}, median wall ms) ==");
+    let mut t = Table::new(vec!["kind", "cutoff", "wall ms", "GFLOP/s"]);
+    for p in points {
+        t.row(vec![
+            p.kind.to_string(),
+            p.cutoff.to_string(),
+            format!("{:.2}", p.wall_ms),
+            format!("{:.2}", gflops(n, p.wall_ms)),
+        ]);
+    }
+    t.print();
+    let mut best = Vec::new();
+    for (kind, default) in [
+        ("strassen", crate::matrix::strassen::DEFAULT_THRESHOLD),
+        ("winograd", crate::matrix::winograd::DEFAULT_THRESHOLD),
+    ] {
+        let Some(winner) = points
+            .iter()
+            .filter(|p| p.kind == kind)
+            .min_by(|a, b| a.wall_ms.partial_cmp(&b.wall_ms).unwrap())
+        else {
+            continue;
+        };
+        // The effective default at this n: recursion stops at min(n, default).
+        let effective = default.min(n);
+        if winner.cutoff == effective {
+            println!(
+                "{kind}: CONFIRMED — cutoff {} is fastest at n={n} \
+                 (DEFAULT_THRESHOLD={default})",
+                winner.cutoff
+            );
+        } else {
+            let at_default = points
+                .iter()
+                .find(|p| p.kind == kind && p.cutoff == effective)
+                .map(|p| p.wall_ms);
+            match at_default {
+                Some(d) => println!(
+                    "{kind}: RETUNE? — cutoff {} measured {:.2} ms vs {:.2} ms at the \
+                     default {} ({:+.1}%); update {}::DEFAULT_THRESHOLD if this holds on \
+                     a quiet host",
+                    winner.cutoff,
+                    winner.wall_ms,
+                    d,
+                    effective,
+                    (winner.wall_ms / d - 1.0) * 100.0,
+                    kind
+                ),
+                None => println!(
+                    "{kind}: best measured cutoff {} (default {} not in the sweep)",
+                    winner.cutoff, effective
+                ),
+            }
+        }
+        best.push((kind, winner.cutoff));
+    }
+    best
+}
+
+/// JSON rows for the cutoff sweep (appended to `BENCH_kernel.json` when
+/// the sweep runs).
+pub fn cutoff_to_json(n: usize, points: &[CutoffPoint]) -> Value {
+    Value::obj(vec![
+        ("n", Value::num(n as f64)),
+        (
+            "defaults",
+            Value::obj(vec![
+                ("strassen", Value::num(crate::matrix::strassen::DEFAULT_THRESHOLD as f64)),
+                ("winograd", Value::num(crate::matrix::winograd::DEFAULT_THRESHOLD as f64)),
+            ]),
+        ),
+        (
+            "rows",
+            Value::Array(
+                points
+                    .iter()
+                    .map(|p| {
+                        Value::obj(vec![
+                            ("kind", Value::str(p.kind)),
+                            ("cutoff", Value::num(p.cutoff as f64)),
+                            ("wall_ms", Value::num(p.wall_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// Render the points as the EXPERIMENTS.md-style table.
 pub fn print_table(points: &[KernelPoint]) {
     println!("\n== kernel ablation (GFLOP/s, median) ==");
@@ -165,15 +288,31 @@ pub fn to_json(points: &[KernelPoint]) -> Value {
     ])
 }
 
-/// Run, print, and write `<dir>/BENCH_kernel.json`.
-pub fn run_and_save(sizes: &[usize], budget: Duration, dir: impl AsRef<Path>) -> Result<PathBuf> {
+/// Run, print, and write `<dir>/BENCH_kernel.json`. When `sweep` is
+/// `Some((n, cutoffs))` the Strassen/Winograd cutoff sweep also runs,
+/// prints its CONFIRMED/RETUNE verdict, and lands in the JSON under
+/// `cutoff_sweep`.
+pub fn run_and_save(
+    sizes: &[usize],
+    budget: Duration,
+    dir: impl AsRef<Path>,
+    sweep: Option<(usize, Vec<usize>)>,
+) -> Result<PathBuf> {
     let points = run(sizes, budget);
     print_table(&points);
+    let mut doc = to_json(&points);
+    if let Some((n, cutoffs)) = sweep {
+        let cps = cutoff_sweep(n, &cutoffs, budget);
+        print_cutoff_report(n, &cps);
+        if let Value::Object(fields) = &mut doc {
+            fields.push(("cutoff_sweep".to_string(), cutoff_to_json(n, &cps)));
+        }
+    }
     let dir = dir.as_ref();
     std::fs::create_dir_all(dir)
         .with_context(|| format!("creating output dir {}", dir.display()))?;
     let path = dir.join("BENCH_kernel.json");
-    std::fs::write(&path, to_json(&points).to_json_pretty())
+    std::fs::write(&path, doc.to_json_pretty())
         .with_context(|| format!("writing {}", path.display()))?;
     Ok(path)
 }
@@ -192,6 +331,19 @@ mod tests {
             assert!(backends.contains(&want), "missing {want} in {backends:?}");
         }
         assert!(points.iter().all(|p| p.gflops > 0.0 && p.wall_ms > 0.0));
+    }
+
+    #[test]
+    fn cutoff_sweep_measures_and_reports() {
+        let points = cutoff_sweep(16, &[8, 16, 32], Duration::from_millis(1));
+        // Cutoff 32 > n is skipped; strassen + winograd per remaining cutoff.
+        assert_eq!(points.len(), 4);
+        assert!(points.iter().all(|p| p.wall_ms > 0.0));
+        let best = print_cutoff_report(16, &points);
+        assert_eq!(best.len(), 2);
+        let v = cutoff_to_json(16, &points);
+        assert_eq!(v.get("rows").and_then(Value::as_array).unwrap().len(), 4);
+        assert!(v.get("defaults").is_some());
     }
 
     #[test]

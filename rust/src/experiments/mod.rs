@@ -90,6 +90,9 @@ impl Scale {
     }
 
     pub fn run_config(&self, algo: Algorithm, n: usize, b: usize) -> RunConfig {
+        // Experiments run one job at a time — the single-job special
+        // case of the concurrent scheduler — so the default fair policy
+        // degenerates to FIFO and the remaining knobs take defaults.
         RunConfig {
             n,
             b,
@@ -104,6 +107,7 @@ impl Scale {
             map_side_combine: true,
             real_net_sleep: false,
             failure: None,
+            ..Default::default()
         }
     }
 }

@@ -24,13 +24,20 @@ use stark::util::table::{fmt_bytes, Table};
 const USAGE: &str = "\
 stark — distributed Strassen matrix multiplication (Stark reproduction)
 
-USAGE: stark <multiply|compare|sweep|stages|scalability|cost|serve|request|info> [flags]
+USAGE: stark <multiply|compare|sweep|stages|scalability|cost|serve|serve-smoke|request|info> [flags]
 
   multiply with files:  --input-a a.csv --input-b b.csv [--output c.smx]
                         (.smx = binary, anything else = text CSV)
   cost:                 print the §IV analytic cost tables for --n/--b
-  serve:                --addr 127.0.0.1:7878  (newline-JSON protocol)
-  request:              --addr HOST:PORT --n 256 [--algo stark] [--b 4]
+  serve:                --addr 127.0.0.1:7878  (newline-JSON job queue:
+                        submit/status/wait/jobs/multiply/ping/shutdown)
+                        [--max-jobs 8] [--runners 2]
+  serve-smoke:          start an ephemeral server, run the submit+wait+
+                        shutdown protocol over the socket, exit non-zero
+                        on any failure (the CI service check)
+  request:              --addr HOST:PORT [--op multiply|submit|status|
+                        wait|jobs|ping|shutdown] [--job-id N]
+                        [--timeout-ms N] --n 256 [--algo stark] [--b 4]
 
 FLAGS (shared):
   --n <int>            matrix dimension            [512]
@@ -47,6 +54,9 @@ FLAGS (shared):
   --isolate-multiply   leaf multiplication in its own stage
   --no-map-side-combine  (stark) group-by-key baseline instead of the
                        map-side signed fold (shuffle-volume comparisons)
+  --scheduler <p>      fair | fifo task scheduling across concurrent
+                       jobs on the simulated cluster        [fair]
+  --max-concurrent-jobs <int>  fair-scheduler rotation width [4]
   --real-net-sleep     really sleep the simulated shuffle-read wait
   --verify             (multiply) check against single-node product
   --bs <list>          (sweep) partition counts    [2,4,8,16]
@@ -68,6 +78,8 @@ fn run_config(args: &Args) -> RunConfig {
         isolate_multiply: args.flag("isolate-multiply"),
         map_side_combine: !args.flag("no-map-side-combine"),
         real_net_sleep: args.flag("real-net-sleep"),
+        scheduler: args.get("scheduler", stark::engine::SchedulerPolicy::Fair),
+        max_concurrent_jobs: args.get("max-concurrent-jobs", 4),
         failure: None,
     }
 }
@@ -96,6 +108,7 @@ fn main() -> Result<()> {
         Some("scalability") => cmd_scalability(&args),
         Some("cost") => cmd_cost(&args),
         Some("serve") => cmd_serve(&args),
+        Some("serve-smoke") => cmd_serve_smoke(&args),
         Some("request") => cmd_request(&args),
         Some("info") => cmd_info(),
         _ => {
@@ -289,14 +302,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ctx: cfg.context(),
         backend: cfg.backend()?,
         default_b: cfg.b,
+        stark_cfg: cfg.stark_config(),
+        max_inflight_jobs: args.get("max-jobs", 8usize),
+        job_runners: args.get("runners", 2usize),
     };
     let server = stark::serve::Server::start(&addr, state)?;
     println!(
-        "stark serving on {} (cluster {}x{}, backend {}); send {{\"op\":\"shutdown\"}} to stop",
+        "stark serving on {} (cluster {}x{} scheduler {}, backend {}, max {} jobs, {} runners); \
+         send {{\"op\":\"shutdown\"}} to stop",
         server.addr(),
         cfg.executors,
         cfg.cores_per_executor,
-        cfg.backend
+        cfg.scheduler,
+        cfg.backend,
+        args.get("max-jobs", 8usize),
+        args.get("runners", 2usize),
     );
     // Block until a shutdown request lands (poll the accept thread).
     loop {
@@ -316,19 +336,132 @@ fn cmd_request(args: &Args) -> Result<()> {
     use stark::util::json::Value;
     let addr = args.raw("addr").unwrap_or("127.0.0.1:7878").to_string();
     let op = args.raw("op").unwrap_or("multiply").to_string();
-    let body = if op == "multiply" {
-        Value::obj(vec![
-            ("op", Value::str("multiply")),
-            ("algo", Value::str(args.raw("algo").unwrap_or("stark"))),
-            ("n", Value::num(args.get("n", 256usize) as f64)),
-            ("b", Value::num(args.get("b", 4usize) as f64)),
-            ("seed", Value::num(args.get("seed", 42u64) as f64)),
-        ])
-    } else {
-        Value::obj(vec![("op", Value::str(op))])
-    };
-    let resp = stark::serve::request(&addr, &body)?;
+    let mut fields = vec![("op", Value::str(op.clone()))];
+    match op.as_str() {
+        "multiply" | "submit" => {
+            fields.push(("algo", Value::str(args.raw("algo").unwrap_or("stark"))));
+            fields.push(("n", Value::num(args.get("n", 256usize) as f64)));
+            fields.push(("b", Value::num(args.get("b", 4usize) as f64)));
+            fields.push(("seed", Value::num(args.get("seed", 42u64) as f64)));
+        }
+        "status" | "wait" => {
+            let id: u64 = args
+                .get_opt("job-id")
+                .ok_or_else(|| anyhow::anyhow!("--job-id is required for op {op}"))?;
+            fields.push(("job_id", Value::num(id as f64)));
+            if let Some(ms) = args.get_opt::<u64>("timeout-ms") {
+                fields.push(("timeout_ms", Value::num(ms as f64)));
+            }
+        }
+        _ => {}
+    }
+    let resp = stark::serve::request(&addr, &Value::obj(fields))?;
     println!("{}", resp.to_json_pretty());
+    Ok(())
+}
+
+/// End-to-end service check over a real socket: start a server on an
+/// ephemeral port, drive the submit/status/wait/jobs protocol with two
+/// concurrent jobs, verify both products and their per-job stage
+/// metrics, then shut down. Exits non-zero on any failure — run by CI.
+fn cmd_serve_smoke(args: &Args) -> Result<()> {
+    use stark::util::json::Value;
+    let mut cfg = run_config(args);
+    cfg.backend = args.get("backend", BackendKind::Packed);
+    let state = stark::serve::ServerState {
+        ctx: cfg.context(),
+        backend: cfg.backend()?,
+        default_b: 2,
+        stark_cfg: cfg.stark_config(),
+        max_inflight_jobs: 8,
+        job_runners: 2,
+    };
+    let mut server = stark::serve::Server::start("127.0.0.1:0", state)?;
+    let addr = server.addr().to_string();
+    println!("serve-smoke: server on {addr}");
+
+    let ping = stark::serve::request(&addr, &Value::obj(vec![("op", Value::str("ping"))]))?;
+    anyhow::ensure!(ping.get("ok") == Some(&Value::Bool(true)), "ping failed: {ping:?}");
+
+    // Two jobs submitted back to back share the cluster concurrently.
+    let submit = |algo: &str, n: usize, b: usize, seed: u64| -> Result<u64> {
+        let resp = stark::serve::request(
+            &addr,
+            &Value::obj(vec![
+                ("op", Value::str("submit")),
+                ("algo", Value::str(algo)),
+                ("n", Value::num(n as f64)),
+                ("b", Value::num(b as f64)),
+                ("seed", Value::num(seed as f64)),
+            ]),
+        )?;
+        anyhow::ensure!(resp.get("ok") == Some(&Value::Bool(true)), "submit failed: {resp:?}");
+        resp.get("job_id")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("submit response missing job_id: {resp:?}"))
+    };
+    let id_stark = submit("stark", 64, 4, 7)?;
+    let id_marlin = submit("marlin", 64, 2, 9)?;
+
+    let listing = stark::serve::request(&addr, &Value::obj(vec![("op", Value::str("jobs"))]))?;
+    let listed = listing.get("jobs").and_then(Value::as_array).map(|a| a.len()).unwrap_or(0);
+    anyhow::ensure!(listed == 2, "expected 2 listed jobs: {listing:?}");
+
+    let wait = |id: u64| -> Result<Value> {
+        stark::serve::request(
+            &addr,
+            &Value::obj(vec![
+                ("op", Value::str("wait")),
+                ("job_id", Value::num(id as f64)),
+                ("timeout_ms", Value::num(120_000.0)),
+            ]),
+        )
+    };
+    let done_stark = wait(id_stark)?;
+    let done_marlin = wait(id_marlin)?;
+    anyhow::ensure!(
+        done_stark.get("ok") == Some(&Value::Bool(true)),
+        "stark job failed: {done_stark:?}"
+    );
+    anyhow::ensure!(
+        done_marlin.get("ok") == Some(&Value::Bool(true)),
+        "marlin job failed: {done_marlin:?}"
+    );
+
+    // Per-job metric isolation: the stark response carries exactly its
+    // own 2(p−q)+2 stages (eq. 25), untainted by the marlin job.
+    let stark_stages = done_stark.get("stages").and_then(Value::as_array).map(|a| a.len());
+    let want = stark::algos::stark::predicted_stages(4);
+    anyhow::ensure!(
+        stark_stages == Some(want),
+        "stark stage count {stark_stages:?} != eq.(25) {want}"
+    );
+
+    // Correctness: frobenius must match a local single-node product.
+    let a = stark::matrix::DenseMatrix::random(64, 64, 7);
+    let b = stark::matrix::DenseMatrix::random(64, 64, 8);
+    let want_f = stark::matrix::matmul_blocked(&a, &b).frobenius();
+    let got_f = done_stark
+        .get("frobenius")
+        .and_then(Value::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("missing frobenius"))?;
+    anyhow::ensure!((want_f - got_f).abs() < 1e-9, "frobenius {want_f} vs {got_f}");
+
+    // Synchronous sugar still works.
+    let sync = stark::serve::request(
+        &addr,
+        &Value::obj(vec![
+            ("op", Value::str("multiply")),
+            ("n", Value::num(16.0)),
+            ("b", Value::num(2.0)),
+        ]),
+    )?;
+    anyhow::ensure!(sync.get("ok") == Some(&Value::Bool(true)), "sync multiply: {sync:?}");
+
+    let bye = stark::serve::request(&addr, &Value::obj(vec![("op", Value::str("shutdown"))]))?;
+    anyhow::ensure!(bye.get("ok") == Some(&Value::Bool(true)), "shutdown: {bye:?}");
+    server.stop();
+    println!("serve-smoke: OK (submit/jobs/wait/multiply/shutdown over {addr})");
     Ok(())
 }
 

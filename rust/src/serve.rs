@@ -1,35 +1,62 @@
-//! `stark serve` — the coordinator as a long-running service.
+//! `stark serve` — the coordinator as a long-running multi-job service.
 //!
 //! The paper motivates Stark as one step inside larger analytics
-//! workflows; this module exposes the multiply engine over a socket so
-//! other processes can use it like a service (vLLM-router-style: a
-//! leader process owning the simulated cluster + compiled artifacts,
-//! clients submitting work).
+//! workflows; this module exposes the multiply engine over a socket as a
+//! **job queue**: a leader process owning the simulated cluster + leaf
+//! backend, many clients submitting work that interleaves on the shared
+//! worker pool under the engine's fair scheduler (each serve job runs as
+//! its own engine job via `SparkContext::run_job`, so responses carry
+//! only that job's stage metrics).
 //!
-//! Protocol: newline-delimited JSON over TCP.
+//! Protocol: newline-delimited JSON over TCP, one request per line, one
+//! response line per request. Ops:
 //!
 //! ```json
 //! -> {"op":"ping"}
-//! <- {"ok":true,"service":"stark","version":"0.1.0"}
+//! <- {"ok":true,"service":"stark","version":"0.1.0","jobs_inflight":0}
 //!
+//! // Asynchronous path: submit returns a job id immediately…
+//! -> {"op":"submit","algo":"stark","n":256,"b":4,"seed":7}
+//! <- {"ok":true,"job_id":3,"status":"queued"}
+//! // …or a busy rejection when admission control is at its bound:
+//! <- {"ok":false,"busy":true,"error":"server busy: 8 jobs in flight (max 8)"}
+//!
+//! // Poll without blocking:
+//! -> {"op":"status","job_id":3}
+//! <- {"ok":true,"job_id":3,"status":"running"}
+//! <- {"ok":true,"job_id":3,"status":"done","result":{...}}
+//!
+//! // Block until completion (optional "timeout_ms"):
+//! -> {"op":"wait","job_id":3}
+//! <- {"ok":true,"job_id":3,"algo":"stark","wall_ms":12.3,
+//!     "stages":[{"label":"divide/L0",...},...],...}
+//!
+//! // Inspect the queue (finished entries are retained for the last
+//! // MAX_FINISHED_JOBS jobs only, so table memory stays bounded):
+//! -> {"op":"jobs"}
+//! <- {"ok":true,"jobs":[{"job_id":3,"name":"stark n=256 b=4","status":"done"},...]}
+//!
+//! // Synchronous multiply stays as sugar over submit + wait (subject to
+//! // the same admission control; accepts inline "a"/"b_mat" + "return_c"):
 //! -> {"op":"multiply","algo":"stark","n":256,"b":4,"seed":7}
-//! <- {"ok":true,"wall_ms":12.3,"leaf_calls":49,"frobenius":148.8,...}
-//!
-//! -> {"op":"multiply","algo":"stark","b":2,
-//!     "a":[[1,2],[3,4]],"b_mat":[[1,0],[0,1]],"return_c":true}
-//! <- {"ok":true,"c":[[1,2],[3,4]],...}
+//! <- {"ok":true,"job_id":4,"frobenius":148.8,"stages":[...],...}
 //!
 //! -> {"op":"shutdown"}
 //! ```
 //!
-//! One request is served per connection-line, synchronously; concurrent
-//! connections each get a handler thread while the simulated cluster and
-//! the PJRT artifact cache are shared behind the server state.
+//! Concurrency model: one handler thread per connection (tracked and
+//! joined on [`Server::stop`], with a drain deadline before sockets are
+//! force-closed), a bounded FIFO of submitted jobs, and
+//! [`ServerState::job_runners`] runner threads executing jobs against
+//! the shared cluster. Admission control rejects submits beyond
+//! [`ServerState::max_inflight_jobs`] queued + running jobs.
 
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -39,63 +66,289 @@ use crate::matrix::DenseMatrix;
 use crate::runtime::LeafBackend;
 use crate::util::json::{self, Value};
 
-/// Shared server state: the simulated cluster and the leaf backend.
+/// How long [`Server::stop`] lets in-flight connection handlers finish
+/// naturally before force-closing their sockets.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+
+/// How many finished (done/failed) jobs the table retains for
+/// `status`/`jobs` queries. Older finished entries are evicted as new
+/// jobs complete, so table memory is bounded by (admission limit +
+/// this window) × result size — not by lifetime request count. Note
+/// the window retains full result documents, product matrix included
+/// when `return_c` was set (an async submitter must be able to `wait`
+/// for it); clients shipping huge products should fetch promptly.
+/// `status`/`wait` on an evicted id answers "unknown job id".
+const MAX_FINISHED_JOBS: usize = 64;
+
+/// Largest padded matrix edge a request may ask for (the paper's top
+/// scale). Caps both `{"n":...}` generation and the pad-and-crop blowup
+/// of extreme inline shapes, so one request can't OOM the server.
+const MAX_SUBMIT_N: usize = 16_384;
+
+/// Upper clamp on a `wait` request's `timeout_ms` (1 hour). Keeps
+/// `Instant + Duration` far from overflow (a u64::MAX timeout would
+/// panic the handler) while still being far longer than any job.
+const MAX_WAIT_TIMEOUT_MS: u64 = 3_600_000;
+
+/// Shared server state: the simulated cluster, the leaf backend, and the
+/// job-queue knobs.
 pub struct ServerState {
     pub ctx: SparkContext,
     pub backend: Arc<dyn LeafBackend>,
     pub default_b: usize,
+    /// Stark knobs applied to every served job (`--fused-leaf`,
+    /// `--isolate-multiply`, `--no-map-side-combine` on `stark serve`).
+    pub stark_cfg: StarkConfig,
+    /// Admission bound: maximum queued + running jobs before `submit`
+    /// (and the `multiply` sugar) answers with a `busy` rejection.
+    pub max_inflight_jobs: usize,
+    /// Runner threads executing queued jobs concurrently. Each runs one
+    /// job at a time; the engine's fair scheduler interleaves their
+    /// stages on the shared worker pool. Clamped to ≥ 1 at start — a
+    /// runner-less server would strand every submitted job.
+    pub job_runners: usize,
+}
+
+/// A parsed, validated multiply request (everything checked at submit
+/// time so the runner can't panic on malformed input).
+struct JobSpec {
+    algo: Algorithm,
+    b: usize,
+    a: DenseMatrix,
+    b_mat: DenseMatrix,
+    return_c: bool,
+}
+
+enum JobStatus {
+    Queued,
+    Running,
+    /// Arc'd so `status`/`wait` can take a handle under the table lock
+    /// and deep-copy (or serialize) outside it — a large `return_c`
+    /// result must not stall every submit/runner for the clone.
+    Done(Arc<Value>),
+    Failed(String),
+}
+
+impl JobStatus {
+    fn as_str(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done(_) => "done",
+            JobStatus::Failed(_) => "failed",
+        }
+    }
+}
+
+struct JobEntry {
+    name: String,
+    status: JobStatus,
+    /// Present while queued; taken by the runner that executes the job.
+    spec: Option<JobSpec>,
+}
+
+struct Jobs {
+    seq: u64,
+    entries: BTreeMap<u64, JobEntry>,
+    queue: VecDeque<u64>,
+    /// Retained finished ids in **completion order** — the eviction
+    /// queue. Ordering by completion (not submission id) means a job
+    /// that just finished always survives the next `MAX_FINISHED_JOBS`
+    /// completions, however early it was submitted.
+    finished_order: VecDeque<u64>,
+    /// Queued + running count (the admission-control observable).
+    inflight: usize,
+    /// False once shutdown begins: no further submissions.
+    accepting: bool,
+}
+
+/// The job table: queue + entries behind one lock, a condvar for both
+/// runners (new work) and waiters (completions).
+struct JobTable {
+    inner: Mutex<Jobs>,
+    cv: Condvar,
+}
+
+impl JobTable {
+    fn new() -> Self {
+        Self {
+            inner: Mutex::new(Jobs {
+                seq: 0,
+                entries: BTreeMap::new(),
+                queue: VecDeque::new(),
+                finished_order: VecDeque::new(),
+                inflight: 0,
+                accepting: true,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// Everything a connection handler or job runner needs.
+struct Shared {
+    state: ServerState,
+    jobs: JobTable,
+    shutdown: AtomicBool,
+}
+
+/// Tracked connection-handler threads: the stream clone lets `stop()`
+/// force-unblock a handler stuck in a read past the drain deadline.
+struct ConnSet {
+    slots: Mutex<Vec<(TcpStream, std::thread::JoinHandle<()>)>>,
 }
 
 /// A running server handle.
 pub struct Server {
     addr: std::net::SocketAddr,
-    shutdown: Arc<AtomicBool>,
+    shared: Arc<Shared>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    runner_threads: Vec<std::thread::JoinHandle<()>>,
+    conns: Arc<ConnSet>,
 }
 
 impl Server {
     /// Bind `host:port` (port 0 = ephemeral) and start accepting.
-    pub fn start(addr: &str, state: ServerState) -> Result<Self> {
+    pub fn start(addr: &str, mut state: ServerState) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let state = Arc::new(state);
-        let flag = shutdown.clone();
-        let accept_thread = std::thread::Builder::new()
+        // A server with zero runners would accept jobs that can never
+        // run, and one with a zero admission bound would reject every
+        // job forever — both knobs degenerate to 1.
+        state.job_runners = state.job_runners.max(1);
+        state.max_inflight_jobs = state.max_inflight_jobs.max(1);
+        let runners = state.job_runners;
+        let shared = Arc::new(Shared {
+            state,
+            jobs: JobTable::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let conns = Arc::new(ConnSet { slots: Mutex::new(Vec::new()) });
+
+        // If any spawn fails partway, the threads already started must
+        // be shut down and joined before the error propagates — an
+        // early `?` would leak them parked on the condvar forever.
+        let mut runner_threads: Vec<std::thread::JoinHandle<()>> = Vec::with_capacity(runners);
+        let abort = |shared: &Arc<Shared>, started: Vec<std::thread::JoinHandle<()>>| {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.jobs.cv.notify_all();
+            for t in started {
+                let _ = t.join();
+            }
+        };
+        for r in 0..runners {
+            let sh = shared.clone();
+            match std::thread::Builder::new()
+                .name(format!("stark-serve-runner-{r}"))
+                .spawn(move || runner_loop(&sh))
+            {
+                Ok(t) => runner_threads.push(t),
+                Err(e) => {
+                    abort(&shared, runner_threads);
+                    return Err(anyhow::Error::new(e).context("spawning job runner"));
+                }
+            }
+        }
+
+        let sh = shared.clone();
+        let cs = conns.clone();
+        let accept_result = std::thread::Builder::new()
             .name("stark-serve-accept".into())
             .spawn(move || {
                 for stream in listener.incoming() {
-                    if flag.load(Ordering::SeqCst) {
+                    if sh.shutdown.load(Ordering::SeqCst) {
                         break;
                     }
                     match stream {
                         Ok(s) => {
-                            let st = state.clone();
-                            let fl = flag.clone();
-                            let _ = std::thread::Builder::new()
+                            // Reap finished handlers FIRST — independent
+                            // of whether this connection can be tracked —
+                            // so their sockets and join handles are
+                            // released even under fd pressure.
+                            {
+                                let mut slots = cs.slots.lock().unwrap();
+                                let mut live = Vec::with_capacity(slots.len() + 1);
+                                for (stream, h) in slots.drain(..) {
+                                    if h.is_finished() {
+                                        let _ = h.join();
+                                    } else {
+                                        live.push((stream, h));
+                                    }
+                                }
+                                *slots = live;
+                            }
+                            // Secure the tracking clone BEFORE spawning:
+                            // an untrackable handler would outlive
+                            // stop()'s drain (it could neither be
+                            // force-closed nor joined), so under fd
+                            // pressure the connection is refused instead.
+                            let Ok(clone) = s.try_clone() else {
+                                continue;
+                            };
+                            let shared = sh.clone();
+                            if let Ok(handle) = std::thread::Builder::new()
                                 .name("stark-serve-conn".into())
                                 .spawn(move || {
-                                    let _ = handle_connection(s, &st, &fl);
-                                });
+                                    let _ = handle_connection(s, &shared);
+                                })
+                            {
+                                cs.slots.lock().unwrap().push((clone, handle));
+                            }
                         }
-                        Err(_) => break,
+                        // Transient accept failure (EMFILE and friends):
+                        // back off and keep serving — exiting here would
+                        // silently wedge a server whose runners are still
+                        // executing jobs. Shutdown is checked at the top
+                        // of every iteration.
+                        Err(_) => std::thread::sleep(Duration::from_millis(50)),
                     }
                 }
-            })?;
-        Ok(Self { addr: local, shutdown, accept_thread: Some(accept_thread) })
+            });
+        let accept_thread = match accept_result {
+            Ok(t) => t,
+            Err(e) => {
+                abort(&shared, runner_threads);
+                return Err(anyhow::Error::new(e).context("spawning accept thread"));
+            }
+        };
+        Ok(Self {
+            addr: local,
+            shared,
+            accept_thread: Some(accept_thread),
+            runner_threads,
+            conns,
+        })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
     }
 
-    /// Signal shutdown and unblock the accept loop.
+    /// Shut down in order: stop accepting, drain the job queue (the
+    /// running jobs finish, queued ones fail with "shutting down"), then
+    /// join every connection handler — giving each [`DRAIN_DEADLINE`] to
+    /// finish its in-flight request before its socket is force-closed.
+    /// No handler thread is left detached, so shutdown cannot race
+    /// handlers writing into freed state.
     pub fn stop(&mut self) {
-        self.shutdown.store(true, Ordering::SeqCst);
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        {
+            let mut jobs = self.shared.jobs.inner.lock().unwrap();
+            jobs.accepting = false;
+        }
+        self.shared.jobs.cv.notify_all();
         let _ = TcpStream::connect(self.addr); // wake the accept loop
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        for t in self.runner_threads.drain(..) {
+            let _ = t.join();
+        }
+        // Belt and braces: with the runners gone, fail anything still
+        // queued so no waiter sleeps forever on a job that can never run.
+        fail_queued(&mut self.shared.jobs.inner.lock().unwrap());
+        self.shared.jobs.cv.notify_all();
+        drain_connections(&self.conns, Instant::now() + DRAIN_DEADLINE);
     }
 }
 
@@ -105,35 +358,139 @@ impl Drop for Server {
     }
 }
 
-fn handle_connection(
-    stream: TcpStream,
-    state: &ServerState,
-    shutdown: &AtomicBool,
-) -> Result<()> {
-    let peer = stream.peer_addr().ok();
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+/// Join every tracked handler; past `deadline`, force-close the
+/// remaining sockets so blocked reads return and the joins complete.
+fn drain_connections(conns: &ConnSet, deadline: Instant) {
+    let mut pending: Vec<(TcpStream, std::thread::JoinHandle<()>)> =
+        conns.slots.lock().unwrap().drain(..).collect();
+    while !pending.is_empty() {
+        let mut still = Vec::new();
+        for (stream, handle) in pending {
+            if handle.is_finished() {
+                let _ = handle.join();
+            } else if Instant::now() >= deadline {
+                let _ = stream.shutdown(Shutdown::Both);
+                let _ = handle.join();
+            } else {
+                still.push((stream, handle));
+            }
         }
-        let response = match handle_request(&line, state, shutdown) {
-            Ok(v) => v,
-            Err(e) => Value::obj(vec![
-                ("ok", Value::Bool(false)),
-                ("error", Value::str(format!("{e:#}"))),
-            ]),
-        };
-        writer.write_all(response.to_json().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
-        if shutdown.load(Ordering::SeqCst) {
-            break;
+        pending = still;
+        if !pending.is_empty() {
+            std::thread::sleep(Duration::from_millis(10));
         }
     }
-    let _ = peer;
-    Ok(())
+}
+
+/// Job-runner thread: pull queued jobs FIFO, execute, publish results.
+/// On shutdown, the current job finishes and every still-queued job is
+/// failed (a submit got its id back, so the failure is observable).
+fn runner_loop(shared: &Shared) {
+    loop {
+        let (id, spec) = {
+            let mut jobs = shared.jobs.inner.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    fail_queued(&mut jobs);
+                    shared.jobs.cv.notify_all();
+                    return;
+                }
+                if let Some(id) = jobs.queue.pop_front() {
+                    let e = jobs.entries.get_mut(&id).expect("queued job has an entry");
+                    let spec = e.spec.take().expect("queued job has a spec");
+                    e.status = JobStatus::Running;
+                    break (id, spec);
+                }
+                jobs = shared.jobs.cv.wait(jobs).unwrap();
+            }
+        };
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            execute(&shared.state, id, &spec)
+        }));
+        let mut jobs = shared.jobs.inner.lock().unwrap();
+        let status = match outcome {
+            Ok(v) => JobStatus::Done(Arc::new(v)),
+            Err(panic) => JobStatus::Failed(panic_message(&panic)),
+        };
+        finish_job(&mut jobs, id, status);
+        shared.jobs.cv.notify_all();
+    }
+}
+
+/// Fail every still-queued job (shutdown paths). Submitters hold the
+/// ids, so the failures are observable via `status`/`wait`.
+fn fail_queued(jobs: &mut Jobs) {
+    while let Some(id) = jobs.queue.pop_front() {
+        finish_job(jobs, id, JobStatus::Failed("server shutting down".into()));
+    }
+}
+
+/// Publish a job's terminal status, release its admission slot, and
+/// bound the table: once more than [`MAX_FINISHED_JOBS`] finished
+/// entries are retained, the **earliest-finished** one is evicted
+/// (completion order, so a just-finished result always survives the
+/// next [`MAX_FINISHED_JOBS`] completions regardless of submission
+/// order — an actively-waiting client cannot lose a fresh result).
+/// Queued/running jobs are never evicted; a waiter that sleeps through
+/// the whole retention window gets a loud "unknown job id".
+fn finish_job(jobs: &mut Jobs, id: u64, status: JobStatus) {
+    if let Some(e) = jobs.entries.get_mut(&id) {
+        e.status = status;
+        e.spec = None;
+    }
+    jobs.inflight = jobs.inflight.saturating_sub(1);
+    jobs.finished_order.push_back(id);
+    while jobs.finished_order.len() > MAX_FINISHED_JOBS {
+        if let Some(oldest) = jobs.finished_order.pop_front() {
+            jobs.entries.remove(&oldest);
+        }
+    }
+}
+
+fn panic_message(panic: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "job panicked".to_string()
+    }
+}
+
+/// Run one job end to end and build its result document. The engine job
+/// is scoped (`run_job` inside the algorithm), so `out.job` holds only
+/// THIS job's stages even with other jobs running concurrently.
+fn execute(state: &ServerState, id: u64, spec: &JobSpec) -> Value {
+    let out = algos::multiply_general(
+        spec.algo,
+        &state.ctx,
+        state.backend.clone(),
+        &spec.a,
+        &spec.b_mat,
+        spec.b,
+        &state.stark_cfg,
+    );
+    let mut fields = vec![
+        ("ok", Value::Bool(true)),
+        ("job_id", Value::num(id as f64)),
+        ("algo", Value::str(spec.algo.to_string())),
+        ("rows", Value::num(out.c.rows() as f64)),
+        ("cols", Value::num(out.c.cols() as f64)),
+        ("wall_ms", Value::num(out.job.wall_ms)),
+        ("leaf_calls", Value::num(out.leaf_calls as f64)),
+        ("leaf_ms", Value::num(out.leaf_ms)),
+        ("frobenius", Value::num(out.c.frobenius())),
+        ("shuffle_bytes", Value::num(out.job.total_shuffle_bytes() as f64)),
+        // Exactly this job's stage metrics (count = eq. (25) for Stark).
+        (
+            "stages",
+            Value::Array(out.job.stages.iter().map(|s| s.to_json()).collect()),
+        ),
+    ];
+    if spec.return_c {
+        fields.push(("c", matrix_to_json(&out.c)));
+    }
+    Value::obj(fields)
 }
 
 fn parse_matrix(v: &Value) -> Result<DenseMatrix> {
@@ -159,66 +516,261 @@ fn matrix_to_json(m: &DenseMatrix) -> Value {
     )
 }
 
-/// Handle one request line, producing the response document.
-pub fn handle_request(line: &str, state: &ServerState, shutdown: &AtomicBool) -> Result<Value> {
-    let req = json::parse(line).map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
-    let op = req.get("op").and_then(Value::as_str).context("missing \"op\"")?;
-    match op {
-        "ping" => Ok(Value::obj(vec![
-            ("ok", Value::Bool(true)),
-            ("service", Value::str("stark")),
-            ("version", Value::str(env!("CARGO_PKG_VERSION"))),
-            ("backend", Value::str(state.backend.name())),
-        ])),
-        "shutdown" => {
-            shutdown.store(true, Ordering::SeqCst);
-            Ok(Value::obj(vec![("ok", Value::Bool(true)), ("stopping", Value::Bool(true))]))
+/// Parse and validate a submit/multiply request into a [`JobSpec`] —
+/// every invariant the algorithms assert is checked here, so malformed
+/// requests are rejected at submit time instead of failing the job.
+fn parse_spec(req: &Value, default_b: usize) -> Result<JobSpec> {
+    let algo: Algorithm = req
+        .get("algo")
+        .and_then(Value::as_str)
+        .unwrap_or("stark")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let b = req.get("b").and_then(Value::as_usize).unwrap_or(default_b);
+    anyhow::ensure!(b >= 1 && b.is_power_of_two(), "\"b\" must be a power of two, got {b}");
+    let (a, b_mat) = match (req.get("a"), req.get("b_mat")) {
+        (Some(a), Some(bm)) => (parse_matrix(a)?, parse_matrix(bm)?),
+        _ => {
+            let n = req
+                .get("n")
+                .and_then(Value::as_usize)
+                .context("provide either inline \"a\"/\"b_mat\" or a size \"n\"")?;
+            // Checked BEFORE generation — the allocation is n²·8 bytes.
+            anyhow::ensure!(
+                n >= 1 && n <= MAX_SUBMIT_N,
+                "\"n\" must be in 1..={MAX_SUBMIT_N}, got {n}"
+            );
+            let seed = req.get("seed").and_then(Value::as_u64).unwrap_or(42);
+            (DenseMatrix::random(n, n, seed), DenseMatrix::random(n, n, seed + 1))
         }
-        "multiply" => {
-            let algo: Algorithm = req
-                .get("algo")
-                .and_then(Value::as_str)
-                .unwrap_or("stark")
-                .parse()
-                .map_err(anyhow::Error::msg)?;
-            let b = req.get("b").and_then(Value::as_usize).unwrap_or(state.default_b);
-            let (a, bm) = match (req.get("a"), req.get("b_mat")) {
-                (Some(a), Some(bm)) => (parse_matrix(a)?, parse_matrix(bm)?),
-                _ => {
-                    let n = req.get("n").and_then(Value::as_usize).context(
-                        "provide either inline \"a\"/\"b_mat\" or a size \"n\"",
-                    )?;
-                    let seed = req.get("seed").and_then(Value::as_u64).unwrap_or(42);
-                    (DenseMatrix::random(n, n, seed), DenseMatrix::random(n, n, seed + 1))
+    };
+    anyhow::ensure!(
+        a.cols() == b_mat.rows(),
+        "contraction mismatch: a is {}x{}, b_mat is {}x{}",
+        a.rows(),
+        a.cols(),
+        b_mat.rows(),
+        b_mat.cols()
+    );
+    // Bound the padded working size (pad-and-crop squares the largest
+    // dimension): one oversized request must not OOM the whole server.
+    let padded = crate::algos::general::padded_size(a.rows(), a.cols(), b_mat.cols(), b);
+    anyhow::ensure!(
+        padded <= MAX_SUBMIT_N,
+        "workload too large: padded size {padded} exceeds the server cap {MAX_SUBMIT_N}"
+    );
+    let return_c = req.get("return_c").and_then(Value::as_bool).unwrap_or(false);
+    Ok(JobSpec { algo, b, a, b_mat, return_c })
+}
+
+enum Submitted {
+    Accepted(u64),
+    Rejected(Value),
+}
+
+/// Admission-controlled enqueue. Returns the job id or the rejection
+/// document (`busy` when the queue is at its bound, an error once
+/// shutdown began).
+fn submit_job(shared: &Shared, spec: JobSpec) -> Submitted {
+    let name = format!("{} n={} b={}", spec.algo, spec.a.rows(), spec.b);
+    let mut jobs = shared.jobs.inner.lock().unwrap();
+    if !jobs.accepting || shared.shutdown.load(Ordering::SeqCst) {
+        return Submitted::Rejected(Value::obj(vec![
+            ("ok", Value::Bool(false)),
+            ("error", Value::str("server shutting down")),
+        ]));
+    }
+    if jobs.inflight >= shared.state.max_inflight_jobs {
+        return Submitted::Rejected(Value::obj(vec![
+            ("ok", Value::Bool(false)),
+            ("busy", Value::Bool(true)),
+            (
+                "error",
+                Value::str(format!(
+                    "server busy: {} jobs in flight (max {})",
+                    jobs.inflight, shared.state.max_inflight_jobs
+                )),
+            ),
+        ]));
+    }
+    jobs.seq += 1;
+    let id = jobs.seq;
+    jobs.entries.insert(id, JobEntry { name, status: JobStatus::Queued, spec: Some(spec) });
+    jobs.queue.push_back(id);
+    jobs.inflight += 1;
+    drop(jobs);
+    shared.jobs.cv.notify_all();
+    Submitted::Accepted(id)
+}
+
+/// Block until job `id` completes (or `timeout` elapses) and return its
+/// result document. The result's deep copy happens after the table
+/// lock is released — only the `Arc` handle is taken under it.
+fn wait_for(shared: &Shared, id: u64, timeout: Option<Duration>) -> Result<Value> {
+    let deadline = timeout.map(|t| Instant::now() + t);
+    let done: Arc<Value> = {
+        let mut jobs = shared.jobs.inner.lock().unwrap();
+        loop {
+            match jobs.entries.get(&id) {
+                None => anyhow::bail!("unknown job id {id}"),
+                Some(e) => match &e.status {
+                    JobStatus::Done(v) => break v.clone(),
+                    JobStatus::Failed(msg) => {
+                        return Ok(Value::obj(vec![
+                            ("ok", Value::Bool(false)),
+                            ("job_id", Value::num(id as f64)),
+                            ("error", Value::str(msg.clone())),
+                        ]))
+                    }
+                    JobStatus::Queued | JobStatus::Running => {}
+                },
+            }
+            jobs = match deadline {
+                None => shared.jobs.cv.wait(jobs).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Ok(Value::obj(vec![
+                            ("ok", Value::Bool(false)),
+                            ("job_id", Value::num(id as f64)),
+                            ("timeout", Value::Bool(true)),
+                            ("error", Value::str("wait timed out")),
+                        ]));
+                    }
+                    shared.jobs.cv.wait_timeout(jobs, d - now).unwrap().0
                 }
             };
-            let out = algos::multiply_general(
-                algo,
-                &state.ctx,
-                state.backend.clone(),
-                &a,
-                &bm,
-                b,
-                &StarkConfig::default(),
-            );
+        }
+    };
+    Ok((*done).clone())
+}
+
+fn handle_connection(stream: TcpStream, shared: &Shared) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match handle_request(&line, shared) {
+            Ok(v) => v,
+            Err(e) => Value::obj(vec![
+                ("ok", Value::Bool(false)),
+                ("error", Value::str(format!("{e:#}"))),
+            ]),
+        };
+        writer.write_all(response.to_json().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Handle one request line, producing the response document.
+fn handle_request(line: &str, shared: &Shared) -> Result<Value> {
+    let req = json::parse(line).map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
+    let op = req.get("op").and_then(Value::as_str).context("missing \"op\"")?;
+    let job_id_of = |req: &Value| -> Result<u64> {
+        req.get("job_id").and_then(Value::as_u64).context("missing \"job_id\"")
+    };
+    match op {
+        "ping" => {
+            let inflight = shared.jobs.inner.lock().unwrap().inflight;
+            Ok(Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("service", Value::str("stark")),
+                ("version", Value::str(env!("CARGO_PKG_VERSION"))),
+                ("backend", Value::str(shared.state.backend.name())),
+                ("jobs_inflight", Value::num(inflight as f64)),
+            ]))
+        }
+        "shutdown" => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.jobs.inner.lock().unwrap().accepting = false;
+            shared.jobs.cv.notify_all();
+            Ok(Value::obj(vec![("ok", Value::Bool(true)), ("stopping", Value::Bool(true))]))
+        }
+        "submit" => {
+            let spec = parse_spec(&req, shared.state.default_b)?;
+            match submit_job(shared, spec) {
+                Submitted::Accepted(id) => Ok(Value::obj(vec![
+                    ("ok", Value::Bool(true)),
+                    ("job_id", Value::num(id as f64)),
+                    ("status", Value::str("queued")),
+                ])),
+                Submitted::Rejected(doc) => Ok(doc),
+            }
+        }
+        "status" => {
+            let id = job_id_of(&req)?;
+            // Take cheap handles under the lock; deep-copy the result
+            // document only after releasing it.
+            let (name, status, result, error) = {
+                let jobs = shared.jobs.inner.lock().unwrap();
+                let e =
+                    jobs.entries.get(&id).with_context(|| format!("unknown job id {id}"))?;
+                let result = match &e.status {
+                    JobStatus::Done(v) => Some(v.clone()),
+                    _ => None,
+                };
+                let error = match &e.status {
+                    JobStatus::Failed(msg) => Some(msg.clone()),
+                    _ => None,
+                };
+                (e.name.clone(), e.status.as_str(), result, error)
+            };
             let mut fields = vec![
                 ("ok", Value::Bool(true)),
-                ("algo", Value::str(algo.to_string())),
-                ("rows", Value::num(out.c.rows() as f64)),
-                ("cols", Value::num(out.c.cols() as f64)),
-                ("wall_ms", Value::num(out.job.wall_ms)),
-                ("leaf_calls", Value::num(out.leaf_calls as f64)),
-                ("leaf_ms", Value::num(out.leaf_ms)),
-                ("frobenius", Value::num(out.c.frobenius())),
-                (
-                    "shuffle_bytes",
-                    Value::num(out.job.total_shuffle_bytes() as f64),
-                ),
+                ("job_id", Value::num(id as f64)),
+                ("name", Value::str(name)),
+                ("status", Value::str(status)),
             ];
-            if req.get("return_c").and_then(Value::as_bool).unwrap_or(false) {
-                fields.push(("c", matrix_to_json(&out.c)));
+            if let Some(v) = result {
+                fields.push(("result", (*v).clone()));
+            }
+            if let Some(msg) = error {
+                fields.push(("error", Value::str(msg)));
             }
             Ok(Value::obj(fields))
+        }
+        "wait" => {
+            let id = job_id_of(&req)?;
+            let timeout = req
+                .get("timeout_ms")
+                .and_then(Value::as_u64)
+                .map(|ms| Duration::from_millis(ms.min(MAX_WAIT_TIMEOUT_MS)));
+            wait_for(shared, id, timeout)
+        }
+        "jobs" => {
+            let jobs = shared.jobs.inner.lock().unwrap();
+            let list: Vec<Value> = jobs
+                .entries
+                .iter()
+                .map(|(id, e)| {
+                    Value::obj(vec![
+                        ("job_id", Value::num(*id as f64)),
+                        ("name", Value::str(e.name.clone())),
+                        ("status", Value::str(e.status.as_str())),
+                    ])
+                })
+                .collect();
+            Ok(Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("inflight", Value::num(jobs.inflight as f64)),
+                ("jobs", Value::Array(list)),
+            ]))
+        }
+        // Synchronous multiply: submit + wait, same admission control.
+        "multiply" => {
+            let spec = parse_spec(&req, shared.state.default_b)?;
+            match submit_job(shared, spec) {
+                Submitted::Accepted(id) => wait_for(shared, id, None),
+                Submitted::Rejected(doc) => Ok(doc),
+            }
         }
         other => anyhow::bail!("unknown op {other:?}"),
     }
@@ -242,40 +794,52 @@ mod tests {
     use crate::config::BackendKind;
     use crate::engine::ClusterConfig;
 
-    fn test_server() -> Server {
-        let state = ServerState {
+    fn test_state() -> ServerState {
+        ServerState {
             ctx: SparkContext::new(ClusterConfig::new(2, 1)),
             backend: crate::config::build_backend(BackendKind::Packed, 1).unwrap(),
             default_b: 2,
-        };
-        Server::start("127.0.0.1:0", state).unwrap()
+            stark_cfg: StarkConfig::default(),
+            max_inflight_jobs: 8,
+            job_runners: 2,
+        }
+    }
+
+    fn test_server() -> Server {
+        Server::start("127.0.0.1:0", test_state()).unwrap()
+    }
+
+    fn req(addr: &str, pairs: Vec<(&str, Value)>) -> Value {
+        request(addr, &Value::obj(pairs)).unwrap()
     }
 
     #[test]
     fn ping_roundtrip() {
         let server = test_server();
-        let resp = request(&server.addr().to_string(), &Value::obj(vec![("op", Value::str("ping"))]))
-            .unwrap();
+        let resp = req(&server.addr().to_string(), vec![("op", Value::str("ping"))]);
         assert_eq!(resp.get("ok"), Some(&Value::Bool(true)));
         assert_eq!(resp.get("service").unwrap().as_str(), Some("stark"));
+        assert_eq!(resp.get("jobs_inflight").unwrap().as_u64(), Some(0));
     }
 
     #[test]
     fn multiply_by_seed() {
         let server = test_server();
-        let resp = request(
+        let resp = req(
             &server.addr().to_string(),
-            &Value::obj(vec![
+            vec![
                 ("op", Value::str("multiply")),
                 ("algo", Value::str("stark")),
                 ("n", Value::num(32.0)),
                 ("b", Value::num(4.0)),
                 ("seed", Value::num(7.0)),
-            ]),
-        )
-        .unwrap();
+            ],
+        );
         assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
         assert_eq!(resp.get("leaf_calls").unwrap().as_u64(), Some(49));
+        // The response carries its own job's stage metrics, eq. (25) deep.
+        let stages = resp.get("stages").unwrap().as_array().unwrap();
+        assert_eq!(stages.len(), crate::algos::stark::predicted_stages(4));
         // Frobenius must match a local computation of the same workload.
         let a = DenseMatrix::random(32, 32, 7);
         let b = DenseMatrix::random(32, 32, 8);
@@ -287,42 +851,203 @@ mod tests {
     #[test]
     fn multiply_inline_matrices_returns_product() {
         let server = test_server();
-        let resp = request(
+        let resp = req(
             &server.addr().to_string(),
-            &Value::obj(vec![
+            vec![
                 ("op", Value::str("multiply")),
                 ("algo", Value::str("marlin")),
                 ("b", Value::num(2.0)),
-                (
-                    "a",
-                    json::parse("[[1,2],[3,4]]").unwrap(),
-                ),
+                ("a", json::parse("[[1,2],[3,4]]").unwrap()),
                 ("b_mat", json::parse("[[1,0],[0,1]]").unwrap()),
                 ("return_c", Value::Bool(true)),
-            ]),
-        )
-        .unwrap();
+            ],
+        );
         assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
         let c = resp.get("c").unwrap();
         assert_eq!(c.to_json(), "[[1,2],[3,4]]");
     }
 
     #[test]
+    fn submit_wait_status_jobs_lifecycle() {
+        let server = test_server();
+        let addr = server.addr().to_string();
+        let resp = req(
+            &addr,
+            vec![
+                ("op", Value::str("submit")),
+                ("algo", Value::str("stark")),
+                ("n", Value::num(16.0)),
+                ("b", Value::num(2.0)),
+                ("seed", Value::num(3.0)),
+            ],
+        );
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+        let id = resp.get("job_id").unwrap().as_u64().unwrap();
+        assert!(matches!(resp.get("status").unwrap().as_str(), Some("queued")));
+
+        let done = req(
+            &addr,
+            vec![("op", Value::str("wait")), ("job_id", Value::num(id as f64))],
+        );
+        assert_eq!(done.get("ok"), Some(&Value::Bool(true)), "{done:?}");
+        assert_eq!(done.get("job_id").unwrap().as_u64(), Some(id));
+        assert_eq!(
+            done.get("stages").unwrap().as_array().unwrap().len(),
+            crate::algos::stark::predicted_stages(2)
+        );
+
+        let status = req(
+            &addr,
+            vec![("op", Value::str("status")), ("job_id", Value::num(id as f64))],
+        );
+        assert_eq!(status.get("status").unwrap().as_str(), Some("done"));
+        assert!(status.get("result").is_some());
+
+        let jobs = req(&addr, vec![("op", Value::str("jobs"))]);
+        assert_eq!(jobs.get("ok"), Some(&Value::Bool(true)));
+        let list = jobs.get("jobs").unwrap().as_array().unwrap();
+        assert_eq!(list.len(), 1);
+        assert_eq!(list[0].get("job_id").unwrap().as_u64(), Some(id));
+        assert_eq!(list[0].get("status").unwrap().as_str(), Some("done"));
+    }
+
+    #[test]
+    fn admission_control_rejects_busy() {
+        let mut state = test_state();
+        state.max_inflight_jobs = 1;
+        state.job_runners = 1;
+        let server = Server::start("127.0.0.1:0", state).unwrap();
+        let addr = server.addr().to_string();
+        // First submit fills the single in-flight slot.
+        let first = req(
+            &addr,
+            vec![
+                ("op", Value::str("submit")),
+                ("n", Value::num(64.0)),
+                ("b", Value::num(4.0)),
+            ],
+        );
+        assert_eq!(first.get("ok"), Some(&Value::Bool(true)), "{first:?}");
+        let id = first.get("job_id").unwrap().as_u64().unwrap();
+        // Second submit must bounce with a proper busy rejection.
+        let second = req(
+            &addr,
+            vec![("op", Value::str("submit")), ("n", Value::num(8.0)), ("b", Value::num(2.0))],
+        );
+        assert_eq!(second.get("ok"), Some(&Value::Bool(false)));
+        assert_eq!(second.get("busy"), Some(&Value::Bool(true)), "{second:?}");
+        // Once the slot drains, submission works again.
+        let done = req(&addr, vec![("op", Value::str("wait")), ("job_id", Value::num(id as f64))]);
+        assert_eq!(done.get("ok"), Some(&Value::Bool(true)), "{done:?}");
+        let third = req(
+            &addr,
+            vec![("op", Value::str("submit")), ("n", Value::num(8.0)), ("b", Value::num(2.0))],
+        );
+        assert_eq!(third.get("ok"), Some(&Value::Bool(true)), "{third:?}");
+    }
+
+    #[test]
     fn bad_requests_get_error_responses() {
         let server = test_server();
         let addr = server.addr().to_string();
-        let resp = request(&addr, &Value::obj(vec![("op", Value::str("nonsense"))])).unwrap();
+        let resp = req(&addr, vec![("op", Value::str("nonsense"))]);
         assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
-        let resp = request(&addr, &Value::obj(vec![("op", Value::str("multiply"))])).unwrap();
+        let resp = req(&addr, vec![("op", Value::str("multiply"))]);
         assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
         assert!(resp.get("error").unwrap().as_str().unwrap().contains("\"n\""));
+        // Malformed submits are rejected at submit time, not queued.
+        let resp = req(
+            &addr,
+            vec![("op", Value::str("submit")), ("n", Value::num(8.0)), ("b", Value::num(3.0))],
+        );
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("power of two"));
+        // status/wait on unknown ids error instead of hanging.
+        let resp = req(
+            &addr,
+            vec![("op", Value::str("status")), ("job_id", Value::num(999.0))],
+        );
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
+        let resp = req(
+            &addr,
+            vec![("op", Value::str("wait")), ("job_id", Value::num(999.0))],
+        );
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
+    }
+
+    #[test]
+    fn wait_timeout_returns_instead_of_hanging() {
+        // A 1 ms wait on a job that takes orders of magnitude longer
+        // (n=256 distributed, debug build) must time out, not block.
+        let mut state = test_state();
+        state.job_runners = 1;
+        let mut server = Server::start("127.0.0.1:0", state).unwrap();
+        let addr = server.addr().to_string();
+        let resp = req(
+            &addr,
+            vec![("op", Value::str("submit")), ("n", Value::num(256.0)), ("b", Value::num(2.0))],
+        );
+        let id = resp.get("job_id").unwrap().as_u64().unwrap();
+        let waited = req(
+            &addr,
+            vec![
+                ("op", Value::str("wait")),
+                ("job_id", Value::num(id as f64)),
+                ("timeout_ms", Value::num(1.0)),
+            ],
+        );
+        assert_eq!(waited.get("ok"), Some(&Value::Bool(false)));
+        assert_eq!(waited.get("timeout"), Some(&Value::Bool(true)), "{waited:?}");
+        // An unbounded wait still completes the job normally afterwards.
+        let done = req(&addr, vec![("op", Value::str("wait")), ("job_id", Value::num(id as f64))]);
+        assert_eq!(done.get("ok"), Some(&Value::Bool(true)), "{done:?}");
+        server.stop();
+    }
+
+    #[test]
+    fn finished_jobs_are_evicted_in_completion_order() {
+        let last = MAX_FINISHED_JOBS as u64 + 2;
+        let mut jobs = Jobs {
+            seq: 0,
+            entries: BTreeMap::new(),
+            queue: VecDeque::new(),
+            finished_order: VecDeque::new(),
+            inflight: 0,
+            accepting: true,
+        };
+        for id in 1..=last {
+            jobs.entries.insert(
+                id,
+                JobEntry { name: format!("j{id}"), status: JobStatus::Running, spec: None },
+            );
+            jobs.inflight += 1;
+        }
+        // A queued job must never be evicted, however old.
+        jobs.entries
+            .insert(0, JobEntry { name: "queued".into(), status: JobStatus::Queued, spec: None });
+        // Ids 2.. finish first; the EARLIEST-submitted job (id 1)
+        // finishes LAST — it must survive even though its id is lowest.
+        for id in 2..=last {
+            finish_job(&mut jobs, id, JobStatus::Done(Arc::new(Value::Bool(true))));
+        }
+        finish_job(&mut jobs, 1, JobStatus::Done(Arc::new(Value::Bool(true))));
+        assert_eq!(jobs.finished_order.len(), MAX_FINISHED_JOBS);
+        assert!(jobs.entries.contains_key(&0), "queued jobs are never evicted");
+        assert!(
+            jobs.entries.contains_key(&1),
+            "the most recent FINISHER must survive regardless of submission order"
+        );
+        // The two earliest finishers (ids 2 and 3) rolled off.
+        assert!(!jobs.entries.contains_key(&2));
+        assert!(!jobs.entries.contains_key(&3));
+        assert!(jobs.entries.contains_key(&last));
     }
 
     #[test]
     fn shutdown_stops_server() {
         let mut server = test_server();
         let addr = server.addr().to_string();
-        let resp = request(&addr, &Value::obj(vec![("op", Value::str("shutdown"))])).unwrap();
+        let resp = req(&addr, vec![("op", Value::str("shutdown"))]);
         assert_eq!(resp.get("ok"), Some(&Value::Bool(true)));
         server.stop();
         // Further connections may connect (OS backlog) but the accept
@@ -330,19 +1055,34 @@ mod tests {
     }
 
     #[test]
+    fn stop_joins_handlers_for_idle_connections() {
+        // An open connection that never sends a request must not block
+        // shutdown past the drain deadline: stop() force-closes it and
+        // joins the handler.
+        let mut server = test_server();
+        let idle = TcpStream::connect(server.addr()).unwrap();
+        let started = Instant::now();
+        server.stop();
+        assert!(
+            started.elapsed() < DRAIN_DEADLINE + Duration::from_secs(5),
+            "stop() hung on an idle connection"
+        );
+        drop(idle);
+    }
+
+    #[test]
     fn rectangular_inline_multiply() {
         let server = test_server();
-        let resp = request(
+        let resp = req(
             &server.addr().to_string(),
-            &Value::obj(vec![
+            vec![
                 ("op", Value::str("multiply")),
                 ("b", Value::num(2.0)),
                 ("a", json::parse("[[1,2,3],[4,5,6]]").unwrap()),
                 ("b_mat", json::parse("[[1],[1],[1]]").unwrap()),
                 ("return_c", Value::Bool(true)),
-            ]),
-        )
-        .unwrap();
+            ],
+        );
         assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
         assert_eq!(resp.get("c").unwrap().to_json(), "[[6],[15]]");
     }

@@ -1,0 +1,187 @@
+//! Concurrency: many clients against one serve job queue, and many jobs
+//! against one engine context. The invariants under test are the
+//! scheduler PR's acceptance criteria: concurrent jobs complete with
+//! bit-correct products, and every response carries only its own job's
+//! stage metrics (no cross-job bleed through a shared "current" slot).
+
+use stark::algos::{self, Algorithm, StarkConfig};
+use stark::config::{build_backend, BackendKind};
+use stark::engine::{ClusterConfig, SparkContext};
+use stark::matrix::multiply::matmul_naive;
+use stark::matrix::DenseMatrix;
+use stark::serve::{request, Server, ServerState};
+use stark::util::json::Value;
+
+fn to_json(m: &DenseMatrix) -> Value {
+    Value::Array(
+        (0..m.rows())
+            .map(|r| Value::Array((0..m.cols()).map(|c| Value::num(m.get(r, c))).collect()))
+            .collect(),
+    )
+}
+
+/// One client workload: algorithm, split, seeded 8×8 inputs.
+fn workload(client: usize, i: usize) -> (Algorithm, usize, DenseMatrix, DenseMatrix) {
+    let algo = [Algorithm::Stark, Algorithm::Marlin, Algorithm::Mllib][(client + i) % 3];
+    let b = [2usize, 4][(client * 7 + i) % 2];
+    let seed = 1000 + (client * 100 + i) as u64;
+    let a = DenseMatrix::random(8, 8, seed);
+    let bm = DenseMatrix::random(8, 8, seed + 1);
+    (algo, b, a, bm)
+}
+
+/// The reference for bit-correctness: the same distributed run on a
+/// private context. Distributed execution is deterministic (pure
+/// closures, deterministic partitioners, outputs sorted by partition),
+/// so the served product must match BIT FOR BIT — any deviation under
+/// concurrency means jobs corrupted each other.
+fn local_reference(
+    algo: Algorithm,
+    b: usize,
+    a: &DenseMatrix,
+    bm: &DenseMatrix,
+) -> (DenseMatrix, Vec<String>) {
+    let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+    let backend = build_backend(BackendKind::Packed, 1).unwrap();
+    let out =
+        algos::multiply_general(algo, &ctx, backend, a, bm, b, &StarkConfig::default());
+    let labels = out.job.stages.iter().map(|s| s.label.clone()).collect();
+    (out.c, labels)
+}
+
+#[test]
+fn serve_concurrent_clients_bit_correct_and_isolated() {
+    const CLIENTS: usize = 4;
+    const REQUESTS: usize = 3;
+
+    let state = ServerState {
+        ctx: SparkContext::new(ClusterConfig::new(2, 2)),
+        backend: build_backend(BackendKind::Packed, 2).unwrap(),
+        default_b: 2,
+        stark_cfg: StarkConfig::default(),
+        max_inflight_jobs: 16,
+        job_runners: 3,
+    };
+    let mut server = Server::start("127.0.0.1:0", state).unwrap();
+    let addr = server.addr().to_string();
+
+    let mut handles = Vec::new();
+    for client in 0..CLIENTS {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..REQUESTS {
+                let (algo, b, a, bm) = workload(client, i);
+                let base = vec![
+                    ("algo", Value::str(algo.to_string())),
+                    ("b", Value::num(b as f64)),
+                    ("a", to_json(&a)),
+                    ("b_mat", to_json(&bm)),
+                    ("return_c", Value::Bool(true)),
+                ];
+                // Mixed request styles: even rounds use the synchronous
+                // sugar, odd rounds drive submit + wait explicitly.
+                let resp = if i % 2 == 0 {
+                    let mut fields = vec![("op", Value::str("multiply"))];
+                    fields.extend(base);
+                    request(&addr, &Value::obj(fields)).unwrap()
+                } else {
+                    let mut fields = vec![("op", Value::str("submit"))];
+                    fields.extend(base);
+                    let submitted = request(&addr, &Value::obj(fields)).unwrap();
+                    assert_eq!(
+                        submitted.get("ok"),
+                        Some(&Value::Bool(true)),
+                        "client {client} req {i}: {submitted:?}"
+                    );
+                    let id = submitted.get("job_id").unwrap().as_u64().unwrap();
+                    request(
+                        &addr,
+                        &Value::obj(vec![
+                            ("op", Value::str("wait")),
+                            ("job_id", Value::num(id as f64)),
+                            ("timeout_ms", Value::num(120_000.0)),
+                        ]),
+                    )
+                    .unwrap()
+                };
+                assert_eq!(
+                    resp.get("ok"),
+                    Some(&Value::Bool(true)),
+                    "client {client} req {i} ({algo} b={b}): {resp:?}"
+                );
+
+                let (want_c, want_labels) = local_reference(algo, b, &a, &bm);
+                // Bit-correct product: the JSON number writer emits
+                // shortest-roundtrip f64, so equality here is exact.
+                let rows = resp.get("c").unwrap().as_array().unwrap();
+                for (r, rowv) in rows.iter().enumerate() {
+                    for (c, x) in rowv.as_array().unwrap().iter().enumerate() {
+                        let got = x.as_f64().unwrap();
+                        assert!(
+                            want_c.get(r, c) == got,
+                            "client {client} req {i} ({algo} b={b}) bit mismatch at \
+                             ({r},{c}): {} vs {got}",
+                            want_c.get(r, c)
+                        );
+                    }
+                }
+                // Per-job metric isolation: exactly the stage sequence
+                // this algorithm produces when run alone — nothing
+                // missing, nothing leaked in from concurrent jobs.
+                let got_labels: Vec<String> = resp
+                    .get("stages")
+                    .unwrap()
+                    .as_array()
+                    .unwrap()
+                    .iter()
+                    .map(|s| s.get("label").unwrap().as_str().unwrap().to_string())
+                    .collect();
+                assert_eq!(
+                    got_labels, want_labels,
+                    "client {client} req {i} ({algo} b={b}): stage set differs from \
+                     a solo run"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.stop();
+}
+
+#[test]
+fn engine_concurrent_multiplies_on_shared_context() {
+    // The acceptance criterion at engine level: concurrent `run_job`
+    // scopes on ONE SparkContext (one worker pool, fair scheduler) both
+    // complete correctly, and each JobMetrics holds exactly its own
+    // stage count — eq. (25) for Stark.
+    let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+    let backend = build_backend(BackendKind::Packed, 2).unwrap();
+    let mut handles = Vec::new();
+    for (t, b) in [2usize, 4, 8].into_iter().enumerate() {
+        let ctx = ctx.clone();
+        let backend = backend.clone();
+        handles.push(std::thread::spawn(move || {
+            let a = DenseMatrix::random(16, 16, 70 + t as u64);
+            let bm = DenseMatrix::random(16, 16, 80 + t as u64);
+            let out = algos::stark::multiply(&ctx, backend, &a, &bm, b, &StarkConfig::default());
+            let want = matmul_naive(&a, &bm);
+            assert!(
+                want.allclose(&out.c, 1e-9),
+                "b={b}: concurrent product diverged from reference"
+            );
+            assert_eq!(
+                out.job.stages.len(),
+                algos::stark::predicted_stages(b),
+                "b={b}: stage metrics leaked across concurrent jobs: {:?}",
+                out.job.stages.iter().map(|s| s.label.clone()).collect::<Vec<_>>()
+            );
+            out.job.id
+        }));
+    }
+    let ids: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // Distinct job ids, all archived.
+    assert_eq!(ids.iter().collect::<std::collections::HashSet<_>>().len(), 3);
+    assert_eq!(ctx.metrics().jobs().len(), 3);
+}

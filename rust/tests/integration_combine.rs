@@ -92,6 +92,9 @@ fn serve_round_trip_matches_naive() {
         ctx: SparkContext::new(ClusterConfig::new(2, 1)),
         backend: build_backend(BackendKind::Packed, 1).unwrap(),
         default_b: 2,
+        stark_cfg: stark::algos::StarkConfig::default(),
+        max_inflight_jobs: 4,
+        job_runners: 1,
     };
     let mut server = Server::start("127.0.0.1:0", state).unwrap();
     let a = DenseMatrix::random(8, 8, 7);

@@ -56,23 +56,23 @@ fn chained_shuffles() {
 #[test]
 fn branching_with_cache_runs_once_per_branch() {
     let ctx = ctx(2, 1);
-    ctx.begin_job("branching");
-    let base = ctx.parallelize((0u64..100).collect(), 4).map(|x| x * 3).cache("materialize");
+    let job = ctx.run_job("branching");
+    let base = job.parallelize((0u64..100).collect(), 4).map(|x| x * 3).cache("materialize");
     let s1: u64 = base.map(|x| x).collect("branch1").iter().sum();
     let s2 = base.filter(|x| x % 2 == 0).count("branch2");
     assert_eq!(s1, 3 * 99 * 100 / 2);
     assert_eq!(s2, 50);
-    let stages = ctx.metrics().current_stages();
+    let stages = job.stages();
     assert_eq!(stages.len(), 3, "{:?}", stages.iter().map(|s| &s.label).collect::<Vec<_>>());
 }
 
 #[test]
 fn stage_metrics_accumulate_comp_and_shuffle() {
     let ctx = ctx(2, 2);
-    ctx.begin_job("metrics");
+    let scope = ctx.run_job("metrics");
     let pairs: Vec<(u32, Vec<f64>)> = (0..16).map(|i| (i % 4, vec![1.0; 100])).collect();
-    ctx.parallelize(pairs, 4).group_by_key("shuffle", 4).collect("gather");
-    let job = ctx.end_job().unwrap();
+    scope.parallelize(pairs, 4).group_by_key("shuffle", 4).collect("gather");
+    let job = scope.finish();
     assert_eq!(job.stages.len(), 2);
     let shuffle = &job.stages[0];
     assert_eq!(shuffle.label, "shuffle");

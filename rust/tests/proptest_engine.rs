@@ -224,20 +224,65 @@ fn prop_map_side_combine_never_changes_answer() {
 fn prop_stage_count_is_shuffles_plus_actions() {
     assert_prop("stage counting", 0x6B72, 20, |rng| {
         let ctx = random_ctx(rng);
-        ctx.begin_job("count");
+        let job = ctx.run_job("count");
         let wide_ops = rng.range(1, 4);
-        let mut d = ctx.parallelize(random_pairs(rng, 100, 5), 4);
+        let mut d = job.parallelize(random_pairs(rng, 100, 5), 4);
         for i in 0..wide_ops {
             d = d
                 .group_by_key(&format!("w{i}"), 3)
                 .map(|(k, vs)| (k, vs.into_iter().sum::<u64>()));
         }
         d.collect("final");
-        let stages = ctx.metrics().current_stages().len();
+        let stages = job.stages().len();
         if stages == wide_ops + 1 {
             Ok(())
         } else {
             Err(format!("{stages} stages for {wide_ops} wide ops"))
         }
+    });
+}
+
+#[test]
+fn prop_interleaved_jobs_record_disjoint_complete_stage_sets() {
+    // Two jobs race on ONE shared context, each running a random-depth
+    // pipeline under its own `run_job` scope. Whatever the interleaving,
+    // each scope must hold exactly its own stages: the full set (every
+    // shuffle + the final action), all carrying that job's label prefix.
+    assert_prop("interleaved job isolation", 0x6B73, 12, |rng| {
+        let ctx = random_ctx(rng);
+        let depths = [rng.range(1, 4), rng.range(1, 4)];
+        let seeds: Vec<Vec<(u32, u64)>> =
+            (0..2).map(|_| random_pairs(rng, 80, 5)).collect();
+        let mut handles = Vec::new();
+        for (t, (wide_ops, pairs)) in depths.iter().zip(seeds).enumerate() {
+            let ctx = ctx.clone();
+            let wide_ops = *wide_ops;
+            handles.push(std::thread::spawn(move || {
+                let job = ctx.run_job(&format!("job{t}"));
+                let mut d = job.parallelize(pairs, 3);
+                for i in 0..wide_ops {
+                    d = d
+                        .group_by_key(&format!("j{t}/w{i}"), 3)
+                        .map(|(k, vs)| (k, vs.into_iter().sum::<u64>()));
+                }
+                d.collect(&format!("j{t}/final"));
+                job.stages()
+            }));
+        }
+        let recorded: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (t, stages) in recorded.iter().enumerate() {
+            if stages.len() != depths[t] + 1 {
+                return Err(format!(
+                    "job{t}: {} stages for {} wide ops",
+                    stages.len(),
+                    depths[t]
+                ));
+            }
+            let prefix = format!("j{t}/");
+            if let Some(alien) = stages.iter().find(|s| !s.label.starts_with(&prefix)) {
+                return Err(format!("job{t} recorded foreign stage {:?}", alien.label));
+            }
+        }
+        Ok(())
     });
 }
