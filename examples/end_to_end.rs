@@ -11,8 +11,9 @@
 //! ```
 
 use stark::algos::Algorithm;
+use stark::api::StarkSession;
 use stark::config::BackendKind;
-use stark::engine::FailureSpec;
+use stark::engine::{ClusterConfig, FailureSpec};
 use stark::experiments::{Harness, Scale};
 use stark::matrix::{matmul_parallel, DenseMatrix};
 use stark::util::table::Table;
@@ -21,11 +22,11 @@ fn main() -> anyhow::Result<()> {
     // Layer check 1: artifacts present (L1/L2 compiled by `make artifacts`).
     let backend_kind = match stark::runtime::find_artifacts_dir() {
         Some(dir) => {
-            println!("[1/5] artifacts found at {} (PJRT leaf backend)", dir.display());
+            println!("[1/6] artifacts found at {} (PJRT leaf backend)", dir.display());
             BackendKind::Xla
         }
         None => {
-            println!("[1/5] artifacts NOT found — falling back to the native leaf backend");
+            println!("[1/6] artifacts NOT found — falling back to the native leaf backend");
             println!("      (run `make artifacts` to exercise the JAX/Pallas path)");
             BackendKind::Packed
         }
@@ -59,7 +60,7 @@ fn main() -> anyhow::Result<()> {
 
     // Layer check 2: numerics — every algorithm agrees with the
     // single-node product, through the AOT/PJRT backend when present.
-    println!("[2/5] verifying all three systems against the single-node product (n=512, b=4)");
+    println!("[2/6] verifying all three systems against the single-node product (n=512, b=4)");
     let (a, bm) = hv.inputs(512);
     let want = matmul_parallel(&a, &bm, 4);
     for algo in Algorithm::ALL {
@@ -70,7 +71,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // Headline experiment: best-b comparison at each size (Fig. 8 method).
-    println!("[3/5] headline: fastest wall time per system");
+    println!("[3/6] headline: fastest wall time per system");
     let mut t = Table::new(vec!["n", "mllib ms", "marlin ms", "stark ms", "vs marlin", "vs mllib"]);
     for &n in &h.scale.sizes.clone() {
         let mut best = std::collections::HashMap::new();
@@ -97,7 +98,7 @@ fn main() -> anyhow::Result<()> {
     println!("      (paper at 16384²: stark 28% under marlin, 36% under mllib)");
 
     // Layer check 4: fault tolerance — kill a task mid-stage and recover.
-    println!("[4/5] failure injection: losing one divide task mid-stage");
+    println!("[4/6] failure injection: losing one divide task mid-stage");
     let out = h.run_point_with(Algorithm::Stark, 512, 4, |c| {
         c.failure = Some(FailureSpec { stage_contains: "divide".into(), partition: 0 });
     });
@@ -107,8 +108,31 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(diff < 1e-8, "post-recovery product wrong");
     println!("      recovered via lineage recomputation, product still exact (Δ={diff:.1e})");
 
-    // Layer check 5: the leaf-count law that explains the headline.
-    println!("[5/5] leaf-multiplication law (the paper's core argument):");
+    // Layer check 5: the planner closes the loop — auto-selection
+    // through the session API picks a concrete system and split count
+    // and the product stays exact.
+    println!("[5/6] cost-model planner: auto algorithm + splits through the session API");
+    let session = StarkSession::builder().cluster(ClusterConfig::new(2, 2)).build()?;
+    for n in [512usize, 2048, 16384] {
+        let plan = session.plan(n);
+        println!(
+            "      plan(n={n}): {} with b={} (predicted {:.0} ms)",
+            plan.algorithm,
+            plan.b,
+            plan.predicted_wall_ms()
+        );
+    }
+    let (pa, pb) = hv.inputs(512);
+    let auto = session.matrix(&pa).multiply(&session.matrix(&pb)).collect()?;
+    let diff = matmul_parallel(&pa, &pb, 4).max_abs_diff(&auto.c);
+    anyhow::ensure!(diff < 1e-8, "auto-planned product diverged");
+    println!(
+        "      executed auto plan: {} b={} — exact (Δ={diff:.1e})",
+        auto.plan.algorithm, auto.plan.b
+    );
+
+    // Layer check 6: the leaf-count law that explains the headline.
+    println!("[6/6] leaf-multiplication law (the paper's core argument):");
     for b in [2usize, 4, 8] {
         let stark = h.run_point(Algorithm::Stark, 512, b).leaf_calls;
         let marlin = h.run_point(Algorithm::Marlin, 512, b).leaf_calls;

@@ -11,7 +11,7 @@
 
 use stark::algos::Algorithm;
 use stark::config::BackendKind;
-use stark::cost;
+use stark::cost::{self, Planner, Splits};
 use stark::experiments::{Harness, Scale};
 use stark::util::table::Table;
 
@@ -56,5 +56,23 @@ fn main() -> anyhow::Result<()> {
     t.print();
     println!("\noptimal partition count: b={} ({:.1} ms)", best.0, best.1);
     println!("(the paper finds the same U-shape; too many partitions for a small matrix hurt)");
+
+    // The planner automates exactly this sweep: ask it instead of
+    // measuring. `--splits auto` / `Splits::Auto` runs this resolution
+    // inside every session multiply.
+    let planner = Planner::new(cores);
+    let plan = planner.resolve(Algorithm::Stark, Splits::Auto, n).expect("stark plan");
+    println!(
+        "planner (default calibration): stark at n={n} should use b={} \
+         (predicted {:.1} ms); measured optimum was b={}",
+        plan.b,
+        plan.predicted_wall_ms(),
+        best.0,
+    );
+    let open = planner.resolve(Algorithm::Auto, Splits::Auto, n).expect("auto plan");
+    println!(
+        "planner (algorithm open): would run {} with b={} at this scale",
+        open.algorithm, open.b
+    );
     Ok(())
 }

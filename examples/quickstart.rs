@@ -1,47 +1,68 @@
-//! Quickstart: multiply two matrices with Stark on the simulated cluster
-//! and verify the product.
+//! Quickstart: the session API end to end — wrap matrices in handles,
+//! let the cost-model planner pick the algorithm and split count, and
+//! verify the product.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
-use std::sync::Arc;
-
-use stark::algos::{stark as stark_algo, StarkConfig};
-use stark::engine::{ClusterConfig, SparkContext};
+use stark::algos::Algorithm;
+use stark::api::StarkSession;
+use stark::cost::Splits;
+use stark::engine::ClusterConfig;
 use stark::matrix::{matmul_parallel, DenseMatrix};
-use stark::runtime::NativeBackend;
 
 fn main() -> anyhow::Result<()> {
-    // A 2-executor × 2-core simulated cluster (think: tiny Spark cluster).
-    let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+    // A session owns the simulated cluster (2 executors × 2 cores), the
+    // leaf backend (pure-Rust packed GEMM by default; add
+    // `.backend_kind(BackendKind::Xla)` for the AOT JAX/Pallas path),
+    // and the §IV cost-model planner.
+    let session = StarkSession::builder().cluster(ClusterConfig::new(2, 2)).build()?;
 
-    // Two random 512×512 matrices, split into a 4×4 grid of 128-blocks.
-    let n = 512;
-    let b = 4;
+    // Any shape works — 500 is not a power of two; the session pads to
+    // 512 internally and crops the product back.
+    let n = 500;
     let a = DenseMatrix::random(n, n, 1);
-    let bm = DenseMatrix::random(n, n, 2);
+    let b = DenseMatrix::random(n, n, 2);
 
-    // Leaf blocks multiply through a backend; use the pure-Rust one here
-    // (swap in `stark::config::build_backend(BackendKind::Xla, 2)?` to run
-    // the AOT-compiled JAX/Pallas artifacts via PJRT).
-    let backend = Arc::new(NativeBackend::default());
-
-    let out = stark_algo::multiply(&ctx, backend, &a, &bm, b, &StarkConfig::default());
-
+    // Ask the planner what it would do before running anything.
+    let plan = session.plan(n);
     println!(
-        "stark multiplied {n}×{n} with b={b}: wall {:.1} ms, {} leaf products \
-         ({} would be needed by the naive block scheme)",
-        out.job.wall_ms,
-        out.leaf_calls,
-        b * b * b,
+        "planner: for n={n} run {} with b={} (padded n={}, predicted {:.1} ms)",
+        plan.algorithm,
+        plan.b,
+        plan.n,
+        plan.predicted_wall_ms()
     );
 
-    // Verify against a single-node product.
-    let want = matmul_parallel(&a, &bm, 4);
-    let diff = want.max_abs_diff(&out.c);
-    println!("max |Δ| vs single-node product = {diff:.3e}");
-    assert!(diff < 1e-9, "verification failed");
+    // Handles distribute lazily and cache their block splits across jobs.
+    let ha = session.matrix(&a);
+    let hb = session.matrix(&b);
+
+    // Fully automatic multiply: algorithm AND split count by cost model.
+    let auto = ha.multiply(&hb).collect()?;
+    println!(
+        "auto:  {} b={}: wall {:.1} ms, {} leaf products",
+        auto.plan.algorithm, auto.plan.b, auto.job.wall_ms, auto.leaf_calls
+    );
+
+    // Or pin the paper's system and a split count yourself.
+    let pinned =
+        ha.multiply(&hb).algorithm(Algorithm::Stark).splits(Splits::Fixed(4)).collect()?;
+    println!(
+        "stark: b=4: wall {:.1} ms, {} leaf products ({} under the naive block scheme)",
+        pinned.job.wall_ms,
+        pinned.leaf_calls,
+        4 * 4 * 4,
+    );
+
+    // Verify both against a single-node product.
+    let want = matmul_parallel(&a, &b, 4);
+    for (name, out) in [("auto", &auto), ("stark", &pinned)] {
+        let diff = want.max_abs_diff(&out.c);
+        println!("{name}: max |Δ| vs single-node product = {diff:.3e}");
+        anyhow::ensure!(diff < 1e-9, "verification failed");
+    }
     println!("OK");
     Ok(())
 }

@@ -115,41 +115,59 @@ fn main() -> anyhow::Result<()> {
 
     print_header("engine coordination overhead (payload-free stark shapes)");
     for b in [2usize, 4, 8] {
-        use stark::algos::{stark as stark_algo, StarkConfig};
-        use stark::engine::{ClusterConfig, SparkContext};
-        use std::sync::Arc;
+        use stark::algos::Algorithm;
+        use stark::api::StarkSession;
+        use stark::cost::Splits;
+        use stark::engine::ClusterConfig;
         // 1-element blocks: all cost is tags + shuffle + scheduling.
+        // Runs through the session API (the path users take); fresh
+        // handles per iteration so the split cache doesn't hide the
+        // distribution cost this bench exists to measure.
         let n = b; // block size 1
         let a = DenseMatrix::random(n, n, 7);
         let bm = DenseMatrix::random(n, n, 8);
-        let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+        let session = StarkSession::builder()
+            .cluster(ClusterConfig::new(2, 2))
+            .build()
+            .expect("native session");
         let r = bench_budget(&format!("stark skeleton b={b}"), budget, 3, || {
-            black_box(stark_algo::multiply(
-                &ctx,
-                Arc::new(stark::runtime::NativeBackend::default()),
-                &a,
-                &bm,
-                b,
-                &StarkConfig::default(),
-            ));
+            black_box(
+                session
+                    .matrix(&a)
+                    .multiply(&session.matrix(&bm))
+                    .algorithm(Algorithm::Stark)
+                    .splits(Splits::Fixed(b))
+                    .collect()
+                    .expect("skeleton multiply"),
+            );
         });
         println!("{}", r.line());
     }
 
     print_header("map-side signed combining vs group-by-key shuffle (stark n=512 b=8)");
     {
-        use stark::algos::{stark as stark_algo, StarkConfig};
-        use stark::engine::{ClusterConfig, SparkContext};
+        use stark::algos::{Algorithm, StarkConfig};
+        use stark::api::StarkSession;
+        use stark::cost::Splits;
+        use stark::engine::ClusterConfig;
         use stark::util::table::{fmt_bytes, Table};
-        use std::sync::Arc;
         let n = 512;
         let b = 8;
         let a = DenseMatrix::random(n, n, 11);
         let bm = DenseMatrix::random(n, n, 12);
         let run = |map_side: bool| {
-            let ctx = SparkContext::new(ClusterConfig::new(2, 2));
-            let cfg = StarkConfig { map_side_combine: map_side, ..Default::default() };
-            stark_algo::multiply(&ctx, Arc::new(stark::runtime::NativeBackend::default()), &a, &bm, b, &cfg)
+            let session = StarkSession::builder()
+                .cluster(ClusterConfig::new(2, 2))
+                .stark_options(StarkConfig { map_side_combine: map_side, ..Default::default() })
+                .build()
+                .expect("native session");
+            session
+                .matrix(&a)
+                .multiply(&session.matrix(&bm))
+                .algorithm(Algorithm::Stark)
+                .splits(Splits::Fixed(b))
+                .collect()
+                .expect("shuffle-proof multiply")
         };
         let baseline = run(false);
         let folded = run(true);

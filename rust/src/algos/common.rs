@@ -4,12 +4,18 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::engine::{Block, Dist, JobCtx, JobMetrics, Side, SparkContext, Tag};
+use crate::error::StarkError;
 use crate::matrix::DenseMatrix;
 use crate::runtime::LeafBackend;
 
-/// Which distributed algorithm to run (CLI/bench dispatch).
+/// Which distributed algorithm to run. `Auto` defers the choice to the
+/// cost-model planner ([`crate::cost::Planner`]); the three concrete
+/// variants dispatch through [`MultiplyAlgorithm`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algorithm {
+    /// Planner-chosen: whichever concrete system the §IV cost model
+    /// predicts fastest for the workload.
+    Auto,
     /// The paper's distributed Strassen.
     Stark,
     /// Marlin block-splitting baseline (Gu et al. 2015).
@@ -19,7 +25,8 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
-    /// All systems, in the paper's comparison order.
+    /// All concrete systems, in the paper's comparison order (`Auto` is
+    /// a selector, not a system — it never appears here).
     pub const ALL: [Algorithm; 3] = [Algorithm::Mllib, Algorithm::Marlin, Algorithm::Stark];
 }
 
@@ -28,10 +35,11 @@ impl std::str::FromStr for Algorithm {
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(Algorithm::Auto),
             "stark" => Ok(Algorithm::Stark),
             "marlin" => Ok(Algorithm::Marlin),
             "mllib" => Ok(Algorithm::Mllib),
-            other => Err(format!("unknown algorithm {other:?} (stark|marlin|mllib)")),
+            other => Err(format!("unknown algorithm {other:?} (auto|stark|marlin|mllib)")),
         }
     }
 }
@@ -39,6 +47,7 @@ impl std::str::FromStr for Algorithm {
 impl std::fmt::Display for Algorithm {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
+            Algorithm::Auto => write!(f, "auto"),
             Algorithm::Stark => write!(f, "stark"),
             Algorithm::Marlin => write!(f, "marlin"),
             Algorithm::Mllib => write!(f, "mllib"),
@@ -158,17 +167,87 @@ pub fn arc_add(acc: Arc<DenseMatrix>, val: Arc<DenseMatrix>) -> Arc<DenseMatrix>
     Arc::new(m)
 }
 
-/// Split a square matrix into a `b × b` grid of root-tagged [`Block`]s and
-/// distribute them within `job`'s scope (the paper's pre-processing
-/// step: text file → `RDD<Block>`).
-pub fn distribute(job: &JobCtx, m: &DenseMatrix, side: Side, b: usize) -> Dist<Block> {
-    let blocks: Vec<Block> = m
-        .split_blocks(b)
-        .into_iter()
-        .map(|(r, c, data)| Block::new(r as u32, c as u32, Tag::root(side), Arc::new(data)))
-        .collect();
-    let parts = default_parts(b, job.config().total_cores());
-    job.parallelize(blocks, parts)
+/// A side-agnostic `b × b` block split of one square operand — the unit
+/// the session layer caches across jobs. Splitting copies the matrix
+/// payload once (`n²` doubles into per-block buffers); everything after
+/// it — tagging, partition placement, re-distribution into later jobs —
+/// only clones `Arc`s. Multiplying one `A` against many `B`s therefore
+/// pays the split exactly once per `(n, b)`.
+#[derive(Clone)]
+pub struct BlockSplits {
+    n: usize,
+    b: usize,
+    blocks: Arc<Vec<(u32, u32, Arc<DenseMatrix>)>>,
+}
+
+impl BlockSplits {
+    /// Split a square matrix into a `b × b` grid.
+    pub fn of(m: &DenseMatrix, b: usize) -> Result<Self, StarkError> {
+        if m.rows() != m.cols() {
+            return Err(StarkError::ShapeMismatch {
+                a: (m.rows(), m.cols()),
+                b: (m.rows(), m.cols()),
+                reason: "distributed operands must be square (pad first)".to_string(),
+            });
+        }
+        validate_splits(Algorithm::Auto, m.rows(), b)?;
+        let blocks: Vec<(u32, u32, Arc<DenseMatrix>)> = m
+            .split_blocks(b)
+            .into_iter()
+            .map(|(r, c, data)| (r as u32, c as u32, Arc::new(data)))
+            .collect();
+        Ok(Self { n: m.rows(), b, blocks: Arc::new(blocks) })
+    }
+
+    /// Padded matrix dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Splits per side (the paper's `b`).
+    pub fn b(&self) -> usize {
+        self.b
+    }
+
+    /// Edge length of one block.
+    pub fn block_size(&self) -> usize {
+        self.n / self.b
+    }
+
+    /// Root-tagged [`Block`]s for one multiply side (`Arc` clones only).
+    pub fn blocks(&self, side: Side) -> Vec<Block> {
+        self.blocks
+            .iter()
+            .map(|(r, c, data)| Block::new(*r, *c, Tag::root(side), data.clone()))
+            .collect()
+    }
+
+    /// Check two operand splits describe one compatible multiply.
+    pub fn check_pair(a: &BlockSplits, b: &BlockSplits) -> Result<(), StarkError> {
+        if a.n != b.n {
+            return Err(StarkError::ShapeMismatch {
+                a: (a.n, a.n),
+                b: (b.n, b.n),
+                reason: "operand splits have different padded dimensions".to_string(),
+            });
+        }
+        if a.b != b.b {
+            return Err(StarkError::invalid_splits(
+                Algorithm::Auto,
+                b.b,
+                b.n,
+                format!("operand splits disagree: A has b={}, B has b={}", a.b, b.b),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Distribute a pre-split operand within `job`'s scope (the paper's
+/// pre-processing step: text file → `RDD<Block>`).
+pub fn distribute(job: &JobCtx, splits: &BlockSplits, side: Side) -> Dist<Block> {
+    let parts = default_parts(splits.b(), job.config().total_cores());
+    job.parallelize(splits.blocks(side), parts)
 }
 
 /// Input-partition policy: one partition per block up to a small multiple
@@ -185,38 +264,112 @@ pub fn assemble(b: usize, block_size: usize, pairs: Vec<((u32, u32), DenseMatrix
     DenseMatrix::assemble_blocks(b, block_size, &blocks)
 }
 
-/// Run `algo` end-to-end on `(a, b_mat)` with `b × b` partitioning.
-pub fn run(
-    algo: Algorithm,
-    ctx: &SparkContext,
-    backend: Arc<dyn LeafBackend>,
-    a: &DenseMatrix,
-    b_mat: &DenseMatrix,
-    b: usize,
-    stark_cfg: &crate::algos::stark::StarkConfig,
-) -> MultiplyOutput {
-    match algo {
-        Algorithm::Stark => crate::algos::stark::multiply(ctx, backend, a, b_mat, b, stark_cfg),
-        Algorithm::Marlin => {
-            crate::algos::marlin::multiply(ctx, backend, a, b_mat, b, stark_cfg.isolate_multiply)
-        }
-        Algorithm::Mllib => {
-            crate::algos::mllib::multiply(ctx, backend, a, b_mat, b, stark_cfg.isolate_multiply)
-        }
+/// Options shared by the two baseline systems (the slice of the old
+/// `StarkConfig` they actually read — Stark's knobs no longer leak into
+/// Marlin/MLlib calls).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BaselineOptions {
+    /// Materialize leaf products in their own stage (Table VII
+    /// methodology). Adds one stage.
+    pub isolate_multiply: bool,
+}
+
+/// One distributed multiplication strategy. Implemented by
+/// [`crate::algos::stark::Stark`], [`crate::algos::marlin::Marlin`] and
+/// [`crate::algos::mllib::Mllib`], each carrying its own narrowed
+/// options; `Algorithm::Auto` is resolved by the planner *before* an
+/// implementation is constructed (see [`implementation`]).
+pub trait MultiplyAlgorithm: Send + Sync {
+    /// Which [`Algorithm`] this implements (never `Auto`).
+    fn algorithm(&self) -> Algorithm;
+
+    /// Validate a `(n, b)` workload shape for this strategy.
+    fn validate(&self, n: usize, b: usize) -> Result<(), StarkError> {
+        validate_splits(self.algorithm(), n, b)
+    }
+
+    /// Multiply two pre-split operands end to end.
+    fn multiply_splits(
+        &self,
+        ctx: &SparkContext,
+        backend: Arc<dyn LeafBackend>,
+        a: &BlockSplits,
+        b: &BlockSplits,
+    ) -> Result<MultiplyOutput, StarkError>;
+
+    /// Convenience: validate, split and multiply two square matrices.
+    fn multiply(
+        &self,
+        ctx: &SparkContext,
+        backend: Arc<dyn LeafBackend>,
+        a: &DenseMatrix,
+        b_mat: &DenseMatrix,
+        b: usize,
+    ) -> Result<MultiplyOutput, StarkError> {
+        validate_inputs(self.algorithm(), a, b_mat, b)?;
+        self.validate(a.rows(), b)?;
+        let sa = BlockSplits::of(a, b)?;
+        let sb = BlockSplits::of(b_mat, b)?;
+        self.multiply_splits(ctx, backend, &sa, &sb)
     }
 }
 
+/// Construct the [`MultiplyAlgorithm`] for a *concrete* `algo`,
+/// narrowing the session-level Stark config down to what each system
+/// reads. `Algorithm::Auto` must be resolved by the planner first.
+pub fn implementation(
+    algo: Algorithm,
+    stark_cfg: &crate::algos::stark::StarkConfig,
+) -> Result<Box<dyn MultiplyAlgorithm>, StarkError> {
+    let baseline = BaselineOptions { isolate_multiply: stark_cfg.isolate_multiply };
+    match algo {
+        Algorithm::Stark => Ok(Box::new(crate::algos::stark::Stark::new(stark_cfg.clone()))),
+        Algorithm::Marlin => Ok(Box::new(crate::algos::marlin::Marlin::new(baseline))),
+        Algorithm::Mllib => Ok(Box::new(crate::algos::mllib::Mllib::new(baseline))),
+        Algorithm::Auto => Err(StarkError::AutoUnresolved),
+    }
+}
+
+/// Validate a split count against a matrix dimension. `algorithm` is
+/// carried into the error (`Algorithm::Auto` when no specific system
+/// rejected the split — the Display then omits it).
+pub fn validate_splits(algorithm: Algorithm, n: usize, b: usize) -> Result<(), StarkError> {
+    if b < 1 {
+        return Err(StarkError::invalid_splits(
+            algorithm,
+            b,
+            n,
+            "need at least one split per side",
+        ));
+    }
+    if n % b != 0 {
+        return Err(StarkError::invalid_splits(
+            algorithm,
+            b,
+            n,
+            format!("split count b={b} must divide n={n}"),
+        ));
+    }
+    Ok(())
+}
+
 /// Validate the operands of a `b × b` distributed multiply.
-pub fn validate_inputs(a: &DenseMatrix, b_mat: &DenseMatrix, b: usize) {
-    assert_eq!(a.rows(), a.cols(), "A must be square");
-    assert_eq!(b_mat.rows(), b_mat.cols(), "B must be square");
-    assert_eq!(a.rows(), b_mat.rows(), "A and B dimensions must match");
-    assert!(b >= 1, "need at least one partition");
-    assert!(
-        a.rows() % b == 0,
-        "partition count b={b} must divide n={}",
-        a.rows()
-    );
+pub fn validate_inputs(
+    algorithm: Algorithm,
+    a: &DenseMatrix,
+    b_mat: &DenseMatrix,
+    b: usize,
+) -> Result<(), StarkError> {
+    if a.rows() != a.cols() || b_mat.rows() != b_mat.cols() || a.rows() != b_mat.rows() {
+        return Err(StarkError::ShapeMismatch {
+            a: (a.rows(), a.cols()),
+            b: (b_mat.rows(), b_mat.cols()),
+            reason: "direct distributed multiply needs equal square operands \
+                     (the session API pads arbitrary shapes)"
+                .to_string(),
+        });
+    }
+    validate_splits(algorithm, a.rows(), b)
 }
 
 #[cfg(test)]
@@ -230,7 +383,7 @@ mod tests {
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
         let job = ctx.run_job("distribute");
         let m = DenseMatrix::random(16, 16, 1);
-        let d = distribute(&job, &m, Side::A, 4);
+        let d = distribute(&job, &BlockSplits::of(&m, 4).unwrap(), Side::A);
         let blocks = d.collect("c");
         assert_eq!(blocks.len(), 16);
         assert!(blocks.iter().all(|b| b.tag == Tag::root(Side::A)));
@@ -242,7 +395,7 @@ mod tests {
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
         let job = ctx.run_job("roundtrip");
         let m = DenseMatrix::random(16, 16, 2);
-        let d = distribute(&job, &m, Side::B, 2);
+        let d = distribute(&job, &BlockSplits::of(&m, 2).unwrap(), Side::B);
         let pairs: Vec<((u32, u32), DenseMatrix)> = d
             .collect("c")
             .into_iter()
@@ -250,6 +403,26 @@ mod tests {
             .collect();
         let back = assemble(2, 8, pairs);
         assert_eq!(back, m);
+    }
+
+    #[test]
+    fn block_splits_share_payload_arcs() {
+        // Re-tagging a cached split clones Arcs, never block payloads.
+        let m = DenseMatrix::random(8, 8, 3);
+        let s = BlockSplits::of(&m, 2).unwrap();
+        let as_a = s.blocks(Side::A);
+        let as_b = s.blocks(Side::B);
+        assert_eq!(as_a.len(), 4);
+        for (x, y) in as_a.iter().zip(&as_b) {
+            assert!(Arc::ptr_eq(&x.data, &y.data));
+            assert_eq!(x.tag, Tag::root(Side::A));
+            assert_eq!(y.tag, Tag::root(Side::B));
+        }
+        assert_eq!((s.n(), s.b(), s.block_size()), (8, 2, 4));
+        // Pair checks catch mismatched splits.
+        let other = BlockSplits::of(&DenseMatrix::random(8, 8, 4), 4).unwrap();
+        assert!(BlockSplits::check_pair(&s, &s).is_ok());
+        assert!(BlockSplits::check_pair(&s, &other).is_err());
     }
 
     #[test]
@@ -273,10 +446,31 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "must divide")]
-    fn validate_rejects_bad_b() {
+    fn validate_returns_typed_errors() {
         let m = DenseMatrix::zeros(6, 6);
-        validate_inputs(&m, &m, 4);
+        match validate_inputs(Algorithm::Mllib, &m, &m, 4) {
+            Err(StarkError::InvalidSplits { algorithm: Algorithm::Mllib, b: 4, n: 6, .. }) => {}
+            other => panic!("expected InvalidSplits, got {other:?}"),
+        }
+        assert!(matches!(
+            validate_inputs(Algorithm::Marlin, &m, &m, 0),
+            Err(StarkError::InvalidSplits { algorithm: Algorithm::Marlin, .. })
+        ));
+        let rect = DenseMatrix::zeros(6, 4);
+        assert!(matches!(
+            validate_inputs(Algorithm::Stark, &rect, &m, 2),
+            Err(StarkError::ShapeMismatch { .. })
+        ));
+        assert!(validate_inputs(Algorithm::Mllib, &m, &m, 3).is_ok());
+        // Auto never reaches the dispatcher unresolved.
+        assert!(matches!(
+            implementation(Algorithm::Auto, &crate::algos::StarkConfig::default()),
+            Err(StarkError::AutoUnresolved)
+        ));
+        for algo in Algorithm::ALL {
+            let imp = implementation(algo, &crate::algos::StarkConfig::default()).unwrap();
+            assert_eq!(imp.algorithm(), algo);
+        }
     }
 
     #[test]

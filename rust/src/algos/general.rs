@@ -10,9 +10,10 @@
 
 use std::sync::Arc;
 
-use crate::algos::common::{run, Algorithm, MultiplyOutput};
+use crate::algos::common::{implementation, Algorithm, MultiplyOutput};
 use crate::algos::stark::StarkConfig;
 use crate::engine::SparkContext;
+use crate::error::StarkError;
 use crate::matrix::DenseMatrix;
 use crate::runtime::LeafBackend;
 
@@ -33,7 +34,10 @@ pub fn padded_size(m: usize, k: usize, n: usize, b: usize) -> usize {
 }
 
 /// Multiply matrices of arbitrary (even rectangular) shape with any of
-/// the distributed algorithms, via pad-and-crop.
+/// the *concrete* distributed algorithms, via pad-and-crop. This is the
+/// one-shot functional path; the session API ([`crate::api`]) adds
+/// handle caching and planner-driven `Algorithm::Auto` on top of the
+/// same trait dispatch.
 pub fn multiply_general(
     algo: Algorithm,
     ctx: &SparkContext,
@@ -42,16 +46,26 @@ pub fn multiply_general(
     b_mat: &DenseMatrix,
     b: usize,
     cfg: &StarkConfig,
-) -> MultiplyOutput {
-    assert_eq!(a.cols(), b_mat.rows(), "contraction mismatch");
-    assert!(b >= 1 && b.is_power_of_two(), "b must be a power of two");
+) -> Result<MultiplyOutput, StarkError> {
+    if a.cols() != b_mat.rows() {
+        return Err(StarkError::contraction((a.rows(), a.cols()), (b_mat.rows(), b_mat.cols())));
+    }
+    if b < 1 || !b.is_power_of_two() {
+        return Err(StarkError::invalid_splits(
+            algo,
+            b,
+            0,
+            "pad-and-crop multiplies need a power-of-two split count",
+        ));
+    }
+    let imp = implementation(algo, cfg)?;
     let (m, n) = (a.rows(), b_mat.cols());
     let s = padded_size(a.rows(), a.cols(), b_mat.cols(), b);
     let pa = pad_square(a, s);
     let pb = pad_square(b_mat, s);
-    let mut out = run(algo, ctx, backend, &pa, &pb, b, cfg);
+    let mut out = imp.multiply(ctx, backend, &pa, &pb, b)?;
     out.c = out.c.submatrix(0, 0, m, n);
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -74,7 +88,8 @@ mod tests {
             &bm,
             b,
             &StarkConfig::default(),
-        );
+        )
+        .unwrap();
         assert_eq!((out.c.rows(), out.c.cols()), (m, n));
         assert!(
             want.allclose(&out.c, 1e-9),
@@ -121,19 +136,34 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "contraction mismatch")]
-    fn rejects_mismatched_shapes() {
+    fn rejects_mismatched_shapes_and_auto() {
         let a = DenseMatrix::zeros(3, 4);
         let b = DenseMatrix::zeros(5, 3);
         let ctx = SparkContext::new(ClusterConfig::new(1, 1));
-        multiply_general(
+        let backend: Arc<NativeBackend> = Arc::new(NativeBackend::default());
+        let err = multiply_general(
             Algorithm::Stark,
             &ctx,
-            Arc::new(NativeBackend::default()),
+            backend.clone(),
             &a,
             &b,
             2,
             &StarkConfig::default(),
-        );
+        )
+        .unwrap_err();
+        assert!(matches!(err, crate::error::StarkError::ShapeMismatch { .. }), "{err}");
+        // Auto must be planner-resolved before this functional path.
+        let sq = DenseMatrix::zeros(4, 4);
+        let err = multiply_general(
+            Algorithm::Auto,
+            &ctx,
+            backend,
+            &sq,
+            &sq,
+            2,
+            &StarkConfig::default(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, crate::error::StarkError::AutoUnresolved), "{err}");
     }
 }

@@ -16,9 +16,11 @@
 use std::sync::Arc;
 
 use crate::algos::common::{
-    arc_add, assemble, default_parts, distribute, validate_inputs, MultiplyOutput, TimingBackend,
+    arc_add, assemble, default_parts, distribute, validate_inputs, Algorithm, BaselineOptions,
+    BlockSplits, MultiplyAlgorithm, MultiplyOutput, TimingBackend,
 };
 use crate::engine::{Side, SparkContext};
+use crate::error::StarkError;
 use crate::matrix::DenseMatrix;
 use crate::runtime::LeafBackend;
 
@@ -30,15 +32,27 @@ pub fn multiply(
     a: &DenseMatrix,
     b_mat: &DenseMatrix,
     b: usize,
-    isolate_multiply: bool,
-) -> MultiplyOutput {
-    validate_inputs(a, b_mat, b);
+    opts: &BaselineOptions,
+) -> Result<MultiplyOutput, StarkError> {
+    validate_inputs(Algorithm::Marlin, a, b_mat, b)?;
+    multiply_splits(ctx, backend, &BlockSplits::of(a, b)?, &BlockSplits::of(b_mat, b)?, opts)
+}
+
+/// Multiply two pre-split operands with Marlin (the cached-handle path).
+pub fn multiply_splits(
+    ctx: &SparkContext,
+    backend: Arc<dyn LeafBackend>,
+    sa: &BlockSplits,
+    sb: &BlockSplits,
+    opts: &BaselineOptions,
+) -> Result<MultiplyOutput, StarkError> {
+    BlockSplits::check_pair(sa, sb)?;
+    let (n, b) = (sa.n(), sa.b());
     let timing = TimingBackend::new(backend);
-    let n = a.rows();
     let job = ctx.run_job(&format!("marlin n={n} b={b}"));
 
-    let da = distribute(&job, a, Side::A, b);
-    let db = distribute(&job, b_mat, Side::B, b);
+    let da = distribute(&job, sa, Side::A);
+    let db = distribute(&job, sb, Side::B);
     let bb = b as u32;
 
     // Stage 1: replicate A blocks across product columns, B blocks across
@@ -61,7 +75,7 @@ pub fn multiply(
     // stay O(1) instead of copying whole blocks (§Perf change 4).
     let products = joined
         .map(move |((i, j, _k), (ablk, bblk))| ((i, j), Arc::new(be.multiply(&ablk, &bblk))));
-    let products = if isolate_multiply {
+    let products = if opts.isolate_multiply {
         products.cache("stage3/mapPartition")
     } else {
         products
@@ -81,7 +95,34 @@ pub fn multiply(
         .collect();
     let c = assemble(b, n / b, pairs);
     let job = job.finish();
-    MultiplyOutput { c, job, leaf_ms: timing.leaf_ms(), leaf_calls: timing.calls() }
+    Ok(MultiplyOutput { c, job, leaf_ms: timing.leaf_ms(), leaf_calls: timing.calls() })
+}
+
+/// [`MultiplyAlgorithm`] implementation of the Marlin baseline.
+pub struct Marlin {
+    opts: BaselineOptions,
+}
+
+impl Marlin {
+    pub fn new(opts: BaselineOptions) -> Self {
+        Self { opts }
+    }
+}
+
+impl MultiplyAlgorithm for Marlin {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Marlin
+    }
+
+    fn multiply_splits(
+        &self,
+        ctx: &SparkContext,
+        backend: Arc<dyn LeafBackend>,
+        a: &BlockSplits,
+        b: &BlockSplits,
+    ) -> Result<MultiplyOutput, StarkError> {
+        multiply_splits(ctx, backend, a, b, &self.opts)
+    }
 }
 
 #[cfg(test)]
@@ -96,7 +137,9 @@ mod tests {
         let a = DenseMatrix::random(n, n, 300 + n as u64);
         let bm = DenseMatrix::random(n, n, 400 + n as u64);
         let want = matmul_naive(&a, &bm);
-        let out = multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, false);
+        let out =
+            multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &BaselineOptions::default())
+                .unwrap();
         (out, want)
     }
 

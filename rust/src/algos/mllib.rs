@@ -16,9 +16,11 @@
 use std::sync::Arc;
 
 use crate::algos::common::{
-    arc_add, assemble, default_parts, distribute, validate_inputs, MultiplyOutput, TimingBackend,
+    arc_add, assemble, default_parts, distribute, validate_inputs, Algorithm, BaselineOptions,
+    BlockSplits, MultiplyAlgorithm, MultiplyOutput, TimingBackend,
 };
 use crate::engine::{GridPartitioner, Side, SparkContext, StageMetrics};
+use crate::error::StarkError;
 use crate::matrix::DenseMatrix;
 use crate::runtime::LeafBackend;
 
@@ -30,11 +32,23 @@ pub fn multiply(
     a: &DenseMatrix,
     b_mat: &DenseMatrix,
     b: usize,
-    isolate_multiply: bool,
-) -> MultiplyOutput {
-    validate_inputs(a, b_mat, b);
+    opts: &BaselineOptions,
+) -> Result<MultiplyOutput, StarkError> {
+    validate_inputs(Algorithm::Mllib, a, b_mat, b)?;
+    multiply_splits(ctx, backend, &BlockSplits::of(a, b)?, &BlockSplits::of(b_mat, b)?, opts)
+}
+
+/// Multiply two pre-split operands with MLLib (the cached-handle path).
+pub fn multiply_splits(
+    ctx: &SparkContext,
+    backend: Arc<dyn LeafBackend>,
+    sa: &BlockSplits,
+    sb: &BlockSplits,
+    opts: &BaselineOptions,
+) -> Result<MultiplyOutput, StarkError> {
+    BlockSplits::check_pair(sa, sb)?;
+    let (n, b) = (sa.n(), sa.b());
     let timing = TimingBackend::new(backend);
-    let n = a.rows();
     let job = ctx.run_job(&format!("mllib n={n} b={b}"));
 
     // GridPartitioner simulation (driver side): 2·b² partition ids cross
@@ -56,8 +70,8 @@ pub fn multiply(
         retries: 0,
     });
 
-    let da = distribute(&job, a, Side::A, b);
-    let db = distribute(&job, b_mat, Side::B, b);
+    let da = distribute(&job, sa, Side::A);
+    let db = distribute(&job, sb, Side::B);
     let bb = b as u32;
 
     // Stage 1: replicate towards destination blocks. The payload keeps
@@ -89,7 +103,8 @@ pub fn multiply(
         }
         out
     });
-    let products = if isolate_multiply { products.cache("stage3/flatMap") } else { products };
+    let products =
+        if opts.isolate_multiply { products.cache("stage3/flatMap") } else { products };
 
     // Stage 4: sum partials. (In real MLLib the grid partitioner makes
     // this shuffle-free; the fold here routes by the same key so the
@@ -107,7 +122,34 @@ pub fn multiply(
         .collect();
     let c = assemble(b, n / b, pairs);
     let job = job.finish();
-    MultiplyOutput { c, job, leaf_ms: timing.leaf_ms(), leaf_calls: timing.calls() }
+    Ok(MultiplyOutput { c, job, leaf_ms: timing.leaf_ms(), leaf_calls: timing.calls() })
+}
+
+/// [`MultiplyAlgorithm`] implementation of the MLLib baseline.
+pub struct Mllib {
+    opts: BaselineOptions,
+}
+
+impl Mllib {
+    pub fn new(opts: BaselineOptions) -> Self {
+        Self { opts }
+    }
+}
+
+impl MultiplyAlgorithm for Mllib {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Mllib
+    }
+
+    fn multiply_splits(
+        &self,
+        ctx: &SparkContext,
+        backend: Arc<dyn LeafBackend>,
+        a: &BlockSplits,
+        b: &BlockSplits,
+    ) -> Result<MultiplyOutput, StarkError> {
+        multiply_splits(ctx, backend, a, b, &self.opts)
+    }
 }
 
 #[cfg(test)]
@@ -122,7 +164,9 @@ mod tests {
         let a = DenseMatrix::random(n, n, 500 + n as u64);
         let bm = DenseMatrix::random(n, n, 600 + n as u64);
         let want = matmul_naive(&a, &bm);
-        let out = multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, false);
+        let out =
+            multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &BaselineOptions::default())
+                .unwrap();
         (out, want)
     }
 

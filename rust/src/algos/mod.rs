@@ -4,9 +4,11 @@
 //!   Strassen (Algorithms 2–5).
 //! - [`marlin`] — the Marlin baseline (Gu et al.), paper Fig. 6 plan.
 //! - [`mllib`] — the MLLib `BlockMatrix` baseline, paper Fig. 5 plan.
-//! - [`common`] — shared plumbing: matrix ⇄ `Dist<Block>` conversion,
-//!   result assembly, leaf-time instrumentation, the [`Algorithm`]
-//!   dispatcher used by the CLI/benches.
+//! - [`common`] — shared plumbing: cached [`BlockSplits`] ⇄
+//!   `Dist<Block>` conversion, result assembly, leaf-time
+//!   instrumentation, and the [`MultiplyAlgorithm`] trait the three
+//!   systems implement (dispatched by the session API / planner —
+//!   there is no positional enum dispatcher anymore).
 
 pub mod common;
 pub mod general;
@@ -14,6 +16,9 @@ pub mod marlin;
 pub mod mllib;
 pub mod stark;
 
-pub use common::{Algorithm, MultiplyOutput, TimingBackend};
+pub use common::{
+    implementation, Algorithm, BaselineOptions, BlockSplits, MultiplyAlgorithm, MultiplyOutput,
+    TimingBackend,
+};
 pub use general::multiply_general;
 pub use stark::StarkConfig;

@@ -41,9 +41,10 @@ use std::sync::Arc;
 
 use crate::algos::common::{
     assemble, default_parts, distribute, signed_finalize, signed_merge, validate_inputs,
-    MultiplyOutput, SignedBlock, TimingBackend,
+    Algorithm, BlockSplits, MultiplyAlgorithm, MultiplyOutput, SignedBlock, TimingBackend,
 };
 use crate::engine::{det_partition, Block, Dist, JobCtx, Partitioner, Side, SparkContext, Tag};
+use crate::error::StarkError;
 use crate::matrix::DenseMatrix;
 use crate::runtime::LeafBackend;
 
@@ -405,18 +406,15 @@ fn combine(
 /// cores (b = 2, or small b on big clusters): class-level placement
 /// would throttle the first stage's parallelism below the core count
 /// for a shuffle saving that is tiny at that scale.
-fn distribute_aligned(job: &JobCtx, m: &DenseMatrix, side: Side, b: usize) -> Dist<Block> {
+fn distribute_aligned(job: &JobCtx, splits: &BlockSplits, side: Side) -> Dist<Block> {
     let cores = job.config().total_cores();
+    let b = splits.b();
     let classes = if b >= 2 { (b / 2) * (b / 2) } else { 0 };
     if classes < cores.max(1) {
-        return distribute(job, m, side, b);
+        return distribute(job, splits, side);
     }
     let half = (b / 2) as u32;
-    let mut blocks: Vec<Block> = m
-        .split_blocks(b)
-        .into_iter()
-        .map(|(r, c, data)| Block::new(r as u32, c as u32, Tag::root(side), Arc::new(data)))
-        .collect();
+    let mut blocks: Vec<Block> = splits.blocks(side);
     blocks.sort_by_key(|blk| (blk.row % half, blk.col % half, blk.row / half, blk.col / half));
     let parts = default_parts(b, cores).min(classes).max(1);
     // Chunk class-by-class (each class is the 4 consecutive quadrant
@@ -429,10 +427,24 @@ fn distribute_aligned(job: &JobCtx, m: &DenseMatrix, side: Side, b: usize) -> Di
     job.from_partitions(chunks)
 }
 
+/// Stark's `b` validity: a power of two dividing `n` (the paper's
+/// setting `n = 2^p`, `b = 2^{p−q}`; `n` itself only needs `b | n`).
+fn validate_b(n: usize, b: usize) -> Result<(), StarkError> {
+    crate::algos::common::validate_splits(Algorithm::Stark, n, b)?;
+    if !b.is_power_of_two() {
+        return Err(StarkError::invalid_splits(
+            Algorithm::Stark,
+            b,
+            n,
+            "stark needs a power-of-two split count",
+        ));
+    }
+    Ok(())
+}
+
 /// Multiply `a @ b_mat` with Stark over a `b × b` block grid.
 ///
-/// `b` must be a power of two dividing `n` (the paper's setting:
-/// `n = 2^p`, `b = 2^{p−q}`).
+/// `b` must be a power of two dividing `n`.
 pub fn multiply(
     ctx: &SparkContext,
     backend: Arc<dyn LeafBackend>,
@@ -440,17 +452,31 @@ pub fn multiply(
     b_mat: &DenseMatrix,
     b: usize,
     cfg: &StarkConfig,
-) -> MultiplyOutput {
-    validate_inputs(a, b_mat, b);
-    assert!(b.is_power_of_two(), "Stark needs a power-of-two partition count, got {b}");
+) -> Result<MultiplyOutput, StarkError> {
+    validate_inputs(Algorithm::Stark, a, b_mat, b)?;
+    validate_b(a.rows(), b)?;
+    multiply_splits(ctx, backend, &BlockSplits::of(a, b)?, &BlockSplits::of(b_mat, b)?, cfg)
+}
+
+/// Multiply two pre-split operands with Stark (the cached-handle path:
+/// the session layer reuses [`BlockSplits`] across jobs).
+pub fn multiply_splits(
+    ctx: &SparkContext,
+    backend: Arc<dyn LeafBackend>,
+    sa: &BlockSplits,
+    sb: &BlockSplits,
+    cfg: &StarkConfig,
+) -> Result<MultiplyOutput, StarkError> {
+    BlockSplits::check_pair(sa, sb)?;
+    let (n, b) = (sa.n(), sa.b());
+    validate_b(n, b)?;
     let timing = TimingBackend::new(backend);
-    let n = a.rows();
     let job = ctx.run_job(&format!("stark n={n} b={b}"));
 
     let (da, db) = if cfg.map_side_combine {
-        (distribute_aligned(&job, a, Side::A, b), distribute_aligned(&job, b_mat, Side::B, b))
+        (distribute_aligned(&job, sa, Side::A), distribute_aligned(&job, sb, Side::B))
     } else {
-        (distribute(&job, a, Side::A, b), distribute(&job, b_mat, Side::B, b))
+        (distribute(&job, sa, Side::A), distribute(&job, sb, Side::B))
     };
     let result = dist_strassen(&timing, da.union(&db), b as u32, 0, cfg);
 
@@ -464,7 +490,39 @@ pub fn multiply(
         .collect();
     let c = assemble(b, n / b, pairs);
     let job = job.finish();
-    MultiplyOutput { c, job, leaf_ms: timing.leaf_ms(), leaf_calls: timing.calls() }
+    Ok(MultiplyOutput { c, job, leaf_ms: timing.leaf_ms(), leaf_calls: timing.calls() })
+}
+
+/// [`MultiplyAlgorithm`] implementation: the paper's system with its
+/// full tuning surface ([`StarkConfig`]).
+pub struct Stark {
+    opts: StarkConfig,
+}
+
+impl Stark {
+    pub fn new(opts: StarkConfig) -> Self {
+        Self { opts }
+    }
+}
+
+impl MultiplyAlgorithm for Stark {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Stark
+    }
+
+    fn validate(&self, n: usize, b: usize) -> Result<(), StarkError> {
+        validate_b(n, b)
+    }
+
+    fn multiply_splits(
+        &self,
+        ctx: &SparkContext,
+        backend: Arc<dyn LeafBackend>,
+        a: &BlockSplits,
+        b: &BlockSplits,
+    ) -> Result<MultiplyOutput, StarkError> {
+        multiply_splits(ctx, backend, a, b, &self.opts)
+    }
 }
 
 /// `Stage` count predicted by the paper's eq. (25): `2(p−q) + 2`.
@@ -484,7 +542,7 @@ mod tests {
         let a = DenseMatrix::random(n, n, 100 + n as u64);
         let bm = DenseMatrix::random(n, n, 200 + n as u64);
         let want = matmul_naive(&a, &bm);
-        let out = multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, cfg);
+        let out = multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, cfg).unwrap();
         (out, want)
     }
 
@@ -527,7 +585,8 @@ mod tests {
             let ctx = SparkContext::new(ClusterConfig::new(2, 2));
             let a = DenseMatrix::random(16, 16, 1);
             let bm = DenseMatrix::random(16, 16, 2);
-            let out = multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &StarkConfig::default());
+            let out = multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &StarkConfig::default())
+                .unwrap();
             assert_eq!(
                 out.job.stages.len(),
                 predicted_stages(b),
@@ -552,24 +611,30 @@ mod tests {
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
         let a = DenseMatrix::random(8, 8, 3);
         let bm = DenseMatrix::random(8, 8, 4);
-        let out = multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, 2, &cfg);
+        let out = multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, 2, &cfg).unwrap();
         assert_eq!(out.job.stages.len(), predicted_stages(2) + 1);
         assert!(out.job.stages.iter().any(|s| s.label == "multiply/compute"));
     }
 
     #[test]
-    #[should_panic(expected = "power-of-two")]
     fn rejects_non_power_of_two_b() {
         let ctx = SparkContext::new(ClusterConfig::new(1, 1));
         let a = DenseMatrix::random(6, 6, 1);
-        multiply(&ctx, Arc::new(NativeBackend::default()), &a, &a, 3, &StarkConfig::default());
+        let err = multiply(&ctx, Arc::new(NativeBackend::default()), &a, &a, 3, &StarkConfig::default())
+            .unwrap_err();
+        match err {
+            StarkError::InvalidSplits { algorithm: Algorithm::Stark, b: 3, .. } => {}
+            other => panic!("expected InvalidSplits, got {other:?}"),
+        }
     }
 
     #[test]
     fn identity_times_identity() {
         let ctx = SparkContext::new(ClusterConfig::new(2, 1));
         let i = DenseMatrix::identity(8);
-        let out = multiply(&ctx, Arc::new(NativeBackend::default()), &i, &i, 4, &StarkConfig::default());
+        let out =
+            multiply(&ctx, Arc::new(NativeBackend::default()), &i, &i, 4, &StarkConfig::default())
+                .unwrap();
         assert!(out.c.allclose(&i, 1e-12));
     }
 
@@ -582,7 +647,7 @@ mod tests {
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
         let job = ctx.run_job("repl");
         let a = DenseMatrix::random(8, 8, 5);
-        let d = distribute(&job, &a, Side::A, 2);
+        let d = distribute(&job, &BlockSplits::of(&a, 2).unwrap(), Side::A);
         let divided = div_n_rep(&d, 2, 0, 4, NextGrouping::Subproblem, true);
         let blocks = divided.collect("c");
         // 7 sub-problems × 1 block each (1×1 grids after divide).
@@ -601,7 +666,7 @@ mod tests {
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
         let job = ctx.run_job("aligned");
         let a = DenseMatrix::random(8, 8, 6);
-        let d = distribute_aligned(&job, &a, Side::A, 4);
+        let d = distribute_aligned(&job, &BlockSplits::of(&a, 4).unwrap(), Side::A);
         // Grid 4 divides towards grid 2 (no fused leaf): quadrant mode.
         let divided =
             div_n_rep(&d, 4, 0, 8, NextGrouping::Quadrant { half: 1 }, true);
@@ -624,7 +689,7 @@ mod tests {
         let run = |map_side: bool| {
             let ctx = SparkContext::new(ClusterConfig::new(2, 2));
             let cfg = StarkConfig { map_side_combine: map_side, ..Default::default() };
-            multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &cfg)
+            multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &cfg).unwrap()
         };
         let baseline = run(false);
         let folded = run(true);
@@ -668,7 +733,7 @@ mod tests {
             let cfg = StarkConfig { fused_leaf: fused, ..Default::default() };
             let run = |k: Kernel| {
                 let ctx = SparkContext::new(ClusterConfig::new(2, 2));
-                multiply(&ctx, Arc::new(NativeBackend::new(k)), &a, &bm, b, &cfg).c
+                multiply(&ctx, Arc::new(NativeBackend::new(k)), &a, &bm, b, &cfg).unwrap().c
             };
             let naive = run(Kernel::Naive);
             for k in [Kernel::Blocked, Kernel::Packed] {

@@ -1,0 +1,522 @@
+//! The public API: sessions, cached distributed-matrix handles, and
+//! planner-driven multiplication (DESIGN.md S17).
+//!
+//! This module is the one way into the system. Everything the seed
+//! threaded as positional arguments — context, backend, algorithm,
+//! split count, Stark knobs — lives on a [`StarkSession`]; workloads are
+//! [`DistMatrix`] handles whose block distribution is computed lazily
+//! and **cached across jobs**; one multiply is a [`MultiplyBuilder`]
+//! that resolves `Algorithm::Auto` / [`Splits::Auto`] through the §IV
+//! cost-model [`Planner`] before dispatching the chosen
+//! [`crate::algos::MultiplyAlgorithm`].
+//!
+//! ```no_run
+//! use stark::api::StarkSession;
+//! use stark::algos::Algorithm;
+//! use stark::cost::Splits;
+//! use stark::matrix::DenseMatrix;
+//!
+//! let session = StarkSession::builder().build()?;
+//! let a = session.matrix(&DenseMatrix::random(300, 300, 1)); // padded lazily
+//! let b = session.matrix(&DenseMatrix::random(300, 300, 2));
+//! // Fully automatic: the planner picks algorithm and split count.
+//! let report = a.multiply(&b).collect()?;
+//! println!("ran {} with b={}", report.plan.algorithm, report.plan.b);
+//! // Pin either choice when you know better:
+//! let report = a.multiply(&b).algorithm(Algorithm::Stark).splits(Splits::Fixed(4)).collect()?;
+//! # Ok::<(), stark::StarkError>(())
+//! ```
+//!
+//! **Handle caching.** A handle holds its payload in an `Arc`
+//! (`matrix(&m)` clones the dense data once into the handle;
+//! [`StarkSession::matrix_arc`] is zero-copy) and *distributes* lazily:
+//! the block split — the padded `n²` copy into per-block buffers — is
+//! computed by the first multiply that needs it and cached on the
+//! handle per `(padded n, b)`. Multiplying one `A` against many `B`s —
+//! or the same pair repeatedly — distributes `A`'s blocks exactly once
+//! ([`DistMatrix::splits_computed`] observes this).
+//!
+//! **Arbitrary shapes.** Operands may be rectangular and any size: the
+//! builder zero-pads both to the planner's padded dimension
+//! ([`Splits::padded_dim`]) and slices the true `m × n` product back out
+//! on `collect()`. Genuinely incompatible operands (contraction
+//! mismatch) return [`StarkError::ShapeMismatch`] instead of panicking.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::algos::{implementation, Algorithm, BlockSplits, StarkConfig};
+use crate::config::{build_backend, BackendKind, RunConfig};
+use crate::cost::{Calibration, Plan, Planner, Splits};
+use crate::engine::{ClusterConfig, JobMetrics, SparkContext};
+use crate::error::StarkError;
+use crate::matrix::DenseMatrix;
+use crate::runtime::LeafBackend;
+
+/// Builder for [`StarkSession`]: cluster shape, leaf backend, Stark
+/// tuning, and planner calibration.
+pub struct SessionBuilder {
+    cluster: ClusterConfig,
+    backend: Option<Arc<dyn LeafBackend>>,
+    backend_kind: BackendKind,
+    stark: StarkConfig,
+    calibration: Calibration,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        Self {
+            cluster: ClusterConfig::new(2, 2),
+            backend: None,
+            backend_kind: BackendKind::Packed,
+            stark: StarkConfig::default(),
+            calibration: Calibration::DEFAULT,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Seed a builder from a [`RunConfig`] (CLI / experiment harness
+    /// path): cluster shape, backend kind and Stark knobs carry over;
+    /// `algo`/`splits`/workload fields belong to individual multiplies.
+    pub fn from_run_config(cfg: &RunConfig) -> Self {
+        Self {
+            cluster: cfg.cluster_config(),
+            backend: None,
+            backend_kind: cfg.backend,
+            stark: cfg.stark_config(),
+            calibration: Calibration::DEFAULT,
+        }
+    }
+
+    /// Simulated cluster configuration (executors × cores, network
+    /// model, scheduler policy).
+    pub fn cluster(mut self, cluster: ClusterConfig) -> Self {
+        self.cluster = cluster;
+        self
+    }
+
+    /// Use an already-constructed leaf backend (takes precedence over
+    /// [`SessionBuilder::backend_kind`]; the experiment harness shares
+    /// one XLA service across many sessions this way).
+    pub fn backend(mut self, backend: Arc<dyn LeafBackend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Which leaf backend to construct at `build()`.
+    pub fn backend_kind(mut self, kind: BackendKind) -> Self {
+        self.backend_kind = kind;
+        self
+    }
+
+    /// Stark-specific tuning (fused leaf, map-side combine, …). The
+    /// baselines receive only the narrowed slice they read.
+    pub fn stark_options(mut self, stark: StarkConfig) -> Self {
+        self.stark = stark;
+        self
+    }
+
+    /// Planner calibration `(α, β)` — load a fitted one with
+    /// [`Calibration::load`], or keep the documented defaults.
+    pub fn calibration(mut self, calibration: Calibration) -> Self {
+        self.calibration = calibration;
+        self
+    }
+
+    pub fn build(self) -> Result<StarkSession, StarkError> {
+        let cores = self.cluster.total_cores();
+        let backend = match self.backend {
+            Some(be) => be,
+            None => build_backend(self.backend_kind, cores)
+                .map_err(|e| StarkError::Backend(format!("{e:#}")))?,
+        };
+        Ok(StarkSession {
+            inner: Arc::new(SessionInner {
+                ctx: SparkContext::new(self.cluster),
+                backend,
+                stark: self.stark,
+                planner: Planner::with_calibration(cores, self.calibration),
+            }),
+        })
+    }
+}
+
+struct SessionInner {
+    ctx: SparkContext,
+    backend: Arc<dyn LeafBackend>,
+    stark: StarkConfig,
+    planner: Planner,
+}
+
+/// One long-lived entry point owning the [`SparkContext`], the leaf
+/// backend, and the cost-model [`Planner`]. Cheap to clone (an `Arc`);
+/// all handles and jobs created through a session share its cluster.
+#[derive(Clone)]
+pub struct StarkSession {
+    inner: Arc<SessionInner>,
+}
+
+impl StarkSession {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// The session's engine context (advanced use: direct engine jobs).
+    pub fn context(&self) -> &SparkContext {
+        &self.inner.ctx
+    }
+
+    pub fn backend(&self) -> Arc<dyn LeafBackend> {
+        self.inner.backend.clone()
+    }
+
+    pub fn planner(&self) -> &Planner {
+        &self.inner.planner
+    }
+
+    /// What would the session run for an `n × n` multiply, everything
+    /// auto? Pads `n` exactly as a real multiply would.
+    pub fn plan(&self, n: usize) -> Plan {
+        self.inner
+            .planner
+            .resolve(Algorithm::Auto, Splits::Auto, n)
+            .expect("auto/auto planning is total")
+    }
+
+    /// Resolve an `(algorithm, splits)` request for operands whose
+    /// largest dimension is `max_dim` — the dry-run behind the serve
+    /// protocol's `plan` op and submit-time validation.
+    pub fn plan_for(
+        &self,
+        algorithm: Algorithm,
+        splits: Splits,
+        max_dim: usize,
+    ) -> Result<Plan, StarkError> {
+        self.inner.planner.resolve(algorithm, splits, max_dim)
+    }
+
+    /// Wrap a matrix in a lazily-distributed, split-caching handle.
+    /// Clones the dense payload once into the handle; use
+    /// [`StarkSession::matrix_arc`] to share an existing allocation
+    /// instead (hot loops, the serve path, the experiment harness).
+    pub fn matrix(&self, m: &DenseMatrix) -> DistMatrix {
+        self.matrix_arc(Arc::new(m.clone()))
+    }
+
+    /// Zero-copy variant of [`StarkSession::matrix`] for callers that
+    /// already hold the payload in an `Arc`.
+    pub fn matrix_arc(&self, m: Arc<DenseMatrix>) -> DistMatrix {
+        DistMatrix {
+            session: self.clone(),
+            inner: Arc::new(MatrixInner {
+                data: m,
+                splits: Mutex::new(HashMap::new()),
+                computed: AtomicUsize::new(0),
+            }),
+        }
+    }
+}
+
+struct MatrixInner {
+    data: Arc<DenseMatrix>,
+    /// `(padded n, b)` → cached split. Holding the map on the handle
+    /// (not the session) keeps eviction trivial: drop the handle, free
+    /// the splits.
+    splits: Mutex<HashMap<(usize, usize), BlockSplits>>,
+    /// How many splits were actually computed (≠ cache hits) — the
+    /// observable behind the distribute-only-once contract.
+    computed: AtomicUsize,
+}
+
+/// A distributed-matrix handle: the session's unit of work. Cloning is
+/// cheap and clones share the split cache.
+#[derive(Clone)]
+pub struct DistMatrix {
+    session: StarkSession,
+    inner: Arc<MatrixInner>,
+}
+
+impl DistMatrix {
+    pub fn rows(&self) -> usize {
+        self.inner.data.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.inner.data.cols()
+    }
+
+    /// The wrapped dense payload.
+    pub fn dense(&self) -> &DenseMatrix {
+        &self.inner.data
+    }
+
+    /// Start a multiply `self @ other` on the owning session.
+    pub fn multiply(&self, other: &DistMatrix) -> MultiplyBuilder {
+        MultiplyBuilder {
+            session: self.session.clone(),
+            a: self.clone(),
+            b: other.clone(),
+            algorithm: Algorithm::Auto,
+            splits: Splits::Auto,
+        }
+    }
+
+    /// How many block splits this handle has computed (cache misses).
+    /// Reusing a handle across jobs at one `(padded n, b)` point keeps
+    /// this at 1 however many multiplies run.
+    pub fn splits_computed(&self) -> usize {
+        self.inner.computed.load(Ordering::Relaxed)
+    }
+
+    /// Cached `b × b` split of the payload zero-padded to `s × s`.
+    fn splits_for(&self, s: usize, b: usize) -> Result<BlockSplits, StarkError> {
+        let mut cache = self.inner.splits.lock().unwrap();
+        if let Some(hit) = cache.get(&(s, b)) {
+            return Ok(hit.clone());
+        }
+        let m = &self.inner.data;
+        let split = if m.rows() == s && m.cols() == s {
+            BlockSplits::of(m, b)?
+        } else {
+            BlockSplits::of(&crate::algos::general::pad_square(m, s), b)?
+        };
+        self.inner.computed.fetch_add(1, Ordering::Relaxed);
+        cache.insert((s, b), split.clone());
+        Ok(split)
+    }
+}
+
+/// One multiply in flight: algorithm and split selection default to the
+/// planner ([`Algorithm::Auto`] / [`Splits::Auto`]); `collect()` runs
+/// the job and returns the [`MultiplyReport`].
+pub struct MultiplyBuilder {
+    session: StarkSession,
+    a: DistMatrix,
+    b: DistMatrix,
+    algorithm: Algorithm,
+    splits: Splits,
+}
+
+impl MultiplyBuilder {
+    /// Pin the algorithm (default [`Algorithm::Auto`]).
+    pub fn algorithm(mut self, algorithm: Algorithm) -> Self {
+        self.algorithm = algorithm;
+        self
+    }
+
+    /// Pin the split count (default [`Splits::Auto`]).
+    pub fn splits(mut self, splits: Splits) -> Self {
+        self.splits = splits;
+        self
+    }
+
+    fn check_operands(&self) -> Result<usize, StarkError> {
+        if !Arc::ptr_eq(&self.session.inner, &self.b.session.inner)
+            || !Arc::ptr_eq(&self.session.inner, &self.a.session.inner)
+        {
+            return Err(StarkError::SessionMismatch);
+        }
+        if self.a.cols() != self.b.rows() {
+            return Err(StarkError::contraction(
+                (self.a.rows(), self.a.cols()),
+                (self.b.rows(), self.b.cols()),
+            ));
+        }
+        Ok(self.a.rows().max(self.a.cols()).max(self.b.cols()))
+    }
+
+    /// Resolve what `collect()` would run, without running it.
+    pub fn plan(&self) -> Result<Plan, StarkError> {
+        let max_dim = self.check_operands()?;
+        self.session.plan_for(self.algorithm, self.splits, max_dim)
+    }
+
+    /// Plan (if needed), distribute (or reuse cached splits), run the
+    /// distributed job, and crop the product back to the true shape.
+    pub fn collect(self) -> Result<MultiplyReport, StarkError> {
+        let plan = self.plan()?;
+        let sa = self.a.splits_for(plan.n, plan.b)?;
+        let sb = self.b.splits_for(plan.n, plan.b)?;
+        let imp = implementation(plan.algorithm, &self.session.inner.stark)?;
+        let mut out = imp.multiply_splits(
+            &self.session.inner.ctx,
+            self.session.inner.backend.clone(),
+            &sa,
+            &sb,
+        )?;
+        let (m, n) = (self.a.rows(), self.b.cols());
+        if (m, n) != (plan.n, plan.n) {
+            out.c = out.c.submatrix(0, 0, m, n);
+        }
+        Ok(MultiplyReport {
+            c: out.c,
+            job: out.job,
+            leaf_ms: out.leaf_ms,
+            leaf_calls: out.leaf_calls,
+            plan,
+        })
+    }
+}
+
+/// Result of one session multiply: the product plus everything the
+/// paper's evaluation reports about the job — and the plan that chose
+/// how to run it.
+#[derive(Debug)]
+pub struct MultiplyReport {
+    /// The product, cropped to the true (pre-padding) shape.
+    pub c: DenseMatrix,
+    /// Per-stage metrics of the job.
+    pub job: JobMetrics,
+    /// Total leaf-multiplication time (summed across tasks), ms.
+    pub leaf_ms: f64,
+    /// Number of leaf block multiplications performed.
+    pub leaf_calls: u64,
+    /// How the run was chosen: concrete algorithm, split count, padded
+    /// dimension, and the predicted cost of every considered candidate.
+    pub plan: Plan,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::multiply::matmul_naive;
+
+    fn session() -> StarkSession {
+        StarkSession::builder().cluster(ClusterConfig::new(2, 2)).build().unwrap()
+    }
+
+    #[test]
+    fn session_multiply_square_fixed() {
+        let s = session();
+        let am = DenseMatrix::random(32, 32, 1);
+        let bm = DenseMatrix::random(32, 32, 2);
+        let report = s
+            .matrix(&am)
+            .multiply(&s.matrix(&bm))
+            .algorithm(Algorithm::Stark)
+            .splits(Splits::Fixed(4))
+            .collect()
+            .unwrap();
+        assert!(matmul_naive(&am, &bm).allclose(&report.c, 1e-9));
+        assert_eq!(report.plan.algorithm, Algorithm::Stark);
+        assert_eq!(report.plan.b, 4);
+        assert_eq!(report.leaf_calls, 49);
+    }
+
+    #[test]
+    fn odd_shapes_pad_and_crop() {
+        let s = session();
+        let am = DenseMatrix::random(30, 17, 3);
+        let bm = DenseMatrix::random(17, 9, 4);
+        let report = s.matrix(&am).multiply(&s.matrix(&bm)).collect().unwrap();
+        assert_eq!((report.c.rows(), report.c.cols()), (30, 9));
+        assert_eq!(report.plan.n, 32, "auto pads to the next power of two");
+        assert!(matmul_naive(&am, &bm).allclose(&report.c, 1e-9));
+    }
+
+    #[test]
+    fn shape_and_session_mismatches_are_typed_errors() {
+        let s = session();
+        let a = s.matrix(&DenseMatrix::random(4, 6, 1));
+        let b = s.matrix(&DenseMatrix::random(5, 4, 2));
+        match a.multiply(&b).collect() {
+            Err(StarkError::ShapeMismatch { a: (4, 6), b: (5, 4), .. }) => {}
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
+        let other_session = session();
+        let b2 = other_session.matrix(&DenseMatrix::random(6, 4, 3));
+        assert!(matches!(a.multiply(&b2).collect(), Err(StarkError::SessionMismatch)));
+        let b3 = s.matrix(&DenseMatrix::random(6, 4, 4));
+        assert!(matches!(
+            a.multiply(&b3).splits(Splits::Fixed(0)).collect(),
+            Err(StarkError::InvalidSplits { .. })
+        ));
+        assert!(matches!(
+            a.multiply(&b3).algorithm(Algorithm::Stark).splits(Splits::Fixed(3)).collect(),
+            Err(StarkError::InvalidSplits { .. })
+        ));
+    }
+
+    #[test]
+    fn handle_reuse_distributes_blocks_once() {
+        let s = session();
+        let am = DenseMatrix::random(16, 16, 5);
+        let a = s.matrix(&am);
+        let b1 = s.matrix(&DenseMatrix::random(16, 16, 6));
+        let b2 = s.matrix(&DenseMatrix::random(16, 16, 7));
+        let fixed =
+            |x: &DistMatrix, y: &DistMatrix| {
+                x.multiply(y).algorithm(Algorithm::Stark).splits(Splits::Fixed(4)).collect()
+            };
+        let r1 = fixed(&a, &b1).unwrap();
+        let r2 = fixed(&a, &b1).unwrap();
+        let r3 = fixed(&a, &b2).unwrap();
+        // One A split serves all three jobs; repeated runs are bit-equal.
+        assert_eq!(a.splits_computed(), 1, "A was re-distributed");
+        assert_eq!(b1.splits_computed(), 1);
+        assert_eq!(r1.c.as_slice(), r2.c.as_slice());
+        assert!(matmul_naive(&am, b2.dense()).allclose(&r3.c, 1e-9));
+        // A different split point is a genuine new distribution.
+        a.multiply(&b1).algorithm(Algorithm::Stark).splits(Splits::Fixed(2)).collect().unwrap();
+        assert_eq!(a.splits_computed(), 2);
+    }
+
+    #[test]
+    fn same_handle_both_sides() {
+        let s = session();
+        let pm = DenseMatrix::random(16, 16, 8);
+        let p = s.matrix(&pm);
+        let report =
+            p.multiply(&p).algorithm(Algorithm::Mllib).splits(Splits::Fixed(2)).collect().unwrap();
+        assert!(matmul_naive(&pm, &pm).allclose(&report.c, 1e-9));
+        assert_eq!(p.splits_computed(), 1, "squaring shares one split");
+    }
+
+    #[test]
+    fn auto_selects_across_the_crossover_in_execution() {
+        // Same workload, both sides of the crossover: the default
+        // calibration puts n=256 on the baseline side; a comm-free
+        // calibration (β = 0) moves the crossover below it, so Auto
+        // picks Stark. Both runs must produce the right product.
+        let am = DenseMatrix::random(256, 256, 9);
+        let bm = DenseMatrix::random(256, 256, 10);
+        let want = matmul_naive(&am, &bm);
+
+        let default_side = session();
+        let r = default_side.matrix(&am).multiply(&default_side.matrix(&bm)).collect().unwrap();
+        assert_eq!((r.plan.algorithm, r.plan.b), (Algorithm::Mllib, 2));
+        assert!(want.allclose(&r.c, 1e-9));
+
+        let comp_only = StarkSession::builder()
+            .cluster(ClusterConfig::new(2, 2))
+            .calibration(Calibration { alpha: 1e-9, beta: 0.0 })
+            .build()
+            .unwrap();
+        let r = comp_only.matrix(&am).multiply(&comp_only.matrix(&bm)).collect().unwrap();
+        assert_eq!((r.plan.algorithm, r.plan.b), (Algorithm::Stark, 4));
+        assert!(want.allclose(&r.c, 1e-9));
+    }
+
+    #[test]
+    fn session_plan_matches_builder_plan() {
+        let s = session();
+        let plan = s.plan(1000);
+        assert_eq!(plan.n, 1024);
+        let a = s.matrix(&DenseMatrix::zeros(1000, 1000));
+        let via_builder = a.multiply(&a).plan().unwrap();
+        assert_eq!(via_builder.algorithm, plan.algorithm);
+        assert_eq!(via_builder.b, plan.b);
+        assert_eq!(via_builder.n, plan.n);
+    }
+
+    #[test]
+    fn from_run_config_carries_cluster_and_backend() {
+        let cfg = RunConfig { executors: 3, cores_per_executor: 1, ..Default::default() };
+        let s = SessionBuilder::from_run_config(&cfg).build().unwrap();
+        assert_eq!(s.context().config().total_cores(), 3);
+        assert_eq!(s.planner().cores, 3);
+        assert_eq!(s.backend().name(), "packed");
+    }
+}

@@ -11,6 +11,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::algos::{Algorithm, StarkConfig};
+use crate::cost::Splits;
 use crate::engine::{ClusterConfig, FailureSpec, SchedulerPolicy, SparkContext};
 use crate::matrix::multiply::Kernel;
 use crate::runtime::{ArtifactLibrary, LeafBackend, NativeBackend, XlaBackend, XlaService};
@@ -74,10 +75,11 @@ impl std::str::FromStr for BackendKind {
 /// One experiment run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
-    /// Matrix dimension (must be a multiple of `b`; power of two for Stark).
+    /// Matrix dimension (padded up as needed; see `Splits::padded_dim`).
     pub n: usize,
-    /// Splits per side (the paper's `b`).
-    pub b: usize,
+    /// Splits per side: a fixed `b`, or `auto` for the planner's choice.
+    pub splits: Splits,
+    /// Algorithm — may be `Algorithm::Auto` for the planner's choice.
     pub algo: Algorithm,
     pub backend: BackendKind,
     pub executors: usize,
@@ -109,7 +111,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         Self {
             n: 256,
-            b: 4,
+            splits: Splits::Fixed(4),
             algo: Algorithm::Stark,
             backend: BackendKind::Packed,
             executors: 2,
@@ -161,9 +163,13 @@ impl RunConfig {
     }
 
     pub fn to_json(&self) -> String {
+        let b_field = match self.splits {
+            Splits::Fixed(b) => Value::num(b as f64),
+            Splits::Auto => Value::str("auto"),
+        };
         let mut fields = vec![
             ("n", Value::num(self.n as f64)),
-            ("b", Value::num(self.b as f64)),
+            ("b", b_field),
             ("algo", Value::str(self.algo.to_string())),
             ("backend", Value::str(self.backend.to_string())),
             ("executors", Value::num(self.executors as f64)),
@@ -211,9 +217,15 @@ impl RunConfig {
             }),
             _ => None,
         };
+        // "b" is a number for a fixed split count, or the string "auto".
+        let splits = match v.get("b") {
+            Some(Value::String(s)) => s.parse::<Splits>().map_err(anyhow::Error::msg)?,
+            Some(other) => Splits::Fixed(other.as_usize().context("field b")?),
+            None => anyhow::bail!("missing field b"),
+        };
         Ok(Self {
             n: get_usize("n")?,
-            b: get_usize("b")?,
+            splits,
             algo: v
                 .get("algo")
                 .and_then(Value::as_str)
@@ -322,6 +334,20 @@ mod tests {
         assert_eq!(back.net_bandwidth, Some(1e9));
         assert_eq!(back.failure, cfg.failure);
         assert!(back.fused_leaf);
+    }
+
+    #[test]
+    fn auto_algo_and_splits_roundtrip() {
+        let cfg = RunConfig { algo: Algorithm::Auto, splits: Splits::Auto, ..Default::default() };
+        let json = cfg.to_json();
+        assert!(json.contains("\"algo\":\"auto\""), "{json}");
+        assert!(json.contains("\"b\":\"auto\""), "{json}");
+        let back = RunConfig::from_json(&json).unwrap();
+        assert_eq!(back.algo, Algorithm::Auto);
+        assert_eq!(back.splits, Splits::Auto);
+        // Fixed splits keep serializing as a plain number (compat).
+        let fixed = RunConfig::default().to_json();
+        assert!(fixed.contains("\"b\":4"), "{fixed}");
     }
 
     #[test]

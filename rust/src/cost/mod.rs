@@ -16,6 +16,10 @@
 //! does, in element ops where the paper does) — the calibration constants
 //! absorb the units.
 
+pub mod planner;
+
+pub use planner::{Calibration, Plan, PlanCandidate, Planner, Splits};
+
 /// One stage's predicted cost terms.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StageCost {

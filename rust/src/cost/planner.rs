@@ -1,0 +1,455 @@
+//! Cost-model planner: the §IV analysis put to work.
+//!
+//! The paper derives per-stage analytic costs for all three systems and
+//! uses them to *explain* the measured U-shaped wall-time curve in `b`
+//! (Figs. 9–10) and the system ranking — but leaves the choice of
+//! algorithm and split count to the operator. Marlin (Zadeh et al. 2015)
+//! argues the planner should make that choice; this module closes the
+//! loop: [`Planner`] evaluates [`super::stark_cost`]/[`super::marlin_cost`]/
+//! [`super::mllib_cost`] over candidate split counts with calibrated
+//! `(α, β)` unit costs and returns the predicted-fastest
+//! [`Plan`]. `Algorithm::Auto` / [`Splits::Auto`] in the public API
+//! ([`crate::api`]) route through [`Planner::resolve`].
+//!
+//! The model reproduces the paper's qualitative findings: the baselines'
+//! flatter stage structure wins at small `n` (shuffle terms dominate),
+//! Stark's `b^2.807` leaf count wins at large `n` (computation
+//! dominates), and the crossover moves outward with core count. The
+//! pinned tests below record the concrete choices at the default
+//! calibration so a formula regression is caught immediately.
+
+use crate::algos::Algorithm;
+use crate::cost::{marlin_cost, mllib_cost, stark_cost, CostBreakdown};
+use crate::error::StarkError;
+use crate::util::json::Value;
+
+/// Split-count selector for one multiply: a fixed `b`, or let the
+/// planner pick the predicted-fastest one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Splits {
+    /// Planner-chosen split count (power-of-two candidates).
+    Auto,
+    /// Exactly this many splits per side (the paper's `b`).
+    Fixed(usize),
+}
+
+impl Splits {
+    /// The padded matrix dimension this selector implies for an operand
+    /// whose largest raw dimension is `max_dim`:
+    ///
+    /// - `Auto` pads to the next power of two, so every power-of-two
+    ///   candidate divides it (and Stark's recursion applies);
+    /// - `Fixed(b)` pads to the next multiple of `b` — the minimal valid
+    ///   dimension (Stark additionally needs `b` itself to be a power of
+    ///   two, checked at resolve time, not a power-of-two `n`).
+    pub fn padded_dim(&self, max_dim: usize) -> usize {
+        let d = max_dim.max(1);
+        match self {
+            Splits::Auto => d.next_power_of_two(),
+            Splits::Fixed(b) => {
+                let b = (*b).max(1);
+                d.div_ceil(b) * b
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Splits {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Splits::Auto => write!(f, "auto"),
+            Splits::Fixed(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+impl std::str::FromStr for Splits {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if s.eq_ignore_ascii_case("auto") {
+            return Ok(Splits::Auto);
+        }
+        s.parse::<usize>()
+            .map(Splits::Fixed)
+            .map_err(|_| format!("invalid splits {s:?} (a number or \"auto\")"))
+    }
+}
+
+/// Calibrated unit costs: `alpha` seconds per computation unit, `beta`
+/// seconds per communicated element (the two regressors of
+/// [`super::fit_alpha_beta`]). Persist with [`Calibration::store`] after
+/// fitting against measured walls (the Fig. 10 harness emits one) and
+/// feed it back through `SessionBuilder::calibration`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Calibration {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl Calibration {
+    /// Documented defaults, used when no fitted calibration is loaded:
+    /// `alpha = 1e-9` s/unit (≈1 Gop/s effective per-element compute,
+    /// the right order for a debug-friendly f64 kernel) and `beta =
+    /// 1e-8` s/element (≈100 M elements/s through serialize + shuffle +
+    /// deserialize, i.e. ~6.4 Gb/s of f64 payload). What the planner
+    /// needs from the pair is the *ratio* β/α = 10: it places the
+    /// baseline→Stark crossover between n=1024 and n=2048 on 4 cores
+    /// and between 4096 and 8192 on the paper's 25 cores — the
+    /// behaviour Figs. 8–10 report.
+    pub const DEFAULT: Calibration = Calibration { alpha: 1e-9, beta: 1e-8 };
+
+    /// Fit from `(comp, comm, wall_seconds)` measurement points
+    /// (non-negative least squares, see [`super::fit_alpha_beta`]).
+    pub fn fit(points: &[(f64, f64, f64)]) -> Self {
+        let (alpha, beta) = super::fit_alpha_beta(points);
+        Calibration { alpha, beta }
+    }
+
+    pub fn to_json(&self) -> String {
+        Value::obj(vec![
+            ("alpha", Value::num(self.alpha)),
+            ("beta", Value::num(self.beta)),
+        ])
+        .to_json()
+    }
+
+    pub fn from_json(s: &str) -> Result<Self, String> {
+        let v = crate::util::json::parse(s).map_err(|e| format!("calibration JSON: {e}"))?;
+        let field = |k: &str| {
+            v.get(k)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| format!("calibration JSON missing numeric {k:?}"))
+        };
+        let (alpha, beta) = (field("alpha")?, field("beta")?);
+        if !(alpha.is_finite() && beta.is_finite() && alpha >= 0.0 && beta >= 0.0) {
+            return Err(format!("calibration must be finite and non-negative: α={alpha} β={beta}"));
+        }
+        Ok(Calibration { alpha, beta })
+    }
+
+    /// Load a calibration persisted by [`Calibration::store`].
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self, String> {
+        let s = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("reading {}: {e}", path.as_ref().display()))?;
+        Self::from_json(&s)
+    }
+
+    /// Persist to `path` as JSON (the artifact `fit_alpha_beta` feeds).
+    pub fn store(&self, path: impl AsRef<std::path::Path>) -> Result<(), String> {
+        std::fs::write(path.as_ref(), self.to_json() + "\n")
+            .map_err(|e| format!("writing {}: {e}", path.as_ref().display()))
+    }
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Self::DEFAULT
+    }
+}
+
+/// One evaluated `(algorithm, b)` point — kept on the [`Plan`] so
+/// clients can see *why* the winner won.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanCandidate {
+    pub algorithm: Algorithm,
+    pub b: usize,
+    /// Predicted wall time, milliseconds.
+    pub wall_ms: f64,
+}
+
+/// The planner's answer: what to run and what it should cost.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Padded matrix dimension the plan is for (operands are zero-padded
+    /// to `n × n` before distribution; see [`Splits::padded_dim`]).
+    pub n: usize,
+    /// The chosen concrete algorithm — never [`Algorithm::Auto`].
+    pub algorithm: Algorithm,
+    /// The chosen split count.
+    pub b: usize,
+    /// Per-stage predicted cost of the chosen point (paper Tables I–III).
+    pub predicted: CostBreakdown,
+    /// Every candidate evaluated, cheapest first.
+    pub considered: Vec<PlanCandidate>,
+}
+
+impl Plan {
+    /// Predicted wall time of the chosen point, milliseconds.
+    pub fn predicted_wall_ms(&self) -> f64 {
+        self.considered.first().map(|c| c.wall_ms).unwrap_or(f64::NAN)
+    }
+}
+
+/// Evaluates the §IV cost model over candidate `(algorithm, b)` points.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    pub calibration: Calibration,
+    /// Total physical cores of the target cluster (the paper's PF cap).
+    pub cores: usize,
+    /// Largest candidate split count for `Splits::Auto` (the paper
+    /// sweeps 2–32; 64 leaves headroom without exploding the search).
+    pub max_b: usize,
+}
+
+impl Planner {
+    pub fn new(cores: usize) -> Self {
+        Self { calibration: Calibration::DEFAULT, cores: cores.max(1), max_b: 64 }
+    }
+
+    pub fn with_calibration(cores: usize, calibration: Calibration) -> Self {
+        Self { calibration, ..Self::new(cores) }
+    }
+
+    /// Power-of-two candidate split counts for dimension `n`: every
+    /// `b ∈ {1, 2, 4, …}` with `b ≤ min(n, max_b)` and `b | n`. `b = 1`
+    /// (single block, no distribution) is a legitimate degenerate
+    /// candidate and the only one for dimensions with no even divisor.
+    fn candidate_bs(&self, n: usize) -> Vec<usize> {
+        let cap = n.max(1).min(self.max_b.max(1));
+        let mut out = Vec::new();
+        let mut b = 1usize;
+        while b <= cap {
+            if n % b == 0 {
+                out.push(b);
+            }
+            b *= 2;
+        }
+        out
+    }
+
+    /// Cost breakdown of one `(algorithm, b)` point. `Err` only for
+    /// points the algorithm cannot run (Stark × non-power-of-two `b`).
+    pub fn breakdown(
+        &self,
+        algorithm: Algorithm,
+        n: usize,
+        b: usize,
+    ) -> Result<CostBreakdown, StarkError> {
+        match algorithm {
+            Algorithm::Mllib => Ok(mllib_cost(n, b, self.cores)),
+            Algorithm::Marlin => Ok(marlin_cost(n, b, self.cores)),
+            Algorithm::Stark => {
+                if !b.is_power_of_two() {
+                    return Err(StarkError::invalid_splits(
+                        Algorithm::Stark,
+                        b,
+                        n,
+                        "stark needs a power-of-two split count",
+                    ));
+                }
+                Ok(stark_cost(n, b, self.cores))
+            }
+            Algorithm::Auto => Err(StarkError::AutoUnresolved),
+        }
+    }
+
+    /// Resolve an `(algorithm, splits)` request for operands whose
+    /// largest raw dimension is `max_dim` — the single entry point the
+    /// session API, the CLI `plan` subcommand, and the serve `plan` op
+    /// all share. Padding policy is [`Splits::padded_dim`].
+    pub fn resolve(
+        &self,
+        algorithm: Algorithm,
+        splits: Splits,
+        max_dim: usize,
+    ) -> Result<Plan, StarkError> {
+        if let Splits::Fixed(0) = splits {
+            return Err(StarkError::invalid_splits(
+                algorithm,
+                0,
+                max_dim,
+                "need at least one split per side",
+            ));
+        }
+        let n = splits.padded_dim(max_dim);
+        let algos: Vec<Algorithm> = match algorithm {
+            Algorithm::Auto => Algorithm::ALL.to_vec(),
+            concrete => vec![concrete],
+        };
+        let bs: Vec<usize> = match splits {
+            Splits::Auto => self.candidate_bs(n),
+            Splits::Fixed(b) => vec![b],
+        };
+        let mut considered = Vec::new();
+        let mut best: Option<(CostBreakdown, PlanCandidate)> = None;
+        for &b in &bs {
+            for &algo in &algos {
+                let cb = match self.breakdown(algo, n, b) {
+                    Ok(cb) => cb,
+                    // A concrete request for an impossible point is the
+                    // caller's error; under Auto the point is just not a
+                    // candidate.
+                    Err(e) => {
+                        if algorithm == Algorithm::Auto {
+                            continue;
+                        }
+                        return Err(e);
+                    }
+                };
+                let wall_ms = cb.wall(self.calibration.alpha, self.calibration.beta) * 1e3;
+                let cand = PlanCandidate { algorithm: algo, b, wall_ms };
+                // total_cmp orders NaN above every finite value, so a
+                // pathological calibration (NaN/∞ alpha or beta fed
+                // through the pub fields) yields an arbitrary-but-valid
+                // plan instead of a comparison panic.
+                if best.as_ref().map_or(true, |(_, c)| wall_ms.total_cmp(&c.wall_ms).is_lt()) {
+                    best = Some((cb, cand.clone()));
+                }
+                considered.push(cand);
+            }
+        }
+        let (predicted, chosen) = best.ok_or_else(|| {
+            StarkError::invalid_splits(algorithm, 0, n, "no feasible (algorithm, b) candidate")
+        })?;
+        considered.sort_by(|x, y| x.wall_ms.total_cmp(&y.wall_ms));
+        Ok(Plan { n, algorithm: chosen.algorithm, b: chosen.b, predicted, considered })
+    }
+
+    /// Full auto plan for an (already padded) `n × n` multiply.
+    pub fn plan(&self, n: usize) -> Plan {
+        self.resolve(Algorithm::Auto, Splits::Auto, n)
+            .expect("auto/auto always has the b=1 candidate")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(cores: usize) -> Planner {
+        Planner::new(cores)
+    }
+
+    #[test]
+    fn splits_parse_and_pad() {
+        assert_eq!("auto".parse::<Splits>().unwrap(), Splits::Auto);
+        assert_eq!("8".parse::<Splits>().unwrap(), Splits::Fixed(8));
+        assert!("x".parse::<Splits>().is_err());
+        assert_eq!(Splits::Auto.to_string(), "auto");
+        assert_eq!(Splits::Fixed(8).to_string(), "8");
+        assert_eq!(Splits::Auto.padded_dim(100), 128);
+        assert_eq!(Splits::Auto.padded_dim(128), 128);
+        assert_eq!(Splits::Fixed(6).padded_dim(100), 102);
+        assert_eq!(Splits::Fixed(4).padded_dim(100), 100);
+        assert_eq!(Splits::Auto.padded_dim(0), 1);
+    }
+
+    #[test]
+    fn calibration_roundtrips_and_rejects_garbage() {
+        let c = Calibration { alpha: 2.5e-9, beta: 7e-8 };
+        let back = Calibration::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        assert!(Calibration::from_json("{}").is_err());
+        assert!(Calibration::from_json(r#"{"alpha":-1,"beta":0}"#).is_err());
+    }
+
+    #[test]
+    fn calibration_store_load_roundtrip() {
+        let dir = crate::util::tmp::TempDir::new("calib").unwrap();
+        let path = dir.file("calibration.json");
+        let c = Calibration { alpha: 3e-9, beta: 4e-8 };
+        c.store(&path).unwrap();
+        assert_eq!(Calibration::load(&path).unwrap(), c);
+    }
+
+    /// The paper's crossover, pinned at the default calibration: the
+    /// baselines' flat plans win small matrices, Stark's b^2.807 leaf
+    /// count wins large ones, and more cores push the crossover out.
+    #[test]
+    fn auto_plan_crosses_from_baseline_to_stark() {
+        let four = p(4);
+        for n in [64usize, 256, 1024] {
+            let plan = four.plan(n);
+            assert_ne!(plan.algorithm, Algorithm::Stark, "n={n}: {:?}", plan.considered[0]);
+        }
+        assert_eq!((four.plan(2048).algorithm, four.plan(2048).b), (Algorithm::Stark, 2));
+        assert_eq!((four.plan(4096).algorithm, four.plan(4096).b), (Algorithm::Stark, 4));
+
+        let paper = p(25); // the paper's 5×5 testbed
+        assert_ne!(paper.plan(4096).algorithm, Algorithm::Stark, "25 cores push crossover out");
+        assert_eq!((paper.plan(16384).algorithm, paper.plan(16384).b), (Algorithm::Stark, 8));
+    }
+
+    #[test]
+    fn fixed_algorithm_auto_splits_traces_the_u_curve() {
+        // Best b for Stark grows with n (paper Fig. 9's optimum shift).
+        let four = p(4);
+        let b_at = |pl: &Planner, n: usize| {
+            pl.resolve(Algorithm::Stark, Splits::Auto, n).unwrap().b
+        };
+        assert_eq!(b_at(&four, 256), 2);
+        assert_eq!(b_at(&four, 4096), 4);
+        assert_eq!(b_at(&p(25), 16384), 8);
+    }
+
+    #[test]
+    fn auto_algorithm_fixed_splits_picks_per_point() {
+        let plan = p(4).resolve(Algorithm::Auto, Splits::Fixed(8), 256).unwrap();
+        assert_eq!((plan.algorithm, plan.b), (Algorithm::Mllib, 8));
+        let plan = p(25).resolve(Algorithm::Auto, Splits::Fixed(4), 4096).unwrap();
+        assert_eq!((plan.algorithm, plan.b), (Algorithm::Marlin, 4));
+    }
+
+    #[test]
+    fn calibration_moves_the_crossover() {
+        // β = 0 (communication free) leaves only computation: Stark's
+        // smaller leaf count wins already at n=256 on 4 cores.
+        let comp_only = Planner::with_calibration(4, Calibration { alpha: 1e-9, beta: 0.0 });
+        let plan = comp_only.plan(256);
+        assert_eq!((plan.algorithm, plan.b), (Algorithm::Stark, 4));
+        // …while the default calibration still picks a baseline there.
+        assert_ne!(p(4).plan(256).algorithm, Algorithm::Stark);
+    }
+
+    #[test]
+    fn resolve_pads_and_validates() {
+        let four = p(4);
+        assert_eq!(four.resolve(Algorithm::Auto, Splits::Auto, 100).unwrap().n, 128);
+        let plan = four.resolve(Algorithm::Auto, Splits::Fixed(6), 100).unwrap();
+        assert_eq!((plan.n, plan.b), (102, 6));
+        assert_ne!(plan.algorithm, Algorithm::Stark, "non-pow2 b excludes stark");
+        match four.resolve(Algorithm::Stark, Splits::Fixed(6), 100) {
+            Err(StarkError::InvalidSplits { algorithm: Algorithm::Stark, b: 6, .. }) => {}
+            other => panic!("expected InvalidSplits, got {other:?}"),
+        }
+        assert!(matches!(
+            four.resolve(Algorithm::Auto, Splits::Fixed(0), 64),
+            Err(StarkError::InvalidSplits { b: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn non_finite_calibration_never_panics() {
+        // The fields are pub, so garbage can reach the planner without
+        // passing from_json's validation — it must still return a plan.
+        for bad in [f64::NAN, f64::INFINITY, -1.0] {
+            let p = Planner::with_calibration(4, Calibration { alpha: bad, beta: 1e-8 });
+            let plan = p.plan(256);
+            assert_ne!(plan.algorithm, Algorithm::Auto);
+            assert!(plan.b >= 1);
+        }
+    }
+
+    #[test]
+    fn considered_is_sorted_and_consistent() {
+        let plan = p(4).plan(512);
+        assert!(!plan.considered.is_empty());
+        assert!(plan.considered.windows(2).all(|w| w[0].wall_ms <= w[1].wall_ms));
+        assert_eq!(plan.considered[0].algorithm, plan.algorithm);
+        assert_eq!(plan.considered[0].b, plan.b);
+        assert!((plan.predicted_wall_ms()
+            - plan.predicted.wall(Calibration::DEFAULT.alpha, Calibration::DEFAULT.beta) * 1e3)
+            .abs()
+            < 1e-9);
+    }
+
+    #[test]
+    fn prime_dimension_degenerates_to_single_block() {
+        // 97 is prime: b = 1 is the only divisor candidate.
+        let plan = p(4).resolve(Algorithm::Auto, Splits::Auto, 97).unwrap();
+        assert_eq!(plan.n, 128, "auto pads primes to the next power of two");
+        let plan = p(4).resolve(Algorithm::Marlin, Splits::Fixed(97), 97).unwrap();
+        assert_eq!((plan.n, plan.b), (97, 97));
+    }
+}

@@ -1,0 +1,113 @@
+//! Typed errors for every public entry point (DESIGN.md S16).
+//!
+//! The seed library `assert!`ed its way through input validation, which
+//! aborts the process on the first malformed request — unacceptable for
+//! a long-running service ([`crate::serve`]) and unhelpful for API
+//! users. [`StarkError`] carries the same invariants as structured data:
+//! the session/builder layer ([`crate::api`]), the algorithm trait
+//! ([`crate::algos::MultiplyAlgorithm`]), and the planner
+//! ([`crate::cost::Planner`]) all surface it instead of panicking.
+
+use crate::algos::Algorithm;
+
+/// What went wrong with a multiply request, plan, or session.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StarkError {
+    /// Operand shapes are incompatible (contraction mismatch, or a
+    /// non-square operand handed to a square-only entry point).
+    ShapeMismatch {
+        /// `(rows, cols)` of the left operand.
+        a: (usize, usize),
+        /// `(rows, cols)` of the right operand.
+        b: (usize, usize),
+        /// Which invariant failed, human-readable.
+        reason: String,
+    },
+    /// The split count `b` is invalid for this algorithm/dimension.
+    InvalidSplits {
+        algorithm: Algorithm,
+        b: usize,
+        /// Matrix dimension the split was checked against (0 when the
+        /// split is invalid regardless of dimension).
+        n: usize,
+        reason: String,
+    },
+    /// `Algorithm::Auto` reached execution without planner resolution —
+    /// an internal bug in a dispatch path, never a user error.
+    AutoUnresolved,
+    /// Two [`crate::api::DistMatrix`] handles from different
+    /// [`crate::api::StarkSession`]s were combined.
+    SessionMismatch,
+    /// Building or calling the leaf backend failed.
+    Backend(String),
+}
+
+impl StarkError {
+    /// Shorthand for the contraction-mismatch case.
+    pub fn contraction(a: (usize, usize), b: (usize, usize)) -> Self {
+        StarkError::ShapeMismatch {
+            a,
+            b,
+            reason: "A.cols must equal B.rows".to_string(),
+        }
+    }
+
+    pub fn invalid_splits(
+        algorithm: Algorithm,
+        b: usize,
+        n: usize,
+        reason: impl Into<String>,
+    ) -> Self {
+        StarkError::InvalidSplits { algorithm, b, n, reason: reason.into() }
+    }
+}
+
+impl std::fmt::Display for StarkError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StarkError::ShapeMismatch { a, b, reason } => write!(
+                f,
+                "shape mismatch: A is {}x{}, B is {}x{} ({reason})",
+                a.0, a.1, b.0, b.1
+            ),
+            StarkError::InvalidSplits { algorithm, b, n, reason } => {
+                write!(f, "invalid split count b={b}")?;
+                // `Auto` here means "no specific algorithm rejected it".
+                if *algorithm != Algorithm::Auto {
+                    write!(f, " for {algorithm}")?;
+                }
+                if *n > 0 {
+                    write!(f, " at n={n}")?;
+                }
+                write!(f, ": {reason}")
+            }
+            StarkError::AutoUnresolved => write!(
+                f,
+                "algorithm 'auto' reached execution without planner resolution (internal bug)"
+            ),
+            StarkError::SessionMismatch => write!(
+                f,
+                "DistMatrix handles belong to different StarkSessions; \
+                 multiply operands must come from one session"
+            ),
+            StarkError::Backend(msg) => write!(f, "leaf backend error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for StarkError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = StarkError::contraction((3, 4), (5, 3));
+        assert!(e.to_string().contains("A is 3x4"));
+        let e = StarkError::invalid_splits(Algorithm::Stark, 3, 12, "needs a power-of-two split");
+        let s = e.to_string();
+        assert!(s.contains("b=3") && s.contains("stark") && s.contains("power-of-two"), "{s}");
+        assert!(StarkError::SessionMismatch.to_string().contains("session"));
+    }
+}

@@ -59,8 +59,14 @@ pub fn run(h: &Harness) -> Result<(Ablations, Report)> {
         };
         let cfg = h.scale.run_config(Algorithm::Stark, n, b);
         let (a, bm) = h.inputs(n);
-        let ctx = cfg.context();
-        let out = crate::algos::stark::multiply(&ctx, backend, &a, &bm, b, &cfg.stark_config());
+        let session =
+            crate::api::SessionBuilder::from_run_config(&cfg).backend(backend).build()?;
+        let out = session
+            .matrix(&a)
+            .multiply(&session.matrix(&bm))
+            .algorithm(Algorithm::Stark)
+            .splits(crate::cost::Splits::Fixed(b))
+            .collect()?;
         rows.push(AblationRow {
             name: "backend".into(),
             variant: kind.to_string(),

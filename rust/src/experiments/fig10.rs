@@ -39,6 +39,7 @@ fn model(algo: Algorithm, n: usize, b: usize, cores: usize) -> CostBreakdown {
         Algorithm::Mllib => cost::mllib_cost(n, b, cores),
         Algorithm::Marlin => cost::marlin_cost(n, b, cores),
         Algorithm::Stark => cost::stark_cost(n, b, cores),
+        Algorithm::Auto => unreachable!("fig10 iterates Algorithm::ALL (concrete systems)"),
     }
 }
 
@@ -70,6 +71,8 @@ pub fn run(h: &Harness, sweep: &Fig9) -> Result<(Fig10, Report)> {
     let cores = h.scale.executors * h.scale.cores;
     let mut fits = Vec::new();
     let mut points = Vec::new();
+    // All systems' (comp, comm, wall) points, for the pooled planner fit.
+    let mut pooled: Vec<(f64, f64, f64)> = Vec::new();
 
     for algo in Algorithm::ALL {
         // Measure the arm the §IV model describes. The cost tables
@@ -105,6 +108,7 @@ pub fn run(h: &Harness, sweep: &Fig9) -> Result<(Fig10, Report)> {
         }
         let (alpha, beta) = cost::fit_alpha_beta(&cal);
         fits.push((algo, alpha, beta));
+        pooled.extend(cal.iter().copied());
         for &(n, b, wall) in &measured {
             let predicted = model(algo, n, b, cores).wall(alpha, beta);
             points.push(TheoryPoint { algo, n, b, measured_ms: wall, predicted_ms: predicted });
@@ -148,7 +152,30 @@ pub fn run(h: &Harness, sweep: &Fig9) -> Result<(Fig10, Report)> {
         println!("{algo}: fitted α={a:.3e} ms/unit, β={b:.3e} ms/element");
     }
 
+    // Pooled fit across all three systems, in seconds — the planner's
+    // units. `stark_bench fig10` writes it into the report; feed it back
+    // via `Calibration::load` / `stark plan --calibration <file>` to
+    // replace the documented defaults with measured ones.
+    let pooled_pts: Vec<(f64, f64, f64)> =
+        pooled.iter().map(|&(comp, comm, wall_ms)| (comp, comm, wall_ms / 1e3)).collect();
+    let planner_cal = cost::Calibration::fit(&pooled_pts);
+    println!(
+        "pooled planner calibration: α={:.3e} s/unit, β={:.3e} s/element \
+         (defaults: α={:.0e}, β={:.0e})",
+        planner_cal.alpha,
+        planner_cal.beta,
+        cost::Calibration::DEFAULT.alpha,
+        cost::Calibration::DEFAULT.beta,
+    );
+
     let body = Value::obj(vec![
+        (
+            "calibration",
+            row(vec![
+                ("alpha", Value::num(planner_cal.alpha)),
+                ("beta", Value::num(planner_cal.beta)),
+            ]),
+        ),
         (
             "fits",
             Value::Array(

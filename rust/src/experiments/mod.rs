@@ -33,8 +33,10 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::algos::{self, Algorithm, MultiplyOutput};
+use crate::algos::Algorithm;
+use crate::api::{MultiplyReport, SessionBuilder};
 use crate::config::{BackendKind, RunConfig};
+use crate::cost::Splits;
 use crate::matrix::DenseMatrix;
 use crate::runtime::LeafBackend;
 
@@ -95,7 +97,7 @@ impl Scale {
         // degenerates to FIFO and the remaining knobs take defaults.
         RunConfig {
             n,
-            b,
+            splits: Splits::Fixed(b),
             algo,
             backend: self.backend,
             executors: self.executors,
@@ -139,29 +141,35 @@ impl Harness {
     }
 
     /// Run one `(algo, n, b)` point with optional config tweaks.
-    /// Repeats `scale.reps` times and keeps the fastest run.
+    /// Repeats `scale.reps` times and keeps the fastest run. Each rep
+    /// gets a fresh session (fresh simulated cluster), sharing the
+    /// harness's pre-built leaf backend.
     pub fn run_point_with(
         &self,
         algo: Algorithm,
         n: usize,
         b: usize,
         tweak: impl Fn(&mut RunConfig),
-    ) -> MultiplyOutput {
+    ) -> MultiplyReport {
         let (a, bm) = self.inputs(n);
-        let mut best: Option<MultiplyOutput> = None;
+        // One allocation per operand for the whole point: handles share
+        // the payload Arc, so reps never re-copy the dense inputs.
+        let (a, bm) = (Arc::new(a), Arc::new(bm));
+        let mut best: Option<MultiplyReport> = None;
         for _ in 0..self.scale.reps.max(1) {
             let mut cfg = self.scale.run_config(algo, n, b);
             tweak(&mut cfg);
-            let ctx = cfg.context();
-            let out = algos::common::run(
-                algo,
-                &ctx,
-                self.backend.clone(),
-                &a,
-                &bm,
-                b,
-                &cfg.stark_config(),
-            );
+            let session = SessionBuilder::from_run_config(&cfg)
+                .backend(self.backend.clone())
+                .build()
+                .expect("session build is infallible with a prebuilt backend");
+            let out = session
+                .matrix_arc(a.clone())
+                .multiply(&session.matrix_arc(bm.clone()))
+                .algorithm(cfg.algo)
+                .splits(cfg.splits)
+                .collect()
+                .expect("experiment point failed");
             if best.as_ref().map_or(true, |p| out.job.wall_ms < p.job.wall_ms) {
                 best = Some(out);
             }
@@ -169,7 +177,7 @@ impl Harness {
         best.expect("reps >= 1")
     }
 
-    pub fn run_point(&self, algo: Algorithm, n: usize, b: usize) -> MultiplyOutput {
+    pub fn run_point(&self, algo: Algorithm, n: usize, b: usize) -> MultiplyReport {
         self.run_point_with(algo, n, b, |_| {})
     }
 

@@ -2,18 +2,51 @@
 //!
 //! A Rust + JAX + Pallas reproduction of *"Stark: Fast and Scalable
 //! Strassen's Matrix Multiplication using Apache Spark"* (Misra,
-//! Bhattacharya & Ghosh, 2018).
+//! Bhattacharya & Ghosh, 2018) — grown into a small distributed
+//! matrix-multiplication *system* with sessions, a cost-model planner,
+//! and a job-queue service.
 //!
-//! The crate is organized by the paper's own decomposition:
+//! ## The front door: sessions and handles
 //!
+//! All workloads enter through [`api::StarkSession`]:
+//!
+//! ```no_run
+//! use stark::api::StarkSession;
+//! use stark::matrix::DenseMatrix;
+//!
+//! let session = StarkSession::builder().build()?;       // cluster + backend + planner
+//! let a = session.matrix(&DenseMatrix::random(300, 300, 1));
+//! let b = session.matrix(&DenseMatrix::random(300, 300, 2));
+//! let report = a.multiply(&b).collect()?;               // planner picks algorithm AND b
+//! println!("{} b={} wall={:.1}ms", report.plan.algorithm, report.plan.b, report.job.wall_ms);
+//! # Ok::<(), stark::StarkError>(())
+//! ```
+//!
+//! - operands of **any shape** are zero-padded in, and the true product
+//!   sliced back out, automatically;
+//! - [`api::DistMatrix`] handles cache their block distribution across
+//!   jobs — multiply one `A` against many `B`s without re-distributing;
+//! - `Algorithm::Auto` / `Splits::Auto` route through [`cost::Planner`],
+//!   the paper's §IV analytic model with calibrated `(α, β)`; ask it
+//!   directly with `session.plan(n)`;
+//! - errors are typed ([`StarkError`]), never process aborts.
+//!
+//! ## Layers
+//!
+//! - [`api`] — sessions, `DistMatrix` handles, the multiply builder.
 //! - [`engine`] — `sparklet`, the Spark-like distributed substrate the
-//!   algorithms run on (RDDs, stages, shuffle, executor pool, metrics).
+//!   algorithms run on (RDDs, stages, shuffle, executor pool, metrics,
+//!   fair multi-job scheduling).
 //! - [`matrix`] — dense matrices, block partitioning, single-node kernels.
 //! - [`algos`] — the paper's contribution ([`algos::stark`]) plus the
-//!   Marlin and MLLib baselines it evaluates against.
+//!   Marlin and MLLib baselines, behind the
+//!   [`algos::MultiplyAlgorithm`] trait.
 //! - [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas leaf
 //!   kernels (`artifacts/*.hlo.txt`), plus the native fallback backend.
-//! - [`cost`] — the paper's §IV analytic cost model (Tables I–III).
+//! - [`cost`] — the §IV analytic cost model (Tables I–III) and the
+//!   [`cost::Planner`] that puts it to work.
+//! - [`serve`] — the session exposed as a TCP job queue
+//!   (`submit`/`wait`/`plan`/…).
 //! - [`config`] — experiment/run configuration shared by the CLI,
 //!   examples and benches.
 //!
@@ -21,11 +54,16 @@
 //! the reproduction of every table and figure.
 
 pub mod algos;
+pub mod api;
 pub mod config;
 pub mod cost;
 pub mod engine;
+pub mod error;
 pub mod experiments;
 pub mod matrix;
 pub mod runtime;
 pub mod serve;
 pub mod util;
+
+pub use api::{DistMatrix, MultiplyBuilder, MultiplyReport, SessionBuilder, StarkSession};
+pub use error::StarkError;

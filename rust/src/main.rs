@@ -13,10 +13,14 @@
 //! naive|blocked|packed|xla|xla-pallas`, `--net-mbps`, `--seed`,
 //! `--fused-leaf`, `--isolate-multiply`, `--algo stark|marlin|mllib`.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
-use stark::algos::{self, Algorithm};
+use stark::algos::Algorithm;
+use stark::api::{MultiplyReport, SessionBuilder, StarkSession};
 use stark::config::{BackendKind, RunConfig};
+use stark::cost::{Calibration, Planner, Splits};
 use stark::matrix::{matmul_parallel, DenseMatrix};
 use stark::util::cli::Args;
 use stark::util::table::{fmt_bytes, Table};
@@ -24,24 +28,29 @@ use stark::util::table::{fmt_bytes, Table};
 const USAGE: &str = "\
 stark — distributed Strassen matrix multiplication (Stark reproduction)
 
-USAGE: stark <multiply|compare|sweep|stages|scalability|cost|serve|serve-smoke|request|info> [flags]
+USAGE: stark <multiply|plan|compare|sweep|stages|scalability|cost|serve|serve-smoke|request|info> [flags]
 
   multiply with files:  --input-a a.csv --input-b b.csv [--output c.smx]
-                        (.smx = binary, anything else = text CSV)
+                        (.smx = binary, anything else = text CSV; any
+                        shape — the session pads and crops)
+  plan:                 ask the cost-model planner what it would run for
+                        --n (and optionally a fixed --algorithm/--splits)
+                        without running it [--calibration cal.json]
   cost:                 print the §IV analytic cost tables for --n/--b
   serve:                --addr 127.0.0.1:7878  (newline-JSON job queue:
-                        submit/status/wait/jobs/multiply/ping/shutdown)
-                        [--max-jobs 8] [--runners 2]
+                        submit/status/wait/jobs/multiply/plan/ping/
+                        shutdown) [--max-jobs 8] [--runners 2]
   serve-smoke:          start an ephemeral server, run the submit+wait+
                         shutdown protocol over the socket, exit non-zero
                         on any failure (the CI service check)
-  request:              --addr HOST:PORT [--op multiply|submit|status|
-                        wait|jobs|ping|shutdown] [--job-id N]
-                        [--timeout-ms N] --n 256 [--algo stark] [--b 4]
+  request:              --addr HOST:PORT [--op multiply|submit|plan|
+                        status|wait|jobs|ping|shutdown] [--job-id N]
+                        [--timeout-ms N] --n 256 [--algo auto] [--b auto]
 
 FLAGS (shared):
   --n <int>            matrix dimension            [512]
-  --b <int>            splits per side             [4]
+  --b, --splits <b>    splits per side: a number, or \"auto\" to let the
+                       cost-model planner choose   [4]
   --executors <int>    simulated executors         [2]
   --cores <int>        cores per executor          [2]
   --backend <kind>     naive | blocked | packed (pure Rust)
@@ -49,7 +58,9 @@ FLAGS (shared):
                        ("native" = alias for packed)
   --net-mbps <float>   simulated net bandwidth     [off]
   --seed <int>         input matrix seed           [42]
-  --algo <name>        stark | marlin | mllib      [stark]
+  --algo, --algorithm <name>
+                       auto | stark | marlin | mllib  [stark]
+                       (auto = cost-model planner's choice)
   --fused-leaf         fuse last recursion level into one XLA call
   --isolate-multiply   leaf multiplication in its own stage
   --no-map-side-combine  (stark) group-by-key baseline instead of the
@@ -63,12 +74,31 @@ FLAGS (shared):
   --executor-counts <list>  (scalability)          [1,2,3,4,5]
 ";
 
+/// Read `--<primary>` (falling back to `--<alias>`) as a `T`.
+fn flag2<T: std::str::FromStr>(args: &Args, primary: &str, alias: &str, default: T) -> T
+where
+    T::Err: std::fmt::Display,
+{
+    let (name, raw) = match (args.raw(primary), args.raw(alias)) {
+        (Some(v), _) => (primary, v),
+        (None, Some(v)) => (alias, v),
+        (None, None) => return default,
+    };
+    match raw.parse() {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("invalid value for --{name}: {raw:?} ({e})");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn run_config(args: &Args) -> RunConfig {
     let net_mbps: f64 = args.get("net-mbps", 0.0);
     RunConfig {
         n: args.get("n", 512),
-        b: args.get("b", 4),
-        algo: args.get("algo", Algorithm::Stark),
+        splits: flag2(args, "splits", "b", Splits::Fixed(4)),
+        algo: flag2(args, "algorithm", "algo", Algorithm::Stark),
         backend: args.get("backend", BackendKind::Xla),
         executors: args.get("executors", 2),
         cores_per_executor: args.get("cores", 2),
@@ -84,24 +114,45 @@ fn run_config(args: &Args) -> RunConfig {
     }
 }
 
-fn gen_inputs(cfg: &RunConfig) -> (DenseMatrix, DenseMatrix) {
+fn gen_inputs(cfg: &RunConfig) -> (Arc<DenseMatrix>, Arc<DenseMatrix>) {
     (
-        DenseMatrix::random(cfg.n, cfg.n, cfg.seed),
-        DenseMatrix::random(cfg.n, cfg.n, cfg.seed.wrapping_add(1)),
+        Arc::new(DenseMatrix::random(cfg.n, cfg.n, cfg.seed)),
+        Arc::new(DenseMatrix::random(cfg.n, cfg.n, cfg.seed.wrapping_add(1))),
     )
 }
 
-fn run_once(cfg: &RunConfig) -> Result<algos::MultiplyOutput> {
+fn session_for(cfg: &RunConfig) -> Result<StarkSession> {
+    Ok(SessionBuilder::from_run_config(cfg).build()?)
+}
+
+/// One multiply through the session API with the configured
+/// algorithm/splits selectors (either may be auto). Operands are Arc'd
+/// so the handles share (not copy) the payloads.
+fn run_with(
+    session: &StarkSession,
+    cfg: &RunConfig,
+    a: &Arc<DenseMatrix>,
+    b: &Arc<DenseMatrix>,
+) -> Result<MultiplyReport> {
+    Ok(session
+        .matrix_arc(a.clone())
+        .multiply(&session.matrix_arc(b.clone()))
+        .algorithm(cfg.algo)
+        .splits(cfg.splits)
+        .collect()?)
+}
+
+fn run_once(cfg: &RunConfig) -> Result<MultiplyReport> {
     let (a, b) = gen_inputs(cfg);
-    let ctx = cfg.context();
-    let backend = cfg.backend()?;
-    Ok(algos::common::run(cfg.algo, &ctx, backend, &a, &b, cfg.b, &cfg.stark_config()))
+    let session = session_for(cfg)?;
+    run_with(&session, cfg, &a, &b)
 }
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand() {
         Some("multiply") => cmd_multiply(&args),
+        Some("plan") => cmd_plan(&args),
         Some("compare") => cmd_compare(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("stages") => cmd_stages(&args),
@@ -120,58 +171,86 @@ fn main() -> Result<()> {
 
 fn cmd_multiply(args: &Args) -> Result<()> {
     let cfg = run_config(args);
-    // File-backed inputs take precedence over generated ones; general
-    // (rectangular / non-power-of-two) shapes go through pad-and-crop.
-    if let (Some(pa), Some(pb)) = (args.raw("input-a"), args.raw("input-b")) {
-        let a = stark::matrix::io::load(pa)?;
-        let b = stark::matrix::io::load(pb)?;
-        let ctx = cfg.context();
-        let backend = cfg.backend()?;
-        let out = stark::algos::multiply_general(
-            cfg.algo,
-            &ctx,
-            backend,
-            &a,
-            &b,
-            cfg.b,
-            &cfg.stark_config(),
-        );
-        println!(
-            "{} ({}x{})@({}x{}) b={}: wall={:.1} ms, {} leaf products",
-            cfg.algo,
-            a.rows(),
-            a.cols(),
-            b.rows(),
-            b.cols(),
-            cfg.b,
-            out.job.wall_ms,
-            out.leaf_calls
-        );
-        if let Some(po) = args.raw("output") {
-            stark::matrix::io::save(&out.c, po)?;
-            println!("wrote {po}");
-        }
-        return Ok(());
-    }
-    let out = run_once(&cfg)?;
+    let session = session_for(&cfg)?;
+    // File-backed inputs take precedence over generated ones; the
+    // session pads/crops arbitrary shapes either way.
+    let (a, b) = if let (Some(pa), Some(pb)) = (args.raw("input-a"), args.raw("input-b")) {
+        (Arc::new(stark::matrix::io::load(pa)?), Arc::new(stark::matrix::io::load(pb)?))
+    } else {
+        gen_inputs(&cfg)
+    };
+    let out = run_with(&session, &cfg, &a, &b)?;
     println!(
-        "{} n={} b={} backend={}: wall={:.1} ms, leaf={:.1} ms over {} multiplications, shuffle={}",
-        cfg.algo,
-        cfg.n,
-        cfg.b,
+        "{} ({}x{})@({}x{}) b={} backend={}: wall={:.1} ms, leaf={:.1} ms over {} \
+         multiplications, shuffle={}",
+        out.plan.algorithm,
+        a.rows(),
+        a.cols(),
+        b.rows(),
+        b.cols(),
+        out.plan.b,
         cfg.backend,
         out.job.wall_ms,
         out.leaf_ms,
         out.leaf_calls,
         fmt_bytes(out.job.total_shuffle_bytes()),
     );
+    if cfg.algo == Algorithm::Auto || cfg.splits == Splits::Auto {
+        println!(
+            "planner: chose {} with b={} (padded n={}, predicted {:.1} ms)",
+            out.plan.algorithm,
+            out.plan.b,
+            out.plan.n,
+            out.plan.predicted_wall_ms(),
+        );
+    }
+    if let Some(po) = args.raw("output") {
+        stark::matrix::io::save(&out.c, po)?;
+        println!("wrote {po}");
+    }
     if args.flag("verify") {
-        let (a, b) = gen_inputs(&cfg);
         let want = matmul_parallel(&a, &b, cfg.executors * cfg.cores_per_executor);
         let diff = want.max_abs_diff(&out.c);
         println!("verify: max |Δ| = {diff:.3e}");
-        anyhow::ensure!(diff < 1e-8 * cfg.n as f64, "verification FAILED");
+        anyhow::ensure!(diff < 1e-8 * a.rows().max(b.cols()) as f64, "verification FAILED");
         println!("verify: OK");
+    }
+    Ok(())
+}
+
+/// `stark plan` — the planner without the run: what algorithm and split
+/// count would `--n` get, at which predicted cost? Defaults both
+/// selectors to auto (pin either with --algorithm/--splits).
+fn cmd_plan(args: &Args) -> Result<()> {
+    let cfg = run_config(args);
+    let n: usize = args.get("n", 4096);
+    let cores = cfg.cluster_config().total_cores();
+    let calibration = match args.raw("calibration") {
+        Some(path) => Calibration::load(path).map_err(anyhow::Error::msg)?,
+        None => Calibration::DEFAULT,
+    };
+    let planner = Planner::with_calibration(cores, calibration);
+    let algo = flag2(args, "algorithm", "algo", Algorithm::Auto);
+    let splits = flag2(args, "splits", "b", Splits::Auto);
+    let plan = planner.resolve(algo, splits, n)?;
+    println!(
+        "plan for n={n} on {cores} cores (α={:.2e}, β={:.2e}):",
+        planner.calibration.alpha, planner.calibration.beta
+    );
+    println!(
+        "  run {} with b={} (padded n={}), predicted {:.1} ms\n",
+        plan.algorithm,
+        plan.b,
+        plan.n,
+        plan.predicted_wall_ms()
+    );
+    let mut t = Table::new(vec!["algorithm", "b", "predicted ms"]);
+    for c in plan.considered.iter().take(10) {
+        t.row(vec![c.algorithm.to_string(), c.b.to_string(), format!("{:.2}", c.wall_ms)]);
+    }
+    t.print();
+    if plan.considered.len() > 10 {
+        println!("  … {} more candidates", plan.considered.len() - 10);
     }
     Ok(())
 }
@@ -207,7 +286,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let mut t = Table::new(vec!["b", "wall ms", "leaf ms", "leaves", "shuffle"]);
     for b in bs {
         let mut cfg = run_config(args);
-        cfg.b = b;
+        cfg.splits = Splits::Fixed(b);
         let out = run_once(&cfg)?;
         t.row(vec![
             b.to_string(),
@@ -299,10 +378,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.raw("addr").unwrap_or("127.0.0.1:7878").to_string();
     let cfg = run_config(args);
     let state = stark::serve::ServerState {
-        ctx: cfg.context(),
-        backend: cfg.backend()?,
-        default_b: cfg.b,
-        stark_cfg: cfg.stark_config(),
+        session: session_for(&cfg)?,
+        default_splits: cfg.splits,
         max_inflight_jobs: args.get("max-jobs", 8usize),
         job_runners: args.get("runners", 2usize),
     };
@@ -337,12 +414,31 @@ fn cmd_request(args: &Args) -> Result<()> {
     let addr = args.raw("addr").unwrap_or("127.0.0.1:7878").to_string();
     let op = args.raw("op").unwrap_or("multiply").to_string();
     let mut fields = vec![("op", Value::str(op.clone()))];
+    // "b" crosses the wire as a number or the string "auto".
+    let b_value = |default: &str| -> Value {
+        let raw = args.raw("splits").or(args.raw("b")).unwrap_or(default);
+        match raw.parse::<u64>() {
+            Ok(n) => Value::num(n as f64),
+            Err(_) => Value::str(raw),
+        }
+    };
     match op.as_str() {
         "multiply" | "submit" => {
-            fields.push(("algo", Value::str(args.raw("algo").unwrap_or("stark"))));
+            fields.push((
+                "algo",
+                Value::str(args.raw("algorithm").or(args.raw("algo")).unwrap_or("stark")),
+            ));
             fields.push(("n", Value::num(args.get("n", 256usize) as f64)));
-            fields.push(("b", Value::num(args.get("b", 4usize) as f64)));
+            fields.push(("b", b_value("4")));
             fields.push(("seed", Value::num(args.get("seed", 42u64) as f64)));
+        }
+        "plan" => {
+            fields.push((
+                "algo",
+                Value::str(args.raw("algorithm").or(args.raw("algo")).unwrap_or("auto")),
+            ));
+            fields.push(("n", Value::num(args.get("n", 4096usize) as f64)));
+            fields.push(("b", b_value("auto")));
         }
         "status" | "wait" => {
             let id: u64 = args
@@ -369,10 +465,8 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     let mut cfg = run_config(args);
     cfg.backend = args.get("backend", BackendKind::Packed);
     let state = stark::serve::ServerState {
-        ctx: cfg.context(),
-        backend: cfg.backend()?,
-        default_b: 2,
-        stark_cfg: cfg.stark_config(),
+        session: session_for(&cfg)?,
+        default_splits: Splits::Fixed(2),
         max_inflight_jobs: 8,
         job_runners: 2,
     };
@@ -382,6 +476,39 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
 
     let ping = stark::serve::request(&addr, &Value::obj(vec![("op", Value::str("ping"))]))?;
     anyhow::ensure!(ping.get("ok") == Some(&Value::Bool(true)), "ping failed: {ping:?}");
+
+    // The planner as a service: a plan request resolves auto/auto to a
+    // concrete (algorithm, b) without running anything.
+    let plan = stark::serve::request(
+        &addr,
+        &Value::obj(vec![("op", Value::str("plan")), ("n", Value::num(512.0))]),
+    )?;
+    anyhow::ensure!(plan.get("ok") == Some(&Value::Bool(true)), "plan failed: {plan:?}");
+    let planned_algo =
+        plan.get("algorithm").and_then(Value::as_str).unwrap_or("missing").to_string();
+    anyhow::ensure!(
+        ["stark", "marlin", "mllib"].contains(&planned_algo.as_str()),
+        "plan did not resolve to a concrete algorithm: {plan:?}"
+    );
+    let planned_b = plan.get("b").and_then(Value::as_u64).unwrap_or(0);
+    anyhow::ensure!(planned_b >= 1, "plan returned no b: {plan:?}");
+    println!("serve-smoke: plan(n=512) -> {planned_algo} b={planned_b}");
+
+    // An auto-selected multiply runs the planner's choice end to end.
+    let auto = stark::serve::request(
+        &addr,
+        &Value::obj(vec![
+            ("op", Value::str("multiply")),
+            ("algo", Value::str("auto")),
+            ("b", Value::str("auto")),
+            ("n", Value::num(64.0)),
+        ]),
+    )?;
+    anyhow::ensure!(auto.get("ok") == Some(&Value::Bool(true)), "auto multiply: {auto:?}");
+    anyhow::ensure!(
+        auto.get("algorithm").and_then(Value::as_str).map_or(false, |a| a != "auto"),
+        "auto multiply did not report its resolved algorithm: {auto:?}"
+    );
 
     // Two jobs submitted back to back share the cluster concurrently.
     let submit = |algo: &str, n: usize, b: usize, seed: u64| -> Result<u64> {
@@ -461,7 +588,7 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     let bye = stark::serve::request(&addr, &Value::obj(vec![("op", Value::str("shutdown"))]))?;
     anyhow::ensure!(bye.get("ok") == Some(&Value::Bool(true)), "shutdown: {bye:?}");
     server.stop();
-    println!("serve-smoke: OK (submit/jobs/wait/multiply/shutdown over {addr})");
+    println!("serve-smoke: OK (plan/submit/jobs/wait/multiply/shutdown over {addr})");
     Ok(())
 }
 

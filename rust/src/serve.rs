@@ -41,8 +41,20 @@
 //! -> {"op":"multiply","algo":"stark","n":256,"b":4,"seed":7}
 //! <- {"ok":true,"job_id":4,"frobenius":148.8,"stages":[...],...}
 //!
+//! // Ask the cost-model planner what it WOULD run, without running it.
+//! // "algo" and "b" both default to "auto"; "b" also accepts a number:
+//! -> {"op":"plan","n":4096}
+//! <- {"ok":true,"algorithm":"stark","b":8,"n":4096,
+//!     "predicted_wall_ms":123.4,"stages":[...],"considered":[...]}
+//!
 //! -> {"op":"shutdown"}
 //! ```
+//!
+//! Submitted jobs run through the server's [`StarkSession`]: `"algo"`
+//! and `"b"` may each be `"auto"`, in which case the session's planner
+//! picks the concrete algorithm/split count (reported back in the
+//! result document), and inline matrices of any shape are padded and
+//! cropped by the session exactly as for API users.
 //!
 //! Concurrency model: one handler thread per connection (tracked and
 //! joined on [`Server::stop`], with a drain deadline before sockets are
@@ -60,10 +72,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::algos::{self, Algorithm, StarkConfig};
-use crate::engine::SparkContext;
+use crate::algos::Algorithm;
+use crate::api::StarkSession;
+use crate::cost::{Plan, Splits};
 use crate::matrix::DenseMatrix;
-use crate::runtime::LeafBackend;
 use crate::util::json::{self, Value};
 
 /// How long [`Server::stop`] lets in-flight connection handlers finish
@@ -90,15 +102,13 @@ const MAX_SUBMIT_N: usize = 16_384;
 /// panic the handler) while still being far longer than any job.
 const MAX_WAIT_TIMEOUT_MS: u64 = 3_600_000;
 
-/// Shared server state: the simulated cluster, the leaf backend, and the
-/// job-queue knobs.
+/// Shared server state: the session every job runs through (cluster +
+/// leaf backend + Stark knobs + planner) and the job-queue knobs.
 pub struct ServerState {
-    pub ctx: SparkContext,
-    pub backend: Arc<dyn LeafBackend>,
-    pub default_b: usize,
-    /// Stark knobs applied to every served job (`--fused-leaf`,
-    /// `--isolate-multiply`, `--no-map-side-combine` on `stark serve`).
-    pub stark_cfg: StarkConfig,
+    pub session: StarkSession,
+    /// Split selection applied when a request carries no `"b"` field
+    /// (`--b`/`--splits` on `stark serve`; `Splits::Auto` = planner).
+    pub default_splits: Splits,
     /// Admission bound: maximum queued + running jobs before `submit`
     /// (and the `multiply` sugar) answers with a `busy` rejection.
     pub max_inflight_jobs: usize,
@@ -110,12 +120,14 @@ pub struct ServerState {
 }
 
 /// A parsed, validated multiply request (everything checked at submit
-/// time so the runner can't panic on malformed input).
+/// time so the runner can't fail on malformed input). `algo`/`splits`
+/// may still be auto — resolved by the session's planner at run time
+/// (and pre-validated by a dry-run plan at submit time).
 struct JobSpec {
     algo: Algorithm,
-    b: usize,
-    a: DenseMatrix,
-    b_mat: DenseMatrix,
+    splits: Splits,
+    a: Arc<DenseMatrix>,
+    b_mat: Arc<DenseMatrix>,
     return_c: bool,
 }
 
@@ -457,23 +469,31 @@ fn panic_message(panic: &Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-/// Run one job end to end and build its result document. The engine job
-/// is scoped (`run_job` inside the algorithm), so `out.job` holds only
-/// THIS job's stages even with other jobs running concurrently.
+/// Run one job end to end through the session and build its result
+/// document. The engine job is scoped (`run_job` inside the algorithm),
+/// so `out.job` holds only THIS job's stages even with other jobs
+/// running concurrently. A typed failure (shapes re-checked, planner)
+/// becomes an `ok:false` document rather than a panicking runner.
 fn execute(state: &ServerState, id: u64, spec: &JobSpec) -> Value {
-    let out = algos::multiply_general(
-        spec.algo,
-        &state.ctx,
-        state.backend.clone(),
-        &spec.a,
-        &spec.b_mat,
-        spec.b,
-        &state.stark_cfg,
-    );
+    let a = state.session.matrix_arc(spec.a.clone());
+    let b = state.session.matrix_arc(spec.b_mat.clone());
+    let out = match a.multiply(&b).algorithm(spec.algo).splits(spec.splits).collect() {
+        Ok(out) => out,
+        Err(e) => {
+            return Value::obj(vec![
+                ("ok", Value::Bool(false)),
+                ("job_id", Value::num(id as f64)),
+                ("error", Value::str(e.to_string())),
+            ])
+        }
+    };
     let mut fields = vec![
         ("ok", Value::Bool(true)),
         ("job_id", Value::num(id as f64)),
         ("algo", Value::str(spec.algo.to_string())),
+        // What the planner/session actually ran (= "algo" unless auto).
+        ("algorithm", Value::str(out.plan.algorithm.to_string())),
+        ("b", Value::num(out.plan.b as f64)),
         ("rows", Value::num(out.c.rows() as f64)),
         ("cols", Value::num(out.c.cols() as f64)),
         ("wall_ms", Value::num(out.job.wall_ms)),
@@ -516,18 +536,29 @@ fn matrix_to_json(m: &DenseMatrix) -> Value {
     )
 }
 
+/// Parse a request's `"b"` field: a number, `"auto"`, or absent.
+fn parse_splits(req: &Value, default: Splits) -> Result<Splits> {
+    match req.get("b") {
+        None => Ok(default),
+        Some(Value::String(s)) => s.parse::<Splits>().map_err(anyhow::Error::msg),
+        Some(v) => {
+            Ok(Splits::Fixed(v.as_usize().context("\"b\" must be a number or \"auto\"")?))
+        }
+    }
+}
+
 /// Parse and validate a submit/multiply request into a [`JobSpec`] —
-/// every invariant the algorithms assert is checked here, so malformed
-/// requests are rejected at submit time instead of failing the job.
-fn parse_spec(req: &Value, default_b: usize) -> Result<JobSpec> {
+/// every invariant the session checks at run time is dry-run here (a
+/// planner resolution), so malformed requests are rejected at submit
+/// time instead of failing the job.
+fn parse_spec(session: &StarkSession, req: &Value, default_splits: Splits) -> Result<JobSpec> {
     let algo: Algorithm = req
         .get("algo")
         .and_then(Value::as_str)
         .unwrap_or("stark")
         .parse()
         .map_err(anyhow::Error::msg)?;
-    let b = req.get("b").and_then(Value::as_usize).unwrap_or(default_b);
-    anyhow::ensure!(b >= 1 && b.is_power_of_two(), "\"b\" must be a power of two, got {b}");
+    let splits = parse_splits(req, default_splits)?;
     let (a, b_mat) = match (req.get("a"), req.get("b_mat")) {
         (Some(a), Some(bm)) => (parse_matrix(a)?, parse_matrix(bm)?),
         _ => {
@@ -552,15 +583,63 @@ fn parse_spec(req: &Value, default_b: usize) -> Result<JobSpec> {
         b_mat.rows(),
         b_mat.cols()
     );
+    // Dry-run the planner: rejects invalid (algorithm, b) combinations
+    // (e.g. stark with a non-power-of-two b) with the typed message and
+    // yields the padded working size the job will actually allocate.
+    let max_dim = a.rows().max(a.cols()).max(b_mat.cols());
+    let plan = session.plan_for(algo, splits, max_dim).map_err(anyhow::Error::msg)?;
     // Bound the padded working size (pad-and-crop squares the largest
     // dimension): one oversized request must not OOM the whole server.
-    let padded = crate::algos::general::padded_size(a.rows(), a.cols(), b_mat.cols(), b);
     anyhow::ensure!(
-        padded <= MAX_SUBMIT_N,
-        "workload too large: padded size {padded} exceeds the server cap {MAX_SUBMIT_N}"
+        plan.n <= MAX_SUBMIT_N,
+        "workload too large: padded size {} exceeds the server cap {MAX_SUBMIT_N}",
+        plan.n
     );
     let return_c = req.get("return_c").and_then(Value::as_bool).unwrap_or(false);
-    Ok(JobSpec { algo, b, a, b_mat, return_c })
+    Ok(JobSpec { algo, splits, a: Arc::new(a), b_mat: Arc::new(b_mat), return_c })
+}
+
+/// Render a [`Plan`] as the `plan` op's response document.
+fn plan_to_json(plan: &Plan) -> Value {
+    Value::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("algorithm", Value::str(plan.algorithm.to_string())),
+        ("b", Value::num(plan.b as f64)),
+        ("n", Value::num(plan.n as f64)),
+        ("predicted_wall_ms", Value::num(plan.predicted_wall_ms())),
+        (
+            "stages",
+            Value::Array(
+                plan.predicted
+                    .stages
+                    .iter()
+                    .map(|st| {
+                        Value::obj(vec![
+                            ("label", Value::str(st.label.clone())),
+                            ("comp", Value::num(st.comp)),
+                            ("comm", Value::num(st.comm)),
+                            ("pf", Value::num(st.pf)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "considered",
+            Value::Array(
+                plan.considered
+                    .iter()
+                    .map(|c| {
+                        Value::obj(vec![
+                            ("algorithm", Value::str(c.algorithm.to_string())),
+                            ("b", Value::num(c.b as f64)),
+                            ("wall_ms", Value::num(c.wall_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 enum Submitted {
@@ -572,7 +651,7 @@ enum Submitted {
 /// document (`busy` when the queue is at its bound, an error once
 /// shutdown began).
 fn submit_job(shared: &Shared, spec: JobSpec) -> Submitted {
-    let name = format!("{} n={} b={}", spec.algo, spec.a.rows(), spec.b);
+    let name = format!("{} n={} b={}", spec.algo, spec.a.rows(), spec.splits);
     let mut jobs = shared.jobs.inner.lock().unwrap();
     if !jobs.accepting || shared.shutdown.load(Ordering::SeqCst) {
         return Submitted::Rejected(Value::obj(vec![
@@ -684,7 +763,7 @@ fn handle_request(line: &str, shared: &Shared) -> Result<Value> {
                 ("ok", Value::Bool(true)),
                 ("service", Value::str("stark")),
                 ("version", Value::str(env!("CARGO_PKG_VERSION"))),
-                ("backend", Value::str(shared.state.backend.name())),
+                ("backend", Value::str(shared.state.session.backend().name())),
                 ("jobs_inflight", Value::num(inflight as f64)),
             ]))
         }
@@ -695,7 +774,7 @@ fn handle_request(line: &str, shared: &Shared) -> Result<Value> {
             Ok(Value::obj(vec![("ok", Value::Bool(true)), ("stopping", Value::Bool(true))]))
         }
         "submit" => {
-            let spec = parse_spec(&req, shared.state.default_b)?;
+            let spec = parse_spec(&shared.state.session, &req, shared.state.default_splits)?;
             match submit_job(shared, spec) {
                 Submitted::Accepted(id) => Ok(Value::obj(vec![
                     ("ok", Value::Bool(true)),
@@ -764,9 +843,27 @@ fn handle_request(line: &str, shared: &Shared) -> Result<Value> {
                 ("jobs", Value::Array(list)),
             ]))
         }
+        // The planner as a service: "what would you run?" without
+        // running it. "algo"/"b" default to auto here (unlike submit,
+        // where they default to stark/the server's --b) — asking for a
+        // plan implies wanting the planner's opinion.
+        "plan" => {
+            let n = req.get("n").and_then(Value::as_usize).context("missing \"n\"")?;
+            anyhow::ensure!(n >= 1 && n <= MAX_SUBMIT_N, "\"n\" must be in 1..={MAX_SUBMIT_N}");
+            let algo: Algorithm = req
+                .get("algo")
+                .and_then(Value::as_str)
+                .unwrap_or("auto")
+                .parse()
+                .map_err(anyhow::Error::msg)?;
+            let splits = parse_splits(&req, Splits::Auto)?;
+            let plan =
+                shared.state.session.plan_for(algo, splits, n).map_err(anyhow::Error::msg)?;
+            Ok(plan_to_json(&plan))
+        }
         // Synchronous multiply: submit + wait, same admission control.
         "multiply" => {
-            let spec = parse_spec(&req, shared.state.default_b)?;
+            let spec = parse_spec(&shared.state.session, &req, shared.state.default_splits)?;
             match submit_job(shared, spec) {
                 Submitted::Accepted(id) => wait_for(shared, id, None),
                 Submitted::Rejected(doc) => Ok(doc),
@@ -795,11 +892,14 @@ mod tests {
     use crate::engine::ClusterConfig;
 
     fn test_state() -> ServerState {
+        let session = StarkSession::builder()
+            .cluster(ClusterConfig::new(2, 1))
+            .backend_kind(BackendKind::Packed)
+            .build()
+            .unwrap();
         ServerState {
-            ctx: SparkContext::new(ClusterConfig::new(2, 1)),
-            backend: crate::config::build_backend(BackendKind::Packed, 1).unwrap(),
-            default_b: 2,
-            stark_cfg: StarkConfig::default(),
+            session,
+            default_splits: Splits::Fixed(2),
             max_inflight_jobs: 8,
             job_runners: 2,
         }
@@ -961,7 +1061,7 @@ mod tests {
             vec![("op", Value::str("submit")), ("n", Value::num(8.0)), ("b", Value::num(3.0))],
         );
         assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
-        assert!(resp.get("error").unwrap().as_str().unwrap().contains("power of two"));
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("power-of-two"));
         // status/wait on unknown ids error instead of hanging.
         let resp = req(
             &addr,
@@ -1068,6 +1168,72 @@ mod tests {
             "stop() hung on an idle connection"
         );
         drop(idle);
+    }
+
+    #[test]
+    fn plan_op_reports_planner_choice() {
+        let server = test_server();
+        let addr = server.addr().to_string();
+        // Auto everything: 2 cores, n=256 sits on the baseline side of
+        // the crossover at the default calibration.
+        let resp = req(&addr, vec![("op", Value::str("plan")), ("n", Value::num(256.0))]);
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+        let algo = resp.get("algorithm").unwrap().as_str().unwrap();
+        assert_ne!(algo, "auto", "plan must resolve to a concrete system");
+        assert_ne!(algo, "stark", "n=256 is baseline territory");
+        assert!(resp.get("b").unwrap().as_u64().unwrap() >= 1);
+        assert_eq!(resp.get("n").unwrap().as_u64(), Some(256));
+        assert!(resp.get("predicted_wall_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(!resp.get("considered").unwrap().as_array().unwrap().is_empty());
+        assert!(!resp.get("stages").unwrap().as_array().unwrap().is_empty());
+        // Constrained plan: fixed algorithm, planner picks b only.
+        let resp = req(
+            &addr,
+            vec![
+                ("op", Value::str("plan")),
+                ("n", Value::num(256.0)),
+                ("algo", Value::str("stark")),
+            ],
+        );
+        assert_eq!(resp.get("algorithm").unwrap().as_str(), Some("stark"));
+        // Invalid combinations come back as protocol errors, not panics.
+        let resp = req(
+            &addr,
+            vec![
+                ("op", Value::str("plan")),
+                ("n", Value::num(64.0)),
+                ("algo", Value::str("stark")),
+                ("b", Value::num(3.0)),
+            ],
+        );
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
+    }
+
+    #[test]
+    fn auto_submit_runs_planner_choice() {
+        let server = test_server();
+        let addr = server.addr().to_string();
+        let resp = req(
+            &addr,
+            vec![
+                ("op", Value::str("multiply")),
+                ("algo", Value::str("auto")),
+                ("b", Value::str("auto")),
+                ("n", Value::num(32.0)),
+                ("seed", Value::num(11.0)),
+            ],
+        );
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("algo").unwrap().as_str(), Some("auto"));
+        let ran = resp.get("algorithm").unwrap().as_str().unwrap();
+        assert!(["stark", "marlin", "mllib"].contains(&ran), "{ran}");
+        assert!(resp.get("b").unwrap().as_u64().unwrap() >= 1);
+        // Product correctness via frobenius against a local reference.
+        let a = DenseMatrix::random(32, 32, 11);
+        let b = DenseMatrix::random(32, 32, 12);
+        let want = crate::matrix::matmul_blocked(&a, &b).frobenius();
+        let got = resp.get("frobenius").unwrap().as_f64().unwrap();
+        assert!((want - got).abs() < 1e-9, "{want} vs {got}");
     }
 
     #[test]

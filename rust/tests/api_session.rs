@@ -1,0 +1,147 @@
+//! Integration: the session/DistMatrix public API and the cost-model
+//! planner — auto-planned multiplies across arbitrary shapes, handle
+//! caching across jobs, and the planner's crossover surfaced end to end.
+
+use stark::algos::Algorithm;
+use stark::api::StarkSession;
+use stark::cost::{Calibration, Splits};
+use stark::engine::ClusterConfig;
+use stark::matrix::multiply::matmul_naive;
+use stark::matrix::DenseMatrix;
+use stark::util::prop::{assert_prop, Draw};
+use stark::StarkError;
+
+fn session() -> StarkSession {
+    StarkSession::builder().cluster(ClusterConfig::new(2, 2)).build().unwrap()
+}
+
+/// Auto-planned multiplies over random odd/rectangular shapes: the
+/// padded product, cropped back, must match the dense reference, and
+/// re-running the identical request must reproduce the result bit for
+/// bit (distributed execution is deterministic).
+#[test]
+fn prop_auto_planned_multiplies_match_dense_reference() {
+    let s = session();
+    assert_prop("auto plan odd shapes", 0xA9_1, 25, |rng| {
+        let m = rng.range(1, 41);
+        let k = rng.range(1, 41);
+        let n = rng.range(1, 41);
+        let a = DenseMatrix::random(m, k, rng.next_u64());
+        let b = DenseMatrix::random(k, n, rng.next_u64());
+        let (ha, hb) = (s.matrix(&a), s.matrix(&b));
+        let out = ha
+            .multiply(&hb)
+            .collect()
+            .map_err(|e| format!("{m}x{k}@{k}x{n}: {e}"))?;
+        if (out.c.rows(), out.c.cols()) != (m, n) {
+            return Err(format!(
+                "shape: got {}x{}, want {m}x{n}",
+                out.c.rows(),
+                out.c.cols()
+            ));
+        }
+        if out.plan.algorithm == Algorithm::Auto {
+            return Err("plan left Auto unresolved".to_string());
+        }
+        let want = matmul_naive(&a, &b);
+        let diff = want.max_abs_diff(&out.c);
+        if diff > 1e-9 {
+            return Err(format!(
+                "{m}x{k}@{k}x{n} via {} b={}: diff {diff}",
+                out.plan.algorithm, out.plan.b
+            ));
+        }
+        // Determinism: the same auto-planned request is bit-stable.
+        let again = ha.multiply(&hb).collect().map_err(|e| e.to_string())?;
+        if again.c.as_slice() != out.c.as_slice() {
+            return Err("auto-planned rerun changed bits".to_string());
+        }
+        Ok(())
+    });
+}
+
+/// One A against many Bs: the A handle splits its blocks exactly once
+/// however many multiplies consume it (padding included).
+#[test]
+fn one_a_many_bs_distributes_a_once() {
+    let s = session();
+    let am = DenseMatrix::random(24, 24, 1); // pads to 32 under auto
+    let a = s.matrix(&am);
+    for seed in 2..6u64 {
+        let bm = DenseMatrix::random(24, 24, seed);
+        let out = a.multiply(&s.matrix(&bm)).collect().unwrap();
+        assert!(matmul_naive(&am, &bm).allclose(&out.c, 1e-9), "seed {seed}");
+    }
+    assert_eq!(a.splits_computed(), 1, "A was re-split across jobs");
+}
+
+/// The acceptance criterion: Auto provably selects different algorithms
+/// and splits on opposite sides of the cost-model crossover. At the
+/// default calibration on 4 cores the crossover sits between n=1024 and
+/// n=2048 (plan level); in execution the same workload flips from a
+/// baseline to Stark when the calibration zeroes the communication term.
+#[test]
+fn auto_crossover_changes_selection() {
+    let s = session(); // 2×2 = 4 cores
+    let small = s.plan(1024);
+    let large = s.plan(2048);
+    assert_ne!(small.algorithm, Algorithm::Stark, "small side: {:?}", small.considered[0]);
+    assert_eq!(large.algorithm, Algorithm::Stark, "large side: {:?}", large.considered[0]);
+    assert_eq!((s.plan(4096).algorithm, s.plan(4096).b), (Algorithm::Stark, 4));
+
+    // Execution-level flip at a test-sized n (β=0 moves the crossover
+    // below 256; see the planner's `calibration_moves_the_crossover`).
+    let am = DenseMatrix::random(256, 256, 3);
+    let bm = DenseMatrix::random(256, 256, 4);
+    let want = matmul_naive(&am, &bm);
+    let baseline_side = s.matrix(&am).multiply(&s.matrix(&bm)).collect().unwrap();
+    assert_ne!(baseline_side.plan.algorithm, Algorithm::Stark);
+    assert!(want.allclose(&baseline_side.c, 1e-9));
+
+    let comp_only = StarkSession::builder()
+        .cluster(ClusterConfig::new(2, 2))
+        .calibration(Calibration { alpha: 1e-9, beta: 0.0 })
+        .build()
+        .unwrap();
+    let stark_side = comp_only.matrix(&am).multiply(&comp_only.matrix(&bm)).collect().unwrap();
+    assert_eq!(stark_side.plan.algorithm, Algorithm::Stark);
+    assert!(want.allclose(&stark_side.c, 1e-9));
+}
+
+/// Incompatible operands are typed errors at the API boundary — the
+/// process no longer aborts on a bad request.
+#[test]
+fn incompatible_operands_do_not_panic() {
+    let s = session();
+    let a = s.matrix(&DenseMatrix::random(7, 5, 1));
+    let b = s.matrix(&DenseMatrix::random(6, 7, 2)); // 5 != 6
+    match a.multiply(&b).collect() {
+        Err(StarkError::ShapeMismatch { a: (7, 5), b: (6, 7), .. }) => {}
+        other => panic!("expected ShapeMismatch, got {other:?}"),
+    }
+    // Stark with a non-power-of-two fixed b: typed, not fatal.
+    let sq = s.matrix(&DenseMatrix::random(12, 12, 3));
+    match sq.multiply(&sq).algorithm(Algorithm::Stark).splits(Splits::Fixed(3)).collect() {
+        Err(StarkError::InvalidSplits { algorithm: Algorithm::Stark, b: 3, .. }) => {}
+        other => panic!("expected InvalidSplits, got {other:?}"),
+    }
+    // The same b is fine for the baselines (12 % 3 == 0).
+    let out =
+        sq.multiply(&sq).algorithm(Algorithm::Marlin).splits(Splits::Fixed(3)).collect().unwrap();
+    assert_eq!(out.plan.b, 3);
+    assert!(matmul_naive(sq.dense(), sq.dense()).allclose(&out.c, 1e-9));
+}
+
+/// `Algorithm` round-trips its new `auto` spelling alongside the three
+/// concrete systems.
+#[test]
+fn algorithm_and_splits_parse_auto() {
+    assert_eq!("auto".parse::<Algorithm>().unwrap(), Algorithm::Auto);
+    assert_eq!(Algorithm::Auto.to_string(), "auto");
+    for algo in Algorithm::ALL {
+        assert_eq!(algo.to_string().parse::<Algorithm>().unwrap(), algo);
+        assert_ne!(algo, Algorithm::Auto, "ALL stays concrete");
+    }
+    assert_eq!("auto".parse::<Splits>().unwrap(), Splits::Auto);
+    assert_eq!("16".parse::<Splits>().unwrap(), Splits::Fixed(16));
+}

@@ -5,7 +5,9 @@
 //! stage metrics (no cross-job bleed through a shared "current" slot).
 
 use stark::algos::{self, Algorithm, StarkConfig};
+use stark::api::StarkSession;
 use stark::config::{build_backend, BackendKind};
+use stark::cost::Splits;
 use stark::engine::{ClusterConfig, SparkContext};
 use stark::matrix::multiply::matmul_naive;
 use stark::matrix::DenseMatrix;
@@ -43,8 +45,8 @@ fn local_reference(
 ) -> (DenseMatrix, Vec<String>) {
     let ctx = SparkContext::new(ClusterConfig::new(2, 2));
     let backend = build_backend(BackendKind::Packed, 1).unwrap();
-    let out =
-        algos::multiply_general(algo, &ctx, backend, a, bm, b, &StarkConfig::default());
+    let out = algos::multiply_general(algo, &ctx, backend, a, bm, b, &StarkConfig::default())
+        .unwrap();
     let labels = out.job.stages.iter().map(|s| s.label.clone()).collect();
     (out.c, labels)
 }
@@ -54,11 +56,14 @@ fn serve_concurrent_clients_bit_correct_and_isolated() {
     const CLIENTS: usize = 4;
     const REQUESTS: usize = 3;
 
+    let session = StarkSession::builder()
+        .cluster(ClusterConfig::new(2, 2))
+        .backend(build_backend(BackendKind::Packed, 2).unwrap())
+        .build()
+        .unwrap();
     let state = ServerState {
-        ctx: SparkContext::new(ClusterConfig::new(2, 2)),
-        backend: build_backend(BackendKind::Packed, 2).unwrap(),
-        default_b: 2,
-        stark_cfg: StarkConfig::default(),
+        session,
+        default_splits: Splits::Fixed(2),
         max_inflight_jobs: 16,
         job_runners: 3,
     };
@@ -165,7 +170,8 @@ fn engine_concurrent_multiplies_on_shared_context() {
         handles.push(std::thread::spawn(move || {
             let a = DenseMatrix::random(16, 16, 70 + t as u64);
             let bm = DenseMatrix::random(16, 16, 80 + t as u64);
-            let out = algos::stark::multiply(&ctx, backend, &a, &bm, b, &StarkConfig::default());
+            let out = algos::stark::multiply(&ctx, backend, &a, &bm, b, &StarkConfig::default())
+                .unwrap();
             let want = matmul_naive(&a, &bm);
             assert!(
                 want.allclose(&out.c, 1e-9),

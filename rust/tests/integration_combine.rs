@@ -88,11 +88,14 @@ fn serve_round_trip_matches_naive() {
     use stark::serve::{request, Server, ServerState};
     use stark::util::json::Value;
 
+    let session = stark::api::StarkSession::builder()
+        .cluster(ClusterConfig::new(2, 1))
+        .backend(build_backend(BackendKind::Packed, 1).unwrap())
+        .build()
+        .unwrap();
     let state = ServerState {
-        ctx: SparkContext::new(ClusterConfig::new(2, 1)),
-        backend: build_backend(BackendKind::Packed, 1).unwrap(),
-        default_b: 2,
-        stark_cfg: stark::algos::StarkConfig::default(),
+        session,
+        default_splits: stark::cost::Splits::Fixed(2),
         max_inflight_jobs: 4,
         job_runners: 1,
     };

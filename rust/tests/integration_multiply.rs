@@ -4,10 +4,14 @@
 
 use std::sync::Arc;
 
-use stark::algos::{marlin, mllib, stark as stark_algo, Algorithm, StarkConfig};
+use stark::algos::{marlin, mllib, stark as stark_algo, Algorithm, BaselineOptions, StarkConfig};
+use stark::api::StarkSession;
+use stark::cost::Splits;
 use stark::engine::{ClusterConfig, FailureSpec, SparkContext};
 use stark::matrix::{matmul_parallel, DenseMatrix};
 use stark::runtime::NativeBackend;
+
+const BASE: BaselineOptions = BaselineOptions { isolate_multiply: false };
 
 fn reference(n: usize, seed: u64) -> (DenseMatrix, DenseMatrix, DenseMatrix) {
     let a = DenseMatrix::random(n, n, seed);
@@ -25,15 +29,15 @@ fn all_algorithms_agree_with_reference_across_grid() {
                 let ctx = SparkContext::new(ClusterConfig::new(execs, cores));
                 let backend = Arc::new(NativeBackend::default());
                 let cfg = StarkConfig::default();
-                let s = stark_algo::multiply(&ctx, backend.clone(), &a, &b, bb, &cfg);
+                let s = stark_algo::multiply(&ctx, backend.clone(), &a, &b, bb, &cfg).unwrap();
                 assert!(
                     want.allclose(&s.c, 1e-9),
                     "stark n={n} b={bb} cluster={execs}x{cores}: Δ={}",
                     want.max_abs_diff(&s.c)
                 );
-                let m = marlin::multiply(&ctx, backend.clone(), &a, &b, bb, false);
+                let m = marlin::multiply(&ctx, backend.clone(), &a, &b, bb, &BASE).unwrap();
                 assert!(want.allclose(&m.c, 1e-9), "marlin n={n} b={bb}");
-                let l = mllib::multiply(&ctx, backend.clone(), &a, &b, bb, false);
+                let l = mllib::multiply(&ctx, backend.clone(), &a, &b, bb, &BASE).unwrap();
                 assert!(want.allclose(&l.c, 1e-9), "mllib n={n} b={bb}");
             }
         }
@@ -47,7 +51,8 @@ fn executor_count_does_not_change_results() {
     for execs in [1usize, 2, 4, 8] {
         let ctx = SparkContext::new(ClusterConfig::new(execs, 1));
         let out =
-            stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &b, 4, &StarkConfig::default());
+            stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &b, 4, &StarkConfig::default())
+                .unwrap();
         results.push(out.c);
     }
     // Partitioning changes FP summation order (as on real Spark), so
@@ -67,7 +72,9 @@ fn fused_leaf_is_bit_identical_in_structure() {
     let ctx = SparkContext::new(ClusterConfig::new(2, 2));
     for b_parts in [2usize, 4, 8] {
         let cfg = StarkConfig { fused_leaf: true, ..Default::default() };
-        let out = stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &b, b_parts, &cfg);
+        let out =
+            stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &b, b_parts, &cfg)
+                .unwrap();
         assert!(want.allclose(&out.c, 1e-9), "fused b={b_parts}");
     }
 }
@@ -78,11 +85,13 @@ fn leaf_call_law_stark_vs_baselines() {
     let ctx = SparkContext::new(ClusterConfig::new(2, 2));
     let backend = Arc::new(NativeBackend::default());
     for (bb, stark_want, cube) in [(2usize, 7u64, 8u64), (4, 49, 64), (8, 343, 512)] {
-        let s = stark_algo::multiply(&ctx, backend.clone(), &a, &b, bb, &StarkConfig::default());
+        let s =
+            stark_algo::multiply(&ctx, backend.clone(), &a, &b, bb, &StarkConfig::default())
+                .unwrap();
         assert_eq!(s.leaf_calls, stark_want);
-        let m = marlin::multiply(&ctx, backend.clone(), &a, &b, bb, false);
+        let m = marlin::multiply(&ctx, backend.clone(), &a, &b, bb, &BASE).unwrap();
         assert_eq!(m.leaf_calls, cube);
-        let l = mllib::multiply(&ctx, backend.clone(), &a, &b, bb, false);
+        let l = mllib::multiply(&ctx, backend.clone(), &a, &b, bb, &BASE).unwrap();
         assert_eq!(l.leaf_calls, cube);
     }
 }
@@ -95,7 +104,8 @@ fn failure_injection_in_every_stark_phase_recovers() {
         cc.failure = Some(FailureSpec { stage_contains: phase.to_string(), partition: 0 });
         let ctx = SparkContext::new(cc);
         let out =
-            stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &b, 4, &StarkConfig::default());
+            stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &b, 4, &StarkConfig::default())
+                .unwrap();
         let retries: u32 = out.job.stages.iter().map(|s| s.retries).sum();
         assert_eq!(retries, 1, "phase {phase}: no retry recorded");
         assert!(want.allclose(&out.c, 1e-9), "phase {phase}: wrong result after recovery");
@@ -110,10 +120,10 @@ fn failure_injection_in_baselines_recovers() {
         cc.failure = Some(FailureSpec { stage_contains: phase.to_string(), partition: 0 });
         let ctx = SparkContext::new(cc);
         let backend = Arc::new(NativeBackend::default());
-        let m = marlin::multiply(&ctx, backend.clone(), &a, &b, 4, false);
+        let m = marlin::multiply(&ctx, backend.clone(), &a, &b, 4, &BASE).unwrap();
         assert!(want.allclose(&m.c, 1e-9), "marlin {phase}");
         ctx.cluster().rearm_failure();
-        let l = mllib::multiply(&ctx, backend, &a, &b, 4, false);
+        let l = mllib::multiply(&ctx, backend, &a, &b, 4, &BASE).unwrap();
         assert!(want.allclose(&l.c, 1e-9), "mllib {phase}");
     }
 }
@@ -128,13 +138,13 @@ fn special_matrices() {
     let z = DenseMatrix::zeros(n, n);
     let r = DenseMatrix::random(n, n, 21);
 
-    let out = stark_algo::multiply(&ctx, backend.clone(), &i, &r, 4, &cfg);
+    let out = stark_algo::multiply(&ctx, backend.clone(), &i, &r, 4, &cfg).unwrap();
     assert!(out.c.allclose(&r, 1e-12), "I @ R != R");
-    let out = stark_algo::multiply(&ctx, backend.clone(), &r, &z, 4, &cfg);
+    let out = stark_algo::multiply(&ctx, backend.clone(), &r, &z, 4, &cfg).unwrap();
     assert!(out.c.allclose(&z, 0.0), "R @ 0 != 0");
     // Permutation-ish: reversal matrix.
     let p = DenseMatrix::from_fn(n, n, |r_, c| if c == n - 1 - r_ { 1.0 } else { 0.0 });
-    let out = stark_algo::multiply(&ctx, backend, &p, &r, 4, &cfg);
+    let out = stark_algo::multiply(&ctx, backend, &p, &r, 4, &cfg).unwrap();
     let want = DenseMatrix::from_fn(n, n, |r_, c| r.get(n - 1 - r_, c));
     assert!(out.c.allclose(&want, 1e-12), "row reversal wrong");
 }
@@ -143,7 +153,9 @@ fn special_matrices() {
 fn metrics_are_recorded_per_job() {
     let (a, b, _) = reference(64, 23);
     let ctx = SparkContext::new(ClusterConfig::new(2, 2));
-    let s = stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &b, 4, &StarkConfig::default());
+    let s =
+        stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &b, 4, &StarkConfig::default())
+            .unwrap();
     assert_eq!(s.job.stages.len(), stark_algo::predicted_stages(4));
     assert!(s.job.wall_ms > 0.0);
     assert!(s.job.total_shuffle_bytes() > 0);
@@ -167,11 +179,19 @@ fn algorithm_enum_roundtrip() {
 #[test]
 fn isolate_multiply_does_not_change_numbers() {
     let (a, b, want) = reference(64, 29);
-    let ctx = SparkContext::new(ClusterConfig::new(2, 2));
-    let backend = Arc::new(NativeBackend::default());
+    let session = StarkSession::builder()
+        .cluster(ClusterConfig::new(2, 2))
+        .stark_options(StarkConfig { isolate_multiply: true, ..Default::default() })
+        .build()
+        .unwrap();
+    let (ha, hb) = (session.matrix(&a), session.matrix(&b));
     for algo in Algorithm::ALL {
-        let cfg = StarkConfig { isolate_multiply: true, ..Default::default() };
-        let out = stark::algos::common::run(algo, &ctx, backend.clone(), &a, &b, 4, &cfg);
+        let out =
+            ha.multiply(&hb).algorithm(algo).splits(Splits::Fixed(4)).collect().unwrap();
         assert!(want.allclose(&out.c, 1e-9), "{algo} isolate_multiply");
+        assert_eq!(out.plan.algorithm, algo);
     }
+    // Handle reuse across the three systems: one distribution each side.
+    assert_eq!(ha.splits_computed(), 1);
+    assert_eq!(hb.splits_computed(), 1);
 }

@@ -7,11 +7,14 @@
 
 use std::sync::Arc;
 
-use stark::algos::{marlin, mllib, stark as stark_algo, StarkConfig};
+use stark::algos::{marlin, mllib, stark as stark_algo, BaselineOptions, StarkConfig};
 use stark::engine::{Block, ClusterConfig, Side, SparkContext, Tag};
 use stark::matrix::{matmul_blocked, DenseMatrix, Rng64};
 use stark::runtime::NativeBackend;
 use stark::util::prop::{assert_prop, Draw};
+
+/// Baseline options shared by the marlin/mllib property arms.
+const BASE: BaselineOptions = BaselineOptions { isolate_multiply: false };
 
 fn random_matrix(rng: &mut Rng64, n: usize) -> DenseMatrix {
     let seed = rng.next_u64();
@@ -31,7 +34,8 @@ fn prop_stark_matches_reference_for_arbitrary_inputs() {
             isolate_multiply: rng.next_f64() < 0.5,
             map_side_combine: rng.next_f64() < 0.75,
         };
-        let out = stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &cfg);
+        let out = stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &cfg)
+            .unwrap();
         let want = matmul_blocked(&a, &bm);
         let diff = want.max_abs_diff(&out.c);
         if diff < 1e-8 {
@@ -52,11 +56,11 @@ fn prop_baselines_match_reference() {
         let bm = random_matrix(rng, n);
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
         let want = matmul_blocked(&a, &bm);
-        let m = marlin::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, false);
+        let m = marlin::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &BASE).unwrap();
         if want.max_abs_diff(&m.c) > 1e-8 {
             return Err(format!("marlin n={n} b={b}"));
         }
-        let l = mllib::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, false);
+        let l = mllib::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &BASE).unwrap();
         if want.max_abs_diff(&l.c) > 1e-8 {
             return Err(format!("mllib n={n} b={b}"));
         }
@@ -73,9 +77,9 @@ fn prop_all_three_agree_pairwise() {
         let bm = random_matrix(rng, n);
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
         let be = Arc::new(NativeBackend::default());
-        let s = stark_algo::multiply(&ctx, be.clone(), &a, &bm, b, &StarkConfig::default());
-        let m = marlin::multiply(&ctx, be.clone(), &a, &bm, b, false);
-        let l = mllib::multiply(&ctx, be, &a, &bm, b, false);
+        let s = stark_algo::multiply(&ctx, be.clone(), &a, &bm, b, &StarkConfig::default()).unwrap();
+        let m = marlin::multiply(&ctx, be.clone(), &a, &bm, b, &BASE).unwrap();
+        let l = mllib::multiply(&ctx, be, &a, &bm, b, &BASE).unwrap();
         let d1 = s.c.max_abs_diff(&m.c);
         let d2 = m.c.max_abs_diff(&l.c);
         if d1 < 1e-8 && d2 < 1e-8 {
@@ -190,8 +194,8 @@ fn prop_leaf_call_counts() {
         let bm = random_matrix(rng, n);
         let ctx = SparkContext::new(ClusterConfig::new(2, 2));
         let be = Arc::new(NativeBackend::default());
-        let s = stark_algo::multiply(&ctx, be.clone(), &a, &bm, b, &StarkConfig::default());
-        let m = marlin::multiply(&ctx, be, &a, &bm, b, false);
+        let s = stark_algo::multiply(&ctx, be.clone(), &a, &bm, b, &StarkConfig::default()).unwrap();
+        let m = marlin::multiply(&ctx, be, &a, &bm, b, &BASE).unwrap();
         let levels = (b as f64).log2().round() as u32;
         if s.leaf_calls != 7u64.pow(levels) {
             return Err(format!("stark {} != 7^{levels}", s.leaf_calls));
@@ -220,6 +224,7 @@ fn prop_shuffle_accounting_scales_with_payload() {
                 b,
                 &StarkConfig::default(),
             )
+            .unwrap()
             .job
             .total_shuffle_bytes()
         };
@@ -249,7 +254,8 @@ fn prop_determinism_same_seed_same_everything() {
             let bm = DenseMatrix::random(n, n, seed + 1);
             let ctx = SparkContext::new(ClusterConfig::new(2, 2));
             let out =
-                stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &StarkConfig::default());
+                stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &StarkConfig::default())
+                    .unwrap();
             (out.c, out.leaf_calls, out.job.total_shuffle_bytes())
         };
         let (c1, l1, s1) = run();

@@ -183,7 +183,9 @@ fn prop_distributed_stark_bit_unchanged_across_leaf_backends() {
         let cfg = StarkConfig { fused_leaf: fused, ..Default::default() };
         let run = |kernel: Kernel| {
             let ctx = SparkContext::new(ClusterConfig::new(2, 2));
-            stark_algo::multiply(&ctx, Arc::new(NativeBackend::new(kernel)), &a, &bm, b, &cfg).c
+            stark_algo::multiply(&ctx, Arc::new(NativeBackend::new(kernel)), &a, &bm, b, &cfg)
+                .unwrap()
+                .c
         };
         let reference = run(Kernel::Naive);
         for kernel in [Kernel::Blocked, Kernel::Packed] {
