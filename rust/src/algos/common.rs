@@ -107,6 +107,18 @@ impl LeafBackend for TimingBackend {
         out
     }
 
+    fn multiply_fused(
+        &self,
+        a_terms: &[(f64, Arc<DenseMatrix>)],
+        b_terms: &[(f64, Arc<DenseMatrix>)],
+    ) -> DenseMatrix {
+        let t = std::time::Instant::now();
+        let out = self.inner.multiply_fused(a_terms, b_terms);
+        self.nanos.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        out
+    }
+
     fn strassen_leaf(&self, quads: &[DenseMatrix; 8]) -> [DenseMatrix; 4] {
         let t = std::time::Instant::now();
         let out = self.inner.strassen_leaf(quads);
@@ -157,15 +169,9 @@ pub fn signed_finalize((sign, data): SignedBlock) -> Arc<DenseMatrix> {
 
 /// Fold an unsigned partial-product block into an accumulator, adding in
 /// place when the accumulator is uniquely owned (Marlin's and MLLib's
-/// stage-4 summation through `fold_by_key`).
-pub fn arc_add(acc: Arc<DenseMatrix>, val: Arc<DenseMatrix>) -> Arc<DenseMatrix> {
-    let mut m = match Arc::try_unwrap(acc) {
-        Ok(owned) => owned,
-        Err(shared) => (*shared).clone(),
-    };
-    m.add_assign_signed(&val, 1.0);
-    Arc::new(m)
-}
+/// stage-4 summation through `fold_by_key`; shared with the engine's
+/// block-matrix sums).
+pub use crate::engine::ops::arc_add;
 
 /// A side-agnostic `b × b` block split of one square operand — the unit
 /// the session layer caches across jobs. Splitting copies the matrix
@@ -197,6 +203,45 @@ impl BlockSplits {
             .map(|(r, c, data)| (r as u32, c as u32, Arc::new(data)))
             .collect();
         Ok(Self { n: m.rows(), b, blocks: Arc::new(blocks) })
+    }
+
+    /// Build a split from pre-computed blocks in **row-major grid order**
+    /// (`(r, c, payload)` for `r, c ∈ [0, b)`). The expression layer uses
+    /// this to form fused operands — a signed sum of leaves evaluated
+    /// block-by-block straight into the split, so `(A+B)·C` never
+    /// allocates the full `A+B`.
+    pub fn from_blocks(
+        n: usize,
+        b: usize,
+        blocks: Vec<(u32, u32, Arc<DenseMatrix>)>,
+    ) -> Result<Self, StarkError> {
+        validate_splits(Algorithm::Auto, n, b)?;
+        if blocks.len() != b * b {
+            return Err(StarkError::invalid_splits(
+                Algorithm::Auto,
+                b,
+                n,
+                format!("expected {} blocks, got {}", b * b, blocks.len()),
+            ));
+        }
+        for (i, (r, c, m)) in blocks.iter().enumerate() {
+            let (wr, wc) = ((i / b) as u32, (i % b) as u32);
+            if (*r, *c) != (wr, wc) || m.rows() != n / b || m.cols() != n / b {
+                return Err(StarkError::invalid_splits(
+                    Algorithm::Auto,
+                    b,
+                    n,
+                    format!("block {i} is ({r},{c}) {}x{}, want ({wr},{wc}) square n/b", m.rows(), m.cols()),
+                ));
+            }
+        }
+        Ok(Self { n, b, blocks: Arc::new(blocks) })
+    }
+
+    /// The payload of grid block `(r, c)` (row-major storage).
+    pub fn block_at(&self, r: usize, c: usize) -> &Arc<DenseMatrix> {
+        debug_assert!(r < self.b && c < self.b);
+        &self.blocks[r * self.b + c].2
     }
 
     /// Padded matrix dimension.
@@ -279,6 +324,12 @@ pub struct BaselineOptions {
 /// [`crate::algos::mllib::Mllib`], each carrying its own narrowed
 /// options; `Algorithm::Auto` is resolved by the planner *before* an
 /// implementation is constructed (see [`implementation`]).
+///
+/// The distributed core is [`multiply_dist`](Self::multiply_dist): block
+/// RDDs in, block RDD out, **no collection** — the expression layer
+/// ([`crate::api::DistExpr`]) chains it across pipeline stages within
+/// one job. [`multiply_splits`](Self::multiply_splits) is the provided
+/// one-shot wrapper: open a job, distribute, run the core, collect once.
 pub trait MultiplyAlgorithm: Send + Sync {
     /// Which [`Algorithm`] this implements (never `Auto`).
     fn algorithm(&self) -> Algorithm;
@@ -288,14 +339,52 @@ pub trait MultiplyAlgorithm: Send + Sync {
         validate_splits(self.algorithm(), n, b)
     }
 
-    /// Multiply two pre-split operands end to end.
+    /// Distribute one pre-split operand for this strategy — the placement
+    /// hook: Stark overrides this to co-locate divide-L0 quadrant
+    /// partners so its first signed fold combines map-side.
+    fn distribute(&self, job: &JobCtx, splits: &BlockSplits, side: Side) -> Dist<Block> {
+        distribute(job, splits, side)
+    }
+
+    /// Multiply two **distributed** operands on a `b × b` grid of the
+    /// `n`-padded matrices and return the distributed product — no
+    /// collect. Inputs are root-tagged per side ([`Tag::root`]); the
+    /// output carries product blocks tagged `(M, 0)` with their grid
+    /// coordinates. All stages record into the job the inputs carry,
+    /// labeled `"{prefix}<phase>/<detail>"` (pass `""` for a standalone
+    /// multiply; the expression executor passes `"m1/"`, `"m2/"`, … so
+    /// chained nodes stay distinguishable in [`crate::engine::StageMetrics`]).
+    fn multiply_dist(
+        &self,
+        backend: &Arc<TimingBackend>,
+        da: Dist<Block>,
+        db: Dist<Block>,
+        n: usize,
+        b: usize,
+        prefix: &str,
+    ) -> Result<Dist<Block>, StarkError>;
+
+    /// Multiply two pre-split operands end to end: one scoped job,
+    /// distribute, [`multiply_dist`](Self::multiply_dist), one collect.
     fn multiply_splits(
         &self,
         ctx: &SparkContext,
         backend: Arc<dyn LeafBackend>,
         a: &BlockSplits,
         b: &BlockSplits,
-    ) -> Result<MultiplyOutput, StarkError>;
+    ) -> Result<MultiplyOutput, StarkError> {
+        BlockSplits::check_pair(a, b)?;
+        let (n, bb) = (a.n(), a.b());
+        self.validate(n, bb)?;
+        let timing = TimingBackend::new(backend);
+        let job = ctx.run_job(&format!("{} n={n} b={bb}", self.algorithm()));
+        let da = self.distribute(&job, a, Side::A);
+        let db = self.distribute(&job, b, Side::B);
+        let product = self.multiply_dist(&timing, da, db, n, bb, "")?;
+        let c = collect_product(&product, bb, n / bb);
+        let job = job.finish();
+        Ok(MultiplyOutput { c, job, leaf_ms: timing.leaf_ms(), leaf_calls: timing.calls() })
+    }
 
     /// Convenience: validate, split and multiply two square matrices.
     fn multiply(
@@ -312,6 +401,24 @@ pub trait MultiplyAlgorithm: Send + Sync {
         let sb = BlockSplits::of(b_mat, b)?;
         self.multiply_splits(ctx, backend, &sa, &sb)
     }
+}
+
+/// Run the result stage (`"result/collect"`, the job's **only** gather)
+/// and assemble the product blocks into the dense matrix.
+pub fn collect_product(product: &Dist<Block>, b: usize, block_size: usize) -> DenseMatrix {
+    let pairs: Vec<((u32, u32), DenseMatrix)> = product
+        .collect("result/collect")
+        .into_iter()
+        .map(|blk| {
+            debug_assert_eq!(blk.tag, Tag::new(Side::M, 0), "unexpected product tag");
+            let m = match Arc::try_unwrap(blk.data) {
+                Ok(owned) => owned,
+                Err(shared) => (*shared).clone(),
+            };
+            ((blk.row, blk.col), m)
+        })
+        .collect();
+    assemble(b, block_size, pairs)
 }
 
 /// Construct the [`MultiplyAlgorithm`] for a *concrete* `algo`,

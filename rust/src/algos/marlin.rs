@@ -16,10 +16,10 @@
 use std::sync::Arc;
 
 use crate::algos::common::{
-    arc_add, assemble, default_parts, distribute, validate_inputs, Algorithm, BaselineOptions,
-    BlockSplits, MultiplyAlgorithm, MultiplyOutput, TimingBackend,
+    arc_add, default_parts, validate_inputs, Algorithm, BaselineOptions, BlockSplits,
+    MultiplyAlgorithm, MultiplyOutput, TimingBackend,
 };
-use crate::engine::{Side, SparkContext};
+use crate::engine::{Block, Dist, Side, SparkContext, Tag};
 use crate::error::StarkError;
 use crate::matrix::DenseMatrix;
 use crate::runtime::LeafBackend;
@@ -46,56 +46,7 @@ pub fn multiply_splits(
     sb: &BlockSplits,
     opts: &BaselineOptions,
 ) -> Result<MultiplyOutput, StarkError> {
-    BlockSplits::check_pair(sa, sb)?;
-    let (n, b) = (sa.n(), sa.b());
-    let timing = TimingBackend::new(backend);
-    let job = ctx.run_job(&format!("marlin n={n} b={b}"));
-
-    let da = distribute(&job, sa, Side::A);
-    let db = distribute(&job, sb, Side::B);
-    let bb = b as u32;
-
-    // Stage 1: replicate A blocks across product columns, B blocks across
-    // product rows (paper: "each block of total b² blocks generates b
-    // copies").
-    let a_rep = da.flat_map(move |blk| {
-        (0..bb).map(|j| (((blk.row, j, blk.col)), blk.data.clone())).collect::<Vec<_>>()
-    });
-    let b_rep = db.flat_map(move |blk| {
-        (0..bb).map(|i| (((i, blk.col, blk.row)), blk.data.clone())).collect::<Vec<_>>()
-    });
-
-    // Stage 3: join on (i, j, k) then multiply each pair. The paper's PF
-    // here is min[b³, cores]; partitions are capped (see default_parts).
-    let cores = ctx.config().total_cores();
-    let join_parts = (b * b * b).min(4 * cores.max(1));
-    let joined = a_rep.join("stage3/join", &b_rep, join_parts);
-    let be = timing.clone();
-    // Arc the products so engine-internal clones (bucket reads, retries)
-    // stay O(1) instead of copying whole blocks (§Perf change 4).
-    let products = joined
-        .map(move |((i, j, _k), (ablk, bblk))| ((i, j), Arc::new(be.multiply(&ablk, &bblk))));
-    let products = if opts.isolate_multiply {
-        products.cache("stage3/mapPartition")
-    } else {
-        products
-    };
-
-    // Stage 4: sum the b partials per product block — map-side combined
-    // through the fold path, accumulating in place instead of allocating
-    // a fresh matrix per pair.
-    let reduce_parts = default_parts(b, cores);
-    let summed =
-        products.fold_by_key("stage4/reduceByKey", reduce_parts, |v| v, arc_add, arc_add);
-
-    let pairs = summed
-        .collect("result/collect")
-        .into_iter()
-        .map(|(k, v)| (k, Arc::try_unwrap(v).unwrap_or_else(|a| (*a).clone())))
-        .collect();
-    let c = assemble(b, n / b, pairs);
-    let job = job.finish();
-    Ok(MultiplyOutput { c, job, leaf_ms: timing.leaf_ms(), leaf_calls: timing.calls() })
+    Marlin::new(*opts).multiply_splits(ctx, backend, sa, sb)
 }
 
 /// [`MultiplyAlgorithm`] implementation of the Marlin baseline.
@@ -114,14 +65,56 @@ impl MultiplyAlgorithm for Marlin {
         Algorithm::Marlin
     }
 
-    fn multiply_splits(
+    fn multiply_dist(
         &self,
-        ctx: &SparkContext,
-        backend: Arc<dyn LeafBackend>,
-        a: &BlockSplits,
-        b: &BlockSplits,
-    ) -> Result<MultiplyOutput, StarkError> {
-        multiply_splits(ctx, backend, a, b, &self.opts)
+        backend: &Arc<TimingBackend>,
+        da: Dist<Block>,
+        db: Dist<Block>,
+        _n: usize,
+        b: usize,
+        prefix: &str,
+    ) -> Result<Dist<Block>, StarkError> {
+        let bb = b as u32;
+
+        // Stage 1: replicate A blocks across product columns, B blocks
+        // across product rows (paper: "each block of total b² blocks
+        // generates b copies").
+        let a_rep = da.flat_map(move |blk| {
+            (0..bb).map(|j| (((blk.row, j, blk.col)), blk.data.clone())).collect::<Vec<_>>()
+        });
+        let b_rep = db.flat_map(move |blk| {
+            (0..bb).map(|i| (((i, blk.col, blk.row)), blk.data.clone())).collect::<Vec<_>>()
+        });
+
+        // Stage 3: join on (i, j, k) then multiply each pair. The paper's
+        // PF here is min[b³, cores]; partitions are capped (see
+        // default_parts).
+        let cores = a_rep.job().config().total_cores();
+        let join_parts = (b * b * b).min(4 * cores.max(1));
+        let joined = a_rep.join(&format!("{prefix}stage3/join"), &b_rep, join_parts);
+        let be = backend.clone();
+        // Arc the products so engine-internal clones (bucket reads,
+        // retries) stay O(1) instead of copying whole blocks (§Perf 4).
+        let products = joined
+            .map(move |((i, j, _k), (ablk, bblk))| ((i, j), Arc::new(be.multiply(&ablk, &bblk))));
+        let products = if self.opts.isolate_multiply {
+            products.cache(&format!("{prefix}stage3/mapPartition"))
+        } else {
+            products
+        };
+
+        // Stage 4: sum the b partials per product block — map-side
+        // combined through the fold path, accumulating in place instead
+        // of allocating a fresh matrix per pair.
+        let reduce_parts = default_parts(b, cores);
+        let summed = products.fold_by_key(
+            &format!("{prefix}stage4/reduceByKey"),
+            reduce_parts,
+            |v| v,
+            arc_add,
+            arc_add,
+        );
+        Ok(summed.map(|((i, j), v)| Block::new(i, j, Tag::new(Side::M, 0), v)))
     }
 }
 

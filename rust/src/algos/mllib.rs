@@ -16,10 +16,10 @@
 use std::sync::Arc;
 
 use crate::algos::common::{
-    arc_add, assemble, default_parts, distribute, validate_inputs, Algorithm, BaselineOptions,
-    BlockSplits, MultiplyAlgorithm, MultiplyOutput, TimingBackend,
+    arc_add, default_parts, validate_inputs, Algorithm, BaselineOptions, BlockSplits,
+    MultiplyAlgorithm, MultiplyOutput, TimingBackend,
 };
-use crate::engine::{GridPartitioner, Side, SparkContext, StageMetrics};
+use crate::engine::{Block, Dist, GridPartitioner, Side, SparkContext, StageMetrics, Tag};
 use crate::error::StarkError;
 use crate::matrix::DenseMatrix;
 use crate::runtime::LeafBackend;
@@ -46,83 +46,7 @@ pub fn multiply_splits(
     sb: &BlockSplits,
     opts: &BaselineOptions,
 ) -> Result<MultiplyOutput, StarkError> {
-    BlockSplits::check_pair(sa, sb)?;
-    let (n, b) = (sa.n(), sa.b());
-    let timing = TimingBackend::new(backend);
-    let job = ctx.run_job(&format!("mllib n={n} b={b}"));
-
-    // GridPartitioner simulation (driver side): 2·b² partition ids cross
-    // to the master — eq. (1)'s communication, recorded as a synthetic
-    // stage so the analysis has its observable.
-    let sim_bytes = (2 * b * b * std::mem::size_of::<u64>()) as u64;
-    job.record_stage(StageMetrics {
-        stage_id: usize::MAX, // driver-side, outside the stage sequence
-        label: "stage0/gridSimulation".to_string(),
-        tasks: 1,
-        wall_ms: 0.0,
-        comp_ms: 0.0,
-        shuffle_bytes: sim_bytes,
-        remote_bytes: sim_bytes,
-        net_wait_ms: 0.0,
-        records_out: (2 * b * b) as u64,
-        combined_records: 0,
-        pf: 1,
-        retries: 0,
-    });
-
-    let da = distribute(&job, sa, Side::A);
-    let db = distribute(&job, sb, Side::B);
-    let bb = b as u32;
-
-    // Stage 1: replicate towards destination blocks. The payload keeps
-    // the contraction index k (the block's own grid position) so the
-    // cogroup consumer can match pairs.
-    let a_rep = da.flat_map(move |blk| {
-        (0..bb).map(|j| ((blk.row, j), (blk.col, blk.data.clone()))).collect::<Vec<_>>()
-    });
-    let b_rep = db.flat_map(move |blk| {
-        (0..bb).map(|i| ((i, blk.col), (blk.row, blk.data.clone()))).collect::<Vec<_>>()
-    });
-
-    // Stage 3: cogroup on the destination block with MLLib's grid
-    // partitioner, then multiply matching k pairs.
-    let cores = ctx.config().total_cores();
-    let grid_parts = default_parts(b, cores);
-    let partitioner = Arc::new(GridPartitioner::new(b, grid_parts));
-    let grouped = a_rep.cogroup_with("stage3/coGroup", &b_rep, partitioner);
-    let be = timing.clone();
-    // Arc the products so engine-internal clones stay O(1) (§Perf change 4).
-    let products = grouped.flat_map(move |((i, j), (avs, bvs))| {
-        let mut out = Vec::with_capacity(avs.len());
-        for (k, ablk) in &avs {
-            for (k2, bblk) in &bvs {
-                if k == k2 {
-                    out.push(((i, j), Arc::new(be.multiply(ablk, bblk))));
-                }
-            }
-        }
-        out
-    });
-    let products =
-        if opts.isolate_multiply { products.cache("stage3/flatMap") } else { products };
-
-    // Stage 4: sum partials. (In real MLLib the grid partitioner makes
-    // this shuffle-free; the fold here routes by the same key so the
-    // remote volume is what a co-partitioned reduce would see.) The
-    // cogroup output is grid-partitioned, so every partial of a product
-    // block already co-resides and the map-side fold collapses the sum
-    // to a single record per block.
-    let summed =
-        products.fold_by_key("stage4/reduceByKey", grid_parts, |v| v, arc_add, arc_add);
-
-    let pairs = summed
-        .collect("result/collect")
-        .into_iter()
-        .map(|(k, v)| (k, Arc::try_unwrap(v).unwrap_or_else(|a| (*a).clone())))
-        .collect();
-    let c = assemble(b, n / b, pairs);
-    let job = job.finish();
-    Ok(MultiplyOutput { c, job, leaf_ms: timing.leaf_ms(), leaf_calls: timing.calls() })
+    Mllib::new(*opts).multiply_splits(ctx, backend, sa, sb)
 }
 
 /// [`MultiplyAlgorithm`] implementation of the MLLib baseline.
@@ -141,14 +65,87 @@ impl MultiplyAlgorithm for Mllib {
         Algorithm::Mllib
     }
 
-    fn multiply_splits(
+    fn multiply_dist(
         &self,
-        ctx: &SparkContext,
-        backend: Arc<dyn LeafBackend>,
-        a: &BlockSplits,
-        b: &BlockSplits,
-    ) -> Result<MultiplyOutput, StarkError> {
-        multiply_splits(ctx, backend, a, b, &self.opts)
+        backend: &Arc<TimingBackend>,
+        da: Dist<Block>,
+        db: Dist<Block>,
+        _n: usize,
+        b: usize,
+        prefix: &str,
+    ) -> Result<Dist<Block>, StarkError> {
+        let job = da.job().clone();
+
+        // GridPartitioner simulation (driver side): 2·b² partition ids
+        // cross to the master — eq. (1)'s communication, recorded as a
+        // synthetic stage so the analysis has its observable.
+        let sim_bytes = (2 * b * b * std::mem::size_of::<u64>()) as u64;
+        job.record_stage(StageMetrics {
+            stage_id: usize::MAX, // driver-side, outside the stage sequence
+            label: format!("{prefix}stage0/gridSimulation"),
+            tasks: 1,
+            wall_ms: 0.0,
+            comp_ms: 0.0,
+            shuffle_bytes: sim_bytes,
+            remote_bytes: sim_bytes,
+            net_wait_ms: 0.0,
+            records_out: (2 * b * b) as u64,
+            combined_records: 0,
+            pf: 1,
+            retries: 0,
+        });
+
+        let bb = b as u32;
+
+        // Stage 1: replicate towards destination blocks. The payload
+        // keeps the contraction index k (the block's own grid position)
+        // so the cogroup consumer can match pairs.
+        let a_rep = da.flat_map(move |blk| {
+            (0..bb).map(|j| ((blk.row, j), (blk.col, blk.data.clone()))).collect::<Vec<_>>()
+        });
+        let b_rep = db.flat_map(move |blk| {
+            (0..bb).map(|i| ((i, blk.col), (blk.row, blk.data.clone()))).collect::<Vec<_>>()
+        });
+
+        // Stage 3: cogroup on the destination block with MLLib's grid
+        // partitioner, then multiply matching k pairs.
+        let cores = job.config().total_cores();
+        let grid_parts = default_parts(b, cores);
+        let partitioner = Arc::new(GridPartitioner::new(b, grid_parts));
+        let grouped = a_rep.cogroup_with(&format!("{prefix}stage3/coGroup"), &b_rep, partitioner);
+        let be = backend.clone();
+        // Arc the products so engine-internal clones stay O(1) (§Perf 4).
+        let products = grouped.flat_map(move |((i, j), (avs, bvs))| {
+            let mut out = Vec::with_capacity(avs.len());
+            for (k, ablk) in &avs {
+                for (k2, bblk) in &bvs {
+                    if k == k2 {
+                        out.push(((i, j), Arc::new(be.multiply(ablk, bblk))));
+                    }
+                }
+            }
+            out
+        });
+        let products = if self.opts.isolate_multiply {
+            products.cache(&format!("{prefix}stage3/flatMap"))
+        } else {
+            products
+        };
+
+        // Stage 4: sum partials. (In real MLLib the grid partitioner
+        // makes this shuffle-free; the fold here routes by the same key
+        // so the remote volume is what a co-partitioned reduce would
+        // see.) The cogroup output is grid-partitioned, so every partial
+        // of a product block already co-resides and the map-side fold
+        // collapses the sum to a single record per block.
+        let summed = products.fold_by_key(
+            &format!("{prefix}stage4/reduceByKey"),
+            grid_parts,
+            |v| v,
+            arc_add,
+            arc_add,
+        );
+        Ok(summed.map(|((i, j), v)| Block::new(i, j, Tag::new(Side::M, 0), v)))
     }
 }
 

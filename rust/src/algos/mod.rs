@@ -8,7 +8,10 @@
 //!   `Dist<Block>` conversion, result assembly, leaf-time
 //!   instrumentation, and the [`MultiplyAlgorithm`] trait the three
 //!   systems implement (dispatched by the session API / planner —
-//!   there is no positional enum dispatcher anymore).
+//!   there is no positional enum dispatcher anymore). The trait's core
+//!   is [`MultiplyAlgorithm::multiply_dist`]: distributed blocks in,
+//!   distributed product out, which is what lets the expression layer
+//!   ([`crate::api::DistExpr`]) chain multiplies without collecting.
 
 pub mod common;
 pub mod general;
@@ -17,8 +20,8 @@ pub mod mllib;
 pub mod stark;
 
 pub use common::{
-    implementation, Algorithm, BaselineOptions, BlockSplits, MultiplyAlgorithm, MultiplyOutput,
-    TimingBackend,
+    collect_product, implementation, Algorithm, BaselineOptions, BlockSplits, MultiplyAlgorithm,
+    MultiplyOutput, TimingBackend,
 };
 pub use general::multiply_general;
 pub use stark::StarkConfig;

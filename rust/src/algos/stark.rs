@@ -22,8 +22,8 @@
 //! The signed folds run **map-side** by default
 //! ([`StarkConfig::map_side_combine`]): every shuffle routes records with
 //! an alignment partitioner to where the *next* phase groups them
-//! ([`DivideAlign`]/[`MultiplyAlign`]/[`CombineAlign`] +
-//! [`distribute_aligned`]), so `fold_by_key` collapses whole groups
+//! (`DivideAlign`/`MultiplyAlign`/`CombineAlign` +
+//! `distribute_aligned`), so `fold_by_key` collapses whole groups
 //! before the shuffle write — the group-by-key + reduce-side-sum
 //! baseline remains available for comparison (`map_side_combine: false`,
 //! measured in `benches/hotpath.rs`).
@@ -40,8 +40,8 @@
 use std::sync::Arc;
 
 use crate::algos::common::{
-    assemble, default_parts, distribute, signed_finalize, signed_merge, validate_inputs,
-    Algorithm, BlockSplits, MultiplyAlgorithm, MultiplyOutput, SignedBlock, TimingBackend,
+    default_parts, distribute, signed_finalize, signed_merge, validate_inputs, Algorithm,
+    BlockSplits, MultiplyAlgorithm, MultiplyOutput, SignedBlock, TimingBackend,
 };
 use crate::engine::{det_partition, Block, Dist, JobCtx, Partitioner, Side, SparkContext, Tag};
 use crate::error::StarkError;
@@ -241,13 +241,15 @@ fn signed_sum(vals: Vec<(f64, Arc<DenseMatrix>)>) -> Arc<DenseMatrix> {
 /// Algorithm 2, `DistStrass`: multiply the union RDD of A- and B-side
 /// blocks over an `n × n` block grid; returns product blocks tagged
 /// `(M, mindex)` on the same grid. Stages record into the job scope the
-/// input `Dist` carries — no ambient job state.
+/// input `Dist` carries — no ambient job state. `prefix` namespaces the
+/// stage labels (`"m3/divide/L0"`) when several multiplies share a job.
 fn dist_strassen(
     backend: &Arc<TimingBackend>,
     input: Dist<Block>,
     n: u32,
     level: u32,
     cfg: &StarkConfig,
+    prefix: &str,
 ) -> Dist<Block> {
     let cores = input.job().config().total_cores();
     let parts = parts_for(level, cores);
@@ -257,7 +259,7 @@ fn dist_strassen(
         let pairs = input.map(|blk| (blk.tag.mindex, blk));
         let by_parent = cfg.map_side_combine && align_multiply_by_parent(level, cores);
         let grouped = pairs.group_by_key_with(
-            "multiply/groupByKey",
+            &format!("{prefix}multiply/groupByKey"),
             Arc::new(MultiplyAlign { parts, by_parent }),
         );
         let be = backend.clone();
@@ -267,7 +269,11 @@ fn dist_strassen(
             let c = be.multiply(&a.data, &b.data);
             Block::new(0, 0, Tag::new(Side::M, mindex), Arc::new(c))
         });
-        return if cfg.isolate_multiply { products.cache("multiply/compute") } else { products };
+        return if cfg.isolate_multiply {
+            products.cache(&format!("{prefix}multiply/compute"))
+        } else {
+            products
+        };
     }
 
     // Fused leaf: one level above the bottom, ship all 8 quadrant blocks
@@ -276,7 +282,7 @@ fn dist_strassen(
         let pairs = input.map(|blk| (blk.tag.mindex, blk));
         let by_parent = cfg.map_side_combine && align_multiply_by_parent(level, cores);
         let grouped = pairs.group_by_key_with(
-            "multiply/fusedLeaf",
+            &format!("{prefix}multiply/fusedLeaf"),
             Arc::new(MultiplyAlign { parts, by_parent }),
         );
         let be = backend.clone();
@@ -301,7 +307,11 @@ fn dist_strassen(
                 Block::new(1, 1, tag, Arc::new(c22)),
             ]
         });
-        return if cfg.isolate_multiply { products.cache("multiply/compute") } else { products };
+        return if cfg.isolate_multiply {
+            products.cache(&format!("{prefix}multiply/compute"))
+        } else {
+            products
+        };
     }
 
     // DivNRep (Algorithm 3). The divide shuffle routes each record to
@@ -313,12 +323,12 @@ fn dist_strassen(
     } else {
         NextGrouping::Quadrant { half: (g / 2).max(1) }
     };
-    let divided = div_n_rep(&input, n, level, parts, next, cfg.map_side_combine);
+    let divided = div_n_rep(&input, n, level, parts, next, cfg.map_side_combine, prefix);
     // Recurse on the 7 sub-problems (all live in one Dist, distinguished
     // by M-index — the paper's "distributed tail recursion").
-    let product = dist_strassen(backend, divided, n / 2, level + 1, cfg);
+    let product = dist_strassen(backend, divided, n / 2, level + 1, cfg, prefix);
     // Combine (Algorithm 5) back to this level's grid.
-    combine(&product, n / 2, level, parts, cfg.map_side_combine)
+    combine(&product, n / 2, level, parts, cfg.map_side_combine, prefix)
 }
 
 /// Algorithm 3: replicate quadrants into their M-terms and form the 14
@@ -333,6 +343,7 @@ fn div_n_rep(
     parts: usize,
     next: NextGrouping,
     map_side: bool,
+    prefix: &str,
 ) -> Dist<Block> {
     let replicated = input.flat_map(move |blk| {
         let (qr, qc, r, c) = blk.quadrant_of(n);
@@ -344,7 +355,7 @@ fn div_n_rep(
             })
             .collect::<Vec<_>>()
     });
-    let label = format!("divide/L{level}");
+    let label = format!("{prefix}divide/L{level}");
     let partitioner: Arc<dyn Partitioner<(u64, u8, u32, u32)>> =
         Arc::new(DivideAlign { parts, next });
     if map_side {
@@ -371,6 +382,7 @@ fn combine(
     level: u32,
     parts: usize,
     map_side: bool,
+    prefix: &str,
 ) -> Dist<Block> {
     let contributions = product.flat_map(move |blk| {
         let (parent, m) = blk.tag.parent();
@@ -383,7 +395,7 @@ fn combine(
             })
             .collect::<Vec<_>>()
     });
-    let label = format!("combine/L{level}");
+    let label = format!("{prefix}combine/L{level}");
     let partitioner: Arc<dyn Partitioner<(u64, u32, u32)>> = Arc::new(CombineAlign { parts });
     if map_side {
         contributions
@@ -467,30 +479,7 @@ pub fn multiply_splits(
     sb: &BlockSplits,
     cfg: &StarkConfig,
 ) -> Result<MultiplyOutput, StarkError> {
-    BlockSplits::check_pair(sa, sb)?;
-    let (n, b) = (sa.n(), sa.b());
-    validate_b(n, b)?;
-    let timing = TimingBackend::new(backend);
-    let job = ctx.run_job(&format!("stark n={n} b={b}"));
-
-    let (da, db) = if cfg.map_side_combine {
-        (distribute_aligned(&job, sa, Side::A), distribute_aligned(&job, sb, Side::B))
-    } else {
-        (distribute(&job, sa, Side::A), distribute(&job, sb, Side::B))
-    };
-    let result = dist_strassen(&timing, da.union(&db), b as u32, 0, cfg);
-
-    let collected = result.collect("result/collect");
-    let pairs: Vec<((u32, u32), DenseMatrix)> = collected
-        .into_iter()
-        .map(|blk| {
-            debug_assert_eq!(blk.tag, Tag::new(Side::M, 0));
-            ((blk.row, blk.col), (*blk.data).clone())
-        })
-        .collect();
-    let c = assemble(b, n / b, pairs);
-    let job = job.finish();
-    Ok(MultiplyOutput { c, job, leaf_ms: timing.leaf_ms(), leaf_calls: timing.calls() })
+    Stark::new(cfg.clone()).multiply_splits(ctx, backend, sa, sb)
 }
 
 /// [`MultiplyAlgorithm`] implementation: the paper's system with its
@@ -514,14 +503,25 @@ impl MultiplyAlgorithm for Stark {
         validate_b(n, b)
     }
 
-    fn multiply_splits(
+    fn distribute(&self, job: &JobCtx, splits: &BlockSplits, side: Side) -> Dist<Block> {
+        if self.opts.map_side_combine {
+            distribute_aligned(job, splits, side)
+        } else {
+            distribute(job, splits, side)
+        }
+    }
+
+    fn multiply_dist(
         &self,
-        ctx: &SparkContext,
-        backend: Arc<dyn LeafBackend>,
-        a: &BlockSplits,
-        b: &BlockSplits,
-    ) -> Result<MultiplyOutput, StarkError> {
-        multiply_splits(ctx, backend, a, b, &self.opts)
+        backend: &Arc<TimingBackend>,
+        da: Dist<Block>,
+        db: Dist<Block>,
+        n: usize,
+        b: usize,
+        prefix: &str,
+    ) -> Result<Dist<Block>, StarkError> {
+        validate_b(n, b)?;
+        Ok(dist_strassen(backend, da.union(&db), b as u32, 0, &self.opts, prefix))
     }
 }
 
@@ -648,7 +648,7 @@ mod tests {
         let job = ctx.run_job("repl");
         let a = DenseMatrix::random(8, 8, 5);
         let d = distribute(&job, &BlockSplits::of(&a, 2).unwrap(), Side::A);
-        let divided = div_n_rep(&d, 2, 0, 4, NextGrouping::Subproblem, true);
+        let divided = div_n_rep(&d, 2, 0, 4, NextGrouping::Subproblem, true, "");
         let blocks = divided.collect("c");
         // 7 sub-problems × 1 block each (1×1 grids after divide).
         assert_eq!(blocks.len(), 7);
@@ -669,7 +669,7 @@ mod tests {
         let d = distribute_aligned(&job, &BlockSplits::of(&a, 4).unwrap(), Side::A);
         // Grid 4 divides towards grid 2 (no fused leaf): quadrant mode.
         let divided =
-            div_n_rep(&d, 4, 0, 8, NextGrouping::Quadrant { half: 1 }, true);
+            div_n_rep(&d, 4, 0, 8, NextGrouping::Quadrant { half: 1 }, true, "");
         let blocks = divided.collect("c");
         // 7 sub-problems × 2×2 operand grids.
         assert_eq!(blocks.len(), 28);

@@ -1,0 +1,1239 @@
+//! Lazy distributed matrix expressions (DESIGN.md S18): chain
+//! multiplies, sums, scales and transposes into a DAG that runs as
+//! **one job with one collect**, intermediates staying distributed as
+//! block RDDs the whole way.
+//!
+//! ```no_run
+//! use stark::api::StarkSession;
+//! use stark::matrix::DenseMatrix;
+//!
+//! let s = StarkSession::builder().build()?;
+//! let (a, b) = (s.matrix(&DenseMatrix::random(200, 200, 1)),
+//!               s.matrix(&DenseMatrix::random(200, 200, 2)));
+//! let (c, d) = (s.matrix(&DenseMatrix::random(200, 200, 3)),
+//!               s.matrix(&DenseMatrix::random(200, 200, 4)));
+//! // (A·B + C)·Dᵀ — planned as a whole, collected exactly once.
+//! let report = a.multiply(&b).add(&c).multiply(&d.transpose()).collect()?;
+//! println!("{} multiplies, {:.1} ms", report.plan.multiplies.len(), report.job.wall_ms);
+//! # Ok::<(), stark::StarkError>(())
+//! ```
+//!
+//! **What stays distributed.** Every multiply runs through
+//! [`MultiplyAlgorithm::multiply_dist`], which returns the product as a
+//! block RDD; the next node consumes it with a narrow re-tag — no
+//! gather, no re-split. Elementwise ops are cheap by construction:
+//! transpose and scale are narrow maps, a sum whose extra terms are
+//! leaf combinations folds into the consumer with a narrow map, and a
+//! sum of source matrices feeding a multiply is **fused into the
+//! operand's block split** (each block computed as `Σ sᵢ·Aᵢ(r,c)`
+//! straight into the distribution — the full `A+B` matrix is never
+//! allocated). At the `b = 1` degenerate plan the whole product runs
+//! through [`crate::runtime::LeafBackend::multiply_fused`], where the
+//! packed native kernel evaluates the operand sums inside the GEMM
+//! packing loops (`gemm_fused`).
+//!
+//! **Chain planning.** `plan()`/`collect()` resolve every multiply node
+//! through the session's §IV cost-model [`crate::cost::Planner`], and
+//! re-parenthesize associative chains `A·B·C` ([`Planner::plan_chain`])
+//! when the model predicts a strictly cheaper order — the reorder is
+//! reported in [`ExprPlan::reordered`]. Nodes planned at different
+//! grids are bridged by a distributed `regrid` shuffle (never a
+//! collect).
+//!
+//! **Determinism.** Execution is deterministic: re-running the same
+//! expression is bit-stable, and for Stark's map-side path a chained
+//! pipeline is bit-identical to collecting between every op (the engine
+//! emits grouped shuffle output in key order — see
+//! [`crate::engine::dist`]).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::algos::common::{
+    collect_product, default_parts, distribute as distribute_plain, implementation,
+    MultiplyAlgorithm, TimingBackend,
+};
+use crate::algos::{Algorithm, BlockSplits};
+use crate::cost::{ChainTree, Plan, Planner, Splits};
+use crate::engine::{sum_block_grids, Block, Dist, JobCtx, JobMetrics, Side, Tag};
+use crate::error::StarkError;
+use crate::matrix::DenseMatrix;
+
+use super::{DistMatrix, MultiplyBuilder, StarkSession};
+
+/// A lazy distributed matrix expression — a node in the DAG that
+/// [`collect`](DistExpr::collect) runs as one multi-stage job. Cloning
+/// is cheap and *shares* the node: `let sq = p.expr().multiply(&p);
+/// sq.multiply(&sq)` evaluates the inner square once.
+#[derive(Clone)]
+pub struct DistExpr {
+    session: StarkSession,
+    node: Arc<ExprNode>,
+    rows: usize,
+    cols: usize,
+}
+
+enum ExprNode {
+    Leaf(DistMatrix),
+    MatMul { l: DistExpr, r: DistExpr, algorithm: Algorithm, splits: Splits },
+    /// Signed linear combination `Σ signᵢ · termᵢ` (scaling is a
+    /// one-term sum; nested sums flatten at construction).
+    Sum { terms: Vec<(f64, DistExpr)> },
+    Transpose(DistExpr),
+    /// A construction-time error, deferred to `plan()`/`collect()` so
+    /// the builder API stays infallible.
+    Invalid(String),
+}
+
+/// Anything that can stand as an expression operand: a [`DistExpr`], a
+/// [`DistMatrix`] handle, or a pending [`MultiplyBuilder`].
+pub trait IntoExpr {
+    fn expr(&self) -> DistExpr;
+}
+
+impl IntoExpr for DistExpr {
+    fn expr(&self) -> DistExpr {
+        self.clone()
+    }
+}
+
+impl IntoExpr for DistMatrix {
+    fn expr(&self) -> DistExpr {
+        DistExpr {
+            session: self.session.clone(),
+            rows: self.rows(),
+            cols: self.cols(),
+            node: Arc::new(ExprNode::Leaf(self.clone())),
+        }
+    }
+}
+
+impl IntoExpr for MultiplyBuilder {
+    /// The builder as a single expression node, keeping any pinned
+    /// algorithm/split selection.
+    fn expr(&self) -> DistExpr {
+        let (l, r) = (self.a.expr(), self.b.expr());
+        DistExpr {
+            session: self.session.clone(),
+            rows: l.rows,
+            cols: r.cols,
+            node: Arc::new(ExprNode::MatMul {
+                l,
+                r,
+                algorithm: self.algorithm,
+                splits: self.splits,
+            }),
+        }
+    }
+}
+
+impl DistExpr {
+    /// Logical (pre-padding) row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Logical (pre-padding) column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn invalid(&self, msg: impl Into<String>) -> DistExpr {
+        DistExpr {
+            session: self.session.clone(),
+            rows: self.rows,
+            cols: self.cols,
+            node: Arc::new(ExprNode::Invalid(msg.into())),
+        }
+    }
+
+    /// Matrix product `self @ rhs`, algorithm and splits planner-chosen.
+    pub fn multiply(&self, rhs: &impl IntoExpr) -> DistExpr {
+        self.multiply_with(rhs, Algorithm::Auto, Splits::Auto)
+    }
+
+    /// Matrix product with a pinned algorithm / split selection for this
+    /// node (pinned nodes are never re-associated by chain planning).
+    pub fn multiply_with(
+        &self,
+        rhs: &impl IntoExpr,
+        algorithm: Algorithm,
+        splits: Splits,
+    ) -> DistExpr {
+        let r = rhs.expr();
+        DistExpr {
+            session: self.session.clone(),
+            rows: self.rows,
+            cols: r.cols,
+            node: Arc::new(ExprNode::MatMul { l: self.clone(), r, algorithm, splits }),
+        }
+    }
+
+    fn terms_of(e: &DistExpr, sign: f64) -> Vec<(f64, DistExpr)> {
+        match &*e.node {
+            ExprNode::Sum { terms } => {
+                terms.iter().map(|(s, t)| (sign * s, t.clone())).collect()
+            }
+            _ => vec![(sign, e.clone())],
+        }
+    }
+
+    fn sum_with(&self, rhs: &impl IntoExpr, sign: f64) -> DistExpr {
+        let r = rhs.expr();
+        let mut terms = Self::terms_of(self, 1.0);
+        terms.extend(Self::terms_of(&r, sign));
+        DistExpr {
+            session: self.session.clone(),
+            rows: self.rows,
+            cols: self.cols,
+            node: Arc::new(ExprNode::Sum { terms }),
+        }
+    }
+
+    /// Elementwise sum `self + rhs`.
+    pub fn add(&self, rhs: &impl IntoExpr) -> DistExpr {
+        self.sum_with(rhs, 1.0)
+    }
+
+    /// Elementwise difference `self − rhs`.
+    pub fn sub(&self, rhs: &impl IntoExpr) -> DistExpr {
+        self.sum_with(rhs, -1.0)
+    }
+
+    /// Scalar multiple `s · self`.
+    pub fn scale(&self, s: f64) -> DistExpr {
+        let terms = Self::terms_of(self, s);
+        DistExpr {
+            session: self.session.clone(),
+            rows: self.rows,
+            cols: self.cols,
+            node: Arc::new(ExprNode::Sum { terms }),
+        }
+    }
+
+    /// Matrix transpose (a double transpose collapses).
+    pub fn transpose(&self) -> DistExpr {
+        if let ExprNode::Transpose(inner) = &*self.node {
+            return inner.clone();
+        }
+        DistExpr {
+            session: self.session.clone(),
+            rows: self.cols,
+            cols: self.rows,
+            node: Arc::new(ExprNode::Transpose(self.clone())),
+        }
+    }
+
+    /// `self^k` by repeated squaring (`k ≥ 1`; squarings are shared DAG
+    /// nodes, so `pow(8)` is three multiplies). Requires a square
+    /// expression — checked, like every shape rule, at `plan()` time.
+    pub fn pow(&self, k: u32) -> DistExpr {
+        if k == 0 {
+            return self.invalid("pow(0) is not supported (needs k >= 1)");
+        }
+        let mut base = self.clone();
+        let mut acc: Option<DistExpr> = None;
+        let mut kk = k;
+        loop {
+            if kk & 1 == 1 {
+                acc = Some(match acc {
+                    None => base.clone(),
+                    Some(a) => a.multiply(&base),
+                });
+            }
+            kk >>= 1;
+            if kk == 0 {
+                break;
+            }
+            base = base.multiply(&base);
+        }
+        acc.expect("k >= 1 sets at least one bit")
+    }
+
+    /// Resolve the whole DAG without running it: per-multiply plans,
+    /// chain reordering, and the total predicted wall time.
+    pub fn plan(&self) -> Result<ExprPlan, StarkError> {
+        Ok(Planned::build(self)?.plan)
+    }
+
+    /// Run the expression as **one job**: plan, execute every node over
+    /// distributed block RDDs, collect once, crop to the logical shape.
+    pub fn collect(&self) -> Result<ExprReport, StarkError> {
+        let planned = Planned::build(self)?;
+        let timing = TimingBackend::new(self.session.backend());
+        let job = self
+            .session
+            .context()
+            .run_job(&format!("expr {}", truncate(&planned.plan.expression, 60)));
+        let mut exec = Exec {
+            session: &self.session,
+            job,
+            timing: timing.clone(),
+            memo: HashMap::new(),
+            ew_count: 0,
+            regrid_count: 0,
+        };
+        let (s, b) = natural_grid(&planned.root, self.session.planner());
+        let blocks = exec.eval(&planned.root, s, b)?;
+        let mut c = collect_product(&blocks.retag_product(), b, s / b);
+        if (self.rows, self.cols) != (s, s) {
+            c = c.submatrix(0, 0, self.rows, self.cols);
+        }
+        let job = exec.job.finish();
+        Ok(ExprReport {
+            c,
+            job,
+            leaf_ms: timing.leaf_ms(),
+            leaf_calls: timing.calls(),
+            plan: planned.plan,
+        })
+    }
+}
+
+/// Ergonomic expression entry points on a matrix handle.
+impl DistMatrix {
+    /// This handle as a one-node expression.
+    pub fn expr(&self) -> DistExpr {
+        IntoExpr::expr(self)
+    }
+
+    /// Elementwise `self + rhs` (lazy — see [`DistExpr`]).
+    pub fn add(&self, rhs: &impl IntoExpr) -> DistExpr {
+        self.expr().add(rhs)
+    }
+
+    /// Elementwise `self − rhs`.
+    pub fn sub(&self, rhs: &impl IntoExpr) -> DistExpr {
+        self.expr().sub(rhs)
+    }
+
+    /// Scalar multiple `s · self`.
+    pub fn scale(&self, s: f64) -> DistExpr {
+        self.expr().scale(s)
+    }
+
+    /// Matrix transpose.
+    pub fn transpose(&self) -> DistExpr {
+        self.expr().transpose()
+    }
+
+    /// `self^k` by repeated squaring (`k ≥ 1`).
+    pub fn pow(&self, k: u32) -> DistExpr {
+        self.expr().pow(k)
+    }
+}
+
+/// Chaining straight off a pending multiply: `a.multiply(&b).add(&c)`.
+/// Each combinator promotes the builder to a [`DistExpr`] node keeping
+/// its pinned algorithm/splits.
+impl MultiplyBuilder {
+    /// Elementwise `(self) + rhs`.
+    pub fn add(self, rhs: &impl IntoExpr) -> DistExpr {
+        self.expr().add(rhs)
+    }
+
+    /// Elementwise `(self) − rhs`.
+    pub fn sub(self, rhs: &impl IntoExpr) -> DistExpr {
+        self.expr().sub(rhs)
+    }
+
+    /// Scalar multiple `s · (self)`.
+    pub fn scale(self, s: f64) -> DistExpr {
+        self.expr().scale(s)
+    }
+
+    /// Transpose of the product.
+    pub fn transpose(self) -> DistExpr {
+        self.expr().transpose()
+    }
+
+    /// Chain another multiply onto the product.
+    pub fn then_multiply(self, rhs: &impl IntoExpr) -> DistExpr {
+        self.expr().multiply(rhs)
+    }
+}
+
+/// How one multiply node of an expression will run.
+#[derive(Debug, Clone)]
+pub struct NodePlan {
+    /// Stage-label prefix of the node (`"m1"`, `"m2"`, … in execution
+    /// order).
+    pub label: String,
+    /// The §IV resolution for this node: concrete algorithm, split
+    /// count, padded grid dimension, candidate table.
+    pub plan: Plan,
+    /// Whether the node executes as a single fused leaf call
+    /// ([`crate::runtime::LeafBackend::multiply_fused`]) — only for
+    /// planner-chosen (`Algorithm::Auto`) `b = 1` nodes whose operands
+    /// are leaf combinations; pinned algorithms always run their own
+    /// stage pipeline.
+    pub fused: bool,
+}
+
+/// The resolved plan of a whole expression.
+#[derive(Debug, Clone)]
+pub struct ExprPlan {
+    /// Rendered (post-reorder) form, leaves lettered by first
+    /// appearance: `"(A·B+C)·Dᵀ"`.
+    pub expression: String,
+    /// Per-multiply-node plans, execution order.
+    pub multiplies: Vec<NodePlan>,
+    /// Σ node predictions plus regrid transfer estimates, milliseconds.
+    pub predicted_wall_ms: f64,
+    /// Whether chain planning re-parenthesized an associative multiply
+    /// chain (only happens when the model predicts a strict win).
+    pub reordered: bool,
+}
+
+/// Result of [`DistExpr::collect`]: the value plus the job's metrics —
+/// `job.stages` holds every stage of the whole chain, with exactly one
+/// `"result/collect"`.
+#[derive(Debug)]
+pub struct ExprReport {
+    /// The expression value, cropped to the logical shape.
+    pub c: DenseMatrix,
+    /// Stage metrics of the single job the expression ran as.
+    pub job: JobMetrics,
+    /// Total leaf-multiplication time (summed across tasks), ms.
+    pub leaf_ms: f64,
+    /// Leaf block multiplications across all multiply nodes.
+    pub leaf_calls: u64,
+    /// The resolved plan that was executed.
+    pub plan: ExprPlan,
+}
+
+// ---------------------------------------------------------------------
+// Planning: DistExpr (user DAG) → PNode (validated, reordered,
+// per-multiply resolved execution IR). Sharing is preserved: a DAG node
+// converts once and its PNode is reused, so `pow(8)` stays 3 multiplies.
+// ---------------------------------------------------------------------
+
+enum PNode {
+    Leaf(DistMatrix),
+    Mul {
+        l: Arc<PNode>,
+        r: Arc<PNode>,
+        plan: Plan,
+        label: String,
+        /// Execute as one fused leaf call (`b = 1`, leaf-combination
+        /// operands, algorithm left to the planner). Pinned algorithms
+        /// never fuse: their stage ledger is the experimental
+        /// observable, so they always run their own pipeline.
+        fused: bool,
+        rows: usize,
+        cols: usize,
+    },
+    Sum { terms: Vec<(f64, Arc<PNode>)>, rows: usize, cols: usize },
+    Transpose { e: Arc<PNode>, rows: usize, cols: usize },
+}
+
+impl PNode {
+    fn rows(&self) -> usize {
+        match self {
+            PNode::Leaf(m) => m.rows(),
+            PNode::Mul { rows, .. } | PNode::Sum { rows, .. } | PNode::Transpose { rows, .. } => {
+                *rows
+            }
+        }
+    }
+
+    fn cols(&self) -> usize {
+        match self {
+            PNode::Leaf(m) => m.cols(),
+            PNode::Mul { cols, .. } | PNode::Sum { cols, .. } | PNode::Transpose { cols, .. } => {
+                *cols
+            }
+        }
+    }
+}
+
+struct Planned {
+    root: Arc<PNode>,
+    plan: ExprPlan,
+}
+
+struct PlanCtx<'a> {
+    session: &'a StarkSession,
+    /// Incoming-edge counts per DAG node: shared (> 1) multiply nodes
+    /// are chain barriers, so re-association cannot duplicate work.
+    uses: HashMap<usize, usize>,
+    memo: HashMap<usize, Arc<PNode>>,
+    plans: Vec<NodePlan>,
+    reordered: bool,
+}
+
+fn node_key(e: &DistExpr) -> usize {
+    Arc::as_ptr(&e.node) as usize
+}
+
+impl Planned {
+    fn build(root: &DistExpr) -> Result<Planned, StarkError> {
+        let mut uses = HashMap::new();
+        count_uses(root, &mut uses);
+        let mut ctx = PlanCtx {
+            session: &root.session,
+            uses,
+            memo: HashMap::new(),
+            plans: Vec::new(),
+            reordered: false,
+        };
+        let proot = ctx.convert(root)?;
+        let planner = root.session.planner();
+        let root_grid = natural_grid(&proot, planner);
+        let predicted_wall_ms: f64 = ctx.plans.iter().map(|p| p.plan.predicted_wall_ms()).sum::<f64>()
+            + transfer_ms(&proot, root_grid, planner);
+        let expression = render_root(&proot);
+        Ok(Planned {
+            root: proot,
+            plan: ExprPlan {
+                expression,
+                multiplies: ctx.plans,
+                predicted_wall_ms,
+                reordered: ctx.reordered,
+            },
+        })
+    }
+}
+
+fn count_uses(e: &DistExpr, uses: &mut HashMap<usize, usize>) {
+    let c = uses.entry(node_key(e)).or_insert(0);
+    *c += 1;
+    if *c > 1 {
+        return; // children counted on first visit
+    }
+    match &*e.node {
+        ExprNode::Leaf(_) | ExprNode::Invalid(_) => {}
+        ExprNode::MatMul { l, r, .. } => {
+            count_uses(l, uses);
+            count_uses(r, uses);
+        }
+        ExprNode::Sum { terms } => {
+            for (_, t) in terms {
+                count_uses(t, uses);
+            }
+        }
+        ExprNode::Transpose(inner) => count_uses(inner, uses),
+    }
+}
+
+impl PlanCtx<'_> {
+    fn planner(&self) -> &Planner {
+        self.session.planner()
+    }
+
+    fn contraction_err(l: &PNode, r: &PNode) -> StarkError {
+        StarkError::ShapeMismatch {
+            a: (l.rows(), l.cols()),
+            b: (r.rows(), r.cols()),
+            reason: "expression multiply: left cols must equal right rows".to_string(),
+        }
+    }
+
+    fn mul_node(
+        &mut self,
+        l: Arc<PNode>,
+        r: Arc<PNode>,
+        algorithm: Algorithm,
+        splits: Splits,
+    ) -> Result<Arc<PNode>, StarkError> {
+        if l.cols() != r.rows() {
+            return Err(Self::contraction_err(&l, &r));
+        }
+        let max_dim = l.rows().max(l.cols()).max(r.cols());
+        let plan = self.planner().resolve(algorithm, splits, max_dim)?;
+        let label = format!("m{}", self.plans.len() + 1);
+        let fused = plan.b == 1
+            && algorithm == Algorithm::Auto
+            && leaf_terms(&l).is_some()
+            && leaf_terms(&r).is_some();
+        self.plans.push(NodePlan { label: label.clone(), plan: plan.clone(), fused });
+        let (rows, cols) = (l.rows(), r.cols());
+        Ok(Arc::new(PNode::Mul { l, r, plan, label, fused, rows, cols }))
+    }
+
+    fn convert(&mut self, e: &DistExpr) -> Result<Arc<PNode>, StarkError> {
+        let key = node_key(e);
+        if let Some(p) = self.memo.get(&key) {
+            return Ok(p.clone());
+        }
+        let p = match &*e.node {
+            ExprNode::Invalid(msg) => return Err(StarkError::InvalidExpression(msg.clone())),
+            ExprNode::Leaf(m) => {
+                if !Arc::ptr_eq(&m.session.inner, &self.session.inner) {
+                    return Err(StarkError::SessionMismatch);
+                }
+                Arc::new(PNode::Leaf(m.clone()))
+            }
+            ExprNode::Transpose(inner) => {
+                let pe = self.convert(inner)?;
+                let (rows, cols) = (pe.cols(), pe.rows());
+                Arc::new(PNode::Transpose { e: pe, rows, cols })
+            }
+            ExprNode::Sum { terms } => {
+                assert!(!terms.is_empty(), "sums have at least one term by construction");
+                let mut out = Vec::with_capacity(terms.len());
+                for (sign, t) in terms {
+                    out.push((*sign, self.convert(t)?));
+                }
+                let (rows, cols) = (out[0].1.rows(), out[0].1.cols());
+                for (_, t) in &out {
+                    if (t.rows(), t.cols()) != (rows, cols) {
+                        return Err(StarkError::ShapeMismatch {
+                            a: (rows, cols),
+                            b: (t.rows(), t.cols()),
+                            reason: "expression sum: all terms must share one shape".to_string(),
+                        });
+                    }
+                }
+                Arc::new(PNode::Sum { terms: out, rows, cols })
+            }
+            ExprNode::MatMul { l, r, algorithm, splits } => {
+                if (*algorithm, *splits) != (Algorithm::Auto, Splits::Auto) {
+                    // Pinned nodes are chain barriers: convert children,
+                    // resolve exactly as requested.
+                    let (lp, rp) = (self.convert(l)?, self.convert(r)?);
+                    self.mul_node(lp, rp, *algorithm, *splits)?
+                } else {
+                    self.convert_chain(e)?
+                }
+            }
+        };
+        self.memo.insert(key, p.clone());
+        Ok(p)
+    }
+
+    /// Flatten the maximal Auto/Auto multiply chain rooted at `e`,
+    /// re-parenthesize it when the §IV model predicts a strict win, and
+    /// build the multiply nodes in the chosen order.
+    fn convert_chain(&mut self, e: &DistExpr) -> Result<Arc<PNode>, StarkError> {
+        let mut factors: Vec<DistExpr> = Vec::new();
+        let orig = flatten_chain(e, &self.uses, true, &mut factors);
+        // Boundary dims d0..dk; factor i is d[i] × d[i+1]. Contraction
+        // mismatches surface here, against the two offending factors.
+        let mut dims = Vec::with_capacity(factors.len() + 1);
+        dims.push(factors[0].rows);
+        for w in factors.windows(2) {
+            if w[0].cols != w[1].rows {
+                return Err(StarkError::ShapeMismatch {
+                    a: (w[0].rows, w[0].cols),
+                    b: (w[1].rows, w[1].cols),
+                    reason: "expression multiply: left cols must equal right rows".to_string(),
+                });
+            }
+        }
+        for f in &factors {
+            dims.push(f.cols);
+        }
+        let planner = self.planner().clone();
+        let tree = if factors.len() >= 3 {
+            let best = planner.plan_chain(&dims);
+            let orig_ms = planner.chain_cost_ms(&orig, &dims);
+            // Reorder only on a strict, non-noise win — ties keep the
+            // order the user wrote (and its bit-exact result).
+            if best.predicted_ms < orig_ms * (1.0 - 1e-9) {
+                self.reordered = true;
+                best.tree
+            } else {
+                orig
+            }
+        } else {
+            orig
+        };
+        let fps: Vec<Arc<PNode>> =
+            factors.iter().map(|f| self.convert(f)).collect::<Result<_, _>>()?;
+        self.build_tree(&tree, &fps)
+    }
+
+    fn build_tree(
+        &mut self,
+        tree: &ChainTree,
+        factors: &[Arc<PNode>],
+    ) -> Result<Arc<PNode>, StarkError> {
+        match tree {
+            ChainTree::Factor(i) => Ok(factors[*i].clone()),
+            ChainTree::Product(l, r) => {
+                let lp = self.build_tree(l, factors)?;
+                let rp = self.build_tree(r, factors)?;
+                self.mul_node(lp, rp, Algorithm::Auto, Splits::Auto)
+            }
+        }
+    }
+}
+
+/// Flatten an Auto/Auto multiply chain into its factor list, mirroring
+/// the user's parenthesization as a [`ChainTree`]. A child multiply
+/// only joins the chain when it is unpinned AND unshared — a shared
+/// node (e.g. the repeated square in `pow`) must stay a single factor
+/// so re-association cannot duplicate its work.
+fn flatten_chain(
+    e: &DistExpr,
+    uses: &HashMap<usize, usize>,
+    is_root: bool,
+    factors: &mut Vec<DistExpr>,
+) -> ChainTree {
+    if let ExprNode::MatMul { l, r, algorithm: Algorithm::Auto, splits: Splits::Auto } = &*e.node
+    {
+        if is_root || uses.get(&node_key(e)).copied().unwrap_or(0) <= 1 {
+            let lt = flatten_chain(l, uses, false, factors);
+            let rt = flatten_chain(r, uses, false, factors);
+            return ChainTree::Product(Box::new(lt), Box::new(rt));
+        }
+    }
+    factors.push(e.clone());
+    ChainTree::Factor(factors.len() - 1)
+}
+
+/// The grid an evaluated node naturally lives on: a multiply's resolved
+/// plan; elementwise nodes inherit the first multiply they contain, and
+/// multiply-free expressions get an elementwise default grid.
+fn natural_grid(p: &PNode, planner: &Planner) -> (usize, usize) {
+    fn first_mul(p: &PNode) -> Option<(usize, usize)> {
+        match p {
+            PNode::Leaf(_) => None,
+            PNode::Mul { plan, .. } => Some((plan.n, plan.b)),
+            PNode::Transpose { e, .. } => first_mul(e),
+            PNode::Sum { terms, .. } => terms.iter().find_map(|(_, t)| first_mul(t)),
+        }
+    }
+    first_mul(p).unwrap_or_else(|| {
+        let max_dim = p.rows().max(p.cols());
+        elementwise_grid(max_dim, planner.cores)
+    })
+}
+
+/// Grid for multiply-free distributed evaluation: pad like
+/// [`Splits::Auto`], split so there are at least ~4 blocks per core
+/// (capped at 64 splits, the planner's own candidate ceiling).
+fn elementwise_grid(max_dim: usize, cores: usize) -> (usize, usize) {
+    let s = Splits::Auto.padded_dim(max_dim);
+    let mut b = 1usize;
+    while b < s && b < 64 && b * b < 4 * cores.max(1) {
+        b *= 2;
+    }
+    (s, b)
+}
+
+/// Predicted regrid transfer cost of the DAG when its root is consumed
+/// at grid `want` (mirrors the executor's regrid insertion, including
+/// same-dim/different-split regrids). Charged per `(node, grid)` pair —
+/// exactly like the executor's memo — so shared subtrees neither blow
+/// up the traversal nor double-count a regrid that runs once.
+fn transfer_ms(p: &Arc<PNode>, want: (usize, usize), planner: &Planner) -> f64 {
+    fn walk(
+        p: &Arc<PNode>,
+        want: (usize, usize),
+        planner: &Planner,
+        seen: &mut std::collections::HashSet<(usize, (usize, usize))>,
+    ) -> f64 {
+        if !seen.insert((Arc::as_ptr(p) as usize, want)) {
+            return 0.0; // the executor reuses the memoized evaluation
+        }
+        match &**p {
+            PNode::Leaf(_) => 0.0,
+            PNode::Mul { l, r, plan, .. } => {
+                let own = (plan.n, plan.b);
+                let inner = walk(l, own, planner, seen) + walk(r, own, planner, seen);
+                inner + planner.regrid_cost_ms(own, want)
+            }
+            PNode::Sum { terms, .. } => {
+                terms.iter().map(|(_, t)| walk(t, want, planner, seen)).sum()
+            }
+            PNode::Transpose { e, .. } => walk(e, want, planner, seen),
+        }
+    }
+    walk(p, want, planner, &mut std::collections::HashSet::new())
+}
+
+// ---------------------------------------------------------------------
+// Rendering: leaves lettered by first appearance → "(A·B+C)·Dᵀ".
+// ---------------------------------------------------------------------
+
+fn leaf_name(names: &mut HashMap<usize, String>, m: &DistMatrix) -> String {
+    let key = Arc::as_ptr(&m.inner) as usize;
+    if let Some(n) = names.get(&key) {
+        return n.clone();
+    }
+    let i = names.len();
+    let name = if i < 26 {
+        char::from(b'A' + i as u8).to_string()
+    } else {
+        format!("X{i}")
+    };
+    names.insert(key, name.clone());
+    name
+}
+
+/// Character budget for the rendered expression. Rendering is for
+/// humans (job names, reports); a shared subtree (`pow(2^k)` doubles
+/// its text per level) or a huge chain would otherwise grow without
+/// bound, so rendering stops emitting detail once the budget is spent.
+const MAX_RENDER_CHARS: usize = 512;
+
+fn render_root(p: &PNode) -> String {
+    let mut names = HashMap::new();
+    let mut budget = MAX_RENDER_CHARS;
+    render(p, &mut names, false, &mut budget)
+}
+
+fn render(
+    p: &PNode,
+    names: &mut HashMap<usize, String>,
+    parens: bool,
+    budget: &mut usize,
+) -> String {
+    if *budget == 0 {
+        return "…".to_string();
+    }
+    *budget = budget.saturating_sub(1);
+    match p {
+        PNode::Leaf(m) => leaf_name(names, m),
+        PNode::Transpose { e, .. } => {
+            let atom = matches!(**e, PNode::Leaf(_));
+            format!("{}ᵀ", render(e, names, !atom, budget))
+        }
+        PNode::Mul { l, r, .. } => {
+            let ls = render(l, names, matches!(**l, PNode::Sum { .. }), budget);
+            let rs =
+                render(r, names, matches!(**r, PNode::Sum { .. } | PNode::Mul { .. }), budget);
+            let s = format!("{ls}·{rs}");
+            if parens {
+                format!("({s})")
+            } else {
+                s
+            }
+        }
+        PNode::Sum { terms, .. } => {
+            let mut s = String::new();
+            for (i, (sign, t)) in terms.iter().enumerate() {
+                let ts = render(t, names, matches!(**t, PNode::Sum { .. }), budget);
+                let mag = sign.abs();
+                let body = if mag == 1.0 { ts } else { format!("{mag}·{ts}") };
+                if i == 0 {
+                    if *sign < 0.0 {
+                        s.push('−');
+                    }
+                } else if *sign < 0.0 {
+                    s.push('−');
+                } else {
+                    s.push('+');
+                }
+                s.push_str(&body);
+            }
+            if parens {
+                format!("({s})")
+            } else {
+                s
+            }
+        }
+    }
+}
+
+fn truncate(s: &str, max: usize) -> String {
+    if s.chars().count() <= max {
+        s.to_string()
+    } else {
+        let cut: String = s.chars().take(max).collect();
+        format!("{cut}…")
+    }
+}
+
+// ---------------------------------------------------------------------
+// Execution: PNode → Dist<Block> on a requested grid, memoized per
+// (node, grid) so shared subtrees run once.
+// ---------------------------------------------------------------------
+
+/// One leaf-combination term: `sign · (transposed? Lᵀ : L)`.
+struct LeafTerm {
+    sign: f64,
+    transposed: bool,
+    matrix: DistMatrix,
+}
+
+/// The signed-leaf normal form of an expression, when it has one (no
+/// multiply anywhere): the input to split-time fusion.
+fn leaf_terms(p: &PNode) -> Option<Vec<LeafTerm>> {
+    match p {
+        PNode::Leaf(m) => {
+            Some(vec![LeafTerm { sign: 1.0, transposed: false, matrix: m.clone() }])
+        }
+        PNode::Mul { .. } => None,
+        PNode::Transpose { e, .. } => {
+            let mut ts = leaf_terms(e)?;
+            for t in &mut ts {
+                t.transposed = !t.transposed;
+            }
+            Some(ts)
+        }
+        PNode::Sum { terms, .. } => {
+            let mut out = Vec::new();
+            for (sign, t) in terms {
+                let mut ts = leaf_terms(t)?;
+                for lt in &mut ts {
+                    lt.sign *= sign;
+                }
+                out.append(&mut ts);
+            }
+            Some(out)
+        }
+    }
+}
+
+/// Evaluate a signed leaf combination **into a block split** — each
+/// block is `Σ signᵢ · Lᵢ(r,c)` (transposed terms read the mirrored
+/// block), accumulated in term order. No full-size combined matrix is
+/// ever allocated, and each handle's cached split is reused.
+fn combined_splits(terms: &[LeafTerm], s: usize, b: usize) -> Result<BlockSplits, StarkError> {
+    let splits: Vec<(f64, bool, BlockSplits)> = terms
+        .iter()
+        .map(|t| Ok((t.sign, t.transposed, t.matrix.splits_for(s, b)?)))
+        .collect::<Result<_, StarkError>>()?;
+    let mut blocks = Vec::with_capacity(b * b);
+    for r in 0..b {
+        for c in 0..b {
+            let mut acc: Option<DenseMatrix> = None;
+            for (sign, transposed, sp) in &splits {
+                let src = if *transposed {
+                    sp.block_at(c, r).transpose()
+                } else {
+                    (**sp.block_at(r, c)).clone()
+                };
+                match acc.as_mut() {
+                    None => {
+                        acc = Some(if *sign == 1.0 { src } else { src.scale(*sign) });
+                    }
+                    Some(a) => a.add_assign_signed(&src, *sign),
+                }
+            }
+            blocks.push((r as u32, c as u32, Arc::new(acc.expect("non-empty terms"))));
+        }
+    }
+    BlockSplits::from_blocks(s, b, blocks)
+}
+
+/// The single-block term lists for a `b = 1` fused multiply: every term
+/// padded to `s × s` (cached handle splits), transposed terms
+/// materialized transposed.
+fn single_block_terms(
+    terms: &[LeafTerm],
+    s: usize,
+) -> Result<Vec<(f64, Arc<DenseMatrix>)>, StarkError> {
+    terms
+        .iter()
+        .map(|t| {
+            let block = t.matrix.splits_for(s, 1)?;
+            let m = if t.transposed {
+                Arc::new(block.block_at(0, 0).transpose())
+            } else {
+                block.block_at(0, 0).clone()
+            };
+            Ok((t.sign, m))
+        })
+        .collect()
+}
+
+trait RetagProduct {
+    fn retag_product(&self) -> Self;
+}
+
+impl RetagProduct for Dist<Block> {
+    /// Normalize tags to the product convention `(M, 0)` before the
+    /// final collect (leaves and sums arrive root-tagged).
+    fn retag_product(&self) -> Dist<Block> {
+        self.map(|blk| Block::new(blk.row, blk.col, Tag::new(Side::M, 0), blk.data))
+    }
+}
+
+struct Exec<'a> {
+    session: &'a StarkSession,
+    job: JobCtx,
+    timing: Arc<TimingBackend>,
+    /// `(node, s, b)` → evaluated block RDD. Shared subtrees evaluate
+    /// once; a second grid request regrids the memoized natural-grid
+    /// result instead of re-running it.
+    memo: HashMap<(usize, usize, usize), Dist<Block>>,
+    ew_count: usize,
+    regrid_count: usize,
+}
+
+impl Exec<'_> {
+    fn cores(&self) -> usize {
+        self.job.config().total_cores()
+    }
+
+    fn eval(&mut self, p: &Arc<PNode>, s: usize, b: usize) -> Result<Dist<Block>, StarkError> {
+        let key = (Arc::as_ptr(p) as usize, s, b);
+        if let Some(d) = self.memo.get(&key) {
+            return Ok(d.clone());
+        }
+        let out = match &**p {
+            // A multiply requested off its natural grid: evaluate there
+            // (memoized), then bridge with one distributed regrid.
+            PNode::Mul { plan, .. } if (plan.n, plan.b) != (s, b) => {
+                let base = self.eval(p, plan.n, plan.b)?;
+                self.regrid_count += 1;
+                let label = format!("regrid{}/to{}", self.regrid_count, s);
+                base.regrid((plan.n, plan.b), (s, b), &label, default_parts(b, self.cores()))
+            }
+            PNode::Mul { l, r, plan, label, fused, .. } => {
+                self.eval_mul(l, r, plan, label, *fused)?
+            }
+            PNode::Leaf(m) => {
+                distribute_plain(&self.job, &m.splits_for(s, b)?, Side::A)
+            }
+            PNode::Transpose { e, .. } => self.eval(e, s, b)?.transpose_blocks(),
+            PNode::Sum { terms, .. } => self.eval_sum(terms, s, b)?,
+        };
+        self.memo.insert(key, out.clone());
+        Ok(out)
+    }
+
+    /// Evaluate one multiply operand at the node's grid. Leaf
+    /// combinations fuse into the split (and use the algorithm's own
+    /// placement); anything containing a multiply evaluates distributed
+    /// and re-tags — a narrow map, never a gather.
+    fn operand(
+        &mut self,
+        e: &Arc<PNode>,
+        s: usize,
+        b: usize,
+        side: Side,
+        imp: &dyn MultiplyAlgorithm,
+    ) -> Result<Dist<Block>, StarkError> {
+        if let Some(terms) = leaf_terms(e) {
+            if let [t] = terms.as_slice() {
+                if t.sign == 1.0 && !t.transposed {
+                    // Pure leaf: zero-copy reuse of the handle's cache.
+                    return Ok(imp.distribute(&self.job, &t.matrix.splits_for(s, b)?, side));
+                }
+            }
+            let splits = combined_splits(&terms, s, b)?;
+            return Ok(imp.distribute(&self.job, &splits, side));
+        }
+        Ok(self.eval(e, s, b)?.retag(side))
+    }
+
+    fn eval_mul(
+        &mut self,
+        l: &Arc<PNode>,
+        r: &Arc<PNode>,
+        plan: &Plan,
+        label: &str,
+        fused: bool,
+    ) -> Result<Dist<Block>, StarkError> {
+        let (s, b) = (plan.n, plan.b);
+        // Planner-chosen b = 1 with leaf-combination operands: the whole
+        // product is one fused leaf call — operand sums evaluate inside
+        // the packed kernel's packing loops (LeafBackend::multiply_fused).
+        // Pinned algorithms skip this and run their own pipeline.
+        if fused {
+            if let (Some(lt), Some(rt)) = (leaf_terms(l), leaf_terms(r)) {
+                let a_terms = single_block_terms(&lt, s)?;
+                let b_terms = single_block_terms(&rt, s)?;
+                let be = self.timing.clone();
+                return Ok(self
+                    .job
+                    .parallelize(vec![(a_terms, b_terms)], 1)
+                    .map(move |(at, bt)| {
+                        Block::new(0, 0, Tag::new(Side::M, 0), Arc::new(be.multiply_fused(&at, &bt)))
+                    })
+                    // Materialize so a shared product never re-runs the
+                    // leaf multiply (narrow maps recompute on fan-out).
+                    .cache(&format!("{label}/multiply/fused")));
+            }
+        }
+        let imp = implementation(plan.algorithm, self.session.stark_config())?;
+        let da = self.operand(l, s, b, Side::A, imp.as_ref())?;
+        let db = self.operand(r, s, b, Side::B, imp.as_ref())?;
+        imp.multiply_dist(&self.timing, da, db, s, b, &format!("{label}/"))
+    }
+
+    /// Evaluate a sum at grid `(s, b)`: distributed terms fold in one
+    /// `ew/add` stage (none if there is a single distributed term); the
+    /// leaf-combination remainder joins with a **narrow** per-block add.
+    fn eval_sum(
+        &mut self,
+        terms: &[(f64, Arc<PNode>)],
+        s: usize,
+        b: usize,
+    ) -> Result<Dist<Block>, StarkError> {
+        let mut dist_terms: Vec<(f64, Dist<Block>)> = Vec::new();
+        let mut leafish: Vec<LeafTerm> = Vec::new();
+        for (sign, t) in terms {
+            match leaf_terms(t) {
+                Some(mut ts) => {
+                    for lt in &mut ts {
+                        lt.sign *= sign;
+                    }
+                    leafish.extend(ts);
+                }
+                None => dist_terms.push((*sign, self.eval(t, s, b)?)),
+            }
+        }
+        if dist_terms.is_empty() {
+            // Pure leaf combination: fuse into one split, distribute.
+            let splits = combined_splits(&leafish, s, b)?;
+            return Ok(distribute_plain(&self.job, &splits, Side::A));
+        }
+        let base = if dist_terms.len() == 1 {
+            let (sign, d) = dist_terms.pop().expect("one distributed term");
+            d.scale_blocks(sign)
+        } else {
+            self.ew_count += 1;
+            let label = format!("ew{}/add", self.ew_count);
+            sum_block_grids(&label, default_parts(b, self.cores()), dist_terms)
+        };
+        if leafish.is_empty() {
+            return Ok(base);
+        }
+        // Narrow leaf add: the combined leaf blocks ride in the closure
+        // and join each distributed block in place — no stage at all.
+        let lsplits = combined_splits(&leafish, s, b)?;
+        let lookup: Arc<Vec<Arc<DenseMatrix>>> = Arc::new(
+            (0..b).flat_map(|r| (0..b).map(move |c| (r, c))).map(|(r, c)| lsplits.block_at(r, c).clone()).collect(),
+        );
+        let bb = b;
+        Ok(base.map(move |blk| {
+            let add = &lookup[blk.row as usize * bb + blk.col as usize];
+            let mut m = (*blk.data).clone();
+            m.add_assign_signed(add, 1.0);
+            Block::new(blk.row, blk.col, blk.tag, Arc::new(m))
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ClusterConfig;
+    use crate::matrix::multiply::matmul_naive;
+
+    fn session() -> StarkSession {
+        StarkSession::builder().cluster(ClusterConfig::new(2, 2)).build().unwrap()
+    }
+
+    #[test]
+    fn chained_pipeline_matches_dense_reference() {
+        let s = session();
+        let am = DenseMatrix::random(20, 20, 1);
+        let bm = DenseMatrix::random(20, 20, 2);
+        let cm = DenseMatrix::random(20, 20, 3);
+        let dm = DenseMatrix::random(20, 20, 4);
+        let (a, b) = (s.matrix(&am), s.matrix(&bm));
+        let (c, d) = (s.matrix(&cm), s.matrix(&dm));
+        let report = a.multiply(&b).add(&c).multiply(&d.transpose()).collect().unwrap();
+        let want = matmul_naive(&matmul_naive(&am, &bm).add(&cm), &dm.transpose());
+        assert_eq!((report.c.rows(), report.c.cols()), (20, 20));
+        assert!(want.allclose(&report.c, 1e-9));
+        assert_eq!(report.plan.multiplies.len(), 2);
+        // One gather for the whole pipeline.
+        let collects =
+            report.job.stages.iter().filter(|st| st.label == "result/collect").count();
+        assert_eq!(collects, 1);
+        assert!(report.leaf_calls > 0);
+    }
+
+    #[test]
+    fn elementwise_only_expressions_work() {
+        let s = session();
+        let am = DenseMatrix::random(9, 7, 5);
+        let bm = DenseMatrix::random(9, 7, 6);
+        let a = s.matrix(&am);
+        let b = s.matrix(&bm);
+        let r = a.sub(&b.scale(2.0)).collect().unwrap();
+        assert!(am.add(&bm.scale(-2.0)).allclose(&r.c, 1e-12));
+        assert_eq!((r.c.rows(), r.c.cols()), (9, 7));
+        assert!(r.plan.multiplies.is_empty());
+        // Transpose-only expression.
+        let t = a.transpose().collect().unwrap();
+        assert_eq!(t.c.as_slice(), am.transpose().as_slice());
+        // Double transpose collapses to the leaf.
+        let tt = a.transpose().transpose().collect().unwrap();
+        assert_eq!(tt.c.as_slice(), am.as_slice());
+    }
+
+    #[test]
+    fn pow_shares_squarings() {
+        let s = session();
+        let pm = DenseMatrix::random(16, 16, 7);
+        let p = s.matrix(&pm);
+        let plan = p.pow(8).plan().unwrap();
+        assert_eq!(plan.multiplies.len(), 3, "p^8 is three shared squarings");
+        let report = p.pow(4).collect().unwrap();
+        let p2 = matmul_naive(&pm, &pm);
+        let want = matmul_naive(&p2, &p2);
+        assert!(want.allclose(&report.c, 1e-9));
+        assert_eq!(report.plan.multiplies.len(), 2);
+        // pow(0) is a deferred construction error.
+        assert!(matches!(p.pow(0).plan(), Err(StarkError::InvalidExpression(_))));
+    }
+
+    #[test]
+    fn shape_and_session_errors_are_typed() {
+        let s = session();
+        let a = s.matrix(&DenseMatrix::zeros(4, 6));
+        let b = s.matrix(&DenseMatrix::zeros(5, 4));
+        assert!(matches!(
+            a.expr().multiply(&b).collect(),
+            Err(StarkError::ShapeMismatch { a: (4, 6), b: (5, 4), .. })
+        ));
+        assert!(matches!(
+            a.add(&b).collect(),
+            Err(StarkError::ShapeMismatch { .. })
+        ));
+        let other = session();
+        let c = other.matrix(&DenseMatrix::zeros(6, 4));
+        assert!(matches!(a.expr().multiply(&c).plan(), Err(StarkError::SessionMismatch)));
+    }
+
+    #[test]
+    fn renders_and_plans_the_acceptance_expression() {
+        let s = session();
+        let a = s.matrix(&DenseMatrix::zeros(32, 32));
+        let b = s.matrix(&DenseMatrix::zeros(32, 32));
+        let c = s.matrix(&DenseMatrix::zeros(32, 32));
+        let d = s.matrix(&DenseMatrix::zeros(32, 32));
+        let e = a.multiply(&b).add(&c).multiply(&d.transpose());
+        let plan = e.plan().unwrap();
+        assert_eq!(plan.expression, "(A·B+C)·Dᵀ");
+        assert_eq!(plan.multiplies.len(), 2);
+        assert_eq!(plan.multiplies[0].label, "m1");
+        assert!(!plan.reordered);
+        assert!(plan.predicted_wall_ms > 0.0);
+    }
+
+    #[test]
+    fn b1_plan_routes_through_fused_leaf() {
+        // Prime logical dim with Fixed(1) splits: one fused leaf call.
+        let s = session();
+        let am = DenseMatrix::random(7, 7, 8);
+        let bm = DenseMatrix::random(7, 7, 9);
+        let cm = DenseMatrix::random(7, 7, 10);
+        let a = s.matrix(&am);
+        let b = s.matrix(&bm);
+        let c = s.matrix(&cm);
+        let want = matmul_naive(&am.add(&bm), &cm);
+        let e = a.add(&b).multiply_with(&c, Algorithm::Auto, Splits::Fixed(1));
+        let report = e.collect().unwrap();
+        assert!(want.allclose(&report.c, 1e-9));
+        assert_eq!(report.leaf_calls, 1, "one fused leaf multiplication");
+        assert!(report.plan.multiplies[0].fused);
+        assert!(report
+            .job
+            .stages
+            .iter()
+            .any(|st| st.label == "m1/multiply/fused"));
+
+        // A PINNED algorithm at b = 1 keeps its own stage pipeline — the
+        // fused shortcut only applies to planner-chosen nodes.
+        let pinned = a
+            .add(&b)
+            .multiply_with(&c, Algorithm::Mllib, Splits::Fixed(1))
+            .collect()
+            .unwrap();
+        assert!(want.allclose(&pinned.c, 1e-9));
+        assert!(!pinned.plan.multiplies[0].fused);
+        let labels: Vec<&str> = pinned.job.stages.iter().map(|st| st.label.as_str()).collect();
+        assert!(!labels.iter().any(|l| l.contains("multiply/fused")), "{labels:?}");
+        assert!(labels.iter().any(|l| l.contains("stage3/coGroup")), "{labels:?}");
+    }
+}

@@ -41,6 +41,15 @@
 //! ([`Splits::padded_dim`]) and slices the true `m × n` product back out
 //! on `collect()`. Genuinely incompatible operands (contraction
 //! mismatch) return [`StarkError::ShapeMismatch`] instead of panicking.
+//!
+//! **Chaining.** One multiply is a builder; a *pipeline* is a
+//! [`DistExpr`] (see [`expr`]): `a.multiply(&b).add(&c)
+//! .multiply(&d.transpose()).collect()?` plans the whole chain and
+//! collects **once**, intermediates staying distributed as block RDDs.
+
+pub mod expr;
+
+pub use expr::{DistExpr, ExprPlan, ExprReport, IntoExpr, NodePlan};
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -174,6 +183,12 @@ impl StarkSession {
 
     pub fn planner(&self) -> &Planner {
         &self.inner.planner
+    }
+
+    /// The session's Stark tuning (read by the expression executor when
+    /// it constructs per-node algorithm implementations).
+    pub(crate) fn stark_config(&self) -> &StarkConfig {
+        &self.inner.stark
     }
 
     /// What would the session run for an `n × n` multiply, everything

@@ -18,7 +18,7 @@
 
 pub mod planner;
 
-pub use planner::{Calibration, Plan, PlanCandidate, Planner, Splits};
+pub use planner::{Calibration, ChainPlan, ChainTree, Plan, PlanCandidate, Planner, Splits};
 
 /// One stage's predicted cost terms.
 #[derive(Debug, Clone, PartialEq)]

@@ -17,6 +17,19 @@
 //! dominates), and the crossover moves outward with core count. The
 //! pinned tests below record the concrete choices at the default
 //! calibration so a formula regression is caught immediately.
+//!
+//! The planner is pure and cheap — usable standalone:
+//!
+//! ```
+//! use stark::algos::Algorithm;
+//! use stark::cost::{Planner, Splits};
+//!
+//! let p = Planner::new(25); // the paper's 5×5 testbed
+//! let plan = p.resolve(Algorithm::Auto, Splits::Auto, 16384).unwrap();
+//! assert_eq!((plan.algorithm, plan.b), (Algorithm::Stark, 8));
+//! // Small matrices stay on a baseline's flatter plan.
+//! assert_ne!(p.plan(256).algorithm, Algorithm::Stark);
+//! ```
 
 use crate::algos::Algorithm;
 use crate::cost::{marlin_cost, mllib_cost, stark_cost, CostBreakdown};
@@ -311,6 +324,176 @@ impl Planner {
         self.resolve(Algorithm::Auto, Splits::Auto, n)
             .expect("auto/auto always has the b=1 candidate")
     }
+
+    /// Predicted wall time of one `(m × k) @ (k × n)` product, fully
+    /// auto-planned: the operands pad to the square grid of the largest
+    /// involved dimension ([`Splits::padded_dim`]), so the cost is the
+    /// resolved plan's prediction at `max(m, k, n)`.
+    ///
+    /// ```
+    /// use stark::cost::Planner;
+    /// let p = Planner::new(4);
+    /// // A small outer product with a huge contraction dimension costs
+    /// // like a huge square multiply — padding is driven by max(m,k,n).
+    /// assert_eq!(p.product_cost_ms(8, 2048, 8), p.product_cost_ms(2048, 2048, 2048));
+    /// ```
+    pub fn product_cost_ms(&self, m: usize, k: usize, n: usize) -> f64 {
+        match self.resolve(Algorithm::Auto, Splits::Auto, m.max(k).max(n)) {
+            Ok(p) => p.predicted_wall_ms(),
+            Err(_) => f64::INFINITY,
+        }
+    }
+
+    /// Predicted cost of re-gridding a distributed intermediate between
+    /// block layouts `(padded dim, splits)` (the shuffle
+    /// `Dist::<Block>::regrid` runs when a chained product feeds a node
+    /// planned at a different grid — a different split count at the
+    /// same padded dim still re-shuffles every element): every
+    /// surviving element crosses the wire once, at `β` seconds/element,
+    /// spread across the cores. Zero only when the layouts agree.
+    pub fn regrid_cost_ms(&self, from: (usize, usize), to: (usize, usize)) -> f64 {
+        if from == to {
+            return 0.0;
+        }
+        let shipped = (from.0.min(to.0) as f64).powi(2);
+        self.calibration.beta * shipped / self.cores.max(1) as f64 * 1e3
+    }
+
+    /// The grid an auto-planned product over operands with largest
+    /// dimension `max_dim` runs on: `(padded n, chosen b)`.
+    fn auto_grid(&self, max_dim: usize) -> (usize, usize) {
+        match self.resolve(Algorithm::Auto, Splits::Auto, max_dim) {
+            Ok(p) => (p.n, p.b),
+            Err(_) => (Splits::Auto.padded_dim(max_dim), 1),
+        }
+    }
+
+    /// Optimal parenthesization of a multiply chain by the §IV cost
+    /// model — the classic matrix-chain DP, but with each candidate
+    /// product costed by [`Planner::product_cost_ms`] (which captures
+    /// the square-padding semantics of the distributed execution) plus
+    /// [`Planner::regrid_cost_ms`] whenever a composite child's grid
+    /// differs from its parent's.
+    ///
+    /// `dims` are the chain boundary dimensions: factor `i` is
+    /// `dims[i] × dims[i+1]`, so a chain of `k` factors passes `k + 1`
+    /// dims. Re-parenthesization pays off exactly when it keeps a large
+    /// dimension out of intermediate products:
+    ///
+    /// ```
+    /// use stark::cost::{ChainTree, Planner};
+    /// // A(8×8) · B(8×256) · C(256×8): left-assoc runs two 256-grids,
+    /// // right-assoc runs one 256-grid and one tiny 8-grid.
+    /// let plan = Planner::new(4).plan_chain(&[8, 8, 256, 8]);
+    /// let right = ChainTree::Product(
+    ///     Box::new(ChainTree::Factor(0)),
+    ///     Box::new(ChainTree::Product(
+    ///         Box::new(ChainTree::Factor(1)),
+    ///         Box::new(ChainTree::Factor(2)),
+    ///     )),
+    /// );
+    /// assert_eq!(plan.tree, right);
+    /// ```
+    pub fn plan_chain(&self, dims: &[usize]) -> ChainPlan {
+        assert!(dims.len() >= 2, "a chain needs at least one factor");
+        let k = dims.len() - 1;
+        if k == 1 {
+            return ChainPlan { tree: ChainTree::Factor(0), predicted_ms: 0.0 };
+        }
+        // cost[i][j] / split[i][j] / grid[i][j] describe the optimal
+        // subtree over factors i..=j (grid = (0, 0) for single factors,
+        // which never regrid — leaves re-split at any grid for free).
+        let mut cost = vec![vec![0.0f64; k]; k];
+        let mut split = vec![vec![0usize; k]; k];
+        let mut grid = vec![vec![(0usize, 0usize); k]; k];
+        for span in 2..=k {
+            for i in 0..=(k - span) {
+                let j = i + span - 1;
+                let (mut best, mut best_split, mut best_grid) = (f64::INFINITY, i, (0, 0));
+                for x in i..j {
+                    let g_node = self.auto_grid(dims[i].max(dims[x + 1]).max(dims[j + 1]));
+                    let mut c = cost[i][x]
+                        + cost[x + 1][j]
+                        + self.product_cost_ms(dims[i], dims[x + 1], dims[j + 1]);
+                    if x > i {
+                        c += self.regrid_cost_ms(grid[i][x], g_node);
+                    }
+                    if x + 1 < j {
+                        c += self.regrid_cost_ms(grid[x + 1][j], g_node);
+                    }
+                    if c < best {
+                        (best, best_split, best_grid) = (c, x, g_node);
+                    }
+                }
+                cost[i][j] = best;
+                split[i][j] = best_split;
+                grid[i][j] = best_grid;
+            }
+        }
+        fn rebuild(split: &[Vec<usize>], i: usize, j: usize) -> ChainTree {
+            if i == j {
+                return ChainTree::Factor(i);
+            }
+            let x = split[i][j];
+            ChainTree::Product(
+                Box::new(rebuild(split, i, x)),
+                Box::new(rebuild(split, x + 1, j)),
+            )
+        }
+        ChainPlan { tree: rebuild(&split, 0, k - 1), predicted_ms: cost[0][k - 1] }
+    }
+
+    /// Predicted wall time of one *specific* parenthesization (the same
+    /// cost function [`Planner::plan_chain`] optimizes) — used to decide
+    /// whether the optimum actually beats the order the user wrote.
+    pub fn chain_cost_ms(&self, tree: &ChainTree, dims: &[usize]) -> f64 {
+        // Returns (cost, first factor, last factor, grid or (0,0)-for-leaf).
+        fn walk(
+            p: &Planner,
+            t: &ChainTree,
+            dims: &[usize],
+        ) -> (f64, usize, usize, (usize, usize)) {
+            match t {
+                ChainTree::Factor(i) => (0.0, *i, *i, (0, 0)),
+                ChainTree::Product(l, r) => {
+                    let (cl, li, lj, lg) = walk(p, l, dims);
+                    let (cr, ri, rj, rg) = walk(p, r, dims);
+                    debug_assert_eq!(lj + 1, ri, "non-contiguous chain tree");
+                    let (m, kk, n) = (dims[li], dims[ri], dims[rj + 1]);
+                    let g_node = p.auto_grid(m.max(kk).max(n));
+                    let mut c = cl + cr + p.product_cost_ms(m, kk, n);
+                    if lg != (0, 0) {
+                        c += p.regrid_cost_ms(lg, g_node);
+                    }
+                    if rg != (0, 0) {
+                        c += p.regrid_cost_ms(rg, g_node);
+                    }
+                    (c, li, rj, g_node)
+                }
+            }
+        }
+        walk(self, tree, dims).0
+    }
+}
+
+/// One parenthesization of a multiply chain: factor `i` spans
+/// `dims[i] × dims[i+1]` of the `dims` slice handed to
+/// [`Planner::plan_chain`] / [`Planner::chain_cost_ms`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChainTree {
+    /// The `i`-th chain factor, unchanged.
+    Factor(usize),
+    /// A product of two contiguous sub-chains.
+    Product(Box<ChainTree>, Box<ChainTree>),
+}
+
+/// [`Planner::plan_chain`]'s answer: the predicted-cheapest
+/// parenthesization and its total predicted wall time (products plus
+/// regrid transfers).
+#[derive(Debug, Clone)]
+pub struct ChainPlan {
+    pub tree: ChainTree,
+    pub predicted_ms: f64,
 }
 
 #[cfg(test)]
@@ -442,6 +625,62 @@ mod tests {
             - plan.predicted.wall(Calibration::DEFAULT.alpha, Calibration::DEFAULT.beta) * 1e3)
             .abs()
             < 1e-9);
+    }
+
+    #[test]
+    fn chain_planning_reorders_when_it_pays() {
+        let four = p(4);
+        // A(8×8)·B(8×256)·C(256×8): the user's left-assoc order runs two
+        // 256-padded products; right-assoc replaces one of them with an
+        // 8-padded product. The DP must find the right-assoc tree and
+        // its cost must beat the left-assoc one.
+        let dims = [8usize, 8, 256, 8];
+        let plan = four.plan_chain(&dims);
+        let left = ChainTree::Product(
+            Box::new(ChainTree::Product(
+                Box::new(ChainTree::Factor(0)),
+                Box::new(ChainTree::Factor(1)),
+            )),
+            Box::new(ChainTree::Factor(2)),
+        );
+        let right = ChainTree::Product(
+            Box::new(ChainTree::Factor(0)),
+            Box::new(ChainTree::Product(
+                Box::new(ChainTree::Factor(1)),
+                Box::new(ChainTree::Factor(2)),
+            )),
+        );
+        assert_eq!(plan.tree, right);
+        let left_ms = four.chain_cost_ms(&left, &dims);
+        let right_ms = four.chain_cost_ms(&right, &dims);
+        assert!(right_ms < left_ms, "right {right_ms} !< left {left_ms}");
+        assert!((plan.predicted_ms - right_ms).abs() < 1e-9);
+
+        // Square chains are parenthesization-neutral: the DP returns a
+        // tree whose cost ties the user's order (no spurious reorder).
+        let sq = [64usize, 64, 64, 64];
+        let sq_plan = four.plan_chain(&sq);
+        let sq_left = four.chain_cost_ms(&left, &sq);
+        assert!((sq_plan.predicted_ms - sq_left).abs() < 1e-9);
+
+        // Degenerate chains.
+        assert_eq!(four.plan_chain(&[32, 32]).tree, ChainTree::Factor(0));
+        assert_eq!(four.plan_chain(&[32, 32]).predicted_ms, 0.0);
+    }
+
+    #[test]
+    fn regrid_cost_is_zero_only_on_matching_grids() {
+        let four = p(4);
+        assert_eq!(four.regrid_cost_ms((256, 4), (256, 4)), 0.0);
+        assert!(four.regrid_cost_ms((256, 4), (8, 2)) > 0.0);
+        // A different split count at the SAME padded dim still ships
+        // every element through the regrid shuffle.
+        assert!(four.regrid_cost_ms((256, 8), (256, 4)) > 0.0);
+        // Ships the smaller grid's elements whichever way it goes.
+        assert_eq!(
+            four.regrid_cost_ms((8, 2), (256, 4)),
+            four.regrid_cost_ms((256, 4), (8, 2))
+        );
     }
 
     #[test]

@@ -15,6 +15,17 @@
 //! cross the shuffle (`StageMetrics::combined_records` reports what the
 //! map side absorbed).
 //!
+//! **Grouped outputs are emitted in key order.** Every grouping wide op
+//! (`group_by_key`, `fold_by_key`, `cogroup`, `join`) sorts its
+//! reduce-side output by key, so a stage's byte stream is a function of
+//! its logical *content*, not of how the upstream happened to be
+//! partitioned. This is what lets the expression layer
+//! ([`crate::api::DistExpr`]) promise bit-identical results whether an
+//! operand arrives as a fresh split or as the still-distributed output
+//! of a previous multiply: after the first shuffle the two pipelines
+//! see identical record streams. (Shuffle keys therefore carry an `Ord`
+//! bound.)
+//!
 //! **Job identity is explicit**: [`SparkContext::run_job`] returns a
 //! [`JobCtx`] — job id plus that job's own stage recorder — and every
 //! `Dist` carries the `JobCtx` of the job that created it through its
@@ -502,7 +513,7 @@ fn collect_shuffle<K: Data, V: Data>(
 
 impl<K, V> Dist<(K, V)>
 where
-    K: Data + Eq + Hash + Sizable,
+    K: Data + Eq + Ord + Hash + Sizable,
     V: Data + Sizable,
 {
     /// Wide: repartition by key without grouping (Spark `partitionBy`).
@@ -522,6 +533,8 @@ where
     }
 
     /// [`group_by_key`](Self::group_by_key) with an explicit partitioner.
+    /// Groups are returned in key order (see module docs); the value list
+    /// of each group keeps shuffle arrival order.
     pub fn group_by_key_with(
         &self,
         label: &str,
@@ -537,7 +550,9 @@ where
                 for (k, v) in buckets[p].iter().cloned() {
                     groups.entry(k).or_default().push(v);
                 }
-                groups.into_iter().collect()
+                let mut out: Vec<(K, Vec<V>)> = groups.into_iter().collect();
+                out.sort_by(|a, b| a.0.cmp(&b.0));
+                out
             }),
         }
     }
@@ -603,7 +618,9 @@ where
                         }
                     }
                 }
-                acc.into_iter().collect()
+                let mut out: Vec<(K, A)> = acc.into_iter().collect();
+                out.sort_by(|a, b| a.0.cmp(&b.0));
+                out
             }),
         }
     }
@@ -637,6 +654,7 @@ where
                         }
                     }
                 }
+                out.sort_by(|a, b| a.0.cmp(&b.0));
                 out
             }),
         }
@@ -676,7 +694,9 @@ where
                 for (k, w) in rb[p].iter().cloned() {
                     groups.entry(k).or_default().1.push(w);
                 }
-                groups.into_iter().collect()
+                let mut out: Vec<(K, (Vec<V>, Vec<W>))> = groups.into_iter().collect();
+                out.sort_by(|a, b| a.0.cmp(&b.0));
+                out
             }),
         }
     }

@@ -4,9 +4,24 @@
 //! aborts the process on the first malformed request — unacceptable for
 //! a long-running service ([`crate::serve`]) and unhelpful for API
 //! users. [`StarkError`] carries the same invariants as structured data:
-//! the session/builder layer ([`crate::api`]), the algorithm trait
+//! the session/builder layer ([`crate::api`]), the expression DAG
+//! ([`crate::api::DistExpr`]), the algorithm trait
 //! ([`crate::algos::MultiplyAlgorithm`]), and the planner
 //! ([`crate::cost::Planner`]) all surface it instead of panicking.
+//!
+//! Variants carry enough structure to branch on, and `Display` renders
+//! an operator-grade message:
+//!
+//! ```
+//! use stark::StarkError;
+//!
+//! let e = StarkError::contraction((3, 4), (5, 3));
+//! assert!(matches!(e, StarkError::ShapeMismatch { a: (3, 4), .. }));
+//! assert!(e.to_string().contains("A is 3x4"));
+//!
+//! let e = StarkError::InvalidExpression("pow(0) is not supported".into());
+//! assert!(e.to_string().starts_with("invalid expression"));
+//! ```
 
 use crate::algos::Algorithm;
 
@@ -35,6 +50,10 @@ pub enum StarkError {
     /// `Algorithm::Auto` reached execution without planner resolution —
     /// an internal bug in a dispatch path, never a user error.
     AutoUnresolved,
+    /// A [`crate::api::DistExpr`] was built in a way that can never run
+    /// (e.g. `pow(0)`). Construction is infallible for ergonomics; the
+    /// error surfaces at `plan()`/`collect()`.
+    InvalidExpression(String),
     /// Two [`crate::api::DistMatrix`] handles from different
     /// [`crate::api::StarkSession`]s were combined.
     SessionMismatch,
@@ -85,6 +104,7 @@ impl std::fmt::Display for StarkError {
                 f,
                 "algorithm 'auto' reached execution without planner resolution (internal bug)"
             ),
+            StarkError::InvalidExpression(msg) => write!(f, "invalid expression: {msg}"),
             StarkError::SessionMismatch => write!(
                 f,
                 "DistMatrix handles belong to different StarkSessions; \

@@ -31,6 +31,32 @@
 //!   directly with `session.plan(n)`;
 //! - errors are typed ([`StarkError`]), never process aborts.
 //!
+//! ## Pipelines: the expression DAG
+//!
+//! Chains of operations are **lazy expressions** ([`api::DistExpr`])
+//! that plan as a whole and collect **once** — intermediates stay
+//! distributed as block RDDs between multiplies:
+//!
+//! ```no_run
+//! use stark::api::StarkSession;
+//! use stark::matrix::DenseMatrix;
+//!
+//! let s = StarkSession::builder().build()?;
+//! let (a, b) = (s.matrix(&DenseMatrix::random(200, 200, 1)),
+//!               s.matrix(&DenseMatrix::random(200, 200, 2)));
+//! let (c, d) = (s.matrix(&DenseMatrix::random(200, 200, 3)),
+//!               s.matrix(&DenseMatrix::random(200, 200, 4)));
+//! // (A·B + C)·Dᵀ: one job, one collect, per-node plans in the report.
+//! let report = a.multiply(&b).add(&c).multiply(&d.transpose()).collect()?;
+//! assert_eq!(report.plan.expression, "(A·B+C)·Dᵀ");
+//! # Ok::<(), stark::StarkError>(())
+//! ```
+//!
+//! `add`/`sub`/`scale`/`transpose`/`pow(k)` compose freely; operand
+//! sums fuse into the block split (`(A+B)·C` never allocates `A+B`);
+//! associative chains re-order by the §IV model when strictly cheaper.
+//! See DESIGN.md S18.
+//!
 //! ## Layers
 //!
 //! - [`api`] — sessions, `DistMatrix` handles, the multiply builder.
@@ -65,5 +91,8 @@ pub mod runtime;
 pub mod serve;
 pub mod util;
 
-pub use api::{DistMatrix, MultiplyBuilder, MultiplyReport, SessionBuilder, StarkSession};
+pub use api::{
+    DistExpr, DistMatrix, ExprPlan, ExprReport, IntoExpr, MultiplyBuilder, MultiplyReport,
+    SessionBuilder, StarkSession,
+};
 pub use error::StarkError;

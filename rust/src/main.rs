@@ -46,6 +46,10 @@ USAGE: stark <multiply|plan|compare|sweep|stages|scalability|cost|serve|serve-sm
   request:              --addr HOST:PORT [--op multiply|submit|plan|
                         status|wait|jobs|ping|shutdown] [--job-id N]
                         [--timeout-ms N] --n 256 [--algo auto] [--b auto]
+                        [--expr '<json>' | --expr @expr.json]  submit a
+                        whole expression DAG (mul/add/sub/scale/t/pow
+                        over matrix/gen leaves) instead of one multiply;
+                        it runs chained, with a single collect
 
 FLAGS (shared):
   --n <int>            matrix dimension            [512]
@@ -424,13 +428,25 @@ fn cmd_request(args: &Args) -> Result<()> {
     };
     match op.as_str() {
         "multiply" | "submit" => {
-            fields.push((
-                "algo",
-                Value::str(args.raw("algorithm").or(args.raw("algo")).unwrap_or("stark")),
-            ));
-            fields.push(("n", Value::num(args.get("n", 256usize) as f64)));
-            fields.push(("b", b_value("4")));
-            fields.push(("seed", Value::num(args.get("seed", 42u64) as f64)));
+            // An expression tree replaces the single-multiply fields:
+            // inline JSON, or @file to read it from disk.
+            if let Some(raw) = args.raw("expr") {
+                let text = match raw.strip_prefix('@') {
+                    Some(path) => std::fs::read_to_string(path)?,
+                    None => raw.to_string(),
+                };
+                let tree = stark::util::json::parse(text.trim())
+                    .map_err(|e| anyhow::anyhow!("--expr is not valid JSON: {e}"))?;
+                fields.push(("expr", tree));
+            } else {
+                fields.push((
+                    "algo",
+                    Value::str(args.raw("algorithm").or(args.raw("algo")).unwrap_or("stark")),
+                ));
+                fields.push(("n", Value::num(args.get("n", 256usize) as f64)));
+                fields.push(("b", b_value("4")));
+                fields.push(("seed", Value::num(args.get("seed", 42u64) as f64)));
+            }
         }
         "plan" => {
             fields.push((
@@ -584,6 +600,48 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
         ]),
     )?;
     anyhow::ensure!(sync.get("ok") == Some(&Value::Bool(true)), "sync multiply: {sync:?}");
+
+    // A whole expression — (A·B + C)·Dᵀ — runs as ONE chained job with
+    // a single collect, and matches a local dense computation.
+    let tree = stark::util::json::parse(
+        r#"{"mul":[{"add":[{"mul":[{"gen":{"n":32,"seed":21}},{"gen":{"n":32,"seed":22}}]},{"gen":{"n":32,"seed":23}}]},{"t":{"gen":{"n":32,"seed":24}}}]}"#,
+    )
+    .map_err(|e| anyhow::anyhow!("expr json: {e}"))?;
+    let chained = stark::serve::request(
+        &addr,
+        &Value::obj(vec![("op", Value::str("multiply")), ("expr", tree)]),
+    )?;
+    anyhow::ensure!(chained.get("ok") == Some(&Value::Bool(true)), "expr multiply: {chained:?}");
+    anyhow::ensure!(
+        chained.get("collects").and_then(Value::as_u64) == Some(1),
+        "expression did not collect exactly once: {chained:?}"
+    );
+    anyhow::ensure!(
+        chained.get("multiplies").and_then(Value::as_array).map(<[Value]>::len) == Some(2),
+        "expected 2 planned multiplies: {chained:?}"
+    );
+    let ga = stark::matrix::DenseMatrix::random(32, 32, 21);
+    let gb = stark::matrix::DenseMatrix::random(32, 32, 22);
+    let gc = stark::matrix::DenseMatrix::random(32, 32, 23);
+    let gd = stark::matrix::DenseMatrix::random(32, 32, 24);
+    let want_expr = stark::matrix::matmul_blocked(
+        &stark::matrix::matmul_blocked(&ga, &gb).add(&gc),
+        &gd.transpose(),
+    )
+    .frobenius();
+    let got_expr = chained
+        .get("frobenius")
+        .and_then(Value::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("missing frobenius"))?;
+    anyhow::ensure!(
+        (want_expr - got_expr).abs() < 1e-6 * want_expr.max(1.0),
+        "expression frobenius {want_expr} vs {got_expr}"
+    );
+    println!(
+        "serve-smoke: expr {} -> {} multiplies, 1 collect",
+        chained.get("expression").and_then(Value::as_str).unwrap_or("?"),
+        2
+    );
 
     let bye = stark::serve::request(&addr, &Value::obj(vec![("op", Value::str("shutdown"))]))?;
     anyhow::ensure!(bye.get("ok") == Some(&Value::Bool(true)), "shutdown: {bye:?}");

@@ -90,10 +90,10 @@ fn m_pairs<'a>(
     ]
 }
 
-/// [`m_pairs`] over eight owned quadrant matrices — the fused leaf paths
-/// (`strassen_leaf_fused`, the native backend) feed these straight into
-/// the packing loops; [`m_operands`] materializes them for backends that
-/// need owned matrices.
+/// The Strassen `m_pairs` table over eight owned quadrant matrices —
+/// the fused leaf paths (`strassen_leaf_fused`, the native backend) feed
+/// these straight into the packing loops; [`m_operands`] materializes
+/// them for backends that need owned matrices.
 #[allow(clippy::too_many_arguments)]
 pub fn m_operand_terms<'a>(
     a11: &'a DenseMatrix, a12: &'a DenseMatrix, a21: &'a DenseMatrix, a22: &'a DenseMatrix,

@@ -9,13 +9,46 @@
 //! see [`Kernel`]); all three accumulate in the same per-element order,
 //! so swapping them never changes a distributed result by even one bit.
 
+use std::sync::Arc;
+
+use crate::matrix::gemm::{gemm_fused, MatRef, Term};
 use crate::matrix::multiply::Kernel;
 use crate::matrix::DenseMatrix;
+
+/// Materialize a signed sum of `Arc`'d blocks in **term order** (left
+/// fold: `((s₀·t₀ + s₁·t₁) + s₂·t₂) + …`) — the reference semantics of
+/// a fused-operand leaf call, and the fallback for backends without a
+/// fused path.
+pub fn combine_terms(terms: &[(f64, Arc<DenseMatrix>)]) -> DenseMatrix {
+    assert!(!terms.is_empty(), "empty operand term list");
+    let (s0, m0) = &terms[0];
+    let mut acc = if *s0 == 1.0 { (**m0).clone() } else { m0.scale(*s0) };
+    for (s, m) in &terms[1..] {
+        acc.add_assign_signed(m, *s);
+    }
+    acc
+}
 
 /// Leaf block operations dispatched from the hot path.
 pub trait LeafBackend: Send + Sync {
     /// `a @ b` for one leaf block pair.
     fn multiply(&self, a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix;
+
+    /// `(Σ αᵢ·Aᵢ) @ (Σ βⱼ·Bⱼ)` for one leaf pair whose operands are
+    /// signed sums of blocks — the expression layer's fusion hook for
+    /// `(A+B)·C`-shaped multiplies. The default materializes each sum
+    /// ([`combine_terms`], term-order left fold) and dispatches
+    /// [`multiply`](Self::multiply); [`NativeBackend`] with the packed
+    /// kernel overrides it to evaluate the sums inside the GEMM packing
+    /// loops ([`gemm_fused`]), so the combined operand is never
+    /// allocated at all.
+    fn multiply_fused(
+        &self,
+        a_terms: &[(f64, Arc<DenseMatrix>)],
+        b_terms: &[(f64, Arc<DenseMatrix>)],
+    ) -> DenseMatrix {
+        self.multiply(&combine_terms(a_terms), &combine_terms(b_terms))
+    }
 
     /// One fused Strassen level over quadrants
     /// `[a11,a12,a21,a22,b11,b12,b21,b22] → [c11,c12,c21,c22]`.
@@ -55,6 +88,23 @@ impl Default for NativeBackend {
 impl LeafBackend for NativeBackend {
     fn multiply(&self, a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
         self.kernel.multiply(a, b)
+    }
+
+    fn multiply_fused(
+        &self,
+        a_terms: &[(f64, Arc<DenseMatrix>)],
+        b_terms: &[(f64, Arc<DenseMatrix>)],
+    ) -> DenseMatrix {
+        match self.kernel {
+            // Operand sums evaluated inside the packing loops — the
+            // combined matrices are never allocated.
+            Kernel::Packed => {
+                let at: Vec<Term> = a_terms.iter().map(|(s, m)| (*s, MatRef::new(m))).collect();
+                let bt: Vec<Term> = b_terms.iter().map(|(s, m)| (*s, MatRef::new(m))).collect();
+                gemm_fused(&at, &bt)
+            }
+            _ => self.multiply(&combine_terms(a_terms), &combine_terms(b_terms)),
+        }
     }
 
     fn strassen_leaf(&self, quads: &[DenseMatrix; 8]) -> [DenseMatrix; 4] {
@@ -118,6 +168,30 @@ mod tests {
             assert!(want.submatrix(n, 0, n, n).allclose(&c21, 1e-10), "{kernel}");
             assert!(want.submatrix(n, n, n, n).allclose(&c22, 1e-10), "{kernel}");
         }
+    }
+
+    #[test]
+    fn multiply_fused_matches_materialized_for_every_kernel() {
+        let a1 = Arc::new(DenseMatrix::random(24, 24, 11));
+        let a2 = Arc::new(DenseMatrix::random(24, 24, 12));
+        let b1 = Arc::new(DenseMatrix::random(24, 24, 13));
+        let b2 = Arc::new(DenseMatrix::random(24, 24, 14));
+        let a_terms = [(1.0, a1.clone()), (-1.0, a2.clone())];
+        let b_terms = [(1.0, b1.clone()), (0.5, b2.clone())];
+        let want = matmul_naive(&a1.sub(&a2), &b1.add(&b2.scale(0.5)));
+        for kernel in Kernel::ALL {
+            let be = NativeBackend::new(kernel);
+            let got = be.multiply_fused(&a_terms, &b_terms);
+            assert!(want.allclose(&got, 1e-9), "kernel {kernel}");
+        }
+        // Single unit terms degenerate to the plain product, bit-exact.
+        let be = NativeBackend::default();
+        let plain = be.multiply(&a1, &b1);
+        let fused = be.multiply_fused(&[(1.0, a1.clone())], &[(1.0, b1.clone())]);
+        assert_eq!(plain.as_slice(), fused.as_slice());
+        // combine_terms folds in term order.
+        let c = combine_terms(&[(2.0, a1.clone()), (1.0, a2.clone())]);
+        assert!(a1.scale(2.0).add(&a2).allclose(&c, 0.0));
     }
 
     #[test]

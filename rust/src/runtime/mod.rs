@@ -18,7 +18,7 @@ pub mod backend;
 pub mod manifest;
 pub mod xla_service;
 
-pub use backend::{LeafBackend, NativeBackend};
+pub use backend::{combine_terms, LeafBackend, NativeBackend};
 pub use manifest::{ArtifactEntry, ArtifactLibrary, Manifest};
 pub use xla_service::{XlaBackend, XlaService};
 

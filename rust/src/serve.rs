@@ -41,6 +41,20 @@
 //! -> {"op":"multiply","algo":"stark","n":256,"b":4,"seed":7}
 //! <- {"ok":true,"job_id":4,"frobenius":148.8,"stages":[...],...}
 //!
+//! // Submit a whole EXPRESSION instead of one multiply: an "expr" tree
+//! // runs as one chained job with a single collect (works on "submit"
+//! // and "multiply" alike; node-level "algo"/"b" pin one multiply).
+//! // Leaves: {"matrix":[[...]]} (inline) or {"gen":{"n":64,"seed":7}}.
+//! // Nodes:  {"mul":[l,r]} {"add":[x,y,...]} {"sub":[x,y]}
+//! //         {"scale":[2.0,x]} {"t":x} {"pow":[x,8]}
+//! -> {"op":"multiply","expr":{"mul":[
+//!        {"add":[{"mul":[{"gen":{"n":64,"seed":1}},{"gen":{"n":64,"seed":2}}]},
+//!                {"gen":{"n":64,"seed":3}}]},
+//!        {"t":{"gen":{"n":64,"seed":4}}}]}}
+//! <- {"ok":true,"job_id":5,"algo":"expr","expression":"(A·B+C)·Dᵀ",
+//!     "multiplies":[{"label":"m1",...},{"label":"m2",...}],
+//!     "collects":1,"stages":[...],...}
+//!
 //! // Ask the cost-model planner what it WOULD run, without running it.
 //! // "algo" and "b" both default to "auto"; "b" also accepts a number:
 //! -> {"op":"plan","n":4096}
@@ -62,6 +76,32 @@
 //! [`ServerState::job_runners`] runner threads executing jobs against
 //! the shared cluster. Admission control rejects submits beyond
 //! [`ServerState::max_inflight_jobs`] queued + running jobs.
+//!
+//! Driving the protocol from Rust (ephemeral port, blocking client):
+//!
+//! ```no_run
+//! use stark::api::StarkSession;
+//! use stark::cost::Splits;
+//! use stark::serve::{request, Server, ServerState};
+//! use stark::util::json::Value;
+//!
+//! let state = ServerState {
+//!     session: StarkSession::builder().build()?,
+//!     default_splits: Splits::Auto,
+//!     max_inflight_jobs: 8,
+//!     job_runners: 2,
+//! };
+//! let mut server = Server::start("127.0.0.1:0", state)?;
+//! let addr = server.addr().to_string();
+//! let resp = request(&addr, &Value::obj(vec![
+//!     ("op", Value::str("multiply")),
+//!     ("algo", Value::str("auto")),
+//!     ("n", Value::num(128.0)),
+//! ]))?;
+//! assert_eq!(resp.get("ok"), Some(&Value::Bool(true)));
+//! server.stop();
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
@@ -73,7 +113,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::algos::Algorithm;
-use crate::api::StarkSession;
+use crate::api::{DistExpr, IntoExpr, StarkSession};
 use crate::cost::{Plan, Splits};
 use crate::matrix::DenseMatrix;
 use crate::util::json::{self, Value};
@@ -102,6 +142,21 @@ const MAX_SUBMIT_N: usize = 16_384;
 /// panic the handler) while still being far longer than any job.
 const MAX_WAIT_TIMEOUT_MS: u64 = 3_600_000;
 
+/// Structural caps on a submitted expression tree: nesting depth and
+/// leaf-matrix count. Keeps one request from encoding an arbitrarily
+/// large job graph (each leaf is also size-capped by [`MAX_SUBMIT_N`],
+/// and every planned multiply grid is re-checked against it after the
+/// dry-run plan).
+const MAX_EXPR_DEPTH: usize = 32;
+const MAX_EXPR_LEAVES: usize = 64;
+
+/// Total element budget across ALL leaves of one expression — the same
+/// order of memory the non-expression path may allocate (two padded
+/// `MAX_SUBMIT_N` operands). Checked **before** each leaf is
+/// materialized, so a request full of individually-legal huge leaves is
+/// refused instead of OOMing the handler thread.
+const MAX_EXPR_ELEMS: usize = 2 * MAX_SUBMIT_N * MAX_SUBMIT_N;
+
 /// Shared server state: the session every job runs through (cluster +
 /// leaf backend + Stark knobs + planner) and the job-queue knobs.
 pub struct ServerState {
@@ -119,16 +174,21 @@ pub struct ServerState {
     pub job_runners: usize,
 }
 
-/// A parsed, validated multiply request (everything checked at submit
-/// time so the runner can't fail on malformed input). `algo`/`splits`
-/// may still be auto — resolved by the session's planner at run time
-/// (and pre-validated by a dry-run plan at submit time).
+/// A parsed, validated request (everything checked at submit time so
+/// the runner can't fail on malformed input). `algo`/`splits` may still
+/// be auto — resolved by the session's planner at run time (and
+/// pre-validated by a dry-run plan at submit time).
 struct JobSpec {
-    algo: Algorithm,
-    splits: Splits,
-    a: Arc<DenseMatrix>,
-    b_mat: Arc<DenseMatrix>,
+    payload: JobPayload,
     return_c: bool,
+}
+
+enum JobPayload {
+    /// One `a @ b_mat` multiply.
+    Multiply { algo: Algorithm, splits: Splits, a: Arc<DenseMatrix>, b_mat: Arc<DenseMatrix> },
+    /// A whole expression DAG, already bound to the server session —
+    /// runs as one chained job with a single collect.
+    Expr(DistExpr),
 }
 
 enum JobStatus {
@@ -475,40 +535,73 @@ fn panic_message(panic: &Box<dyn std::any::Any + Send>) -> String {
 /// running concurrently. A typed failure (shapes re-checked, planner)
 /// becomes an `ok:false` document rather than a panicking runner.
 fn execute(state: &ServerState, id: u64, spec: &JobSpec) -> Value {
-    let a = state.session.matrix_arc(spec.a.clone());
-    let b = state.session.matrix_arc(spec.b_mat.clone());
-    let out = match a.multiply(&b).algorithm(spec.algo).splits(spec.splits).collect() {
-        Ok(out) => out,
-        Err(e) => {
-            return Value::obj(vec![
-                ("ok", Value::Bool(false)),
-                ("job_id", Value::num(id as f64)),
-                ("error", Value::str(e.to_string())),
-            ])
+    let err_doc = |e: String| {
+        Value::obj(vec![
+            ("ok", Value::Bool(false)),
+            ("job_id", Value::num(id as f64)),
+            ("error", Value::str(e)),
+        ])
+    };
+    let mut fields = vec![("ok", Value::Bool(true)), ("job_id", Value::num(id as f64))];
+    let (c, job, leaf_calls, leaf_ms) = match &spec.payload {
+        JobPayload::Multiply { algo, splits, a, b_mat } => {
+            let a = state.session.matrix_arc(a.clone());
+            let b = state.session.matrix_arc(b_mat.clone());
+            let out = match a.multiply(&b).algorithm(*algo).splits(*splits).collect() {
+                Ok(out) => out,
+                Err(e) => return err_doc(e.to_string()),
+            };
+            fields.push(("algo", Value::str(algo.to_string())));
+            // What the planner/session actually ran (= "algo" unless auto).
+            fields.push(("algorithm", Value::str(out.plan.algorithm.to_string())));
+            fields.push(("b", Value::num(out.plan.b as f64)));
+            (out.c, out.job, out.leaf_calls, out.leaf_ms)
+        }
+        JobPayload::Expr(expr) => {
+            let out = match expr.collect() {
+                Ok(out) => out,
+                Err(e) => return err_doc(e.to_string()),
+            };
+            fields.push(("algo", Value::str("expr")));
+            fields.push(("expression", Value::str(out.plan.expression.clone())));
+            fields.push(("reordered", Value::Bool(out.plan.reordered)));
+            fields.push((
+                "multiplies",
+                Value::Array(
+                    out.plan
+                        .multiplies
+                        .iter()
+                        .map(|np| {
+                            Value::obj(vec![
+                                ("label", Value::str(np.label.clone())),
+                                ("algorithm", Value::str(np.plan.algorithm.to_string())),
+                                ("b", Value::num(np.plan.b as f64)),
+                                ("n", Value::num(np.plan.n as f64)),
+                                ("fused", Value::Bool(np.fused)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+            let collects =
+                out.job.stages.iter().filter(|s| s.label == "result/collect").count();
+            fields.push(("collects", Value::num(collects as f64)));
+            (out.c, out.job, out.leaf_calls, out.leaf_ms)
         }
     };
-    let mut fields = vec![
-        ("ok", Value::Bool(true)),
-        ("job_id", Value::num(id as f64)),
-        ("algo", Value::str(spec.algo.to_string())),
-        // What the planner/session actually ran (= "algo" unless auto).
-        ("algorithm", Value::str(out.plan.algorithm.to_string())),
-        ("b", Value::num(out.plan.b as f64)),
-        ("rows", Value::num(out.c.rows() as f64)),
-        ("cols", Value::num(out.c.cols() as f64)),
-        ("wall_ms", Value::num(out.job.wall_ms)),
-        ("leaf_calls", Value::num(out.leaf_calls as f64)),
-        ("leaf_ms", Value::num(out.leaf_ms)),
-        ("frobenius", Value::num(out.c.frobenius())),
-        ("shuffle_bytes", Value::num(out.job.total_shuffle_bytes() as f64)),
+    fields.extend([
+        ("rows", Value::num(c.rows() as f64)),
+        ("cols", Value::num(c.cols() as f64)),
+        ("wall_ms", Value::num(job.wall_ms)),
+        ("leaf_calls", Value::num(leaf_calls as f64)),
+        ("leaf_ms", Value::num(leaf_ms)),
+        ("frobenius", Value::num(c.frobenius())),
+        ("shuffle_bytes", Value::num(job.total_shuffle_bytes() as f64)),
         // Exactly this job's stage metrics (count = eq. (25) for Stark).
-        (
-            "stages",
-            Value::Array(out.job.stages.iter().map(|s| s.to_json()).collect()),
-        ),
-    ];
+        ("stages", Value::Array(job.stages.iter().map(|s| s.to_json()).collect())),
+    ]);
     if spec.return_c {
-        fields.push(("c", matrix_to_json(&out.c)));
+        fields.push(("c", matrix_to_json(&c)));
     }
     Value::obj(fields)
 }
@@ -547,11 +640,142 @@ fn parse_splits(req: &Value, default: Splits) -> Result<Splits> {
     }
 }
 
+/// Per-expression leaf budget: how many leaves and how many total
+/// elements one request may materialize (charged *before* allocating).
+struct LeafBudget {
+    leaves: usize,
+    elems: usize,
+}
+
+impl LeafBudget {
+    fn new() -> Self {
+        Self { leaves: 0, elems: 0 }
+    }
+
+    /// Charge one `rows × cols` leaf against the budget.
+    fn charge(&mut self, rows: usize, cols: usize) -> Result<()> {
+        self.leaves += 1;
+        anyhow::ensure!(self.leaves <= MAX_EXPR_LEAVES, "more than {MAX_EXPR_LEAVES} leaves");
+        self.elems = self.elems.saturating_add(rows.saturating_mul(cols));
+        anyhow::ensure!(
+            self.elems <= MAX_EXPR_ELEMS,
+            "expression leaves total more than {MAX_EXPR_ELEMS} elements"
+        );
+        Ok(())
+    }
+}
+
+/// Parse one node of a submitted expression tree (see the module docs
+/// for the grammar). Depth is capped at [`MAX_EXPR_DEPTH`]; leaves are
+/// charged against a count **and** total-element budget before any
+/// payload is materialized.
+fn parse_expr(
+    session: &StarkSession,
+    v: &Value,
+    depth: usize,
+    budget: &mut LeafBudget,
+) -> Result<DistExpr> {
+    anyhow::ensure!(depth <= MAX_EXPR_DEPTH, "expression nests deeper than {MAX_EXPR_DEPTH}");
+    let args = |key: &str, want: usize| -> Result<Vec<Value>> {
+        let arr: Vec<Value> =
+            v.get(key).and_then(Value::as_array).map(|a| a.to_vec()).unwrap_or_default();
+        anyhow::ensure!(arr.len() == want, "\"{key}\" takes exactly {want} operands");
+        Ok(arr)
+    };
+    if let Some(m) = v.get("matrix") {
+        // Shape-check the JSON before building the payload.
+        let rows = m.as_array().map(<[Value]>::len).unwrap_or(0);
+        let cols = m
+            .as_array()
+            .and_then(|r| r.first())
+            .and_then(Value::as_array)
+            .map(<[Value]>::len)
+            .unwrap_or(0);
+        anyhow::ensure!(
+            rows >= 1 && rows <= MAX_SUBMIT_N && cols <= MAX_SUBMIT_N,
+            "matrix leaf must be non-empty with at most {MAX_SUBMIT_N} rows/cols"
+        );
+        budget.charge(rows, cols)?;
+        let m = parse_matrix(m)?;
+        return Ok(session.matrix_arc(Arc::new(m)).expr());
+    }
+    if let Some(g) = v.get("gen") {
+        let n = g.get("n").and_then(Value::as_usize).context("\"gen\" needs \"n\"")?;
+        anyhow::ensure!(n >= 1 && n <= MAX_SUBMIT_N, "\"gen\" n must be in 1..={MAX_SUBMIT_N}");
+        budget.charge(n, n)?;
+        let seed = g.get("seed").and_then(Value::as_u64).unwrap_or(42);
+        return Ok(session.matrix_arc(Arc::new(DenseMatrix::random(n, n, seed))).expr());
+    }
+    if v.get("mul").is_some() {
+        let ops = args("mul", 2)?;
+        let l = parse_expr(session, &ops[0], depth + 1, budget)?;
+        let r = parse_expr(session, &ops[1], depth + 1, budget)?;
+        // Node-level pinning rides on the same object: {"mul":[..],
+        // "algo":"stark","b":4}.
+        let algo: Algorithm = v
+            .get("algo")
+            .and_then(Value::as_str)
+            .unwrap_or("auto")
+            .parse()
+            .map_err(anyhow::Error::msg)?;
+        let splits = parse_splits(v, Splits::Auto)?;
+        return Ok(l.multiply_with(&r, algo, splits));
+    }
+    if v.get("add").is_some() || v.get("sub").is_some() {
+        let (key, sign) = if v.get("add").is_some() { ("add", 1.0) } else { ("sub", -1.0) };
+        let arr: Vec<Value> =
+            v.get(key).and_then(Value::as_array).map(|a| a.to_vec()).unwrap_or_default();
+        anyhow::ensure!(arr.len() >= 2, "\"{key}\" takes at least two operands");
+        let mut acc = parse_expr(session, &arr[0], depth + 1, budget)?;
+        for op in &arr[1..] {
+            let rhs = parse_expr(session, op, depth + 1, budget)?;
+            acc = if sign > 0.0 { acc.add(&rhs) } else { acc.sub(&rhs) };
+        }
+        return Ok(acc);
+    }
+    if v.get("scale").is_some() {
+        let ops = args("scale", 2)?;
+        let s = ops[0].as_f64().context("\"scale\" takes [number, node]")?;
+        anyhow::ensure!(s.is_finite(), "\"scale\" factor must be finite");
+        return Ok(parse_expr(session, &ops[1], depth + 1, budget)?.scale(s));
+    }
+    if let Some(inner) = v.get("t").or_else(|| v.get("transpose")) {
+        return Ok(parse_expr(session, inner, depth + 1, budget)?.transpose());
+    }
+    if v.get("pow").is_some() {
+        let ops = args("pow", 2)?;
+        let k = ops[1].as_u64().context("\"pow\" takes [node, k]")?;
+        anyhow::ensure!(k >= 1 && k <= 64, "\"pow\" k must be in 1..=64");
+        return Ok(parse_expr(session, &ops[0], depth + 1, budget)?.pow(k as u32));
+    }
+    anyhow::bail!(
+        "unknown expression node (want one of matrix/gen/mul/add/sub/scale/t/pow): {}",
+        v.to_json()
+    )
+}
+
 /// Parse and validate a submit/multiply request into a [`JobSpec`] —
 /// every invariant the session checks at run time is dry-run here (a
-/// planner resolution), so malformed requests are rejected at submit
-/// time instead of failing the job.
+/// planner resolution or expression plan), so malformed requests are
+/// rejected at submit time instead of failing the job.
 fn parse_spec(session: &StarkSession, req: &Value, default_splits: Splits) -> Result<JobSpec> {
+    let return_c = req.get("return_c").and_then(Value::as_bool).unwrap_or(false);
+    if let Some(tree) = req.get("expr") {
+        let mut budget = LeafBudget::new();
+        let expr = parse_expr(session, tree, 0, &mut budget)?;
+        // Dry-run the whole chain plan: shape/session/split errors and
+        // every node's padded grid surface now, not in the runner.
+        let plan = expr.plan().map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        for np in &plan.multiplies {
+            anyhow::ensure!(
+                np.plan.n <= MAX_SUBMIT_N,
+                "expression node {} plans a padded grid {} beyond the server cap {MAX_SUBMIT_N}",
+                np.label,
+                np.plan.n
+            );
+        }
+        return Ok(JobSpec { payload: JobPayload::Expr(expr), return_c });
+    }
     let algo: Algorithm = req
         .get("algo")
         .and_then(Value::as_str)
@@ -595,8 +819,10 @@ fn parse_spec(session: &StarkSession, req: &Value, default_splits: Splits) -> Re
         "workload too large: padded size {} exceeds the server cap {MAX_SUBMIT_N}",
         plan.n
     );
-    let return_c = req.get("return_c").and_then(Value::as_bool).unwrap_or(false);
-    Ok(JobSpec { algo, splits, a: Arc::new(a), b_mat: Arc::new(b_mat), return_c })
+    Ok(JobSpec {
+        payload: JobPayload::Multiply { algo, splits, a: Arc::new(a), b_mat: Arc::new(b_mat) },
+        return_c,
+    })
 }
 
 /// Render a [`Plan`] as the `plan` op's response document.
@@ -651,7 +877,12 @@ enum Submitted {
 /// document (`busy` when the queue is at its bound, an error once
 /// shutdown began).
 fn submit_job(shared: &Shared, spec: JobSpec) -> Submitted {
-    let name = format!("{} n={} b={}", spec.algo, spec.a.rows(), spec.splits);
+    let name = match &spec.payload {
+        JobPayload::Multiply { algo, splits, a, .. } => {
+            format!("{} n={} b={}", algo, a.rows(), splits)
+        }
+        JobPayload::Expr(expr) => format!("expr {}x{}", expr.rows(), expr.cols()),
+    };
     let mut jobs = shared.jobs.inner.lock().unwrap();
     if !jobs.accepting || shared.shutdown.load(Ordering::SeqCst) {
         return Submitted::Rejected(Value::obj(vec![
@@ -1234,6 +1465,59 @@ mod tests {
         let want = crate::matrix::matmul_blocked(&a, &b).frobenius();
         let got = resp.get("frobenius").unwrap().as_f64().unwrap();
         assert!((want - got).abs() < 1e-9, "{want} vs {got}");
+    }
+
+    #[test]
+    fn expression_request_runs_chained_with_one_collect() {
+        let server = test_server();
+        // (A·B + C)·Aᵀ over inline 2×2 matrices.
+        let expr = json::parse(
+            r#"{"mul":[{"add":[{"mul":[{"matrix":[[1,2],[3,4]]},{"matrix":[[1,0],[0,1]]}]},{"matrix":[[1,1],[1,1]]}]},{"t":{"matrix":[[1,2],[3,4]]}}]}"#,
+        )
+        .unwrap();
+        let resp = req(
+            &server.addr().to_string(),
+            vec![
+                ("op", Value::str("multiply")),
+                ("expr", expr),
+                ("return_c", Value::Bool(true)),
+            ],
+        );
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("algo").unwrap().as_str(), Some("expr"));
+        assert_eq!(resp.get("collects").unwrap().as_u64(), Some(1));
+        assert_eq!(
+            resp.get("multiplies").unwrap().as_array().unwrap().len(),
+            2,
+            "{resp:?}"
+        );
+        // ((A·B)+C)·Aᵀ with A=[[1,2],[3,4]], B=I, C=ones:
+        // S = [[2,3],[4,5]]; S·Aᵀ = [[8,18],[14,32]].
+        assert_eq!(resp.get("c").unwrap().to_json(), "[[8,18],[14,32]]");
+        // Malformed trees are rejected at submit time.
+        let bad = req(
+            &server.addr().to_string(),
+            vec![
+                ("op", Value::str("submit")),
+                ("expr", json::parse(r#"{"pow":[{"gen":{"n":4}},0]}"#).unwrap()),
+            ],
+        );
+        assert_eq!(bad.get("ok"), Some(&Value::Bool(false)), "{bad:?}");
+        let bad = req(
+            &server.addr().to_string(),
+            vec![("op", Value::str("submit")), ("expr", json::parse(r#"{"nope":1}"#).unwrap())],
+        );
+        assert_eq!(bad.get("ok"), Some(&Value::Bool(false)), "{bad:?}");
+        // The leaf budget refuses oversized trees at parse time.
+        let many: Vec<String> =
+            (0..=MAX_EXPR_LEAVES).map(|i| format!(r#"{{"gen":{{"n":4,"seed":{i}}}}}"#)).collect();
+        let too_many = format!(r#"{{"add":[{}]}}"#, many.join(","));
+        let bad = req(
+            &server.addr().to_string(),
+            vec![("op", Value::str("submit")), ("expr", json::parse(&too_many).unwrap())],
+        );
+        assert_eq!(bad.get("ok"), Some(&Value::Bool(false)), "{bad:?}");
+        assert!(bad.get("error").unwrap().as_str().unwrap().contains("leaves"), "{bad:?}");
     }
 
     #[test]

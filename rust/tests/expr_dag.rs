@@ -1,0 +1,307 @@
+//! Integration tests for the distributed expression DAG (DESIGN.md
+//! S18): single-collect chaining, bit-identity against the
+//! collect-between baseline, split-time operand fusion, cost-model
+//! chain reordering, and a randomized DAG property check against the
+//! dense reference.
+
+use stark::algos::stark::predicted_stages;
+use stark::algos::Algorithm;
+use stark::api::{IntoExpr, StarkSession};
+use stark::cost::Splits;
+use stark::engine::ClusterConfig;
+use stark::matrix::{matmul_naive, DenseMatrix};
+use stark::util::prop::{assert_prop, Draw};
+use stark::StarkError;
+
+fn session() -> StarkSession {
+    StarkSession::builder().cluster(ClusterConfig::new(2, 2)).build().unwrap()
+}
+
+/// The PR's acceptance criterion: `(A·B + C)·Dᵀ` chained collects
+/// exactly once — no intermediate gather or re-distribution — and the
+/// result is bit-identical to collecting between every op.
+#[test]
+fn chained_acceptance_pipeline_single_collect_bit_identical() {
+    let n = 24; // divisible by b=4, not a power of two
+    let b = 4;
+    let am = DenseMatrix::random(n, n, 1);
+    let bm = DenseMatrix::random(n, n, 2);
+    let cm = DenseMatrix::random(n, n, 3);
+    let dm = DenseMatrix::random(n, n, 4);
+
+    // Chained: one job, every multiply pinned to stark b=4.
+    let s = session();
+    let (a, bb) = (s.matrix(&am), s.matrix(&bm));
+    let (c, d) = (s.matrix(&cm), s.matrix(&dm));
+    let chained = a
+        .multiply(&bb)
+        .algorithm(Algorithm::Stark)
+        .splits(Splits::Fixed(b))
+        .add(&c)
+        .multiply_with(&d.transpose(), Algorithm::Stark, Splits::Fixed(b))
+        .collect()
+        .unwrap();
+
+    // Collect-between baseline: gather the product, add on the driver,
+    // re-upload, transpose on the driver, multiply again.
+    let s2 = session();
+    let r1 = s2
+        .matrix(&am)
+        .multiply(&s2.matrix(&bm))
+        .algorithm(Algorithm::Stark)
+        .splits(Splits::Fixed(b))
+        .collect()
+        .unwrap();
+    let sum = r1.c.add(&cm);
+    let r2 = s2
+        .matrix(&sum)
+        .multiply(&s2.matrix(&dm.transpose()))
+        .algorithm(Algorithm::Stark)
+        .splits(Splits::Fixed(b))
+        .collect()
+        .unwrap();
+
+    // Bit-identical result, and numerically the dense reference.
+    assert_eq!(chained.c.as_slice(), r2.c.as_slice(), "chained != collect-between");
+    let want = matmul_naive(&matmul_naive(&am, &bm).add(&cm), &dm.transpose());
+    assert!(want.allclose(&chained.c, 1e-9));
+
+    // Exactly one gather for the whole pipeline…
+    let labels: Vec<&str> = chained.job.stages.iter().map(|s| s.label.as_str()).collect();
+    assert_eq!(labels.iter().filter(|l| **l == "result/collect").count(), 1, "{labels:?}");
+    // …no elementwise shuffle (the +C folded into a narrow map), no
+    // re-gridding, no per-node collects:
+    assert!(
+        !labels.iter().any(|l| l.contains("ew") || l.contains("regrid")),
+        "unexpected intermediate stages: {labels:?}"
+    );
+    // Two stark multiplies minus their collects, plus the one gather.
+    assert_eq!(chained.job.stages.len(), 2 * (predicted_stages(b) - 1) + 1, "{labels:?}");
+    assert!(labels.iter().any(|l| l.starts_with("m1/divide")));
+    assert!(labels.iter().any(|l| l.starts_with("m2/divide")));
+
+    // The baseline pays the two extra gathers.
+    let baseline_stages = r1.job.stages.len() + r2.job.stages.len();
+    assert_eq!(baseline_stages, 2 * predicted_stages(b));
+
+    // Bit-stable rerun of the same chain on a fresh session.
+    let s3 = session();
+    let (a3, b3) = (s3.matrix(&am), s3.matrix(&bm));
+    let (c3, d3) = (s3.matrix(&cm), s3.matrix(&dm));
+    let again = a3
+        .multiply(&b3)
+        .algorithm(Algorithm::Stark)
+        .splits(Splits::Fixed(b))
+        .add(&c3)
+        .multiply_with(&d3.transpose(), Algorithm::Stark, Splits::Fixed(b))
+        .collect()
+        .unwrap();
+    assert_eq!(chained.c.as_slice(), again.c.as_slice(), "rerun not bit-stable");
+
+    // The rendered plan names the acceptance expression.
+    assert_eq!(chained.plan.expression, "(A·B+C)·Dᵀ");
+    assert_eq!(chained.plan.multiplies.len(), 2);
+}
+
+/// `(A+B)·C` fuses the sum into the operand's block split: same stage
+/// structure as a plain multiply (no elementwise stage anywhere), and
+/// bit-identical to adding on the driver first.
+#[test]
+fn operand_sum_fuses_into_the_split() {
+    let n = 16;
+    let b = 4;
+    let am = DenseMatrix::random(n, n, 11);
+    let bm = DenseMatrix::random(n, n, 12);
+    let cm = DenseMatrix::random(n, n, 13);
+
+    let s = session();
+    let fused = s
+        .matrix(&am)
+        .add(&s.matrix(&bm))
+        .multiply_with(&s.matrix(&cm), Algorithm::Stark, Splits::Fixed(b))
+        .collect()
+        .unwrap();
+
+    // Driver-side baseline: materialize A+B, then one plain multiply.
+    let s2 = session();
+    let baseline = s2
+        .matrix(&am.add(&bm))
+        .multiply(&s2.matrix(&cm))
+        .algorithm(Algorithm::Stark)
+        .splits(Splits::Fixed(b))
+        .collect()
+        .unwrap();
+
+    assert_eq!(fused.c.as_slice(), baseline.c.as_slice());
+    // Identical stage structure: the sum costs no stage at all.
+    assert_eq!(fused.job.stages.len(), baseline.job.stages.len());
+    assert!(!fused.job.stages.iter().any(|st| st.label.contains("ew")));
+    assert!(matmul_naive(&am.add(&bm), &cm).allclose(&fused.c, 1e-9));
+}
+
+/// A sum of two *distributed* products needs exactly one elementwise
+/// fold stage — still no intermediate collect.
+#[test]
+fn sum_of_products_folds_distributed() {
+    let n = 16;
+    let am = DenseMatrix::random(n, n, 21);
+    let bm = DenseMatrix::random(n, n, 22);
+    let cm = DenseMatrix::random(n, n, 23);
+    let dm = DenseMatrix::random(n, n, 24);
+    let s = session();
+    let (a, b) = (s.matrix(&am), s.matrix(&bm));
+    let (c, d) = (s.matrix(&cm), s.matrix(&dm));
+    let report = a.multiply(&b).expr().add(&c.expr().multiply(&d)).collect().unwrap();
+    let want = matmul_naive(&am, &bm).add(&matmul_naive(&cm, &dm));
+    assert!(want.allclose(&report.c, 1e-9));
+    let labels: Vec<&str> = report.job.stages.iter().map(|s| s.label.as_str()).collect();
+    assert_eq!(labels.iter().filter(|l| **l == "result/collect").count(), 1, "{labels:?}");
+    assert_eq!(labels.iter().filter(|l| l.contains("/add")).count(), 1, "{labels:?}");
+}
+
+/// Chain planning reorders `(A·B)·C` into `A·(B·C)` when the §IV model
+/// says so — and the reorder is observable in the plan, the grids, and
+/// a correct result (the big intermediate never materializes as a
+/// 256-grid product feeding another 256-grid multiply).
+#[test]
+fn chain_planning_reorders_rectangular_chains() {
+    let am = DenseMatrix::random(8, 8, 31);
+    let bm = DenseMatrix::random(8, 256, 32);
+    let cm = DenseMatrix::random(256, 8, 33);
+    let s = session();
+    let (a, b, c) = (s.matrix(&am), s.matrix(&bm), s.matrix(&cm));
+
+    // The user writes left-assoc; the planner prefers right-assoc.
+    let expr = a.multiply(&b).then_multiply(&c);
+    let plan = expr.plan().unwrap();
+    assert!(plan.reordered, "expected a reorder: {plan:?}");
+    assert_eq!(plan.multiplies.len(), 2);
+    // First the 256-grid B·C, then the 8-grid A·(BC).
+    assert_eq!(plan.multiplies[0].plan.n, 256, "{plan:?}");
+    assert_eq!(plan.multiplies[1].plan.n, 8, "{plan:?}");
+
+    let report = expr.collect().unwrap();
+    let want = matmul_naive(&matmul_naive(&am, &bm), &cm);
+    assert!(want.allclose(&report.c, 1e-8), "Δ={}", want.max_abs_diff(&report.c));
+    // The 256-grid product regrids down to the 8-grid consumer —
+    // distributed, not collected.
+    let labels: Vec<&str> = report.job.stages.iter().map(|s| s.label.as_str()).collect();
+    assert_eq!(labels.iter().filter(|l| **l == "result/collect").count(), 1, "{labels:?}");
+    assert!(labels.iter().any(|l| l.starts_with("regrid")), "{labels:?}");
+
+    // Square chains stay exactly as written.
+    let sq = session();
+    let (x, y, z) = (
+        sq.matrix(&DenseMatrix::random(16, 16, 41)),
+        sq.matrix(&DenseMatrix::random(16, 16, 42)),
+        sq.matrix(&DenseMatrix::random(16, 16, 43)),
+    );
+    let sq_plan = x.multiply(&y).then_multiply(&z).plan().unwrap();
+    assert!(!sq_plan.reordered);
+
+    // Pinned nodes are chain barriers: no reorder even when it would pay.
+    let s2 = session();
+    let (a2, b2, c2) = (s2.matrix(&am), s2.matrix(&bm), s2.matrix(&cm));
+    let pinned = a2
+        .multiply(&b2)
+        .algorithm(Algorithm::Mllib)
+        .splits(Splits::Fixed(2))
+        .then_multiply(&c2);
+    let pinned_plan = pinned.plan().unwrap();
+    assert!(!pinned_plan.reordered);
+    assert_eq!(pinned_plan.multiplies[0].plan.algorithm, Algorithm::Mllib);
+}
+
+/// `pow` builds shared squarings: planning three multiplies for `P^8`,
+/// with the chained result matching repeated dense squaring.
+#[test]
+fn pow_is_shared_squarings_with_one_collect() {
+    // Scaled down so P^8 magnitudes stay O(1) and an absolute tolerance
+    // is meaningful.
+    let pm = DenseMatrix::random(24, 24, 51).scale(1.0 / 24.0);
+    let s = session();
+    let p = s.matrix(&pm);
+    let report = p.pow(8).collect().unwrap();
+    let mut want = pm.clone();
+    for _ in 0..3 {
+        want = matmul_naive(&want, &want);
+    }
+    assert!(want.allclose(&report.c, 1e-7), "Δ={}", want.max_abs_diff(&report.c));
+    assert_eq!(report.plan.multiplies.len(), 3);
+    let collects = report
+        .job
+        .stages
+        .iter()
+        .filter(|st| st.label == "result/collect")
+        .count();
+    assert_eq!(collects, 1);
+    // pow(0) stays a typed error.
+    assert!(matches!(p.pow(0).collect(), Err(StarkError::InvalidExpression(_))));
+}
+
+/// Randomized DAGs of ·/+/−/ᵀ/scale over odd and padded shapes match
+/// the dense reference, and re-running the same DAG is bit-stable.
+#[test]
+fn random_expression_dags_match_dense_reference() {
+    assert_prop("expr-dag", 0xE1AB, 12, |rng| {
+        let n = *rng.choice(&[3usize, 5, 8, 12, 16]);
+        let s = session();
+        // Pool of (expression, dense reference) pairs, grown by random ops.
+        let mut pool: Vec<(stark::DistExpr, DenseMatrix)> = (0..2)
+            .map(|i| {
+                let m = DenseMatrix::random(n, n, 0x9000 + i);
+                (s.matrix(&m).expr(), m)
+            })
+            .collect();
+        let ops = rng.range(1, 5);
+        for _ in 0..ops {
+            let i = rng.range(0, pool.len());
+            let j = rng.range(0, pool.len());
+            let (ei, di) = pool[i].clone();
+            let (ej, dj) = pool[j].clone();
+            let pick = rng.range(0, 5);
+            let next = match pick {
+                0 => (ei.add(&ej), di.add(&dj)),
+                1 => (ei.sub(&ej), di.sub(&dj)),
+                2 => (ei.scale(-0.5), di.scale(-0.5)),
+                3 => (ei.transpose(), di.transpose()),
+                _ => (ei.multiply(&ej), matmul_naive(&di, &dj)),
+            };
+            pool.push(next);
+        }
+        let (expr, want) = pool.last().unwrap().clone();
+        let got = expr.collect().map_err(|e| format!("collect failed: {e}"))?;
+        if (got.c.rows(), got.c.cols()) != (want.rows(), want.cols()) {
+            return Err(format!(
+                "shape {}x{} != {}x{}",
+                got.c.rows(),
+                got.c.cols(),
+                want.rows(),
+                want.cols()
+            ));
+        }
+        if !want.allclose(&got.c, 1e-7) {
+            return Err(format!(
+                "value drift {} on n={n} expr {}",
+                want.max_abs_diff(&got.c),
+                got.plan.expression
+            ));
+        }
+        // Exactly one collect, whatever the DAG shape.
+        let collects = got
+            .job
+            .stages
+            .iter()
+            .filter(|st| st.label == "result/collect")
+            .count();
+        if collects != 1 {
+            return Err(format!("{collects} collects in {}", got.plan.expression));
+        }
+        // Bit-stable rerun.
+        let again = expr.collect().map_err(|e| format!("rerun failed: {e}"))?;
+        if got.c.as_slice() != again.c.as_slice() {
+            return Err(format!("rerun not bit-stable for {}", got.plan.expression));
+        }
+        Ok(())
+    });
+}
