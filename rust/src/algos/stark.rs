@@ -43,7 +43,10 @@ use crate::algos::common::{
     default_parts, distribute, signed_finalize, signed_merge, validate_inputs, Algorithm,
     BlockSplits, MultiplyAlgorithm, MultiplyOutput, SignedBlock, TimingBackend,
 };
-use crate::engine::{det_partition, Block, Dist, JobCtx, Partitioner, Side, SparkContext, Tag};
+use crate::engine::{
+    det_partition, Alignment, Block, Dist, JobCtx, Partitioner, PartitionerDesc, Side,
+    SparkContext, Tag,
+};
 use crate::error::StarkError;
 use crate::matrix::DenseMatrix;
 use crate::runtime::LeafBackend;
@@ -64,11 +67,20 @@ pub struct StarkConfig {
     /// the group-by-key baseline kept for benchmarking the reduction
     /// (`benches/hotpath.rs`).
     pub map_side_combine: bool,
+    /// Run the [`crate::analyze`] plan dry-run before executing
+    /// expressions / serve submissions even in release builds (debug
+    /// builds always run it), and reject plans with error diagnostics.
+    pub strict_analyze: bool,
 }
 
 impl Default for StarkConfig {
     fn default() -> Self {
-        Self { fused_leaf: false, isolate_multiply: false, map_side_combine: true }
+        Self {
+            fused_leaf: false,
+            isolate_multiply: false,
+            map_side_combine: true,
+            strict_analyze: false,
+        }
     }
 }
 
@@ -172,6 +184,15 @@ impl Partitioner<(u64, u8, u32, u32)> for DivideAlign {
             }
         }
     }
+
+    fn describe(&self) -> PartitionerDesc {
+        let group = match self.next {
+            NextGrouping::Subproblem => "subproblem",
+            NextGrouping::Quadrant { .. } => "quadrant",
+        };
+        let alignment = Alignment::Grouped(group);
+        PartitionerDesc { name: "divide-align", parts: self.parts, alignment }
+    }
 }
 
 /// Leaf-shuffle router over M-index keys: grouping a parent's seven
@@ -194,6 +215,16 @@ impl Partitioner<u64> for MultiplyAlign {
         } else {
             det_partition(key, self.parts)
         }
+    }
+
+    fn describe(&self) -> PartitionerDesc {
+        // The !by_parent arm is a *deliberate* fall-back to key hashing
+        // (shallow recursions trade combine locality for leaf
+        // parallelism) — multiply stages are therefore not held to the
+        // Grouped contract by the analyzer.
+        let alignment =
+            if self.by_parent { Alignment::Grouped("parent") } else { Alignment::KeyHash };
+        PartitionerDesc { name: "multiply-align", parts: self.parts, alignment }
     }
 }
 
@@ -220,6 +251,14 @@ impl Partitioner<(u64, u32, u32)> for CombineAlign {
 
     fn partition(&self, key: &(u64, u32, u32)) -> usize {
         det_partition(&(key.0 / 7, key.1, key.2), self.parts)
+    }
+
+    fn describe(&self) -> PartitionerDesc {
+        PartitionerDesc {
+            name: "combine-align",
+            parts: self.parts,
+            alignment: Alignment::Grouped("parent-position"),
+        }
     }
 }
 

@@ -1,0 +1,477 @@
+//! Static analysis of lineage DAGs and expression plans (DESIGN.md S19).
+//!
+//! The paper's correctness story rests on invariants the engine cannot
+//! express in types alone: M-index tag paths must stay valid base-7
+//! positions (§III-B, Fig. 1), divide/combine shuffles must route with
+//! partitioners that co-locate the *next* stage's groups (otherwise
+//! map-side combining silently degrades to a full shuffle), grouped
+//! emission must be key-ordered for bit-identity, datasets must not mix
+//! job scopes, and a Stark plan must run exactly the eq. (25) stage
+//! ledger. This module checks all of them **without executing anything**:
+//!
+//! - [`analyze_lineage`] walks a [`Dist`](crate::engine::Dist)'s
+//!   [`LineageNode`] DAG (partitioner alignment, key orderedness,
+//!   cross-job mixing);
+//! - [`analyze_tags`] checks a set of tagged block coordinates for
+//!   malformed or colliding M-index paths;
+//! - [`analyze_plan`] / [`analyze_node_plan`] check an
+//!   [`ExprPlan`]/[`Plan`] dry-run (stage-ledger conformance, duplicate
+//!   stage labels).
+//!
+//! Every finding is a [`Diagnostic`] with a stable `STARK-Axxx` code so
+//! tests and CI pin exact findings. Three surfaces consume this API: the
+//! `stark analyze` CLI subcommand, the submit-time hooks in
+//! [`DistExpr::collect`](crate::api::DistExpr::collect) and serve's
+//! `parse_spec` (always in debug builds, opt-in via
+//! [`StarkConfig::strict_analyze`](crate::algos::StarkConfig) in
+//! release), and direct library calls from tests.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use crate::api::ExprPlan;
+use crate::cost::{stark_stage_count, Plan};
+use crate::engine::block::Tag;
+use crate::engine::partitioner::Alignment;
+use crate::engine::{LineageNode, OpKind};
+
+/// Malformed M-index: a tag's base-7 path does not fit its recursion
+/// depth (`mindex >= 7^depth`), so divide/combine would mis-route it.
+pub const MALFORMED_TAG: &str = "STARK-A001";
+/// Tag collision: two blocks at one level share `(side, mindex, row,
+/// col)` — grouped sums would silently merge distinct blocks.
+pub const TAG_COLLISION: &str = "STARK-A002";
+/// Misaligned partitioner: a divide/combine grouping shuffle routes by
+/// plain key hash (or opaquely), defeating map-side combining.
+pub const MISALIGNED_PARTITIONER: &str = "STARK-A003";
+/// Unordered grouping key: a grouping wide op whose key lacks the
+/// `Ord`-ordered emission bit-identical results depend on.
+pub const UNORDERED_GROUP_KEY: &str = "STARK-A004";
+/// Cross-job mixing: a node consumes a parent from a different `JobCtx`
+/// (today a runtime assert in `union`/`join`/`cogroup`).
+pub const CROSS_JOB_MIX: &str = "STARK-A005";
+/// Stage-ledger mismatch: a Stark node's analytic stage breakdown plus
+/// the result-collect stage does not match eq. (25)'s `2·log2(b) + 2`.
+pub const STAGE_LEDGER_MISMATCH: &str = "STARK-A006";
+/// Duplicate stage label within one plan — metrics and ledger checks
+/// would aggregate unrelated stages.
+pub const DUPLICATE_STAGE_LABEL: &str = "STARK-A007";
+
+/// How bad a finding is. `Error` findings reject the plan under the
+/// strict/debug hooks; `Warning`s report but do not block (the CLI still
+/// exits non-zero on any finding, so CI treats both as fatal).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// One analyzer finding: stable code, severity, the offending node
+/// (stage label, operator, or plan node), and a human message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub code: &'static str,
+    pub severity: Severity,
+    /// The offending lineage/plan node, e.g. `"m1/divide/L0 (fold_by_key)"`.
+    pub node: String,
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}[{}] at {}: {}", self.severity, self.code, self.node, self.message)
+    }
+}
+
+fn error(code: &'static str, node: impl Into<String>, message: impl Into<String>) -> Diagnostic {
+    Diagnostic { code, severity: Severity::Error, node: node.into(), message: message.into() }
+}
+
+fn warning(code: &'static str, node: impl Into<String>, message: impl Into<String>) -> Diagnostic {
+    Diagnostic { code, severity: Severity::Warning, node: node.into(), message: message.into() }
+}
+
+/// True if any finding is an [`Severity::Error`].
+pub fn has_errors(diags: &[Diagnostic]) -> bool {
+    diags.iter().any(|d| d.severity == Severity::Error)
+}
+
+/// Render findings one per line (CLI output, rejection messages).
+pub fn render(diags: &[Diagnostic]) -> String {
+    diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+}
+
+fn node_name(n: &LineageNode) -> String {
+    match &n.label {
+        Some(l) => format!("{l} ({})", n.op),
+        None => n.op.to_string(),
+    }
+}
+
+/// Walk a lineage DAG (shared nodes visited once) and report partitioner
+/// alignment (A003), key orderedness (A004), and cross-job mixing (A005).
+pub fn analyze_lineage(root: &Arc<LineageNode>) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut seen: HashSet<*const LineageNode> = HashSet::new();
+    let mut stack: Vec<Arc<LineageNode>> = vec![root.clone()];
+    while let Some(node) = stack.pop() {
+        if !seen.insert(Arc::as_ptr(&node)) {
+            continue;
+        }
+        check_lineage_node(&node, &mut out);
+        stack.extend(node.parents.iter().cloned());
+    }
+    out
+}
+
+fn check_lineage_node(node: &LineageNode, out: &mut Vec<Diagnostic>) {
+    for parent in &node.parents {
+        if parent.job_id != node.job_id {
+            out.push(error(
+                CROSS_JOB_MIX,
+                node_name(node),
+                format!(
+                    "consumes dataset from job {} ('{}') inside job {} ('{}') — stages would \
+                     record into the wrong scope",
+                    parent.job_id, parent.job_name, node.job_id, node.job_name
+                ),
+            ));
+        }
+    }
+    if node.kind != OpKind::Wide {
+        return;
+    }
+    if node.grouped && !node.key_ord {
+        out.push(error(
+            UNORDERED_GROUP_KEY,
+            node_name(node),
+            "grouping shuffle key is not Ord — reduce-side emission order (and therefore \
+             byte-level output) would depend on upstream partitioning"
+                .to_string(),
+        ));
+    }
+    // Divide/combine shuffles exist to co-locate the next phase's groups;
+    // a key-hash or opaque router silently degrades the fold to a full
+    // shuffle (the map-side combine of PR 1 stops absorbing anything).
+    let label = node.label.as_deref().unwrap_or("");
+    let is_aligned_stage = label.contains("divide/") || label.contains("combine/");
+    if node.grouped && is_aligned_stage {
+        let aligned =
+            matches!(node.partitioner.as_ref().map(|p| p.alignment), Some(Alignment::Grouped(_)));
+        if !aligned {
+            let got = node
+                .partitioner
+                .as_ref()
+                .map(|p| format!("{} ({:?})", p.name, p.alignment))
+                .unwrap_or_else(|| "none".to_string());
+            out.push(warning(
+                MISALIGNED_PARTITIONER,
+                node_name(node),
+                format!(
+                    "divide/combine grouping stage routed by {got} — groups are not co-located, \
+                     map-side combining degrades to a full shuffle"
+                ),
+            ));
+        }
+    }
+}
+
+/// Check tagged block coordinates `(tag, row, col)` at recursion `depth`
+/// for malformed M-index paths (A001) and per-level collisions (A002).
+pub fn analyze_tags(tags: &[(Tag, u32, u32)], depth: u32) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let limit = 7u64.saturating_pow(depth);
+    let mut seen = HashSet::new();
+    for &(tag, row, col) in tags {
+        let node = format!("{:?}/{} @({row},{col})", tag.side, tag.mindex);
+        if tag.mindex >= limit {
+            out.push(error(
+                MALFORMED_TAG,
+                node.clone(),
+                format!(
+                    "M-index {} is not a valid base-7 path at depth {depth} (must be < 7^{depth} \
+                     = {limit})",
+                    tag.mindex
+                ),
+            ));
+        }
+        if !seen.insert((tag.side, tag.mindex, row, col)) {
+            out.push(error(
+                TAG_COLLISION,
+                node,
+                "duplicate (side, M-index, row, col) at one level — grouped sums would merge \
+                 distinct blocks"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// Check one multiply node's resolved [`Plan`]: stage-ledger conformance
+/// against eq. (25) for Stark (A006) and unique stage labels within the
+/// analytic breakdown (A007). `qualifier` prefixes reported stage labels
+/// (the expression layer passes `"m1/"` etc.; pass `""` for a bare plan).
+pub fn analyze_node_plan(qualifier: &str, plan: &Plan) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut labels = HashSet::new();
+    for stage in &plan.predicted.stages {
+        if !labels.insert(stage.label.as_str()) {
+            out.push(error(
+                DUPLICATE_STAGE_LABEL,
+                format!("{qualifier}{}", stage.label),
+                "stage label appears twice in one plan — metrics and the eq. (25) ledger would \
+                 aggregate unrelated stages"
+                    .to_string(),
+            ));
+        }
+    }
+    // Eq. (25): 2(p−q)+2 stages. The analytic breakdown counts every
+    // cluster stage except the driver's final result collect, hence +1.
+    if plan.algorithm == crate::algos::Algorithm::Stark && plan.b >= 2 {
+        let expected = stark_stage_count(plan.b);
+        let got = plan.predicted.stages.len() + 1;
+        if got != expected {
+            out.push(error(
+                STAGE_LEDGER_MISMATCH,
+                format!("{qualifier}stark b={}", plan.b),
+                format!(
+                    "plan ledger has {got} stages (incl. result collect) but eq. (25) predicts \
+                     {expected} for b={}",
+                    plan.b
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// Check a whole expression plan: per-node checks plus uniqueness of the
+/// multiply node labels the executor prefixes stages with (A007).
+pub fn analyze_plan(plan: &ExprPlan) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut labels = HashSet::new();
+    for node in &plan.multiplies {
+        if !labels.insert(node.label.as_str()) {
+            out.push(error(
+                DUPLICATE_STAGE_LABEL,
+                node.label.clone(),
+                format!(
+                    "multiply node label duplicated in plan for {} — stage metrics of the two \
+                     nodes would be indistinguishable",
+                    plan.expression
+                ),
+            ));
+        }
+        out.extend(analyze_node_plan(&format!("{}/", node.label), &node.plan));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::block::Side;
+    use crate::engine::partitioner::PartitionerDesc;
+
+    fn leaf(job_id: u64) -> Arc<LineageNode> {
+        Arc::new(LineageNode {
+            kind: OpKind::Source,
+            op: "from_partitions",
+            label: None,
+            partitioner: None,
+            key_ord: true,
+            grouped: false,
+            job_id,
+            job_name: format!("job-{job_id}"),
+            num_parts: 2,
+            parents: Vec::new(),
+        })
+    }
+
+    #[test]
+    fn clean_lineage_has_no_findings() {
+        let node = Arc::new(LineageNode {
+            kind: OpKind::Wide,
+            op: "fold_by_key",
+            label: Some("divide/L0".into()),
+            partitioner: Some(PartitionerDesc {
+                name: "divide-align",
+                parts: 4,
+                alignment: Alignment::Grouped("subproblem"),
+            }),
+            key_ord: true,
+            grouped: true,
+            job_id: 1,
+            job_name: "job-1".into(),
+            num_parts: 4,
+            parents: vec![leaf(1)],
+        });
+        assert!(analyze_lineage(&node).is_empty());
+    }
+
+    #[test]
+    fn shared_parents_are_visited_once() {
+        // Diamond: two narrow children of one bad source, then a union.
+        let mut bad = (*leaf(1)).clone();
+        bad.kind = OpKind::Wide;
+        bad.op = "group_by_key";
+        bad.label = Some("divide/L0".into());
+        bad.grouped = true;
+        bad.partitioner =
+            Some(PartitionerDesc { name: "hash", parts: 2, alignment: Alignment::KeyHash });
+        let bad = Arc::new(bad);
+        let l = LineageNode::narrow("map", &bad);
+        let r = LineageNode::narrow("filter", &bad);
+        let top = Arc::new(LineageNode {
+            kind: OpKind::Union,
+            op: "union",
+            label: None,
+            partitioner: None,
+            key_ord: true,
+            grouped: false,
+            job_id: 1,
+            job_name: "job-1".into(),
+            num_parts: 4,
+            parents: vec![l, r],
+        });
+        let diags = analyze_lineage(&top);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, MISALIGNED_PARTITIONER);
+    }
+
+    #[test]
+    fn tags_clean_at_depth() {
+        // Full level-1 fan-out: all 7 children, distinct positions.
+        let tags: Vec<(Tag, u32, u32)> =
+            (0..7).map(|m| (Tag::root(Side::A).child(m), 0, 0)).collect();
+        assert!(analyze_tags(&tags, 1).is_empty());
+    }
+
+    /// One code per finding, pinned: a corrupt tag path is A001.
+    #[test]
+    fn corrupt_tag_path_is_a001() {
+        // 7 and 48 are <= two base-7 digits but depth is 1, so any
+        // mindex >= 7 cannot have come from a depth-1 divide.
+        let tags = vec![(Tag { side: Side::M, mindex: 7 }, 0, 0)];
+        let diags = analyze_tags(&tags, 1);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, MALFORMED_TAG);
+        assert_eq!(diags[0].severity, Severity::Error);
+        // Depth 0 admits only the root path (mindex 0).
+        let at_root = analyze_tags(&[(Tag { side: Side::A, mindex: 1 }, 0, 0)], 0);
+        assert_eq!(at_root[0].code, MALFORMED_TAG);
+    }
+
+    #[test]
+    fn colliding_tags_are_a002() {
+        let dup = Tag::root(Side::B).child(3);
+        let diags = analyze_tags(&[(dup, 1, 2), (dup, 1, 2)], 1);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, TAG_COLLISION);
+        // Same path at a DIFFERENT grid position is legitimate.
+        assert!(analyze_tags(&[(dup, 1, 2), (dup, 2, 1)], 1).is_empty());
+    }
+
+    #[test]
+    fn misaligned_divide_partitioner_is_a003_warning() {
+        let mut node = (*leaf(1)).clone();
+        node.kind = OpKind::Wide;
+        node.op = "fold_by_key";
+        node.label = Some("m1/combine/L0".into());
+        node.grouped = true;
+        node.partitioner =
+            Some(PartitionerDesc { name: "hash", parts: 4, alignment: Alignment::KeyHash });
+        node.parents = vec![leaf(1)];
+        let diags = analyze_lineage(&Arc::new(node));
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, MISALIGNED_PARTITIONER);
+        assert_eq!(diags[0].severity, Severity::Warning, "A003 reports but must not reject");
+        assert!(!has_errors(&diags), "a lone warning must not reject the plan");
+    }
+
+    #[test]
+    fn unordered_group_key_is_a004() {
+        // Unreachable through engine constructors (wide ops bound K: Ord),
+        // which is exactly why the analyzer carries the bit explicitly.
+        let mut node = (*leaf(1)).clone();
+        node.kind = OpKind::Wide;
+        node.op = "group_by_key";
+        node.label = Some("multiply/groupByKey".into());
+        node.grouped = true;
+        node.key_ord = false;
+        node.parents = vec![leaf(1)];
+        let diags = analyze_lineage(&Arc::new(node));
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, UNORDERED_GROUP_KEY);
+        assert_eq!(diags[0].severity, Severity::Error);
+    }
+
+    #[test]
+    fn cross_job_join_is_a005() {
+        let mut node = (*leaf(1)).clone();
+        node.kind = OpKind::Wide;
+        node.op = "join";
+        node.label = Some("stage3/join".into());
+        node.grouped = true;
+        node.partitioner =
+            Some(PartitionerDesc { name: "hash", parts: 2, alignment: Alignment::KeyHash });
+        node.parents = vec![leaf(1), leaf(2)];
+        let diags = analyze_lineage(&Arc::new(node));
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, CROSS_JOB_MIX);
+        assert_eq!(diags[0].severity, Severity::Error);
+        assert!(diags[0].message.contains("job 2"), "{}", diags[0].message);
+    }
+
+    fn stark_plan(n: usize, b: usize) -> Plan {
+        Plan {
+            n,
+            algorithm: crate::algos::Algorithm::Stark,
+            b,
+            predicted: crate::cost::stark_cost(n, b, 8),
+            considered: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn shipped_stark_breakdowns_satisfy_the_ledger() {
+        for b in [2usize, 4, 8] {
+            let diags = analyze_node_plan("", &stark_plan(64 * b, b));
+            assert!(diags.is_empty(), "b={b}: {diags:?}");
+        }
+    }
+
+    #[test]
+    fn dropped_stage_is_a006() {
+        let mut plan = stark_plan(256, 4);
+        plan.predicted.stages.pop();
+        let diags = analyze_node_plan("m1/", &plan);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, STAGE_LEDGER_MISMATCH);
+        assert_eq!(diags[0].severity, Severity::Error);
+        assert_eq!(diags[0].node, "m1/stark b=4");
+    }
+
+    #[test]
+    fn duplicate_stage_label_is_a007() {
+        let mut plan = stark_plan(256, 2);
+        // Overwrite stage 0 with a clone of stage 1: the label appears
+        // twice but the count is unchanged, so A006 stays quiet and the
+        // test pins exactly the duplicate-label code.
+        plan.predicted.stages[0] = plan.predicted.stages[1].clone();
+        let diags = analyze_node_plan("", &plan);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, DUPLICATE_STAGE_LABEL);
+        assert_eq!(diags[0].severity, Severity::Error);
+    }
+}

@@ -260,6 +260,15 @@ impl DistExpr {
     /// distributed block RDDs, collect once, crop to the logical shape.
     pub fn collect(&self) -> Result<ExprReport, StarkError> {
         let planned = Planned::build(self)?;
+        // Static dry-run (DESIGN.md S19): always in debug builds, opt-in
+        // for release sessions. Error-severity findings reject the plan
+        // before any block moves.
+        if cfg!(debug_assertions) || self.session.stark_config().strict_analyze {
+            let diags = crate::analyze::analyze_plan(&planned.plan);
+            if crate::analyze::has_errors(&diags) {
+                return Err(StarkError::PlanRejected(crate::analyze::render(&diags)));
+            }
+        }
         let timing = TimingBackend::new(self.session.backend());
         let job = self
             .session

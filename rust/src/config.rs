@@ -95,6 +95,10 @@ pub struct RunConfig {
     /// `false` selects the group-by-key baseline the paper's cost model
     /// (§IV) transcribes — the arm shuffle-volume comparisons run against.
     pub map_side_combine: bool,
+    /// Run the static plan analyzer ([`crate::analyze`]) before executing
+    /// expressions even in release builds, rejecting plans with error
+    /// diagnostics (debug builds always run it).
+    pub strict_analyze: bool,
     /// Sleep for real on the simulated shuffle-read wait (wall-clock
     /// faithful demos); the wait always accrues to the metrics.
     pub real_net_sleep: bool,
@@ -121,6 +125,7 @@ impl Default for RunConfig {
             fused_leaf: false,
             isolate_multiply: false,
             map_side_combine: true,
+            strict_analyze: false,
             real_net_sleep: false,
             scheduler: SchedulerPolicy::Fair,
             max_concurrent_jobs: 4,
@@ -151,6 +156,7 @@ impl RunConfig {
             fused_leaf: self.fused_leaf,
             isolate_multiply: self.isolate_multiply,
             map_side_combine: self.map_side_combine,
+            strict_analyze: self.strict_analyze,
         }
     }
 
@@ -182,6 +188,7 @@ impl RunConfig {
             ("fused_leaf", Value::Bool(self.fused_leaf)),
             ("isolate_multiply", Value::Bool(self.isolate_multiply)),
             ("map_side_combine", Value::Bool(self.map_side_combine)),
+            ("strict_analyze", Value::Bool(self.strict_analyze)),
             ("real_net_sleep", Value::Bool(self.real_net_sleep)),
             ("scheduler", Value::str(self.scheduler.to_string())),
             ("max_concurrent_jobs", Value::num(self.max_concurrent_jobs as f64)),
@@ -245,6 +252,8 @@ impl RunConfig {
             fused_leaf: v.get("fused_leaf").and_then(Value::as_bool).unwrap_or(false),
             isolate_multiply: v.get("isolate_multiply").and_then(Value::as_bool).unwrap_or(false),
             map_side_combine: v.get("map_side_combine").and_then(Value::as_bool).unwrap_or(true),
+            // Legacy recorded configs predate the analyzer: default off.
+            strict_analyze: v.get("strict_analyze").and_then(Value::as_bool).unwrap_or(false),
             real_net_sleep: v.get("real_net_sleep").and_then(Value::as_bool).unwrap_or(false),
             // Pre-scheduler RunConfig JSON carries neither knob: default
             // to the fair policy the cluster itself defaults to.
@@ -299,6 +308,7 @@ mod tests {
         assert_eq!(back.net_bandwidth, None);
         assert!(back.failure.is_none());
         assert!(back.map_side_combine, "map-side combining is the default");
+        assert!(!back.strict_analyze, "strict analyze is opt-in");
         assert!(!back.real_net_sleep);
         assert_eq!(back.scheduler, SchedulerPolicy::Fair);
         assert_eq!(back.max_concurrent_jobs, 4);
@@ -320,6 +330,10 @@ mod tests {
         let parsed = RunConfig::from_json(legacy).unwrap();
         assert_eq!(parsed.scheduler, SchedulerPolicy::Fair);
         assert_eq!(parsed.max_concurrent_jobs, 4);
+        assert!(!parsed.strict_analyze);
+        // And the knob itself round-trips.
+        let strict = RunConfig { strict_analyze: true, ..Default::default() };
+        assert!(RunConfig::from_json(&strict.to_json()).unwrap().strict_analyze);
     }
 
     #[test]

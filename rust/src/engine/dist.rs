@@ -44,12 +44,129 @@ use std::sync::Arc;
 
 use crate::engine::cluster::{Cluster, ClusterConfig};
 use crate::engine::metrics::{JobMetrics, JobScope, MetricsRegistry, StageMetrics};
-use crate::engine::partitioner::{DetHashMap, HashPartitioner, Partitioner};
+use crate::engine::partitioner::{DetHashMap, HashPartitioner, Partitioner, PartitionerDesc};
 use crate::engine::sizable::Sizable;
 
 /// Element bound for distributed collections.
 pub trait Data: Clone + Send + Sync + 'static {}
 impl<T: Clone + Send + Sync + 'static> Data for T {}
+
+/// What kind of operator produced a dataset (lineage classification).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Materialized data (`parallelize`, `from_partitions`, `from_fn`).
+    Source,
+    /// Pipelined one-parent transform (`map`, `filter`, `cache`, ...).
+    Narrow,
+    /// Shuffle boundary (`group_by_key`, `fold_by_key`, `join`, ...).
+    Wide,
+    /// Partition-list concatenation of two parents.
+    Union,
+}
+
+/// One node of a `Dist`'s lineage DAG, as seen by the static analyzer
+/// ([`crate::analyze`]). Every `Dist` constructor records one alongside
+/// the compute closure; the closure stays opaque, the node is the
+/// inspectable shadow: operator identity, the shuffle's stage label and
+/// [`PartitionerDesc`], whether the shuffle key carries the `Ord`-ordered
+/// emission bit-identity depends on, and the owning job scope.
+///
+/// Fields are public (and [`LineageNode`] is `Clone`) so tests can build
+/// deliberately-malformed nodes that the engine's type system would
+/// reject at compile time — e.g. a grouping op without an `Ord` key.
+#[derive(Debug, Clone)]
+pub struct LineageNode {
+    pub kind: OpKind,
+    /// Operator name (`"map"`, `"fold_by_key"`, ...).
+    pub op: &'static str,
+    /// Shuffle stage label for wide ops (what [`StageMetrics`] records).
+    pub label: Option<String>,
+    /// Routing description for wide ops.
+    pub partitioner: Option<PartitionerDesc>,
+    /// Whether the shuffle key is `Ord` — engine wide ops require it at
+    /// compile time, so real lineage always says `true`.
+    pub key_ord: bool,
+    /// Whether the op groups/combines values per key (reduce-side order
+    /// then matters for determinism).
+    pub grouped: bool,
+    /// Job scope the dataset was created in (`0` = adhoc).
+    pub job_id: u64,
+    pub job_name: String,
+    pub num_parts: usize,
+    pub parents: Vec<Arc<LineageNode>>,
+}
+
+impl LineageNode {
+    pub fn source(op: &'static str, job: &JobCtx, num_parts: usize) -> Arc<Self> {
+        Arc::new(Self {
+            kind: OpKind::Source,
+            op,
+            label: None,
+            partitioner: None,
+            key_ord: true,
+            grouped: false,
+            job_id: job.id(),
+            job_name: job.name().to_string(),
+            num_parts,
+            parents: Vec::new(),
+        })
+    }
+
+    pub fn narrow(op: &'static str, parent: &Arc<LineageNode>) -> Arc<Self> {
+        Arc::new(Self {
+            kind: OpKind::Narrow,
+            op,
+            label: None,
+            partitioner: None,
+            key_ord: true,
+            grouped: false,
+            job_id: parent.job_id,
+            job_name: parent.job_name.clone(),
+            num_parts: parent.num_parts,
+            parents: vec![parent.clone()],
+        })
+    }
+
+    // Lineage facts are genuinely this wide; a builder would be ceremony.
+    #[allow(clippy::too_many_arguments)]
+    pub fn wide(
+        op: &'static str,
+        label: &str,
+        partitioner: PartitionerDesc,
+        grouped: bool,
+        job: &JobCtx,
+        num_parts: usize,
+        parents: Vec<Arc<LineageNode>>,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            kind: OpKind::Wide,
+            op,
+            label: Some(label.to_string()),
+            partitioner: Some(partitioner),
+            key_ord: true,
+            grouped,
+            job_id: job.id(),
+            job_name: job.name().to_string(),
+            num_parts,
+            parents,
+        })
+    }
+
+    pub fn union_of(a: &Arc<LineageNode>, b: &Arc<LineageNode>, job: &JobCtx) -> Arc<Self> {
+        Arc::new(Self {
+            kind: OpKind::Union,
+            op: "union",
+            label: None,
+            partitioner: None,
+            key_ord: true,
+            grouped: false,
+            job_id: job.id(),
+            job_name: job.name().to_string(),
+            num_parts: a.num_parts + b.num_parts,
+            parents: vec![a.clone(), b.clone()],
+        })
+    }
+}
 
 struct CtxInner {
     cluster: Cluster,
@@ -173,6 +290,7 @@ impl JobCtx {
             job: self.clone(),
             num_parts: n,
             compute: Arc::new(move |p| src[p].clone()),
+            lineage: LineageNode::source("from_partitions", self, n),
         }
     }
 
@@ -216,11 +334,17 @@ pub struct Dist<T> {
     job: JobCtx,
     num_parts: usize,
     compute: Compute<T>,
+    lineage: Arc<LineageNode>,
 }
 
 impl<T> Clone for Dist<T> {
     fn clone(&self) -> Self {
-        Self { job: self.job.clone(), num_parts: self.num_parts, compute: self.compute.clone() }
+        Self {
+            job: self.job.clone(),
+            num_parts: self.num_parts,
+            compute: self.compute.clone(),
+            lineage: self.lineage.clone(),
+        }
     }
 }
 
@@ -238,6 +362,11 @@ impl<T: Data> Dist<T> {
         &self.job
     }
 
+    /// The dataset's lineage DAG root — what [`crate::analyze`] walks.
+    pub fn lineage(&self) -> &Arc<LineageNode> {
+        &self.lineage
+    }
+
     /// Narrow: element-wise transform, pipelined.
     pub fn map<U: Data>(&self, f: impl Fn(T) -> U + Send + Sync + 'static) -> Dist<U> {
         let parent = self.compute.clone();
@@ -245,6 +374,7 @@ impl<T: Data> Dist<T> {
             job: self.job.clone(),
             num_parts: self.num_parts,
             compute: Arc::new(move |p| parent(p).into_iter().map(&f).collect()),
+            lineage: LineageNode::narrow("map", &self.lineage),
         }
     }
 
@@ -255,6 +385,7 @@ impl<T: Data> Dist<T> {
             job: self.job.clone(),
             num_parts: self.num_parts,
             compute: Arc::new(move |p| parent(p).into_iter().flat_map(&f).collect()),
+            lineage: LineageNode::narrow("flat_map", &self.lineage),
         }
     }
 
@@ -265,6 +396,7 @@ impl<T: Data> Dist<T> {
             job: self.job.clone(),
             num_parts: self.num_parts,
             compute: Arc::new(move |p| parent(p).into_iter().filter(|t| f(t)).collect()),
+            lineage: LineageNode::narrow("filter", &self.lineage),
         }
     }
 
@@ -278,6 +410,7 @@ impl<T: Data> Dist<T> {
             job: self.job.clone(),
             num_parts: self.num_parts,
             compute: Arc::new(move |p| f(parent(p))),
+            lineage: LineageNode::narrow("map_partitions", &self.lineage),
         }
     }
 
@@ -292,17 +425,22 @@ impl<T: Data> Dist<T> {
             job: self.job.clone(),
             num_parts: self.num_parts,
             compute: Arc::new(move |p| f(p, parent(p))),
+            lineage: LineageNode::narrow("map_partitions_indexed", &self.lineage),
         }
     }
 
     /// Build a `Dist` directly from a partition-compute function (used by
-    /// engine-internal operators like `coalesce`).
+    /// engine-internal operators like `coalesce`). The lineage records an
+    /// opaque source — callers with a real upstream should prefer the
+    /// named operators so the analyzer can see through.
     pub fn from_fn(
         job: JobCtx,
         num_parts: usize,
         f: impl Fn(usize) -> Vec<T> + Send + Sync + 'static,
     ) -> Dist<T> {
-        Dist { job, num_parts: num_parts.max(1), compute: Arc::new(f) }
+        let num_parts = num_parts.max(1);
+        let lineage = LineageNode::source("from_fn", &job, num_parts);
+        Dist { job, num_parts, compute: Arc::new(f), lineage }
     }
 
     /// Compute one partition's contents in the calling thread (lineage
@@ -331,6 +469,7 @@ impl<T: Data> Dist<T> {
             job: self.job.clone(),
             num_parts: self.num_parts + other.num_parts,
             compute: Arc::new(move |p| if p < split { left(p) } else { right(p - split) }),
+            lineage: LineageNode::union_of(&self.lineage, &other.lineage, &self.job),
         }
     }
 
@@ -358,7 +497,9 @@ impl<T: Data> Dist<T> {
     /// returns a source-backed `Dist`, so later branches don't recompute.
     pub fn cache(&self, label: &str) -> Dist<T> {
         let parts = self.run_result_stage(label);
-        self.job.from_partitions(parts)
+        let mut d = self.job.from_partitions(parts);
+        d.lineage = LineageNode::narrow("cache", &self.lineage);
+        d
     }
 
     /// Run each partition's pipeline, return per-partition outputs.
@@ -518,12 +659,23 @@ where
 {
     /// Wide: repartition by key without grouping (Spark `partitionBy`).
     pub fn partition_by(&self, label: &str, partitioner: Arc<dyn Partitioner<K>>) -> Dist<(K, V)> {
+        let desc = partitioner.describe();
         let out = self.shuffle_write(label, partitioner);
         let buckets = out.buckets;
+        let n = buckets.len();
         Dist {
             job: self.job.clone(),
-            num_parts: buckets.len(),
+            num_parts: n,
             compute: Arc::new(move |p| buckets[p].clone()),
+            lineage: LineageNode::wide(
+                "partition_by",
+                label,
+                desc,
+                false,
+                &self.job,
+                n,
+                vec![self.lineage.clone()],
+            ),
         }
     }
 
@@ -540,11 +692,13 @@ where
         label: &str,
         partitioner: Arc<dyn Partitioner<K>>,
     ) -> Dist<(K, Vec<V>)> {
+        let desc = partitioner.describe();
         let out = self.shuffle_write(label, partitioner);
         let buckets = out.buckets;
+        let n = buckets.len();
         Dist {
             job: self.job.clone(),
-            num_parts: buckets.len(),
+            num_parts: n,
             compute: Arc::new(move |p| {
                 let mut groups: DetHashMap<K, Vec<V>> = Default::default();
                 for (k, v) in buckets[p].iter().cloned() {
@@ -554,6 +708,15 @@ where
                 out.sort_by(|a, b| a.0.cmp(&b.0));
                 out
             }),
+            lineage: LineageNode::wide(
+                "group_by_key",
+                label,
+                desc,
+                true,
+                &self.job,
+                n,
+                vec![self.lineage.clone()],
+            ),
         }
     }
 
@@ -601,11 +764,22 @@ where
         merge: impl Fn(A, V) -> A + Send + Sync + 'static,
         combine: impl Fn(A, A) -> A + Send + Sync + 'static,
     ) -> Dist<(K, A)> {
+        let desc = partitioner.describe();
         let out = self.shuffle_write_folded(label, partitioner, Arc::new(lift), Arc::new(merge));
         let buckets = out.buckets;
+        let n = buckets.len();
         Dist {
             job: self.job.clone(),
-            num_parts: buckets.len(),
+            num_parts: n,
+            lineage: LineageNode::wide(
+                "fold_by_key",
+                label,
+                desc,
+                true,
+                &self.job,
+                n,
+                vec![self.lineage.clone()],
+            ),
             compute: Arc::new(move |p| {
                 let mut acc: DetHashMap<K, A> = Default::default();
                 for (k, a) in buckets[p].iter().cloned() {
@@ -635,12 +809,23 @@ where
     ) -> Dist<(K, (V, W))> {
         assert_eq!(self.job.id(), other.job.id(), "join across job scopes");
         let partitioner: Arc<dyn Partitioner<K>> = Arc::new(HashPartitioner::new(parts));
+        let desc = partitioner.describe();
         let left = self.shuffle_write(&format!("{label}/left"), partitioner.clone());
         let right = other.shuffle_write(&format!("{label}/right"), partitioner);
         let (lb, rb) = (left.buckets, right.buckets);
+        let n = lb.len();
         Dist {
             job: self.job.clone(),
-            num_parts: lb.len(),
+            num_parts: n,
+            lineage: LineageNode::wide(
+                "join",
+                label,
+                desc,
+                true,
+                &self.job,
+                n,
+                vec![self.lineage.clone(), other.lineage.clone()],
+            ),
             compute: Arc::new(move |p| {
                 let mut lmap: DetHashMap<K, Vec<V>> = Default::default();
                 for (k, v) in lb[p].iter().cloned() {
@@ -680,12 +865,23 @@ where
         partitioner: Arc<dyn Partitioner<K>>,
     ) -> Dist<(K, (Vec<V>, Vec<W>))> {
         assert_eq!(self.job.id(), other.job.id(), "cogroup across job scopes");
+        let desc = partitioner.describe();
         let left = self.shuffle_write(&format!("{label}/left"), partitioner.clone());
         let right = other.shuffle_write(&format!("{label}/right"), partitioner);
         let (lb, rb) = (left.buckets, right.buckets);
+        let n = lb.len();
         Dist {
             job: self.job.clone(),
-            num_parts: lb.len(),
+            num_parts: n,
+            lineage: LineageNode::wide(
+                "cogroup",
+                label,
+                desc,
+                true,
+                &self.job,
+                n,
+                vec![self.lineage.clone(), other.lineage.clone()],
+            ),
             compute: Arc::new(move |p| {
                 let mut groups: DetHashMap<K, (Vec<V>, Vec<W>)> = Default::default();
                 for (k, v) in lb[p].iter().cloned() {
@@ -1065,6 +1261,28 @@ mod tests {
         assert_eq!(d.job().id(), 0);
         d.collect("adhoc-collect");
         assert_eq!(ctx.adhoc_job().stages().len(), 1);
+    }
+
+    #[test]
+    fn lineage_records_ops_and_partitioners() {
+        let ctx = ctx();
+        let job = ctx.run_job("lineage");
+        let d = job
+            .parallelize((0u32..20).map(|i| (i % 4, i)).collect::<Vec<_>>(), 4)
+            .map(|(k, v)| (k, v * 2))
+            .group_by_key("gbk", 2);
+        let root = d.lineage();
+        assert_eq!(root.kind, OpKind::Wide);
+        assert_eq!(root.op, "group_by_key");
+        assert_eq!(root.label.as_deref(), Some("gbk"));
+        let p = root.partitioner.as_ref().unwrap();
+        assert_eq!(p.name, "hash");
+        assert_eq!(p.parts, 2);
+        assert!(root.key_ord && root.grouped);
+        assert_eq!(root.job_id, job.id());
+        assert_eq!(root.parents.len(), 1);
+        assert_eq!(root.parents[0].op, "map");
+        assert_eq!(root.parents[0].parents[0].kind, OpKind::Source);
     }
 
     #[test]

@@ -34,8 +34,10 @@ pub mod sizable;
 
 pub use block::{Block, Side, Tag};
 pub use cluster::{Cluster, ClusterConfig, FailureSpec, SchedulerPolicy};
-pub use dist::{Dist, JobCtx, SparkContext};
+pub use dist::{Dist, JobCtx, LineageNode, OpKind, SparkContext};
 pub use ops::sum_block_grids;
 pub use metrics::{JobMetrics, JobScope, MetricsRegistry, StageMetrics};
-pub use partitioner::{det_partition, GridPartitioner, HashPartitioner, Partitioner};
+pub use partitioner::{
+    det_partition, Alignment, GridPartitioner, HashPartitioner, Partitioner, PartitionerDesc,
+};
 pub use sizable::Sizable;

@@ -15,10 +15,43 @@ pub type DetHasher = BuildHasherDefault<std::collections::hash_map::DefaultHashe
 /// Deterministic hash map/set aliases used across sparklet.
 pub type DetHashMap<K, V> = std::collections::HashMap<K, V, DetHasher>;
 
+/// How a partitioner routes keys, as seen by the static analyzer.
+///
+/// A divide/combine grouping stage needs `Grouped(_)`: every record that
+/// shares the stage's group key must land in the same partition *and* the
+/// routing must ignore the parts of the key that vary within a group —
+/// otherwise map-side combining degrades to a full shuffle (DESIGN.md S19).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Alignment {
+    /// Plain `hash(whole key) mod parts` — co-locates equal keys only.
+    KeyHash,
+    /// Routes by a coarser group identity (named for diagnostics), so all
+    /// members of a group are co-located before the shuffle.
+    Grouped(&'static str),
+    /// Routing the analyzer cannot reason about (custom closures, tests).
+    Opaque,
+}
+
+/// Analyzer-facing description of a partitioner: identity, fan-out, and
+/// the [`Alignment`] contract its routing provides.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartitionerDesc {
+    pub name: &'static str,
+    pub parts: usize,
+    pub alignment: Alignment,
+}
+
 /// Routes keys to `[0, num_partitions)`.
 pub trait Partitioner<K>: Send + Sync {
     fn num_partitions(&self) -> usize;
     fn partition(&self, key: &K) -> usize;
+
+    /// Self-description for the static analyzer ([`crate::analyze`]).
+    /// Defaults to `Opaque` so ad-hoc/test partitioners stay honest.
+    fn describe(&self) -> PartitionerDesc {
+        let parts = self.num_partitions();
+        PartitionerDesc { name: "custom", parts, alignment: Alignment::Opaque }
+    }
 }
 
 /// Deterministic `hash(key) mod parts` routing — the shared primitive
@@ -50,6 +83,10 @@ impl<K: Hash> Partitioner<K> for HashPartitioner {
 
     fn partition(&self, key: &K) -> usize {
         det_partition(key, self.parts)
+    }
+
+    fn describe(&self) -> PartitionerDesc {
+        PartitionerDesc { name: "hash", parts: self.parts, alignment: Alignment::KeyHash }
     }
 }
 
@@ -91,6 +128,14 @@ impl Partitioner<(u32, u32)> for GridPartitioner {
         let rr = r / self.region;
         let cc = c / self.region;
         rr * self.regions_per_side() + cc
+    }
+
+    fn describe(&self) -> PartitionerDesc {
+        PartitionerDesc {
+            name: "grid",
+            parts: Partitioner::<(u32, u32)>::num_partitions(self),
+            alignment: Alignment::Grouped("grid-region"),
+        }
     }
 }
 
@@ -145,6 +190,28 @@ mod tests {
         // 2x2 regions: (0,0) and (1,1) share a region; (0,0) and (3,3) don't.
         assert_eq!(g.partition(&(0, 0)), g.partition(&(1, 1)));
         assert_ne!(g.partition(&(0, 0)), g.partition(&(3, 3)));
+    }
+
+    #[test]
+    fn describe_reports_alignment() {
+        let h = HashPartitioner::new(4);
+        assert_eq!(
+            Partitioner::<u64>::describe(&h),
+            PartitionerDesc { name: "hash", parts: 4, alignment: Alignment::KeyHash }
+        );
+        let g = GridPartitioner::new(4, 4);
+        assert_eq!(g.describe().alignment, Alignment::Grouped("grid-region"));
+
+        struct Custom;
+        impl Partitioner<u64> for Custom {
+            fn num_partitions(&self) -> usize {
+                3
+            }
+            fn partition(&self, _key: &u64) -> usize {
+                0
+            }
+        }
+        assert_eq!(Custom.describe().alignment, Alignment::Opaque);
     }
 
     #[test]

@@ -59,6 +59,11 @@ pub enum StarkError {
     SessionMismatch,
     /// Building or calling the leaf backend failed.
     Backend(String),
+    /// The static analyzer ([`crate::analyze`]) found error-severity
+    /// diagnostics in a plan before execution (debug builds and
+    /// `StarkConfig::strict_analyze` sessions). The payload is the
+    /// rendered diagnostic list, one `STARK-Axxx` finding per line.
+    PlanRejected(String),
 }
 
 impl StarkError {
@@ -111,6 +116,9 @@ impl std::fmt::Display for StarkError {
                  multiply operands must come from one session"
             ),
             StarkError::Backend(msg) => write!(f, "leaf backend error: {msg}"),
+            StarkError::PlanRejected(diags) => {
+                write!(f, "plan rejected by static analysis:\n{diags}")
+            }
         }
     }
 }

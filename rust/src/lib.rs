@@ -71,6 +71,9 @@
 //!   kernels (`artifacts/*.hlo.txt`), plus the native fallback backend.
 //! - [`cost`] — the §IV analytic cost model (Tables I–III) and the
 //!   [`cost::Planner`] that puts it to work.
+//! - [`analyze`] — static lineage/plan analyzer: typed `STARK-Axxx`
+//!   diagnostics for tag, alignment, determinism, job-scope and
+//!   stage-ledger invariants, checked before anything executes.
 //! - [`serve`] — the session exposed as a TCP job queue
 //!   (`submit`/`wait`/`plan`/…).
 //! - [`config`] — experiment/run configuration shared by the CLI,
@@ -80,6 +83,7 @@
 //! the reproduction of every table and figure.
 
 pub mod algos;
+pub mod analyze;
 pub mod api;
 pub mod config;
 pub mod cost;
@@ -91,6 +95,7 @@ pub mod runtime;
 pub mod serve;
 pub mod util;
 
+pub use analyze::{Diagnostic, Severity};
 pub use api::{
     DistExpr, DistMatrix, ExprPlan, ExprReport, IntoExpr, MultiplyBuilder, MultiplyReport,
     SessionBuilder, StarkSession,

@@ -28,7 +28,7 @@ use stark::util::table::{fmt_bytes, Table};
 const USAGE: &str = "\
 stark — distributed Strassen matrix multiplication (Stark reproduction)
 
-USAGE: stark <multiply|plan|compare|sweep|stages|scalability|cost|serve|serve-smoke|request|info> [flags]
+USAGE: stark <multiply|plan|analyze|compare|sweep|stages|scalability|cost|serve|serve-smoke|request|info> [flags]
 
   multiply with files:  --input-a a.csv --input-b b.csv [--output c.smx]
                         (.smx = binary, anything else = text CSV; any
@@ -37,6 +37,11 @@ USAGE: stark <multiply|plan|compare|sweep|stages|scalability|cost|serve|serve-sm
                         --n (and optionally a fixed --algorithm/--splits)
                         without running it [--calibration cal.json]
   cost:                 print the §IV analytic cost tables for --n/--b
+  analyze:              static plan analysis without executing anything:
+                        [--expr '<json>' | --expr @expr.json] dry-runs
+                        the expression plan (same JSON as request), else
+                        the single multiply from --n/--algo/--b; prints
+                        STARK-Axxx diagnostics, exits non-zero on any
   serve:                --addr 127.0.0.1:7878  (newline-JSON job queue:
                         submit/status/wait/jobs/multiply/plan/ping/
                         shutdown) [--max-jobs 8] [--runners 2]
@@ -69,6 +74,8 @@ FLAGS (shared):
   --isolate-multiply   leaf multiplication in its own stage
   --no-map-side-combine  (stark) group-by-key baseline instead of the
                        map-side signed fold (shuffle-volume comparisons)
+  --strict-analyze     run the static plan analyzer before executing
+                       even in release builds (debug always runs it)
   --scheduler <p>      fair | fifo task scheduling across concurrent
                        jobs on the simulated cluster        [fair]
   --max-concurrent-jobs <int>  fair-scheduler rotation width [4]
@@ -111,6 +118,7 @@ fn run_config(args: &Args) -> RunConfig {
         fused_leaf: args.flag("fused-leaf"),
         isolate_multiply: args.flag("isolate-multiply"),
         map_side_combine: !args.flag("no-map-side-combine"),
+        strict_analyze: args.flag("strict-analyze"),
         real_net_sleep: args.flag("real-net-sleep"),
         scheduler: args.get("scheduler", stark::engine::SchedulerPolicy::Fair),
         max_concurrent_jobs: args.get("max-concurrent-jobs", 4),
@@ -162,6 +170,7 @@ fn main() -> Result<()> {
         Some("stages") => cmd_stages(&args),
         Some("scalability") => cmd_scalability(&args),
         Some("cost") => cmd_cost(&args),
+        Some("analyze") => cmd_analyze(&args),
         Some("serve") => cmd_serve(&args),
         Some("serve-smoke") => cmd_serve_smoke(&args),
         Some("request") => cmd_request(&args),
@@ -376,6 +385,46 @@ fn cmd_cost(args: &Args) -> Result<()> {
     }
     println!("stark stage count (eq. 25): {}", stark::cost::stark_stage_count(b));
     Ok(())
+}
+
+/// Static plan analysis (DESIGN.md S19): build the plan the request
+/// would run — an expression chain plan for --expr, otherwise the
+/// single-multiply planner resolution for --n/--algo/--b — and report
+/// `STARK-Axxx` diagnostics without executing anything. Exits non-zero
+/// on any finding so CI can gate on a clean analyze.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let cfg = run_config(args);
+    let session = session_for(&cfg)?;
+    let diags = if let Some(raw) = args.raw("expr") {
+        let text = match raw.strip_prefix('@') {
+            Some(path) => std::fs::read_to_string(path)?,
+            None => raw.to_string(),
+        };
+        let tree = stark::util::json::parse(text.trim())
+            .map_err(|e| anyhow::anyhow!("--expr is not valid JSON: {e}"))?;
+        let expr = stark::serve::expr_from_json(&session, &tree)?;
+        let plan = expr.plan()?;
+        println!(
+            "expression {} — {} multiply node(s), predicted wall {:.2} ms",
+            plan.expression,
+            plan.multiplies.len(),
+            plan.predicted_wall_ms
+        );
+        stark::analyze::analyze_plan(&plan)
+    } else {
+        let plan = session.plan_for(cfg.algo, cfg.splits, cfg.n)?;
+        println!("plan: {} b={} n={}", plan.algorithm, plan.b, plan.n);
+        stark::analyze::analyze_node_plan("", &plan)
+    };
+    if diags.is_empty() {
+        println!("analyze: clean — no diagnostics");
+        return Ok(());
+    }
+    for d in &diags {
+        println!("{d}");
+    }
+    eprintln!("analyze: {} diagnostic(s) found", diags.len());
+    std::process::exit(1);
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

@@ -236,6 +236,7 @@ fn micro_kernel(kc: usize, ap: &[f64], bp: &[f64], acc: &mut [[f64; NR]; MR]) {
 
 /// Sweep the packed panels over one `mc × nc` block of C (C tile
 /// read-modify-write keeps ascending-`k` accumulation per element).
+// BLIS-style tiling coordinates; bundling them would cost a hot-loop indirection.
 #[allow(clippy::too_many_arguments)]
 fn macro_kernel(
     c: &mut [f64],

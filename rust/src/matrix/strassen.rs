@@ -94,6 +94,7 @@ fn m_pairs<'a>(
 /// the fused leaf paths (`strassen_leaf_fused`, the native backend) feed
 /// these straight into the packing loops; [`m_operands`] materializes
 /// them for backends that need owned matrices.
+// The 8 quadrants are the paper's fixed arity, not an API smell.
 #[allow(clippy::too_many_arguments)]
 pub fn m_operand_terms<'a>(
     a11: &'a DenseMatrix, a12: &'a DenseMatrix, a21: &'a DenseMatrix, a22: &'a DenseMatrix,
@@ -109,7 +110,7 @@ pub fn m_operand_terms<'a>(
 /// Materialized form of [`m_operand_terms`] — owned `(lhs, rhs)` operand
 /// matrices for consumers that cannot pack fused (the composed
 /// `LeafBackend::strassen_leaf` default, tests).
-#[allow(clippy::too_many_arguments)]
+#[allow(clippy::too_many_arguments)] // same fixed 8-quadrant arity as m_operand_terms
 pub fn m_operands(
     a11: &DenseMatrix, a12: &DenseMatrix, a21: &DenseMatrix, a22: &DenseMatrix,
     b11: &DenseMatrix, b12: &DenseMatrix, b21: &DenseMatrix, b22: &DenseMatrix,

@@ -506,13 +506,28 @@ fn fail_queued(jobs: &mut Jobs) {
 /// Queued/running jobs are never evicted; a waiter that sleeps through
 /// the whole retention window gets a loud "unknown job id".
 fn finish_job(jobs: &mut Jobs, id: u64, status: JobStatus) {
+    finish_job_with(jobs, id, status, MAX_FINISHED_JOBS);
+}
+
+/// [`finish_job`] with the retention bound as a parameter, so the
+/// `--cfg loom` model can drive the REAL completion path with a small
+/// window instead of permuting 64-element queues.
+fn finish_job_with(jobs: &mut Jobs, id: u64, status: JobStatus, max: usize) {
     if let Some(e) = jobs.entries.get_mut(&id) {
         e.status = status;
         e.spec = None;
     }
     jobs.inflight = jobs.inflight.saturating_sub(1);
     jobs.finished_order.push_back(id);
-    while jobs.finished_order.len() > MAX_FINISHED_JOBS {
+    evict_finished(jobs, max);
+}
+
+/// Eviction policy, split out with the retention bound as a parameter
+/// so the `--cfg loom` model can exhaustively check it with a small
+/// window: keep exactly the last `max` finished ids (completion order),
+/// drop the entries of everything that rolled off.
+fn evict_finished(jobs: &mut Jobs, max: usize) {
+    while jobs.finished_order.len() > max {
         if let Some(oldest) = jobs.finished_order.pop_front() {
             jobs.entries.remove(&oldest);
         }
@@ -754,6 +769,14 @@ fn parse_expr(
     )
 }
 
+/// Parse the serve protocol's expression-tree JSON into a [`DistExpr`]
+/// against `session`, under the same leaf/depth budgets a submitted
+/// request gets — the `stark analyze` CLI shares serve's grammar.
+pub fn expr_from_json(session: &StarkSession, tree: &Value) -> Result<DistExpr> {
+    let mut budget = LeafBudget::new();
+    parse_expr(session, tree, 0, &mut budget)
+}
+
 /// Parse and validate a submit/multiply request into a [`JobSpec`] —
 /// every invariant the session checks at run time is dry-run here (a
 /// planner resolution or expression plan), so malformed requests are
@@ -766,6 +789,16 @@ fn parse_spec(session: &StarkSession, req: &Value, default_splits: Splits) -> Re
         // Dry-run the whole chain plan: shape/session/split errors and
         // every node's padded grid surface now, not in the runner.
         let plan = expr.plan().map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        // Static dry-run (DESIGN.md S19): reject malformed plans at
+        // submit time, before the runner allocates anything.
+        if cfg!(debug_assertions) || session.stark_config().strict_analyze {
+            let diags = crate::analyze::analyze_plan(&plan);
+            anyhow::ensure!(
+                !crate::analyze::has_errors(&diags),
+                "plan rejected by static analysis:\n{}",
+                crate::analyze::render(&diags)
+            );
+        }
         for np in &plan.multiplies {
             anyhow::ensure!(
                 np.plan.n <= MAX_SUBMIT_N,
@@ -819,6 +852,14 @@ fn parse_spec(session: &StarkSession, req: &Value, default_splits: Splits) -> Re
         "workload too large: padded size {} exceeds the server cap {MAX_SUBMIT_N}",
         plan.n
     );
+    if cfg!(debug_assertions) || session.stark_config().strict_analyze {
+        let diags = crate::analyze::analyze_node_plan("", &plan);
+        anyhow::ensure!(
+            !crate::analyze::has_errors(&diags),
+            "plan rejected by static analysis:\n{}",
+            crate::analyze::render(&diags)
+        );
+    }
     Ok(JobSpec {
         payload: JobPayload::Multiply { algo, splits, a: Arc::new(a), b_mat: Arc::new(b_mat) },
         return_c,
@@ -1114,6 +1155,111 @@ pub fn request(addr: &str, body: &Value) -> Result<Value> {
     let mut line = String::new();
     reader.read_line(&mut line)?;
     json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+}
+
+/// Concurrency model for the job table's completion-order eviction,
+/// compiled only under `RUSTFLAGS="--cfg loom" cargo test`. `Jobs` is
+/// only ever mutated inside [`JobTable::state`]'s single mutex, so any
+/// real execution of racing runner threads equals SOME sequential merge
+/// of their `finish_job` critical sections — enumerating every merge of
+/// the per-thread completion sequences is therefore an exhaustive
+/// interleaving model for this lock discipline (see the matching module
+/// in `engine/cluster.rs` for the full argument).
+#[cfg(all(test, loom))]
+mod loom_model {
+    use super::*;
+
+    fn table_with_running(ids: &[u64]) -> Jobs {
+        let mut jobs = Jobs {
+            seq: 0,
+            entries: BTreeMap::new(),
+            queue: VecDeque::new(),
+            finished_order: VecDeque::new(),
+            inflight: ids.len(),
+            accepting: true,
+        };
+        for &id in ids {
+            jobs.entries.insert(
+                id,
+                JobEntry { name: format!("j{id}"), status: JobStatus::Running, spec: None },
+            );
+        }
+        jobs
+    }
+
+    /// Retained finished entries must be EXACTLY the last `max` ids in
+    /// completion order, whatever order racing runners finish jobs in.
+    fn assert_eviction_invariant(jobs: &Jobs, completed: &[u64], max: usize) {
+        let expect: Vec<u64> = completed[completed.len().saturating_sub(max)..].to_vec();
+        let got: Vec<u64> = jobs.finished_order.iter().copied().collect();
+        assert_eq!(got, expect, "retention window diverged from completion order");
+        for id in completed {
+            assert_eq!(
+                jobs.entries.contains_key(id),
+                expect.contains(id),
+                "entry {id} retention disagrees with the completion-order window"
+            );
+        }
+        assert_eq!(jobs.inflight, 0, "every completion must release one admission slot");
+    }
+
+    #[test]
+    fn eviction_keeps_last_max_under_all_completion_interleavings() {
+        // Two runner threads each own three jobs and finish them in
+        // program order; every merge of the two sequences is a distinct
+        // global completion order. Window max=2 forces eviction on all
+        // but the first two completions of every merge.
+        let thread_a = [1u64, 2, 3];
+        let thread_b = [10u64, 20, 30];
+        let max = 2usize;
+        let mut count = 0usize;
+        fn recurse(a: &[u64], b: &[u64], order: &mut Vec<u64>, max: usize, count: &mut usize) {
+            if a.is_empty() && b.is_empty() {
+                *count += 1;
+                let all: Vec<u64> = order.clone();
+                let mut jobs = table_with_running(&all);
+                for &id in order.iter() {
+                    finish_job_with(&mut jobs, id, JobStatus::Done, max);
+                }
+                assert_eviction_invariant(&jobs, &all, max);
+                return;
+            }
+            if let Some((&first, rest)) = a.split_first() {
+                order.push(first);
+                recurse(rest, b, order, max, count);
+                order.pop();
+            }
+            if let Some((&first, rest)) = b.split_first() {
+                order.push(first);
+                recurse(a, rest, order, max, count);
+                order.pop();
+            }
+        }
+        recurse(&thread_a, &thread_b, &mut Vec::new(), max, &mut count);
+        // C(6,3) = 20 merges of two 3-job runners.
+        assert_eq!(count, 20, "interleaving enumeration is not exhaustive");
+    }
+
+    /// Queued (never-finished) jobs must survive any amount of churn.
+    #[test]
+    fn queued_jobs_survive_eviction_in_every_interleaving() {
+        for max in 1..=3usize {
+            let mut jobs = table_with_running(&[99]);
+            jobs.queue.push_back(99);
+            for id in 1..=8u64 {
+                jobs.entries.insert(
+                    id,
+                    JobEntry { name: format!("j{id}"), status: JobStatus::Running, spec: None },
+                );
+                finish_job_with(&mut jobs, id, JobStatus::Done, max);
+                assert!(
+                    jobs.entries.contains_key(&99),
+                    "queued job evicted at max={max} after {id} completions"
+                );
+                assert!(jobs.finished_order.len() <= max);
+            }
+        }
+    }
 }
 
 #[cfg(test)]

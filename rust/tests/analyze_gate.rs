@@ -1,0 +1,94 @@
+//! Tier-1: the static analyzer (DESIGN.md S19) as a gate.
+//!
+//! Positive direction: every plan the repo actually ships — stark,
+//! marlin and mllib at b ∈ {2, 4, 8} plus the acceptance expression
+//! `(A·B+C)·Dᵀ` — must analyze CLEAN, because the debug-build hooks in
+//! `DistExpr::collect` and serve's submit path reject any plan with an
+//! error-severity finding (so a regression here would also break every
+//! other tier-1 test that collects an expression).
+//!
+//! Negative direction: real engine pipelines with seeded violations
+//! must produce exactly the pinned `STARK-Axxx` code (the hand-built
+//! lineage/tag negatives live in `src/analyze/mod.rs` unit tests).
+
+use std::sync::Arc;
+
+use stark::algos::Algorithm;
+use stark::analyze;
+use stark::api::StarkSession;
+use stark::config::BackendKind;
+use stark::cost::Splits;
+use stark::engine::{ClusterConfig, HashPartitioner, SparkContext};
+use stark::matrix::DenseMatrix;
+
+fn session() -> StarkSession {
+    StarkSession::builder()
+        .cluster(ClusterConfig::new(2, 2))
+        .backend_kind(BackendKind::Packed)
+        .build()
+        .expect("test session")
+}
+
+#[test]
+fn shipped_plans_analyze_clean() {
+    let s = session();
+    for algo in [Algorithm::Stark, Algorithm::Marlin, Algorithm::Mllib] {
+        for b in [2usize, 4, 8] {
+            let plan = s.plan_for(algo, Splits::Fixed(b), 64 * b).expect("plan");
+            let diags = analyze::analyze_node_plan("", &plan);
+            assert!(diags.is_empty(), "{algo} b={b}: {}", analyze::render(&diags));
+        }
+    }
+}
+
+#[test]
+fn acceptance_expression_analyzes_clean_and_collects() {
+    let s = session();
+    let a = s.matrix(&DenseMatrix::random(32, 32, 21));
+    let b = s.matrix(&DenseMatrix::random(32, 32, 22));
+    let c = s.matrix(&DenseMatrix::random(32, 32, 23));
+    let d = s.matrix(&DenseMatrix::random(32, 32, 24));
+    let e = a.multiply(&b).add(&c).multiply(&d.transpose());
+    let plan = e.plan().expect("plan");
+    assert_eq!(plan.expression, "(A·B+C)·Dᵀ");
+    let diags = analyze::analyze_plan(&plan);
+    assert!(diags.is_empty(), "{}", analyze::render(&diags));
+    // Debug builds run the analyzer inside collect(); success here means
+    // the real submit-time gate passed too.
+    e.collect().expect("acceptance expression must clear the analyze gate");
+}
+
+#[test]
+fn engine_lineage_of_a_well_labeled_fold_is_clean() {
+    let ctx = SparkContext::new(ClusterConfig::new(2, 1));
+    let folded = ctx
+        .parallelize((0u64..32).map(|i| (i % 4, i)).collect(), 4)
+        .fold_by_key_with("sum", Arc::new(HashPartitioner::new(2)), |v| v, |a, v| a + v, |a, b| {
+            a + b
+        });
+    let diags = analyze::analyze_lineage(folded.lineage());
+    assert!(diags.is_empty(), "{}", analyze::render(&diags));
+}
+
+#[test]
+fn engine_fold_mislabeled_as_divide_stage_is_a003() {
+    // A grouping shuffle that claims to be a divide stage but routes by
+    // plain key hash: the analyzer must flag it (warning severity — it
+    // is a performance defect, not a correctness one, so it reports
+    // without rejecting).
+    let ctx = SparkContext::new(ClusterConfig::new(2, 1));
+    let folded = ctx
+        .parallelize((0u64..32).map(|i| (i % 4, i)).collect(), 4)
+        .fold_by_key_with(
+            "divide/L0",
+            Arc::new(HashPartitioner::new(2)),
+            |v| v,
+            |a, v| a + v,
+            |a, b| a + b,
+        );
+    let diags = analyze::analyze_lineage(folded.lineage());
+    assert_eq!(diags.len(), 1, "{}", analyze::render(&diags));
+    assert_eq!(diags[0].code, analyze::MISALIGNED_PARTITIONER);
+    assert_eq!(diags[0].severity, stark::Severity::Warning);
+    assert!(!analyze::has_errors(&diags));
+}

@@ -33,6 +33,7 @@ fn prop_stark_matches_reference_for_arbitrary_inputs() {
             fused_leaf: rng.next_f64() < 0.5,
             isolate_multiply: rng.next_f64() < 0.5,
             map_side_combine: rng.next_f64() < 0.75,
+            ..Default::default()
         };
         let out = stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &bm, b, &cfg)
             .unwrap();
