@@ -373,15 +373,37 @@ pub trait MultiplyAlgorithm: Send + Sync {
         a: &BlockSplits,
         b: &BlockSplits,
     ) -> Result<MultiplyOutput, StarkError> {
+        self.multiply_splits_with(ctx, backend, a, b, None)
+    }
+
+    /// [`multiply_splits`](Self::multiply_splits) with an optional job
+    /// deadline. Stage failures inside the engine (retry budget
+    /// exhausted, deadline expired) surface as typed
+    /// [`StarkError::TaskFailed`] / [`StarkError::JobTimedOut`] instead
+    /// of panicking the caller.
+    fn multiply_splits_with(
+        &self,
+        ctx: &SparkContext,
+        backend: Arc<dyn LeafBackend>,
+        a: &BlockSplits,
+        b: &BlockSplits,
+        deadline_ms: Option<u64>,
+    ) -> Result<MultiplyOutput, StarkError> {
         BlockSplits::check_pair(a, b)?;
         let (n, bb) = (a.n(), a.b());
         self.validate(n, bb)?;
         let timing = TimingBackend::new(backend);
-        let job = ctx.run_job(&format!("{} n={n} b={bb}", self.algorithm()));
-        let da = self.distribute(&job, a, Side::A);
-        let db = self.distribute(&job, b, Side::B);
-        let product = self.multiply_dist(&timing, da, db, n, bb, "")?;
-        let c = collect_product(&product, bb, n / bb);
+        let name = format!("{} n={n} b={bb}", self.algorithm());
+        let job = ctx.run_job(&name);
+        if let Some(ms) = deadline_ms {
+            job.set_deadline_ms(ms);
+        }
+        let c = run_with_recovery(&name, deadline_ms, || {
+            let da = self.distribute(&job, a, Side::A);
+            let db = self.distribute(&job, b, Side::B);
+            let product = self.multiply_dist(&timing, da, db, n, bb, "")?;
+            Ok(collect_product(&product, bb, n / bb))
+        })?;
         let job = job.finish();
         Ok(MultiplyOutput { c, job, leaf_ms: timing.leaf_ms(), leaf_calls: timing.calls() })
     }
@@ -419,6 +441,35 @@ pub fn collect_product(product: &Dist<Block>, b: usize, block_size: usize) -> De
         })
         .collect();
     assemble(b, block_size, pairs)
+}
+
+/// Run a job body, converting engine-level [`StageFailure`] panics (the
+/// typed payload `try_run_stage` throws through the infallible
+/// combinator signatures) into [`StarkError`]s. `DeadlineExceeded`
+/// becomes [`StarkError::JobTimedOut`] carrying the job's name and
+/// deadline — context the engine layer doesn't have. Any other panic
+/// (a genuine bug) resumes unwinding untouched.
+pub fn run_with_recovery<T>(
+    job_name: &str,
+    deadline_ms: Option<u64>,
+    body: impl FnOnce() -> Result<T, StarkError>,
+) -> Result<T, StarkError> {
+    use crate::engine::StageFailure;
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(body)) {
+        Ok(res) => res,
+        Err(payload) => match payload.downcast::<StageFailure>() {
+            Ok(failure) => Err(match *failure {
+                StageFailure::TaskFailed { stage, partition, attempts, reason } => {
+                    StarkError::TaskFailed { stage, partition, attempts, reason }
+                }
+                StageFailure::DeadlineExceeded { .. } => StarkError::JobTimedOut {
+                    job: job_name.to_string(),
+                    deadline_ms: deadline_ms.unwrap_or(0),
+                },
+            }),
+            Err(other) => std::panic::resume_unwind(other),
+        },
+    }
 }
 
 /// Construct the [`MultiplyAlgorithm`] for a *concrete* `algo`,

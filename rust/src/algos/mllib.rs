@@ -93,6 +93,9 @@ impl MultiplyAlgorithm for Mllib {
             combined_records: 0,
             pf: 1,
             retries: 0,
+            attempts: 1,
+            recomputed_partitions: 0,
+            speculative_wins: 0,
         });
 
         let bb = b as u32;

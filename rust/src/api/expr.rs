@@ -259,6 +259,14 @@ impl DistExpr {
     /// Run the expression as **one job**: plan, execute every node over
     /// distributed block RDDs, collect once, crop to the logical shape.
     pub fn collect(&self) -> Result<ExprReport, StarkError> {
+        self.collect_with(None)
+    }
+
+    /// [`collect`](Self::collect) with an optional job deadline in
+    /// milliseconds. Engine-level stage failures (retry budget
+    /// exhausted, deadline expired) come back as typed
+    /// [`StarkError::TaskFailed`] / [`StarkError::JobTimedOut`].
+    pub fn collect_with(&self, deadline_ms: Option<u64>) -> Result<ExprReport, StarkError> {
         let planned = Planned::build(self)?;
         // Static dry-run (DESIGN.md S19): always in debug builds, opt-in
         // for release sessions. Error-severity findings reject the plan
@@ -270,10 +278,11 @@ impl DistExpr {
             }
         }
         let timing = TimingBackend::new(self.session.backend());
-        let job = self
-            .session
-            .context()
-            .run_job(&format!("expr {}", truncate(&planned.plan.expression, 60)));
+        let name = format!("expr {}", truncate(&planned.plan.expression, 60));
+        let job = self.session.context().run_job(&name);
+        if let Some(ms) = deadline_ms {
+            job.set_deadline_ms(ms);
+        }
         let mut exec = Exec {
             session: &self.session,
             job,
@@ -283,8 +292,10 @@ impl DistExpr {
             regrid_count: 0,
         };
         let (s, b) = natural_grid(&planned.root, self.session.planner());
-        let blocks = exec.eval(&planned.root, s, b)?;
-        let mut c = collect_product(&blocks.retag_product(), b, s / b);
+        let mut c = crate::algos::common::run_with_recovery(&name, deadline_ms, || {
+            let blocks = exec.eval(&planned.root, s, b)?;
+            Ok(collect_product(&blocks.retag_product(), b, s / b))
+        })?;
         if (self.rows, self.cols) != (s, s) {
             c = c.submatrix(0, 0, self.rows, self.cols);
         }

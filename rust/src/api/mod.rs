@@ -275,6 +275,7 @@ impl DistMatrix {
             b: other.clone(),
             algorithm: Algorithm::Auto,
             splits: Splits::Auto,
+            deadline_ms: None,
         }
     }
 
@@ -312,6 +313,7 @@ pub struct MultiplyBuilder {
     b: DistMatrix,
     algorithm: Algorithm,
     splits: Splits,
+    deadline_ms: Option<u64>,
 }
 
 impl MultiplyBuilder {
@@ -324,6 +326,14 @@ impl MultiplyBuilder {
     /// Pin the split count (default [`Splits::Auto`]).
     pub fn splits(mut self, splits: Splits) -> Self {
         self.splits = splits;
+        self
+    }
+
+    /// Abandon the job if it has not finished within `ms` milliseconds:
+    /// `collect()` returns [`StarkError::JobTimedOut`], queued tasks are
+    /// freed, and the session keeps serving other jobs (DESIGN.md S20).
+    pub fn deadline(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
         self
     }
 
@@ -355,11 +365,12 @@ impl MultiplyBuilder {
         let sa = self.a.splits_for(plan.n, plan.b)?;
         let sb = self.b.splits_for(plan.n, plan.b)?;
         let imp = implementation(plan.algorithm, &self.session.inner.stark)?;
-        let mut out = imp.multiply_splits(
+        let mut out = imp.multiply_splits_with(
             &self.session.inner.ctx,
             self.session.inner.backend.clone(),
             &sa,
             &sb,
+            self.deadline_ms,
         )?;
         let (m, n) = (self.a.rows(), self.b.cols());
         if (m, n) != (plan.n, plan.n) {

@@ -12,7 +12,7 @@ use anyhow::{Context, Result};
 
 use crate::algos::{Algorithm, StarkConfig};
 use crate::cost::Splits;
-use crate::engine::{ClusterConfig, FailureSpec, SchedulerPolicy, SparkContext};
+use crate::engine::{ChaosConfig, ClusterConfig, SchedulerPolicy, SparkContext};
 use crate::matrix::multiply::Kernel;
 use crate::runtime::{ArtifactLibrary, LeafBackend, NativeBackend, XlaBackend, XlaService};
 use crate::util::json::Value;
@@ -107,8 +107,13 @@ pub struct RunConfig {
     pub scheduler: SchedulerPolicy,
     /// Fair scheduler: how many distinct jobs share the rotation at once.
     pub max_concurrent_jobs: usize,
-    /// Optional failure injection.
-    pub failure: Option<FailureSpec>,
+    /// Optional seeded chaos injection (DESIGN.md S20).
+    pub chaos: Option<ChaosConfig>,
+    /// Per-task retry budget (first attempt included).
+    pub max_task_attempts: u32,
+    /// Straggler speculation: duplicate tasks slower than
+    /// `multiplier × stage median`; `None` disables speculation.
+    pub speculation_multiplier: Option<f64>,
 }
 
 impl Default for RunConfig {
@@ -129,7 +134,9 @@ impl Default for RunConfig {
             real_net_sleep: false,
             scheduler: SchedulerPolicy::Fair,
             max_concurrent_jobs: 4,
-            failure: None,
+            chaos: None,
+            max_task_attempts: 4,
+            speculation_multiplier: None,
         }
     }
 }
@@ -143,7 +150,9 @@ impl RunConfig {
             real_net_sleep: self.real_net_sleep,
             scheduler: self.scheduler,
             max_concurrent_jobs: self.max_concurrent_jobs,
-            failure: self.failure.clone(),
+            chaos: self.chaos.clone(),
+            max_task_attempts: self.max_task_attempts,
+            speculation_multiplier: self.speculation_multiplier,
         }
     }
 
@@ -192,13 +201,30 @@ impl RunConfig {
             ("real_net_sleep", Value::Bool(self.real_net_sleep)),
             ("scheduler", Value::str(self.scheduler.to_string())),
             ("max_concurrent_jobs", Value::num(self.max_concurrent_jobs as f64)),
+            ("max_task_attempts", Value::num(f64::from(self.max_task_attempts))),
+            (
+                "speculation_multiplier",
+                self.speculation_multiplier.map(Value::num).unwrap_or(Value::Null),
+            ),
         ];
-        if let Some(f) = &self.failure {
+        if let Some(c) = &self.chaos {
             fields.push((
-                "failure",
+                "chaos",
                 Value::obj(vec![
-                    ("stage_contains", Value::str(f.stage_contains.clone())),
-                    ("partition", Value::num(f.partition as f64)),
+                    ("seed", Value::num(c.seed as f64)),
+                    ("fail_rate", Value::num(c.fail_rate)),
+                    ("panic_rate", Value::num(c.panic_rate)),
+                    ("slow_rate", Value::num(c.slow_rate)),
+                    ("slow_factor", Value::num(c.slow_factor)),
+                    ("executor_loss_rate", Value::num(c.executor_loss_rate)),
+                    (
+                        "stage_contains",
+                        c.stage_contains.clone().map(Value::str).unwrap_or(Value::Null),
+                    ),
+                    (
+                        "fail_once_partition",
+                        c.fail_once_partition.map(|p| Value::num(p as f64)).unwrap_or(Value::Null),
+                    ),
                 ]),
             ));
         }
@@ -210,19 +236,34 @@ impl RunConfig {
         let get_usize = |k: &str| -> Result<usize> {
             v.get(k).and_then(Value::as_usize).with_context(|| format!("missing field {k}"))
         };
-        let failure = match v.get("failure") {
-            Some(f) if *f != Value::Null => Some(FailureSpec {
-                stage_contains: f
+        let chaos = match v.get("chaos") {
+            Some(c) if *c != Value::Null => Some(ChaosConfig {
+                seed: c.get("seed").and_then(Value::as_u64).unwrap_or(0),
+                fail_rate: c.get("fail_rate").and_then(Value::as_f64).unwrap_or(0.0),
+                panic_rate: c.get("panic_rate").and_then(Value::as_f64).unwrap_or(0.0),
+                slow_rate: c.get("slow_rate").and_then(Value::as_f64).unwrap_or(0.0),
+                slow_factor: c.get("slow_factor").and_then(Value::as_f64).unwrap_or(4.0),
+                executor_loss_rate: c
+                    .get("executor_loss_rate")
+                    .and_then(Value::as_f64)
+                    .unwrap_or(0.0),
+                stage_contains: c
                     .get("stage_contains")
                     .and_then(Value::as_str)
-                    .context("failure.stage_contains")?
-                    .to_string(),
-                partition: f
-                    .get("partition")
-                    .and_then(Value::as_usize)
-                    .context("failure.partition")?,
+                    .map(str::to_string),
+                fail_once_partition: c.get("fail_once_partition").and_then(Value::as_usize),
             }),
-            _ => None,
+            // Legacy recorded configs carry a one-shot "failure" object:
+            // parse it into the equivalent fail-once chaos spec.
+            _ => match v.get("failure") {
+                Some(f) if *f != Value::Null => Some(ChaosConfig::fail_once(
+                    f.get("stage_contains")
+                        .and_then(Value::as_str)
+                        .context("failure.stage_contains")?,
+                    f.get("partition").and_then(Value::as_usize).context("failure.partition")?,
+                )),
+                _ => None,
+            },
         };
         // "b" is a number for a fixed split count, or the string "auto".
         let splits = match v.get("b") {
@@ -265,7 +306,13 @@ impl RunConfig {
                 .get("max_concurrent_jobs")
                 .and_then(Value::as_usize)
                 .unwrap_or(4),
-            failure,
+            max_task_attempts: v
+                .get("max_task_attempts")
+                .and_then(Value::as_u64)
+                .map(|a| a as u32)
+                .unwrap_or(4),
+            speculation_multiplier: v.get("speculation_multiplier").and_then(Value::as_f64),
+            chaos,
         })
     }
 }
@@ -306,7 +353,9 @@ mod tests {
         assert_eq!(back.algo, cfg.algo);
         assert_eq!(back.backend, cfg.backend);
         assert_eq!(back.net_bandwidth, None);
-        assert!(back.failure.is_none());
+        assert!(back.chaos.is_none());
+        assert_eq!(back.max_task_attempts, 4);
+        assert!(back.speculation_multiplier.is_none());
         assert!(back.map_side_combine, "map-side combining is the default");
         assert!(!back.strict_analyze, "strict analyze is opt-in");
         assert!(!back.real_net_sleep);
@@ -337,17 +386,40 @@ mod tests {
     }
 
     #[test]
-    fn failure_and_bandwidth_roundtrip() {
+    fn chaos_and_bandwidth_roundtrip() {
         let cfg = RunConfig {
             net_bandwidth: Some(1e9),
-            failure: Some(FailureSpec { stage_contains: "gbk".into(), partition: 3 }),
+            chaos: Some(ChaosConfig {
+                seed: 7,
+                fail_rate: 0.1,
+                panic_rate: 0.05,
+                slow_rate: 0.2,
+                slow_factor: 3.0,
+                executor_loss_rate: 0.01,
+                stage_contains: Some("gbk".into()),
+                fail_once_partition: None,
+            }),
+            max_task_attempts: 6,
+            speculation_multiplier: Some(2.5),
             fused_leaf: true,
             ..Default::default()
         };
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.net_bandwidth, Some(1e9));
-        assert_eq!(back.failure, cfg.failure);
+        assert_eq!(back.chaos, cfg.chaos);
+        assert_eq!(back.max_task_attempts, 6);
+        assert_eq!(back.speculation_multiplier, Some(2.5));
         assert!(back.fused_leaf);
+    }
+
+    #[test]
+    fn legacy_failure_object_parses_as_fail_once_chaos() {
+        let legacy = r#"{"n":64,"b":2,"algo":"stark","backend":"packed",
+            "executors":2,"cores_per_executor":2,"seed":1,
+            "failure":{"stage_contains":"gbk","partition":3}}"#;
+        let parsed = RunConfig::from_json(legacy).unwrap();
+        assert_eq!(parsed.chaos, Some(ChaosConfig::fail_once("gbk", 3)));
+        assert_eq!(parsed.max_task_attempts, 4, "legacy configs keep the default budget");
     }
 
     #[test]

@@ -81,8 +81,10 @@ impl Tag {
     }
 }
 
-/// One matrix block: payload + tags (paper Fig. 1).
-#[derive(Debug, Clone)]
+/// One matrix block: payload + tags (paper Fig. 1). `PartialEq` compares
+/// payloads bit-for-bit — the fault-tolerance layer's tripwire that a
+/// recomputed or speculated block matches the original.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Block {
     /// Block-grid row index within the current sub-matrix.
     pub row: u32,

@@ -19,13 +19,21 @@
 //! share the rotation at once (excess jobs wait in arrival order).
 //! [`SchedulerPolicy::Fifo`] restores the old single global queue.
 //!
-//! Failure injection: [`FailureSpec`] makes the first matching task fail
-//! after computing (simulating a lost executor mid-stage); the stage
-//! runner retries it from lineage, which is exactly sparklet's RDD
-//! recomputation story.
+//! Fault tolerance: [`ChaosConfig`] injects deterministic, seeded task
+//! failures (error / panic / slow-task modes plus whole-executor loss);
+//! the stage runner recovers by re-running the pure task closure — the
+//! lineage chain — with bounded retries and simulated-clock exponential
+//! backoff, recomputes a lost executor's partitions, and speculatively
+//! duplicates stragglers. A task that exhausts
+//! [`ClusterConfig::max_task_attempts`] surfaces as a typed
+//! [`StageFailure::TaskFailed`]; a stage that outlives its deadline
+//! surfaces as [`StageFailure::DeadlineExceeded`] and frees its queued
+//! tasks. This is exactly sparklet's RDD recomputation story: tasks are
+//! pure, so any recovery path is bit-identical to the fault-free run.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::collections::{HashSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
@@ -82,8 +90,22 @@ pub struct ClusterConfig {
     /// at once; jobs beyond the bound wait in arrival order for a slot
     /// (clamped to ≥ 1). Ignored under FIFO.
     pub max_concurrent_jobs: usize,
-    /// Inject one task failure (see [`FailureSpec`]).
-    pub failure: Option<FailureSpec>,
+    /// Deterministic fault injection (see [`ChaosConfig`]). `None`
+    /// disables chaos entirely — the retry path then costs nothing and
+    /// every recovery counter stays 0.
+    pub chaos: Option<ChaosConfig>,
+    /// Bounded per-task retries: a task may run at most this many times
+    /// (clamped to ≥ 1) before the stage fails with a typed
+    /// [`StageFailure::TaskFailed`]. Retries back off exponentially on
+    /// the simulated clock ([`BACKOFF_BASE_MS`] · 2^attempt, accrued to
+    /// the stage ledger, never slept).
+    pub max_task_attempts: u32,
+    /// Straggler speculation: when set, any task whose busy time exceeds
+    /// `multiplier ×` the stage's median task time gets a speculative
+    /// duplicate; the earlier simulated finisher wins (both attempts must
+    /// agree bit-for-bit — asserted in debug builds). `None` (default)
+    /// disables speculation and its counters.
+    pub speculation_multiplier: Option<f64>,
 }
 
 impl Default for ClusterConfig {
@@ -95,7 +117,9 @@ impl Default for ClusterConfig {
             real_net_sleep: false,
             scheduler: SchedulerPolicy::Fair,
             max_concurrent_jobs: 4,
-            failure: None,
+            chaos: None,
+            max_task_attempts: 4,
+            speculation_multiplier: None,
         }
     }
 }
@@ -116,12 +140,206 @@ impl ClusterConfig {
     }
 }
 
-/// Fail the first attempt of the first task whose stage label contains
-/// `stage_contains` and whose partition equals `partition`.
+/// Seeded, deterministic fault injection. Every decision is a pure hash
+/// of `(seed, job, stage label, partition, attempt)`, so a given seed
+/// replays the exact same fault storm on every run — chaos tests are
+/// repeatable, and recovery is verifiable bit-for-bit against a
+/// chaos-free run (task closures are pure).
+///
+/// Rates partition one uniform draw per attempt: `fail_rate` injects a
+/// retryable task error, `panic_rate` injects a real `panic!` (exercising
+/// the capture path), `slow_rate` inflates the first attempt's busy time
+/// by `slow_factor` on the simulated clock (a degraded executor —
+/// speculation's prey). `executor_loss_rate` is drawn once per stage and
+/// kills one executor *after* the stage computes: every partition it
+/// owned is recomputed from lineage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    /// Root of every pseudo-random draw.
+    pub seed: u64,
+    /// P(injected retryable error) per task attempt, in `[0, 1]`.
+    pub fail_rate: f64,
+    /// P(injected panic) per task attempt, in `[0, 1]`.
+    pub panic_rate: f64,
+    /// P(slow first attempt) per task, in `[0, 1]`.
+    pub slow_rate: f64,
+    /// Busy-time multiplier for slow attempts (simulated; clamped ≥ 1).
+    pub slow_factor: f64,
+    /// P(one executor lost) per stage, in `[0, 1]`.
+    pub executor_loss_rate: f64,
+    /// Only stages whose label contains this participate (all stages
+    /// when `None`).
+    pub stage_contains: Option<String>,
+    /// Legacy one-shot injection: fail the first attempt of exactly this
+    /// partition, once per job id (re-armable via
+    /// [`Cluster::rearm_failure`]).
+    pub fail_once_partition: Option<usize>,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            fail_rate: 0.0,
+            panic_rate: 0.0,
+            slow_rate: 0.0,
+            slow_factor: 4.0,
+            executor_loss_rate: 0.0,
+            stage_contains: None,
+            fail_once_partition: None,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// The legacy `FailureSpec` semantics: fail the first attempt of the
+    /// first matching task once (per job id), recover from lineage.
+    pub fn fail_once(stage_contains: impl Into<String>, partition: usize) -> Self {
+        Self {
+            stage_contains: Some(stage_contains.into()),
+            fail_once_partition: Some(partition),
+            ..Default::default()
+        }
+    }
+
+    /// Does `label` participate in this chaos run?
+    pub fn matches(&self, label: &str) -> bool {
+        self.stage_contains.as_deref().map_or(true, |s| label.contains(s))
+    }
+
+    /// One uniform draw in `[0, 1)` keyed by `words` (and the seed).
+    fn draw(&self, words: &[u64]) -> f64 {
+        let mut h = splitmix64(self.seed ^ 0x5354_4152_4b5f_4654); // "STARK_FT"
+        for &w in words {
+            h = splitmix64(h ^ w);
+        }
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Per-attempt fate of one task. Slow mode only hits the FIRST
+    /// attempt: a retry or speculative duplicate lands on a healthy
+    /// executor and runs at full speed.
+    fn decide(&self, job_id: u64, label: &str, part: usize, attempt: u32) -> ChaosDecision {
+        if !self.matches(label) {
+            return ChaosDecision::Healthy;
+        }
+        let u = self.draw(&[job_id, hash_str(label), part as u64, u64::from(attempt)]);
+        if u < self.fail_rate {
+            ChaosDecision::FailError
+        } else if u < self.fail_rate + self.panic_rate {
+            ChaosDecision::FailPanic
+        } else if attempt == 1 && u < self.fail_rate + self.panic_rate + self.slow_rate {
+            ChaosDecision::Slow
+        } else {
+            ChaosDecision::Healthy
+        }
+    }
+
+    /// Drawn once per stage: the executor (if any) lost after the stage
+    /// computes. Its partitions are recomputed from lineage.
+    fn stage_loss(&self, job_id: u64, label: &str, executors: usize) -> Option<usize> {
+        if self.executor_loss_rate <= 0.0 || !self.matches(label) {
+            return None;
+        }
+        let u = self.draw(&[job_id, hash_str(label), 0xe0ec_u64]);
+        if u < self.executor_loss_rate {
+            let h = splitmix64(self.seed ^ splitmix64(job_id ^ hash_str(label)));
+            Some((h % executors.max(1) as u64) as usize)
+        } else {
+            None
+        }
+    }
+}
+
+/// What chaos decided for one task attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ChaosDecision {
+    Healthy,
+    FailError,
+    FailPanic,
+    Slow,
+}
+
+/// SplitMix64: a tiny, high-quality mixing function — the entire PRNG
+/// behind deterministic chaos (no rand dependency).
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over the stage label, feeding the chaos hash.
+fn hash_str(s: &str) -> u64 {
+    s.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ u64::from(b)).wrapping_mul(0x1_0000_01b3))
+}
+
+/// Base of the simulated exponential backoff between task retries:
+/// retry `k` waits `BACKOFF_BASE_MS · 2^(k−1)` on the simulated clock
+/// (accrued to the stage ledger, never slept for real).
+pub const BACKOFF_BASE_MS: f64 = 50.0;
+
+/// Typed stage-level failure, thrown (via `panic_any`) through the
+/// infallible engine combinators and caught at the API boundary, where
+/// it becomes a [`crate::error::StarkError`].
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct FailureSpec {
-    pub stage_contains: String,
-    pub partition: usize,
+pub enum StageFailure {
+    /// One task exhausted its retry budget.
+    TaskFailed { stage: String, partition: usize, attempts: u32, reason: String },
+    /// The stage outlived its job deadline; queued tasks were freed.
+    DeadlineExceeded { stage: String },
+}
+
+impl std::fmt::Display for StageFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StageFailure::TaskFailed { stage, partition, attempts, reason } => write!(
+                f,
+                "task failed in stage '{stage}' partition {partition} after {attempts} attempts: {reason}"
+            ),
+            StageFailure::DeadlineExceeded { stage } => {
+                write!(f, "job deadline exceeded in stage '{stage}'")
+            }
+        }
+    }
+}
+
+/// Everything one stage execution produced: partition-ordered outcomes
+/// plus the recovery ledger.
+pub struct StageRun<R> {
+    /// Outcomes ordered by partition.
+    pub outcomes: Vec<TaskOutcome<R>>,
+    /// Task re-runs caused by failures (attempts beyond the first,
+    /// before post-passes).
+    pub retries: u32,
+    /// Total task executions, including recomputes and speculative
+    /// duplicates. Equals `outcomes.len()` on a healthy run.
+    pub attempts: u32,
+    /// Partitions recomputed from lineage after an executor loss.
+    pub recomputed: u32,
+    /// Speculative duplicates that beat their straggling original.
+    pub speculative_wins: u32,
+    /// Simulated retry-backoff wait accrued by this stage.
+    pub backoff_ms: f64,
+}
+
+/// What one task reports back to the stage driver.
+enum TaskMsg<R> {
+    /// Success, with the simulated backoff its retries accrued.
+    Done(TaskOutcome<R>, f64),
+    /// Retry budget exhausted.
+    Failed { part: usize, attempts: u32, reason: String },
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "task panicked".to_string()
+    }
 }
 
 /// Outcome of one task attempt.
@@ -141,12 +359,13 @@ type Job = Box<dyn FnOnce() + Send>;
 struct SchedState {
     policy: SchedulerPolicy,
     max_jobs: usize,
-    /// FIFO policy: the single global queue.
-    fifo: VecDeque<Job>,
+    /// FIFO policy: the single global queue (tasks tagged with their
+    /// stage token so a failed stage can purge its queued work).
+    fifo: VecDeque<(u64, Job)>,
     /// Fair policy: `(job_id, tasks)` for every job with pending tasks,
     /// in first-pending order. Queues are removed the moment they drain,
     /// so every entry is non-empty.
-    jobs: VecDeque<(u64, VecDeque<Job>)>,
+    jobs: VecDeque<(u64, VecDeque<(u64, Job)>)>,
     /// Rotation cursor into the eligible window of `jobs`.
     rr: usize,
 }
@@ -162,13 +381,13 @@ impl SchedState {
         }
     }
 
-    fn push(&mut self, job_id: u64, task: Job) {
+    fn push(&mut self, job_id: u64, token: u64, task: Job) {
         match self.policy {
-            SchedulerPolicy::Fifo => self.fifo.push_back(task),
+            SchedulerPolicy::Fifo => self.fifo.push_back((token, task)),
             SchedulerPolicy::Fair => {
                 match self.jobs.iter_mut().find(|(id, _)| *id == job_id) {
-                    Some((_, q)) => q.push_back(task),
-                    None => self.jobs.push_back((job_id, VecDeque::from([task]))),
+                    Some((_, q)) => q.push_back((token, task)),
+                    None => self.jobs.push_back((job_id, VecDeque::from([(token, task)]))),
                 }
             }
         }
@@ -176,7 +395,7 @@ impl SchedState {
 
     fn pop(&mut self) -> Option<Job> {
         match self.policy {
-            SchedulerPolicy::Fifo => self.fifo.pop_front(),
+            SchedulerPolicy::Fifo => self.fifo.pop_front().map(|(_, task)| task),
             SchedulerPolicy::Fair => {
                 if self.jobs.is_empty() {
                     return None;
@@ -186,7 +405,8 @@ impl SchedState {
                 // inside the window.
                 let window = self.jobs.len().min(self.max_jobs);
                 let idx = self.rr % window;
-                let task = self.jobs[idx].1.pop_front().expect("scheduler queues are non-empty");
+                let (_, task) =
+                    self.jobs[idx].1.pop_front().expect("scheduler queues are non-empty");
                 if self.jobs[idx].1.is_empty() {
                     let _ = self.jobs.remove(idx);
                     // The next job slides into this slot; keep the cursor
@@ -198,6 +418,22 @@ impl SchedState {
                 Some(task)
             }
         }
+    }
+
+    /// Drop every queued task of one stage (deadline expiry / typed task
+    /// failure): the stage's remaining work must not waste the pool.
+    /// Returns how many tasks were freed. The cursor resets — a fairness
+    /// hiccup confined to the failure path.
+    fn purge(&mut self, token: u64) -> usize {
+        let before: usize =
+            self.fifo.len() + self.jobs.iter().map(|(_, q)| q.len()).sum::<usize>();
+        self.fifo.retain(|(t, _)| *t != token);
+        for (_, q) in self.jobs.iter_mut() {
+            q.retain(|(t, _)| *t != token);
+        }
+        self.jobs.retain(|(_, q)| !q.is_empty());
+        self.rr = 0;
+        before - (self.fifo.len() + self.jobs.iter().map(|(_, q)| q.len()).sum::<usize>())
     }
 }
 
@@ -212,7 +448,11 @@ pub struct Cluster {
     cfg: ClusterConfig,
     sched: Arc<Scheduler>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    failure_armed: AtomicBool,
+    /// Job ids that consumed their one-shot `fail_once` injection —
+    /// scoped per job so concurrent jobs cannot eat each other's faults.
+    fail_once_consumed: Mutex<HashSet<u64>>,
+    /// Unique token per stage execution, tagging queued tasks for purge.
+    stage_seq: AtomicU64,
 }
 
 impl Cluster {
@@ -241,7 +481,13 @@ impl Cluster {
                     .expect("spawn worker"),
             );
         }
-        Self { cfg, sched, workers, failure_armed: AtomicBool::new(true) }
+        Self {
+            cfg,
+            sched,
+            workers,
+            fail_once_consumed: Mutex::new(HashSet::new()),
+            stage_seq: AtomicU64::new(1),
+        }
     }
 
     pub fn config(&self) -> &ClusterConfig {
@@ -257,17 +503,16 @@ impl Cluster {
     /// convenience for tests and single-job callers.
     pub fn run_stage<R, F>(&self, label: &str, tasks: Vec<F>) -> (Vec<TaskOutcome<R>>, u32)
     where
-        R: Send + 'static,
+        R: Send + PartialEq + 'static,
         F: Fn() -> R + Send + Sync + 'static,
     {
         self.run_stage_for(0, label, tasks)
     }
 
-    /// Run one stage of job `job_id`: `tasks[i]` computes partition `i`.
-    /// Every task is tagged with the job id, so the fair scheduler can
-    /// rotate service across concurrent jobs. Tasks must be pure
-    /// (lineage): on injected failure the task is re-run. Returns
-    /// outcomes ordered by partition plus the number of retries.
+    /// Infallible wrapper over [`try_run_stage`](Self::try_run_stage)
+    /// (no deadline): a typed [`StageFailure`] propagates by
+    /// `panic_any`, to be caught and converted at the API boundary.
+    /// Returns outcomes ordered by partition plus the retry count.
     pub fn run_stage_for<R, F>(
         &self,
         job_id: u64,
@@ -275,68 +520,256 @@ impl Cluster {
         tasks: Vec<F>,
     ) -> (Vec<TaskOutcome<R>>, u32)
     where
-        R: Send + 'static,
+        R: Send + PartialEq + 'static,
+        F: Fn() -> R + Send + Sync + 'static,
+    {
+        match self.try_run_stage(job_id, label, tasks, None) {
+            Ok(run) => (run.outcomes, run.retries),
+            Err(failure) => std::panic::panic_any(failure),
+        }
+    }
+
+    /// Run one stage of job `job_id`: `tasks[i]` computes partition `i`.
+    /// Every task is tagged with the job id, so the fair scheduler can
+    /// rotate service across concurrent jobs. Tasks must be pure — they
+    /// ARE the lineage: every recovery path (bounded retry with
+    /// simulated backoff, executor-loss recompute, straggler
+    /// speculation) simply re-runs the closure and is therefore
+    /// bit-identical to a fault-free run. Task panics are captured per
+    /// attempt and count against [`ClusterConfig::max_task_attempts`];
+    /// exhaustion returns [`StageFailure::TaskFailed`]. Passing a
+    /// `deadline` bounds the whole stage: expiry purges the stage's
+    /// queued tasks and returns [`StageFailure::DeadlineExceeded`].
+    pub fn try_run_stage<R, F>(
+        &self,
+        job_id: u64,
+        label: &str,
+        tasks: Vec<F>,
+        deadline: Option<Instant>,
+    ) -> Result<StageRun<R>, StageFailure>
+    where
+        R: Send + PartialEq + 'static,
         F: Fn() -> R + Send + Sync + 'static,
     {
         let n = tasks.len();
-        let (tx, rx) = std::sync::mpsc::channel::<TaskOutcome<R>>();
-        let retries = Arc::new(AtomicU32::new(0));
-
-        // Decide up-front which (single) task this stage should fail once.
-        let fail_part = match &self.cfg.failure {
-            Some(spec)
-                if label.contains(&spec.stage_contains)
-                    && spec.partition < n
-                    && self.failure_armed.swap(false, Ordering::SeqCst) =>
-            {
-                Some(spec.partition)
+        let token = self.stage_seq.fetch_add(1, Ordering::Relaxed);
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                return Err(StageFailure::DeadlineExceeded { stage: label.to_string() });
             }
-            _ => None,
-        };
+        }
+        // Tasks are kept by the driver too: the recovery post-passes
+        // below re-run them inline (recompute-from-lineage).
+        let tasks: Vec<Arc<F>> = tasks.into_iter().map(Arc::new).collect();
+        let (tx, rx) = std::sync::mpsc::channel::<TaskMsg<R>>();
+        let max_attempts = self.cfg.max_task_attempts.max(1);
+        let chaos = self.cfg.chaos.clone().map(Arc::new);
+        let fail_part = self.armed_fail_once(job_id, label, n);
 
-        for (part, task) in tasks.into_iter().enumerate() {
+        for (part, task) in tasks.iter().enumerate() {
+            let task = Arc::clone(task);
             let tx = tx.clone();
-            let retries = retries.clone();
+            let chaos = chaos.clone();
             let fail_this = fail_part == Some(part);
             // Logical placement: partition -> executor (the paper's unit of
             // locality); independent of which host thread runs the task.
             let executor = self.executor_of(part);
+            let label = label.to_string();
             let job: Job = Box::new(move || {
                 let mut attempts = 0u32;
+                let mut backoff_ms = 0.0f64;
                 loop {
                     attempts += 1;
+                    let decision = chaos
+                        .as_deref()
+                        .map_or(ChaosDecision::Healthy, |c| c.decide(job_id, &label, part, attempts));
                     let started = Instant::now();
-                    let result = task();
-                    let busy_ms = started.elapsed().as_secs_f64() * 1e3;
-                    if fail_this && attempts == 1 {
-                        // Simulated task loss: drop the result, recompute
-                        // from lineage (the closure is pure).
-                        retries.fetch_add(1, Ordering::Relaxed);
-                        continue;
+                    let outcome = catch_unwind(AssertUnwindSafe(|| {
+                        if decision == ChaosDecision::FailPanic {
+                            panic!(
+                                "chaos: injected panic in '{label}' partition {part} attempt {attempts}"
+                            );
+                        }
+                        task()
+                    }));
+                    let mut busy_ms = started.elapsed().as_secs_f64() * 1e3;
+                    let reason = match outcome {
+                        Ok(result) => {
+                            let injected =
+                                decision == ChaosDecision::FailError || (fail_this && attempts == 1);
+                            if !injected {
+                                if decision == ChaosDecision::Slow {
+                                    // Degraded executor: the first attempt
+                                    // drags on the simulated clock only.
+                                    busy_ms *=
+                                        chaos.as_deref().map_or(1.0, |c| c.slow_factor.max(1.0));
+                                }
+                                let _ = tx.send(TaskMsg::Done(
+                                    TaskOutcome { part, result, busy_ms, executor, attempts },
+                                    backoff_ms,
+                                ));
+                                return;
+                            }
+                            format!(
+                                "chaos: injected task error in '{label}' partition {part} attempt {attempts}"
+                            )
+                        }
+                        Err(payload) => panic_text(payload),
+                    };
+                    if attempts >= max_attempts {
+                        let _ = tx.send(TaskMsg::Failed { part, attempts, reason });
+                        return;
                     }
-                    let _ = tx.send(TaskOutcome { part, result, busy_ms, executor, attempts });
-                    break;
+                    // Exponential backoff on the SIMULATED clock: accrues
+                    // to the stage ledger, never sleeps for real.
+                    backoff_ms += BACKOFF_BASE_MS * f64::from(1u32 << (attempts - 1).min(16));
                 }
             });
-            self.submit(job_id, job);
+            self.submit(job_id, token, job);
         }
         drop(tx);
 
-        let mut outcomes: Vec<TaskOutcome<R>> = rx.iter().collect();
-        assert_eq!(outcomes.len(), n, "stage '{label}' lost tasks");
-        outcomes.sort_by_key(|o| o.part);
-        (outcomes, retries.load(Ordering::Relaxed))
+        // Every task reports Done or Failed (panics are captured above),
+        // so a channel disconnect here means the pool itself died.
+        let mut slots: Vec<Option<TaskOutcome<R>>> = Vec::new();
+        slots.resize_with(n, || None);
+        let mut backoff_total = 0.0f64;
+        let mut pending = n;
+        while pending > 0 {
+            let msg = if let Some(d) = deadline {
+                let left = d.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    self.purge_stage(token);
+                    return Err(StageFailure::DeadlineExceeded { stage: label.to_string() });
+                }
+                match rx.recv_timeout(left) {
+                    Ok(m) => m,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        self.purge_stage(token);
+                        return Err(StageFailure::DeadlineExceeded { stage: label.to_string() });
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        panic!("stage '{label}' lost tasks")
+                    }
+                }
+            } else {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => panic!("stage '{label}' lost tasks"),
+                }
+            };
+            match msg {
+                TaskMsg::Done(o, b) => {
+                    backoff_total += b;
+                    debug_assert!(slots[o.part].is_none(), "partition reported twice");
+                    slots[o.part] = Some(o);
+                    pending -= 1;
+                }
+                TaskMsg::Failed { part, attempts, reason } => {
+                    self.purge_stage(token);
+                    return Err(StageFailure::TaskFailed {
+                        stage: label.to_string(),
+                        partition: part,
+                        attempts,
+                        reason,
+                    });
+                }
+            }
+        }
+        let mut outcomes: Vec<TaskOutcome<R>> =
+            slots.into_iter().map(|s| s.expect("all slots filled")).collect();
+        let retries: u32 = outcomes.iter().map(|o| o.attempts - 1).sum();
+
+        // Executor-loss post-pass: one seeded draw per stage kills an
+        // executor after the stage computes; every partition it owned is
+        // recomputed from lineage. Deterministic (iterates partitions in
+        // order, closures are pure), unlike reacting to arrival order.
+        let mut recomputed = 0u32;
+        if let Some(c) = chaos.as_deref() {
+            if let Some(lost) = c.stage_loss(job_id, label, self.cfg.executors) {
+                for (part, o) in outcomes.iter_mut().enumerate() {
+                    if self.executor_of(part) != lost {
+                        continue;
+                    }
+                    let fresh = tasks[part]();
+                    debug_assert!(
+                        fresh == o.result,
+                        "lineage recompute diverged for '{label}' partition {part} — task closure is impure"
+                    );
+                    o.result = fresh;
+                    o.attempts += 1;
+                    recomputed += 1;
+                }
+            }
+        }
+
+        // Straggler speculation post-pass: any task slower than
+        // `multiplier × median` gets a duplicate, launched (on the
+        // simulated clock) the moment the original crossed the
+        // threshold; the earlier simulated finisher wins. Both attempts
+        // must agree bit-for-bit — the debug assert is a correctness
+        // tripwire, not just perf.
+        let mut speculative_wins = 0u32;
+        if let Some(mult) = self.cfg.speculation_multiplier {
+            let mult = mult.max(1.0);
+            let mut times: Vec<f64> = outcomes.iter().map(|o| o.busy_ms).collect();
+            times.sort_by(|a, b| a.total_cmp(b));
+            let median = times[times.len() / 2];
+            let threshold = mult * median;
+            if median > 0.0 {
+                for (part, o) in outcomes.iter_mut().enumerate() {
+                    if o.busy_ms <= threshold {
+                        continue;
+                    }
+                    let started = Instant::now();
+                    let fresh = tasks[part]();
+                    let dup_busy = started.elapsed().as_secs_f64() * 1e3;
+                    debug_assert!(
+                        fresh == o.result,
+                        "speculative duplicate diverged for '{label}' partition {part} — task closure is impure"
+                    );
+                    o.attempts += 1;
+                    let dup_finish = threshold + dup_busy;
+                    if dup_finish < o.busy_ms {
+                        o.result = fresh;
+                        o.busy_ms = dup_finish;
+                        speculative_wins += 1;
+                    }
+                }
+            }
+        }
+
+        let attempts: u32 = outcomes.iter().map(|o| o.attempts).sum();
+        Ok(StageRun { outcomes, retries, attempts, recomputed, speculative_wins, backoff_ms: backoff_total })
     }
 
-    fn submit(&self, job_id: u64, job: Job) {
+    /// Which partition (if any) the one-shot `fail_once` injection hits
+    /// for this stage — armed at most once per job id.
+    fn armed_fail_once(&self, job_id: u64, label: &str, n: usize) -> Option<usize> {
+        let chaos = self.cfg.chaos.as_ref()?;
+        let part = chaos.fail_once_partition?;
+        if part >= n || !chaos.matches(label) {
+            return None;
+        }
+        let mut consumed = self.fail_once_consumed.lock().unwrap();
+        consumed.insert(job_id).then_some(part)
+    }
+
+    fn submit(&self, job_id: u64, token: u64, job: Job) {
         let mut st = self.sched.state.lock().unwrap();
-        st.push(job_id, job);
+        st.push(job_id, token, job);
         self.sched.cv.notify_one();
     }
 
-    /// Re-arm the one-shot failure injection (tests).
+    /// Free one stage's queued tasks (failure/deadline path).
+    fn purge_stage(&self, token: u64) {
+        let mut st = self.sched.state.lock().unwrap();
+        let _ = st.purge(token);
+    }
+
+    /// Re-arm the one-shot `fail_once` injection for every job (tests).
     pub fn rearm_failure(&self) {
-        self.failure_armed.store(true, Ordering::SeqCst);
+        self.fail_once_consumed.lock().unwrap().clear();
     }
 }
 
@@ -366,10 +799,11 @@ fn worker_loop(sched: Arc<Scheduler>) {
         };
         // A panicking task must not take the worker thread with it — on
         // a long-lived multi-job server that would shrink the pool one
-        // panic at a time until every stage hangs. The panicked task
-        // never sends its outcome, so the submitting driver fails loudly
-        // on its own "stage lost tasks" assert instead.
-        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        // panic at a time until every stage hangs. The stage runner's
+        // per-attempt wrapper already captures task panics and reports a
+        // typed failure; this outer catch is the backstop for panics
+        // outside that wrapper (e.g. in the send path).
+        let _ = catch_unwind(AssertUnwindSafe(job));
     }
 }
 
@@ -409,7 +843,7 @@ mod loom_model {
             match *op {
                 Op::Push(job, seq) => {
                     let log = log.clone();
-                    st.push(job, Box::new(move || log.lock().unwrap().push((job, seq))));
+                    st.push(job, 0, Box::new(move || log.lock().unwrap().push((job, seq))));
                 }
                 Op::Pop => {
                     if let Some(task) = st.pop() {
@@ -631,26 +1065,49 @@ mod tests {
     #[test]
     fn failure_injection_retries_once() {
         let mut cfg = ClusterConfig::new(2, 1);
-        cfg.failure = Some(FailureSpec { stage_contains: "flaky".to_string(), partition: 1 });
+        cfg.chaos = Some(ChaosConfig::fail_once("flaky", 1));
         let cluster = Cluster::new(cfg);
         let tasks: Vec<_> = (0..4).map(|i| move || i).collect();
         let (out, retries) = cluster.run_stage("flaky-stage", tasks);
         assert_eq!(retries, 1);
         assert_eq!(out[1].attempts, 2);
         assert_eq!(out[1].result, 1);
-        // One-shot: a second stage does not fail again.
+        // One-shot per job: a second stage of the same job is clean.
         let tasks: Vec<_> = (0..4).map(|i| move || i).collect();
         let (_, retries) = cluster.run_stage("flaky-stage", tasks);
         assert_eq!(retries, 0);
+        // Re-arming restores the injection.
+        cluster.rearm_failure();
+        let tasks: Vec<_> = (0..4).map(|i| move || i).collect();
+        let (_, retries) = cluster.run_stage("flaky-stage", tasks);
+        assert_eq!(retries, 1);
+    }
+
+    #[test]
+    fn fail_once_is_scoped_per_job() {
+        // A concurrent job must NOT consume another job's injection: each
+        // job id arms its own one-shot.
+        let mut cfg = ClusterConfig::new(2, 1);
+        cfg.chaos = Some(ChaosConfig::fail_once("flaky", 0));
+        let cluster = Cluster::new(cfg);
+        for job in [7u64, 8, 9] {
+            let tasks: Vec<_> = (0..2).map(|i| move || i).collect();
+            let (out, retries) = cluster.run_stage_for(job, "flaky", tasks);
+            assert_eq!(retries, 1, "job {job} must see its own injection");
+            assert_eq!(out[0].attempts, 2);
+        }
     }
 
     #[test]
     fn failure_spec_ignores_other_stages() {
         let mut cfg = ClusterConfig::new(1, 1);
-        cfg.failure = Some(FailureSpec { stage_contains: "nomatch".to_string(), partition: 0 });
+        cfg.chaos = Some(ChaosConfig::fail_once("nomatch", 0));
         let cluster = Cluster::new(cfg);
         let (_, retries) = cluster.run_stage("clean", vec![|| 1u8]);
         assert_eq!(retries, 0);
+        // A non-matching stage must not consume the arming either.
+        let (_, retries) = cluster.run_stage("has-nomatch-inside", vec![|| 1u8]);
+        assert_eq!(retries, 1);
     }
 
     #[test]
@@ -689,7 +1146,7 @@ mod tests {
         let log: Arc<Mutex<Vec<(u64, u32)>>> = Arc::new(Mutex::new(Vec::new()));
         for &(job, seq) in pushes {
             let log = log.clone();
-            state.push(job, Box::new(move || log.lock().unwrap().push((job, seq))));
+            state.push(job, 0, Box::new(move || log.lock().unwrap().push((job, seq))));
         }
         while let Some(task) = state.pop() {
             task();
@@ -745,15 +1202,210 @@ mod tests {
     #[test]
     fn panicking_task_does_not_kill_the_worker_pool() {
         let cluster = Cluster::new(ClusterConfig::new(1, 1));
-        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let tasks: Vec<_> = (0..1).map(|_| move || -> u8 { panic!("task boom") }).collect();
-            cluster.run_stage("boom", tasks);
-        }));
-        assert!(boom.is_err(), "driver must fail loudly on the lost task");
-        // The pool survives the task panic: a follow-up stage completes.
+        // An always-panicking task exhausts its retry budget and comes
+        // back as a TYPED failure with the captured panic payload — not
+        // a hang or a bare driver assert.
+        let tasks: Vec<_> = (0..1).map(|_| move || -> u8 { panic!("task boom") }).collect();
+        match cluster.try_run_stage(0, "boom", tasks, None) {
+            Err(StageFailure::TaskFailed { stage, partition, attempts, reason }) => {
+                assert_eq!(stage, "boom");
+                assert_eq!(partition, 0);
+                assert_eq!(attempts, ClusterConfig::default().max_task_attempts);
+                assert!(reason.contains("task boom"), "payload lost: {reason}");
+            }
+            other => panic!("expected TaskFailed, got {:?}", other.err()),
+        }
+        // The pool survives the task panics: a follow-up stage completes.
         let tasks: Vec<_> = (0..4).map(|i| move || i).collect();
         let (out, _) = cluster.run_stage("after", tasks);
         assert_eq!(out.len(), 4);
+    }
+
+    #[test]
+    fn infallible_wrapper_rethrows_typed_failure() {
+        // run_stage propagates the typed failure via panic_any, so the
+        // API boundary can downcast it back.
+        let cluster = Cluster::new(ClusterConfig::new(1, 1));
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let tasks: Vec<_> = (0..1).map(|_| move || -> u8 { panic!("kaboom") }).collect();
+            cluster.run_stage("boom", tasks);
+        }));
+        let payload = boom.expect_err("driver must surface the failure");
+        let failure = payload.downcast_ref::<StageFailure>().expect("typed StageFailure payload");
+        assert!(matches!(failure, StageFailure::TaskFailed { partition: 0, .. }));
+    }
+
+    #[test]
+    fn chaos_error_mode_recovers_deterministically() {
+        let mut cfg = ClusterConfig::new(2, 2);
+        cfg.chaos = Some(ChaosConfig { seed: 42, fail_rate: 0.3, ..Default::default() });
+        cfg.max_task_attempts = 12;
+        let run_once = || {
+            let cluster = Cluster::new(cfg.clone());
+            let tasks: Vec<_> = (0..32).map(|i| move || i * 3).collect();
+            let run = cluster.try_run_stage(1, "storm", tasks, None).expect("stage recovers");
+            let results: Vec<i32> = run.outcomes.iter().map(|o| o.result).collect();
+            assert_eq!(results, (0..32).map(|i| i * 3).collect::<Vec<_>>());
+            (run.retries, run.attempts, run.backoff_ms)
+        };
+        let first = run_once();
+        assert!(first.0 > 0, "seeded 30% fail rate must hit at least one of 32 tasks");
+        assert_eq!(first.1, 32 + first.0, "attempts = tasks + retries");
+        assert!(first.2 > 0.0, "retries accrue simulated backoff");
+        // Same seed → identical fault storm and identical ledger.
+        assert_eq!(first, run_once());
+    }
+
+    #[test]
+    fn chaos_panic_mode_recovers_via_capture() {
+        let mut cfg = ClusterConfig::new(2, 2);
+        cfg.chaos = Some(ChaosConfig { seed: 7, panic_rate: 0.3, ..Default::default() });
+        cfg.max_task_attempts = 12;
+        let cluster = Cluster::new(cfg);
+        let tasks: Vec<_> = (0..32).map(|i| move || i + 100).collect();
+        let run = cluster.try_run_stage(1, "panics", tasks, None).expect("panics are retried");
+        assert!(run.retries > 0);
+        let results: Vec<usize> = run.outcomes.iter().map(|o| o.result).collect();
+        assert_eq!(results, (100..132).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn exhausted_attempts_return_typed_task_failure() {
+        let mut cfg = ClusterConfig::new(1, 1);
+        cfg.chaos = Some(ChaosConfig { fail_rate: 1.0, ..Default::default() });
+        cfg.max_task_attempts = 3;
+        let cluster = Cluster::new(cfg);
+        let tasks: Vec<_> = (0..2).map(|i| move || i).collect();
+        match cluster.try_run_stage(0, "doomed", tasks, None) {
+            Err(StageFailure::TaskFailed { attempts: 3, reason, .. }) => {
+                assert!(reason.contains("chaos"), "reason: {reason}");
+            }
+            other => panic!("expected 3-attempt TaskFailed, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn deadline_expiry_frees_queued_tasks() {
+        let cluster = Cluster::new(ClusterConfig::new(1, 1));
+        let tasks: Vec<_> = (0..8)
+            .map(|_| {
+                move || {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    0u8
+                }
+            })
+            .collect();
+        let deadline = Instant::now() + std::time::Duration::from_millis(5);
+        match cluster.try_run_stage(0, "slow", tasks, Some(deadline)) {
+            Err(StageFailure::DeadlineExceeded { stage }) => assert_eq!(stage, "slow"),
+            other => panic!("expected DeadlineExceeded, got {:?}", other.err()),
+        }
+        // The purge freed the queued tasks; the pool serves new work.
+        let tasks: Vec<_> = (0..4).map(|i| move || i).collect();
+        let (out, _) = cluster.run_stage("after-deadline", tasks);
+        assert_eq!(out.len(), 4);
+        // An already-expired deadline fails fast, before submitting.
+        let tasks: Vec<_> = (0..4).map(|i| move || i).collect();
+        let expired = Instant::now() - std::time::Duration::from_millis(1);
+        assert!(matches!(
+            cluster.try_run_stage(0, "late", tasks, Some(expired)),
+            Err(StageFailure::DeadlineExceeded { .. })
+        ));
+    }
+
+    #[test]
+    fn executor_loss_recomputes_owned_partitions() {
+        let mut cfg = ClusterConfig::new(2, 1);
+        cfg.chaos = Some(ChaosConfig { seed: 5, executor_loss_rate: 1.0, ..Default::default() });
+        let cluster = Cluster::new(cfg);
+        let tasks: Vec<_> = (0..4).map(|i| move || i * 7).collect();
+        let run = cluster.try_run_stage(1, "loss", tasks, None).expect("loss is recovered");
+        // Round-robin placement: whichever of the 2 executors died owned
+        // exactly 2 of the 4 partitions.
+        assert_eq!(run.recomputed, 2);
+        assert_eq!(run.attempts, 4 + 2);
+        assert_eq!(run.retries, 0);
+        let results: Vec<usize> = run.outcomes.iter().map(|o| o.result).collect();
+        assert_eq!(results, vec![0, 7, 14, 21]);
+    }
+
+    #[test]
+    fn speculation_duplicates_stragglers_and_keeps_the_fast_attempt() {
+        let mut cfg = ClusterConfig::new(2, 2);
+        cfg.speculation_multiplier = Some(2.0);
+        let cluster = Cluster::new(cfg);
+        // Partition 0 models a degraded executor: slow on its FIRST run,
+        // fast when re-run elsewhere (the speculative duplicate).
+        let first = Arc::new(AtomicBool::new(true));
+        let tasks: Vec<_> = (0..4)
+            .map(|i| {
+                let first = first.clone();
+                move || {
+                    let ms = if i == 0 && first.swap(false, Ordering::SeqCst) { 40 } else { 1 };
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                    i * 2
+                }
+            })
+            .collect();
+        let run = cluster.try_run_stage(1, "straggle", tasks, None).expect("stage completes");
+        assert!(run.speculative_wins >= 1, "the duplicate must beat the 40ms straggler");
+        assert!(run.attempts > 4);
+        assert_eq!(run.recomputed, 0);
+        let results: Vec<usize> = run.outcomes.iter().map(|o| o.result).collect();
+        assert_eq!(results, vec![0, 2, 4, 6]);
+        // The winner's simulated finish time replaced the straggler's.
+        assert!(run.outcomes[0].busy_ms < 40.0);
+    }
+
+    #[test]
+    fn chaos_off_has_zero_recovery_counters() {
+        let cluster = Cluster::new(ClusterConfig::new(2, 2));
+        let tasks: Vec<_> = (0..16).map(|i| move || i).collect();
+        let run = cluster.try_run_stage(1, "clean", tasks, None).expect("clean run");
+        assert_eq!(run.retries, 0);
+        assert_eq!(run.attempts, 16);
+        assert_eq!(run.recomputed, 0);
+        assert_eq!(run.speculative_wins, 0);
+        assert_eq!(run.backoff_ms, 0.0);
+    }
+
+    #[test]
+    fn chaos_decisions_are_seed_deterministic() {
+        let chaos = ChaosConfig { seed: 99, fail_rate: 0.25, panic_rate: 0.25, ..Default::default() };
+        for part in 0..64 {
+            for attempt in 1..4 {
+                assert_eq!(
+                    chaos.decide(3, "stage/x", part, attempt),
+                    chaos.decide(3, "stage/x", part, attempt)
+                );
+            }
+        }
+        // Stage filters gate every mode.
+        let gated = ChaosConfig {
+            stage_contains: Some("only-this".to_string()),
+            fail_rate: 1.0,
+            ..Default::default()
+        };
+        assert_eq!(gated.decide(1, "other", 0, 1), ChaosDecision::Healthy);
+        assert_eq!(gated.decide(1, "only-this-stage", 0, 1), ChaosDecision::FailError);
+        assert!(gated.stage_loss(1, "other", 4).is_none());
+    }
+
+    #[test]
+    fn purge_removes_only_the_target_stage() {
+        let mut st = SchedState::new(SchedulerPolicy::Fair, 8);
+        let log: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        for (job, token) in [(1u64, 10u64), (1, 10), (1, 11), (2, 12)] {
+            let log = log.clone();
+            st.push(job, token, Box::new(move || log.lock().unwrap().push(token)));
+        }
+        assert_eq!(st.purge(10), 2, "exactly the two token-10 tasks are freed");
+        while let Some(task) = st.pop() {
+            task();
+        }
+        let mut ran = log.lock().unwrap().clone();
+        ran.sort_unstable();
+        assert_eq!(ran, vec![11, 12]);
     }
 
     #[test]

@@ -37,19 +37,22 @@
 //! scope.
 //!
 //! Because compute closures are pure, a lost task is re-run from lineage
-//! (see [`crate::engine::cluster`]'s failure injection).
+//! (see [`crate::engine::cluster`]'s chaos injection and recovery: bounded
+//! retries, executor-loss recompute, straggler speculation, deadlines).
 
 use std::hash::Hash;
 use std::sync::Arc;
 
-use crate::engine::cluster::{Cluster, ClusterConfig};
+use crate::engine::cluster::{Cluster, ClusterConfig, StageRun};
 use crate::engine::metrics::{JobMetrics, JobScope, MetricsRegistry, StageMetrics};
 use crate::engine::partitioner::{DetHashMap, HashPartitioner, Partitioner, PartitionerDesc};
 use crate::engine::sizable::Sizable;
 
-/// Element bound for distributed collections.
-pub trait Data: Clone + Send + Sync + 'static {}
-impl<T: Clone + Send + Sync + 'static> Data for T {}
+/// Element bound for distributed collections. `PartialEq` backs the
+/// fault-tolerance layer's debug tripwire that any recomputed or
+/// speculated partition is bit-identical to the original.
+pub trait Data: Clone + Send + Sync + PartialEq + 'static {}
+impl<T: Clone + Send + Sync + PartialEq + 'static> Data for T {}
 
 /// What kind of operator produced a dataset (lineage classification).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -305,6 +308,19 @@ impl JobCtx {
         self.scope.next_stage_id()
     }
 
+    /// Bound the whole job: every stage run in this scope from now on
+    /// checks the absolute deadline (`ms` from now) and fails typed
+    /// ([`crate::engine::cluster::StageFailure::DeadlineExceeded`]) on
+    /// expiry, freeing its queued tasks.
+    pub fn set_deadline_ms(&self, ms: u64) {
+        self.scope.set_deadline_ms(ms);
+    }
+
+    /// The job's absolute deadline, if one was set.
+    pub fn deadline(&self) -> Option<std::time::Instant> {
+        self.scope.deadline()
+    }
+
     /// Snapshot of the stages recorded so far (tests, live inspection).
     pub fn stages(&self) -> Vec<StageMetrics> {
         self.scope.stages()
@@ -488,9 +504,13 @@ impl<T: Data> Dist<T> {
                 move || compute(p).len()
             })
             .collect();
-        let (outcomes, retries) = self.job.cluster().run_stage_for(self.job.id(), label, tasks);
-        self.record_compute_stage(label, &outcomes, retries, 0);
-        outcomes.into_iter().map(|o| o.result).sum()
+        let run = self
+            .job
+            .cluster()
+            .try_run_stage(self.job.id(), label, tasks, self.job.deadline())
+            .unwrap_or_else(|f| std::panic::panic_any(f));
+        self.record_compute_stage(label, &run, 0);
+        run.outcomes.into_iter().map(|o| o.result).sum()
     }
 
     /// Materialize the pipeline (Spark `cache` + force): runs one stage and
@@ -502,7 +522,11 @@ impl<T: Data> Dist<T> {
         d
     }
 
-    /// Run each partition's pipeline, return per-partition outputs.
+    /// Run each partition's pipeline, return per-partition outputs. A
+    /// typed [`crate::engine::cluster::StageFailure`] (retry budget
+    /// exhausted, job deadline expired) propagates by `panic_any` through
+    /// the infallible combinator signatures and is caught at the API
+    /// boundary, where it becomes a [`crate::error::StarkError`].
     fn run_result_stage(&self, label: &str) -> Vec<Vec<T>> {
         let compute = self.compute.clone();
         let tasks: Vec<_> = (0..self.num_parts)
@@ -511,22 +535,28 @@ impl<T: Data> Dist<T> {
                 move || compute(p)
             })
             .collect();
-        let (outcomes, retries) = self.job.cluster().run_stage_for(self.job.id(), label, tasks);
-        let records: u64 = outcomes.iter().map(|o| o.result.len() as u64).sum();
-        self.record_compute_stage(label, &outcomes, retries, records);
-        outcomes.into_iter().map(|o| o.result).collect()
+        let run = self
+            .job
+            .cluster()
+            .try_run_stage(self.job.id(), label, tasks, self.job.deadline())
+            .unwrap_or_else(|f| std::panic::panic_any(f));
+        let records: u64 = run.outcomes.iter().map(|o| o.result.len() as u64).sum();
+        self.record_compute_stage(label, &run, records);
+        run.outcomes.into_iter().map(|o| o.result).collect()
     }
 
-    fn record_compute_stage<R>(
+    fn record_compute_stage<R: Send + PartialEq>(
         &self,
         label: &str,
-        outcomes: &[crate::engine::cluster::TaskOutcome<R>],
-        retries: u32,
+        run: &StageRun<R>,
         records_out: u64,
     ) {
+        let outcomes = &run.outcomes;
         let comp_ms: f64 = outcomes.iter().map(|o| o.busy_ms).sum();
         let total_cores = self.job.config().total_cores();
-        let wall_ms = comp_ms_to_wall(outcomes, total_cores);
+        // Retry backoff delays the stage like the simulated net wait does:
+        // accrued to the modeled wall, never slept.
+        let wall_ms = comp_ms_to_wall(outcomes, total_cores) + run.backoff_ms;
         self.job.record_stage(StageMetrics {
             stage_id: self.job.next_stage_id(),
             label: label.to_string(),
@@ -539,7 +569,10 @@ impl<T: Data> Dist<T> {
             records_out,
             combined_records: 0,
             pf: outcomes.len().min(total_cores),
-            retries,
+            retries: run.retries,
+            attempts: run.attempts,
+            recomputed_partitions: run.recomputed,
+            speculative_wins: run.speculative_wins,
         });
     }
 }
@@ -595,15 +628,14 @@ fn collect_shuffle<K: Data, V: Data>(
     label: &str,
     map_parts: usize,
     out_parts: usize,
-    outcomes: Vec<crate::engine::cluster::TaskOutcome<MapOut<K, V>>>,
-    retries: u32,
+    run: StageRun<MapOut<K, V>>,
 ) -> ShuffleOut<K, V> {
     let cluster = job.cluster();
     let mut merged: Vec<Vec<(K, V)>> = (0..out_parts).map(|_| Vec::new()).collect();
     let (mut total, mut remote, mut records, mut in_records) = (0u64, 0u64, 0u64, 0u64);
-    let comp_ms: f64 = outcomes.iter().map(|o| o.busy_ms).sum();
-    let wall_ms = comp_ms_to_wall(&outcomes, job.config().total_cores());
-    for o in outcomes {
+    let comp_ms: f64 = run.outcomes.iter().map(|o| o.busy_ms).sum();
+    let wall_ms = comp_ms_to_wall(&run.outcomes, job.config().total_cores()) + run.backoff_ms;
+    for o in run.outcomes {
         let src_exec = cluster.executor_of(o.part);
         let (buckets, bucket_bytes, task_in) = o.result;
         in_records += task_in;
@@ -646,7 +678,10 @@ fn collect_shuffle<K: Data, V: Data>(
         records_out: records,
         combined_records: in_records.saturating_sub(records),
         pf: map_parts.min(total_cores),
-        retries,
+        retries: run.retries,
+        attempts: run.attempts,
+        recomputed_partitions: run.recomputed,
+        speculative_wins: run.speculative_wins,
     });
 
     ShuffleOut { buckets: Arc::new(merged) }
@@ -925,8 +960,12 @@ where
                 }
             })
             .collect();
-        let (outcomes, retries) = self.job.cluster().run_stage_for(self.job.id(), label, tasks);
-        collect_shuffle(&self.job, label, self.num_parts, out_parts, outcomes, retries)
+        let run = self
+            .job
+            .cluster()
+            .try_run_stage(self.job.id(), label, tasks, self.job.deadline())
+            .unwrap_or_else(|f| std::panic::panic_any(f));
+        collect_shuffle(&self.job, label, self.num_parts, out_parts, run)
     }
 
     /// Map stage + shuffle write with map-side combining into an
@@ -973,8 +1012,12 @@ where
                 }
             })
             .collect();
-        let (outcomes, retries) = self.job.cluster().run_stage_for(self.job.id(), label, tasks);
-        collect_shuffle(&self.job, label, self.num_parts, out_parts, outcomes, retries)
+        let run = self
+            .job
+            .cluster()
+            .try_run_stage(self.job.id(), label, tasks, self.job.deadline())
+            .unwrap_or_else(|f| std::panic::panic_any(f));
+        collect_shuffle(&self.job, label, self.num_parts, out_parts, run)
     }
 }
 
@@ -1195,7 +1238,7 @@ mod tests {
     #[test]
     fn wide_op_recovers_from_injected_failure() {
         let mut cfg = ClusterConfig::new(2, 1);
-        cfg.failure = Some(FailureSpecAlias { stage_contains: "gbk".into(), partition: 0 });
+        cfg.chaos = Some(crate::engine::cluster::ChaosConfig::fail_once("gbk", 0));
         let ctx = SparkContext::new(cfg);
         let job = ctx.run_job("failure");
         let pairs: Vec<(u32, u64)> = (0..20).map(|i| (i % 4, 1)).collect();
@@ -1209,9 +1252,38 @@ mod tests {
         let stages = job.stages();
         let gbk = stages.iter().find(|s| s.label == "gbk").unwrap();
         assert_eq!(gbk.retries, 1, "injected failure must surface as a retry");
+        assert_eq!(gbk.attempts, gbk.tasks as u32 + 1, "one extra attempt recorded");
+        assert_eq!(gbk.recomputed_partitions, 0);
+        assert_eq!(gbk.speculative_wins, 0);
     }
 
-    use crate::engine::cluster::FailureSpec as FailureSpecAlias;
+    #[test]
+    fn job_deadline_fails_collect_with_typed_failure() {
+        use crate::engine::cluster::StageFailure;
+        let ctx = ctx();
+        let job = ctx.run_job("deadline");
+        job.set_deadline_ms(0);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let d = job.parallelize((0u64..8).collect(), 4);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| d.collect("c")))
+            .expect_err("expired deadline must abort the stage");
+        let failure = err.downcast_ref::<StageFailure>().expect("typed StageFailure payload");
+        assert!(matches!(failure, StageFailure::DeadlineExceeded { stage } if stage == "c"));
+    }
+
+    #[test]
+    fn chaos_free_run_records_zero_recovery_counters() {
+        let ctx = ctx();
+        let job = ctx.run_job("clean");
+        let pairs: Vec<(u32, u64)> = (0..32).map(|i| (i % 4, 1)).collect();
+        job.parallelize(pairs, 4).group_by_key("gbk", 2).collect("c");
+        for s in job.stages() {
+            assert_eq!(s.retries, 0, "stage {}", s.label);
+            assert_eq!(s.attempts, s.tasks as u32, "stage {}", s.label);
+            assert_eq!(s.recomputed_partitions, 0, "stage {}", s.label);
+            assert_eq!(s.speculative_wins, 0, "stage {}", s.label);
+        }
+    }
 
     #[test]
     fn net_bandwidth_adds_wait() {

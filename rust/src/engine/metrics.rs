@@ -50,6 +50,14 @@ pub struct StageMetrics {
     pub pf: usize,
     /// Task retry count (failure injection / lineage recomputation).
     pub retries: u32,
+    /// Total task executions, including retries, executor-loss
+    /// recomputes and speculative duplicates. Equals `tasks` on a
+    /// healthy run — the chaos suite's primary recovery observable.
+    pub attempts: u32,
+    /// Partitions recomputed from lineage after an executor loss.
+    pub recomputed_partitions: u32,
+    /// Speculative duplicates that beat their straggling original.
+    pub speculative_wins: u32,
 }
 
 impl StageMetrics {
@@ -74,6 +82,9 @@ impl StageMetrics {
             ("combined_records", Value::num(self.combined_records as f64)),
             ("pf", Value::num(self.pf as f64)),
             ("retries", Value::num(self.retries as f64)),
+            ("attempts", Value::num(self.attempts as f64)),
+            ("recomputed_partitions", Value::num(self.recomputed_partitions as f64)),
+            ("speculative_wins", Value::num(self.speculative_wins as f64)),
         ])
     }
 }
@@ -110,6 +121,27 @@ impl JobMetrics {
         self.stages.iter().map(|s| s.comp_ms).sum()
     }
 
+    /// Total task executions across stages (= total tasks on a healthy
+    /// run; strictly greater once any recovery path fired).
+    pub fn total_attempts(&self) -> u64 {
+        self.stages.iter().map(|s| u64::from(s.attempts)).sum()
+    }
+
+    /// Total tasks across stages.
+    pub fn total_tasks(&self) -> u64 {
+        self.stages.iter().map(|s| s.tasks as u64).sum()
+    }
+
+    /// Total partitions recomputed from lineage after executor losses.
+    pub fn total_recomputed_partitions(&self) -> u64 {
+        self.stages.iter().map(|s| u64::from(s.recomputed_partitions)).sum()
+    }
+
+    /// Total speculative duplicates that beat their originals.
+    pub fn total_speculative_wins(&self) -> u64 {
+        self.stages.iter().map(|s| u64::from(s.speculative_wins)).sum()
+    }
+
     /// Sum of stage wall times grouped by phase prefix, in first-seen order.
     pub fn phase_wall_ms(&self) -> Vec<(String, f64)> {
         let mut order: Vec<String> = Vec::new();
@@ -140,6 +172,10 @@ impl JobMetrics {
             ("job_id", Value::num(self.id as f64)),
             ("name", Value::str(self.name.clone())),
             ("wall_ms", Value::num(self.wall_ms)),
+            ("tasks", Value::num(self.total_tasks() as f64)),
+            ("attempts", Value::num(self.total_attempts() as f64)),
+            ("recomputed_partitions", Value::num(self.total_recomputed_partitions() as f64)),
+            ("speculative_wins", Value::num(self.total_speculative_wins() as f64)),
             ("stages", Value::Array(self.stages.iter().map(|s| s.to_json()).collect())),
         ])
     }
@@ -156,6 +192,9 @@ pub struct JobScope {
     stages: Mutex<Vec<StageMetrics>>,
     stage_seq: AtomicUsize,
     finished: AtomicBool,
+    /// Absolute wall-clock deadline for the whole job; every stage run
+    /// within the scope checks it and fails typed on expiry.
+    deadline: Mutex<Option<Instant>>,
 }
 
 impl JobScope {
@@ -167,6 +206,7 @@ impl JobScope {
             stages: Mutex::new(Vec::new()),
             stage_seq: AtomicUsize::new(0),
             finished: AtomicBool::new(false),
+            deadline: Mutex::new(None),
         }
     }
 
@@ -206,6 +246,16 @@ impl JobScope {
     /// Next job-local stage id.
     pub fn next_stage_id(&self) -> usize {
         self.stage_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Set the job's absolute deadline `ms` milliseconds from now.
+    pub fn set_deadline_ms(&self, ms: u64) {
+        *self.deadline.lock().unwrap() = Some(Instant::now() + std::time::Duration::from_millis(ms));
+    }
+
+    /// The job's absolute deadline, if one was set.
+    pub fn deadline(&self) -> Option<Instant> {
+        *self.deadline.lock().unwrap()
     }
 
     /// Snapshot of the stages recorded so far (tests, live inspection).
@@ -305,6 +355,9 @@ mod tests {
             combined_records: 0,
             pf: 1,
             retries: 0,
+            attempts: 1,
+            recomputed_partitions: 0,
+            speculative_wins: 0,
         }
     }
 
@@ -403,5 +456,25 @@ mod tests {
         let scope = JobScope::adhoc();
         assert_eq!(scope.id(), 0);
         assert_eq!(scope.name(), "adhoc");
+    }
+
+    #[test]
+    fn deadline_is_stored_and_fault_counters_roll_up() {
+        let scope = JobScope::new(9, "dl");
+        assert!(scope.deadline().is_none());
+        scope.set_deadline_ms(60_000);
+        assert!(scope.deadline().unwrap() > Instant::now());
+        let mut faulty = stage("gbk/x", 1.0);
+        faulty.attempts = 5;
+        faulty.retries = 2;
+        faulty.recomputed_partitions = 1;
+        faulty.speculative_wins = 1;
+        scope.record_stage(faulty);
+        scope.record_stage(stage("clean/y", 1.0));
+        let job = scope.finalize();
+        assert_eq!(job.total_tasks(), 2);
+        assert_eq!(job.total_attempts(), 6);
+        assert_eq!(job.total_recomputed_partitions(), 1);
+        assert_eq!(job.total_speculative_wins(), 1);
     }
 }

@@ -21,8 +21,11 @@
 //!   recorded into **scoped job handles** ([`JobCtx`], from
 //!   [`SparkContext::run_job`]) so concurrent jobs on one cluster keep
 //!   isolated metrics and are scheduled fairly ([`SchedulerPolicy`]);
-//! - lineage-based task retry (failed tasks recompute from their pure
-//!   closures, the sparklet analogue of RDD recomputation).
+//! - lineage-backed fault tolerance ([`ChaosConfig`], DESIGN.md S20):
+//!   seeded deterministic chaos injection, bounded per-task retries with
+//!   simulated exponential backoff, executor-loss recomputation from the
+//!   pure task closures, straggler speculation, and job deadlines — the
+//!   sparklet analogue of RDD resilience.
 
 pub mod block;
 pub mod cluster;
@@ -33,7 +36,9 @@ pub mod partitioner;
 pub mod sizable;
 
 pub use block::{Block, Side, Tag};
-pub use cluster::{Cluster, ClusterConfig, FailureSpec, SchedulerPolicy};
+pub use cluster::{
+    ChaosConfig, Cluster, ClusterConfig, SchedulerPolicy, StageFailure, StageRun, BACKOFF_BASE_MS,
+};
 pub use dist::{Dist, JobCtx, LineageNode, OpKind, SparkContext};
 pub use ops::sum_block_grids;
 pub use metrics::{JobMetrics, JobScope, MetricsRegistry, StageMetrics};

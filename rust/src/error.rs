@@ -64,6 +64,28 @@ pub enum StarkError {
     /// `StarkConfig::strict_analyze` sessions). The payload is the
     /// rendered diagnostic list, one `STARK-Axxx` finding per line.
     PlanRejected(String),
+    /// A task exhausted its retry budget (`max_task_attempts`) — every
+    /// attempt failed, whether from injected chaos or a real panic. The
+    /// captured panic payload / error text rides along in `reason`.
+    TaskFailed {
+        /// Label of the stage whose task kept failing.
+        stage: String,
+        /// Partition index of the failing task.
+        partition: usize,
+        /// How many attempts were made before giving up.
+        attempts: u32,
+        /// Captured failure text (panic payload or injected-error message).
+        reason: String,
+    },
+    /// The job's `deadline_ms` expired before all stages completed. The
+    /// job was cancelled cleanly: its queued tasks were freed and the
+    /// cluster kept serving other jobs.
+    JobTimedOut {
+        /// Job name (session job label) that timed out.
+        job: String,
+        /// The deadline that was exceeded, in milliseconds.
+        deadline_ms: u64,
+    },
 }
 
 impl StarkError {
@@ -119,6 +141,14 @@ impl std::fmt::Display for StarkError {
             StarkError::PlanRejected(diags) => {
                 write!(f, "plan rejected by static analysis:\n{diags}")
             }
+            StarkError::TaskFailed { stage, partition, attempts, reason } => write!(
+                f,
+                "task failed: stage '{stage}' partition {partition} \
+                 exhausted {attempts} attempts ({reason})"
+            ),
+            StarkError::JobTimedOut { job, deadline_ms } => {
+                write!(f, "job '{job}' timed out: deadline of {deadline_ms} ms exceeded")
+            }
         }
     }
 }
@@ -137,5 +167,21 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("b=3") && s.contains("stark") && s.contains("power-of-two"), "{s}");
         assert!(StarkError::SessionMismatch.to_string().contains("session"));
+    }
+
+    #[test]
+    fn fault_variants_render_their_context() {
+        let e = StarkError::TaskFailed {
+            stage: "gbk".into(),
+            partition: 3,
+            attempts: 4,
+            reason: "chaos: injected panic".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("'gbk'") && s.contains("partition 3") && s.contains("4 attempts"), "{s}");
+        assert!(s.contains("injected panic"), "{s}");
+        let e = StarkError::JobTimedOut { job: "stark n=64 b=2".into(), deadline_ms: 250 };
+        let s = e.to_string();
+        assert!(s.contains("stark n=64 b=2") && s.contains("250 ms"), "{s}");
     }
 }

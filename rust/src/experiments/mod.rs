@@ -108,7 +108,7 @@ impl Scale {
             isolate_multiply: false,
             map_side_combine: true,
             real_net_sleep: false,
-            failure: None,
+            chaos: None,
             ..Default::default()
         }
     }

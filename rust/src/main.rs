@@ -50,7 +50,8 @@ USAGE: stark <multiply|plan|analyze|compare|sweep|stages|scalability|cost|serve|
                         on any failure (the CI service check)
   request:              --addr HOST:PORT [--op multiply|submit|plan|
                         status|wait|jobs|ping|shutdown] [--job-id N]
-                        [--timeout-ms N] --n 256 [--algo auto] [--b auto]
+                        [--timeout-ms N] [--deadline-ms N] --n 256
+                        [--algo auto] [--b auto]
                         [--expr '<json>' | --expr @expr.json]  submit a
                         whole expression DAG (mul/add/sub/scale/t/pow
                         over matrix/gen leaves) instead of one multiply;
@@ -80,6 +81,18 @@ FLAGS (shared):
                        jobs on the simulated cluster        [fair]
   --max-concurrent-jobs <int>  fair-scheduler rotation width [4]
   --real-net-sleep     really sleep the simulated shuffle-read wait
+  --max-task-attempts <int>  bounded retries per task before the job
+                       fails with a typed error              [4]
+  --speculation <x>    duplicate tasks slower than x times the stage
+                       median; first bit-identical result wins  [off]
+  --chaos-seed <int>   arm deterministic fault injection, rooted here
+  --chaos-fail-rate <p>   P(retryable task error) per attempt  [0]
+  --chaos-panic-rate <p>  P(task panic) per attempt            [0]
+  --chaos-slow-rate <p>   P(slow first attempt) per task       [0]
+  --chaos-slow-factor <x> busy-time multiplier for slow tasks  [4]
+  --chaos-exec-loss <p>   P(losing one executor) per stage     [0]
+  --chaos-stages <substr> inject only into stages whose label
+                       contains <substr>             [all stages]
   --verify             (multiply) check against single-node product
   --bs <list>          (sweep) partition counts    [2,4,8,16]
   --executor-counts <list>  (scalability)          [1,2,3,4,5]
@@ -104,6 +117,30 @@ where
     }
 }
 
+/// Build a [`ChaosConfig`] from the `--chaos-*` flags, or `None` when
+/// no injection knob is set (the zero-cost default).
+fn chaos_from_args(args: &Args) -> Option<stark::engine::ChaosConfig> {
+    let fail_rate: f64 = args.get("chaos-fail-rate", 0.0);
+    let panic_rate: f64 = args.get("chaos-panic-rate", 0.0);
+    let slow_rate: f64 = args.get("chaos-slow-rate", 0.0);
+    let executor_loss_rate: f64 = args.get("chaos-exec-loss", 0.0);
+    let armed = fail_rate > 0.0
+        || panic_rate > 0.0
+        || slow_rate > 0.0
+        || executor_loss_rate > 0.0
+        || args.raw("chaos-seed").is_some();
+    armed.then(|| stark::engine::ChaosConfig {
+        seed: args.get("chaos-seed", 0u64),
+        fail_rate,
+        panic_rate,
+        slow_rate,
+        slow_factor: args.get("chaos-slow-factor", 4.0),
+        executor_loss_rate,
+        stage_contains: args.raw("chaos-stages").map(str::to_string),
+        fail_once_partition: None,
+    })
+}
+
 fn run_config(args: &Args) -> RunConfig {
     let net_mbps: f64 = args.get("net-mbps", 0.0);
     RunConfig {
@@ -122,7 +159,9 @@ fn run_config(args: &Args) -> RunConfig {
         real_net_sleep: args.flag("real-net-sleep"),
         scheduler: args.get("scheduler", stark::engine::SchedulerPolicy::Fair),
         max_concurrent_jobs: args.get("max-concurrent-jobs", 4),
-        failure: None,
+        chaos: chaos_from_args(args),
+        max_task_attempts: args.get("max-task-attempts", 4),
+        speculation_multiplier: args.get_opt::<f64>("speculation"),
     }
 }
 
@@ -317,8 +356,9 @@ fn cmd_stages(args: &Args) -> Result<()> {
     let mut cfg = run_config(args);
     cfg.isolate_multiply = true;
     let out = run_once(&cfg)?;
-    let mut t =
-        Table::new(vec!["stage", "tasks", "wall ms", "comp ms", "shuffle", "pf", "retries"]);
+    let mut t = Table::new(vec![
+        "stage", "tasks", "wall ms", "comp ms", "shuffle", "pf", "retries", "attempts",
+    ]);
     for s in &out.job.stages {
         t.row(vec![
             s.label.clone(),
@@ -328,6 +368,7 @@ fn cmd_stages(args: &Args) -> Result<()> {
             fmt_bytes(s.shuffle_bytes),
             s.pf.to_string(),
             s.retries.to_string(),
+            s.attempts.to_string(),
         ]);
     }
     t.print();
@@ -496,6 +537,9 @@ fn cmd_request(args: &Args) -> Result<()> {
                 fields.push(("b", b_value("4")));
                 fields.push(("seed", Value::num(args.get("seed", 42u64) as f64)));
             }
+            if let Some(ms) = args.get_opt::<u64>("deadline-ms") {
+                fields.push(("deadline_ms", Value::num(ms as f64)));
+            }
         }
         "plan" => {
             fields.push((
@@ -537,7 +581,14 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     };
     let mut server = stark::serve::Server::start("127.0.0.1:0", state)?;
     let addr = server.addr().to_string();
-    println!("serve-smoke: server on {addr}");
+    let chaos_armed = cfg.chaos.is_some();
+    println!("serve-smoke: server on {addr} (chaos {})", if chaos_armed { "armed" } else { "off" });
+
+    // Fault-tolerance counters ride every result document; tally them
+    // across the whole smoke so the attempts-vs-tasks invariants below
+    // aggregate over every job rather than hinging on one seed draw.
+    let mut total_tasks = 0u64;
+    let mut total_attempts = 0u64;
 
     let ping = stark::serve::request(&addr, &Value::obj(vec![("op", Value::str("ping"))]))?;
     anyhow::ensure!(ping.get("ok") == Some(&Value::Bool(true)), "ping failed: {ping:?}");
@@ -574,6 +625,11 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
         auto.get("algorithm").and_then(Value::as_str).map_or(false, |a| a != "auto"),
         "auto multiply did not report its resolved algorithm: {auto:?}"
     );
+    let mut tally = |doc: &Value| {
+        total_tasks += doc.get("tasks").and_then(Value::as_u64).unwrap_or(0);
+        total_attempts += doc.get("attempts").and_then(Value::as_u64).unwrap_or(0);
+    };
+    tally(&auto);
 
     // Two jobs submitted back to back share the cluster concurrently.
     let submit = |algo: &str, n: usize, b: usize, seed: u64| -> Result<u64> {
@@ -619,6 +675,8 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
         done_marlin.get("ok") == Some(&Value::Bool(true)),
         "marlin job failed: {done_marlin:?}"
     );
+    tally(&done_stark);
+    tally(&done_marlin);
 
     // Per-job metric isolation: the stark response carries exactly its
     // own 2(p−q)+2 stages (eq. 25), untainted by the marlin job.
@@ -649,6 +707,7 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
         ]),
     )?;
     anyhow::ensure!(sync.get("ok") == Some(&Value::Bool(true)), "sync multiply: {sync:?}");
+    tally(&sync);
 
     // A whole expression — (A·B + C)·Dᵀ — runs as ONE chained job with
     // a single collect, and matches a local dense computation.
@@ -691,6 +750,28 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
         chained.get("expression").and_then(Value::as_str).unwrap_or("?"),
         2
     );
+    tally(&chained);
+
+    // Recovery observability: chaos-free runs must cost exactly zero
+    // retries (attempts == tasks); an armed chaos config must leave
+    // visible evidence that tasks were retried and still produced the
+    // bit-identical products the frobenius checks above verified.
+    anyhow::ensure!(total_tasks > 0, "result documents carried no task counters");
+    if chaos_armed {
+        anyhow::ensure!(
+            total_attempts > total_tasks,
+            "chaos armed but no recovery observed: attempts={total_attempts} tasks={total_tasks}"
+        );
+        println!(
+            "serve-smoke: chaos recovery observed ({} extra attempts over {total_tasks} tasks)",
+            total_attempts - total_tasks
+        );
+    } else {
+        anyhow::ensure!(
+            total_attempts == total_tasks,
+            "chaos off but retry path ran: attempts={total_attempts} tasks={total_tasks}"
+        );
+    }
 
     let bye = stark::serve::request(&addr, &Value::obj(vec![("op", Value::str("shutdown"))]))?;
     anyhow::ensure!(bye.get("ok") == Some(&Value::Bool(true)), "shutdown: {bye:?}");

@@ -15,8 +15,12 @@
 //! -> {"op":"ping"}
 //! <- {"ok":true,"service":"stark","version":"0.1.0","jobs_inflight":0}
 //!
-//! // Asynchronous path: submit returns a job id immediately…
-//! -> {"op":"submit","algo":"stark","n":256,"b":4,"seed":7}
+//! // Asynchronous path: submit returns a job id immediately. An
+//! // optional "deadline_ms" bounds the job: past it the engine cancels
+//! // cleanly and the result document reports the typed timeout. Result
+//! // documents carry the fault-tolerance counters ("tasks","attempts",
+//! // "recomputed_partitions","speculative_wins" — DESIGN.md S20).
+//! -> {"op":"submit","algo":"stark","n":256,"b":4,"seed":7,"deadline_ms":60000}
 //! <- {"ok":true,"job_id":3,"status":"queued"}
 //! // …or a busy rejection when admission control is at its bound:
 //! <- {"ok":false,"busy":true,"error":"server busy: 8 jobs in flight (max 8)"}
@@ -181,6 +185,10 @@ pub struct ServerState {
 struct JobSpec {
     payload: JobPayload,
     return_c: bool,
+    /// Optional job deadline: the engine cancels the job cleanly with a
+    /// typed `JobTimedOut` once it expires (queued tasks freed, other
+    /// jobs unaffected).
+    deadline_ms: Option<u64>,
 }
 
 enum JobPayload {
@@ -562,7 +570,11 @@ fn execute(state: &ServerState, id: u64, spec: &JobSpec) -> Value {
         JobPayload::Multiply { algo, splits, a, b_mat } => {
             let a = state.session.matrix_arc(a.clone());
             let b = state.session.matrix_arc(b_mat.clone());
-            let out = match a.multiply(&b).algorithm(*algo).splits(*splits).collect() {
+            let mut builder = a.multiply(&b).algorithm(*algo).splits(*splits);
+            if let Some(ms) = spec.deadline_ms {
+                builder = builder.deadline(ms);
+            }
+            let out = match builder.collect() {
                 Ok(out) => out,
                 Err(e) => return err_doc(e.to_string()),
             };
@@ -573,7 +585,7 @@ fn execute(state: &ServerState, id: u64, spec: &JobSpec) -> Value {
             (out.c, out.job, out.leaf_calls, out.leaf_ms)
         }
         JobPayload::Expr(expr) => {
-            let out = match expr.collect() {
+            let out = match expr.collect_with(spec.deadline_ms) {
                 Ok(out) => out,
                 Err(e) => return err_doc(e.to_string()),
             };
@@ -612,6 +624,12 @@ fn execute(state: &ServerState, id: u64, spec: &JobSpec) -> Value {
         ("leaf_ms", Value::num(leaf_ms)),
         ("frobenius", Value::num(c.frobenius())),
         ("shuffle_bytes", Value::num(job.total_shuffle_bytes() as f64)),
+        // Fault-tolerance counters (DESIGN.md S20): all zero on a clean
+        // chaos-free run except attempts == tasks.
+        ("tasks", Value::num(job.total_tasks() as f64)),
+        ("attempts", Value::num(job.total_attempts() as f64)),
+        ("recomputed_partitions", Value::num(job.total_recomputed_partitions() as f64)),
+        ("speculative_wins", Value::num(job.total_speculative_wins() as f64)),
         // Exactly this job's stage metrics (count = eq. (25) for Stark).
         ("stages", Value::Array(job.stages.iter().map(|s| s.to_json()).collect())),
     ]);
@@ -783,6 +801,7 @@ pub fn expr_from_json(session: &StarkSession, tree: &Value) -> Result<DistExpr> 
 /// rejected at submit time instead of failing the job.
 fn parse_spec(session: &StarkSession, req: &Value, default_splits: Splits) -> Result<JobSpec> {
     let return_c = req.get("return_c").and_then(Value::as_bool).unwrap_or(false);
+    let deadline_ms = req.get("deadline_ms").and_then(Value::as_u64);
     if let Some(tree) = req.get("expr") {
         let mut budget = LeafBudget::new();
         let expr = parse_expr(session, tree, 0, &mut budget)?;
@@ -807,7 +826,7 @@ fn parse_spec(session: &StarkSession, req: &Value, default_splits: Splits) -> Re
                 np.plan.n
             );
         }
-        return Ok(JobSpec { payload: JobPayload::Expr(expr), return_c });
+        return Ok(JobSpec { payload: JobPayload::Expr(expr), return_c, deadline_ms });
     }
     let algo: Algorithm = req
         .get("algo")
@@ -863,6 +882,7 @@ fn parse_spec(session: &StarkSession, req: &Value, default_splits: Splits) -> Re
     Ok(JobSpec {
         payload: JobPayload::Multiply { algo, splits, a: Arc::new(a), b_mat: Arc::new(b_mat) },
         return_c,
+        deadline_ms,
     })
 }
 
@@ -1081,6 +1101,14 @@ fn handle_request(line: &str, shared: &Shared) -> Result<Value> {
                 ("status", Value::str(status)),
             ];
             if let Some(v) = result {
+                // Surface the fault counters at the top level too, so a
+                // poller sees recovery activity without digging into the
+                // full result document.
+                for k in ["tasks", "attempts", "recomputed_partitions", "speculative_wins"] {
+                    if let Some(x) = v.get(k) {
+                        fields.push((k, x.clone()));
+                    }
+                }
                 fields.push(("result", (*v).clone()));
             }
             if let Some(msg) = error {
@@ -1098,20 +1126,42 @@ fn handle_request(line: &str, shared: &Shared) -> Result<Value> {
         }
         "jobs" => {
             let jobs = shared.jobs.inner.lock().unwrap();
+            let mut failed_jobs = 0usize;
             let list: Vec<Value> = jobs
                 .entries
                 .iter()
                 .map(|(id, e)| {
-                    Value::obj(vec![
+                    let mut fields = vec![
                         ("job_id", Value::num(*id as f64)),
                         ("name", Value::str(e.name.clone())),
                         ("status", Value::str(e.status.as_str())),
-                    ])
+                    ];
+                    // Per-job failure/recovery counters (DESIGN.md S20).
+                    let failed = match &e.status {
+                        JobStatus::Failed(_) => true,
+                        JobStatus::Done(v) => {
+                            for k in
+                                ["tasks", "attempts", "recomputed_partitions", "speculative_wins"]
+                            {
+                                if let Some(x) = v.get(k) {
+                                    fields.push((k, x.clone()));
+                                }
+                            }
+                            v.get("ok") == Some(&Value::Bool(false))
+                        }
+                        _ => false,
+                    };
+                    if failed {
+                        failed_jobs += 1;
+                        fields.push(("failed", Value::Bool(true)));
+                    }
+                    Value::obj(fields)
                 })
                 .collect();
             Ok(Value::obj(vec![
                 ("ok", Value::Bool(true)),
                 ("inflight", Value::num(jobs.inflight as f64)),
+                ("failed_jobs", Value::num(failed_jobs as f64)),
                 ("jobs", Value::Array(list)),
             ]))
         }
@@ -1664,6 +1714,38 @@ mod tests {
         );
         assert_eq!(bad.get("ok"), Some(&Value::Bool(false)), "{bad:?}");
         assert!(bad.get("error").unwrap().as_str().unwrap().contains("leaves"), "{bad:?}");
+    }
+
+    #[test]
+    fn deadline_ms_zero_times_out_and_server_keeps_serving() {
+        let server = test_server();
+        let addr = server.addr().to_string();
+        let resp = req(
+            &addr,
+            vec![
+                ("op", Value::str("multiply")),
+                ("n", Value::num(64.0)),
+                ("b", Value::num(2.0)),
+                ("deadline_ms", Value::num(0.0)),
+            ],
+        );
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)), "{resp:?}");
+        let err = resp.get("error").unwrap().as_str().unwrap();
+        assert!(err.contains("timed out"), "{err}");
+        // The timeout is clean: the next job on the same cluster runs fine.
+        let ok = req(
+            &addr,
+            vec![("op", Value::str("multiply")), ("n", Value::num(16.0)), ("b", Value::num(2.0))],
+        );
+        assert_eq!(ok.get("ok"), Some(&Value::Bool(true)), "{ok:?}");
+        // Counters ride on every result document.
+        let tasks = ok.get("tasks").unwrap().as_u64().unwrap();
+        assert_eq!(ok.get("attempts").unwrap().as_u64(), Some(tasks), "chaos-free: no retries");
+        assert_eq!(ok.get("recomputed_partitions").unwrap().as_u64(), Some(0));
+        assert_eq!(ok.get("speculative_wins").unwrap().as_u64(), Some(0));
+        // `jobs` reports the failed job and the per-job counters.
+        let jobs = req(&addr, vec![("op", Value::str("jobs"))]);
+        assert_eq!(jobs.get("failed_jobs").unwrap().as_u64(), Some(1), "{jobs:?}");
     }
 
     #[test]

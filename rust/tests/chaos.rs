@@ -1,0 +1,288 @@
+//! Chaos soak suite (DESIGN.md S20): seeded fault injection across every
+//! algorithm and the acceptance expression. The contract under test is
+//! lineage-backed recovery — whatever chaos does (task errors, panics,
+//! slow stragglers, whole-executor loss), a job either completes with a
+//! product **bit-identical** to its chaos-free run, or fails with a
+//! typed error (`TaskFailed`, `JobTimedOut`). Never a wrong answer.
+
+use std::sync::Arc;
+
+use stark::algos::stark::predicted_stages;
+use stark::algos::{marlin, mllib, stark as stark_algo, Algorithm, BaselineOptions, StarkConfig};
+use stark::api::StarkSession;
+use stark::cost::Splits;
+use stark::engine::{ChaosConfig, ClusterConfig, SparkContext};
+use stark::matrix::DenseMatrix;
+use stark::runtime::NativeBackend;
+use stark::util::prop::{assert_prop, Draw};
+use stark::StarkError;
+
+const BASE: BaselineOptions = BaselineOptions { isolate_multiply: false };
+
+fn chaos_cluster(chaos: ChaosConfig) -> ClusterConfig {
+    let mut cc = ClusterConfig::new(2, 2);
+    cc.chaos = Some(chaos);
+    // Generous retry budget: at the 20% soak ceiling a task still fails
+    // twelve straight attempts with probability ~4e-9, so the soak pins
+    // recovery, not retry exhaustion (which has its own test below).
+    cc.max_task_attempts = 12;
+    cc
+}
+
+fn inputs(n: usize, seed: u64) -> (DenseMatrix, DenseMatrix) {
+    (DenseMatrix::random(n, n, seed), DenseMatrix::random(n, n, seed + 1))
+}
+
+/// Seeded soak: random chaos mode and rates up to 20%, all three
+/// algorithms, every run bit-identical to the chaos-free baseline and
+/// with recovery visible in the attempts ledger whenever it fired.
+#[test]
+fn seeded_chaos_soak_is_bit_identical_for_all_algorithms() {
+    let n = 32;
+    let b = 4;
+    let (a, bm) = inputs(n, 0x50AC);
+    let backend = Arc::new(NativeBackend::default());
+
+    let clean_ctx = SparkContext::new(ClusterConfig::new(2, 2));
+    let clean_stark =
+        stark_algo::multiply(&clean_ctx, backend.clone(), &a, &bm, b, &StarkConfig::default())
+            .unwrap();
+    let clean_marlin = marlin::multiply(&clean_ctx, backend.clone(), &a, &bm, b, &BASE).unwrap();
+    let clean_mllib = mllib::multiply(&clean_ctx, backend.clone(), &a, &bm, b, &BASE).unwrap();
+
+    assert_prop("chaos-soak", 0xC4A0_55ED, 8, |rng| {
+        let mode = rng.range(0, 5);
+        let rate = 0.02 + rng.next_f64() * 0.18; // (0.02, 0.20]
+        let chaos = ChaosConfig {
+            seed: rng.next_u64(),
+            fail_rate: if mode == 0 || mode == 4 { rate } else { 0.0 },
+            panic_rate: if mode == 1 || mode == 4 { rate * 0.5 } else { 0.0 },
+            slow_rate: if mode == 2 || mode == 4 { rate } else { 0.0 },
+            slow_factor: 8.0,
+            executor_loss_rate: if mode == 3 || mode == 4 { rate } else { 0.0 },
+            stage_contains: None,
+            fail_once_partition: None,
+        };
+        let ctx = SparkContext::new(chaos_cluster(chaos));
+        let s = stark_algo::multiply(&ctx, backend.clone(), &a, &bm, b, &StarkConfig::default())
+            .map_err(|e| format!("stark under chaos mode {mode}: {e}"))?;
+        let m = marlin::multiply(&ctx, backend.clone(), &a, &bm, b, &BASE)
+            .map_err(|e| format!("marlin under chaos mode {mode}: {e}"))?;
+        let l = mllib::multiply(&ctx, backend.clone(), &a, &bm, b, &BASE)
+            .map_err(|e| format!("mllib under chaos mode {mode}: {e}"))?;
+        for (name, got, clean) in [
+            ("stark", &s, &clean_stark),
+            ("marlin", &m, &clean_marlin),
+            ("mllib", &l, &clean_mllib),
+        ] {
+            if got.c.as_slice() != clean.c.as_slice() {
+                return Err(format!("{name} not bit-identical under chaos mode {mode}"));
+            }
+            // The attempts ledger never hides work: every retry,
+            // recompute, and speculative duplicate shows up here.
+            let floor = got.job.total_tasks()
+                + got.job.total_recomputed_partitions()
+                + got.job.total_speculative_wins();
+            if got.job.total_attempts() < floor {
+                return Err(format!(
+                    "{name}: attempts {} below observable work {floor}",
+                    got.job.total_attempts()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The PR acceptance expression `(A·B + C)·Dᵀ` — a chained multi-multiply
+/// job through the session API — survives mixed chaos bit-identically.
+#[test]
+fn acceptance_expression_survives_mixed_chaos_bit_identically() {
+    let n = 16;
+    let b = 2;
+    let am = DenseMatrix::random(n, n, 61);
+    let bm = DenseMatrix::random(n, n, 62);
+    let cm = DenseMatrix::random(n, n, 63);
+    let dm = DenseMatrix::random(n, n, 64);
+
+    let run = |cc: ClusterConfig| {
+        let s = StarkSession::builder().cluster(cc).build().unwrap();
+        let (a, bb) = (s.matrix(&am), s.matrix(&bm));
+        let (c, d) = (s.matrix(&cm), s.matrix(&dm));
+        a.multiply(&bb)
+            .algorithm(Algorithm::Stark)
+            .splits(Splits::Fixed(b))
+            .add(&c)
+            .multiply_with(&d.transpose(), Algorithm::Stark, Splits::Fixed(b))
+            .collect()
+            .unwrap()
+    };
+
+    let clean = run(ClusterConfig::new(2, 2));
+    for seed in [0xFEED_u64, 0xBEEF, 0x7A57] {
+        let chaotic = run(chaos_cluster(ChaosConfig {
+            seed,
+            fail_rate: 0.15,
+            panic_rate: 0.05,
+            slow_rate: 0.10,
+            slow_factor: 8.0,
+            executor_loss_rate: 0.10,
+            stage_contains: None,
+            fail_once_partition: None,
+        }));
+        assert_eq!(
+            clean.c.as_slice(),
+            chaotic.c.as_slice(),
+            "expression not bit-identical under chaos seed {seed:#x}"
+        );
+        assert!(chaotic.job.total_attempts() >= chaotic.job.total_tasks());
+    }
+}
+
+/// An immediate deadline cancels cleanly with the typed timeout — no
+/// partial result, no panic escaping the API.
+#[test]
+fn deadline_zero_times_out_with_typed_error() {
+    let (a, bm) = inputs(16, 0xDEAD);
+    let s = StarkSession::builder().cluster(ClusterConfig::new(2, 2)).build().unwrap();
+    let err = s
+        .matrix(&a)
+        .multiply(&s.matrix(&bm))
+        .algorithm(Algorithm::Stark)
+        .splits(Splits::Fixed(2))
+        .deadline(0)
+        .collect()
+        .unwrap_err();
+    match err {
+        StarkError::JobTimedOut { deadline_ms, .. } => assert_eq!(deadline_ms, 0),
+        other => panic!("expected JobTimedOut, got {other}"),
+    }
+}
+
+/// A generous deadline is invisible: same bits as the undeadlined run.
+#[test]
+fn generous_deadline_does_not_change_results() {
+    let (a, bm) = inputs(32, 0xD11E);
+    let s = StarkSession::builder().cluster(ClusterConfig::new(2, 2)).build().unwrap();
+    let (ha, hb) = (s.matrix(&a), s.matrix(&bm));
+    let plain =
+        ha.multiply(&hb).algorithm(Algorithm::Stark).splits(Splits::Fixed(4)).collect().unwrap();
+    let bounded = ha
+        .multiply(&hb)
+        .algorithm(Algorithm::Stark)
+        .splits(Splits::Fixed(4))
+        .deadline(120_000)
+        .collect()
+        .unwrap();
+    assert_eq!(plain.c.as_slice(), bounded.c.as_slice());
+}
+
+/// Total injection (fail every attempt) exhausts the bounded retry
+/// budget and surfaces as `TaskFailed` carrying the attempt count.
+#[test]
+fn total_injection_exhausts_retries_with_typed_task_failure() {
+    let (a, bm) = inputs(16, 0xFA11);
+    let mut cc = ClusterConfig::new(2, 2);
+    cc.chaos = Some(ChaosConfig { fail_rate: 1.0, ..Default::default() });
+    cc.max_task_attempts = 2;
+    let s = StarkSession::builder().cluster(cc).build().unwrap();
+    let err = s
+        .matrix(&a)
+        .multiply(&s.matrix(&bm))
+        .algorithm(Algorithm::Stark)
+        .splits(Splits::Fixed(2))
+        .collect()
+        .unwrap_err();
+    match err {
+        StarkError::TaskFailed { attempts, ref reason, .. } => {
+            assert_eq!(attempts, 2, "retry budget was 2 attempts: {err}");
+            assert!(reason.contains("chaos"), "reason should name the injection: {reason}");
+        }
+        ref other => panic!("expected TaskFailed, got {other}"),
+    }
+}
+
+/// Certain executor loss on every stage: each stage recomputes the lost
+/// executor's partitions from lineage, the count is observable, and the
+/// product is still bit-identical.
+#[test]
+fn certain_executor_loss_recomputes_from_lineage() {
+    let (a, bm) = inputs(32, 0x105E);
+    let backend = Arc::new(NativeBackend::default());
+    let clean_ctx = SparkContext::new(ClusterConfig::new(2, 2));
+    let clean =
+        stark_algo::multiply(&clean_ctx, backend.clone(), &a, &bm, 4, &StarkConfig::default())
+            .unwrap();
+    let ctx = SparkContext::new(chaos_cluster(ChaosConfig {
+        seed: 9,
+        executor_loss_rate: 1.0,
+        ..Default::default()
+    }));
+    let out =
+        stark_algo::multiply(&ctx, backend, &a, &bm, 4, &StarkConfig::default()).unwrap();
+    assert_eq!(clean.c.as_slice(), out.c.as_slice(), "recompute changed the product");
+    assert!(
+        out.job.total_recomputed_partitions() > 0,
+        "no lineage recompute recorded despite certain loss"
+    );
+    assert_eq!(
+        out.job.total_attempts(),
+        out.job.total_tasks() + out.job.total_recomputed_partitions(),
+        "each recomputed partition is exactly one extra attempt"
+    );
+}
+
+/// Slow-task injection plus speculation: across a few seeds at least one
+/// speculative duplicate beats its 1000×-inflated straggler, and every
+/// run stays bit-identical (the duplicate IS the same pure closure).
+#[test]
+fn speculation_beats_injected_stragglers() {
+    let (a, bm) = inputs(32, 0x57A6);
+    let backend = Arc::new(NativeBackend::default());
+    let clean_ctx = SparkContext::new(ClusterConfig::new(2, 2));
+    let clean =
+        stark_algo::multiply(&clean_ctx, backend.clone(), &a, &bm, 4, &StarkConfig::default())
+            .unwrap();
+    let mut wins = 0u64;
+    for seed in 0..4u64 {
+        let mut cc = chaos_cluster(ChaosConfig {
+            seed,
+            slow_rate: 0.25,
+            slow_factor: 1000.0,
+            ..Default::default()
+        });
+        cc.speculation_multiplier = Some(2.0);
+        let ctx = SparkContext::new(cc);
+        let out =
+            stark_algo::multiply(&ctx, backend.clone(), &a, &bm, 4, &StarkConfig::default())
+                .unwrap();
+        assert_eq!(clean.c.as_slice(), out.c.as_slice(), "speculation changed bits (seed {seed})");
+        wins += out.job.total_speculative_wins();
+    }
+    assert!(wins >= 1, "no speculative win across 4 seeds of 25% × 1000× stragglers");
+}
+
+/// Chaos off: the recovery machinery costs exactly nothing. Counters
+/// stay zero, attempts == tasks, and the stage ledger still matches the
+/// paper's eq. (25) stage count.
+#[test]
+fn chaos_off_has_zero_recovery_cost_and_keeps_the_eq25_ledger() {
+    let (a, bm) = inputs(32, 0x0FF);
+    let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+    let out = stark_algo::multiply(
+        &ctx,
+        Arc::new(NativeBackend::default()),
+        &a,
+        &bm,
+        4,
+        &StarkConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(out.job.stages.len(), predicted_stages(4), "eq. (25) ledger drifted");
+    for s in &out.job.stages {
+        assert_eq!(s.retries, 0, "stage {}: retry on a clean run", s.label);
+        assert_eq!(s.attempts, s.tasks as u32, "stage {}: phantom attempts", s.label);
+        assert_eq!(s.recomputed_partitions, 0, "stage {}", s.label);
+        assert_eq!(s.speculative_wins, 0, "stage {}", s.label);
+    }
+}

@@ -155,6 +155,65 @@ fn serve_concurrent_clients_bit_correct_and_isolated() {
     server.stop();
 }
 
+/// Regression: `wait` on a job that fails mid-retry must return the
+/// typed failure the moment the job dies — not poll until `timeout_ms`
+/// expires. The session injects certain task errors so the job exhausts
+/// its (small) retry budget almost instantly; the 120 s wait budget
+/// exists only to make any poll-to-deadline regression unmissable.
+#[test]
+fn wait_returns_typed_failure_immediately_not_at_timeout() {
+    let mut cc = ClusterConfig::new(2, 2);
+    cc.chaos = Some(stark::engine::ChaosConfig { fail_rate: 1.0, ..Default::default() });
+    cc.max_task_attempts = 3;
+    let session = StarkSession::builder()
+        .cluster(cc)
+        .backend(build_backend(BackendKind::Packed, 2).unwrap())
+        .build()
+        .unwrap();
+    let state = ServerState {
+        session,
+        default_splits: Splits::Fixed(2),
+        max_inflight_jobs: 4,
+        job_runners: 1,
+    };
+    let mut server = Server::start("127.0.0.1:0", state).unwrap();
+    let addr = server.addr().to_string();
+
+    let submitted = request(
+        &addr,
+        &Value::obj(vec![
+            ("op", Value::str("submit")),
+            ("algo", Value::str("stark")),
+            ("n", Value::num(32.0)),
+            ("b", Value::num(2.0)),
+            ("seed", Value::num(5.0)),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(submitted.get("ok"), Some(&Value::Bool(true)), "{submitted:?}");
+    let id = submitted.get("job_id").unwrap().as_u64().unwrap();
+
+    let started = std::time::Instant::now();
+    let resp = request(
+        &addr,
+        &Value::obj(vec![
+            ("op", Value::str("wait")),
+            ("job_id", Value::num(id as f64)),
+            ("timeout_ms", Value::num(120_000.0)),
+        ]),
+    )
+    .unwrap();
+    let waited = started.elapsed();
+    assert_eq!(resp.get("ok"), Some(&Value::Bool(false)), "doomed job succeeded: {resp:?}");
+    let err = resp.get("error").and_then(Value::as_str).unwrap_or_default();
+    assert!(err.contains("task failed"), "expected the typed TaskFailed text: {resp:?}");
+    assert!(
+        waited < std::time::Duration::from_secs(60),
+        "wait polled toward its timeout instead of returning the failure: {waited:?}"
+    );
+    server.stop();
+}
+
 #[test]
 fn engine_concurrent_multiplies_on_shared_context() {
     // The acceptance criterion at engine level: concurrent `run_job`

@@ -4,7 +4,7 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use stark::engine::{ClusterConfig, FailureSpec, HashPartitioner, SparkContext};
+use stark::engine::{ChaosConfig, ClusterConfig, HashPartitioner, SparkContext};
 
 fn ctx(execs: usize, cores: usize) -> SparkContext {
     SparkContext::new(ClusterConfig::new(execs, cores))
@@ -131,7 +131,7 @@ fn partition_by_respects_partitioner() {
 #[test]
 fn retry_preserves_exactly_once_output() {
     let mut cc = ClusterConfig::new(2, 2);
-    cc.failure = Some(FailureSpec { stage_contains: "wc".to_string(), partition: 1 });
+    cc.chaos = Some(ChaosConfig::fail_once("wc", 1));
     let ctx = SparkContext::new(cc);
     let pairs: Vec<(u32, u64)> = (0..100).map(|i| (i % 10, 1)).collect();
     let mut out = ctx.parallelize(pairs, 4).reduce_by_key("wc", 4, |a, b| a + b).collect("c");

@@ -7,7 +7,7 @@ use std::sync::Arc;
 use stark::algos::{marlin, mllib, stark as stark_algo, Algorithm, BaselineOptions, StarkConfig};
 use stark::api::StarkSession;
 use stark::cost::Splits;
-use stark::engine::{ClusterConfig, FailureSpec, SparkContext};
+use stark::engine::{ChaosConfig, ClusterConfig, SparkContext};
 use stark::matrix::{matmul_parallel, DenseMatrix};
 use stark::runtime::NativeBackend;
 
@@ -101,13 +101,18 @@ fn failure_injection_in_every_stark_phase_recovers() {
     let (a, b, want) = reference(64, 13);
     for phase in ["divide", "multiply", "combine", "result"] {
         let mut cc = ClusterConfig::new(2, 2);
-        cc.failure = Some(FailureSpec { stage_contains: phase.to_string(), partition: 0 });
+        cc.chaos = Some(ChaosConfig::fail_once(phase, 0));
         let ctx = SparkContext::new(cc);
         let out =
             stark_algo::multiply(&ctx, Arc::new(NativeBackend::default()), &a, &b, 4, &StarkConfig::default())
                 .unwrap();
         let retries: u32 = out.job.stages.iter().map(|s| s.retries).sum();
         assert_eq!(retries, 1, "phase {phase}: no retry recorded");
+        assert_eq!(
+            out.job.total_attempts(),
+            out.job.total_tasks() + 1,
+            "phase {phase}: attempts should exceed tasks by the one retry"
+        );
         assert!(want.allclose(&out.c, 1e-9), "phase {phase}: wrong result after recovery");
     }
 }
@@ -117,7 +122,7 @@ fn failure_injection_in_baselines_recovers() {
     let (a, b, want) = reference(64, 17);
     for phase in ["stage3", "stage4"] {
         let mut cc = ClusterConfig::new(2, 2);
-        cc.failure = Some(FailureSpec { stage_contains: phase.to_string(), partition: 0 });
+        cc.chaos = Some(ChaosConfig::fail_once(phase, 0));
         let ctx = SparkContext::new(cc);
         let backend = Arc::new(NativeBackend::default());
         let m = marlin::multiply(&ctx, backend.clone(), &a, &b, 4, &BASE).unwrap();
