@@ -12,6 +12,9 @@
 //!   channel + literal marshalling + execute;
 //! - the fused `strassen_leaf` artifact vs 7 separate dispatches;
 //! - engine overhead: an empty-payload stark run (coordination cost);
+//! - communication volume: stark's shuffle vs cannon's barrier peer
+//!   exchange on a matched workload (§Comm — the `stark_bench comm`
+//!   grid in miniature, with its WIN/CHECK verdict);
 //! - divide/combine signed block additions.
 
 use std::time::Duration;
@@ -209,6 +212,16 @@ fn main() -> anyhow::Result<()> {
                 "NOT strictly lower (REGRESSION)"
             }
         );
+    }
+
+    print_header("communication volume: stark shuffle vs cannon peer exchange");
+    {
+        // The stark_bench comm grid in miniature: matched (n, b) points
+        // across two core budgets, including the infeasible-gang marker
+        // row, ending in the same WIN/CHECK verdict line.
+        use stark::experiments::comm;
+        let points = comm::run(64, &[2, 4], &[4, 16], 13);
+        comm::print_table(&points);
     }
 
     print_header("divide/combine signed block additions (256x256)");

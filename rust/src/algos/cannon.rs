@@ -1,0 +1,375 @@
+//! **Cannon's algorithm** over the barrier engine (DESIGN.md S21) —
+//! the communication-avoiding fourth [`MultiplyAlgorithm`].
+//!
+//! Where stark/marlin/mllib route every block through the shuffle path,
+//! Cannon runs a `g × g` gang (`g = b`) of lock-step supersteps with
+//! point-to-point ring shifts ([`crate::engine::barrier`]), JAMPI-style
+//! (PAPERS.md):
+//!
+//! - *Superstep 0 (skew)*: owner `(i, j)` sends its `A` block to
+//!   `(i, (j − i) mod g)` and its `B` block to `((i − j) mod g, j)`,
+//!   keeping blocks whose skew target is itself (row/column 0).
+//! - *Supersteps 1..=g (shift-multiply-accumulate)*: each owner holds
+//!   exactly the `A(i, k)`/`B(k, j)` pair with `k = (i + j + s − 1) mod
+//!   g`, multiplies it, buffers the partial keyed by `k`, and (before
+//!   the last superstep) shifts `A` one hop left on its row ring and
+//!   `B` one hop up on its column ring.
+//! - *Finalize*: each owner folds its `g` partials in **ascending-`k`
+//!   order** — a fixed accumulation order, so the result is
+//!   bit-reproducible across runs, partitionings, and chaos recovery
+//!   (and bit-identical to a serial ascending-`k` blocked reference;
+//!   it cannot be bit-identical to an *unblocked* dense loop or to
+//!   Strassen, whose float additions associate differently).
+//!
+//! The multiply stages write **zero shuffle bytes**: all traffic lands
+//! in [`StageMetrics`](crate::engine::StageMetrics) `peer_bytes` /
+//! `peer_msgs`. Total volume is `2g²` block sends (skew) plus
+//! `2g²(g−1)` shifts — the planner's β-term (no `b³` replication, no
+//! grouping), which is why [`Algorithm::Auto`] picks Cannon in small-b
+//! square memory-tight regimes (see `cost::planner`).
+
+use std::sync::Arc;
+
+use crate::algos::common::{
+    arc_add, Algorithm, BlockSplits, MultiplyAlgorithm, TimingBackend,
+};
+use crate::engine::{barrier_lineage, run_barrier, Block, Dist, GridCoord, Side, Sizable, Tag};
+use crate::error::StarkError;
+use crate::matrix::DenseMatrix;
+
+/// One ring-shifted operand in flight between supersteps.
+#[derive(Clone, PartialEq)]
+enum CannonMsg {
+    A(Arc<DenseMatrix>),
+    B(Arc<DenseMatrix>),
+}
+
+impl Sizable for CannonMsg {
+    fn approx_bytes(&self) -> usize {
+        // Discriminant word + block payload.
+        let (CannonMsg::A(m) | CannonMsg::B(m)) = self;
+        std::mem::size_of::<u64>() + m.approx_bytes()
+    }
+}
+
+/// Per-owner superstep state: the currently-held operand pair and the
+/// accumulated keyed partials.
+#[derive(Clone, PartialEq)]
+struct CannonState {
+    a: Option<Arc<DenseMatrix>>,
+    b: Option<Arc<DenseMatrix>>,
+    /// `(k, A(i,k)·B(k,j))` partial products, in arrival order; the
+    /// finalize pass sorts by `k` for the fixed accumulation order.
+    partials: Vec<(usize, Arc<DenseMatrix>)>,
+}
+
+/// [`MultiplyAlgorithm`] implementation of Cannon's algorithm.
+pub struct Cannon;
+
+impl Cannon {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl MultiplyAlgorithm for Cannon {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Cannon
+    }
+
+    fn multiply_dist(
+        &self,
+        backend: &Arc<TimingBackend>,
+        da: Dist<Block>,
+        db: Dist<Block>,
+        n: usize,
+        b: usize,
+        prefix: &str,
+    ) -> Result<Dist<Block>, StarkError> {
+        let job = da.job().clone();
+        let g = b;
+        let p = g * g;
+        let cores = job.config().total_cores();
+        if p > cores {
+            return Err(StarkError::invalid_splits(
+                Algorithm::Cannon,
+                b,
+                n,
+                format!(
+                    "Cannon's gang needs b² = {p} simultaneous slots but the cluster has \
+                     {cores} cores (all-or-nothing gang admission)"
+                ),
+            ));
+        }
+
+        // Gather the operand blocks to the driver (compute-only stages,
+        // no shuffle) and lay them out in row-major gang order.
+        let mut grid_a: Vec<Option<Arc<DenseMatrix>>> = vec![None; p];
+        for blk in da.collect(&format!("{prefix}cannon/gatherA")) {
+            grid_a[blk.row as usize * g + blk.col as usize] = Some(blk.data);
+        }
+        let mut grid_b: Vec<Option<Arc<DenseMatrix>>> = vec![None; p];
+        for blk in db.collect(&format!("{prefix}cannon/gatherB")) {
+            grid_b[blk.row as usize * g + blk.col as usize] = Some(blk.data);
+        }
+        let init: Vec<CannonState> = grid_a
+            .into_iter()
+            .zip(grid_b)
+            .map(|(a, b)| CannonState {
+                a: Some(a.expect("A block for every grid cell")),
+                b: Some(b.expect("B block for every grid cell")),
+                partials: Vec::new(),
+            })
+            .collect();
+
+        let be = backend.clone();
+        let barrier_label = format!("{prefix}cannon");
+        let final_states = run_barrier(
+            &job,
+            &barrier_label,
+            g,
+            g + 1,
+            init,
+            move |s, coord, mut st: CannonState, ctx| {
+                ctx.barrier();
+                for (_, msg) in ctx.recv_all() {
+                    match msg {
+                        CannonMsg::A(m) => st.a = Some(m),
+                        CannonMsg::B(m) => st.b = Some(m),
+                    }
+                }
+                let (i, j) = (coord.row as usize, coord.col as usize);
+                if s == 0 {
+                    // Skew: align so this owner's first pair is k = (i+j) mod g.
+                    let a_to = GridCoord { row: coord.row, col: ((j + g - i) % g) as u32 };
+                    let b_to = GridCoord { row: ((i + g - j) % g) as u32, col: coord.col };
+                    if a_to != coord {
+                        ctx.send(a_to, CannonMsg::A(st.a.take().expect("A held before skew")));
+                    }
+                    if b_to != coord {
+                        ctx.send(b_to, CannonMsg::B(st.b.take().expect("B held before skew")));
+                    }
+                } else {
+                    let a = st.a.clone().expect("A operand arrived for this superstep");
+                    let bm = st.b.clone().expect("B operand arrived for this superstep");
+                    let k = (i + j + s - 1) % g;
+                    st.partials.push((k, Arc::new(be.multiply(&a, &bm))));
+                    if s < g {
+                        // Ring shift: A one hop left, B one hop up.
+                        let a_to = coord.left(g);
+                        let b_to = coord.up(g);
+                        if a_to != coord {
+                            ctx.send(a_to, CannonMsg::A(st.a.take().expect("A held")));
+                        }
+                        if b_to != coord {
+                            ctx.send(b_to, CannonMsg::B(st.b.take().expect("B held")));
+                        }
+                    }
+                }
+                st
+            },
+        );
+
+        // Finalize: ascending-k fold per owner — the fixed accumulation
+        // order bit-reproducibility rests on.
+        let mut parts: Vec<Vec<Block>> = Vec::with_capacity(p);
+        for (part, st) in final_states.into_iter().enumerate() {
+            let coord = GridCoord::of(part, g);
+            let mut partials = st.partials;
+            partials.sort_by_key(|(k, _)| *k);
+            let mut it = partials.into_iter();
+            let (_, first) = it.next().expect("every owner multiplied g pairs");
+            let sum = it.fold(first, |acc, (_, m)| arc_add(acc, m));
+            parts.push(vec![Block::new(coord.row, coord.col, Tag::new(Side::M, 0), sum)]);
+        }
+        let lineage = barrier_lineage(
+            &format!("{barrier_label}/barrier"),
+            g,
+            &job,
+            vec![da.lineage().clone(), db.lineage().clone()],
+        );
+        Ok(job.from_partitions(parts).with_lineage(lineage))
+    }
+}
+
+/// Multiply `a @ b_mat` with Cannon's algorithm over a `b × b` gang.
+pub fn multiply(
+    ctx: &crate::engine::SparkContext,
+    backend: Arc<dyn crate::runtime::LeafBackend>,
+    a: &DenseMatrix,
+    b_mat: &DenseMatrix,
+    b: usize,
+) -> Result<crate::algos::common::MultiplyOutput, StarkError> {
+    Cannon::new().multiply(ctx, backend, a, b_mat, b)
+}
+
+/// Multiply two pre-split operands with Cannon (the cached-handle path).
+pub fn multiply_splits(
+    ctx: &crate::engine::SparkContext,
+    backend: Arc<dyn crate::runtime::LeafBackend>,
+    sa: &BlockSplits,
+    sb: &BlockSplits,
+) -> Result<crate::algos::common::MultiplyOutput, StarkError> {
+    Cannon::new().multiply_splits(ctx, backend, sa, sb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::common::{BaselineOptions, MultiplyOutput};
+    use crate::analyze::analyze_lineage;
+    use crate::engine::{ClusterConfig, SparkContext};
+    use crate::matrix::multiply::matmul_naive;
+    use crate::runtime::{LeafBackend, NativeBackend};
+
+    /// A cluster wide enough to admit a `b × b` gang.
+    fn ctx_for(b: usize) -> SparkContext {
+        SparkContext::new(ClusterConfig::new(b.max(2), b.max(2)))
+    }
+
+    fn run_cannon(n: usize, b: usize) -> (MultiplyOutput, DenseMatrix, DenseMatrix, DenseMatrix) {
+        let a = DenseMatrix::random(n, n, 700 + n as u64);
+        let bm = DenseMatrix::random(n, n, 800 + n as u64);
+        let want = matmul_naive(&a, &bm);
+        let out =
+            multiply(&ctx_for(b), Arc::new(NativeBackend::default()), &a, &bm, b).unwrap();
+        (out, a, bm, want)
+    }
+
+    #[test]
+    fn correct_across_partitionings() {
+        for b in [1usize, 2, 4] {
+            let (out, _, _, want) = run_cannon(16, b);
+            assert!(want.allclose(&out.c, 1e-10), "cannon wrong at b={b}");
+        }
+    }
+
+    /// Bit-identity pin: Cannon's ascending-k fold must reproduce a
+    /// serial blocked reference that multiplies with the same leaf
+    /// backend and accumulates in the same order — exactly, not just
+    /// within tolerance. (Bit-identity to the *unblocked* dense loop or
+    /// to Strassen is impossible: their float sums associate
+    /// differently.)
+    #[test]
+    fn bit_identical_to_serial_ascending_k_blocked_reference() {
+        for (n, b) in [(12usize, 2usize), (16, 4)] {
+            let (out, a, bm, _) = run_cannon(n, b);
+            let backend = NativeBackend::default();
+            let sa = BlockSplits::of(&a, b).unwrap();
+            let sb = BlockSplits::of(&bm, b).unwrap();
+            let mut blocks = Vec::new();
+            for i in 0..b {
+                for j in 0..b {
+                    let mut acc: Option<Arc<DenseMatrix>> = None;
+                    for k in 0..b {
+                        let prod = Arc::new(backend.multiply(sa.block_at(i, k), sb.block_at(k, j)));
+                        acc = Some(match acc {
+                            None => prod,
+                            Some(sum) => arc_add(sum, prod),
+                        });
+                    }
+                    blocks.push((i, j, (*acc.unwrap()).clone()));
+                }
+            }
+            let want = DenseMatrix::assemble_blocks(b, n / b, &blocks);
+            assert_eq!(out.c, want, "cannon diverged bitwise at n={n} b={b}");
+        }
+    }
+
+    /// Cross-algorithm agreement on identical operands (allclose: the
+    /// systems associate their float additions differently by design).
+    #[test]
+    fn agrees_with_stark_and_mllib() {
+        let n = 16;
+        let a = DenseMatrix::random(n, n, 71);
+        let bm = DenseMatrix::random(n, n, 72);
+        let cannon = multiply(&ctx_for(4), Arc::new(NativeBackend::default()), &a, &bm, 4)
+            .unwrap();
+        let mllib = crate::algos::mllib::multiply(
+            &ctx_for(4),
+            Arc::new(NativeBackend::default()),
+            &a,
+            &bm,
+            4,
+            &BaselineOptions::default(),
+        )
+        .unwrap();
+        let stark = crate::algos::stark::multiply(
+            &ctx_for(4),
+            Arc::new(NativeBackend::default()),
+            &a,
+            &bm,
+            4,
+            &crate::algos::StarkConfig::default(),
+        )
+        .unwrap();
+        assert!(cannon.c.allclose(&mllib.c, 1e-10));
+        assert!(cannon.c.allclose(&stark.c, 1e-10));
+    }
+
+    /// The headline observable: Cannon's job writes ZERO shuffle bytes
+    /// while the superstep stages exchange nonzero peer traffic.
+    #[test]
+    fn zero_shuffle_write_nonzero_peer_exchange() {
+        let (out, _, _, _) = run_cannon(16, 2);
+        assert_eq!(out.job.total_shuffle_bytes(), 0, "cannon must never touch the shuffle path");
+        assert!(out.job.total_peer_bytes() > 0, "ring shifts must be accounted as peer traffic");
+        let supersteps: Vec<_> =
+            out.job.stages.iter().filter(|s| s.label.contains("cannon/superstep/")).collect();
+        assert_eq!(supersteps.len(), 3, "skew + g multiply supersteps for b=2");
+        for s in &supersteps {
+            assert_eq!(s.shuffle_bytes, 0, "{}: barrier stages never shuffle", s.label);
+            assert_eq!(s.pf, 4, "{}: the whole gang runs concurrently", s.label);
+        }
+        // Skew sends at most 2 blocks/owner; shifts happen in every
+        // non-final multiply superstep.
+        assert!(supersteps[0].peer_bytes > 0, "skew exchanges blocks");
+        assert!(supersteps[1].peer_bytes > 0, "shift exchanges blocks");
+        assert_eq!(supersteps[2].peer_msgs, 0, "final superstep only multiplies");
+    }
+
+    #[test]
+    fn leaf_count_is_b_cubed() {
+        for b in [2usize, 4] {
+            let (out, _, _, _) = run_cannon(16, b);
+            assert_eq!(out.leaf_calls, (b * b * b) as u64, "g³ block multiplies at b={b}");
+        }
+    }
+
+    /// A gang wider than the cluster is a typed error at validation
+    /// time, not a panic from the scheduler.
+    #[test]
+    fn oversized_gang_is_a_typed_error() {
+        let ctx = SparkContext::new(ClusterConfig::new(2, 2)); // 4 cores
+        let a = DenseMatrix::random(16, 16, 9);
+        let err = multiply(&ctx, Arc::new(NativeBackend::default()), &a, &a, 4)
+            .expect_err("b=4 needs 16 slots on 4 cores");
+        match err {
+            StarkError::InvalidSplits { algorithm: Algorithm::Cannon, b: 4, reason, .. } => {
+                assert!(reason.contains("gang"), "{reason}");
+            }
+            other => panic!("expected InvalidSplits, got {other:?}"),
+        }
+    }
+
+    /// The product's lineage is the honest barrier node — and the
+    /// static analyzer finds nothing wrong with it (A008/A009 clean).
+    #[test]
+    fn product_lineage_is_an_analyzer_clean_barrier_node() {
+        let ctx = ctx_for(2);
+        let job = ctx.run_job("cannon-lineage");
+        let a = DenseMatrix::random(8, 8, 31);
+        let sa = BlockSplits::of(&a, 2).unwrap();
+        let algo = Cannon::new();
+        let da = algo.distribute(&job, &sa, Side::A);
+        let db = algo.distribute(&job, &sa, Side::B);
+        let timing = TimingBackend::new(Arc::new(NativeBackend::default()));
+        let product = algo.multiply_dist(&timing, da, db, 8, 2, "").unwrap();
+        let root = product.lineage();
+        assert_eq!(root.op, "barrier");
+        assert_eq!(root.num_parts, 4, "g² gang members");
+        let diags = analyze_lineage(root);
+        assert!(diags.is_empty(), "cannon lineage must analyze clean: {diags:?}");
+    }
+}

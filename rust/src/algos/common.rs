@@ -9,7 +9,7 @@ use crate::matrix::DenseMatrix;
 use crate::runtime::LeafBackend;
 
 /// Which distributed algorithm to run. `Auto` defers the choice to the
-/// cost-model planner ([`crate::cost::Planner`]); the three concrete
+/// cost-model planner ([`crate::cost::Planner`]); the four concrete
 /// variants dispatch through [`MultiplyAlgorithm`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algorithm {
@@ -22,12 +22,17 @@ pub enum Algorithm {
     Marlin,
     /// Spark MLLib `BlockMatrix.multiply` baseline.
     Mllib,
+    /// Cannon's communication-avoiding multiply over the barrier engine
+    /// (JAMPI-style: gang-scheduled supersteps, point-to-point ring
+    /// shifts, zero shuffle write).
+    Cannon,
 }
 
 impl Algorithm {
     /// All concrete systems, in the paper's comparison order (`Auto` is
     /// a selector, not a system — it never appears here).
-    pub const ALL: [Algorithm; 3] = [Algorithm::Mllib, Algorithm::Marlin, Algorithm::Stark];
+    pub const ALL: [Algorithm; 4] =
+        [Algorithm::Mllib, Algorithm::Marlin, Algorithm::Stark, Algorithm::Cannon];
 }
 
 impl std::str::FromStr for Algorithm {
@@ -39,7 +44,8 @@ impl std::str::FromStr for Algorithm {
             "stark" => Ok(Algorithm::Stark),
             "marlin" => Ok(Algorithm::Marlin),
             "mllib" => Ok(Algorithm::Mllib),
-            other => Err(format!("unknown algorithm {other:?} (auto|stark|marlin|mllib)")),
+            "cannon" => Ok(Algorithm::Cannon),
+            other => Err(format!("unknown algorithm {other:?} (auto|stark|marlin|mllib|cannon)")),
         }
     }
 }
@@ -51,6 +57,7 @@ impl std::fmt::Display for Algorithm {
             Algorithm::Stark => write!(f, "stark"),
             Algorithm::Marlin => write!(f, "marlin"),
             Algorithm::Mllib => write!(f, "mllib"),
+            Algorithm::Cannon => write!(f, "cannon"),
         }
     }
 }
@@ -320,10 +327,11 @@ pub struct BaselineOptions {
 }
 
 /// One distributed multiplication strategy. Implemented by
-/// [`crate::algos::stark::Stark`], [`crate::algos::marlin::Marlin`] and
-/// [`crate::algos::mllib::Mllib`], each carrying its own narrowed
-/// options; `Algorithm::Auto` is resolved by the planner *before* an
-/// implementation is constructed (see [`implementation`]).
+/// [`crate::algos::stark::Stark`], [`crate::algos::marlin::Marlin`],
+/// [`crate::algos::mllib::Mllib`] and [`crate::algos::cannon::Cannon`],
+/// each carrying its own narrowed options; `Algorithm::Auto` is resolved
+/// by the planner *before* an implementation is constructed (see
+/// [`implementation`]).
 ///
 /// The distributed core is [`multiply_dist`](Self::multiply_dist): block
 /// RDDs in, block RDD out, **no collection** — the expression layer
@@ -484,6 +492,7 @@ pub fn implementation(
         Algorithm::Stark => Ok(Box::new(crate::algos::stark::Stark::new(stark_cfg.clone()))),
         Algorithm::Marlin => Ok(Box::new(crate::algos::marlin::Marlin::new(baseline))),
         Algorithm::Mllib => Ok(Box::new(crate::algos::mllib::Mllib::new(baseline))),
+        Algorithm::Cannon => Ok(Box::new(crate::algos::cannon::Cannon::new())),
         Algorithm::Auto => Err(StarkError::AutoUnresolved),
     }
 }

@@ -79,7 +79,14 @@ mod tests {
         let a = DenseMatrix::random(m, k, (m * 31 + k) as u64);
         let bm = DenseMatrix::random(k, n, (k * 37 + n) as u64);
         let want = matmul_naive(&a, &bm);
-        let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+        // Cannon's all-or-nothing gang needs b² simultaneous slots, so it
+        // gets a b×b cluster; the other systems keep the tight 2×2 shape
+        // on purpose (more tasks than cores exercises the queueing path).
+        let ctx = if algo == Algorithm::Cannon {
+            SparkContext::new(ClusterConfig::new(b, b))
+        } else {
+            SparkContext::new(ClusterConfig::new(2, 2))
+        };
         let out = multiply_general(
             algo,
             &ctx,

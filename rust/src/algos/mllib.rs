@@ -89,6 +89,8 @@ impl MultiplyAlgorithm for Mllib {
             shuffle_bytes: sim_bytes,
             remote_bytes: sim_bytes,
             net_wait_ms: 0.0,
+            peer_bytes: 0,
+            peer_msgs: 0,
             records_out: (2 * b * b) as u64,
             combined_records: 0,
             pf: 1,

@@ -4,15 +4,19 @@
 //!   Strassen (Algorithms 2–5).
 //! - [`marlin`] — the Marlin baseline (Gu et al.), paper Fig. 6 plan.
 //! - [`mllib`] — the MLLib `BlockMatrix` baseline, paper Fig. 5 plan.
+//! - [`cannon`] — Cannon's communication-avoiding multiply over the
+//!   barrier engine (JAMPI-style): point-to-point ring shifts, zero
+//!   shuffle write.
 //! - [`common`] — shared plumbing: cached [`BlockSplits`] ⇄
 //!   `Dist<Block>` conversion, result assembly, leaf-time
-//!   instrumentation, and the [`MultiplyAlgorithm`] trait the three
+//!   instrumentation, and the [`MultiplyAlgorithm`] trait the four
 //!   systems implement (dispatched by the session API / planner —
 //!   there is no positional enum dispatcher anymore). The trait's core
 //!   is [`MultiplyAlgorithm::multiply_dist`]: distributed blocks in,
 //!   distributed product out, which is what lets the expression layer
 //!   ([`crate::api::DistExpr`]) chain multiplies without collecting.
 
+pub mod cannon;
 pub mod common;
 pub mod general;
 pub mod marlin;

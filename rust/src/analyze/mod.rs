@@ -56,6 +56,15 @@ pub const STAGE_LEDGER_MISMATCH: &str = "STARK-A006";
 /// Duplicate stage label within one plan — metrics and ledger checks
 /// would aggregate unrelated stages.
 pub const DUPLICATE_STAGE_LABEL: &str = "STARK-A007";
+/// Barrier gang shape: a barrier dataset's partition count must be a
+/// perfect square `g²` — the gang is a `g × g` grid and all-or-nothing
+/// admission has no notion of a partial grid.
+pub const BARRIER_GANG_SHAPE: &str = "STARK-A008";
+/// Barrier skew/routing misalignment: a barrier dataset must be routed
+/// by a grid-coordinate-grouped partitioner covering exactly the gang's
+/// slots, or Cannon-style skew/shift sends would land on the wrong
+/// members.
+pub const BARRIER_MISROUTED: &str = "STARK-A009";
 
 /// How bad a finding is. `Error` findings reject the plan under the
 /// strict/debug hooks; `Warning`s report but do not block (the CLI still
@@ -150,6 +159,13 @@ fn check_lineage_node(node: &LineageNode, out: &mut Vec<Diagnostic>) {
     if node.kind != OpKind::Wide {
         return;
     }
+    if node.op == "barrier" {
+        // Barrier datasets are point-to-point gang output, not shuffles:
+        // they get the gang-shape/skew checks instead of the
+        // divide/combine partitioner checks below.
+        check_barrier_node(node, out);
+        return;
+    }
     if node.grouped && !node.key_ord {
         out.push(error(
             UNORDERED_GROUP_KEY,
@@ -182,6 +198,43 @@ fn check_lineage_node(node: &LineageNode, out: &mut Vec<Diagnostic>) {
                 ),
             ));
         }
+    }
+}
+
+/// Barrier-node invariants (A008/A009): the gang must be a full `g × g`
+/// grid, and its output must be routed by the grid-coordinate
+/// partitioner over exactly the gang's slots. The engine's
+/// [`barrier_lineage`](crate::engine::barrier_lineage) constructor
+/// always builds this shape; these checks catch hand-built or mutated
+/// plans before they reach the gang scheduler.
+fn check_barrier_node(node: &LineageNode, out: &mut Vec<Diagnostic>) {
+    let p = node.num_parts;
+    let g = (p as f64).sqrt().round() as usize;
+    if g * g != p {
+        out.push(error(
+            BARRIER_GANG_SHAPE,
+            node_name(node),
+            format!(
+                "barrier dataset has {p} partitions, which is not a perfect square — the gang \
+                 must form a g×g grid for skew/shift routing and all-or-nothing admission"
+            ),
+        ));
+    }
+    let desc = node.partitioner.as_ref();
+    let grid_aligned = matches!(desc.map(|d| &d.alignment), Some(Alignment::Grouped(_)));
+    let covers_gang = desc.map_or(false, |d| d.parts == p);
+    if !grid_aligned || !covers_gang {
+        let got = desc
+            .map(|d| format!("{} ({:?}, {} parts)", d.name, d.alignment, d.parts))
+            .unwrap_or_else(|| "none".to_string());
+        out.push(error(
+            BARRIER_MISROUTED,
+            node_name(node),
+            format!(
+                "barrier dataset of {p} partitions routed by {got} — skew/shift sends must be \
+                 grid-coordinate-grouped over exactly the gang's slots"
+            ),
+        ));
     }
 }
 
@@ -431,6 +484,75 @@ mod tests {
         assert_eq!(diags[0].code, CROSS_JOB_MIX);
         assert_eq!(diags[0].severity, Severity::Error);
         assert!(diags[0].message.contains("job 2"), "{}", diags[0].message);
+    }
+
+    /// A barrier node as [`crate::engine::barrier_lineage`] would build
+    /// it, for the tests to mutate into each malformed shape.
+    fn barrier_node(parts: usize) -> LineageNode {
+        let mut node = (*leaf(1)).clone();
+        node.kind = OpKind::Wide;
+        node.op = "barrier";
+        node.label = Some("cannon/barrier".into());
+        node.grouped = false;
+        node.partitioner = Some(PartitionerDesc {
+            name: "barrier-grid",
+            parts,
+            alignment: Alignment::Grouped("grid-coordinate"),
+        });
+        node.num_parts = parts;
+        node.parents = vec![leaf(1)];
+        node
+    }
+
+    #[test]
+    fn non_square_barrier_gang_is_a008() {
+        // 6 slots cannot form a g×g grid; the partitioner still covers
+        // all 6, so A009 stays quiet and the test pins exactly A008.
+        let diags = analyze_lineage(&Arc::new(barrier_node(6)));
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, BARRIER_GANG_SHAPE);
+        assert_eq!(diags[0].severity, Severity::Error);
+    }
+
+    #[test]
+    fn misrouted_barrier_is_a009() {
+        // Hash routing: grid sends would land on arbitrary members.
+        let mut node = barrier_node(4);
+        node.partitioner =
+            Some(PartitionerDesc { name: "hash", parts: 4, alignment: Alignment::KeyHash });
+        let diags = analyze_lineage(&Arc::new(node));
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, BARRIER_MISROUTED);
+        assert_eq!(diags[0].severity, Severity::Error);
+
+        // No partitioner at all is equally misrouted.
+        let mut node = barrier_node(4);
+        node.partitioner = None;
+        let diags = analyze_lineage(&Arc::new(node));
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, BARRIER_MISROUTED);
+
+        // Grid-grouped but covering the wrong slot count: the skew
+        // would wrap at the partitioner's g, not the gang's.
+        let mut node = barrier_node(4);
+        node.partitioner = Some(PartitionerDesc {
+            name: "barrier-grid",
+            parts: 2,
+            alignment: Alignment::Grouped("grid-coordinate"),
+        });
+        let diags = analyze_lineage(&Arc::new(node));
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, BARRIER_MISROUTED);
+    }
+
+    #[test]
+    fn engine_built_barrier_lineage_passes_clean() {
+        // The real constructor (the shape every Cannon product carries)
+        // must satisfy its own analyzer.
+        let ctx = crate::engine::SparkContext::new(crate::engine::ClusterConfig::new(2, 2));
+        let job = ctx.run_job("barrier-analyze");
+        let node = crate::engine::barrier_lineage("cannon/barrier", 3, &job, vec![leaf(job.id())]);
+        assert!(analyze_lineage(&node).is_empty(), "{:?}", analyze_lineage(&node));
     }
 
     fn stark_plan(n: usize, b: usize) -> Plan {

@@ -503,16 +503,19 @@ mod tests {
     #[test]
     fn auto_selects_across_the_crossover_in_execution() {
         // Same workload, both sides of the crossover: the default
-        // calibration puts n=256 on the baseline side; a comm-free
-        // calibration (β = 0) moves the crossover below it, so Auto
-        // picks Stark. Both runs must produce the right product.
+        // calibration puts n=256 on the baseline side, where Cannon now
+        // wins — its cost is MLLib's minus the replicated-copy compute,
+        // and its 4-slot gang (b = 2) fits this 2×2 cluster — while a
+        // comm-free calibration (β = 0) moves the crossover below n=256,
+        // so Auto picks Stark. Both runs must produce the right product,
+        // the first one through the barrier engine end to end.
         let am = DenseMatrix::random(256, 256, 9);
         let bm = DenseMatrix::random(256, 256, 10);
         let want = matmul_naive(&am, &bm);
 
         let default_side = session();
         let r = default_side.matrix(&am).multiply(&default_side.matrix(&bm)).collect().unwrap();
-        assert_eq!((r.plan.algorithm, r.plan.b), (Algorithm::Mllib, 2));
+        assert_eq!((r.plan.algorithm, r.plan.b), (Algorithm::Cannon, 2));
         assert!(want.allclose(&r.c, 1e-9));
 
         let comp_only = StarkSession::builder()

@@ -1,7 +1,7 @@
 //! `stark-bench` — regenerates every table and figure of the paper's
 //! evaluation (§V) and writes JSON reports.
 //!
-//! USAGE: stark-bench <fig8|fig9|fig10|fig11|fig12|table6|table7|ablations|kernel|all>
+//! USAGE: stark-bench <fig8|fig9|fig10|fig11|fig12|table6|table7|ablations|kernel|comm|all>
 //!          [--out DIR] [--sizes 512,1024,2048] [--bs 2,4,8,16]
 //!          [--backend naive|blocked|packed|xla|xla-pallas] [--executors 2]
 //!          [--cores 2] [--net-mbps 1750] [--seed 42]
@@ -16,6 +16,11 @@
 //! `kernel --cutoff-sweep [--cutoff-n 512] [--cutoffs 64,128,256,512]`
 //! additionally measures the Strassen/Winograd recursion cutoff and
 //! prints a CONFIRMED/RETUNE verdict against `DEFAULT_THRESHOLD`.
+//!
+//! `comm` is the communication-volume comparison (EXPERIMENTS.md §Comm):
+//! Stark's shuffle bytes vs Cannon's barrier peer exchanges at matched
+//! `(n, b)` across core budgets, written to `BENCH_comm.json`.
+//! `comm [--n 256] [--bs 4,8] [--grid-cores 4,16,25] [--smoke]`.
 
 use anyhow::Result;
 
@@ -56,6 +61,22 @@ fn main() -> Result<()> {
             )
         });
         let path = experiments::kernel::run_and_save(&sizes, budget, &out, sweep)?;
+        println!("wrote {}", path.display());
+        return Ok(());
+    }
+    if which == "comm" {
+        // Communication-volume grid: simulated clusters only, no
+        // artifacts. Smoke keeps b small enough that at least one
+        // cannon gang is admissible on the 4-core budget.
+        let smoke = args.flag("smoke");
+        let n = args.get("n", if smoke { 64usize } else { 256 });
+        let default_bs: &[usize] = if smoke { &[2, 4] } else { &[4, 8] };
+        let bs = args.get_list("bs", default_bs);
+        let default_cores: &[usize] = if smoke { &[4, 16] } else { &[4, 16, 25] };
+        let cores_grid = args.get_list("grid-cores", default_cores);
+        let out = args.raw("out").unwrap_or(".").to_string();
+        let seed = args.get("seed", 42u64);
+        let path = experiments::comm::run_and_save(n, &bs, &cores_grid, seed, &out)?;
         println!("wrote {}", path.display());
         return Ok(());
     }

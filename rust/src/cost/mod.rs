@@ -168,6 +168,42 @@ pub fn stark_cost(n: usize, b: usize, cores: usize) -> CostBreakdown {
     CostBreakdown { system: "stark", stages }
 }
 
+/// Cannon cost model (communication-avoiding multiply over the barrier
+/// engine, DESIGN.md S21 — not in the paper's Tables; derived the same
+/// way from the superstep protocol).
+///
+/// A `g × g` gang (`g = b`) holds exactly one `A` and one `B` block per
+/// worker at all times — no replication, no grouping:
+///
+/// - *skew*: each worker forwards its two blocks once → `2n²` elements
+///   moved, point-to-point;
+/// - *supersteps*: `g` rounds of one `(n/b)³`-element block multiply and
+///   one `(n/b)²` accumulate per worker (`b² · g · (n/b)³ = n³` multiply
+///   ops + `g·n²` add ops), with `g − 1` ring shifts of both operands in
+///   between (`≤ 2g·n²` elements moved).
+///
+/// All `g²` gang members run concurrently by construction (all-or-nothing
+/// admission), so PF is `min[b², cores]` throughout; the ring volume has
+/// **no shuffle term** — each element moves driver-routed exactly once per
+/// hop, with no replication factor in front. That is what tilts the
+/// planner toward Cannon in small-`b`, square, memory-tight regimes, and
+/// why a gang wider than the cluster is not a slow plan but an
+/// inadmissible one (the planner must exclude `b² > cores`).
+pub fn cannon_cost(n: usize, b: usize, cores: usize) -> CostBreakdown {
+    let (nf, bf) = (n as f64, b as f64);
+    let pf = mincores(bf * bf, cores);
+    let stages = vec![
+        StageCost { label: "skew".into(), comp: 0.0, comm: 2.0 * nf * nf, pf },
+        StageCost {
+            label: "supersteps/shift-multiply".into(),
+            comp: nf.powi(3) + bf * nf * nf,
+            comm: 2.0 * bf * nf * nf,
+            pf,
+        },
+    ];
+    CostBreakdown { system: "cannon", stages }
+}
+
 /// Paper eq. (25): number of Spark stages Stark runs, `2(p−q)+2`.
 pub fn stark_stage_count(b: usize) -> usize {
     2 * (b as f64).log2().round() as usize + 2
@@ -308,10 +344,44 @@ mod tests {
     #[test]
     fn wall_is_positive_and_finite() {
         for b in [2usize, 4, 8, 16, 32] {
-            for cb in [mllib_cost(8192, b, 25), marlin_cost(8192, b, 25), stark_cost(8192, b, 25)] {
+            for cb in [
+                mllib_cost(8192, b, 25),
+                marlin_cost(8192, b, 25),
+                stark_cost(8192, b, 25),
+                cannon_cost(8192, b, 25),
+            ] {
                 let w = cb.wall(1e-9, 1e-8);
                 assert!(w.is_finite() && w > 0.0, "{}: {w}", cb.system);
             }
+        }
+    }
+
+    #[test]
+    fn cannon_breakdown_has_no_replication_and_two_stages() {
+        let c = cannon_cost(1000, 5, 25);
+        assert_eq!(c.system, "cannon");
+        assert_eq!(c.stages.len(), 2, "skew + superstep group");
+        // Skew moves each operand block exactly once: 2n² elements.
+        let skew = &c.stages[0];
+        assert_eq!((skew.comp, skew.comm), (0.0, 2.0 * 1000.0 * 1000.0));
+        // Ring volume is linear in g — no b³ replication term anywhere.
+        let small = cannon_cost(1000, 5, 25).wall(0.0, 1.0);
+        let big = cannon_cost(1000, 10, 100).wall(0.0, 1.0);
+        assert!(big < small * 4.0, "comm grows ~linearly in b, pf quadratically");
+    }
+
+    /// The planner-facing dominance identity: Cannon's dataflow is
+    /// MLLib's minus the stage-1 flatMap replication, so at every point
+    /// where the gang is admissible (`b ≤ b² ≤ cores`) its predicted
+    /// wall is strictly lower by exactly that term.
+    #[test]
+    fn cannon_strictly_dominates_mllib_where_admissible() {
+        for (n, b, cores) in [(256usize, 2usize, 4usize), (512, 2, 4), (500, 5, 25), (4096, 4, 25)]
+        {
+            let (alpha, beta) = (1e-9, 1e-8);
+            let cannon = cannon_cost(n, b, cores).wall(alpha, beta);
+            let mllib = mllib_cost(n, b, cores).wall(alpha, beta);
+            assert!(cannon < mllib, "n={n} b={b}: cannon {cannon} !< mllib {mllib}");
         }
     }
 }

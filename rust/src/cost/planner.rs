@@ -32,7 +32,7 @@
 //! ```
 
 use crate::algos::Algorithm;
-use crate::cost::{marlin_cost, mllib_cost, stark_cost, CostBreakdown};
+use crate::cost::{cannon_cost, marlin_cost, mllib_cost, stark_cost, CostBreakdown};
 use crate::error::StarkError;
 use crate::util::json::Value;
 
@@ -252,6 +252,26 @@ impl Planner {
                     ));
                 }
                 Ok(stark_cost(n, b, self.cores))
+            }
+            Algorithm::Cannon => {
+                // Not a slow plan but an inadmissible one: the barrier
+                // engine's all-or-nothing gang admission rejects a stage
+                // wider than the cluster, so the planner must never
+                // propose it.
+                if b * b > self.cores {
+                    return Err(StarkError::invalid_splits(
+                        Algorithm::Cannon,
+                        b,
+                        n,
+                        format!(
+                            "cannon's gang needs b² = {} simultaneous slots but the cluster \
+                             has {} cores",
+                            b * b,
+                            self.cores
+                        ),
+                    ));
+                }
+                Ok(cannon_cost(n, b, self.cores))
             }
             Algorithm::Auto => Err(StarkError::AutoUnresolved),
         }
@@ -681,6 +701,71 @@ mod tests {
             four.regrid_cost_ms((8, 2), (256, 4)),
             four.regrid_cost_ms((256, 4), (8, 2))
         );
+    }
+
+    /// Cannon wins where the cost model says communication-avoidance
+    /// pays: a square workload whose b² gang exactly fills the cluster.
+    /// At `n = 500, b = 5` on 25 cores Stark is excluded (non-pow2 b),
+    /// Marlin loses on its 4bn² stage-1 replication volume, and MLLib
+    /// loses by its stage-1 flatMap compute (Cannon's protocol is
+    /// MLLib's dataflow minus replication — strictly cheaper whenever
+    /// the gang is admissible).
+    #[test]
+    fn auto_selects_cannon_in_a_comm_bound_regime() {
+        let plan = p(25).resolve(Algorithm::Auto, Splits::Fixed(5), 500).unwrap();
+        assert_eq!(
+            (plan.algorithm, plan.b),
+            (Algorithm::Cannon, 5),
+            "considered: {:?}",
+            plan.considered
+        );
+        assert_eq!(plan.predicted.system, "cannon");
+        assert!(
+            plan.considered.iter().all(|c| c.algorithm != Algorithm::Stark),
+            "non-pow2 b must exclude stark"
+        );
+        let mllib = plan
+            .considered
+            .iter()
+            .find(|c| c.algorithm == Algorithm::Mllib)
+            .expect("mllib stays a candidate");
+        assert!(plan.predicted_wall_ms() < mllib.wall_ms, "cannon must beat mllib here");
+    }
+
+    /// All-or-nothing gang admission at plan time: a Cannon point whose
+    /// b² exceeds the cluster is a typed error when requested concretely
+    /// and silently not-a-candidate under Auto.
+    #[test]
+    fn cannon_is_excluded_when_the_gang_exceeds_the_cluster() {
+        let four = p(4);
+        match four.breakdown(Algorithm::Cannon, 256, 8) {
+            Err(StarkError::InvalidSplits { algorithm: Algorithm::Cannon, b: 8, .. }) => {}
+            other => panic!("expected InvalidSplits, got {other:?}"),
+        }
+        assert!(matches!(
+            four.resolve(Algorithm::Cannon, Splits::Fixed(8), 256),
+            Err(StarkError::InvalidSplits { algorithm: Algorithm::Cannon, .. })
+        ));
+        // Under Auto the point simply vanishes (the Mllib pin above
+        // depends on this) — while an admissible gang resolves fine.
+        let plan = four.resolve(Algorithm::Cannon, Splits::Fixed(2), 256).unwrap();
+        assert_eq!((plan.algorithm, plan.b), (Algorithm::Cannon, 2));
+    }
+
+    /// The stark↔cannon knife edge at the existing crossover pin: on 4
+    /// cores at n = 2048 Stark's b^2.807 leaf count still beats Cannon's
+    /// full-n³ gang by a hair — which is exactly why
+    /// `auto_plan_crosses_from_baseline_to_stark` keeps choosing
+    /// (Stark, 2) there after Cannon joined the candidate set.
+    #[test]
+    fn stark_still_beats_cannon_at_the_crossover() {
+        let four = p(4);
+        let alpha = Calibration::DEFAULT.alpha;
+        let beta = Calibration::DEFAULT.beta;
+        let stark = four.breakdown(Algorithm::Stark, 2048, 2).unwrap().wall(alpha, beta);
+        let cannon = four.breakdown(Algorithm::Cannon, 2048, 2).unwrap().wall(alpha, beta);
+        assert!(stark < cannon, "stark {stark} !< cannon {cannon}");
+        assert!((cannon - stark) / stark < 0.01, "the margin is a knife edge, not a chasm");
     }
 
     #[test]

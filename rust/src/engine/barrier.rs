@@ -1,0 +1,421 @@
+//! Barrier (gang-scheduled) execution: lock-step supersteps with
+//! point-to-point block exchange and **no shuffle write** (DESIGN.md
+//! S21; JAMPI's Spark barrier mode, PAPERS.md).
+//!
+//! A barrier stage runs a fixed `p = g×g` grid of workers through
+//! `supersteps` rounds. Within a round every worker computes once,
+//! may `send` typed messages to peers addressed by grid coordinate,
+//! and marks the round boundary with `barrier()`; messages sent in
+//! round `s` are delivered to their targets' inboxes at round `s+1`
+//! (BSP semantics). The exchange never touches the shuffle machinery:
+//! [`StageMetrics`] records it under the dedicated `peer_bytes` /
+//! `peer_msgs` counters while `shuffle_bytes` stays 0 — which is the
+//! observable that communication-avoiding algorithms (Cannon,
+//! `algos::cannon`) exist to move.
+//!
+//! Scheduling and recovery are gang-flavored, via
+//! [`Cluster::try_run_gang`](crate::engine::cluster::Cluster::try_run_gang):
+//! a stage wider than the cluster is rejected up front (all-or-nothing
+//! admission, so a barrier job cannot deadlock against fair-share
+//! jobs), and any mid-superstep task failure restarts the *whole* gang
+//! from the pure task closures — lone-task retry would observe stale
+//! peers. The runner is driver-orchestrated: workers compute in
+//! parallel on the cluster, the driver routes the exchanged messages
+//! between waves, which keeps delivery order deterministic (partition
+//! order, then send order) and therefore keeps barrier algorithms
+//! bit-reproducible under chaos.
+
+use std::sync::Arc;
+
+use crate::engine::cluster::StageFailure;
+use crate::engine::dist::{JobCtx, LineageNode};
+use crate::engine::metrics::StageMetrics;
+use crate::engine::partitioner::{Alignment, PartitionerDesc};
+use crate::engine::sizable::Sizable;
+
+/// Position of one gang member in the `g × g` barrier grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GridCoord {
+    pub row: u32,
+    pub col: u32,
+}
+
+impl GridCoord {
+    /// Row-major partition index of this coordinate.
+    pub fn index(self, g: usize) -> usize {
+        self.row as usize * g + self.col as usize
+    }
+
+    /// Coordinate of partition `part` in a `g × g` grid.
+    pub fn of(part: usize, g: usize) -> Self {
+        Self { row: (part / g) as u32, col: (part % g) as u32 }
+    }
+
+    /// Left neighbor on the row ring (wraps), Cannon's A-shift target.
+    pub fn left(self, g: usize) -> Self {
+        let g = g as u32;
+        Self { row: self.row, col: (self.col + g - 1) % g }
+    }
+
+    /// Upper neighbor on the column ring (wraps), Cannon's B-shift target.
+    pub fn up(self, g: usize) -> Self {
+        let g = g as u32;
+        Self { row: (self.row + g - 1) % g, col: self.col }
+    }
+}
+
+impl std::fmt::Display for GridCoord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({},{})", self.row, self.col)
+    }
+}
+
+/// Per-task handle for one superstep of a barrier stage — the
+/// `BarrierTaskContext` analogue. Carries the inbox delivered from the
+/// previous superstep, collects outgoing messages, and counts
+/// `barrier()` calls (the runner asserts exactly one per superstep).
+pub struct BarrierTaskContext<M> {
+    coord: GridCoord,
+    g: usize,
+    superstep: usize,
+    inbox: Vec<(GridCoord, M)>,
+    outbox: Vec<(GridCoord, M)>,
+    barrier_calls: u32,
+}
+
+impl<M> BarrierTaskContext<M> {
+    fn new(coord: GridCoord, g: usize, superstep: usize, inbox: Vec<(GridCoord, M)>) -> Self {
+        Self { coord, g, superstep, inbox, outbox: Vec::new(), barrier_calls: 0 }
+    }
+
+    /// This task's grid position.
+    pub fn coord(&self) -> GridCoord {
+        self.coord
+    }
+
+    /// Grid side `g` (the gang has `g²` members).
+    pub fn grid(&self) -> usize {
+        self.g
+    }
+
+    /// Current superstep index (0-based).
+    pub fn superstep(&self) -> usize {
+        self.superstep
+    }
+
+    /// Queue `msg` for point-to-point delivery to `to` at the next
+    /// superstep. Panics on an out-of-grid target — a mis-skewed route
+    /// is a protocol bug, not a recoverable fault.
+    pub fn send(&mut self, to: GridCoord, msg: M) {
+        assert!(
+            (to.row as usize) < self.g && (to.col as usize) < self.g,
+            "barrier send target {to} outside the {g}×{g} grid",
+            g = self.g
+        );
+        self.outbox.push((to, msg));
+    }
+
+    /// Take the first not-yet-consumed message sent by `from` in the
+    /// previous superstep, if any.
+    pub fn recv_from(&mut self, from: GridCoord) -> Option<M> {
+        let pos = self.inbox.iter().position(|(src, _)| *src == from)?;
+        Some(self.inbox.remove(pos).1)
+    }
+
+    /// Drain every remaining inbox message as `(sender, message)`,
+    /// in deterministic delivery order.
+    pub fn recv_all(&mut self) -> Vec<(GridCoord, M)> {
+        std::mem::take(&mut self.inbox)
+    }
+
+    /// Mark the superstep boundary. The runner requires exactly one
+    /// call per superstep — the lock-step contract.
+    pub fn barrier(&mut self) {
+        self.barrier_calls += 1;
+    }
+}
+
+/// Lineage node for a barrier-produced dataset: a wide dependency
+/// (data crosses partitions) routed by grid coordinates instead of a
+/// shuffle. The static analyzer checks barrier nodes for gang-size and
+/// skew-alignment invariants (STARK-A008/A009); building the node here
+/// keeps every real barrier dataset on the honest shape.
+pub fn barrier_lineage(
+    label: &str,
+    g: usize,
+    job: &JobCtx,
+    parents: Vec<Arc<LineageNode>>,
+) -> Arc<LineageNode> {
+    Arc::new(LineageNode {
+        kind: crate::engine::dist::OpKind::Wide,
+        op: "barrier",
+        label: Some(label.to_string()),
+        partitioner: Some(PartitionerDesc {
+            name: "barrier-grid",
+            parts: g * g,
+            alignment: Alignment::Grouped("grid-coordinate"),
+        }),
+        key_ord: true,
+        grouped: false,
+        job_id: job.id(),
+        job_name: job.name().to_string(),
+        num_parts: g * g,
+        parents,
+    })
+}
+
+/// Run a barrier stage: `supersteps` gang waves over a `g × g` grid,
+/// threading one state `S` per member and exchanging messages `M`
+/// between waves. `init` holds the `g²` initial states in row-major
+/// owner order; the result is the final states in the same order.
+///
+/// `step` is called once per member per superstep with `(superstep,
+/// coord, state, ctx)` and returns the member's next state. It must be
+/// pure up to its captured `Arc`s: gang recovery re-runs it from
+/// lineage (whole-wave restart — see
+/// [`Cluster::try_run_gang`](crate::engine::cluster::Cluster::try_run_gang)).
+///
+/// Each superstep records one [`StageMetrics`] entry labeled
+/// `"{label}/superstep/{s}"` with `shuffle_bytes = 0` and the exchanged
+/// volume under `peer_bytes`/`peer_msgs`; the wall model is the slowest
+/// gang member (the wave is lock-step, and admission guarantees all
+/// `g²` members run concurrently) plus accrued retry backoff.
+pub fn try_run_barrier<S, M, F>(
+    job: &JobCtx,
+    label: &str,
+    g: usize,
+    supersteps: usize,
+    init: Vec<S>,
+    step: F,
+) -> Result<Vec<S>, StageFailure>
+where
+    S: Clone + Send + Sync + PartialEq + 'static,
+    M: Clone + Send + Sync + PartialEq + Sizable + 'static,
+    F: Fn(usize, GridCoord, S, &mut BarrierTaskContext<M>) -> S + Send + Sync + 'static,
+{
+    assert!(g >= 1, "barrier grid side must be >= 1");
+    let p = g * g;
+    assert_eq!(init.len(), p, "barrier init must carry one state per gang member (g² = {p})");
+    let step = Arc::new(step);
+    let mut states = init;
+    let mut inboxes: Vec<Vec<(GridCoord, M)>> = vec![Vec::new(); p];
+    for s in 0..supersteps {
+        let stage_label = format!("{label}/superstep/{s}");
+        let mut tasks = Vec::with_capacity(p);
+        let mut next_inboxes: Vec<Vec<(GridCoord, M)>> = vec![Vec::new(); p];
+        for (part, inbox) in inboxes.into_iter().enumerate() {
+            let step = Arc::clone(&step);
+            let state = states[part].clone();
+            let coord = GridCoord::of(part, g);
+            tasks.push(move || {
+                let mut ctx = BarrierTaskContext::new(coord, g, s, inbox.clone());
+                let next = step(s, coord, state.clone(), &mut ctx);
+                (next, ctx.outbox, ctx.barrier_calls)
+            });
+        }
+        let run = job.cluster().try_run_gang(job.id(), &stage_label, tasks, job.deadline())?;
+
+        let comp_ms: f64 = run.outcomes.iter().map(|o| o.busy_ms).sum();
+        let wall_ms = run.outcomes.iter().map(|o| o.busy_ms).fold(0.0, f64::max) + run.backoff_ms;
+        let mut peer_bytes = 0u64;
+        let mut peer_msgs = 0u64;
+        let mut next_states = Vec::with_capacity(p);
+        // Outcomes arrive partition-ordered; routing in (partition,
+        // send) order keeps inbox contents deterministic, which barrier
+        // algorithms' bit-reproducibility rests on.
+        for o in run.outcomes.iter() {
+            let (next, outbox, barrier_calls) = &o.result;
+            assert_eq!(
+                *barrier_calls, 1,
+                "barrier protocol violated: member {} of '{stage_label}' called barrier() \
+                 {barrier_calls} times (the lock-step contract is exactly once per superstep)",
+                GridCoord::of(o.part, g)
+            );
+            let from = GridCoord::of(o.part, g);
+            for (to, msg) in outbox {
+                peer_msgs += 1;
+                peer_bytes += (msg.approx_bytes() + std::mem::size_of::<GridCoord>()) as u64;
+                next_inboxes[to.index(g)].push((from, msg.clone()));
+            }
+            next_states.push(next.clone());
+        }
+        job.record_stage(StageMetrics {
+            stage_id: job.next_stage_id(),
+            label: stage_label,
+            tasks: p,
+            wall_ms,
+            comp_ms,
+            shuffle_bytes: 0,
+            remote_bytes: 0,
+            net_wait_ms: 0.0,
+            peer_bytes,
+            peer_msgs,
+            records_out: peer_msgs,
+            combined_records: 0,
+            pf: p,
+            retries: run.retries,
+            attempts: run.attempts,
+            recomputed_partitions: run.recomputed,
+            speculative_wins: run.speculative_wins,
+        });
+        states = next_states;
+        inboxes = next_inboxes;
+    }
+    Ok(states)
+}
+
+/// Infallible wrapper over [`try_run_barrier`]: a typed
+/// [`StageFailure`] propagates by `panic_any` through the engine
+/// combinators and is caught at the API boundary, like every other
+/// engine primitive.
+pub fn run_barrier<S, M, F>(
+    job: &JobCtx,
+    label: &str,
+    g: usize,
+    supersteps: usize,
+    init: Vec<S>,
+    step: F,
+) -> Vec<S>
+where
+    S: Clone + Send + Sync + PartialEq + 'static,
+    M: Clone + Send + Sync + PartialEq + Sizable + 'static,
+    F: Fn(usize, GridCoord, S, &mut BarrierTaskContext<M>) -> S + Send + Sync + 'static,
+{
+    try_run_barrier(job, label, g, supersteps, init, step)
+        .unwrap_or_else(|f| std::panic::panic_any(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ClusterConfig, SparkContext};
+
+    fn job_on(executors: usize, cores: usize) -> (SparkContext, JobCtx) {
+        let ctx = SparkContext::new(ClusterConfig::new(executors, cores));
+        let job = ctx.run_job("barrier-test");
+        (ctx, job)
+    }
+
+    /// Two supersteps on a 2×2 grid: send the state one hop left on the
+    /// row ring, then adopt what arrived. Pins message routing, BSP
+    /// delivery timing, and the per-superstep metrics shape.
+    #[test]
+    fn ring_shift_routes_point_to_point() {
+        let (_ctx, job) = job_on(2, 2);
+        let init: Vec<u64> = (0..4).map(|i| 100 + i).collect();
+        let out = try_run_barrier(&job, "ring", 2, 2, init, |s, coord, state, ctx| {
+            ctx.barrier();
+            if s == 0 {
+                ctx.send(coord.left(ctx.grid()), state);
+                state
+            } else {
+                let (from, value) = ctx.recv_all().pop().expect("one message per member");
+                assert_eq!(from, GridCoord { row: coord.row, col: (coord.col + 1) % 2 });
+                value
+            }
+        })
+        .expect("barrier stage runs");
+        // Each member now holds its right neighbor's original value.
+        assert_eq!(out, vec![101, 100, 103, 102]);
+
+        let stages = job.stages();
+        let s0 = stages.iter().find(|m| m.label == "ring/superstep/0").expect("superstep 0");
+        assert_eq!(s0.tasks, 4);
+        assert_eq!(s0.pf, 4, "gang admission guarantees all members run concurrently");
+        assert_eq!(s0.peer_msgs, 4);
+        // u64 payload + GridCoord header per message.
+        assert_eq!(s0.peer_bytes, 4 * (8 + std::mem::size_of::<GridCoord>() as u64));
+        assert_eq!(s0.shuffle_bytes, 0, "barrier exchange must never write shuffle");
+        let s1 = stages.iter().find(|m| m.label == "ring/superstep/1").expect("superstep 1");
+        assert_eq!(s1.peer_msgs, 0, "nothing sent in the final superstep");
+    }
+
+    #[test]
+    fn recv_from_takes_one_message_per_sender() {
+        let from_a = GridCoord { row: 0, col: 1 };
+        let from_b = GridCoord { row: 1, col: 0 };
+        let mut ctx =
+            BarrierTaskContext::new(GridCoord::of(0, 2), 2, 0, vec![(from_a, 1u64), (from_b, 2)]);
+        assert_eq!(ctx.recv_from(from_b), Some(2));
+        assert_eq!(ctx.recv_from(from_b), None, "consumed");
+        assert_eq!(ctx.recv_all(), vec![(from_a, 1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the 2×2 grid")]
+    fn send_rejects_out_of_grid_targets() {
+        let mut ctx: BarrierTaskContext<u64> =
+            BarrierTaskContext::new(GridCoord::of(0, 2), 2, 0, Vec::new());
+        ctx.send(GridCoord { row: 2, col: 0 }, 9);
+    }
+
+    #[test]
+    fn missing_barrier_call_is_a_protocol_panic() {
+        let (_ctx, job) = job_on(2, 2);
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = try_run_barrier::<u64, u64, _>(&job, "no-bar", 2, 1, vec![0; 4], |_, _, s, _| s);
+        }));
+        let payload = boom.expect_err("runner must reject the wave");
+        let text = payload.downcast_ref::<String>().expect("assert message");
+        assert!(text.contains("barrier protocol violated"), "{text}");
+    }
+
+    #[test]
+    fn oversized_gang_is_rejected_not_queued() {
+        let (_ctx, job) = job_on(2, 2); // 4 slots
+        let err = try_run_barrier::<u64, u64, _>(&job, "big", 3, 1, vec![0; 9], |_, _, s, ctx| {
+            ctx.barrier();
+            s
+        })
+        .expect_err("9-member gang cannot be admitted on 4 cores");
+        match err {
+            StageFailure::TaskFailed { attempts: 0, reason, .. } => {
+                assert!(reason.contains("gang admission rejected"), "{reason}");
+            }
+            other => panic!("expected admission rejection, got {other:?}"),
+        }
+    }
+
+    /// A mid-superstep injected failure restarts the whole gang — every
+    /// member of the hit superstep reports 2 attempts — and the final
+    /// states match the chaos-free run bit-for-bit.
+    #[test]
+    fn superstep_failure_restarts_the_gang_and_stays_deterministic() {
+        let run = |chaos: Option<crate::engine::ChaosConfig>| {
+            let mut cfg = ClusterConfig::new(2, 2);
+            cfg.chaos = chaos;
+            let ctx = SparkContext::new(cfg);
+            let job = ctx.run_job("barrier-chaos");
+            let out = try_run_barrier(&job, "flow", 2, 3, vec![1u64, 2, 3, 4], |s, coord, v, ctx| {
+                ctx.barrier();
+                let got: u64 = ctx.recv_all().into_iter().map(|(_, m)| m).sum::<u64>();
+                if s < 2 {
+                    ctx.send(coord.left(ctx.grid()), v + got);
+                }
+                v + got
+            })
+            .expect("recovers");
+            (out, job.stages())
+        };
+        let (clean, _) = run(None);
+        let (chaotic, stages) =
+            run(Some(crate::engine::ChaosConfig::fail_once("flow/superstep/1", 2)));
+        assert_eq!(clean, chaotic, "gang recovery must be bit-identical");
+        let hit = stages.iter().find(|m| m.label == "flow/superstep/1").unwrap();
+        assert_eq!(hit.attempts, 8, "whole 4-member gang re-ran, not one task");
+        assert_eq!(hit.retries, 4);
+        let missed = stages.iter().find(|m| m.label == "flow/superstep/0").unwrap();
+        assert_eq!(missed.attempts, 4, "other supersteps stay clean");
+    }
+
+    #[test]
+    fn barrier_lineage_describes_the_gang() {
+        let (_ctx, job) = job_on(2, 2);
+        let node = barrier_lineage("cannon/barrier", 3, &job, Vec::new());
+        assert_eq!(node.op, "barrier");
+        assert_eq!(node.num_parts, 9);
+        let desc = node.partitioner.as_ref().unwrap();
+        assert_eq!(desc.parts, 9);
+        assert_eq!(desc.alignment, Alignment::Grouped("grid-coordinate"));
+    }
+}

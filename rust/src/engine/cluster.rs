@@ -743,6 +743,222 @@ impl Cluster {
         Ok(StageRun { outcomes, retries, attempts, recomputed, speculative_wins, backoff_ms: backoff_total })
     }
 
+    /// Run one **gang-scheduled barrier wave** of job `job_id`: all
+    /// `tasks` are admitted atomically and retried as a *group*.
+    ///
+    /// Differences from [`try_run_stage`](Self::try_run_stage), both
+    /// forced by barrier semantics (DESIGN.md S21):
+    ///
+    /// - **All-or-nothing admission.** A gang needs every one of its `p`
+    ///   slots concurrently; a gang wider than the configured cluster
+    ///   could never have all slots free at once and would deadlock a
+    ///   real gang scheduler against fair-share jobs, so it is rejected
+    ///   up front with a typed failure instead of queued. An admitted
+    ///   gang's tasks are enqueued under one scheduler lock acquisition,
+    ///   so the fair rotation sees the wave as a unit. (Tasks never
+    ///   hold-and-wait on peers inside the pool — peer exchange happens
+    ///   at the superstep boundary in the driver — which is why gang
+    ///   admission composes with fair-share interleaving deadlock-free.)
+    /// - **Group retry from lineage.** A barrier superstep's peers
+    ///   exchange state at its boundary, so a lone task restart would
+    ///   observe stale peers. Any task failure (chaos error, panic)
+    ///   aborts the wave and re-runs *every* task from the pure closures
+    ///   — the lineage — with one simulated backoff per group restart.
+    ///   Each wave adds `p` to the attempts ledger: discarded work from
+    ///   a failed wave stays observable. The wave count is bounded by
+    ///   [`ClusterConfig::max_task_attempts`].
+    /// - **Gang executor loss.** Losing an executor invalidates the
+    ///   whole superstep (its peers' exchanged state is gone with it),
+    ///   so the post-pass recomputes all `p` partitions, not just the
+    ///   lost executor's.
+    ///
+    /// Straggler speculation does not apply: the wave *is* a barrier and
+    /// waits for its slowest member regardless.
+    pub fn try_run_gang<R, F>(
+        &self,
+        job_id: u64,
+        label: &str,
+        tasks: Vec<F>,
+        deadline: Option<Instant>,
+    ) -> Result<StageRun<R>, StageFailure>
+    where
+        R: Send + PartialEq + 'static,
+        F: Fn() -> R + Send + Sync + 'static,
+    {
+        let p = tasks.len();
+        if p > self.cfg.total_cores() {
+            return Err(StageFailure::TaskFailed {
+                stage: label.to_string(),
+                partition: 0,
+                attempts: 0,
+                reason: format!(
+                    "gang admission rejected: barrier stage needs {p} simultaneous slots \
+                     but the cluster has {} cores (all-or-nothing gang scheduling)",
+                    self.cfg.total_cores()
+                ),
+            });
+        }
+        let tasks: Vec<Arc<F>> = tasks.into_iter().map(Arc::new).collect();
+        let max_attempts = self.cfg.max_task_attempts.max(1);
+        let chaos = self.cfg.chaos.clone().map(Arc::new);
+        let fail_part = self.armed_fail_once(job_id, label, p);
+        let mut backoff_total = 0.0f64;
+        let mut wave = 0u32;
+        loop {
+            wave += 1;
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    return Err(StageFailure::DeadlineExceeded { stage: label.to_string() });
+                }
+            }
+            let token = self.stage_seq.fetch_add(1, Ordering::Relaxed);
+            let (tx, rx) = std::sync::mpsc::channel::<TaskMsg<R>>();
+            let mut wave_jobs: Vec<Job> = Vec::with_capacity(p);
+            for (part, task) in tasks.iter().enumerate() {
+                let task = Arc::clone(task);
+                let tx = tx.clone();
+                let chaos = chaos.clone();
+                let fail_this = fail_part == Some(part);
+                let executor = self.executor_of(part);
+                let label = label.to_string();
+                // One attempt per wave: failures restart the whole gang.
+                let attempt = wave;
+                wave_jobs.push(Box::new(move || {
+                    let decision = chaos
+                        .as_deref()
+                        .map_or(ChaosDecision::Healthy, |c| c.decide(job_id, &label, part, attempt));
+                    let started = Instant::now();
+                    let outcome = catch_unwind(AssertUnwindSafe(|| {
+                        if decision == ChaosDecision::FailPanic {
+                            panic!(
+                                "chaos: injected panic in '{label}' partition {part} attempt {attempt}"
+                            );
+                        }
+                        task()
+                    }));
+                    let mut busy_ms = started.elapsed().as_secs_f64() * 1e3;
+                    let reason = match outcome {
+                        Ok(result) => {
+                            let injected = decision == ChaosDecision::FailError
+                                || (fail_this && attempt == 1);
+                            if !injected {
+                                if decision == ChaosDecision::Slow {
+                                    busy_ms *=
+                                        chaos.as_deref().map_or(1.0, |c| c.slow_factor.max(1.0));
+                                }
+                                let _ = tx.send(TaskMsg::Done(
+                                    TaskOutcome { part, result, busy_ms, executor, attempts: attempt },
+                                    0.0,
+                                ));
+                                return;
+                            }
+                            format!(
+                                "chaos: injected task error in '{label}' partition {part} attempt {attempt}"
+                            )
+                        }
+                        Err(payload) => panic_text(payload),
+                    };
+                    let _ = tx.send(TaskMsg::Failed { part, attempts: attempt, reason });
+                }));
+            }
+            self.submit_gang(job_id, token, wave_jobs);
+            drop(tx);
+
+            let mut slots: Vec<Option<TaskOutcome<R>>> = Vec::new();
+            slots.resize_with(p, || None);
+            let mut pending = p;
+            // First failure aborts the wave, but the remaining members
+            // are drained (not leaked) before the group restarts.
+            let mut wave_failure: Option<(usize, String)> = None;
+            while pending > 0 {
+                let msg = if let Some(d) = deadline {
+                    let left = d.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        self.purge_stage(token);
+                        return Err(StageFailure::DeadlineExceeded { stage: label.to_string() });
+                    }
+                    match rx.recv_timeout(left) {
+                        Ok(m) => m,
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                            self.purge_stage(token);
+                            return Err(StageFailure::DeadlineExceeded {
+                                stage: label.to_string(),
+                            });
+                        }
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                            panic!("barrier stage '{label}' lost gang members")
+                        }
+                    }
+                } else {
+                    match rx.recv() {
+                        Ok(m) => m,
+                        Err(_) => panic!("barrier stage '{label}' lost gang members"),
+                    }
+                };
+                match msg {
+                    TaskMsg::Done(o, _) => {
+                        debug_assert!(slots[o.part].is_none(), "gang member reported twice");
+                        slots[o.part] = Some(o);
+                        pending -= 1;
+                    }
+                    TaskMsg::Failed { part, reason, .. } => {
+                        if wave_failure.is_none() {
+                            wave_failure = Some((part, reason));
+                        }
+                        pending -= 1;
+                    }
+                }
+            }
+            if let Some((part, reason)) = wave_failure {
+                if wave >= max_attempts {
+                    return Err(StageFailure::TaskFailed {
+                        stage: label.to_string(),
+                        partition: part,
+                        attempts: wave,
+                        reason,
+                    });
+                }
+                backoff_total += BACKOFF_BASE_MS * f64::from(1u32 << (wave - 1).min(16));
+                continue;
+            }
+
+            let mut outcomes: Vec<TaskOutcome<R>> =
+                slots.into_iter().map(|s| s.expect("all gang slots filled")).collect();
+            // Every restarted wave re-ran the full gang.
+            let retries = (wave - 1) * p as u32;
+
+            // Executor-loss post-pass, gang flavor: the superstep is
+            // all-or-nothing on recovery too — recompute every member.
+            let mut recomputed = 0u32;
+            if let Some(c) = chaos.as_deref() {
+                if let Some(lost) = c.stage_loss(job_id, label, self.cfg.executors) {
+                    if (0..p).any(|part| self.executor_of(part) == lost) {
+                        for (part, o) in outcomes.iter_mut().enumerate() {
+                            let fresh = tasks[part]();
+                            debug_assert!(
+                                fresh == o.result,
+                                "gang recompute diverged for '{label}' partition {part} — task closure is impure"
+                            );
+                            o.result = fresh;
+                            o.attempts += 1;
+                            recomputed += 1;
+                        }
+                    }
+                }
+            }
+
+            let attempts: u32 = outcomes.iter().map(|o| o.attempts).sum();
+            return Ok(StageRun {
+                outcomes,
+                retries,
+                attempts,
+                recomputed,
+                speculative_wins: 0,
+                backoff_ms: backoff_total,
+            });
+        }
+    }
+
     /// Which partition (if any) the one-shot `fail_once` injection hits
     /// for this stage — armed at most once per job id.
     fn armed_fail_once(&self, job_id: u64, label: &str, n: usize) -> Option<usize> {
@@ -759,6 +975,17 @@ impl Cluster {
         let mut st = self.sched.state.lock().unwrap();
         st.push(job_id, token, job);
         self.sched.cv.notify_one();
+    }
+
+    /// Enqueue an admitted gang's wave under a *single* scheduler lock
+    /// acquisition, so the fair rotation and FIFO queue both see the
+    /// barrier wave as one atomic unit (all-or-nothing admission).
+    fn submit_gang(&self, job_id: u64, token: u64, jobs: Vec<Job>) {
+        let mut st = self.sched.state.lock().unwrap();
+        for job in jobs {
+            st.push(job_id, token, job);
+        }
+        self.sched.cv.notify_all();
     }
 
     /// Free one stage's queued tasks (failure/deadline path).
@@ -1423,5 +1650,118 @@ mod tests {
         let sums: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         let base: usize = (0..32).sum();
         assert_eq!(sums, vec![base + 32, base + 64]);
+    }
+
+    #[test]
+    fn gang_clean_run_has_one_attempt_per_member() {
+        let cluster = Cluster::new(ClusterConfig::new(2, 2));
+        let tasks: Vec<_> = (0..4).map(|i| move || i * 11).collect();
+        let run = cluster.try_run_gang(1, "superstep/0", tasks, None).expect("gang runs");
+        let results: Vec<usize> = run.outcomes.iter().map(|o| o.result).collect();
+        assert_eq!(results, vec![0, 11, 22, 33]);
+        assert_eq!(run.attempts, 4, "clean gang: one attempt per member");
+        assert_eq!(run.retries, 0);
+        assert_eq!(run.speculative_wins, 0, "barrier waves never speculate");
+        assert_eq!(run.backoff_ms, 0.0);
+    }
+
+    #[test]
+    fn gang_admission_is_all_or_nothing() {
+        // 2 executors × 2 cores = 4 slots: a 5-member gang can never
+        // hold all its slots at once and must be rejected up front.
+        let cluster = Cluster::new(ClusterConfig::new(2, 2));
+        let tasks: Vec<_> = (0..5).map(|i| move || i).collect();
+        match cluster.try_run_gang(1, "superstep/0", tasks, None) {
+            Err(StageFailure::TaskFailed { attempts: 0, reason, .. }) => {
+                assert!(reason.contains("gang admission rejected"), "reason: {reason}");
+            }
+            other => panic!("expected admission rejection, got {:?}", other.err()),
+        }
+        // A gang that exactly fills the cluster is admitted.
+        let tasks: Vec<_> = (0..4).map(|i| move || i).collect();
+        assert!(cluster.try_run_gang(1, "superstep/0", tasks, None).is_ok());
+    }
+
+    #[test]
+    fn gang_restarts_whole_group_on_one_failure() {
+        // fail_once hits member 2 on wave 1: unlike try_run_stage (which
+        // would retry only partition 2), the barrier semantics re-run
+        // ALL members, so every outcome reports 2 attempts.
+        let mut cfg = ClusterConfig::new(2, 2);
+        cfg.chaos = Some(ChaosConfig::fail_once("superstep", 2));
+        let cluster = Cluster::new(cfg);
+        let tasks: Vec<_> = (0..4).map(|i| move || i * 5).collect();
+        let run = cluster.try_run_gang(1, "superstep/1", tasks, None).expect("gang recovers");
+        assert!(run.outcomes.iter().all(|o| o.attempts == 2), "whole gang must re-run");
+        assert_eq!(run.attempts, 8, "2 waves × 4 members");
+        assert_eq!(run.retries, 4, "the full first wave is discarded work");
+        assert_eq!(run.backoff_ms, BACKOFF_BASE_MS, "one backoff per group restart");
+        let results: Vec<usize> = run.outcomes.iter().map(|o| o.result).collect();
+        assert_eq!(results, vec![0, 5, 10, 15]);
+    }
+
+    #[test]
+    fn gang_chaos_recovery_is_seed_deterministic() {
+        let mut cfg = ClusterConfig::new(2, 2);
+        cfg.chaos = Some(ChaosConfig { seed: 42, fail_rate: 0.3, ..Default::default() });
+        cfg.max_task_attempts = 24; // waves compound: P(fail) = 1-(1-r)^p
+        let run_once = || {
+            let cluster = Cluster::new(cfg.clone());
+            let tasks: Vec<_> = (0..4).map(|i| move || i * 3).collect();
+            let run = cluster.try_run_gang(1, "superstep/2", tasks, None).expect("gang recovers");
+            let results: Vec<i32> = run.outcomes.iter().map(|o| o.result).collect();
+            assert_eq!(results, vec![0, 3, 6, 9]);
+            assert_eq!(run.attempts % 4, 0, "gang attempts come in whole waves");
+            assert_eq!(run.retries % 4, 0);
+            (run.retries, run.attempts, run.backoff_ms)
+        };
+        let first = run_once();
+        assert!(first.0 > 0, "seeded 30% fail rate must kill at least one wave");
+        assert_eq!(first, run_once(), "same seed → identical wave ledger");
+    }
+
+    #[test]
+    fn gang_exhaustion_returns_typed_failure_with_wave_count() {
+        let mut cfg = ClusterConfig::new(1, 2);
+        cfg.chaos = Some(ChaosConfig { fail_rate: 1.0, ..Default::default() });
+        cfg.max_task_attempts = 3;
+        let cluster = Cluster::new(cfg);
+        let tasks: Vec<_> = (0..2).map(|i| move || i).collect();
+        match cluster.try_run_gang(0, "superstep/0", tasks, None) {
+            Err(StageFailure::TaskFailed { attempts: 3, reason, .. }) => {
+                assert!(reason.contains("chaos"), "reason: {reason}");
+            }
+            other => panic!("expected 3-wave TaskFailed, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn gang_executor_loss_recomputes_every_member() {
+        let mut cfg = ClusterConfig::new(2, 2);
+        cfg.chaos = Some(ChaosConfig { seed: 5, executor_loss_rate: 1.0, ..Default::default() });
+        let cluster = Cluster::new(cfg);
+        let tasks: Vec<_> = (0..4).map(|i| move || i * 7).collect();
+        let run = cluster.try_run_gang(1, "superstep/3", tasks, None).expect("loss is recovered");
+        // try_run_stage would recompute only the lost executor's 2
+        // partitions; the gang invalidates the whole superstep.
+        assert_eq!(run.recomputed, 4);
+        assert_eq!(run.attempts, 4 + 4);
+        let results: Vec<usize> = run.outcomes.iter().map(|o| o.result).collect();
+        assert_eq!(results, vec![0, 7, 14, 21]);
+    }
+
+    #[test]
+    fn gang_deadline_fails_fast() {
+        let cluster = Cluster::new(ClusterConfig::new(2, 2));
+        let expired = Instant::now() - std::time::Duration::from_millis(1);
+        let tasks: Vec<_> = (0..4).map(|i| move || i).collect();
+        assert!(matches!(
+            cluster.try_run_gang(0, "superstep/0", tasks, Some(expired)),
+            Err(StageFailure::DeadlineExceeded { .. })
+        ));
+        // The pool still serves follow-up work.
+        let tasks: Vec<_> = (0..4).map(|i| move || i).collect();
+        let (out, _) = cluster.run_stage("after", tasks);
+        assert_eq!(out.len(), 4);
     }
 }

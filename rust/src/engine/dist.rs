@@ -465,6 +465,16 @@ impl<T: Data> Dist<T> {
         (self.compute)(p)
     }
 
+    /// Rebind the lineage root (crate-internal). The barrier runner
+    /// ([`crate::engine::barrier`]) materializes its output as plain
+    /// partitions, but the dataset's true dependency is the gang's
+    /// point-to-point exchange — this hands the analyzer the honest
+    /// barrier node instead of an opaque source.
+    pub(crate) fn with_lineage(mut self, lineage: Arc<LineageNode>) -> Self {
+        self.lineage = lineage;
+        self
+    }
+
     /// Narrow: concatenation of partition lists (Spark `union`). Both
     /// sides must belong to the same job scope — a cross-job union
     /// would silently record the other job's stages here, exactly the
@@ -566,6 +576,8 @@ impl<T: Data> Dist<T> {
             shuffle_bytes: 0,
             remote_bytes: 0,
             net_wait_ms: 0.0,
+            peer_bytes: 0,
+            peer_msgs: 0,
             records_out,
             combined_records: 0,
             pf: outcomes.len().min(total_cores),
@@ -675,6 +687,8 @@ fn collect_shuffle<K: Data, V: Data>(
         shuffle_bytes: total,
         remote_bytes: remote,
         net_wait_ms,
+        peer_bytes: 0,
+        peer_msgs: 0,
         records_out: records,
         combined_records: in_records.saturating_sub(records),
         pf: map_parts.min(total_cores),

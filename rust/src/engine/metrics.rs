@@ -37,6 +37,13 @@ pub struct StageMetrics {
     pub remote_bytes: u64,
     /// Simulated network wait added to the stage, milliseconds.
     pub net_wait_ms: f64,
+    /// Bytes exchanged point-to-point between barrier gang peers
+    /// (`engine::barrier`). Deliberately distinct from `shuffle_bytes`:
+    /// a barrier superstep writes **no shuffle**, so comm-avoiding
+    /// algorithms show up as `shuffle_bytes == 0, peer_bytes > 0`.
+    pub peer_bytes: u64,
+    /// Point-to-point messages behind `peer_bytes`.
+    pub peer_msgs: u64,
     /// Records emitted into the shuffle (or collected, for actions).
     /// For combining shuffles this is the **post-combine** count — the
     /// records that actually cross the wire.
@@ -78,6 +85,8 @@ impl StageMetrics {
             ("shuffle_bytes", Value::num(self.shuffle_bytes as f64)),
             ("remote_bytes", Value::num(self.remote_bytes as f64)),
             ("net_wait_ms", Value::num(self.net_wait_ms)),
+            ("peer_bytes", Value::num(self.peer_bytes as f64)),
+            ("peer_msgs", Value::num(self.peer_msgs as f64)),
             ("records_out", Value::num(self.records_out as f64)),
             ("combined_records", Value::num(self.combined_records as f64)),
             ("pf", Value::num(self.pf as f64)),
@@ -114,6 +123,17 @@ impl JobMetrics {
     /// Total records absorbed by map-side combining across stages.
     pub fn total_combined_records(&self) -> u64 {
         self.stages.iter().map(|s| s.combined_records).sum()
+    }
+
+    /// Total point-to-point barrier-peer bytes across stages (never
+    /// counted in [`total_shuffle_bytes`](Self::total_shuffle_bytes)).
+    pub fn total_peer_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.peer_bytes).sum()
+    }
+
+    /// Total point-to-point barrier-peer messages across stages.
+    pub fn total_peer_msgs(&self) -> u64 {
+        self.stages.iter().map(|s| s.peer_msgs).sum()
     }
 
     /// Total summed task compute time.
@@ -351,6 +371,8 @@ mod tests {
             shuffle_bytes: 10,
             remote_bytes: 5,
             net_wait_ms: 0.0,
+            peer_bytes: 0,
+            peer_msgs: 0,
             records_out: 1,
             combined_records: 0,
             pf: 1,
@@ -476,5 +498,22 @@ mod tests {
         assert_eq!(job.total_attempts(), 6);
         assert_eq!(job.total_recomputed_partitions(), 1);
         assert_eq!(job.total_speculative_wins(), 1);
+    }
+
+    #[test]
+    fn peer_counters_roll_up_separately_from_shuffle() {
+        let scope = JobScope::new(10, "barrier");
+        let mut superstep = stage("superstep/s0", 1.0);
+        superstep.shuffle_bytes = 0;
+        superstep.remote_bytes = 0;
+        superstep.peer_bytes = 4096;
+        superstep.peer_msgs = 8;
+        scope.record_stage(superstep);
+        scope.record_stage(stage("result/collect", 1.0));
+        let job = scope.finalize();
+        assert_eq!(job.total_peer_bytes(), 4096);
+        assert_eq!(job.total_peer_msgs(), 8);
+        // Peer traffic never leaks into the shuffle ledger.
+        assert_eq!(job.total_shuffle_bytes(), 10);
     }
 }

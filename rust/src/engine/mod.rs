@@ -25,8 +25,15 @@
 //!   seeded deterministic chaos injection, bounded per-task retries with
 //!   simulated exponential backoff, executor-loss recomputation from the
 //!   pure task closures, straggler speculation, and job deadlines — the
-//!   sparklet analogue of RDD resilience.
+//!   sparklet analogue of RDD resilience;
+//! - barrier (gang-scheduled) execution ([`barrier`], DESIGN.md S21):
+//!   lock-step supersteps over a `g × g` grid with typed point-to-point
+//!   exchange and **no shuffle write** — all-or-nothing admission,
+//!   whole-gang restart from lineage, and dedicated peer-exchange
+//!   counters, the substrate for communication-avoiding multiplies
+//!   ([`crate::algos::cannon`]).
 
+pub mod barrier;
 pub mod block;
 pub mod cluster;
 pub mod dist;
@@ -35,6 +42,7 @@ pub mod ops;
 pub mod partitioner;
 pub mod sizable;
 
+pub use barrier::{barrier_lineage, run_barrier, try_run_barrier, BarrierTaskContext, GridCoord};
 pub use block::{Block, Side, Tag};
 pub use cluster::{
     ChaosConfig, Cluster, ClusterConfig, SchedulerPolicy, StageFailure, StageRun, BACKOFF_BASE_MS,

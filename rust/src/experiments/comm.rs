@@ -1,0 +1,296 @@
+//! Communication-volume comparison (EXPERIMENTS.md §Comm): Stark's
+//! shuffle-written bytes vs Cannon's point-to-point peer exchanges on
+//! the same `(n, b)` workload across cluster widths. `stark_bench comm`
+//! prints the table and writes the machine-readable `BENCH_comm.json`.
+//!
+//! The claim under measurement is the tentpole's reason to exist: a
+//! barrier gang exchanges operand blocks peer-to-peer with **zero
+//! shuffle write**, and the exchanged volume (initial skew + `g − 1`
+//! ring shifts) undercuts Stark's divide/combine shuffle on matched
+//! workloads. Cannon rows whose `b²` gang exceeds the cluster are
+//! recorded as infeasible rather than silently dropped, so the grid in
+//! the JSON is always complete.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::algos::{cannon, stark as stark_algo, StarkConfig};
+use crate::engine::{ClusterConfig, SparkContext};
+use crate::matrix::DenseMatrix;
+use crate::runtime::NativeBackend;
+use crate::util::json::Value;
+use crate::util::table::{fmt_bytes, Table};
+
+/// One measured (or infeasibility-marked) `(system, n, b, cores)` point.
+#[derive(Debug, Clone)]
+pub struct CommPoint {
+    /// `"stark"` or `"cannon"`.
+    pub system: &'static str,
+    pub n: usize,
+    pub b: usize,
+    pub cores: usize,
+    /// `false` when the point cannot run (Cannon's gang exceeds the
+    /// cluster); the byte/time fields are zero for such rows.
+    pub feasible: bool,
+    pub wall_ms: f64,
+    pub shuffle_bytes: u64,
+    pub peer_bytes: u64,
+    pub peer_msgs: u64,
+}
+
+/// Cluster shape for a core budget: a square grid when the budget is a
+/// perfect square (the paper's 5×5 testbed), otherwise single-core
+/// executors.
+fn cluster_for(cores: usize) -> ClusterConfig {
+    let e = (cores as f64).sqrt().round() as usize;
+    if e * e == cores {
+        ClusterConfig::new(e, e)
+    } else {
+        ClusterConfig::new(cores, 1)
+    }
+}
+
+/// Sweep the grid: for every `cores` budget and split count `b`, run
+/// Stark and Cannon on the same seeded inputs and record each system's
+/// communication ledger. Pairs that both run are cross-checked for
+/// agreement, so the byte comparison is between equal products.
+pub fn run(n: usize, bs: &[usize], cores_grid: &[usize], seed: u64) -> Vec<CommPoint> {
+    let backend = Arc::new(NativeBackend::default());
+    let a = DenseMatrix::random(n, n, seed);
+    let bm = DenseMatrix::random(n, n, seed.wrapping_add(1));
+    let mut points = Vec::new();
+    for &cores in cores_grid {
+        for &b in bs {
+            if n % b != 0 || !b.is_power_of_two() {
+                continue;
+            }
+            let ctx = SparkContext::new(cluster_for(cores));
+            let s = stark_algo::multiply(&ctx, backend.clone(), &a, &bm, b, &StarkConfig::default())
+                .expect("stark comm point failed");
+            points.push(point("stark", n, b, cores, &s));
+            if b * b > cores {
+                points.push(CommPoint {
+                    system: "cannon",
+                    n,
+                    b,
+                    cores,
+                    feasible: false,
+                    wall_ms: 0.0,
+                    shuffle_bytes: 0,
+                    peer_bytes: 0,
+                    peer_msgs: 0,
+                });
+                continue;
+            }
+            let k = cannon::multiply(&ctx, backend.clone(), &a, &bm, b)
+                .expect("cannon comm point failed");
+            assert!(
+                s.c.allclose(&k.c, 1e-9),
+                "stark and cannon disagree at n={n} b={b}: Δ={}",
+                s.c.max_abs_diff(&k.c)
+            );
+            points.push(point("cannon", n, b, cores, &k));
+        }
+    }
+    points
+}
+
+fn point(
+    system: &'static str,
+    n: usize,
+    b: usize,
+    cores: usize,
+    out: &crate::algos::MultiplyOutput,
+) -> CommPoint {
+    CommPoint {
+        system,
+        n,
+        b,
+        cores,
+        feasible: true,
+        wall_ms: out.job.wall_ms,
+        shuffle_bytes: out.job.total_shuffle_bytes(),
+        peer_bytes: out.job.total_peer_bytes(),
+        peer_msgs: out.job.stages.iter().map(|s| s.peer_msgs).sum(),
+    }
+}
+
+/// The headline comparison: at every `(n, b, cores)` where both systems
+/// ran, Cannon's total exchanged bytes (peer + any shuffle, though its
+/// shuffle is zero by construction) must undercut Stark's shuffle
+/// volume. Returns `(pairs compared, pairs Cannon won)`.
+pub fn verdict(points: &[CommPoint]) -> (usize, usize) {
+    let mut pairs = 0;
+    let mut wins = 0;
+    for k in points.iter().filter(|p| p.system == "cannon" && p.feasible) {
+        let Some(s) = points
+            .iter()
+            .find(|p| p.system == "stark" && p.n == k.n && p.b == k.b && p.cores == k.cores)
+        else {
+            continue;
+        };
+        pairs += 1;
+        if k.peer_bytes + k.shuffle_bytes < s.shuffle_bytes {
+            wins += 1;
+        }
+    }
+    (pairs, wins)
+}
+
+/// Render the points as the EXPERIMENTS.md-style table plus the verdict.
+pub fn print_table(points: &[CommPoint]) {
+    println!("\n== communication volume: stark shuffle vs cannon peer exchange ==");
+    let mut t = Table::new(vec![
+        "system", "n", "b", "cores", "wall ms", "shuffle", "peer bytes", "peer msgs",
+    ]);
+    for p in points {
+        if !p.feasible {
+            t.row(vec![
+                p.system.to_string(),
+                p.n.to_string(),
+                p.b.to_string(),
+                p.cores.to_string(),
+                "-".into(),
+                "-".into(),
+                format!("(gang {} > {} cores)", p.b * p.b, p.cores),
+                "-".into(),
+            ]);
+            continue;
+        }
+        t.row(vec![
+            p.system.to_string(),
+            p.n.to_string(),
+            p.b.to_string(),
+            p.cores.to_string(),
+            format!("{:.1}", p.wall_ms),
+            fmt_bytes(p.shuffle_bytes),
+            fmt_bytes(p.peer_bytes),
+            p.peer_msgs.to_string(),
+        ]);
+    }
+    t.print();
+    let (pairs, wins) = verdict(points);
+    println!(
+        "cannon exchanged less than stark shuffled on {wins}/{pairs} matched points ({})",
+        if pairs > 0 && wins == pairs { "WIN" } else { "CHECK" }
+    );
+}
+
+/// Machine-readable report body (`BENCH_comm.json` schema). As with the
+/// kernel ablation, the `provenance` field separates harness-measured
+/// files from hand-projected bootstrap rows — trajectory consumers
+/// should ignore files not marked `measured`.
+pub fn to_json(points: &[CommPoint]) -> Value {
+    let (pairs, wins) = verdict(points);
+    Value::obj(vec![
+        ("schema", Value::str("stark/comm/v1")),
+        ("provenance", Value::str("measured: stark_bench comm")),
+        (
+            "note",
+            Value::str(
+                "regenerate with: cargo run --release --bin stark_bench -- comm \
+                 [--smoke] [--n 256] [--bs 4,8] [--grid-cores 4,16,25]",
+            ),
+        ),
+        (
+            "rows",
+            Value::Array(
+                points
+                    .iter()
+                    .map(|p| {
+                        Value::obj(vec![
+                            ("system", Value::str(p.system)),
+                            ("n", Value::num(p.n as f64)),
+                            ("b", Value::num(p.b as f64)),
+                            ("cores", Value::num(p.cores as f64)),
+                            ("feasible", Value::Bool(p.feasible)),
+                            ("wall_ms", Value::num(p.wall_ms)),
+                            ("shuffle_bytes", Value::num(p.shuffle_bytes as f64)),
+                            ("peer_bytes", Value::num(p.peer_bytes as f64)),
+                            ("peer_msgs", Value::num(p.peer_msgs as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "verdict",
+            Value::obj(vec![
+                ("pairs_compared", Value::num(pairs as f64)),
+                ("cannon_wins", Value::num(wins as f64)),
+                ("holds", Value::Bool(pairs > 0 && wins == pairs)),
+            ]),
+        ),
+    ])
+}
+
+/// Run, print, and write `<dir>/BENCH_comm.json`.
+pub fn run_and_save(
+    n: usize,
+    bs: &[usize],
+    cores_grid: &[usize],
+    seed: u64,
+    dir: impl AsRef<Path>,
+) -> Result<PathBuf> {
+    let points = run(n, bs, cores_grid, seed);
+    print_table(&points);
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating output dir {}", dir.display()))?;
+    let path = dir.join("BENCH_comm.json");
+    std::fs::write(&path, to_json(&points).to_json_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micro_grid_marks_infeasible_and_cannon_wins_the_verdict() {
+        // b=4 at 4 cores: the 16-slot gang cannot be admitted — the row
+        // must exist and be marked, not vanish from the grid.
+        let points = run(16, &[2, 4], &[4, 16], 7);
+        assert_eq!(points.len(), 8, "2 systems × 2 b × 2 core budgets");
+        let marked = points
+            .iter()
+            .find(|p| p.system == "cannon" && p.b == 4 && p.cores == 4)
+            .unwrap();
+        assert!(!marked.feasible);
+        assert_eq!(marked.peer_bytes, 0);
+        // Every feasible cannon point: zero shuffle, nonzero peer bytes.
+        for p in points.iter().filter(|p| p.system == "cannon" && p.feasible) {
+            assert_eq!(p.shuffle_bytes, 0, "cannon wrote shuffle at b={}", p.b);
+            assert!(p.peer_bytes > 0 && p.peer_msgs > 0, "no peer traffic at b={}", p.b);
+        }
+        // Every stark point shuffles and never peers.
+        for p in points.iter().filter(|p| p.system == "stark") {
+            assert!(p.shuffle_bytes > 0);
+            assert_eq!(p.peer_bytes, 0);
+        }
+        let (pairs, wins) = verdict(&points);
+        assert_eq!(pairs, 3, "b=2 at both budgets plus b=4 at 16 cores");
+        assert_eq!(wins, pairs, "cannon must exchange less than stark shuffles");
+    }
+
+    #[test]
+    fn json_schema_has_rows_and_verdict() {
+        let points = run(8, &[2], &[4], 3);
+        let v = to_json(&points);
+        assert_eq!(v.get("schema").and_then(Value::as_str), Some("stark/comm/v1"));
+        assert_eq!(v.get("provenance").and_then(Value::as_str), Some("measured: stark_bench comm"));
+        let rows = v.get("rows").and_then(Value::as_array).unwrap();
+        assert_eq!(rows.len(), points.len());
+        for r in rows {
+            for key in ["system", "n", "b", "cores", "feasible", "shuffle_bytes", "peer_bytes"] {
+                assert!(r.get(key).is_some(), "row missing {key}");
+            }
+        }
+        let verdict = v.get("verdict").unwrap();
+        assert_eq!(verdict.get("pairs_compared"), Some(&Value::num(1.0)));
+        assert_eq!(verdict.get("holds"), Some(&Value::Bool(true)));
+    }
+}

@@ -39,6 +39,7 @@ fn model(algo: Algorithm, n: usize, b: usize, cores: usize) -> CostBreakdown {
         Algorithm::Mllib => cost::mllib_cost(n, b, cores),
         Algorithm::Marlin => cost::marlin_cost(n, b, cores),
         Algorithm::Stark => cost::stark_cost(n, b, cores),
+        Algorithm::Cannon => cost::cannon_cost(n, b, cores),
         Algorithm::Auto => unreachable!("fig10 iterates Algorithm::ALL (concrete systems)"),
     }
 }

@@ -11,6 +11,7 @@
 //! | Table VI | [`table6`] | distributed Stark vs single-node baselines |
 //! | Table VII | [`table7`] | leaf-multiplication cost, Marlin vs Stark |
 //! | DESIGN.md §6 | [`ablations`] | backend / fused-leaf / network ablations |
+//! | EXPERIMENTS.md §Comm | [`comm`] | stark shuffle vs cannon peer-exchange volume |
 //!
 //! Scale note: the paper's testbed multiplies up to 16384² doubles on 25
 //! cores; this harness defaults to 512–2048² on the simulated cluster.
@@ -19,6 +20,7 @@
 //! records the measured shapes next to the paper's.
 
 pub mod ablations;
+pub mod comm;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;
@@ -181,13 +183,20 @@ impl Harness {
         self.run_point_with(algo, n, b, |_| {})
     }
 
-    /// Partition counts valid for `(algo, n)` — Stark needs powers of two.
+    /// Partition counts valid for `(algo, n)` — Stark needs powers of
+    /// two, and Cannon's b² gang must fit the cluster (all-or-nothing
+    /// barrier admission; a wider gang is rejected, not queued).
     pub fn bs_for(&self, algo: Algorithm, n: usize) -> Vec<usize> {
+        let cores = self.scale.executors * self.scale.cores;
         self.scale
             .bs
             .iter()
             .copied()
-            .filter(|&b| n % b == 0 && (algo != Algorithm::Stark || b.is_power_of_two()))
+            .filter(|&b| {
+                n % b == 0
+                    && (algo != Algorithm::Stark || b.is_power_of_two())
+                    && (algo != Algorithm::Cannon || b * b <= cores)
+            })
             .collect()
     }
 }

@@ -8,7 +8,9 @@
 use std::sync::Arc;
 
 use stark::algos::stark::predicted_stages;
-use stark::algos::{marlin, mllib, stark as stark_algo, Algorithm, BaselineOptions, StarkConfig};
+use stark::algos::{
+    cannon, marlin, mllib, stark as stark_algo, Algorithm, BaselineOptions, StarkConfig,
+};
 use stark::api::StarkSession;
 use stark::cost::Splits;
 use stark::engine::{ChaosConfig, ClusterConfig, SparkContext};
@@ -33,7 +35,7 @@ fn inputs(n: usize, seed: u64) -> (DenseMatrix, DenseMatrix) {
     (DenseMatrix::random(n, n, seed), DenseMatrix::random(n, n, seed + 1))
 }
 
-/// Seeded soak: random chaos mode and rates up to 20%, all three
+/// Seeded soak: random chaos mode and rates up to 20%, all four
 /// algorithms, every run bit-identical to the chaos-free baseline and
 /// with recovery visible in the attempts ledger whenever it fired.
 #[test]
@@ -49,6 +51,8 @@ fn seeded_chaos_soak_is_bit_identical_for_all_algorithms() {
             .unwrap();
     let clean_marlin = marlin::multiply(&clean_ctx, backend.clone(), &a, &bm, b, &BASE).unwrap();
     let clean_mllib = mllib::multiply(&clean_ctx, backend.clone(), &a, &bm, b, &BASE).unwrap();
+    // Cannon at b = 2: its b² gang must fit the 4-core soak cluster.
+    let clean_cannon = cannon::multiply(&clean_ctx, backend.clone(), &a, &bm, 2).unwrap();
 
     assert_prop("chaos-soak", 0xC4A0_55ED, 8, |rng| {
         let mode = rng.range(0, 5);
@@ -63,17 +67,27 @@ fn seeded_chaos_soak_is_bit_identical_for_all_algorithms() {
             stage_contains: None,
             fail_once_partition: None,
         };
-        let ctx = SparkContext::new(chaos_cluster(chaos));
+        let ctx = SparkContext::new(chaos_cluster(chaos.clone()));
         let s = stark_algo::multiply(&ctx, backend.clone(), &a, &bm, b, &StarkConfig::default())
             .map_err(|e| format!("stark under chaos mode {mode}: {e}"))?;
         let m = marlin::multiply(&ctx, backend.clone(), &a, &bm, b, &BASE)
             .map_err(|e| format!("marlin under chaos mode {mode}: {e}"))?;
         let l = mllib::multiply(&ctx, backend.clone(), &a, &bm, b, &BASE)
             .map_err(|e| format!("mllib under chaos mode {mode}: {e}"))?;
+        // Gang failures compound — one bad member discards the whole
+        // wave, so P(wave fails) = 1 − (1 − r)^p ≈ 0.59 at the 20%
+        // ceiling with p = 4. A 40-wave budget keeps the residual
+        // exhaustion probability ≈ 1e-9, matching the per-task budget.
+        let mut cannon_cc = chaos_cluster(chaos);
+        cannon_cc.max_task_attempts = 40;
+        let ctx_cannon = SparkContext::new(cannon_cc);
+        let k = cannon::multiply(&ctx_cannon, backend.clone(), &a, &bm, 2)
+            .map_err(|e| format!("cannon under chaos mode {mode}: {e}"))?;
         for (name, got, clean) in [
             ("stark", &s, &clean_stark),
             ("marlin", &m, &clean_marlin),
             ("mllib", &l, &clean_mllib),
+            ("cannon", &k, &clean_cannon),
         ] {
             if got.c.as_slice() != clean.c.as_slice() {
                 return Err(format!("{name} not bit-identical under chaos mode {mode}"));
@@ -92,6 +106,41 @@ fn seeded_chaos_soak_is_bit_identical_for_all_algorithms() {
         }
         Ok(())
     });
+}
+
+/// Barrier semantics under failure: one task failing mid-superstep
+/// discards and re-runs the WHOLE gang wave (lock-step supersteps have
+/// no per-member retry), visible as p extra attempts on the hit stage —
+/// and the recovered product is still bit-identical.
+#[test]
+fn barrier_failure_recomputes_the_whole_gang_not_one_task() {
+    let (a, bm) = inputs(16, 0x6A26);
+    let backend = Arc::new(NativeBackend::default());
+    let p: u32 = 4; // b = 2 → 2×2 gang
+
+    let clean_ctx = SparkContext::new(ClusterConfig::new(2, 2));
+    let clean = cannon::multiply(&clean_ctx, backend.clone(), &a, &bm, 2).unwrap();
+
+    let mut cc = ClusterConfig::new(2, 2);
+    cc.chaos = Some(ChaosConfig::fail_once("superstep/1", 1));
+    let ctx = SparkContext::new(cc);
+    let out = cannon::multiply(&ctx, backend, &a, &bm, 2).unwrap();
+
+    assert_eq!(clean.c.as_slice(), out.c.as_slice(), "gang restart changed the product");
+    let hit = out
+        .job
+        .stages
+        .iter()
+        .find(|s| s.label.contains("superstep/1"))
+        .expect("superstep 1 ran");
+    assert_eq!(hit.attempts, 2 * p, "whole gang re-runs: 2 waves × p members, not p + 1");
+    assert_eq!(hit.retries, p, "the entire first wave is discarded work");
+    for s in out.job.stages.iter().filter(|s| {
+        s.label.contains("superstep/") && !s.label.contains("superstep/1")
+    }) {
+        assert_eq!(s.attempts, p, "stage {}: untouched supersteps stay one-wave", s.label);
+        assert_eq!(s.retries, 0, "stage {}", s.label);
+    }
 }
 
 /// The PR acceptance expression `(A·B + C)·Dᵀ` — a chained multi-multiply

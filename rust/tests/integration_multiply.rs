@@ -1,4 +1,4 @@
-//! Integration: the three distributed algorithms against the single-node
+//! Integration: the four distributed algorithms against the single-node
 //! reference across a grid of (n, b, cluster shape) — the core
 //! correctness contract of the coordinator.
 
@@ -191,12 +191,31 @@ fn isolate_multiply_does_not_change_numbers() {
         .unwrap();
     let (ha, hb) = (session.matrix(&a), session.matrix(&b));
     for algo in Algorithm::ALL {
-        let out =
-            ha.multiply(&hb).algorithm(algo).splits(Splits::Fixed(4)).collect().unwrap();
+        let req = ha.multiply(&hb).algorithm(algo).splits(Splits::Fixed(4));
+        if algo == Algorithm::Cannon {
+            // Cannon's 16-slot gang cannot be admitted on this 4-core
+            // cluster: the planner rejects the request before anything
+            // is distributed, so the handle-reuse counts below hold.
+            let err = req.collect().unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    stark::error::StarkError::InvalidSplits {
+                        algorithm: Algorithm::Cannon,
+                        b: 4,
+                        ..
+                    }
+                ),
+                "cannon on a too-small cluster should be a typed plan error, got: {err}"
+            );
+            continue;
+        }
+        let out = req.collect().unwrap();
         assert!(want.allclose(&out.c, 1e-9), "{algo} isolate_multiply");
         assert_eq!(out.plan.algorithm, algo);
     }
-    // Handle reuse across the three systems: one distribution each side.
+    // Handle reuse across the shuffle-based systems: one distribution
+    // each side (cannon errored at plan time, before distribution).
     assert_eq!(ha.splits_computed(), 1);
     assert_eq!(hb.splits_computed(), 1);
 }
