@@ -34,6 +34,7 @@ use crate::cost::{stark_stage_count, Plan};
 use crate::engine::block::Tag;
 use crate::engine::partitioner::Alignment;
 use crate::engine::{LineageNode, OpKind};
+use crate::util::json::Value;
 
 /// Malformed M-index: a tag's base-7 path does not fit its recursion
 /// depth (`mindex >= 7^depth`), so divide/combine would mis-route it.
@@ -65,6 +66,11 @@ pub const BARRIER_GANG_SHAPE: &str = "STARK-A008";
 /// slots, or Cannon-style skew/shift sends would land on the wrong
 /// members.
 pub const BARRIER_MISROUTED: &str = "STARK-A009";
+/// Dangling store reference: an expression tree's `{"ref":"name"}` leaf
+/// names a matrix that is not in the [`crate::store::MatrixStore`]
+/// (never `put`, or already dropped). Caught by the submit dry-run
+/// before any leaf materializes.
+pub const UNKNOWN_NAME: &str = "STARK-A010";
 
 /// How bad a finding is. `Error` findings reject the plan under the
 /// strict/debug hooks; `Warning`s report but do not block (the CLI still
@@ -328,6 +334,54 @@ pub fn analyze_plan(plan: &ExprPlan) -> Vec<Diagnostic> {
         out.extend(analyze_node_plan(&format!("{}/", node.label), &node.plan));
     }
     out
+}
+
+/// Walk a serve expression tree (raw JSON, serve's grammar) and report
+/// every `{"ref":"name"}` leaf whose name fails the `contains` probe as
+/// a dangling store reference (A010). Taking a predicate instead of the
+/// store itself keeps this layer independent of [`crate::store`] — the
+/// caller decides what "bound" means (serve passes
+/// `MatrixStore::contains`; the CLI dry-run passes the session's store).
+/// Non-string `ref` values are reported too: they could never resolve.
+pub fn analyze_expr_refs(tree: &Value, contains: &dyn Fn(&str) -> bool) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    walk_expr_refs(tree, contains, &mut out);
+    out
+}
+
+fn walk_expr_refs(v: &Value, contains: &dyn Fn(&str) -> bool, out: &mut Vec<Diagnostic>) {
+    match v {
+        Value::Object(fields) => {
+            for (key, val) in fields {
+                if key == "ref" {
+                    match val.as_str() {
+                        Some(name) if contains(name) => {}
+                        Some(name) => out.push(error(
+                            UNKNOWN_NAME,
+                            format!("ref \"{name}\""),
+                            format!(
+                                "expression references matrix '{name}' which is not in the \
+                                 store (never put, or dropped) — the job would fail at run time"
+                            ),
+                        )),
+                        None => out.push(error(
+                            UNKNOWN_NAME,
+                            format!("ref {}", val.to_json()),
+                            "\"ref\" must be a string matrix name".to_string(),
+                        )),
+                    }
+                } else {
+                    walk_expr_refs(val, contains, out);
+                }
+            }
+        }
+        Value::Array(items) => {
+            for item in items {
+                walk_expr_refs(item, contains, out);
+            }
+        }
+        _ => {}
+    }
 }
 
 #[cfg(test)]
@@ -595,5 +649,26 @@ mod tests {
         assert_eq!(diags.len(), 1, "{diags:?}");
         assert_eq!(diags[0].code, DUPLICATE_STAGE_LABEL);
         assert_eq!(diags[0].severity, Severity::Error);
+    }
+
+    #[test]
+    fn dangling_ref_is_a010_and_bound_refs_pass() {
+        let tree = crate::util::json::parse(
+            r#"{"mul":[{"ref":"A"},{"add":[{"ref":"gone"},{"gen":{"n":4}}]}]}"#,
+        )
+        .unwrap();
+        // Only "A" is bound: exactly the nested "gone" leaf is flagged.
+        let diags = analyze_expr_refs(&tree, &|name| name == "A");
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, UNKNOWN_NAME);
+        assert_eq!(diags[0].severity, Severity::Error);
+        assert!(diags[0].message.contains("'gone'"), "{}", diags[0].message);
+        assert!(render(&diags).contains("STARK-A010"));
+        // Everything bound → clean; a non-string ref can never resolve.
+        assert!(analyze_expr_refs(&tree, &|_| true).is_empty());
+        let bad = crate::util::json::parse(r#"{"ref":7}"#).unwrap();
+        let diags = analyze_expr_refs(&bad, &|_| true);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, UNKNOWN_NAME);
     }
 }

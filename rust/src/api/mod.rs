@@ -52,6 +52,7 @@ pub mod expr;
 pub use expr::{DistExpr, ExprPlan, ExprReport, IntoExpr, NodePlan};
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -62,6 +63,7 @@ use crate::engine::{ClusterConfig, JobMetrics, SparkContext};
 use crate::error::StarkError;
 use crate::matrix::DenseMatrix;
 use crate::runtime::LeafBackend;
+use crate::store::{DropOutcome, MatrixStore, PinGuard, PutOutcome, StoreMetrics};
 
 /// Builder for [`StarkSession`]: cluster shape, leaf backend, Stark
 /// tuning, and planner calibration.
@@ -141,12 +143,17 @@ impl SessionBuilder {
             None => build_backend(self.backend_kind, cores)
                 .map_err(|e| StarkError::Backend(format!("{e:#}")))?,
         };
+        let store = MatrixStore::open(
+            self.cluster.store_dir.as_deref().map(Path::new),
+            self.cluster.store_byte_budget,
+        )?;
         Ok(StarkSession {
             inner: Arc::new(SessionInner {
                 ctx: SparkContext::new(self.cluster),
                 backend,
                 stark: self.stark,
                 planner: Planner::with_calibration(cores, self.calibration),
+                store,
             }),
         })
     }
@@ -157,6 +164,7 @@ struct SessionInner {
     backend: Arc<dyn LeafBackend>,
     stark: StarkConfig,
     planner: Planner,
+    store: Arc<MatrixStore>,
 }
 
 /// One long-lived entry point owning the [`SparkContext`], the leaf
@@ -229,9 +237,65 @@ impl StarkSession {
                 data: m,
                 splits: Mutex::new(HashMap::new()),
                 computed: AtomicUsize::new(0),
+                store: None,
             }),
         }
     }
+
+    /// The session's named-matrix store ([`crate::store`]).
+    pub fn store(&self) -> &Arc<MatrixStore> {
+        &self.inner.store
+    }
+
+    /// Register `data` under `name` in the session's store:
+    /// write-through to the spill directory, identical content deduped
+    /// by hash. Handles from [`StarkSession::get`] then share one
+    /// store-side split cache across all jobs referencing the name.
+    pub fn put(&self, name: &str, data: Arc<DenseMatrix>) -> Result<PutOutcome, StarkError> {
+        self.inner.store.put(name, data)
+    }
+
+    /// A [`DistMatrix`] handle over the stored matrix `name`
+    /// ([`StarkError::UnknownName`] if absent). The handle pins the
+    /// store entry — dropping or evicting the name cannot invalidate a
+    /// job built on the handle — and its splits resolve through the
+    /// store's shared cache, so N jobs referencing `name` split it
+    /// exactly once.
+    pub fn get(&self, name: &str) -> Result<DistMatrix, StarkError> {
+        let (_, id, data, pin) = self.inner.store.get(name)?.into_parts();
+        Ok(DistMatrix {
+            session: self.clone(),
+            inner: Arc::new(MatrixInner {
+                data,
+                splits: Mutex::new(HashMap::new()),
+                computed: AtomicUsize::new(0),
+                store: Some(StoreBinding { store: self.inner.store.clone(), id, _pin: pin }),
+            }),
+        })
+    }
+
+    /// Unbind `name` from the store. Returns
+    /// [`DropOutcome::Pinned`] while in-flight jobs still hold the
+    /// entry; they finish unharmed and the entry goes with the last pin.
+    pub fn drop_matrix(&self, name: &str) -> Result<DropOutcome, StarkError> {
+        self.inner.store.drop_name(name)
+    }
+
+    /// Counter snapshot of the session's store (hits, misses,
+    /// evictions, spills, resident bytes, …).
+    pub fn store_metrics(&self) -> StoreMetrics {
+        self.inner.store.metrics()
+    }
+}
+
+/// Ties a store-backed handle to its entry: the id routes split lookups
+/// through the store's shared cache, the pin keeps the entry valid for
+/// exactly the handle's lifetime (and so for any job holding the
+/// handle — the satellite invariant behind drop-while-running).
+struct StoreBinding {
+    store: Arc<MatrixStore>,
+    id: u64,
+    _pin: PinGuard,
 }
 
 struct MatrixInner {
@@ -243,6 +307,9 @@ struct MatrixInner {
     /// How many splits were actually computed (≠ cache hits) — the
     /// observable behind the distribute-only-once contract.
     computed: AtomicUsize,
+    /// `Some` when the handle came from [`StarkSession::get`]: splits
+    /// route through the store's shared cache instead of the local map.
+    store: Option<StoreBinding>,
 }
 
 /// A distributed-matrix handle: the session's unit of work. Cloning is
@@ -281,13 +348,21 @@ impl DistMatrix {
 
     /// How many block splits this handle has computed (cache misses).
     /// Reusing a handle across jobs at one `(padded n, b)` point keeps
-    /// this at 1 however many multiplies run.
+    /// this at 1 however many multiplies run. Store-backed handles
+    /// report the *entry's* count: it stays at 1 across however many
+    /// handles and jobs reference the name.
     pub fn splits_computed(&self) -> usize {
+        if let Some(sb) = &self.inner.store {
+            return sb.store.splits_computed(sb.id) as usize;
+        }
         self.inner.computed.load(Ordering::Relaxed)
     }
 
     /// Cached `b × b` split of the payload zero-padded to `s × s`.
     fn splits_for(&self, s: usize, b: usize) -> Result<BlockSplits, StarkError> {
+        if let Some(sb) = &self.inner.store {
+            return sb.store.splits_for(sb.id, s, b);
+        }
         let mut cache = self.inner.splits.lock().unwrap();
         if let Some(hit) = cache.get(&(s, b)) {
             return Ok(hit.clone());
@@ -487,6 +562,51 @@ mod tests {
         // A different split point is a genuine new distribution.
         a.multiply(&b1).algorithm(Algorithm::Stark).splits(Splits::Fixed(2)).collect().unwrap();
         assert_eq!(a.splits_computed(), 2);
+    }
+
+    #[test]
+    fn store_backed_handles_share_one_split() {
+        let s = session();
+        let am = DenseMatrix::random(16, 16, 11);
+        let bm = DenseMatrix::random(16, 16, 12);
+        s.put("A", Arc::new(am.clone())).unwrap();
+        s.put("B", Arc::new(bm.clone())).unwrap();
+        let run = || {
+            let (a, b) = (s.get("A").unwrap(), s.get("B").unwrap());
+            a.multiply(&b).algorithm(Algorithm::Stark).splits(Splits::Fixed(4)).collect().unwrap()
+        };
+        let (r1, r2, r3) = (run(), run(), run());
+        // One split per operand serves all three jobs, across handles.
+        assert_eq!(s.store_metrics().splits_computed, 2);
+        assert_eq!(r1.c.as_slice(), r2.c.as_slice());
+        assert_eq!(r1.c.as_slice(), r3.c.as_slice());
+        // Bit-identical to the re-upload (unnamed handle) path.
+        let plain = s
+            .matrix(&am)
+            .multiply(&s.matrix(&bm))
+            .algorithm(Algorithm::Stark)
+            .splits(Splits::Fixed(4))
+            .collect()
+            .unwrap();
+        assert_eq!(plain.c.as_slice(), r1.c.as_slice());
+        assert!(matches!(s.get("missing"), Err(StarkError::UnknownName { .. })));
+    }
+
+    #[test]
+    fn drop_during_live_handle_does_not_invalidate_it() {
+        let s = session();
+        let am = DenseMatrix::random(16, 16, 13);
+        let bm = DenseMatrix::random(16, 16, 14);
+        s.put("A", Arc::new(am.clone())).unwrap();
+        let a = s.get("A").unwrap();
+        assert!(matches!(s.drop_matrix("A"), Ok(crate::store::DropOutcome::Pinned)));
+        assert!(matches!(s.get("A"), Err(StarkError::UnknownName { .. })));
+        // The live handle still multiplies, bit-identical to a fresh run.
+        let r = a.multiply(&s.matrix(&bm)).collect().unwrap();
+        let plain = s.matrix(&am).multiply(&s.matrix(&bm)).collect().unwrap();
+        assert_eq!(r.c.as_slice(), plain.c.as_slice());
+        drop(a);
+        assert_eq!(s.store_metrics().entries, 0);
     }
 
     #[test]

@@ -114,6 +114,12 @@ pub struct RunConfig {
     /// Straggler speculation: duplicate tasks slower than
     /// `multiplier × stage median`; `None` disables speculation.
     pub speculation_multiplier: Option<f64>,
+    /// Named-matrix store byte budget (payloads + cached splits);
+    /// `None` = unlimited (see [`crate::store`]).
+    pub store_byte_budget: Option<u64>,
+    /// Directory backing the store's spill files (persists named
+    /// matrices across restarts); `None` = ephemeral temp dir.
+    pub store_dir: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -137,6 +143,8 @@ impl Default for RunConfig {
             chaos: None,
             max_task_attempts: 4,
             speculation_multiplier: None,
+            store_byte_budget: None,
+            store_dir: None,
         }
     }
 }
@@ -153,6 +161,8 @@ impl RunConfig {
             chaos: self.chaos.clone(),
             max_task_attempts: self.max_task_attempts,
             speculation_multiplier: self.speculation_multiplier,
+            store_byte_budget: self.store_byte_budget,
+            store_dir: self.store_dir.clone(),
         }
     }
 
@@ -205,6 +215,14 @@ impl RunConfig {
             (
                 "speculation_multiplier",
                 self.speculation_multiplier.map(Value::num).unwrap_or(Value::Null),
+            ),
+            (
+                "store_byte_budget",
+                self.store_byte_budget.map(|b| Value::num(b as f64)).unwrap_or(Value::Null),
+            ),
+            (
+                "store_dir",
+                self.store_dir.clone().map(Value::str).unwrap_or(Value::Null),
             ),
         ];
         if let Some(c) = &self.chaos {
@@ -312,6 +330,10 @@ impl RunConfig {
                 .map(|a| a as u32)
                 .unwrap_or(4),
             speculation_multiplier: v.get("speculation_multiplier").and_then(Value::as_f64),
+            // Pre-store recorded configs carry neither knob: unlimited
+            // budget, ephemeral spill dir — exactly the old behavior.
+            store_byte_budget: v.get("store_byte_budget").and_then(Value::as_u64),
+            store_dir: v.get("store_dir").and_then(Value::as_str).map(str::to_string),
             chaos,
         })
     }
@@ -383,6 +405,27 @@ mod tests {
         // And the knob itself round-trips.
         let strict = RunConfig { strict_analyze: true, ..Default::default() };
         assert!(RunConfig::from_json(&strict.to_json()).unwrap().strict_analyze);
+    }
+
+    #[test]
+    fn store_knobs_roundtrip_and_default_on_old_json() {
+        let cfg = RunConfig {
+            store_byte_budget: Some(1 << 20),
+            store_dir: Some("/tmp/stark-store".into()),
+            ..Default::default()
+        };
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.store_byte_budget, Some(1 << 20));
+        assert_eq!(back.store_dir.as_deref(), Some("/tmp/stark-store"));
+        let cc = back.cluster_config();
+        assert_eq!(cc.store_byte_budget, Some(1 << 20));
+        assert_eq!(cc.store_dir.as_deref(), Some("/tmp/stark-store"));
+        // Pre-store recorded configs keep parsing: unlimited, ephemeral.
+        let legacy = r#"{"n":64,"b":2,"algo":"stark","backend":"packed",
+            "executors":2,"cores_per_executor":2,"seed":1}"#;
+        let parsed = RunConfig::from_json(legacy).unwrap();
+        assert_eq!(parsed.store_byte_budget, None);
+        assert_eq!(parsed.store_dir, None);
     }
 
     #[test]

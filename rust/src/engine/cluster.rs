@@ -106,6 +106,15 @@ pub struct ClusterConfig {
     /// agree bit-for-bit — asserted in debug builds). `None` (default)
     /// disables speculation and its counters.
     pub speculation_multiplier: Option<f64>,
+    /// Byte budget for the session's named-matrix store
+    /// ([`crate::store::MatrixStore`]): resident payloads + cached
+    /// block splits. Over budget, splits are evicted and payloads
+    /// spill to disk in LRU order. `None` (default) = unlimited.
+    pub store_byte_budget: Option<u64>,
+    /// Directory backing the store's spill files. A directory makes
+    /// named matrices survive server restarts (entries reload lazily);
+    /// `None` (default) uses an ephemeral temp dir removed on drop.
+    pub store_dir: Option<String>,
 }
 
 impl Default for ClusterConfig {
@@ -120,6 +129,8 @@ impl Default for ClusterConfig {
             chaos: None,
             max_task_attempts: 4,
             speculation_multiplier: None,
+            store_byte_budget: None,
+            store_dir: None,
         }
     }
 }

@@ -86,6 +86,17 @@ pub enum StarkError {
         /// The deadline that was exceeded, in milliseconds.
         deadline_ms: u64,
     },
+    /// A [`crate::store::MatrixStore`] lookup (or a `{"ref":"name"}`
+    /// expression leaf) named a matrix that was never `put`, or was
+    /// dropped. Serve renders this as `{"ok":false,"unknown_name":true}`.
+    UnknownName {
+        name: String,
+    },
+    /// A serve `status`/`wait` named a job id the server has never
+    /// assigned. Rendered as `{"ok":false,"unknown_job":true}`.
+    UnknownJob {
+        job_id: u64,
+    },
 }
 
 impl StarkError {
@@ -149,6 +160,12 @@ impl std::fmt::Display for StarkError {
             StarkError::JobTimedOut { job, deadline_ms } => {
                 write!(f, "job '{job}' timed out: deadline of {deadline_ms} ms exceeded")
             }
+            StarkError::UnknownName { name } => {
+                write!(f, "unknown matrix name '{name}': not in the store (never put, or dropped)")
+            }
+            StarkError::UnknownJob { job_id } => {
+                write!(f, "unknown job id {job_id}: never submitted on this server")
+            }
         }
     }
 }
@@ -183,5 +200,13 @@ mod tests {
         let e = StarkError::JobTimedOut { job: "stark n=64 b=2".into(), deadline_ms: 250 };
         let s = e.to_string();
         assert!(s.contains("stark n=64 b=2") && s.contains("250 ms"), "{s}");
+    }
+
+    #[test]
+    fn store_variants_render_their_context() {
+        let s = StarkError::UnknownName { name: "weights".into() }.to_string();
+        assert!(s.contains("'weights'") && s.contains("dropped"), "{s}");
+        let s = StarkError::UnknownJob { job_id: 41 }.to_string();
+        assert!(s.contains("41"), "{s}");
     }
 }

@@ -75,7 +75,10 @@
 //!   diagnostics for tag, alignment, determinism, job-scope and
 //!   stage-ledger invariants, checked before anything executes.
 //! - [`serve`] — the session exposed as a TCP job queue
-//!   (`submit`/`wait`/`plan`/…).
+//!   (`submit`/`wait`/`plan`/`put`/…).
+//! - [`store`] — the named-matrix store: operands resident across jobs
+//!   under a byte budget, with LRU eviction, checksummed disk spill,
+//!   and restart recovery.
 //! - [`config`] — experiment/run configuration shared by the CLI,
 //!   examples and benches.
 //!
@@ -93,6 +96,7 @@ pub mod experiments;
 pub mod matrix;
 pub mod runtime;
 pub mod serve;
+pub mod store;
 pub mod util;
 
 pub use analyze::{Diagnostic, Severity};

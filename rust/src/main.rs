@@ -44,19 +44,30 @@ USAGE: stark <multiply|plan|analyze|compare|sweep|stages|scalability|cost|serve|
                         the single multiply from --n/--algo/--b; prints
                         STARK-Axxx diagnostics, exits non-zero on any
   serve:                --addr 127.0.0.1:7878  (newline-JSON job queue:
-                        submit/status/wait/jobs/multiply/plan/ping/
-                        shutdown) [--max-jobs 8] [--runners 2]
+                        submit/status/wait/jobs/multiply/plan/put/get/
+                        drop/ls/ping/shutdown) [--max-jobs 8]
+                        [--runners 2] [--store-dir DIR]
+                        [--store-budget-mb N]  (named-matrix store:
+                        budget-bounded LRU cache with spill-to-disk; a
+                        persistent --store-dir survives restarts)
   serve-smoke:          start an ephemeral server, run the submit+wait+
-                        shutdown protocol over the socket, exit non-zero
-                        on any failure (the CI service check)
+                        shutdown protocol over the socket — including a
+                        put/ref/ls/drop/restart-reload store pass —
+                        exit non-zero on any failure (the CI service
+                        check)
   request:              --addr HOST:PORT [--op multiply|submit|plan|
-                        status|wait|jobs|ping|shutdown] [--job-id N]
-                        [--timeout-ms N] [--deadline-ms N] --n 256
-                        [--algo auto] [--b auto]
+                        status|wait|jobs|put|get|drop|ls|ping|shutdown]
+                        [--job-id N] [--timeout-ms N] [--deadline-ms N]
+                        --n 256 [--algo auto] [--b auto]
                         [--expr '<json>' | --expr @expr.json]  submit a
                         whole expression DAG (mul/add/sub/scale/t/pow
-                        over matrix/gen leaves) instead of one multiply;
-                        it runs chained, with a single collect
+                        over matrix/gen/ref leaves) instead of one
+                        multiply; it runs chained, with a single collect
+                        put: --name NAME with --matrix '<json>'|@file or
+                        a generator --n/--seed;  get: --name [--values];
+                        drop: --name;  ls: no flags.  multiply/submit
+                        accept --ref-a/--ref-b NAME to reference stored
+                        matrices instead of shipping payloads
 
 FLAGS (shared):
   --n <int>            matrix dimension            [512]
@@ -82,6 +93,10 @@ FLAGS (shared):
   --scheduler <p>      fair | fifo task scheduling across concurrent
                        jobs on the simulated cluster        [fair]
   --max-concurrent-jobs <int>  fair-scheduler rotation width [4]
+  --store-dir <path>   named-matrix store directory (persists across
+                       restarts; default: ephemeral temp dir)
+  --store-budget-mb <int>  byte budget for resident store entries; LRU
+                       splits then payloads spill past it     [unbounded]
   --real-net-sleep     really sleep the simulated shuffle-read wait
   --max-task-attempts <int>  bounded retries per task before the job
                        fails with a typed error              [4]
@@ -164,6 +179,8 @@ fn run_config(args: &Args) -> RunConfig {
         chaos: chaos_from_args(args),
         max_task_attempts: args.get("max-task-attempts", 4),
         speculation_multiplier: args.get_opt::<f64>("speculation"),
+        store_byte_budget: args.get_opt::<u64>("store-budget-mb").map(|mb| mb << 20),
+        store_dir: args.raw("store-dir").map(str::to_string),
     }
 }
 
@@ -459,6 +476,18 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         };
         let tree = stark::util::json::parse(text.trim())
             .map_err(|e| anyhow::anyhow!("--expr is not valid JSON: {e}"))?;
+        // Dangling {"ref":...} leaves (A010) are reported BEFORE plan
+        // construction — expr_from_json would fail on the lookup with a
+        // plain error, losing the STARK-A010 code CI greps for.
+        let ref_diags =
+            stark::analyze::analyze_expr_refs(&tree, &|name| session.store().contains(name));
+        if !ref_diags.is_empty() {
+            for d in &ref_diags {
+                println!("{d}");
+            }
+            eprintln!("analyze: {} diagnostic(s) found", ref_diags.len());
+            std::process::exit(1);
+        }
         let expr = stark::serve::expr_from_json(&session, &tree)?;
         let plan = expr.plan()?;
         println!(
@@ -505,6 +534,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.get("max-jobs", 8usize),
         args.get("runners", 2usize),
     );
+    if cfg.store_dir.is_some() || cfg.store_byte_budget.is_some() {
+        println!(
+            "store: dir={} budget={}",
+            cfg.store_dir.as_deref().unwrap_or("(ephemeral)"),
+            cfg.store_byte_budget.map_or("unbounded".to_string(), fmt_bytes),
+        );
+    }
     // Block until a shutdown request lands (poll the accept thread).
     loop {
         std::thread::sleep(std::time::Duration::from_millis(200));
@@ -532,6 +568,11 @@ fn cmd_request(args: &Args) -> Result<()> {
             Err(_) => Value::str(raw),
         }
     };
+    let name_of = |what: &str| -> Result<String> {
+        args.raw("name")
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("--name is required for op {what}"))
+    };
     match op.as_str() {
         "multiply" | "submit" => {
             // An expression tree replaces the single-multiply fields:
@@ -544,6 +585,16 @@ fn cmd_request(args: &Args) -> Result<()> {
                 let tree = stark::util::json::parse(text.trim())
                     .map_err(|e| anyhow::anyhow!("--expr is not valid JSON: {e}"))?;
                 fields.push(("expr", tree));
+            } else if let (Some(ra), Some(rb)) = (args.raw("ref-a"), args.raw("ref-b")) {
+                // Stored operands by name: no payload crosses the wire,
+                // and the server reuses the names' cached block splits.
+                fields.push((
+                    "algo",
+                    Value::str(args.raw("algorithm").or(args.raw("algo")).unwrap_or("stark")),
+                ));
+                fields.push(("b", b_value("4")));
+                fields.push(("a", Value::obj(vec![("ref", Value::str(ra))])));
+                fields.push(("b_mat", Value::obj(vec![("ref", Value::str(rb))])));
             } else {
                 fields.push((
                     "algo",
@@ -556,6 +607,35 @@ fn cmd_request(args: &Args) -> Result<()> {
             if let Some(ms) = args.get_opt::<u64>("deadline-ms") {
                 fields.push(("deadline_ms", Value::num(ms as f64)));
             }
+        }
+        "put" => {
+            fields.push(("name", Value::str(name_of("put")?)));
+            if let Some(raw) = args.raw("matrix") {
+                let text = match raw.strip_prefix('@') {
+                    Some(path) => std::fs::read_to_string(path)?,
+                    None => raw.to_string(),
+                };
+                let m = stark::util::json::parse(text.trim())
+                    .map_err(|e| anyhow::anyhow!("--matrix is not valid JSON: {e}"))?;
+                fields.push(("matrix", m));
+            } else {
+                fields.push((
+                    "gen",
+                    Value::obj(vec![
+                        ("n", Value::num(args.get("n", 256usize) as f64)),
+                        ("seed", Value::num(args.get("seed", 42u64) as f64)),
+                    ]),
+                ));
+            }
+        }
+        "get" => {
+            fields.push(("name", Value::str(name_of("get")?)));
+            if args.flag("values") {
+                fields.push(("values", Value::Bool(true)));
+            }
+        }
+        "drop" => {
+            fields.push(("name", Value::str(name_of("drop")?)));
         }
         "plan" => {
             fields.push((
@@ -767,6 +847,178 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
         2
     );
     tally(&chained);
+
+    // ---- named-matrix store: put → ref-multiply ×3 → ls → drop →
+    // restart-reload on one persistent directory (DESIGN.md S22) ----
+    let store_tmp = stark::util::tmp::TempDir::new("stark-smoke-store")?;
+    let store_dir = store_tmp.path().display().to_string();
+    let mut store_cfg = cfg.clone();
+    store_cfg.store_dir = Some(store_dir.clone());
+    let start_store_server = |cfg: &RunConfig| -> Result<stark::serve::Server> {
+        Ok(stark::serve::Server::start(
+            "127.0.0.1:0",
+            stark::serve::ServerState {
+                session: session_for(cfg)?,
+                default_splits: Splits::Fixed(2),
+                max_inflight_jobs: 8,
+                job_runners: 2,
+            },
+        )?)
+    };
+    let mut store_server = start_store_server(&store_cfg)?;
+    let saddr = store_server.addr().to_string();
+    // A=seed 31, B=seed 32 — exactly the pair `multiply n=32 seed=31`
+    // generates, so the re-upload path below is the identity reference.
+    for (name, seed) in [("A", 31.0), ("B", 32.0)] {
+        let put = stark::serve::request(
+            &saddr,
+            &Value::obj(vec![
+                ("op", Value::str("put")),
+                ("name", Value::str(name)),
+                (
+                    "gen",
+                    Value::obj(vec![("n", Value::num(32.0)), ("seed", Value::num(seed))]),
+                ),
+            ]),
+        )?;
+        anyhow::ensure!(put.get("ok") == Some(&Value::Bool(true)), "put {name}: {put:?}");
+    }
+    let ref_tree = stark::util::json::parse(
+        r#"{"mul":[{"ref":"A"},{"ref":"B"}],"algo":"stark","b":2}"#,
+    )
+    .map_err(|e| anyhow::anyhow!("ref expr json: {e}"))?;
+    let mut ref_frob = None;
+    for round in 0..3 {
+        let resp = stark::serve::request(
+            &saddr,
+            &Value::obj(vec![("op", Value::str("multiply")), ("expr", ref_tree.clone())]),
+        )?;
+        anyhow::ensure!(resp.get("ok") == Some(&Value::Bool(true)), "ref multiply: {resp:?}");
+        tally(&resp);
+        let f = resp
+            .get("frobenius")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("missing frobenius: {resp:?}"))?;
+        anyhow::ensure!(
+            *ref_frob.get_or_insert(f) == f,
+            "ref multiply round {round} is not bit-identical: {resp:?}"
+        );
+        // The store hit/miss ledger: N jobs over one put split each
+        // stored operand exactly once, whatever N.
+        let sc = resp
+            .get("store")
+            .and_then(|s| s.get("splits_computed"))
+            .and_then(Value::as_u64);
+        anyhow::ensure!(sc == Some(2), "stored operands must split exactly once each: {resp:?}");
+    }
+    let ref_frob = ref_frob.unwrap();
+    // Bit-identity against the re-upload path (same seeded operands
+    // shipped fresh, same algorithm/splits → same bits).
+    let upload = stark::serve::request(
+        &saddr,
+        &Value::obj(vec![
+            ("op", Value::str("multiply")),
+            ("algo", Value::str("stark")),
+            ("n", Value::num(32.0)),
+            ("b", Value::num(2.0)),
+            ("seed", Value::num(31.0)),
+        ]),
+    )?;
+    anyhow::ensure!(upload.get("ok") == Some(&Value::Bool(true)), "re-upload: {upload:?}");
+    tally(&upload);
+    anyhow::ensure!(
+        upload.get("frobenius").and_then(Value::as_f64) == Some(ref_frob),
+        "ref path is not bit-identical to the re-upload path: {upload:?}"
+    );
+    let hits = upload
+        .get("store")
+        .and_then(|s| s.get("hits"))
+        .and_then(Value::as_u64)
+        .unwrap_or(0);
+    anyhow::ensure!(hits > 0, "repeated ref jobs recorded no store hits: {upload:?}");
+    let ls = stark::serve::request(&saddr, &Value::obj(vec![("op", Value::str("ls"))]))?;
+    anyhow::ensure!(
+        ls.get("entries").and_then(Value::as_array).map(<[Value]>::len) == Some(2),
+        "ls after two puts: {ls:?}"
+    );
+    // Dangling refs are rejected at submit time with the analyzer code.
+    let dangling = stark::serve::request(
+        &saddr,
+        &Value::obj(vec![
+            ("op", Value::str("submit")),
+            (
+                "expr",
+                stark::util::json::parse(r#"{"mul":[{"ref":"A"},{"ref":"ghost"}]}"#)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?,
+            ),
+        ]),
+    )?;
+    anyhow::ensure!(
+        dangling.get("ok") == Some(&Value::Bool(false))
+            && dangling
+                .get("error")
+                .and_then(Value::as_str)
+                .map_or(false, |e| e.contains("STARK-A010")),
+        "dangling ref was not rejected with STARK-A010: {dangling:?}"
+    );
+    // B·B before the restart: the bit-identity reference for reload.
+    let ref_b = stark::util::json::parse(r#"{"ref":"B"}"#).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let bb_req = Value::obj(vec![
+        ("op", Value::str("multiply")),
+        ("algo", Value::str("stark")),
+        ("b", Value::num(2.0)),
+        ("a", ref_b.clone()),
+        ("b_mat", ref_b.clone()),
+    ]);
+    let bb1 = stark::serve::request(&saddr, &bb_req)?;
+    anyhow::ensure!(bb1.get("ok") == Some(&Value::Bool(true)), "B·B: {bb1:?}");
+    tally(&bb1);
+    let bb1_frob = bb1
+        .get("frobenius")
+        .and_then(Value::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("missing frobenius: {bb1:?}"))?;
+    let dropped = stark::serve::request(
+        &saddr,
+        &Value::obj(vec![("op", Value::str("drop")), ("name", Value::str("A"))]),
+    )?;
+    anyhow::ensure!(dropped.get("dropped") == Some(&Value::Bool(true)), "drop A: {dropped:?}");
+    store_server.stop();
+    // Restart on the same directory: surviving names reload lazily and
+    // bit-identically; dropped names stay gone.
+    let mut store_server2 = start_store_server(&store_cfg)?;
+    let saddr2 = store_server2.addr().to_string();
+    let got = stark::serve::request(
+        &saddr2,
+        &Value::obj(vec![("op", Value::str("get")), ("name", Value::str("B"))]),
+    )?;
+    anyhow::ensure!(
+        got.get("ok") == Some(&Value::Bool(true))
+            && got.get("resident") == Some(&Value::Bool(false)),
+        "B must be registered-but-spilled after restart: {got:?}"
+    );
+    let gone = stark::serve::request(
+        &saddr2,
+        &Value::obj(vec![("op", Value::str("get")), ("name", Value::str("A"))]),
+    )?;
+    anyhow::ensure!(
+        gone.get("unknown_name") == Some(&Value::Bool(true)),
+        "dropped A survived the restart: {gone:?}"
+    );
+    let bb2 = stark::serve::request(&saddr2, &bb_req)?;
+    anyhow::ensure!(bb2.get("ok") == Some(&Value::Bool(true)), "reload B·B: {bb2:?}");
+    tally(&bb2);
+    anyhow::ensure!(
+        bb2.get("frobenius").and_then(Value::as_f64) == Some(bb1_frob),
+        "reloaded product is not bit-identical: {bb2:?} vs {bb1_frob}"
+    );
+    let misses = bb2
+        .get("store")
+        .and_then(|s| s.get("misses"))
+        .and_then(Value::as_u64)
+        .unwrap_or(0);
+    anyhow::ensure!(misses >= 1, "restart reload recorded no disk miss: {bb2:?}");
+    store_server2.stop();
+    println!("serve-smoke: store put/ref/ls/drop/restart-reload OK (dir {store_dir})");
 
     // Recovery observability: chaos-free runs must cost exactly zero
     // retries (attempts == tasks); an armed chaos config must leave

@@ -65,6 +65,32 @@
 //! <- {"ok":true,"algorithm":"stark","b":8,"n":4096,
 //!     "predicted_wall_ms":123.4,"stages":[...],"considered":[...]}
 //!
+//! // NAMED MATRICES ([`crate::store`]): upload once, multiply many
+//! // times. "put" takes an inline "matrix" or a seeded "gen" and
+//! // dedupes identical content by hash; expression leaves (and
+//! // "a"/"b_mat") may then be {"ref":"name"}. Every store response —
+//! // and every job result — carries the store counters, so cache
+//! // behavior (hits/misses/evictions/spills/resident bytes) is
+//! // observable per request.
+//! -> {"op":"put","name":"W","gen":{"n":256,"seed":7}}
+//! <- {"ok":true,"name":"W","rows":256,"cols":256,"bytes":524288,
+//!     "deduped":false,"replaced":false,"store":{"hits":0,...}}
+//! -> {"op":"multiply","expr":{"mul":[{"ref":"W"},{"ref":"W"}]}}
+//! <- {"ok":true,...,"store":{"splits_computed":1,...}}
+//! -> {"op":"get","name":"W"}            // metadata; "values":true for the payload
+//! <- {"ok":true,"name":"W","rows":256,"cols":256,"resident":true,...}
+//! -> {"op":"ls"}
+//! <- {"ok":true,"entries":[{"name":"W","rows":256,...}],"store":{...}}
+//! -> {"op":"drop","name":"W"}
+//! <- {"ok":true,"dropped":true,...}     // or "pinned":true while jobs
+//!                                       // still hold it (they finish
+//!                                       // unharmed; removal is deferred)
+//! // Unknown names/job ids are TYPED rejections, not generic errors:
+//! <- {"ok":false,"unknown_name":true,"error":"unknown matrix name 'W'..."}
+//! <- {"ok":false,"unknown_job":true,"job_id":99,"error":"unknown job id 99..."}
+//! // A dangling ref is caught at submit time by the static analyzer
+//! // (STARK-A010), before anything runs.
+//!
 //! -> {"op":"shutdown"}
 //! ```
 //!
@@ -117,9 +143,11 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::algos::Algorithm;
-use crate::api::{DistExpr, IntoExpr, StarkSession};
+use crate::api::{DistExpr, DistMatrix, IntoExpr, StarkSession};
 use crate::cost::{Plan, Splits};
+use crate::error::StarkError;
 use crate::matrix::DenseMatrix;
+use crate::store::DropOutcome;
 use crate::util::json::{self, Value};
 
 /// How long [`Server::stop`] lets in-flight connection handlers finish
@@ -192,10 +220,15 @@ struct JobSpec {
 }
 
 enum JobPayload {
-    /// One `a @ b_mat` multiply.
-    Multiply { algo: Algorithm, splits: Splits, a: Arc<DenseMatrix>, b_mat: Arc<DenseMatrix> },
+    /// One `a @ b_mat` multiply. The operands are session handles built
+    /// at parse time — inline payloads, or store-backed `{"ref":"name"}`
+    /// handles whose pins ride in the spec: the runner drops the spec
+    /// only after the result is published, so a concurrent `drop` of a
+    /// referenced name can never invalidate a job in flight.
+    Multiply { algo: Algorithm, splits: Splits, a: DistMatrix, b_mat: DistMatrix },
     /// A whole expression DAG, already bound to the server session —
-    /// runs as one chained job with a single collect.
+    /// runs as one chained job with a single collect. Store-backed
+    /// leaves pin their entries exactly like `Multiply` operands.
     Expr(DistExpr),
 }
 
@@ -568,9 +601,7 @@ fn execute(state: &ServerState, id: u64, spec: &JobSpec) -> Value {
     let mut fields = vec![("ok", Value::Bool(true)), ("job_id", Value::num(id as f64))];
     let (c, job, leaf_calls, leaf_ms) = match &spec.payload {
         JobPayload::Multiply { algo, splits, a, b_mat } => {
-            let a = state.session.matrix_arc(a.clone());
-            let b = state.session.matrix_arc(b_mat.clone());
-            let mut builder = a.multiply(&b).algorithm(*algo).splits(*splits);
+            let mut builder = a.multiply(b_mat).algorithm(*algo).splits(*splits);
             if let Some(ms) = spec.deadline_ms {
                 builder = builder.deadline(ms);
             }
@@ -632,6 +663,9 @@ fn execute(state: &ServerState, id: u64, spec: &JobSpec) -> Value {
         ("speculative_wins", Value::num(job.total_speculative_wins() as f64)),
         // Exactly this job's stage metrics (count = eq. (25) for Stark).
         ("stages", Value::Array(job.stages.iter().map(|s| s.to_json()).collect())),
+        // Store counters so a client can watch hit/miss/eviction/spill
+        // behavior of `{"ref":...}` operands without a separate `ls`.
+        ("store", state.session.store_metrics().to_value()),
     ]);
     if spec.return_c {
         fields.push(("c", matrix_to_json(&c)));
@@ -739,6 +773,17 @@ fn parse_expr(
         let seed = g.get("seed").and_then(Value::as_u64).unwrap_or(42);
         return Ok(session.matrix_arc(Arc::new(DenseMatrix::random(n, n, seed))).expr());
     }
+    if let Some(r) = v.get("ref") {
+        // Store-backed leaf: the handle pins the entry, so the name can
+        // be dropped mid-job without invalidating this expression. The
+        // A010 dry-run in parse_spec already vouched the name exists —
+        // this lookup can still lose a race to a concurrent drop, which
+        // surfaces as the same typed error.
+        let name = r.as_str().context("\"ref\" must be a string matrix name")?;
+        let h = session.get(name).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        budget.charge(h.rows(), h.cols())?;
+        return Ok(h.expr());
+    }
     if v.get("mul").is_some() {
         let ops = args("mul", 2)?;
         let l = parse_expr(session, &ops[0], depth + 1, budget)?;
@@ -782,7 +827,7 @@ fn parse_expr(
         return Ok(parse_expr(session, &ops[0], depth + 1, budget)?.pow(k as u32));
     }
     anyhow::bail!(
-        "unknown expression node (want one of matrix/gen/mul/add/sub/scale/t/pow): {}",
+        "unknown expression node (want one of matrix/gen/ref/mul/add/sub/scale/t/pow): {}",
         v.to_json()
     )
 }
@@ -803,6 +848,17 @@ fn parse_spec(session: &StarkSession, req: &Value, default_splits: Splits) -> Re
     let return_c = req.get("return_c").and_then(Value::as_bool).unwrap_or(false);
     let deadline_ms = req.get("deadline_ms").and_then(Value::as_u64);
     if let Some(tree) = req.get("expr") {
+        // Dangling `{"ref":...}` dry-run (STARK-A010): every referenced
+        // name must be in the store NOW, before any leaf materializes.
+        // Unconditional — a dangling ref is an error in every build; the
+        // diagnostic beats the raw lookup failure parse_expr would hit.
+        let store = session.store().clone();
+        let diags = crate::analyze::analyze_expr_refs(tree, &|name| store.contains(name));
+        anyhow::ensure!(
+            !crate::analyze::has_errors(&diags),
+            "expression rejected by static analysis:\n{}",
+            crate::analyze::render(&diags)
+        );
         let mut budget = LeafBudget::new();
         let expr = parse_expr(session, tree, 0, &mut budget)?;
         // Dry-run the whole chain plan: shape/session/split errors and
@@ -836,7 +892,7 @@ fn parse_spec(session: &StarkSession, req: &Value, default_splits: Splits) -> Re
         .map_err(anyhow::Error::msg)?;
     let splits = parse_splits(req, default_splits)?;
     let (a, b_mat) = match (req.get("a"), req.get("b_mat")) {
-        (Some(a), Some(bm)) => (parse_matrix(a)?, parse_matrix(bm)?),
+        (Some(a), Some(bm)) => (parse_operand(session, a)?, parse_operand(session, bm)?),
         _ => {
             let n = req
                 .get("n")
@@ -848,7 +904,10 @@ fn parse_spec(session: &StarkSession, req: &Value, default_splits: Splits) -> Re
                 "\"n\" must be in 1..={MAX_SUBMIT_N}, got {n}"
             );
             let seed = req.get("seed").and_then(Value::as_u64).unwrap_or(42);
-            (DenseMatrix::random(n, n, seed), DenseMatrix::random(n, n, seed + 1))
+            (
+                session.matrix_arc(Arc::new(DenseMatrix::random(n, n, seed))),
+                session.matrix_arc(Arc::new(DenseMatrix::random(n, n, seed + 1))),
+            )
         }
     };
     anyhow::ensure!(
@@ -879,11 +938,23 @@ fn parse_spec(session: &StarkSession, req: &Value, default_splits: Splits) -> Re
             crate::analyze::render(&diags)
         );
     }
-    Ok(JobSpec {
-        payload: JobPayload::Multiply { algo, splits, a: Arc::new(a), b_mat: Arc::new(b_mat) },
-        return_c,
-        deadline_ms,
-    })
+    Ok(JobSpec { payload: JobPayload::Multiply { algo, splits, a, b_mat }, return_c, deadline_ms })
+}
+
+/// Parse one `multiply`/`submit` operand: an inline `[[...]]` payload,
+/// or `{"ref":"name"}` resolving through the session store (the handle
+/// pins the entry for the job's whole lifetime).
+fn parse_operand(session: &StarkSession, v: &Value) -> Result<DistMatrix> {
+    if let Some(r) = v.get("ref") {
+        let name = r.as_str().context("\"ref\" must be a string matrix name")?;
+        return session.get(name).map_err(|e| anyhow::anyhow!(e.to_string()));
+    }
+    let m = parse_matrix(v)?;
+    anyhow::ensure!(
+        m.rows() <= MAX_SUBMIT_N && m.cols() <= MAX_SUBMIT_N,
+        "operand must be at most {MAX_SUBMIT_N} rows/cols"
+    );
+    Ok(session.matrix_arc(Arc::new(m)))
 }
 
 /// Render a [`Plan`] as the `plan` op's response document.
@@ -974,6 +1045,19 @@ fn submit_job(shared: &Shared, spec: JobSpec) -> Submitted {
     Submitted::Accepted(id)
 }
 
+/// Typed rejection for a `status`/`wait` naming a job id this server
+/// never assigned (or one that rolled off the finished-job window):
+/// `{"ok":false,"unknown_job":true}` so clients can branch without
+/// string-matching the error text.
+fn unknown_job_doc(id: u64) -> Value {
+    Value::obj(vec![
+        ("ok", Value::Bool(false)),
+        ("job_id", Value::num(id as f64)),
+        ("unknown_job", Value::Bool(true)),
+        ("error", Value::str(StarkError::UnknownJob { job_id: id }.to_string())),
+    ])
+}
+
 /// Block until job `id` completes (or `timeout` elapses) and return its
 /// result document. The result's deep copy happens after the table
 /// lock is released — only the `Arc` handle is taken under it.
@@ -983,7 +1067,7 @@ fn wait_for(shared: &Shared, id: u64, timeout: Option<Duration>) -> Result<Value
         let mut jobs = shared.jobs.inner.lock().unwrap();
         loop {
             match jobs.entries.get(&id) {
-                None => anyhow::bail!("unknown job id {id}"),
+                None => return Ok(unknown_job_doc(id)),
                 Some(e) => match &e.status {
                     JobStatus::Done(v) => break v.clone(),
                     JobStatus::Failed(msg) => {
@@ -1082,8 +1166,9 @@ fn handle_request(line: &str, shared: &Shared) -> Result<Value> {
             // document only after releasing it.
             let (name, status, result, error) = {
                 let jobs = shared.jobs.inner.lock().unwrap();
-                let e =
-                    jobs.entries.get(&id).with_context(|| format!("unknown job id {id}"))?;
+                let Some(e) = jobs.entries.get(&id) else {
+                    return Ok(unknown_job_doc(id));
+                };
                 let result = match &e.status {
                     JobStatus::Done(v) => Some(v.clone()),
                     _ => None,
@@ -1191,8 +1276,138 @@ fn handle_request(line: &str, shared: &Shared) -> Result<Value> {
                 Submitted::Rejected(doc) => Ok(doc),
             }
         }
+        // ---- named-matrix store (module docs, NAMED MATRICES) ----
+        "put" => {
+            let session = &shared.state.session;
+            let name = req
+                .get("name")
+                .and_then(Value::as_str)
+                .context("\"put\" needs a string \"name\"")?;
+            let data = if let Some(m) = req.get("matrix") {
+                let m = parse_matrix(m)?;
+                anyhow::ensure!(
+                    m.rows() <= MAX_SUBMIT_N && m.cols() <= MAX_SUBMIT_N,
+                    "\"put\" payload must be at most {MAX_SUBMIT_N} rows/cols"
+                );
+                Arc::new(m)
+            } else if let Some(g) = req.get("gen") {
+                let n = g.get("n").and_then(Value::as_usize).context("\"gen\" needs \"n\"")?;
+                anyhow::ensure!(
+                    n >= 1 && n <= MAX_SUBMIT_N,
+                    "\"gen\" n must be in 1..={MAX_SUBMIT_N}"
+                );
+                let seed = g.get("seed").and_then(Value::as_u64).unwrap_or(42);
+                Arc::new(DenseMatrix::random(n, n, seed))
+            } else {
+                anyhow::bail!("\"put\" needs a \"matrix\" payload or a \"gen\" generator")
+            };
+            let out = session.put(name, data).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+            Ok(Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("name", Value::str(name)),
+                ("rows", Value::num(out.rows as f64)),
+                ("cols", Value::num(out.cols as f64)),
+                ("bytes", Value::num(out.bytes as f64)),
+                ("deduped", Value::Bool(out.deduped)),
+                ("replaced", Value::Bool(out.replaced)),
+                ("store", session.store_metrics().to_value()),
+            ]))
+        }
+        "get" => {
+            let session = &shared.state.session;
+            let name = req
+                .get("name")
+                .and_then(Value::as_str)
+                .context("\"get\" needs a string \"name\"")?;
+            let want_values = req.get("values").and_then(Value::as_bool).unwrap_or(false);
+            // Metadata comes from the listing (no reload of a spilled
+            // payload); only "values":true pulls the payload back in.
+            let Some(info) = session.store().list().into_iter().find(|e| e.name == name) else {
+                return Ok(unknown_name_doc(name));
+            };
+            let mut fields = vec![
+                ("ok", Value::Bool(true)),
+                ("name", Value::str(name)),
+                ("rows", Value::num(info.rows as f64)),
+                ("cols", Value::num(info.cols as f64)),
+                ("bytes", Value::num(info.payload_bytes as f64)),
+                ("resident", Value::Bool(info.resident)),
+                ("pins", Value::num(info.pins as f64)),
+                ("splits_computed", Value::num(info.splits_computed as f64)),
+                ("hash", Value::str(format!("{:016x}", info.hash))),
+            ];
+            if want_values {
+                match session.get(name) {
+                    Ok(h) => fields.push(("values", matrix_to_json(h.dense()))),
+                    // Lost a race to a concurrent drop between list()
+                    // and get(): same typed rejection as never-bound.
+                    Err(_) => return Ok(unknown_name_doc(name)),
+                }
+            }
+            fields.push(("store", session.store_metrics().to_value()));
+            Ok(Value::obj(fields))
+        }
+        "drop" => {
+            let session = &shared.state.session;
+            let name = req
+                .get("name")
+                .and_then(Value::as_str)
+                .context("\"drop\" needs a string \"name\"")?;
+            match session.drop_matrix(name) {
+                Ok(out) => Ok(Value::obj(vec![
+                    ("ok", Value::Bool(true)),
+                    ("name", Value::str(name)),
+                    ("dropped", Value::Bool(out == DropOutcome::Dropped)),
+                    // The name is unbound either way; pinned means the
+                    // entry itself lives until the last in-flight job
+                    // holding it finishes.
+                    ("pinned", Value::Bool(out == DropOutcome::Pinned)),
+                    ("store", session.store_metrics().to_value()),
+                ])),
+                Err(StarkError::UnknownName { .. }) => Ok(unknown_name_doc(name)),
+                Err(e) => anyhow::bail!(e.to_string()),
+            }
+        }
+        "ls" => {
+            let session = &shared.state.session;
+            let entries: Vec<Value> = session
+                .store()
+                .list()
+                .into_iter()
+                .map(|e| {
+                    Value::obj(vec![
+                        ("name", Value::str(e.name)),
+                        ("rows", Value::num(e.rows as f64)),
+                        ("cols", Value::num(e.cols as f64)),
+                        ("bytes", Value::num(e.payload_bytes as f64)),
+                        ("splits_bytes", Value::num(e.splits_bytes as f64)),
+                        ("resident", Value::Bool(e.resident)),
+                        ("pins", Value::num(e.pins as f64)),
+                        ("splits_computed", Value::num(e.splits_computed as f64)),
+                        ("hash", Value::str(format!("{:016x}", e.hash))),
+                    ])
+                })
+                .collect();
+            Ok(Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("entries", Value::Array(entries)),
+                ("store", session.store_metrics().to_value()),
+            ]))
+        }
         other => anyhow::bail!("unknown op {other:?}"),
     }
+}
+
+/// Typed rejection mirroring [`unknown_job_doc`] for store lookups:
+/// `{"ok":false,"unknown_name":true}` when `name` is not bound (never
+/// put, or dropped).
+fn unknown_name_doc(name: &str) -> Value {
+    Value::obj(vec![
+        ("ok", Value::Bool(false)),
+        ("name", Value::str(name)),
+        ("unknown_name", Value::Bool(true)),
+        ("error", Value::str(StarkError::UnknownName { name: name.to_string() }.to_string())),
+    ])
 }
 
 /// Simple blocking client: send one request line, read one response.
@@ -1489,17 +1704,22 @@ mod tests {
         );
         assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
         assert!(resp.get("error").unwrap().as_str().unwrap().contains("power-of-two"));
-        // status/wait on unknown ids error instead of hanging.
+        // status/wait on unknown ids reject TYPED instead of hanging:
+        // {"ok":false,"unknown_job":true} so clients branch without
+        // string-matching.
         let resp = req(
             &addr,
             vec![("op", Value::str("status")), ("job_id", Value::num(999.0))],
         );
         assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
+        assert_eq!(resp.get("unknown_job"), Some(&Value::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("job_id").unwrap().as_u64(), Some(999));
         let resp = req(
             &addr,
             vec![("op", Value::str("wait")), ("job_id", Value::num(999.0))],
         );
         assert_eq!(resp.get("ok"), Some(&Value::Bool(false)));
+        assert_eq!(resp.get("unknown_job"), Some(&Value::Bool(true)), "{resp:?}");
     }
 
     #[test]
@@ -1763,5 +1983,142 @@ mod tests {
         );
         assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
         assert_eq!(resp.get("c").unwrap().to_json(), "[[6],[15]]");
+    }
+
+    #[test]
+    fn store_ops_roundtrip_with_ref_operands() {
+        let server = test_server();
+        let addr = server.addr().to_string();
+        // put A (seed 5) and B (seed 6) — the same pair `multiply` with
+        // n=16 seed=5 would generate, so the re-upload path is the
+        // bit-identity reference below.
+        for (name, seed) in [("A", 5.0), ("B", 6.0)] {
+            let resp = req(
+                &addr,
+                vec![
+                    ("op", Value::str("put")),
+                    ("name", Value::str(name)),
+                    (
+                        "gen",
+                        Value::obj(vec![
+                            ("n", Value::num(16.0)),
+                            ("seed", Value::num(seed)),
+                        ]),
+                    ),
+                ],
+            );
+            assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+            assert_eq!(resp.get("rows").unwrap().as_u64(), Some(16));
+            assert_eq!(resp.get("deduped"), Some(&Value::Bool(false)));
+            assert!(resp.get("store").is_some(), "{resp:?}");
+        }
+        // N=3 jobs referencing the names: the store splits each operand
+        // exactly once (splits_computed == 2 on every response).
+        let expr = json::parse(r#"{"mul":[{"ref":"A"},{"ref":"B"}],"algo":"stark","b":2}"#)
+            .unwrap();
+        let mut frobs = Vec::new();
+        for _ in 0..3 {
+            let resp = req(
+                &addr,
+                vec![("op", Value::str("multiply")), ("expr", expr.clone())],
+            );
+            assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+            frobs.push(resp.get("frobenius").unwrap().as_f64().unwrap());
+            let store = resp.get("store").unwrap();
+            assert_eq!(
+                store.get("splits_computed").unwrap().as_u64(),
+                Some(2),
+                "one split per stored operand, however many jobs: {resp:?}"
+            );
+        }
+        assert!(frobs.windows(2).all(|w| w[0] == w[1]), "{frobs:?}");
+        // Direct `{"ref":...}` operands (no expr tree) hit the same cache.
+        let resp = req(
+            &addr,
+            vec![
+                ("op", Value::str("multiply")),
+                ("algo", Value::str("stark")),
+                ("b", Value::num(2.0)),
+                ("a", json::parse(r#"{"ref":"A"}"#).unwrap()),
+                ("b_mat", json::parse(r#"{"ref":"B"}"#).unwrap()),
+            ],
+        );
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("frobenius").unwrap().as_f64(), Some(frobs[0]));
+        // Re-upload path: identical generated operands, bit-identical C.
+        let resp = req(
+            &addr,
+            vec![
+                ("op", Value::str("multiply")),
+                ("algo", Value::str("stark")),
+                ("b", Value::num(2.0)),
+                ("n", Value::num(16.0)),
+                ("seed", Value::num(5.0)),
+            ],
+        );
+        assert_eq!(resp.get("frobenius").unwrap().as_f64(), Some(frobs[0]), "{resp:?}");
+        // ls sees both names; drop unbinds; get then rejects typed.
+        let ls = req(&addr, vec![("op", Value::str("ls"))]);
+        let entries = ls.get("entries").unwrap().as_array().unwrap();
+        assert_eq!(entries.len(), 2, "{ls:?}");
+        assert_eq!(entries[0].get("name").unwrap().as_str(), Some("A"));
+        assert_eq!(entries[0].get("splits_computed").unwrap().as_u64(), Some(1));
+        let dropped = req(
+            &addr,
+            vec![("op", Value::str("drop")), ("name", Value::str("A"))],
+        );
+        assert_eq!(dropped.get("ok"), Some(&Value::Bool(true)), "{dropped:?}");
+        assert_eq!(dropped.get("dropped"), Some(&Value::Bool(true)));
+        assert_eq!(dropped.get("pinned"), Some(&Value::Bool(false)));
+        let gone = req(
+            &addr,
+            vec![
+                ("op", Value::str("get")),
+                ("name", Value::str("A")),
+                ("values", Value::Bool(true)),
+            ],
+        );
+        assert_eq!(gone.get("ok"), Some(&Value::Bool(false)));
+        assert_eq!(gone.get("unknown_name"), Some(&Value::Bool(true)), "{gone:?}");
+        // B is still there, values round-trip through `get`.
+        let b = req(
+            &addr,
+            vec![
+                ("op", Value::str("get")),
+                ("name", Value::str("B")),
+                ("values", Value::Bool(true)),
+            ],
+        );
+        assert_eq!(b.get("ok"), Some(&Value::Bool(true)), "{b:?}");
+        let values = b.get("values").unwrap();
+        let want = matrix_to_json(&DenseMatrix::random(16, 16, 6));
+        assert_eq!(values.to_json(), want.to_json());
+    }
+
+    #[test]
+    fn dangling_ref_is_rejected_with_a010_at_submit() {
+        let server = test_server();
+        let addr = server.addr().to_string();
+        let expr = json::parse(r#"{"mul":[{"ref":"never-put"},{"gen":{"n":4}}]}"#).unwrap();
+        let resp = req(&addr, vec![("op", Value::str("submit")), ("expr", expr)]);
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)), "{resp:?}");
+        let err = resp.get("error").unwrap().as_str().unwrap();
+        assert!(err.contains("STARK-A010"), "{err}");
+        assert!(err.contains("never-put"), "{err}");
+        // Unknown refs as direct multiply operands reject typed too
+        // (no expr tree, so the raw store error carries the context).
+        let resp = req(
+            &addr,
+            vec![
+                ("op", Value::str("multiply")),
+                ("a", json::parse(r#"{"ref":"never-put"}"#).unwrap()),
+                ("b_mat", json::parse("[[1]]").unwrap()),
+            ],
+        );
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)), "{resp:?}");
+        assert!(
+            resp.get("error").unwrap().as_str().unwrap().contains("never-put"),
+            "{resp:?}"
+        );
     }
 }

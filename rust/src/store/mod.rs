@@ -1,0 +1,971 @@
+//! The named-matrix store: resident operands across jobs (DESIGN.md S22).
+//!
+//! Serving many jobs against a few operands is the ROADMAP north star,
+//! yet before this module every serve request re-shipped its dense
+//! payload and re-split it into blocks — the per-handle split cache in
+//! [`crate::api`] died with the request. [`MatrixStore`] is the missing
+//! storage layer: a registry of **named** matrices whose payloads *and*
+//! cached [`BlockSplits`] stay resident across jobs, governed by a
+//! byte budget ([`crate::engine::ClusterConfig::store_byte_budget`])
+//! with LRU eviction and spill-to-disk under pressure.
+//!
+//! Upload once, multiply thousands of times:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use stark::api::StarkSession;
+//! use stark::matrix::DenseMatrix;
+//!
+//! let s = StarkSession::builder().build()?;
+//! s.put("A", Arc::new(DenseMatrix::random(256, 256, 1)))?;
+//! s.put("B", Arc::new(DenseMatrix::random(256, 256, 2)))?;
+//! for _ in 0..3 {
+//!     let (a, b) = (s.get("A")?, s.get("B")?);
+//!     a.multiply(&b).collect()?; // A and B split exactly once, total
+//! }
+//! assert_eq!(s.store_metrics().splits_computed, 2);
+//! # Ok::<(), stark::StarkError>(())
+//! ```
+//!
+//! **Entries are id-addressed; names are remappable.** `put` binds a
+//! name to a numeric entry id; `drop`/re-`put` unbind the *name*
+//! immediately, but the entry itself lives until its last pin releases.
+//! A [`PinGuard`] (held by every handle [`MatrixStore::get`] returns,
+//! and therefore by every in-flight job) keeps the entry — and its
+//! resident payload — alive and exempt from eviction, so evicting or
+//! dropping a name mid-job can never invalidate the job.
+//!
+//! **Budget accounting.** `resident_bytes` sums every resident payload
+//! plus every cached split (a split of padded size `s` holds `s²`
+//! doubles). After any charge, eviction walks entries in LRU order
+//! (skipping pinned and doomed entries), first discarding cached splits
+//! (*evictions*), then dropping the resident payload Arc (*spills* —
+//! cheap, because `put` already wrote the entry through to disk).
+//! Whenever no pins are held, `resident_bytes <= budget` holds.
+//!
+//! **On-disk format** (version 1, little-endian): magic `STRKSTOR`,
+//! `u32` version, `u32` name length + UTF-8 name, `u64` rows, `u64`
+//! cols, `u64` FNV-1a checksum of the payload bytes, then `rows·cols`
+//! `f64` values row-major. `f64 -> LE bytes -> f64` round-trips
+//! bit-exactly, and reload verifies the checksum, so a spilled entry
+//! reloads bit-identically or fails loudly. Only the payload is
+//! persisted: splits are deterministic functions of the payload, so
+//! they are recomputed (and re-counted) after a reload. Opening a store
+//! on an existing directory scans file *headers* only and registers
+//! each entry as spilled — restart recovery is lazy by construction.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::algos::BlockSplits;
+use crate::error::StarkError;
+use crate::matrix::DenseMatrix;
+use crate::util::json::Value;
+use crate::util::tmp::TempDir;
+
+/// Magic bytes opening every spill file.
+pub const MAGIC: &[u8; 8] = b"STRKSTOR";
+/// On-disk format version written (and the only one accepted).
+pub const FORMAT_VERSION: u32 = 1;
+/// Spill-file extension (files are named by the FNV-1a hash of the
+/// entry name, so one name maps to one stable path across restarts).
+pub const FILE_EXT: &str = "stor";
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over `bytes`, continuing from `h` (seed with [`fnv1a64`]).
+fn fnv1a64_with(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a 64-bit hash of a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_with(FNV_OFFSET, bytes)
+}
+
+/// Content hash of a payload: FNV-1a over its values as little-endian
+/// bytes, row-major — exactly the bytes the spill file stores, so the
+/// in-memory hash and the on-disk checksum are the same quantity.
+pub fn payload_hash(m: &DenseMatrix) -> u64 {
+    let mut h = FNV_OFFSET;
+    for v in m.as_slice() {
+        h = fnv1a64_with(h, &v.to_le_bytes());
+    }
+    h
+}
+
+/// Counter snapshot of one store ([`MatrixStore::metrics`]); serve
+/// attaches it to `put`/`get`/`drop`/`ls` and job-result responses.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StoreMetrics {
+    /// Lookups served from resident state (payload for `get`, cached
+    /// split for a multiply).
+    pub hits: u64,
+    /// Lookups that were not resident: a payload reloaded from disk, or
+    /// a split that had to be (re)computed.
+    pub misses: u64,
+    /// Cached splits discarded by budget pressure.
+    pub evictions: u64,
+    /// Resident payloads dropped to disk-only by budget pressure.
+    pub spills: u64,
+    /// Total block splits computed across all entries, ever.
+    pub splits_computed: u64,
+    /// Bytes currently resident (payloads + cached splits).
+    pub resident_bytes: u64,
+    /// Named entries currently in the registry.
+    pub entries: u64,
+}
+
+impl StoreMetrics {
+    /// The JSON object serve responses embed under `"store"`.
+    pub fn to_value(&self) -> Value {
+        Value::obj(vec![
+            ("hits", Value::Number(self.hits as f64)),
+            ("misses", Value::Number(self.misses as f64)),
+            ("evictions", Value::Number(self.evictions as f64)),
+            ("spills", Value::Number(self.spills as f64)),
+            ("splits_computed", Value::Number(self.splits_computed as f64)),
+            ("resident_bytes", Value::Number(self.resident_bytes as f64)),
+            ("entries", Value::Number(self.entries as f64)),
+        ])
+    }
+}
+
+/// One named entry as reported by [`MatrixStore::list`] (serve's `ls`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EntryInfo {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    /// Payload size in bytes (resident or not).
+    pub payload_bytes: u64,
+    /// Bytes held by this entry's cached splits.
+    pub splits_bytes: u64,
+    /// Whether the payload is resident (false = spilled to disk).
+    pub resident: bool,
+    /// Live pins (handles / in-flight jobs holding the entry).
+    pub pins: u64,
+    /// Content hash (FNV-1a of the payload bytes).
+    pub hash: u64,
+    /// Splits computed for this entry since it was registered.
+    pub splits_computed: u64,
+}
+
+/// What [`MatrixStore::put`] did.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PutOutcome {
+    pub rows: usize,
+    pub cols: usize,
+    /// Payload size in bytes.
+    pub bytes: u64,
+    /// The content (shape + hash) was already in the store — either the
+    /// same name (full no-op, cached splits kept) or another name (the
+    /// payload allocation is shared).
+    pub deduped: bool,
+    /// The name existed with different content and was remapped.
+    pub replaced: bool,
+}
+
+/// What [`MatrixStore::drop_name`] did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropOutcome {
+    /// The entry had no pins and is gone (memory and disk).
+    Dropped,
+    /// In-flight jobs still pin the entry: the *name* is unbound now
+    /// (its spill file is removed), the entry itself is removed when
+    /// the last pin releases.
+    Pinned,
+}
+
+struct EntryRec {
+    name: String,
+    rows: usize,
+    cols: usize,
+    hash: u64,
+    payload_bytes: u64,
+    /// `None` = spilled: reload lazily from `path`.
+    payload: Option<Arc<DenseMatrix>>,
+    /// `(padded n, b)` -> cached split, shared (Arc) with running jobs.
+    splits: HashMap<(usize, usize), BlockSplits>,
+    splits_bytes: u64,
+    /// Spill file; `None` once the name is dropped (file deleted). A
+    /// pinned entry is always payload-resident, so a doomed entry never
+    /// needs its file again.
+    path: Option<PathBuf>,
+    pins: u64,
+    splits_computed: u64,
+    /// Name unbound while pins were held; removed at last release.
+    doomed: bool,
+    /// LRU clock value of the last touch.
+    last_used: u64,
+}
+
+impl EntryRec {
+    fn resident_bytes(&self) -> u64 {
+        self.splits_bytes + if self.payload.is_some() { self.payload_bytes } else { 0 }
+    }
+}
+
+struct StoreInner {
+    by_name: BTreeMap<String, u64>,
+    entries: BTreeMap<u64, EntryRec>,
+    next_id: u64,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    spills: u64,
+}
+
+impl StoreInner {
+    fn resident_bytes(&self) -> u64 {
+        self.entries.values().map(EntryRec::resident_bytes).sum()
+    }
+}
+
+/// A registry of named matrices resident across jobs: payloads and
+/// block splits cached under a byte budget, spilled to a directory
+/// under pressure, reloaded lazily and bit-identically (module docs).
+pub struct MatrixStore {
+    inner: Mutex<StoreInner>,
+    dir: PathBuf,
+    budget: Option<u64>,
+    /// Owns the directory when none was configured (ephemeral store).
+    _tmp: Option<TempDir>,
+}
+
+/// Keeps a store entry alive and exempt from eviction; released on
+/// drop. Every handle [`MatrixStore::get`] returns carries one, so an
+/// in-flight job pins its operands for exactly as long as it runs.
+pub struct PinGuard {
+    store: Arc<MatrixStore>,
+    id: u64,
+}
+
+impl std::fmt::Debug for PinGuard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PinGuard(#{})", self.id)
+    }
+}
+
+impl Drop for PinGuard {
+    fn drop(&mut self) {
+        self.store.release(self.id);
+    }
+}
+
+/// A pinned view of one entry: the payload plus the [`PinGuard`] that
+/// keeps the entry valid. [`crate::api::StarkSession::get`] wraps this
+/// into a [`crate::api::DistMatrix`].
+#[derive(Debug)]
+pub struct StoreHandle {
+    name: String,
+    id: u64,
+    data: Arc<DenseMatrix>,
+    pin: PinGuard,
+}
+
+impl StoreHandle {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Store entry id — the key for [`MatrixStore::splits_for`].
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn data(&self) -> Arc<DenseMatrix> {
+        self.data.clone()
+    }
+
+    /// Split out the payload and the pin (the api layer stores them on
+    /// one `MatrixInner` so handle lifetime = pin lifetime).
+    pub fn into_parts(self) -> (String, u64, Arc<DenseMatrix>, PinGuard) {
+        (self.name, self.id, self.data, self.pin)
+    }
+}
+
+impl MatrixStore {
+    /// Open a store. `dir: Some(..)` persists across restarts (existing
+    /// spill files are registered as lazily-reloadable entries);
+    /// `None` uses a fresh temp directory removed when the store drops.
+    /// `budget: None` = unlimited.
+    pub fn open(dir: Option<&Path>, budget: Option<u64>) -> Result<Arc<Self>, StarkError> {
+        let (dir, tmp) = match dir {
+            Some(d) => {
+                fs::create_dir_all(d).map_err(|e| {
+                    StarkError::Backend(format!("store: create dir {}: {e}", d.display()))
+                })?;
+                (d.to_path_buf(), None)
+            }
+            None => {
+                let t = TempDir::new("stark-store")
+                    .map_err(|e| StarkError::Backend(format!("store: temp dir: {e}")))?;
+                (t.path().to_path_buf(), Some(t))
+            }
+        };
+        let mut inner = StoreInner {
+            by_name: BTreeMap::new(),
+            entries: BTreeMap::new(),
+            next_id: 1,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            spills: 0,
+        };
+        scan_dir(&dir, &mut inner);
+        Ok(Arc::new(Self { inner: Mutex::new(inner), dir, budget, _tmp: tmp }))
+    }
+
+    /// The spill directory (ephemeral unless configured).
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Register `data` under `name`, writing it through to the spill
+    /// file immediately (so later eviction is just dropping the Arc,
+    /// and restart recovery sees every entry). Identical content —
+    /// same shape and [`payload_hash`] — dedupes: re-putting a name
+    /// verbatim is a no-op that keeps its cached splits; the same
+    /// content under another name shares the payload allocation (each
+    /// name still accounts and spills independently: simple, and the
+    /// budget stays an upper bound).
+    pub fn put(&self, name: &str, data: Arc<DenseMatrix>) -> Result<PutOutcome, StarkError> {
+        if name.is_empty() {
+            return Err(StarkError::InvalidExpression("store name must be non-empty".into()));
+        }
+        let hash = payload_hash(&data);
+        let (rows, cols) = (data.rows(), data.cols());
+        let bytes = data.size_bytes() as u64;
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let now = g.tick;
+        let mut replaced = false;
+        if let Some(&id) = g.by_name.get(name) {
+            let e = g.entries.get_mut(&id).unwrap();
+            if e.rows == rows && e.cols == cols && e.hash == hash {
+                e.last_used = now;
+                return Ok(PutOutcome { rows, cols, bytes, deduped: true, replaced: false });
+            }
+            // Same name, different content: drop-semantics on the old
+            // entry, then register the new content below.
+            self.unbind(&mut g, name);
+            replaced = true;
+        }
+        // Content dedupe across names: share the resident allocation.
+        let shared = g
+            .entries
+            .values()
+            .find(|e| !e.doomed && e.rows == rows && e.cols == cols && e.hash == hash)
+            .and_then(|e| e.payload.clone());
+        let deduped = shared.is_some();
+        let payload = shared.unwrap_or(data);
+        let path = self.entry_path(name);
+        write_entry_file(&path, name, &payload, hash)?;
+        let id = g.next_id;
+        g.next_id += 1;
+        g.by_name.insert(name.to_string(), id);
+        g.entries.insert(
+            id,
+            EntryRec {
+                name: name.to_string(),
+                rows,
+                cols,
+                hash,
+                payload_bytes: bytes,
+                payload: Some(payload),
+                splits: HashMap::new(),
+                splits_bytes: 0,
+                path: Some(path),
+                pins: 0,
+                splits_computed: 0,
+                doomed: false,
+                last_used: now,
+            },
+        );
+        self.enforce_budget(&mut g);
+        Ok(PutOutcome { rows, cols, bytes, deduped, replaced })
+    }
+
+    /// Pinned lookup by name. Resident payload is a *hit*; a spilled
+    /// one is a *miss* reloaded from disk with its checksum verified.
+    /// The returned handle holds the payload Arc and a [`PinGuard`], so
+    /// the entry stays valid (and payload-resident) until the handle —
+    /// and any job built on it — is done.
+    pub fn get(self: &Arc<Self>, name: &str) -> Result<StoreHandle, StarkError> {
+        let mut g = self.inner.lock().unwrap();
+        let id = *g
+            .by_name
+            .get(name)
+            .ok_or_else(|| StarkError::UnknownName { name: name.to_string() })?;
+        g.tick += 1;
+        let now = g.tick;
+        let resident = g.entries.get(&id).unwrap().payload.is_some();
+        if resident {
+            g.hits += 1;
+        } else {
+            g.misses += 1;
+            let reloaded = {
+                let e = g.entries.get(&id).unwrap();
+                let path = e.path.clone().expect("spilled entry keeps its file");
+                let (hdr_name, m, file_hash) = read_entry_file(&path)?;
+                if hdr_name != e.name
+                    || file_hash != e.hash
+                    || m.rows() != e.rows
+                    || m.cols() != e.cols
+                {
+                    return Err(StarkError::Backend(format!(
+                        "store: spill file {} does not match entry '{}' \
+                         (name/shape/checksum drift)",
+                        path.display(),
+                        e.name
+                    )));
+                }
+                Arc::new(m)
+            };
+            g.entries.get_mut(&id).unwrap().payload = Some(reloaded);
+        }
+        let e = g.entries.get_mut(&id).unwrap();
+        e.last_used = now;
+        e.pins += 1;
+        let data = e.payload.clone().unwrap();
+        // A reload recharged the budget; this entry is pinned now,
+        // others may give way.
+        self.enforce_budget(&mut g);
+        drop(g);
+        Ok(StoreHandle { name: name.to_string(), id, data, pin: PinGuard { store: self.clone(), id } })
+    }
+
+    /// Unbind `name`. With no pins the entry is removed outright
+    /// ([`DropOutcome::Dropped`]); with in-flight pins the name is
+    /// unbound now but the entry survives until the last release
+    /// ([`DropOutcome::Pinned`]). Either way the spill file goes now —
+    /// pinned entries are always payload-resident, so nothing is lost —
+    /// which lets the name be re-`put` immediately without the old file
+    /// shadowing the new one.
+    pub fn drop_name(&self, name: &str) -> Result<DropOutcome, StarkError> {
+        let mut g = self.inner.lock().unwrap();
+        if !g.by_name.contains_key(name) {
+            return Err(StarkError::UnknownName { name: name.to_string() });
+        }
+        Ok(self.unbind(&mut g, name))
+    }
+
+    fn unbind(&self, g: &mut StoreInner, name: &str) -> DropOutcome {
+        let id = g.by_name.remove(name).expect("caller checked the name");
+        let e = g.entries.get_mut(&id).unwrap();
+        if let Some(p) = e.path.take() {
+            let _ = fs::remove_file(p);
+        }
+        if e.pins == 0 {
+            g.entries.remove(&id);
+            DropOutcome::Dropped
+        } else {
+            e.doomed = true;
+            DropOutcome::Pinned
+        }
+    }
+
+    fn release(&self, id: u64) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.entries.get_mut(&id) {
+            e.pins = e.pins.saturating_sub(1);
+            if e.pins == 0 && e.doomed {
+                g.entries.remove(&id);
+            }
+        }
+        // Pins blocked eviction; with one fewer, re-settle under budget.
+        self.enforce_budget(&mut g);
+    }
+
+    /// Cached `b × b` split of entry `id`'s payload zero-padded to
+    /// `s × s` — the store-side twin of the per-handle cache in
+    /// [`crate::api`], shared by every job referencing the name. A
+    /// cache hit is a *hit*; computing (or recomputing after eviction)
+    /// is a *miss* that increments the entry's `splits_computed`.
+    pub fn splits_for(&self, id: u64, s: usize, b: usize) -> Result<BlockSplits, StarkError> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let now = g.tick;
+        let cached = g.entries.get(&id).and_then(|e| e.splits.get(&(s, b)).cloned());
+        if let Some(hit) = cached {
+            g.hits += 1;
+            g.entries.get_mut(&id).unwrap().last_used = now;
+            return Ok(hit);
+        }
+        g.misses += 1;
+        let payload = {
+            let e = g.entries.get(&id).ok_or_else(|| StarkError::UnknownName {
+                name: format!("store entry #{id}"),
+            })?;
+            match &e.payload {
+                Some(p) => p.clone(),
+                None => {
+                    let path = e.path.clone().expect("spilled entry keeps its file");
+                    let (_, m, file_hash) = read_entry_file(&path)?;
+                    if file_hash != e.hash {
+                        return Err(StarkError::Backend(format!(
+                            "store: checksum drift reloading '{}' from {}",
+                            e.name,
+                            path.display()
+                        )));
+                    }
+                    Arc::new(m)
+                }
+            }
+        };
+        let split = if payload.rows() == s && payload.cols() == s {
+            BlockSplits::of(&payload, b)?
+        } else {
+            BlockSplits::of(&crate::algos::general::pad_square(&payload, s), b)?
+        };
+        let e = g.entries.get_mut(&id).unwrap();
+        e.payload = Some(payload);
+        e.splits.insert((s, b), split.clone());
+        e.splits_bytes += (s * s * std::mem::size_of::<f64>()) as u64;
+        e.splits_computed += 1;
+        e.last_used = now;
+        self.enforce_budget(&mut g);
+        Ok(split)
+    }
+
+    /// How many splits entry `id` has computed (cache misses), the
+    /// observable behind the distribute-only-once contract.
+    pub fn splits_computed(&self, id: u64) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.entries.get(&id).map(|e| e.splits_computed).unwrap_or(0)
+    }
+
+    /// Counter snapshot (serve attaches this to every store response).
+    pub fn metrics(&self) -> StoreMetrics {
+        let g = self.inner.lock().unwrap();
+        StoreMetrics {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            spills: g.spills,
+            splits_computed: g.entries.values().map(|e| e.splits_computed).sum(),
+            resident_bytes: g.resident_bytes(),
+            entries: g.by_name.len() as u64,
+        }
+    }
+
+    /// Named entries, name-ordered (serve's `ls`). Doomed entries are
+    /// name-less and not listed.
+    pub fn list(&self) -> Vec<EntryInfo> {
+        let g = self.inner.lock().unwrap();
+        g.by_name
+            .iter()
+            .map(|(name, id)| {
+                let e = g.entries.get(id).unwrap();
+                EntryInfo {
+                    name: name.clone(),
+                    rows: e.rows,
+                    cols: e.cols,
+                    payload_bytes: e.payload_bytes,
+                    splits_bytes: e.splits_bytes,
+                    resident: e.payload.is_some(),
+                    pins: e.pins,
+                    hash: e.hash,
+                    splits_computed: e.splits_computed,
+                }
+            })
+            .collect()
+    }
+
+    /// True if `name` is currently bound (the analyzer's A010 probe).
+    pub fn contains(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().by_name.contains_key(name)
+    }
+
+    fn entry_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{:016x}.{FILE_EXT}", fnv1a64(name.as_bytes())))
+    }
+
+    /// Walk unpinned entries in LRU order, discarding splits then
+    /// payloads, until `resident_bytes <= budget` or nothing more can
+    /// give (everything left is pinned/doomed — transient overshoot).
+    fn enforce_budget(&self, g: &mut StoreInner) {
+        let Some(budget) = self.budget else { return };
+        while g.resident_bytes() > budget {
+            let victim = g
+                .entries
+                .iter()
+                .filter(|(_, e)| {
+                    e.pins == 0 && !e.doomed && (e.splits_bytes > 0 || e.payload.is_some())
+                })
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(id, _)| *id);
+            let Some(id) = victim else { return };
+            let e = g.entries.get_mut(&id).unwrap();
+            let (evicted, spilled) = if !e.splits.is_empty() {
+                let n = e.splits.len() as u64;
+                e.splits.clear();
+                e.splits_bytes = 0;
+                (n, 0)
+            } else {
+                // Write-through at put: the file is already on disk.
+                debug_assert!(e.path.is_some());
+                e.payload = None;
+                (0, 1)
+            };
+            g.evictions += evicted;
+            g.spills += spilled;
+        }
+    }
+}
+
+/// Serialize one entry to its spill file (module docs, format v1).
+fn write_entry_file(
+    path: &Path,
+    name: &str,
+    m: &DenseMatrix,
+    hash: u64,
+) -> Result<(), StarkError> {
+    let mut buf =
+        Vec::with_capacity(8 + 4 + 4 + name.len() + 8 + 8 + 8 + m.as_slice().len() * 8);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    buf.extend_from_slice(name.as_bytes());
+    buf.extend_from_slice(&(m.rows() as u64).to_le_bytes());
+    buf.extend_from_slice(&(m.cols() as u64).to_le_bytes());
+    buf.extend_from_slice(&hash.to_le_bytes());
+    for v in m.as_slice() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fs::write(path, &buf)
+        .map_err(|e| StarkError::Backend(format!("store: write {}: {e}", path.display())))
+}
+
+struct Header {
+    name: String,
+    rows: usize,
+    cols: usize,
+    hash: u64,
+    /// Byte offset where the payload starts.
+    payload_at: usize,
+}
+
+fn parse_header(bytes: &[u8], path: &Path) -> Result<Header, StarkError> {
+    let bad = |what: &str| {
+        StarkError::Backend(format!("store: {} in spill file {}", what, path.display()))
+    };
+    if bytes.len() < 8 + 4 + 4 || &bytes[..8] != MAGIC {
+        return Err(bad("bad magic"));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != FORMAT_VERSION {
+        return Err(bad(&format!("unsupported version {version}")));
+    }
+    let name_len = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    let fixed_end = 16 + name_len + 8 + 8 + 8;
+    if bytes.len() < fixed_end {
+        return Err(bad("truncated header"));
+    }
+    let name = std::str::from_utf8(&bytes[16..16 + name_len])
+        .map_err(|_| bad("non-UTF-8 name"))?
+        .to_string();
+    let at = 16 + name_len;
+    let rows = u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap()) as usize;
+    let cols = u64::from_le_bytes(bytes[at + 8..at + 16].try_into().unwrap()) as usize;
+    let hash = u64::from_le_bytes(bytes[at + 16..at + 24].try_into().unwrap());
+    Ok(Header { name, rows, cols, hash, payload_at: fixed_end })
+}
+
+/// Read header fields only (the restart scan; payload stays on disk).
+fn read_header(path: &Path) -> Result<Header, StarkError> {
+    // Spill files are small enough that reading whole-file for the
+    // header too would work, but the scan should stay O(entries), not
+    // O(bytes): read just a bounded prefix.
+    use std::io::Read as _;
+    let mut f = fs::File::open(path)
+        .map_err(|e| StarkError::Backend(format!("store: open {}: {e}", path.display())))?;
+    let mut buf = vec![0u8; 4096];
+    let mut read = 0;
+    while read < buf.len() {
+        match f.read(&mut buf[read..]) {
+            Ok(0) => break,
+            Ok(n) => read += n,
+            Err(e) => {
+                return Err(StarkError::Backend(format!(
+                    "store: read {}: {e}",
+                    path.display()
+                )))
+            }
+        }
+    }
+    buf.truncate(read);
+    parse_header(&buf, path)
+}
+
+/// Read and verify one spill file: returns the stored name, the
+/// payload (bit-identical to what was written), and the checksum —
+/// which has already been verified against the payload bytes.
+fn read_entry_file(path: &Path) -> Result<(String, DenseMatrix, u64), StarkError> {
+    let bytes = fs::read(path)
+        .map_err(|e| StarkError::Backend(format!("store: read {}: {e}", path.display())))?;
+    let hdr = parse_header(&bytes, path)?;
+    let want = hdr
+        .rows
+        .checked_mul(hdr.cols)
+        .and_then(|n| n.checked_mul(8))
+        .ok_or_else(|| {
+            StarkError::Backend(format!("store: absurd shape in {}", path.display()))
+        })?;
+    let payload = &bytes[hdr.payload_at..];
+    if payload.len() != want {
+        return Err(StarkError::Backend(format!(
+            "store: payload is {} bytes, header says {} in {}",
+            payload.len(),
+            want,
+            path.display()
+        )));
+    }
+    if fnv1a64(payload) != hdr.hash {
+        return Err(StarkError::Backend(format!(
+            "store: checksum mismatch in {} (file corrupt)",
+            path.display()
+        )));
+    }
+    let mut data = Vec::with_capacity(hdr.rows * hdr.cols);
+    for chunk in payload.chunks_exact(8) {
+        data.push(f64::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok((hdr.name, DenseMatrix::from_vec(hdr.rows, hdr.cols, data), hdr.hash))
+}
+
+/// Register every readable spill file in `dir` as a spilled entry
+/// (restart recovery). Unreadable or foreign files are skipped — the
+/// store must come up even if a crash left debris behind.
+fn scan_dir(dir: &Path, g: &mut StoreInner) {
+    let Ok(rd) = fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = rd
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == FILE_EXT).unwrap_or(false))
+        .collect();
+    paths.sort();
+    for path in paths {
+        let Ok(hdr) = read_header(&path) else { continue };
+        if hdr.name.is_empty() || g.by_name.contains_key(&hdr.name) {
+            continue;
+        }
+        let id = g.next_id;
+        g.next_id += 1;
+        g.by_name.insert(hdr.name.clone(), id);
+        g.entries.insert(
+            id,
+            EntryRec {
+                name: hdr.name,
+                rows: hdr.rows,
+                cols: hdr.cols,
+                hash: hdr.hash,
+                payload_bytes: (hdr.rows * hdr.cols * 8) as u64,
+                payload: None,
+                splits: HashMap::new(),
+                splits_bytes: 0,
+                path: Some(path),
+                pins: 0,
+                splits_computed: 0,
+                doomed: false,
+                last_used: 0,
+            },
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(n: usize, seed: u64) -> Arc<DenseMatrix> {
+        Arc::new(DenseMatrix::random(n, n, seed))
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_dedupe() {
+        let store = MatrixStore::open(None, None).unwrap();
+        let a = mat(8, 1);
+        let out = store.put("A", a.clone()).unwrap();
+        assert_eq!((out.rows, out.cols, out.bytes), (8, 8, 512));
+        assert!(!out.deduped && !out.replaced);
+        // Verbatim re-put is a dedupe no-op.
+        let again = store.put("A", mat(8, 1)).unwrap();
+        assert!(again.deduped && !again.replaced);
+        // Same content under another name shares the allocation.
+        let alias = store.put("A2", mat(8, 1)).unwrap();
+        assert!(alias.deduped);
+        let h = store.get("A").unwrap();
+        let h2 = store.get("A2").unwrap();
+        assert!(Arc::ptr_eq(&h.data(), &h2.data()), "dedupe shares the payload Arc");
+        assert_eq!(h.data().as_slice(), a.as_slice());
+        // New content under the old name replaces it.
+        let rep = store.put("A", mat(8, 2)).unwrap();
+        assert!(rep.replaced && !rep.deduped);
+        assert_ne!(store.get("A").unwrap().data().as_slice(), a.as_slice());
+        assert_eq!(store.metrics().entries, 2);
+    }
+
+    #[test]
+    fn unknown_name_is_typed() {
+        let store = MatrixStore::open(None, None).unwrap();
+        match store.get("nope") {
+            Err(StarkError::UnknownName { name }) => assert_eq!(name, "nope"),
+            other => panic!("expected UnknownName, got {other:?}"),
+        }
+        assert!(matches!(
+            store.drop_name("nope"),
+            Err(StarkError::UnknownName { .. })
+        ));
+    }
+
+    #[test]
+    fn splits_cached_once_and_counted() {
+        let store = MatrixStore::open(None, None).unwrap();
+        store.put("A", mat(8, 3)).unwrap();
+        let h = store.get("A").unwrap();
+        let s1 = store.splits_for(h.id(), 8, 2).unwrap();
+        let s2 = store.splits_for(h.id(), 8, 2).unwrap();
+        assert_eq!(store.splits_computed(h.id()), 1);
+        assert!(Arc::ptr_eq(s1.block_at(0, 0), s2.block_at(0, 0)));
+        // A different split point is a genuine new distribution.
+        store.splits_for(h.id(), 8, 4).unwrap();
+        assert_eq!(store.splits_computed(h.id()), 2);
+        let m = store.metrics();
+        assert_eq!((m.hits, m.misses), (2, 2), "get hit + split hit; two split misses");
+    }
+
+    #[test]
+    fn drop_while_pinned_defers_removal() {
+        let store = MatrixStore::open(None, None).unwrap();
+        store.put("A", mat(8, 4)).unwrap();
+        let h = store.get("A").unwrap();
+        let before = store.splits_for(h.id(), 8, 2).unwrap();
+        assert_eq!(store.drop_name("A").unwrap(), DropOutcome::Pinned);
+        // Name is gone immediately...
+        assert!(matches!(store.get("A"), Err(StarkError::UnknownName { .. })));
+        assert_eq!(store.metrics().entries, 0);
+        // ...but the pinned entry still serves splits, bit-identically.
+        let after = store.splits_for(h.id(), 8, 2).unwrap();
+        assert!(Arc::ptr_eq(before.block_at(0, 0), after.block_at(0, 0)));
+        let id = h.id();
+        assert_eq!(store.splits_computed(id), 1);
+        drop(h);
+        assert_eq!(store.splits_computed(id), 0, "entry removed at last release");
+        // The name can be re-bound while the doomed entry still lived.
+        store.put("A", mat(8, 5)).unwrap();
+        assert_eq!(store.metrics().entries, 1);
+    }
+
+    #[test]
+    fn unpinned_drop_removes_everything() {
+        let dir = TempDir::new("stark-store-test").unwrap();
+        let store = MatrixStore::open(Some(dir.path()), None).unwrap();
+        store.put("A", mat(8, 6)).unwrap();
+        let files = || {
+            fs::read_dir(dir.path())
+                .unwrap()
+                .flatten()
+                .filter(|e| e.path().extension().map(|x| x == FILE_EXT).unwrap_or(false))
+                .count()
+        };
+        assert_eq!(files(), 1, "put writes through");
+        assert_eq!(store.drop_name("A").unwrap(), DropOutcome::Dropped);
+        assert_eq!(files(), 0, "drop removes the spill file");
+        assert_eq!(store.metrics().entries, 0);
+    }
+
+    #[test]
+    fn budget_spills_and_reloads_bit_identically() {
+        let dir = TempDir::new("stark-store-test").unwrap();
+        // Budget fits one 8x8 payload (512 B) but not two.
+        let store = MatrixStore::open(Some(dir.path()), Some(600)).unwrap();
+        let a = mat(8, 7);
+        store.put("A", a.clone()).unwrap();
+        store.put("B", mat(8, 8)).unwrap();
+        let m = store.metrics();
+        assert!(m.resident_bytes <= 600, "budget exceeded: {}", m.resident_bytes);
+        assert_eq!(m.spills, 1, "A (LRU) spilled to make room for B");
+        // Reload is a miss and bit-identical.
+        let h = store.get("A").unwrap();
+        assert_eq!(h.data().as_slice(), a.as_slice());
+        assert!(store.metrics().misses >= 1);
+        drop(h);
+        let m = store.metrics();
+        assert!(m.resident_bytes <= 600, "unpinned state exceeds budget");
+    }
+
+    #[test]
+    fn splits_are_evicted_before_payloads() {
+        let store = MatrixStore::open(None, Some(600)).unwrap();
+        store.put("A", mat(8, 9)).unwrap();
+        let h = store.get("A").unwrap();
+        // 512 payload + 512 split > 600, but the entry is pinned:
+        // overshoot is tolerated until the pin releases.
+        store.splits_for(h.id(), 8, 2).unwrap();
+        let m = store.metrics();
+        assert_eq!((m.evictions, m.spills), (0, 0), "pinned entries are never evicted");
+        assert!(m.resident_bytes > 600);
+        drop(h);
+        let m = store.metrics();
+        assert!(m.resident_bytes <= 600, "resident {} over budget", m.resident_bytes);
+        assert!(m.evictions >= 1, "split should be evicted first");
+    }
+
+    #[test]
+    fn corrupt_spill_file_is_rejected_by_checksum() {
+        let dir = TempDir::new("stark-store-test").unwrap();
+        let store = MatrixStore::open(Some(dir.path()), Some(0)).unwrap();
+        store.put("A", mat(8, 10)).unwrap(); // budget 0: spilled at once
+        let path = store.entry_path("A");
+        let mut bytes = fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        fs::write(&path, &bytes).unwrap();
+        match store.get("A") {
+            Err(StarkError::Backend(msg)) => assert!(msg.contains("checksum"), "{msg}"),
+            other => panic!("expected checksum error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn restart_recovers_entries_lazily_and_bit_identically() {
+        let dir = TempDir::new("stark-store-test").unwrap();
+        let a = mat(8, 11);
+        {
+            let store = MatrixStore::open(Some(dir.path()), None).unwrap();
+            store.put("A", a.clone()).unwrap();
+            store.put("B", mat(6, 12)).unwrap();
+        }
+        let store = MatrixStore::open(Some(dir.path()), None).unwrap();
+        let names: Vec<String> = store.list().into_iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["A".to_string(), "B".to_string()]);
+        assert!(store.list().iter().all(|e| !e.resident), "recovery is lazy");
+        let h = store.get("A").unwrap();
+        assert_eq!(h.data().as_slice(), a.as_slice(), "reload is bit-identical");
+        let m = store.metrics();
+        assert_eq!((m.hits, m.misses), (0, 1));
+    }
+
+    #[test]
+    fn metrics_value_has_all_counters() {
+        let m = StoreMetrics { hits: 1, misses: 2, resident_bytes: 3, ..Default::default() };
+        let v = m.to_value();
+        for k in
+            ["hits", "misses", "evictions", "spills", "splits_computed", "resident_bytes", "entries"]
+        {
+            assert!(v.get(k).is_some(), "missing {k}");
+        }
+        assert_eq!(v.get("misses").and_then(Value::as_u64), Some(2));
+    }
+}

@@ -1,0 +1,232 @@
+//! Integration: the named-matrix store (DESIGN.md S22) through the
+//! public session API — split-once semantics across concurrent jobs,
+//! byte-budget eviction as a property over random op sequences,
+//! spill/reload bit-identity, restart recovery, drop-while-running
+//! pinning, and a chaos soak over store-backed operands.
+
+use std::sync::Arc;
+
+use stark::algos::Algorithm;
+use stark::api::{DistMatrix, StarkSession};
+use stark::cost::Splits;
+use stark::engine::{ChaosConfig, ClusterConfig};
+use stark::matrix::DenseMatrix;
+use stark::store::{payload_hash, DropOutcome, MatrixStore};
+use stark::util::prop::assert_prop;
+use stark::util::prop::Draw;
+use stark::util::tmp::TempDir;
+
+fn session_with(budget: Option<u64>, dir: Option<&str>) -> StarkSession {
+    let mut cc = ClusterConfig::new(2, 2);
+    cc.store_byte_budget = budget;
+    cc.store_dir = dir.map(str::to_string);
+    StarkSession::builder().cluster(cc).build().unwrap()
+}
+
+fn multiply(a: &DistMatrix, b: &DistMatrix) -> DenseMatrix {
+    a.multiply(b).algorithm(Algorithm::Stark).splits(Splits::Fixed(2)).collect().unwrap().c
+}
+
+/// One `put` + N concurrent multiplies: the stored operand's block
+/// split is computed exactly once (splits_computed == 1), and every
+/// product is bit-identical to the re-upload (plain handle) path.
+#[test]
+fn one_put_many_concurrent_multiplies_split_once() {
+    let s = session_with(None, None);
+    let n = 32;
+    let am = DenseMatrix::random(n, n, 1);
+    let bm = DenseMatrix::random(n, n, 2);
+    s.put("A", Arc::new(am.clone())).unwrap();
+    let hb = s.matrix(&bm);
+    let products: Vec<DenseMatrix> = std::thread::scope(|scope| {
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let s = s.clone();
+                let hb = hb.clone();
+                scope.spawn(move || multiply(&s.get("A").unwrap(), &hb))
+            })
+            .collect();
+        threads.into_iter().map(|t| t.join().unwrap()).collect()
+    });
+    assert_eq!(
+        s.store_metrics().splits_computed,
+        1,
+        "N concurrent jobs over one put must split the operand exactly once"
+    );
+    // Re-upload path: fresh handles over the same payloads, same bits.
+    let want = multiply(&s.matrix(&am), &s.matrix(&bm));
+    for p in &products {
+        assert_eq!(p.as_slice(), want.as_slice(), "store-backed product diverged");
+    }
+}
+
+/// Property: whatever sequence of put/drop/get+split ops runs, the
+/// store's resident bytes never exceed the budget once no pins are
+/// outstanding (pinned entries may transiently overshoot — they cannot
+/// be evicted without invalidating live jobs).
+#[test]
+fn prop_eviction_never_exceeds_budget_when_unpinned() {
+    assert_prop("store byte budget", 0x5702_E000, 12, |rng| {
+        let budget = (rng.range(1, 9) * 512) as u64;
+        let store = MatrixStore::open(None, Some(budget)).map_err(|e| e.to_string())?;
+        let names = ["a", "b", "c", "d"];
+        for step in 0..30 {
+            let name = *rng.choice(&names);
+            match rng.range(0, 3) {
+                0 => {
+                    let n = rng.range(1, 9);
+                    store
+                        .put(name, Arc::new(DenseMatrix::random(n, n, rng.next_u64())))
+                        .map_err(|e| e.to_string())?;
+                }
+                1 => {
+                    let _ = store.drop_name(name);
+                }
+                _ => {
+                    if let Ok(h) = store.get(name) {
+                        store.splits_for(h.id(), 8, 2).map_err(|e| e.to_string())?;
+                        drop(h); // release the pin before the invariant check
+                    }
+                }
+            }
+            let m = store.metrics();
+            if m.resident_bytes > budget {
+                return Err(format!(
+                    "step {step}: resident {} > budget {budget} with zero pins",
+                    m.resident_bytes
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Budget 0 forces an immediate spill after put; `get` reloads the
+/// payload from disk bit-identically, verified by the on-disk checksum.
+#[test]
+fn spill_and_reload_is_bit_identical_and_checksummed() {
+    let tmp = TempDir::new("stark-store-itest").unwrap();
+    let dir = tmp.path().to_str().unwrap().to_string();
+    let s = session_with(Some(0), Some(&dir));
+    let a = DenseMatrix::random(16, 16, 7);
+    s.put("w", Arc::new(a.clone())).unwrap();
+    let m = s.store_metrics();
+    assert_eq!(m.resident_bytes, 0, "budget 0 must spill the payload immediately: {m:?}");
+    assert!(m.spills >= 1, "{m:?}");
+    let listing = s.store().list();
+    let info = &listing[0];
+    assert!(!info.resident);
+    assert_eq!(info.hash, payload_hash(&a), "on-disk checksum must cover the exact payload");
+    let h = s.get("w").unwrap();
+    assert_eq!(h.dense().as_slice(), a.as_slice(), "reload must be bit-identical");
+    assert!(s.store_metrics().misses >= 1, "the reload is a recorded miss");
+}
+
+/// A store directory outlives its session: a new session over the same
+/// directory sees the entries and reloads them bit-identically.
+#[test]
+fn restart_recovers_entries_across_sessions() {
+    let tmp = TempDir::new("stark-store-itest").unwrap();
+    let dir = tmp.path().to_str().unwrap().to_string();
+    let a = DenseMatrix::random(24, 24, 99);
+    {
+        let s = session_with(None, Some(&dir));
+        s.put("persist", Arc::new(a.clone())).unwrap();
+        s.put("doomed", Arc::new(DenseMatrix::random(8, 8, 1))).unwrap();
+        assert_eq!(s.drop_matrix("doomed").unwrap(), DropOutcome::Dropped);
+    }
+    let s = session_with(None, Some(&dir));
+    assert!(s.get("doomed").is_err(), "dropped names must not survive the restart");
+    let h = s.get("persist").unwrap();
+    assert_eq!(h.dense().as_slice(), a.as_slice(), "restart reload must be bit-identical");
+    // The reloaded entry serves jobs exactly like a fresh put.
+    let want = multiply(&s.matrix(&a), &s.matrix(&a));
+    let got = multiply(&h, &s.get("persist").unwrap());
+    assert_eq!(got.as_slice(), want.as_slice());
+}
+
+/// Satellite regression: dropping a name while jobs hold its handles
+/// must not invalidate them — `drop` reports Pinned, the in-flight
+/// multiplies finish bit-exactly, and the entry goes with the last pin.
+#[test]
+fn drop_while_jobs_in_flight_keeps_products_bit_exact() {
+    let s = session_with(None, None);
+    let n = 32;
+    let am = DenseMatrix::random(n, n, 11);
+    let bm = DenseMatrix::random(n, n, 12);
+    s.put("A", Arc::new(am.clone())).unwrap();
+    s.put("B", Arc::new(bm.clone())).unwrap();
+    let want = multiply(&s.matrix(&am), &s.matrix(&bm));
+    let pairs: Vec<(DistMatrix, DistMatrix)> =
+        (0..3).map(|_| (s.get("A").unwrap(), s.get("B").unwrap())).collect();
+    std::thread::scope(|scope| {
+        let threads: Vec<_> = pairs
+            .into_iter()
+            .map(|(ha, hb)| scope.spawn(move || multiply(&ha, &hb)))
+            .collect();
+        // Drop both names while the jobs run: the handles pin the
+        // entries, so the drops unbind the names but defer removal.
+        assert_eq!(s.drop_matrix("A").unwrap(), DropOutcome::Pinned);
+        assert_eq!(s.drop_matrix("B").unwrap(), DropOutcome::Pinned);
+        assert!(s.get("A").is_err(), "the name is unbound immediately");
+        for t in threads {
+            assert_eq!(
+                t.join().unwrap().as_slice(),
+                want.as_slice(),
+                "a drop mid-job corrupted a product"
+            );
+        }
+    });
+    // Scope joined → every handle released → the entries are gone.
+    assert_eq!(s.store_metrics().entries, 0);
+}
+
+/// Chaos soak over store-backed operands (budget 0, so spill/reload is
+/// in the loop): every recovered run must be bit-identical to the
+/// chaos-free store-backed product.
+#[test]
+fn chaos_soak_over_store_backed_operands_is_bit_identical() {
+    let n = 32;
+    let am = DenseMatrix::random(n, n, 0xAB);
+    let bm = DenseMatrix::random(n, n, 0xCD);
+    let clean = {
+        let s = session_with(None, None);
+        s.put("A", Arc::new(am.clone())).unwrap();
+        s.put("B", Arc::new(bm.clone())).unwrap();
+        multiply(&s.get("A").unwrap(), &s.get("B").unwrap())
+    };
+    assert_prop("store chaos soak", 0x5C0A_B500, 6, |rng| {
+        let rate = 0.02 + rng.next_f64() * 0.15;
+        let mode = rng.range(0, 3);
+        let mut cc = ClusterConfig::new(2, 2);
+        // Generous retry budget so the soak pins recovery, not retry
+        // exhaustion (see tests/chaos.rs for the rationale).
+        cc.max_task_attempts = 12;
+        cc.chaos = Some(ChaosConfig {
+            seed: rng.next_u64(),
+            fail_rate: if mode == 0 { rate } else { 0.0 },
+            panic_rate: if mode == 1 { rate } else { 0.0 },
+            slow_rate: if mode == 2 { rate } else { 0.0 },
+            slow_factor: 4.0,
+            executor_loss_rate: 0.0,
+            stage_contains: None,
+            fail_once_partition: None,
+        });
+        cc.store_byte_budget = Some(0);
+        let s = StarkSession::builder().cluster(cc).build().map_err(|e| e.to_string())?;
+        s.put("A", Arc::new(am.clone())).map_err(|e| e.to_string())?;
+        s.put("B", Arc::new(bm.clone())).map_err(|e| e.to_string())?;
+        let ha = s.get("A").map_err(|e| e.to_string())?;
+        let hb = s.get("B").map_err(|e| e.to_string())?;
+        let out = ha
+            .multiply(&hb)
+            .algorithm(Algorithm::Stark)
+            .splits(Splits::Fixed(2))
+            .collect()
+            .map_err(|e| format!("mode {mode} rate {rate:.3}: {e}"))?;
+        if out.c.as_slice() != clean.as_slice() {
+            return Err(format!("mode {mode} rate {rate:.3}: product diverged under chaos"));
+        }
+        Ok(())
+    });
+}
