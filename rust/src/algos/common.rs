@@ -436,8 +436,23 @@ pub trait MultiplyAlgorithm: Send + Sync {
 /// Run the result stage (`"result/collect"`, the job's **only** gather)
 /// and assemble the product blocks into the dense matrix.
 pub fn collect_product(product: &Dist<Block>, b: usize, block_size: usize) -> DenseMatrix {
+    collect_product_labeled(product, b, block_size, "result/collect")
+}
+
+/// [`collect_product`] under an explicit stage label. The distributed
+/// inversion recursion ([`crate::algos::inverse`]) gathers intermediate
+/// operands at driver-side recursion boundaries; labeling those gathers
+/// `"inv…/gather"` keeps the `"result/collect"` ledger count at exactly
+/// one per expression job — the invariant the analyzer (STARK-A006) and
+/// the stage-ledger tests pin.
+pub fn collect_product_labeled(
+    product: &Dist<Block>,
+    b: usize,
+    block_size: usize,
+    label: &str,
+) -> DenseMatrix {
     let pairs: Vec<((u32, u32), DenseMatrix)> = product
-        .collect("result/collect")
+        .collect(label)
         .into_iter()
         .map(|blk| {
             debug_assert_eq!(blk.tag, Tag::new(Side::M, 0), "unexpected product tag");

@@ -25,6 +25,23 @@ pub fn pad_square(m: &DenseMatrix, s: usize) -> DenseMatrix {
     out
 }
 
+/// Pad a *square* `m` into the top-left of an `s × s` square whose
+/// padded diagonal is the identity: `diag(M, I)`. Zero padding is right
+/// for multiplication (zero blocks multiply exactly) but wrong for
+/// inversion — `diag(M, 0)` is singular no matter how invertible `M`
+/// is, while `diag(M, I)⁻¹ = diag(M⁻¹, I)` crops back to exactly `M⁻¹`
+/// ([`crate::algos::inverse`], DESIGN.md S23).
+pub fn pad_identity(m: &DenseMatrix, s: usize) -> DenseMatrix {
+    assert_eq!(m.rows(), m.cols(), "identity padding is for square matrices");
+    assert!(s >= m.rows());
+    let mut out = DenseMatrix::zeros(s, s);
+    out.set_submatrix(0, 0, m);
+    for i in m.rows()..s {
+        out.set(i, i, 1.0);
+    }
+    out
+}
+
 /// Padded size for an `(m×k) @ (k×n)` product: next power of two of the
 /// largest dimension (and at least `b`, so the split divides evenly).
 pub fn padded_size(m: usize, k: usize, n: usize, b: usize) -> usize {
@@ -140,6 +157,23 @@ mod tests {
         assert_eq!(p.get(2, 1), m.get(2, 1));
         assert_eq!(p.get(7, 7), 0.0);
         assert_eq!(p.get(3, 0), 0.0);
+    }
+
+    #[test]
+    fn pad_identity_keeps_the_pad_invertible() {
+        let m = DenseMatrix::random(3, 3, 11);
+        let p = pad_identity(&m, 8);
+        assert_eq!(p.submatrix(0, 0, 3, 3).as_slice(), m.as_slice());
+        for i in 3..8 {
+            assert_eq!(p.get(i, i), 1.0);
+        }
+        assert_eq!(p.get(3, 0), 0.0);
+        assert_eq!(p.get(0, 7), 0.0);
+        // diag(M, I) inverts to diag(M⁻¹, I): cropping recovers M⁻¹.
+        let inv = crate::matrix::lu::invert(&p).unwrap();
+        let want = crate::matrix::lu::invert(&m).unwrap();
+        assert!(inv.submatrix(0, 0, 3, 3).allclose(&want, 1e-12));
+        assert!(inv.submatrix(3, 3, 5, 5).allclose(&DenseMatrix::identity(5), 1e-12));
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! SPIN-style block-recursive distributed inversion (DESIGN.md S23).
+//!
+//! Stark's authors followed the paper with SPIN, which observes that
+//! matrix inversion reduces to distributed *multiplication* — the one
+//! primitive this codebase is built around. Partition the (power-of-two,
+//! identity-padded) operand into 2×2 block quadrants
+//!
+//! ```text
+//! A = | A11 A12 |      A⁻¹ = | A11⁻¹ + m2·S⁻¹·m1    −m2·S⁻¹ |
+//!     | A21 A22 |            |      −S⁻¹·m1            S⁻¹   |
+//! ```
+//!
+//! with `m1 = A21·A11⁻¹`, `m2 = A11⁻¹·A12` and the Schur complement
+//! `S = A22 − m1·A12`: two recursive inversions (A11, S) and exactly six
+//! distributed multiplies per level, all dispatched through
+//! [`MultiplyAlgorithm::multiply_dist`](crate::algos::MultiplyAlgorithm::multiply_dist)
+//! under the planner's per-quadrant `(algorithm, b)` choice. Below the
+//! planner-chosen crossover ([`InvPlan::leaf`]) the recursion bottoms
+//! out in the serial dense LU leaf ([`crate::matrix::lu`]).
+//!
+//! Contracts:
+//!
+//! - **Padding**: callers pad with [`crate::algos::general::pad_identity`],
+//!   *not* zeros — `diag(A, 0)` is singular however invertible `A` is,
+//!   while `diag(A, I)⁻¹ = diag(A⁻¹, I)` crops back to exactly `A⁻¹`.
+//! - **Singularity**: a (near-)singular quadrant surfaces as typed
+//!   [`StarkError::SingularMatrix`] from the LU leaf (`pivot`/`at`
+//!   describe the failing elimination step within that tile) — never a
+//!   panic, never NaN-poisoned output.
+//! - **Stage labels**: every stage is scoped under the caller's prefix
+//!   (`"inv1/q11/h8/m3/…"`), and all recursion-internal gathers use
+//!   [`collect_product_labeled`] — the job's `"result/collect"` ledger
+//!   count stays exactly one, the invariant STARK-A006 and the
+//!   stage-ledger tests pin.
+
+use std::sync::Arc;
+
+use crate::algos::common::{
+    collect_product_labeled, implementation, Algorithm, BlockSplits, TimingBackend,
+};
+use crate::algos::stark::StarkConfig;
+use crate::cost::{InvPlan, Planner, Splits};
+use crate::engine::{JobCtx, Side};
+use crate::error::StarkError;
+use crate::matrix::{lu, DenseMatrix};
+
+/// Everything one distributed inversion borrows from its surrounding
+/// job: the expression executor ([`crate::api::DistExpr`]) hands in its
+/// own open job, shared leaf instrumentation, Stark knobs, and planner,
+/// so the recursion's stages land in the same ledger as the rest of the
+/// expression.
+pub struct InverseCtx<'a> {
+    /// The open job every recursion stage records into (and whose
+    /// deadline/chaos configuration the stages inherit).
+    pub job: &'a JobCtx,
+    /// Leaf-time instrumentation shared with the enclosing job.
+    pub timing: &'a Arc<TimingBackend>,
+    /// Stark algorithm knobs, forwarded to [`implementation`].
+    pub cfg: &'a StarkConfig,
+    /// Resolves each quadrant multiply to its `(algorithm, b)` point.
+    pub planner: &'a Planner,
+}
+
+/// Invert an identity-padded `plan.n × plan.n` matrix by block
+/// recursion down to `plan.leaf`, then dense LU. `prefix` scopes every
+/// stage label this inversion emits (pass `"inv1/"`, `"inv2/"`, … so
+/// chained inversions stay distinguishable in the stage ledger).
+pub fn invert_dist(
+    ctx: &InverseCtx<'_>,
+    a: &DenseMatrix,
+    plan: &InvPlan,
+    prefix: &str,
+) -> Result<DenseMatrix, StarkError> {
+    assert_eq!(
+        (a.rows(), a.cols()),
+        (plan.n, plan.n),
+        "invert_dist operand must be identity-padded to the plan dimension"
+    );
+    invert_rec(ctx, a, plan.leaf, prefix)
+}
+
+fn invert_rec(
+    ctx: &InverseCtx<'_>,
+    a: &DenseMatrix,
+    leaf: usize,
+    prefix: &str,
+) -> Result<DenseMatrix, StarkError> {
+    let d = a.rows();
+    if d <= leaf {
+        return lu::invert(a);
+    }
+    // d and leaf are both powers of two with d > leaf, so h ≥ leaf and
+    // the quadrants keep halving cleanly (the analyzer's STARK-A011
+    // rejects plans where they wouldn't).
+    let h = d / 2;
+    let a11 = a.submatrix(0, 0, h, h);
+    let a12 = a.submatrix(0, h, h, h);
+    let a21 = a.submatrix(h, 0, h, h);
+    let a22 = a.submatrix(h, h, h, h);
+    let a11i = invert_rec(ctx, &a11, leaf, &format!("{prefix}q11/"))?;
+    // m1 = A21·A11⁻¹ and m2 = A11⁻¹·A12, each reused twice below — the
+    // level's six multiplies are m1..m6, none repeated.
+    let m1 = mul(ctx, &a21, &a11i, &format!("{prefix}h{h}/m1"))?;
+    let m2 = mul(ctx, &a11i, &a12, &format!("{prefix}h{h}/m2"))?;
+    // Schur complement S = A22 − (A21·A11⁻¹)·A12.
+    let m3 = mul(ctx, &m1, &a12, &format!("{prefix}h{h}/m3"))?;
+    let s = a22.sub(&m3);
+    let si = invert_rec(ctx, &s, leaf, &format!("{prefix}qs/"))?;
+    let m4 = mul(ctx, &si, &m1, &format!("{prefix}h{h}/m4"))?; // S⁻¹·A21·A11⁻¹
+    let m5 = mul(ctx, &m2, &si, &format!("{prefix}h{h}/m5"))?; // A11⁻¹·A12·S⁻¹
+    let m6 = mul(ctx, &m2, &m4, &format!("{prefix}h{h}/m6"))?; // m2·S⁻¹·m1
+    let mut out = DenseMatrix::zeros(d, d);
+    out.set_submatrix(0, 0, &a11i.add(&m6));
+    out.set_submatrix(0, h, &m5.scale(-1.0));
+    out.set_submatrix(h, 0, &m4.scale(-1.0));
+    out.set_submatrix(h, h, &si);
+    Ok(out)
+}
+
+/// One planner-resolved distributed multiply of two square power-of-two
+/// quadrants inside the recursion's job, gathered under
+/// `"{label}/gather"` (never `"result/collect"` — see the module docs).
+fn mul(
+    ctx: &InverseCtx<'_>,
+    x: &DenseMatrix,
+    y: &DenseMatrix,
+    label: &str,
+) -> Result<DenseMatrix, StarkError> {
+    let d = x.rows();
+    let plan = ctx.planner.resolve(Algorithm::Auto, Splits::Auto, d)?;
+    debug_assert_eq!(plan.n, d, "power-of-two quadrants never re-pad");
+    let imp = implementation(plan.algorithm, ctx.cfg)?;
+    let sa = BlockSplits::of(x, plan.b)?;
+    let sb = BlockSplits::of(y, plan.b)?;
+    let da = imp.distribute(ctx.job, &sa, Side::A);
+    let db = imp.distribute(ctx.job, &sb, Side::B);
+    let product = imp.multiply_dist(ctx.timing, da, db, plan.n, plan.b, &format!("{label}/"))?;
+    Ok(collect_product_labeled(&product, plan.b, plan.n / plan.b, &format!("{label}/gather")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::general::pad_identity;
+    use crate::engine::{ClusterConfig, SparkContext};
+    use crate::matrix::multiply::matmul_naive;
+    use crate::runtime::NativeBackend;
+
+    fn diag_dominant(n: usize, seed: u64) -> DenseMatrix {
+        let r = DenseMatrix::random(n, n, seed);
+        DenseMatrix::from_fn(n, n, |i, j| {
+            if i == j { r.get(i, j) + n as f64 } else { r.get(i, j) }
+        })
+    }
+
+    /// Run `body` against a fresh 2×2 cluster job.
+    fn with_ctx<T>(body: impl FnOnce(&InverseCtx<'_>) -> T) -> T {
+        let ctx = SparkContext::new(ClusterConfig::new(2, 2));
+        let timing = TimingBackend::new(Arc::new(NativeBackend::default()));
+        let cfg = StarkConfig::default();
+        let planner = Planner::new(4);
+        let job = ctx.run_job("inverse unit test");
+        let ictx = InverseCtx { job: &job, timing: &timing, cfg: &cfg, planner: &planner };
+        body(&ictx)
+    }
+
+    fn two_level_plan(n: usize) -> InvPlan {
+        let mut levels = vec![n];
+        while *levels.last().unwrap() > n / 4 {
+            levels.push(levels.last().unwrap() / 2);
+        }
+        InvPlan { n, leaf: n / 4, levels, predicted_ms: 0.0 }
+    }
+
+    #[test]
+    fn recursion_matches_dense_lu() {
+        let a = diag_dominant(32, 3);
+        let want = lu::invert(&a).unwrap();
+        let got = with_ctx(|ctx| invert_dist(ctx, &a, &two_level_plan(32), "inv1/").unwrap());
+        assert!(got.allclose(&want, 1e-8), "Δ={}", got.max_abs_diff(&want));
+        assert!(matmul_naive(&a, &got).allclose(&DenseMatrix::identity(32), 1e-8));
+    }
+
+    #[test]
+    fn recursion_is_bit_stable_across_jobs() {
+        let a = diag_dominant(16, 5);
+        let plan = two_level_plan(16);
+        let x1 = with_ctx(|ctx| invert_dist(ctx, &a, &plan, "inv1/").unwrap());
+        let x2 = with_ctx(|ctx| invert_dist(ctx, &a, &plan, "inv1/").unwrap());
+        assert_eq!(x1.as_slice(), x2.as_slice());
+    }
+
+    #[test]
+    fn identity_padding_crops_back_exactly() {
+        // A 12×12 operand padded to the 16-grid: the padded region must
+        // stay invertible (identity diagonal), and the logical corner of
+        // the padded inverse must be the true 12×12 inverse.
+        let a = diag_dominant(12, 9);
+        let padded = pad_identity(&a, 16);
+        let got = with_ctx(|ctx| invert_dist(ctx, &padded, &two_level_plan(16), "inv1/").unwrap());
+        let want = lu::invert(&a).unwrap();
+        assert!(got.submatrix(0, 0, 12, 12).allclose(&want, 1e-8));
+        assert!(got.submatrix(12, 12, 4, 4).allclose(&DenseMatrix::identity(4), 1e-8));
+    }
+
+    #[test]
+    fn singular_schur_complement_is_a_typed_error() {
+        // Duplicate a bottom-half row from the top half: A11 stays
+        // invertible, the full matrix (hence the Schur complement) does
+        // not — the failure must surface from deep in the recursion as
+        // SingularMatrix, not a panic or NaN output.
+        let mut a = diag_dominant(8, 13);
+        for j in 0..8 {
+            let v = a.get(3, j);
+            a.set(7, j, v);
+        }
+        let err = with_ctx(|ctx| invert_dist(ctx, &a, &two_level_plan(8), "inv1/"))
+            .expect_err("singular input must fail");
+        assert!(matches!(err, StarkError::SingularMatrix { .. }), "{err}");
+    }
+}

@@ -7,6 +7,10 @@
 //! - [`cannon`] — Cannon's communication-avoiding multiply over the
 //!   barrier engine (JAMPI-style): point-to-point ring shifts, zero
 //!   shuffle write.
+//! - [`inverse`] — SPIN-style block-recursive inversion: 2×2 quadrant
+//!   recursion whose six per-level multiplies all dispatch through
+//!   [`MultiplyAlgorithm::multiply_dist`], with a dense LU leaf below
+//!   the planner-chosen crossover (DESIGN.md S23).
 //! - [`common`] — shared plumbing: cached [`BlockSplits`] ⇄
 //!   `Dist<Block>` conversion, result assembly, leaf-time
 //!   instrumentation, and the [`MultiplyAlgorithm`] trait the four
@@ -19,13 +23,15 @@
 pub mod cannon;
 pub mod common;
 pub mod general;
+pub mod inverse;
 pub mod marlin;
 pub mod mllib;
 pub mod stark;
 
 pub use common::{
-    collect_product, implementation, Algorithm, BaselineOptions, BlockSplits, MultiplyAlgorithm,
-    MultiplyOutput, TimingBackend,
+    collect_product, collect_product_labeled, implementation, Algorithm, BaselineOptions,
+    BlockSplits, MultiplyAlgorithm, MultiplyOutput, TimingBackend,
 };
 pub use general::multiply_general;
+pub use inverse::{invert_dist, InverseCtx};
 pub use stark::StarkConfig;

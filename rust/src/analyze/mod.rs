@@ -30,7 +30,7 @@ use std::collections::HashSet;
 use std::sync::Arc;
 
 use crate::api::ExprPlan;
-use crate::cost::{stark_stage_count, Plan};
+use crate::cost::{stark_stage_count, InvPlan, Plan};
 use crate::engine::block::Tag;
 use crate::engine::partitioner::Alignment;
 use crate::engine::{LineageNode, OpKind};
@@ -71,6 +71,13 @@ pub const BARRIER_MISROUTED: &str = "STARK-A009";
 /// (never `put`, or already dropped). Caught by the submit dry-run
 /// before any leaf materializes.
 pub const UNKNOWN_NAME: &str = "STARK-A010";
+/// Non-halving inversion recursion: an [`InvPlan`]'s level schedule does
+/// not halve cleanly from the padded dimension down to the dense-LU
+/// crossover (wrong start/end, a level that is not exactly half its
+/// predecessor, or a non-power-of-two leaf). The SPIN quadrant recursion
+/// assumes every level splits into four equal power-of-two quadrants;
+/// a plan violating that would mis-shape the Schur complement.
+pub const NON_HALVING_INVERSION: &str = "STARK-A011";
 
 /// How bad a finding is. `Error` findings reject the plan under the
 /// strict/debug hooks; `Warning`s report but do not block (the CLI still
@@ -314,8 +321,57 @@ pub fn analyze_node_plan(qualifier: &str, plan: &Plan) -> Vec<Diagnostic> {
     out
 }
 
+/// Check one inversion node's [`InvPlan`] level schedule (A011): it must
+/// start at the padded dimension, halve exactly at every step, and end
+/// at a power-of-two dense-LU crossover ≥ 1. The planner's
+/// [`inverse_plan`](crate::cost::Planner::inverse_plan) always builds
+/// this shape; the check catches hand-built or mutated plans (CLI
+/// `--inv-levels`, serve round-trips) before the recursion mis-shapes a
+/// Schur complement. `qualifier` prefixes the reported node (the
+/// expression layer passes `"inv1/"` etc.; pass `""` for a bare plan).
+pub fn analyze_inverse_plan(qualifier: &str, plan: &InvPlan) -> Vec<Diagnostic> {
+    let node = format!("{qualifier}inverse n={} leaf={}", plan.n, plan.leaf);
+    let bad = |message: String| vec![error(NON_HALVING_INVERSION, node.clone(), message)];
+    let Some((&first, rest)) = plan.levels.split_first() else {
+        return bad("inversion plan has no levels — not even a dense leaf".to_string());
+    };
+    if first != plan.n {
+        return bad(format!(
+            "recursion starts at {first}, not the padded dimension {} — the top-level quadrants \
+             would not tile the operand",
+            plan.n
+        ));
+    }
+    let mut prev = first;
+    for &level in rest {
+        if level * 2 != prev {
+            return bad(format!(
+                "level {level} does not halve its predecessor {prev} — the 2×2 quadrant split \
+                 would mis-shape the Schur complement"
+            ));
+        }
+        prev = level;
+    }
+    if prev != plan.leaf {
+        return bad(format!(
+            "recursion bottoms out at {prev} but the dense-LU crossover is {} — the leaf level \
+             would never reach the serial kernel",
+            plan.leaf
+        ));
+    }
+    if plan.leaf == 0 || !plan.leaf.is_power_of_two() {
+        return bad(format!(
+            "dense-LU crossover {} is not a power of two ≥ 1 — quadrants above it cannot all be \
+             equal power-of-two tiles",
+            plan.leaf
+        ));
+    }
+    Vec::new()
+}
+
 /// Check a whole expression plan: per-node checks plus uniqueness of the
-/// multiply node labels the executor prefixes stages with (A007).
+/// multiply/inversion node labels the executor prefixes stages with
+/// (A007), and level-schedule sanity for every inversion (A011).
 pub fn analyze_plan(plan: &ExprPlan) -> Vec<Diagnostic> {
     let mut out = Vec::new();
     let mut labels = HashSet::new();
@@ -332,6 +388,20 @@ pub fn analyze_plan(plan: &ExprPlan) -> Vec<Diagnostic> {
             ));
         }
         out.extend(analyze_node_plan(&format!("{}/", node.label), &node.plan));
+    }
+    for node in &plan.inversions {
+        if !labels.insert(node.label.as_str()) {
+            out.push(error(
+                DUPLICATE_STAGE_LABEL,
+                node.label.clone(),
+                format!(
+                    "inversion node label duplicated in plan for {} — stage metrics of the two \
+                     nodes would be indistinguishable",
+                    plan.expression
+                ),
+            ));
+        }
+        out.extend(analyze_inverse_plan(&format!("{}/", node.label), &node.plan));
     }
     out
 }
@@ -670,5 +740,50 @@ mod tests {
         let diags = analyze_expr_refs(&bad, &|_| true);
         assert_eq!(diags.len(), 1, "{diags:?}");
         assert_eq!(diags[0].code, UNKNOWN_NAME);
+    }
+
+    #[test]
+    fn planner_built_inverse_plans_pass_clean() {
+        let planner = crate::cost::Planner::new(8);
+        for n in [8usize, 100, 512, 4096] {
+            let plan = planner.inverse_plan(n);
+            let diags = analyze_inverse_plan("", &plan);
+            assert!(diags.is_empty(), "n={n}: {diags:?}");
+        }
+    }
+
+    #[test]
+    fn non_halving_inversion_is_a011() {
+        // 128 → 64 → 16 skips a level: 16 is a quarter, not half, of 64.
+        let skipped = InvPlan { n: 128, leaf: 16, levels: vec![128, 64, 16], predicted_ms: 0.0 };
+        let diags = analyze_inverse_plan("inv1/", &skipped);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, NON_HALVING_INVERSION);
+        assert_eq!(diags[0].severity, Severity::Error);
+        assert_eq!(diags[0].node, "inv1/inverse n=128 leaf=16");
+        assert!(diags[0].message.contains("halve"), "{}", diags[0].message);
+
+        // Wrong start, wrong end, and an empty schedule are each A011.
+        let wrong_start =
+            InvPlan { n: 128, leaf: 32, levels: vec![64, 32], predicted_ms: 0.0 };
+        assert_eq!(analyze_inverse_plan("", &wrong_start)[0].code, NON_HALVING_INVERSION);
+        let wrong_end =
+            InvPlan { n: 128, leaf: 32, levels: vec![128, 64], predicted_ms: 0.0 };
+        assert_eq!(analyze_inverse_plan("", &wrong_end)[0].code, NON_HALVING_INVERSION);
+        let empty = InvPlan { n: 128, leaf: 32, levels: Vec::new(), predicted_ms: 0.0 };
+        assert_eq!(analyze_inverse_plan("", &empty)[0].code, NON_HALVING_INVERSION);
+    }
+
+    #[test]
+    fn expression_plans_with_inversions_analyze_clean() {
+        let s = crate::api::StarkSession::builder()
+            .cluster(crate::engine::ClusterConfig::new(2, 2))
+            .build()
+            .unwrap();
+        let a = s.matrix(&crate::matrix::DenseMatrix::random(24, 24, 31));
+        let b = s.matrix(&crate::matrix::DenseMatrix::random(24, 24, 32));
+        let plan = a.solve(&b).plan().unwrap();
+        assert_eq!(plan.inversions.len(), 1);
+        assert!(analyze_plan(&plan).is_empty(), "{:?}", analyze_plan(&plan));
     }
 }

@@ -50,11 +50,13 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::algos::common::{
-    collect_product, default_parts, distribute as distribute_plain, implementation,
-    MultiplyAlgorithm, TimingBackend,
+    collect_product, collect_product_labeled, default_parts, distribute as distribute_plain,
+    implementation, MultiplyAlgorithm, TimingBackend,
 };
+use crate::algos::general::{pad_identity, pad_square};
+use crate::algos::inverse::{invert_dist, InverseCtx};
 use crate::algos::{Algorithm, BlockSplits};
-use crate::cost::{ChainTree, Plan, Planner, Splits};
+use crate::cost::{ChainTree, InvPlan, Plan, Planner, Splits};
 use crate::engine::{sum_block_grids, Block, Dist, JobCtx, JobMetrics, Side, Tag};
 use crate::error::StarkError;
 use crate::matrix::DenseMatrix;
@@ -80,6 +82,9 @@ enum ExprNode {
     /// one-term sum; nested sums flatten at construction).
     Sum { terms: Vec<(f64, DistExpr)> },
     Transpose(DistExpr),
+    /// SPIN-style block-recursive inversion ([`crate::algos::inverse`]).
+    /// Square-ness is checked at `plan()` time like every shape rule.
+    Inverse(DistExpr),
     /// A construction-time error, deferred to `plan()`/`collect()` so
     /// the builder API stays infallible.
     Invalid(String),
@@ -224,13 +229,44 @@ impl DistExpr {
         }
     }
 
-    /// `self^k` by repeated squaring (`k ≥ 1`; squarings are shared DAG
-    /// nodes, so `pow(8)` is three multiplies). Requires a square
-    /// expression — checked, like every shape rule, at `plan()` time.
-    pub fn pow(&self, k: u32) -> DistExpr {
-        if k == 0 {
-            return self.invalid("pow(0) is not supported (needs k >= 1)");
+    /// Matrix inverse `self⁻¹` — SPIN-style block-recursive distributed
+    /// inversion ([`crate::algos::inverse`]): 2×2 quadrant recursion
+    /// whose six per-level multiplies run through `multiply_dist`, with
+    /// a dense LU leaf below the planner-chosen crossover. Requires a
+    /// square expression (checked at `plan()` time); (near-)singular
+    /// values surface as [`StarkError::SingularMatrix`] at `collect()`.
+    pub fn inverse(&self) -> DistExpr {
+        DistExpr {
+            session: self.session.clone(),
+            rows: self.rows,
+            cols: self.cols,
+            node: Arc::new(ExprNode::Inverse(self.clone())),
         }
+    }
+
+    /// Solve `self · X = rhs` for `X`, as `self⁻¹ · rhs` — one
+    /// expression job, one collect. The `self⁻¹` factor joins chain
+    /// planning like any other, so `a.solve(&b).multiply(&c)` is
+    /// re-parenthesized by the §IV cost model when that pays.
+    pub fn solve(&self, rhs: &impl IntoExpr) -> DistExpr {
+        self.inverse().multiply(rhs)
+    }
+
+    /// `self^k` by repeated squaring (squarings are shared DAG nodes, so
+    /// `pow(8)` is three multiplies). Negative exponents invert first:
+    /// `pow(-k) = (self⁻¹)^k`. `pow(0)` is a deferred construction
+    /// error; square-ness is checked, like every shape rule, at
+    /// `plan()` time.
+    pub fn pow(&self, k: i32) -> DistExpr {
+        if k == 0 {
+            return self.invalid("pow(0) is not supported (needs a nonzero exponent)");
+        }
+        let base = if k < 0 { self.inverse() } else { self.clone() };
+        base.pow_u(k.unsigned_abs())
+    }
+
+    fn pow_u(&self, k: u32) -> DistExpr {
+        debug_assert!(k >= 1);
         let mut base = self.clone();
         let mut acc: Option<DistExpr> = None;
         let mut kk = k;
@@ -288,6 +324,7 @@ impl DistExpr {
             job,
             timing: timing.clone(),
             memo: HashMap::new(),
+            inv_dense: HashMap::new(),
             ew_count: 0,
             regrid_count: 0,
         };
@@ -337,9 +374,20 @@ impl DistMatrix {
         self.expr().transpose()
     }
 
-    /// `self^k` by repeated squaring (`k ≥ 1`).
-    pub fn pow(&self, k: u32) -> DistExpr {
+    /// `self^k` by repeated squaring; negative `k` inverts first
+    /// (`pow(-k) = (self⁻¹)^k`), `pow(0)` is a deferred error.
+    pub fn pow(&self, k: i32) -> DistExpr {
         self.expr().pow(k)
+    }
+
+    /// Matrix inverse `self⁻¹` (lazy — see [`DistExpr::inverse`]).
+    pub fn inverse(&self) -> DistExpr {
+        self.expr().inverse()
+    }
+
+    /// Solve `self · X = rhs` for `X` (lazy — see [`DistExpr::solve`]).
+    pub fn solve(&self, rhs: &impl IntoExpr) -> DistExpr {
+        self.expr().solve(rhs)
     }
 }
 
@@ -390,6 +438,17 @@ pub struct NodePlan {
     pub fused: bool,
 }
 
+/// How one inversion node of an expression will run.
+#[derive(Debug, Clone)]
+pub struct InvNodePlan {
+    /// Stage-label prefix of the node (`"inv1"`, `"inv2"`, … in
+    /// planning order).
+    pub label: String,
+    /// The recursion schedule: padded dimension, exactly-halving levels,
+    /// dense-LU crossover, predicted cost ([`Planner::inverse_plan`]).
+    pub plan: InvPlan,
+}
+
 /// The resolved plan of a whole expression.
 #[derive(Debug, Clone)]
 pub struct ExprPlan {
@@ -398,6 +457,9 @@ pub struct ExprPlan {
     pub expression: String,
     /// Per-multiply-node plans, execution order.
     pub multiplies: Vec<NodePlan>,
+    /// Per-inversion-node recursion schedules, planning order (empty
+    /// for expressions without `inverse`/`solve`/negative `pow`).
+    pub inversions: Vec<InvNodePlan>,
     /// Σ node predictions plus regrid transfer estimates, milliseconds.
     pub predicted_wall_ms: f64,
     /// Whether chain planning re-parenthesized an associative multiply
@@ -445,24 +507,31 @@ enum PNode {
     },
     Sum { terms: Vec<(f64, Arc<PNode>)>, rows: usize, cols: usize },
     Transpose { e: Arc<PNode>, rows: usize, cols: usize },
+    /// Block-recursive inversion of a square operand: the operand
+    /// gathers at a recursion boundary, the recursion runs its own
+    /// planner-resolved multiplies inside the same job, and the result
+    /// redistributes at whatever grid the consumer asks for.
+    Inv { e: Arc<PNode>, plan: InvPlan, label: String, rows: usize, cols: usize },
 }
 
 impl PNode {
     fn rows(&self) -> usize {
         match self {
             PNode::Leaf(m) => m.rows(),
-            PNode::Mul { rows, .. } | PNode::Sum { rows, .. } | PNode::Transpose { rows, .. } => {
-                *rows
-            }
+            PNode::Mul { rows, .. }
+            | PNode::Sum { rows, .. }
+            | PNode::Transpose { rows, .. }
+            | PNode::Inv { rows, .. } => *rows,
         }
     }
 
     fn cols(&self) -> usize {
         match self {
             PNode::Leaf(m) => m.cols(),
-            PNode::Mul { cols, .. } | PNode::Sum { cols, .. } | PNode::Transpose { cols, .. } => {
-                *cols
-            }
+            PNode::Mul { cols, .. }
+            | PNode::Sum { cols, .. }
+            | PNode::Transpose { cols, .. }
+            | PNode::Inv { cols, .. } => *cols,
         }
     }
 }
@@ -479,6 +548,7 @@ struct PlanCtx<'a> {
     uses: HashMap<usize, usize>,
     memo: HashMap<usize, Arc<PNode>>,
     plans: Vec<NodePlan>,
+    inv_plans: Vec<InvNodePlan>,
     reordered: bool,
 }
 
@@ -495,12 +565,14 @@ impl Planned {
             uses,
             memo: HashMap::new(),
             plans: Vec::new(),
+            inv_plans: Vec::new(),
             reordered: false,
         };
         let proot = ctx.convert(root)?;
         let planner = root.session.planner();
         let root_grid = natural_grid(&proot, planner);
         let predicted_wall_ms: f64 = ctx.plans.iter().map(|p| p.plan.predicted_wall_ms()).sum::<f64>()
+            + ctx.inv_plans.iter().map(|p| p.plan.predicted_ms).sum::<f64>()
             + transfer_ms(&proot, root_grid, planner);
         let expression = render_root(&proot);
         Ok(Planned {
@@ -508,6 +580,7 @@ impl Planned {
             plan: ExprPlan {
                 expression,
                 multiplies: ctx.plans,
+                inversions: ctx.inv_plans,
                 predicted_wall_ms,
                 reordered: ctx.reordered,
             },
@@ -533,6 +606,7 @@ fn count_uses(e: &DistExpr, uses: &mut HashMap<usize, usize>) {
             }
         }
         ExprNode::Transpose(inner) => count_uses(inner, uses),
+        ExprNode::Inverse(inner) => count_uses(inner, uses),
     }
 }
 
@@ -588,6 +662,21 @@ impl PlanCtx<'_> {
                 let pe = self.convert(inner)?;
                 let (rows, cols) = (pe.cols(), pe.rows());
                 Arc::new(PNode::Transpose { e: pe, rows, cols })
+            }
+            ExprNode::Inverse(inner) => {
+                let pe = self.convert(inner)?;
+                if pe.rows() != pe.cols() {
+                    return Err(StarkError::ShapeMismatch {
+                        a: (pe.rows(), pe.cols()),
+                        b: (pe.rows(), pe.cols()),
+                        reason: "expression inverse: needs a square operand".to_string(),
+                    });
+                }
+                let plan = self.planner().inverse_plan(pe.rows());
+                let label = format!("inv{}", self.inv_plans.len() + 1);
+                self.inv_plans.push(InvNodePlan { label: label.clone(), plan: plan.clone() });
+                let (rows, cols) = (pe.rows(), pe.cols());
+                Arc::new(PNode::Inv { e: pe, plan, label, rows, cols })
             }
             ExprNode::Sum { terms } => {
                 assert!(!terms.is_empty(), "sums have at least one term by construction");
@@ -713,6 +802,10 @@ fn natural_grid(p: &PNode, planner: &Planner) -> (usize, usize) {
             PNode::Mul { plan, .. } => Some((plan.n, plan.b)),
             PNode::Transpose { e, .. } => first_mul(e),
             PNode::Sum { terms, .. } => terms.iter().find_map(|(_, t)| first_mul(t)),
+            // An inversion's output is dense on the driver and
+            // redistributes at any grid equally cheaply — it imposes no
+            // grid of its own, so look through it.
+            PNode::Inv { e, .. } => first_mul(e),
         }
     }
     first_mul(p).unwrap_or_else(|| {
@@ -759,6 +852,13 @@ fn transfer_ms(p: &Arc<PNode>, want: (usize, usize), planner: &Planner) -> f64 {
                 terms.iter().map(|(_, t)| walk(t, want, planner, seen)).sum()
             }
             PNode::Transpose { e, .. } => walk(e, want, planner, seen),
+            // The recursion's own driver traffic is priced inside
+            // InvPlan::predicted_ms; the operand is gathered at its
+            // natural grid, so no regrid bridges it to `want`.
+            PNode::Inv { e, .. } => {
+                let inner = natural_grid(e, planner);
+                walk(e, inner, planner, seen)
+            }
         }
     }
     walk(p, want, planner, &mut std::collections::HashSet::new())
@@ -810,6 +910,10 @@ fn render(
         PNode::Transpose { e, .. } => {
             let atom = matches!(**e, PNode::Leaf(_));
             format!("{}ᵀ", render(e, names, !atom, budget))
+        }
+        PNode::Inv { e, .. } => {
+            let atom = matches!(**e, PNode::Leaf(_));
+            format!("{}⁻¹", render(e, names, !atom, budget))
         }
         PNode::Mul { l, r, .. } => {
             let ls = render(l, names, matches!(**l, PNode::Sum { .. }), budget);
@@ -876,7 +980,7 @@ fn leaf_terms(p: &PNode) -> Option<Vec<LeafTerm>> {
         PNode::Leaf(m) => {
             Some(vec![LeafTerm { sign: 1.0, transposed: false, matrix: m.clone() }])
         }
-        PNode::Mul { .. } => None,
+        PNode::Mul { .. } | PNode::Inv { .. } => None,
         PNode::Transpose { e, .. } => {
             let mut ts = leaf_terms(e)?;
             for t in &mut ts {
@@ -971,6 +1075,10 @@ struct Exec<'a> {
     /// once; a second grid request regrids the memoized natural-grid
     /// result instead of re-running it.
     memo: HashMap<(usize, usize, usize), Dist<Block>>,
+    /// Inversion node → its cropped logical-shape dense inverse. A
+    /// shared inverse consumed at two grids runs the recursion once and
+    /// redistributes per grid (redistribution from dense is free).
+    inv_dense: HashMap<usize, DenseMatrix>,
     ew_count: usize,
     regrid_count: usize,
 }
@@ -1002,9 +1110,73 @@ impl Exec<'_> {
             }
             PNode::Transpose { e, .. } => self.eval(e, s, b)?.transpose_blocks(),
             PNode::Sum { terms, .. } => self.eval_sum(terms, s, b)?,
+            PNode::Inv { e, plan, label, rows, .. } => {
+                let logical = *rows;
+                let cached = self.inv_dense.get(&(Arc::as_ptr(p) as usize)).cloned();
+                let dense_inv = match cached {
+                    Some(m) => m,
+                    None => {
+                        // Recursion boundary: gather the operand dense,
+                        // identity-pad (diag(A, I) stays invertible —
+                        // zero padding would not), recurse, crop back.
+                        let operand = self.gather_operand(e, label)?;
+                        let padded = if operand.rows() == plan.n {
+                            operand
+                        } else {
+                            pad_identity(&operand, plan.n)
+                        };
+                        let ictx = InverseCtx {
+                            job: &self.job,
+                            timing: &self.timing,
+                            cfg: self.session.stark_config(),
+                            planner: self.session.planner(),
+                        };
+                        let inv = invert_dist(&ictx, &padded, plan, &format!("{label}/"))?;
+                        let cropped = if logical == plan.n {
+                            inv
+                        } else {
+                            inv.submatrix(0, 0, logical, logical)
+                        };
+                        self.inv_dense.insert(Arc::as_ptr(p) as usize, cropped.clone());
+                        cropped
+                    }
+                };
+                let mat =
+                    if logical == s { dense_inv } else { pad_square(&dense_inv, s) };
+                distribute_plain(&self.job, &BlockSplits::of(&mat, b)?, Side::A)
+            }
         };
         self.memo.insert(key, out.clone());
         Ok(out)
+    }
+
+    /// Gather an inversion operand to the driver as a dense
+    /// logical-shape matrix. Leaf combinations evaluate straight from
+    /// the handles' cached splits (no stages at all); anything else
+    /// evaluates distributed at its natural grid and gathers under
+    /// `"{label}/gather-operand"` — never `"result/collect"`, so the
+    /// job's single-collect ledger invariant holds.
+    fn gather_operand(
+        &mut self,
+        e: &Arc<PNode>,
+        label: &str,
+    ) -> Result<DenseMatrix, StarkError> {
+        let (rows, cols) = (e.rows(), e.cols());
+        if let Some(terms) = leaf_terms(e) {
+            let s = Splits::Auto.padded_dim(rows.max(cols));
+            let single = combined_splits(&terms, s, 1)?;
+            let m = (**single.block_at(0, 0)).clone();
+            return Ok(if (rows, cols) == (s, s) { m } else { m.submatrix(0, 0, rows, cols) });
+        }
+        let (s, b) = natural_grid(e, self.session.planner());
+        let blocks = self.eval(e, s, b)?;
+        let m = collect_product_labeled(
+            &blocks.retag_product(),
+            b,
+            s / b,
+            &format!("{label}/gather-operand"),
+        );
+        Ok(if (rows, cols) == (s, s) { m } else { m.submatrix(0, 0, rows, cols) })
     }
 
     /// Evaluate one multiply operand at the node's grid. Leaf
@@ -1255,5 +1427,84 @@ mod tests {
         let labels: Vec<&str> = pinned.job.stages.iter().map(|st| st.label.as_str()).collect();
         assert!(!labels.iter().any(|l| l.contains("multiply/fused")), "{labels:?}");
         assert!(labels.iter().any(|l| l.contains("stage3/coGroup")), "{labels:?}");
+    }
+
+    fn diag_dominant(n: usize, seed: u64) -> DenseMatrix {
+        let r = DenseMatrix::random(n, n, seed);
+        DenseMatrix::from_fn(n, n, |i, j| {
+            if i == j { r.get(i, j) + n as f64 } else { r.get(i, j) }
+        })
+    }
+
+    #[test]
+    fn inverse_and_solve_match_dense_lu() {
+        use crate::matrix::lu;
+        let s = session();
+        // 24 is not a power of two: the executor identity-pads to the
+        // planned grid and crops back (zero padding would be singular).
+        let am = diag_dominant(24, 11);
+        let bm = DenseMatrix::random(24, 24, 12);
+        let a = s.matrix(&am);
+        let b = s.matrix(&bm);
+        let inv = a.inverse().collect().unwrap();
+        let want = lu::invert(&am).unwrap();
+        assert!(inv.c.allclose(&want, 1e-8), "Δ={}", inv.c.max_abs_diff(&want));
+        assert_eq!(inv.plan.inversions.len(), 1);
+        assert_eq!(inv.plan.inversions[0].label, "inv1");
+        assert_eq!(
+            inv.job.stages.iter().filter(|st| st.label == "result/collect").count(),
+            1,
+            "recursion-internal gathers must not masquerade as the result collect"
+        );
+        // solve(A, B) plans as A⁻¹·B: one inversion, one multiply, one collect.
+        let solved = a.solve(&b).collect().unwrap();
+        let xwant = lu::solve(&am, &bm).unwrap();
+        assert!(solved.c.allclose(&xwant, 1e-8), "Δ={}", solved.c.max_abs_diff(&xwant));
+        assert!(matmul_naive(&am, &solved.c).allclose(&bm, 1e-7));
+        assert_eq!(solved.plan.inversions.len(), 1);
+        assert_eq!(solved.plan.multiplies.len(), 1);
+        assert_eq!(
+            solved.job.stages.iter().filter(|st| st.label == "result/collect").count(),
+            1
+        );
+        assert!(solved.plan.predicted_wall_ms > 0.0);
+    }
+
+    #[test]
+    fn negative_pow_inverts() {
+        use crate::matrix::lu;
+        let s = session();
+        let pm = diag_dominant(16, 21);
+        let p = s.matrix(&pm);
+        let r1 = p.pow(-1).collect().unwrap();
+        assert!(r1.c.allclose(&lu::invert(&pm).unwrap(), 1e-8));
+        // p^-2 = (p⁻¹)² — one inversion plus the squaring multiply.
+        let r2 = p.pow(-2).collect().unwrap();
+        let pinv = lu::invert(&pm).unwrap();
+        assert!(r2.c.allclose(&matmul_naive(&pinv, &pinv), 1e-7));
+        assert_eq!(r2.plan.inversions.len(), 1);
+    }
+
+    #[test]
+    fn inverse_shape_and_singular_errors_are_typed() {
+        let s = session();
+        let rect = s.matrix(&DenseMatrix::zeros(4, 6));
+        assert!(matches!(
+            rect.inverse().plan(),
+            Err(StarkError::ShapeMismatch { .. })
+        ));
+        // A duplicated row keeps the input finite but rank-deficient: the
+        // failure must come back typed through collect, not as a panic or
+        // NaN-poisoned output.
+        let mut am = diag_dominant(8, 23);
+        for j in 0..8 {
+            let v = am.get(2, j);
+            am.set(6, j, v);
+        }
+        let a = s.matrix(&am);
+        let err = a.inverse().collect().expect_err("singular input must fail");
+        assert!(matches!(err, StarkError::SingularMatrix { .. }), "{err}");
+        let err = a.solve(&s.matrix(&DenseMatrix::random(8, 8, 24))).collect().unwrap_err();
+        assert!(matches!(err, StarkError::SingularMatrix { .. }), "{err}");
     }
 }

@@ -18,7 +18,9 @@
 
 pub mod planner;
 
-pub use planner::{Calibration, ChainPlan, ChainTree, Plan, PlanCandidate, Planner, Splits};
+pub use planner::{
+    Calibration, ChainPlan, ChainTree, InvPlan, Plan, PlanCandidate, Planner, Splits,
+};
 
 /// One stage's predicted cost terms.
 #[derive(Debug, Clone, PartialEq)]

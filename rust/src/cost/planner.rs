@@ -494,6 +494,79 @@ impl Planner {
         }
         walk(self, tree, dims).0
     }
+
+    /// Dense-leaf cost of inverting a `d × d` tile serially on the
+    /// driver: LU factorization plus the solve against the identity is
+    /// ≈ 2·d³ flop-equivalents at `alpha` seconds per unit, with no
+    /// parallelism (the leaf runs on the driver thread).
+    fn dense_inverse_ms(&self, d: usize) -> f64 {
+        2.0 * self.calibration.alpha * (d as f64).powi(3) * 1e3
+    }
+
+    /// Predicted wall time of block-recursively inverting a `d × d`
+    /// power-of-two matrix with dense crossover `leaf`: each level pays
+    /// 2 recursive inverts + 6 distributed multiplies on half-dim
+    /// quadrants (DESIGN.md S23), plus the driver-side gathers and
+    /// redistributions that stitch quadrants between levels — ≈ 8
+    /// half-dim matrices through the driver at `beta` seconds/element,
+    /// *not* spread across cores (the driver is a single point).
+    fn recursive_inverse_ms(&self, d: usize, leaf: usize) -> f64 {
+        if d <= leaf {
+            return self.dense_inverse_ms(d);
+        }
+        let h = d / 2;
+        let driver_ms = 8.0 * self.calibration.beta * (h as f64).powi(2) * 1e3;
+        2.0 * self.recursive_inverse_ms(h, leaf) + 6.0 * self.product_cost_ms(h, h, h) + driver_ms
+    }
+
+    /// Plan a distributed inversion of a square matrix whose raw
+    /// dimension is `max_dim`: pad to the next power of two (so every
+    /// quadrant halves cleanly) and choose the dense-LU crossover as the
+    /// argmin of [the recurrence above] over power-of-two leaf
+    /// candidates. Small matrices plan as a single dense leaf (`levels
+    /// == [n]`); large ones recurse until the distributed multiplies
+    /// stop paying for the per-level driver traffic. Ties keep the
+    /// larger leaf — shallower recursions at equal predicted cost.
+    pub fn inverse_plan(&self, max_dim: usize) -> InvPlan {
+        let n = Splits::Auto.padded_dim(max_dim);
+        let mut best: Option<(usize, f64)> = None;
+        let mut cand = n;
+        loop {
+            let ms = self.recursive_inverse_ms(n, cand);
+            // total_cmp: NaN calibrations degrade to an arbitrary-but-
+            // valid plan, same policy as `resolve`.
+            if best.map_or(true, |(_, b)| ms.total_cmp(&b).is_lt()) {
+                best = Some((cand, ms));
+            }
+            if cand == 1 {
+                break;
+            }
+            cand /= 2;
+        }
+        let (leaf, predicted_ms) = best.expect("the all-dense candidate always exists");
+        let mut levels = vec![n];
+        while *levels.last().expect("non-empty") > leaf {
+            let next = levels.last().expect("non-empty") / 2;
+            levels.push(next);
+        }
+        InvPlan { n, leaf, levels, predicted_ms }
+    }
+
+    /// Predicted wall time of inverting a `max_dim`-square matrix under
+    /// the auto-planned recursion — [`Planner::inverse_plan`]'s cost.
+    pub fn inverse_cost_ms(&self, max_dim: usize) -> f64 {
+        self.inverse_plan(max_dim).predicted_ms
+    }
+
+    /// Predicted cost of `solve(A, B) = A⁻¹ · B` with `A` of dimension
+    /// `n` and an `n × rhs_cols` right-hand side: the inversion
+    /// recursion plus the [`Planner::plan_chain`]-costed application to
+    /// the right-hand side. Longer chains hanging off a solve (e.g.
+    /// `A⁻¹·B·C`) are reordered by the expression layer's chain DP,
+    /// which prices the `A⁻¹` factor through this same model.
+    pub fn solve_cost_ms(&self, n: usize, rhs_cols: usize) -> f64 {
+        self.inverse_cost_ms(n) + self.plan_chain(&[n, n, rhs_cols]).predicted_ms
+    }
 }
 
 /// One parenthesization of a multiply chain: factor `i` spans
@@ -514,6 +587,31 @@ pub enum ChainTree {
 pub struct ChainPlan {
     pub tree: ChainTree,
     pub predicted_ms: f64,
+}
+
+/// [`Planner::inverse_plan`]'s answer: the recursion schedule for one
+/// block-recursive distributed inversion (DESIGN.md S23).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InvPlan {
+    /// Padded power-of-two dimension the recursion starts at.
+    pub n: usize,
+    /// Dense-LU crossover: quadrants at or below this dimension invert
+    /// serially on the driver ([`crate::matrix::lu`]).
+    pub leaf: usize,
+    /// Quadrant dimensions the recursion visits, `n` first, each level
+    /// exactly halving, ending at `leaf` (inclusive). `[n]` alone means
+    /// the whole inversion runs dense. The analyzer's STARK-A011 checks
+    /// this shape on every submitted inversion plan.
+    pub levels: Vec<usize>,
+    /// Predicted wall time of the whole recursion, milliseconds.
+    pub predicted_ms: f64,
+}
+
+impl InvPlan {
+    /// Number of distributed recursion levels (0 when fully dense).
+    pub fn depth(&self) -> usize {
+        self.levels.len() - 1
+    }
 }
 
 #[cfg(test)]
@@ -766,6 +864,56 @@ mod tests {
         let cannon = four.breakdown(Algorithm::Cannon, 2048, 2).unwrap().wall(alpha, beta);
         assert!(stark < cannon, "stark {stark} !< cannon {cannon}");
         assert!((cannon - stark) / stark < 0.01, "the margin is a knife edge, not a chasm");
+    }
+
+    #[test]
+    fn inverse_plan_halves_cleanly_and_crosses_to_dense() {
+        let four = p(4);
+        // Small matrices plan as one dense leaf: the per-level driver
+        // traffic dwarfs any distributed-multiply win down here.
+        let small = four.inverse_plan(16);
+        assert_eq!((small.n, small.leaf), (16, 16));
+        assert_eq!(small.levels, vec![16]);
+        assert_eq!(small.depth(), 0);
+        // Large matrices recurse; every level halves exactly and the
+        // schedule bottoms out at the chosen leaf.
+        let big = four.inverse_plan(4096);
+        assert_eq!(big.n, 4096);
+        assert!(big.depth() >= 1, "n=4096 must recurse: {:?}", big.levels);
+        assert!(big.leaf.is_power_of_two() && big.leaf >= 1);
+        assert_eq!(big.levels[0], big.n);
+        assert_eq!(*big.levels.last().unwrap(), big.leaf);
+        assert!(big.levels.windows(2).all(|w| w[0] == 2 * w[1]), "{:?}", big.levels);
+        assert!(big.predicted_ms.is_finite() && big.predicted_ms > 0.0);
+        // The chosen schedule beats the all-dense alternative.
+        assert!(big.predicted_ms < four.dense_inverse_ms(4096));
+        // Non-pow2 raw dims pad up before recursing.
+        assert_eq!(four.inverse_plan(100).n, 128);
+    }
+
+    #[test]
+    fn solve_cost_builds_on_the_inverse_recursion() {
+        let four = p(4);
+        let inv = four.inverse_cost_ms(1024);
+        let solve = four.solve_cost_ms(1024, 1024);
+        assert!(solve > inv, "solve {solve} must add the RHS product to inverse {inv}");
+        assert!(
+            (solve - inv - four.product_cost_ms(1024, 1024, 1024)).abs() < 1e-9,
+            "one RHS factor costs exactly one chain product"
+        );
+        // A skinnier right-hand side is never more expensive.
+        assert!(four.solve_cost_ms(1024, 8) <= solve);
+    }
+
+    #[test]
+    fn inverse_plan_survives_non_finite_calibration() {
+        for bad in [f64::NAN, f64::INFINITY] {
+            let pl = Planner::with_calibration(4, Calibration { alpha: bad, beta: 1e-8 });
+            let plan = pl.inverse_plan(512);
+            assert_eq!(plan.n, 512);
+            assert!(plan.leaf.is_power_of_two());
+            assert_eq!(*plan.levels.last().unwrap(), plan.leaf);
+        }
     }
 
     #[test]

@@ -97,6 +97,18 @@ pub enum StarkError {
     UnknownJob {
         job_id: u64,
     },
+    /// An inversion or solve hit a (near-)singular matrix: the dense LU
+    /// leaf found no usable pivot at elimination step `at` (the best
+    /// remaining candidate was `pivot`, below the relative threshold).
+    /// Surfaced through every entry point — `DistMatrix::inverse`,
+    /// `DistExpr::{inverse, solve, pow(-k)}`, serve submits and the CLI
+    /// — instead of NaN-poisoning the output.
+    SingularMatrix {
+        /// Magnitude of the best pivot candidate that was still too small.
+        pivot: f64,
+        /// Zero-based elimination step (row/column index) that failed.
+        at: usize,
+    },
 }
 
 impl StarkError {
@@ -166,6 +178,11 @@ impl std::fmt::Display for StarkError {
             StarkError::UnknownJob { job_id } => {
                 write!(f, "unknown job id {job_id}: never submitted on this server")
             }
+            StarkError::SingularMatrix { pivot, at } => write!(
+                f,
+                "singular matrix: no usable pivot at elimination step {at} \
+                 (best candidate magnitude {pivot:e})"
+            ),
         }
     }
 }
@@ -208,5 +225,14 @@ mod tests {
         assert!(s.contains("'weights'") && s.contains("dropped"), "{s}");
         let s = StarkError::UnknownJob { job_id: 41 }.to_string();
         assert!(s.contains("41"), "{s}");
+    }
+
+    #[test]
+    fn singular_variant_renders_its_context() {
+        let e = StarkError::SingularMatrix { pivot: 1.5e-17, at: 3 };
+        let s = e.to_string();
+        assert!(s.contains("singular"), "{s}");
+        assert!(s.contains("step 3"), "{s}");
+        assert!(s.contains("1.5e-17"), "{s}");
     }
 }

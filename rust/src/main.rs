@@ -41,8 +41,10 @@ USAGE: stark <multiply|plan|analyze|compare|sweep|stages|scalability|cost|serve|
   analyze:              static plan analysis without executing anything:
                         [--expr '<json>' | --expr @expr.json] dry-runs
                         the expression plan (same JSON as request), else
-                        the single multiply from --n/--algo/--b; prints
-                        STARK-Axxx diagnostics, exits non-zero on any
+                        [--inv-levels 128,64,32] checks a hand-built
+                        inversion level schedule (A011), else the single
+                        multiply from --n/--algo/--b; prints STARK-Axxx
+                        diagnostics, exits non-zero on any
   serve:                --addr 127.0.0.1:7878  (newline-JSON job queue:
                         submit/status/wait/jobs/multiply/plan/put/get/
                         drop/ls/ping/shutdown) [--max-jobs 8]
@@ -60,8 +62,9 @@ USAGE: stark <multiply|plan|analyze|compare|sweep|stages|scalability|cost|serve|
                         [--job-id N] [--timeout-ms N] [--deadline-ms N]
                         --n 256 [--algo auto] [--b auto]
                         [--expr '<json>' | --expr @expr.json]  submit a
-                        whole expression DAG (mul/add/sub/scale/t/pow
-                        over matrix/gen/ref leaves) instead of one
+                        whole expression DAG (mul/add/sub/scale/t/inv/
+                        solve/pow over matrix/gen/ref leaves — pow k may
+                        be negative, inverting first) instead of one
                         multiply; it runs chained, with a single collect
                         put: --name NAME with --matrix '<json>'|@file or
                         a generator --n/--seed;  get: --name [--values];
@@ -467,6 +470,38 @@ fn cmd_cost(args: &Args) -> Result<()> {
 /// `STARK-Axxx` diagnostics without executing anything. Exits non-zero
 /// on any finding so CI can gate on a clean analyze.
 fn cmd_analyze(args: &Args) -> Result<()> {
+    if let Some(raw) = args.raw("inv-levels") {
+        // Hand-built inversion schedule, checked the way --expr checks a
+        // plan (A011): the first size is the padded dimension, the last
+        // the dense-LU crossover. No session needed — nothing runs.
+        let levels: Vec<usize> = raw
+            .split(',')
+            .map(|t| t.trim().parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("--inv-levels wants comma-separated sizes: {e}"))?;
+        let plan = stark::cost::InvPlan {
+            n: levels[0],
+            leaf: *levels.last().unwrap(),
+            levels,
+            predicted_ms: 0.0,
+        };
+        println!(
+            "inversion schedule: n={} leaf={} ({} level(s))",
+            plan.n,
+            plan.leaf,
+            plan.levels.len()
+        );
+        let diags = stark::analyze::analyze_inverse_plan("", &plan);
+        if diags.is_empty() {
+            println!("analyze: clean — no diagnostics");
+            return Ok(());
+        }
+        for d in &diags {
+            println!("{d}");
+        }
+        eprintln!("analyze: {} diagnostic(s) found", diags.len());
+        std::process::exit(1);
+    }
     let cfg = run_config(args);
     let session = session_for(&cfg)?;
     let diags = if let Some(raw) = args.raw("expr") {
@@ -491,9 +526,10 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         let expr = stark::serve::expr_from_json(&session, &tree)?;
         let plan = expr.plan()?;
         println!(
-            "expression {} — {} multiply node(s), predicted wall {:.2} ms",
+            "expression {} — {} multiply node(s), {} inversion(s), predicted wall {:.2} ms",
             plan.expression,
             plan.multiplies.len(),
+            plan.inversions.len(),
             plan.predicted_wall_ms
         );
         stark::analyze::analyze_plan(&plan)
@@ -941,6 +977,98 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
         ls.get("entries").and_then(Value::as_array).map(<[Value]>::len) == Some(2),
         "ls after two puts: {ls:?}"
     );
+
+    // ---- inverse/solve over stored operands (DESIGN.md S23): one
+    // chained job, one collect, residual within the documented bound,
+    // both operands served from the store ----
+    let to_json = |m: &stark::matrix::DenseMatrix| -> Value {
+        Value::Array(
+            (0..m.rows())
+                .map(|r| {
+                    Value::Array((0..m.cols()).map(|c| Value::num(m.get(r, c))).collect())
+                })
+                .collect(),
+        )
+    };
+    let n_inv = 24usize;
+    let rinv = stark::matrix::DenseMatrix::random(n_inv, n_inv, 51);
+    let s_mat = stark::matrix::DenseMatrix::from_fn(n_inv, n_inv, |i, j| {
+        if i == j { rinv.get(i, j) + n_inv as f64 } else { rinv.get(i, j) }
+    });
+    let rhs = stark::matrix::DenseMatrix::random(n_inv, n_inv, 52);
+    for (name, m) in [("S", &s_mat), ("RHS", &rhs)] {
+        let put = stark::serve::request(
+            &saddr,
+            &Value::obj(vec![
+                ("op", Value::str("put")),
+                ("name", Value::str(name)),
+                ("matrix", to_json(m)),
+            ]),
+        )?;
+        anyhow::ensure!(put.get("ok") == Some(&Value::Bool(true)), "put {name}: {put:?}");
+    }
+    let solve_tree = stark::util::json::parse(r#"{"solve":[{"ref":"S"},{"ref":"RHS"}]}"#)
+        .map_err(|e| anyhow::anyhow!("solve expr json: {e}"))?;
+    let solved = stark::serve::request(
+        &saddr,
+        &Value::obj(vec![
+            ("op", Value::str("multiply")),
+            ("expr", solve_tree),
+            ("return_c", Value::Bool(true)),
+        ]),
+    )?;
+    anyhow::ensure!(solved.get("ok") == Some(&Value::Bool(true)), "solve: {solved:?}");
+    tally(&solved);
+    anyhow::ensure!(
+        solved.get("collects").and_then(Value::as_u64) == Some(1),
+        "solve did not collect exactly once: {solved:?}"
+    );
+    anyhow::ensure!(
+        solved.get("inversions").and_then(Value::as_array).map(<[Value]>::len) == Some(1),
+        "solve planned no inversion node: {solved:?}"
+    );
+    let x_rows =
+        solved.get("c").and_then(Value::as_array).map(|a| a.to_vec()).unwrap_or_default();
+    anyhow::ensure!(x_rows.len() == n_inv, "solve result has {} rows", x_rows.len());
+    let mut x = stark::matrix::DenseMatrix::zeros(n_inv, n_inv);
+    for (i, row) in x_rows.iter().enumerate() {
+        let row = row.as_array().ok_or_else(|| anyhow::anyhow!("bad solve row: {row:?}"))?;
+        for (j, v) in row.iter().enumerate() {
+            x.set(i, j, v.as_f64().ok_or_else(|| anyhow::anyhow!("bad element: {v:?}"))?);
+        }
+    }
+    // ‖S·X − RHS‖_F ≤ c·n·ε·κ(S): diagonally dominant S is
+    // well-conditioned, so a fixed tolerance sits far above the bound.
+    let residual = stark::matrix::matmul_blocked(&s_mat, &x).sub(&rhs).frobenius();
+    anyhow::ensure!(residual < 1e-8, "solve residual {residual} out of bound: {solved:?}");
+    let inv_hits = solved
+        .get("store")
+        .and_then(|s| s.get("hits"))
+        .and_then(Value::as_u64)
+        .unwrap_or(0);
+    anyhow::ensure!(inv_hits >= 2, "solve did not hit the store for both operands: {solved:?}");
+    // A singular operand is a typed job failure, not a wedged runner.
+    let singular = stark::serve::request(
+        &saddr,
+        &Value::obj(vec![
+            ("op", Value::str("multiply")),
+            (
+                "expr",
+                stark::util::json::parse(r#"{"inv":{"matrix":[[1,2],[2,4]]}}"#)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?,
+            ),
+        ]),
+    )?;
+    anyhow::ensure!(
+        singular.get("ok") == Some(&Value::Bool(false))
+            && singular
+                .get("error")
+                .and_then(Value::as_str)
+                .map_or(false, |e| e.contains("singular")),
+        "singular inverse was not a typed failure: {singular:?}"
+    );
+    println!("serve-smoke: inv/solve over stored refs OK (residual {residual:.3e})");
+
     // Dangling refs are rejected at submit time with the analyzer code.
     let dangling = stark::serve::request(
         &saddr,

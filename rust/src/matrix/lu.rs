@@ -1,0 +1,248 @@
+//! Dense LU factorization with partial pivoting — the serial leaf of
+//! block-recursive distributed inversion (DESIGN.md S23).
+//!
+//! [`crate::algos::inverse`] recurses on 2×2 block quadrants down to a
+//! planner-chosen crossover and hands the remaining dense tile to this
+//! module. Partial pivoting keeps the leaf backward-stable; a pivot
+//! whose magnitude falls to (or below) the relative threshold
+//! `n · ε · max|A|` is rejected as [`StarkError::SingularMatrix`], so
+//! singular and near-singular tiles surface as typed errors — never as
+//! NaN-poisoned output.
+//!
+//! ```
+//! use stark::matrix::{lu, matmul_naive, DenseMatrix};
+//!
+//! let a = DenseMatrix::from_vec(2, 2, vec![0.0, 1.0, 2.0, 0.0]);
+//! let inv = lu::invert(&a)?; // the zero pivot forces a row swap
+//! assert!(matmul_naive(&a, &inv).allclose(&DenseMatrix::identity(2), 1e-12));
+//! # Ok::<(), stark::StarkError>(())
+//! ```
+
+use crate::error::StarkError;
+use crate::matrix::DenseMatrix;
+
+/// Packed LU factorization `P·A = L·U` of a square matrix: the unit
+/// lower triangle `L` (implicit diagonal) and `U` share one buffer,
+/// `perm[i]` is the source row of `A` that landed in factored row `i`.
+#[derive(Debug, Clone)]
+pub struct LuFactors {
+    lu: Vec<f64>,
+    n: usize,
+    perm: Vec<usize>,
+}
+
+fn square_err(rows: usize, cols: usize, what: &str) -> StarkError {
+    StarkError::ShapeMismatch {
+        a: (rows, cols),
+        b: (rows, cols),
+        reason: format!("{what} needs a square matrix"),
+    }
+}
+
+/// Factor a square matrix with partial pivoting.
+///
+/// Returns [`StarkError::SingularMatrix`] when the best remaining pivot
+/// candidate at some elimination step is not meaningfully larger than
+/// the round-off floor `n · ε · max|A|` — singular *and* near-singular
+/// inputs are rejected before any division happens.
+pub fn factor(a: &DenseMatrix) -> Result<LuFactors, StarkError> {
+    if a.rows() != a.cols() {
+        return Err(square_err(a.rows(), a.cols(), "LU factorization"));
+    }
+    let n = a.rows();
+    let mut lu = a.as_slice().to_vec();
+    let mut perm: Vec<usize> = (0..n).collect();
+    // Relative singularity threshold: a pivot this small against the
+    // matrix scale carries no reliable information — reject instead of
+    // dividing by it. A zero matrix has scale 0 and fails at step 0.
+    let scale = lu.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+    let tol = scale * n as f64 * f64::EPSILON;
+    for k in 0..n {
+        let (mut p, mut best) = (k, lu[k * n + k].abs());
+        for i in (k + 1)..n {
+            let v = lu[i * n + k].abs();
+            if v > best {
+                (p, best) = (i, v);
+            }
+        }
+        // NaN/∞ pivots (poisoned input) are as unusable as tiny ones.
+        if best <= tol || !best.is_finite() {
+            return Err(StarkError::SingularMatrix { pivot: best, at: k });
+        }
+        if p != k {
+            for j in 0..n {
+                lu.swap(k * n + j, p * n + j);
+            }
+            perm.swap(k, p);
+        }
+        let pivot = lu[k * n + k];
+        for i in (k + 1)..n {
+            let f = lu[i * n + k] / pivot;
+            lu[i * n + k] = f;
+            for j in (k + 1)..n {
+                lu[i * n + j] -= f * lu[k * n + j];
+            }
+        }
+    }
+    Ok(LuFactors { lu, n, perm })
+}
+
+impl LuFactors {
+    /// Dimension of the factored matrix.
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Solve `A · X = B` (with `B` of shape `n × m`) from the factors:
+    /// permute the right-hand side, forward-substitute through `L`,
+    /// back-substitute through `U`. Deterministic: fixed ascending /
+    /// descending accumulation order, bit-stable across runs.
+    pub fn solve(&self, b: &DenseMatrix) -> Result<DenseMatrix, StarkError> {
+        if b.rows() != self.n {
+            return Err(StarkError::ShapeMismatch {
+                a: (self.n, self.n),
+                b: (b.rows(), b.cols()),
+                reason: "solve: right-hand side must have A's row count".to_string(),
+            });
+        }
+        let (n, m) = (self.n, b.cols());
+        let src = b.as_slice();
+        let mut x = vec![0.0f64; n * m];
+        for (i, &from) in self.perm.iter().enumerate() {
+            x[i * m..(i + 1) * m].copy_from_slice(&src[from * m..(from + 1) * m]);
+        }
+        // L (unit diagonal) forward pass.
+        for i in 1..n {
+            for k in 0..i {
+                let f = self.lu[i * n + k];
+                if f != 0.0 {
+                    for j in 0..m {
+                        x[i * m + j] -= f * x[k * m + j];
+                    }
+                }
+            }
+        }
+        // U back pass.
+        for i in (0..n).rev() {
+            for k in (i + 1)..n {
+                let f = self.lu[i * n + k];
+                if f != 0.0 {
+                    for j in 0..m {
+                        x[i * m + j] -= f * x[k * m + j];
+                    }
+                }
+            }
+            let d = self.lu[i * n + i];
+            for j in 0..m {
+                x[i * m + j] /= d;
+            }
+        }
+        Ok(DenseMatrix::from_vec(n, m, x))
+    }
+
+    /// `A⁻¹` from the factors: solve against the identity.
+    pub fn inverse(&self) -> Result<DenseMatrix, StarkError> {
+        self.solve(&DenseMatrix::identity(self.n))
+    }
+}
+
+/// One-shot `A⁻¹` via LU with partial pivoting — the dense leaf the
+/// distributed recursion bottoms out on.
+pub fn invert(a: &DenseMatrix) -> Result<DenseMatrix, StarkError> {
+    factor(a)?.inverse()
+}
+
+/// One-shot solve of `A · X = B` via LU with partial pivoting.
+pub fn solve(a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix, StarkError> {
+    factor(a)?.solve(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::multiply::matmul_naive;
+
+    /// Seeded, comfortably invertible test matrix: random entries with
+    /// the diagonal boosted past the row sums (strict dominance).
+    fn diag_dominant(n: usize, seed: u64) -> DenseMatrix {
+        let r = DenseMatrix::random(n, n, seed);
+        DenseMatrix::from_fn(n, n, |i, j| {
+            if i == j { r.get(i, j) + n as f64 } else { r.get(i, j) }
+        })
+    }
+
+    #[test]
+    fn inverse_roundtrips_to_identity() {
+        for n in [1usize, 2, 5, 16, 33] {
+            let a = diag_dominant(n, 41 + n as u64);
+            let inv = invert(&a).unwrap();
+            let prod = matmul_naive(&a, &inv);
+            assert!(prod.allclose(&DenseMatrix::identity(n), 1e-9), "n={n}");
+            assert!(inv.as_slice().iter().all(|x| x.is_finite()), "n={n}: non-finite entries");
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct_substitution() {
+        let a = diag_dominant(12, 7);
+        let b = DenseMatrix::random(12, 3, 8);
+        let x = solve(&a, &b).unwrap();
+        assert!(matmul_naive(&a, &x).allclose(&b, 1e-9));
+        // Identity factors exactly: X == B bit-for-bit.
+        let x = solve(&DenseMatrix::identity(12), &b).unwrap();
+        assert_eq!(x.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_entries() {
+        // [[0,1],[2,0]] needs the row swap; without pivoting the first
+        // step would divide by zero.
+        let a = DenseMatrix::from_vec(2, 2, vec![0.0, 1.0, 2.0, 0.0]);
+        let inv = invert(&a).unwrap();
+        let want = DenseMatrix::from_vec(2, 2, vec![0.0, 0.5, 1.0, 0.0]);
+        assert!(inv.allclose(&want, 1e-12));
+    }
+
+    #[test]
+    fn singular_inputs_are_typed_errors_not_nan() {
+        // Exactly singular: a zero matrix fails at the first step.
+        match factor(&DenseMatrix::zeros(3, 3)) {
+            Err(StarkError::SingularMatrix { pivot, at: 0 }) => assert_eq!(pivot, 0.0),
+            other => panic!("expected SingularMatrix, got {other:?}"),
+        }
+        // Rank-deficient: duplicated row dies at the second step.
+        let a = DenseMatrix::from_vec(3, 3, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        match factor(&a) {
+            Err(StarkError::SingularMatrix { at, .. }) => assert!(at > 0, "at={at}"),
+            other => panic!("expected SingularMatrix, got {other:?}"),
+        }
+        // Near-singular: second row differs from the first by ~1e-18 —
+        // far below the n·ε·max|A| threshold.
+        let a = DenseMatrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0 + 1e-18]);
+        assert!(matches!(factor(&a), Err(StarkError::SingularMatrix { .. })));
+        // NaN-poisoned input is singular, never propagated.
+        let a = DenseMatrix::from_vec(2, 2, vec![f64::NAN, 1.0, 1.0, 1.0]);
+        assert!(matches!(factor(&a), Err(StarkError::SingularMatrix { .. })));
+    }
+
+    #[test]
+    fn shape_errors_are_typed() {
+        let rect = DenseMatrix::zeros(3, 4);
+        assert!(matches!(factor(&rect), Err(StarkError::ShapeMismatch { .. })));
+        let f = factor(&diag_dominant(3, 9)).unwrap();
+        assert_eq!(f.dim(), 3);
+        assert!(matches!(
+            f.solve(&DenseMatrix::zeros(4, 1)),
+            Err(StarkError::ShapeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn factor_solve_is_bit_stable() {
+        let a = diag_dominant(17, 21);
+        let b = DenseMatrix::random(17, 17, 22);
+        let x1 = solve(&a, &b).unwrap();
+        let x2 = solve(&a, &b).unwrap();
+        assert_eq!(x1.as_slice(), x2.as_slice());
+    }
+}

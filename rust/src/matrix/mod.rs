@@ -10,6 +10,7 @@ pub mod dense;
 pub mod gemm;
 pub mod gen;
 pub mod io;
+pub mod lu;
 pub mod multiply;
 pub mod parallel;
 pub mod strassen;

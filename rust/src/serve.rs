@@ -51,6 +51,12 @@
 //! // Leaves: {"matrix":[[...]]} (inline) or {"gen":{"n":64,"seed":7}}.
 //! // Nodes:  {"mul":[l,r]} {"add":[x,y,...]} {"sub":[x,y]}
 //! //         {"scale":[2.0,x]} {"t":x} {"pow":[x,8]}
+//! //         {"inv":x} {"solve":[a,b]}
+//! // "pow" k may be negative (k < 0 inverts first: x^-k = (x⁻¹)^k);
+//! // "inv"/"solve" run the SPIN block recursion (DESIGN.md S23) and
+//! // report their level schedules back under "inversions". A
+//! // (near-)singular operand fails the job with the typed
+//! // "singular matrix" error — never a panic or NaN-poisoned output.
 //! -> {"op":"multiply","expr":{"mul":[
 //!        {"add":[{"mul":[{"gen":{"n":64,"seed":1}},{"gen":{"n":64,"seed":2}}]},
 //!                {"gen":{"n":64,"seed":3}}]},
@@ -641,6 +647,23 @@ fn execute(state: &ServerState, id: u64, spec: &JobSpec) -> Value {
                         .collect(),
                 ),
             ));
+            fields.push((
+                "inversions",
+                Value::Array(
+                    out.plan
+                        .inversions
+                        .iter()
+                        .map(|np| {
+                            Value::obj(vec![
+                                ("label", Value::str(np.label.clone())),
+                                ("n", Value::num(np.plan.n as f64)),
+                                ("leaf", Value::num(np.plan.leaf as f64)),
+                                ("depth", Value::num(np.plan.depth() as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
             let collects =
                 out.job.stages.iter().filter(|s| s.label == "result/collect").count();
             fields.push(("collects", Value::num(collects as f64)));
@@ -820,14 +843,31 @@ fn parse_expr(
     if let Some(inner) = v.get("t").or_else(|| v.get("transpose")) {
         return Ok(parse_expr(session, inner, depth + 1, budget)?.transpose());
     }
+    if let Some(inner) = v.get("inv").or_else(|| v.get("inverse")) {
+        return Ok(parse_expr(session, inner, depth + 1, budget)?.inverse());
+    }
+    if v.get("solve").is_some() {
+        let ops = args("solve", 2)?;
+        let a = parse_expr(session, &ops[0], depth + 1, budget)?;
+        let rhs = parse_expr(session, &ops[1], depth + 1, budget)?;
+        return Ok(a.solve(&rhs));
+    }
     if v.get("pow").is_some() {
         let ops = args("pow", 2)?;
-        let k = ops[1].as_u64().context("\"pow\" takes [node, k]")?;
-        anyhow::ensure!(k >= 1 && k <= 64, "\"pow\" k must be in 1..=64");
-        return Ok(parse_expr(session, &ops[0], depth + 1, budget)?.pow(k as u32));
+        // Signed: k < 0 inverts first (x^-k = (x⁻¹)^k). The util JSON
+        // layer has no integer accessor, so integrality is checked on
+        // the f64 (a NaN/∞ fract() is NaN, failing the check too).
+        let kf = ops[1].as_f64().context("\"pow\" takes [node, k]")?;
+        anyhow::ensure!(
+            kf.fract() == 0.0 && kf.abs() <= 64.0,
+            "\"pow\" k must be an integer in -64..=64"
+        );
+        let k = kf as i32;
+        anyhow::ensure!(k != 0, "\"pow\" k must be nonzero (k=0 is not supported)");
+        return Ok(parse_expr(session, &ops[0], depth + 1, budget)?.pow(k));
     }
     anyhow::bail!(
-        "unknown expression node (want one of matrix/gen/ref/mul/add/sub/scale/t/pow): {}",
+        "unknown expression node (want one of matrix/gen/ref/mul/add/sub/scale/t/inv/solve/pow): {}",
         v.to_json()
     )
 }
@@ -878,6 +918,14 @@ fn parse_spec(session: &StarkSession, req: &Value, default_splits: Splits) -> Re
             anyhow::ensure!(
                 np.plan.n <= MAX_SUBMIT_N,
                 "expression node {} plans a padded grid {} beyond the server cap {MAX_SUBMIT_N}",
+                np.label,
+                np.plan.n
+            );
+        }
+        for np in &plan.inversions {
+            anyhow::ensure!(
+                np.plan.n <= MAX_SUBMIT_N,
+                "inversion node {} plans a padded grid {} beyond the server cap {MAX_SUBMIT_N}",
                 np.label,
                 np.plan.n
             );
@@ -2120,5 +2168,99 @@ mod tests {
             resp.get("error").unwrap().as_str().unwrap().contains("never-put"),
             "{resp:?}"
         );
+    }
+
+    #[test]
+    fn solve_expression_over_store_refs() {
+        let server = test_server();
+        let addr = server.addr().to_string();
+        let n = 8usize;
+        let r = DenseMatrix::random(n, n, 41);
+        let s_mat = DenseMatrix::from_fn(n, n, |i, j| {
+            if i == j { r.get(i, j) + n as f64 } else { r.get(i, j) }
+        });
+        let b_mat = DenseMatrix::random(n, n, 43);
+        for (name, m) in [("S", &s_mat), ("B", &b_mat)] {
+            let resp = req(
+                &addr,
+                vec![
+                    ("op", Value::str("put")),
+                    ("name", Value::str(name)),
+                    ("matrix", matrix_to_json(m)),
+                ],
+            );
+            assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+        }
+        let resp = req(
+            &addr,
+            vec![
+                ("op", Value::str("multiply")),
+                ("expr", json::parse(r#"{"solve":[{"ref":"S"},{"ref":"B"}]}"#).unwrap()),
+                ("return_c", Value::Bool(true)),
+            ],
+        );
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+        let inv = resp.get("inversions").unwrap().as_array().unwrap();
+        assert_eq!(inv.len(), 1, "{resp:?}");
+        assert_eq!(inv[0].get("label").unwrap().as_str(), Some("inv1"));
+        assert_eq!(resp.get("collects").unwrap().as_u64(), Some(1), "{resp:?}");
+        // A·X ≈ B — the solve actually solved.
+        let x = parse_matrix(resp.get("c").unwrap()).unwrap();
+        assert!(crate::matrix::matmul_naive(&s_mat, &x).allclose(&b_mat, 1e-8));
+        // Both operands resolved through the store.
+        let hits = resp.get("store").unwrap().get("hits").unwrap().as_u64().unwrap();
+        assert!(hits >= 2, "{resp:?}");
+    }
+
+    #[test]
+    fn singular_inverse_is_a_typed_failure_not_a_wedge() {
+        let server = test_server();
+        let addr = server.addr().to_string();
+        // Rank-1: row 2 is twice row 1.
+        let resp = req(
+            &addr,
+            vec![
+                ("op", Value::str("multiply")),
+                ("expr", json::parse(r#"{"inv":{"matrix":[[1,2],[2,4]]}}"#).unwrap()),
+            ],
+        );
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(false)), "{resp:?}");
+        let err = resp.get("error").unwrap().as_str().unwrap();
+        assert!(err.contains("singular"), "{err}");
+        // The failure was a clean job error, not a wedged runner: the
+        // same server still executes the next job.
+        let ok = req(
+            &addr,
+            vec![("op", Value::str("multiply")), ("n", Value::num(8.0)), ("b", Value::num(2.0))],
+        );
+        assert_eq!(ok.get("ok"), Some(&Value::Bool(true)), "{ok:?}");
+    }
+
+    #[test]
+    fn signed_pow_grammar() {
+        let server = test_server();
+        let addr = server.addr().to_string();
+        let resp = req(
+            &addr,
+            vec![
+                ("op", Value::str("multiply")),
+                ("expr", json::parse(r#"{"pow":[{"matrix":[[2,0],[0,4]]},-1]}"#).unwrap()),
+                ("return_c", Value::Bool(true)),
+            ],
+        );
+        assert_eq!(resp.get("ok"), Some(&Value::Bool(true)), "{resp:?}");
+        let c = parse_matrix(resp.get("c").unwrap()).unwrap();
+        assert!((c.get(0, 0) - 0.5).abs() < 1e-12, "{resp:?}");
+        assert!((c.get(1, 1) - 0.25).abs() < 1e-12, "{resp:?}");
+        // Non-integer and out-of-range exponents are rejected at parse.
+        for k in ["1.5", "65", "-65"] {
+            let tree = json::parse(&format!(r#"{{"pow":[{{"gen":{{"n":4}}}},{k}]}}"#)).unwrap();
+            let bad = req(&addr, vec![("op", Value::str("submit")), ("expr", tree)]);
+            assert_eq!(bad.get("ok"), Some(&Value::Bool(false)), "k={k}: {bad:?}");
+            assert!(
+                bad.get("error").unwrap().as_str().unwrap().contains("integer in -64..=64"),
+                "k={k}: {bad:?}"
+            );
+        }
     }
 }

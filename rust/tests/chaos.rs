@@ -335,3 +335,81 @@ fn chaos_off_has_zero_recovery_cost_and_keeps_the_eq25_ledger() {
         assert_eq!(s.speculative_wins, 0, "stage {}", s.label);
     }
 }
+
+/// Block-recursive inversion and solve under seeded chaos (DESIGN.md
+/// S23): every injection mode at rates up to the 20% soak ceiling
+/// either completes **bit-identical** to the chaos-free run — the
+/// recursion's six per-level multiplies all recover through lineage —
+/// or fails with a typed error. Never a wrong or NaN-poisoned inverse.
+#[test]
+fn inversion_and_solve_survive_chaos_bit_identically() {
+    let n = 16;
+    let mut am = DenseMatrix::random(n, n, 0x1A7);
+    for i in 0..n {
+        am.set(i, i, am.get(i, i) + n as f64); // diag-dominant: invertible
+    }
+    let bm = DenseMatrix::random(n, 2, 0x1A8);
+
+    let clean = StarkSession::builder().cluster(ClusterConfig::new(2, 2)).build().unwrap();
+    let clean_inv = clean.matrix(&am).inverse().collect().unwrap();
+    let clean_solve = clean.matrix(&am).solve(&clean.matrix(&bm)).collect().unwrap();
+
+    assert_prop("inverse-chaos-soak", 0x1AC5_0AC5, 6, |rng| {
+        let mode = rng.range(0, 5);
+        let rate = 0.02 + rng.next_f64() * 0.18; // (0.02, 0.20]
+        let chaos = ChaosConfig {
+            seed: rng.next_u64(),
+            fail_rate: if mode == 0 || mode == 4 { rate } else { 0.0 },
+            panic_rate: if mode == 1 || mode == 4 { rate * 0.5 } else { 0.0 },
+            slow_rate: if mode == 2 || mode == 4 { rate } else { 0.0 },
+            slow_factor: 8.0,
+            executor_loss_rate: if mode == 3 || mode == 4 { rate } else { 0.0 },
+            stage_contains: None,
+            fail_once_partition: None,
+        };
+        let s = StarkSession::builder().cluster(chaos_cluster(chaos)).build().unwrap();
+        let inv = s
+            .matrix(&am)
+            .inverse()
+            .collect()
+            .map_err(|e| format!("inverse under chaos mode {mode}: {e}"))?;
+        if inv.c.as_slice() != clean_inv.c.as_slice() {
+            return Err(format!("inverse not bit-identical under chaos mode {mode}"));
+        }
+        if inv.job.total_attempts() < inv.job.total_tasks() {
+            return Err("inverse: attempts ledger below task count".to_string());
+        }
+        let x = s
+            .matrix(&am)
+            .solve(&s.matrix(&bm))
+            .collect()
+            .map_err(|e| format!("solve under chaos mode {mode}: {e}"))?;
+        if x.c.as_slice() != clean_solve.c.as_slice() {
+            return Err(format!("solve not bit-identical under chaos mode {mode}"));
+        }
+        Ok(())
+    });
+}
+
+/// A deadline expiring mid-inversion cancels with the typed timeout —
+/// no partial result, no escaped panic — and the session is not
+/// wedged: the very next job on it completes and is bit-identical to a
+/// fresh-session run.
+#[test]
+fn deadline_mid_inversion_times_out_typed_without_wedging() {
+    let n = 24;
+    let mut a = DenseMatrix::random(n, n, 0xD1E);
+    for i in 0..n {
+        a.set(i, i, a.get(i, i) + n as f64);
+    }
+    let s = StarkSession::builder().cluster(ClusterConfig::new(2, 2)).build().unwrap();
+    match s.matrix(&a).inverse().collect_with(Some(0)).unwrap_err() {
+        StarkError::JobTimedOut { deadline_ms, .. } => assert_eq!(deadline_ms, 0),
+        other => panic!("expected JobTimedOut mid-inversion, got {other}"),
+    }
+    let after = s.matrix(&a).inverse().collect().unwrap();
+    assert!(after.c.as_slice().iter().all(|x| x.is_finite()));
+    let fresh = StarkSession::builder().cluster(ClusterConfig::new(2, 2)).build().unwrap();
+    let reference = fresh.matrix(&a).inverse().collect().unwrap();
+    assert_eq!(after.c.as_slice(), reference.c.as_slice(), "post-timeout run drifted");
+}

@@ -1,0 +1,266 @@
+//! Numerical-correctness battery for distributed block-recursive
+//! inversion and linear solves (DESIGN.md S23). The contract under
+//! test: residuals stay within the documented conditioning bound
+//! `‖A·Â⁻¹ − I‖_F ≤ c·n·ε·κ̂(A)` (with `κ̂ = ‖A‖_F·‖A⁻¹‖_F` a
+//! computable upper proxy for the condition number), results are
+//! bit-stable across reruns, the distributed recursion agrees with the
+//! dense LU reference at awkward (odd / non-power-of-two) shapes
+//! including the identity-padding regression at n = 100, a solve
+//! collects exactly once, and singular or near-singular inputs come
+//! back as typed [`StarkError::SingularMatrix`] — never a panic, never
+//! NaN-poisoned output.
+
+use stark::api::StarkSession;
+use stark::engine::ClusterConfig;
+use stark::matrix::{lu, matmul_naive, DenseMatrix};
+use stark::util::prop::{assert_prop, Draw};
+use stark::StarkError;
+
+/// Generous constant in the residual bound `c·n·ε·κ̂`. Covers the
+/// error growth of the quadrant recursion (six multiplies plus two
+/// recursive inversions per level) on top of plain LU's `O(n·ε)`.
+const RESIDUAL_C: f64 = 100.0;
+
+fn session() -> StarkSession {
+    StarkSession::builder().cluster(ClusterConfig::new(2, 2)).build().unwrap()
+}
+
+/// Strictly diagonally dominant: off-diagonal entries in (−1, 1),
+/// diagonal shifted by `n`. Nonsingular with κ₂ = O(1).
+fn diag_dominant(n: usize, seed: u64) -> DenseMatrix {
+    let mut a = DenseMatrix::random(n, n, seed);
+    for i in 0..n {
+        a.set(i, i, a.get(i, i) + n as f64);
+    }
+    a
+}
+
+/// Random SPD: `GᵀG + n·I` pushes every eigenvalue into `[n, n + ‖G‖²]`,
+/// so conditioning stays mild at any size this suite uses.
+fn spd(n: usize, seed: u64) -> DenseMatrix {
+    let g = DenseMatrix::random(n, n, seed);
+    let mut a = matmul_naive(&g.transpose(), &g);
+    for i in 0..n {
+        a.set(i, i, a.get(i, i) + n as f64);
+    }
+    a
+}
+
+/// `κ̂ = ‖A‖_F·‖Â⁻¹‖_F` — overestimates κ₂ (by up to a factor n), which
+/// only loosens the bound; it never hides a real residual blow-up.
+fn kappa_hat(a: &DenseMatrix, ainv: &DenseMatrix) -> f64 {
+    a.frobenius() * ainv.frobenius()
+}
+
+/// `‖A·Â⁻¹ − I‖_F`.
+fn identity_residual(a: &DenseMatrix, ainv: &DenseMatrix) -> f64 {
+    let mut r = matmul_naive(a, ainv);
+    for i in 0..r.rows() {
+        r.set(i, i, r.get(i, i) - 1.0);
+    }
+    r.frobenius()
+}
+
+/// Property: over random sizes (including odd and non-power-of-two,
+/// which exercise the identity-padding path) and both matrix families,
+/// the distributed inverse satisfies the conditioning-scaled residual
+/// bound and contains no non-finite entry.
+#[test]
+fn inverse_residual_stays_within_the_conditioning_bound() {
+    assert_prop("inverse-residual", 0x1A7E_57ED, 10, |rng| {
+        let n = rng.range(5, 33);
+        let spd_kind = *rng.choice(&[false, true]);
+        let seed = rng.next_u64();
+        let a = if spd_kind { spd(n, seed) } else { diag_dominant(n, seed) };
+
+        let s = session();
+        let report = s
+            .matrix(&a)
+            .inverse()
+            .collect()
+            .map_err(|e| format!("inverse failed at n={n} spd={spd_kind}: {e}"))?;
+        let ainv = report.c;
+        if !ainv.as_slice().iter().all(|x| x.is_finite()) {
+            return Err(format!("non-finite entry in the inverse at n={n} spd={spd_kind}"));
+        }
+        let bound = RESIDUAL_C * n as f64 * f64::EPSILON * kappa_hat(&a, &ainv);
+        let residual = identity_residual(&a, &ainv);
+        if residual > bound {
+            return Err(format!(
+                "residual {residual:.3e} exceeds bound {bound:.3e} at n={n} spd={spd_kind}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Property: `solve(A, B)` keeps `‖A·X − B‖_F` within the bound scaled
+/// by `‖B‖_F`, works for rectangular right-hand sides, and its job
+/// ledger shows exactly one `result/collect` — the whole solve runs as
+/// one job.
+#[test]
+fn solve_residual_stays_within_the_conditioning_bound_and_collects_once() {
+    assert_prop("solve-residual", 0x50_1BED, 10, |rng| {
+        let n = rng.range(5, 33);
+        let m = rng.range(1, 9);
+        let spd_kind = *rng.choice(&[false, true]);
+        let seed = rng.next_u64();
+        let a = if spd_kind { spd(n, seed) } else { diag_dominant(n, seed) };
+        let b = DenseMatrix::random(n, m, seed ^ 0xB0B);
+
+        let s = session();
+        let report = s
+            .matrix(&a)
+            .solve(&s.matrix(&b))
+            .collect()
+            .map_err(|e| format!("solve failed at n={n} m={m} spd={spd_kind}: {e}"))?;
+        let x = report.c;
+        if (x.rows(), x.cols()) != (n, m) {
+            return Err(format!("solve shape {}×{}, wanted {n}×{m}", x.rows(), x.cols()));
+        }
+        if !x.as_slice().iter().all(|v| v.is_finite()) {
+            return Err(format!("non-finite entry in the solution at n={n} m={m}"));
+        }
+        let ainv = lu::invert(&a).map_err(|e| format!("reference LU failed: {e}"))?;
+        let bound =
+            RESIDUAL_C * n as f64 * f64::EPSILON * kappa_hat(&a, &ainv) * (1.0 + b.frobenius());
+        let residual = matmul_naive(&a, &x).sub(&b).frobenius();
+        if residual > bound {
+            return Err(format!(
+                "solve residual {residual:.3e} exceeds bound {bound:.3e} at n={n} m={m}"
+            ));
+        }
+        let collects = report.job.stages.iter().filter(|st| st.label == "result/collect").count();
+        if collects != 1 {
+            return Err(format!("solve collected {collects} times, wanted exactly 1"));
+        }
+        Ok(())
+    });
+}
+
+/// Pin: reruns of the same inversion and solve — fresh sessions, same
+/// inputs — are bit-identical, and `pow(-1)` is the same expression as
+/// `inverse()` down to the bits.
+#[test]
+fn inversion_and_solve_are_bit_stable_across_reruns() {
+    let n = 24;
+    let a = diag_dominant(n, 0xB17_57AB);
+    let b = DenseMatrix::random(n, 3, 0xB17_57AC);
+
+    let run_inv = || session().matrix(&a).inverse().collect().unwrap().c;
+    let first = run_inv();
+    let second = run_inv();
+    assert_eq!(first.as_slice(), second.as_slice(), "inverse rerun not bit-identical");
+
+    let via_pow = session().matrix(&a).pow(-1).collect().unwrap().c;
+    assert_eq!(first.as_slice(), via_pow.as_slice(), "pow(-1) differs from inverse()");
+
+    let run_solve = || {
+        let s = session();
+        s.matrix(&a).solve(&s.matrix(&b)).collect().unwrap().c
+    };
+    assert_eq!(run_solve().as_slice(), run_solve().as_slice(), "solve rerun not bit-identical");
+}
+
+/// The distributed recursion agrees with the dense LU reference at
+/// awkward shapes: odd, non-power-of-two, and the n = 100 `b = auto`
+/// identity-padding regression. A zero-padded recursion would hand the
+/// dense leaf a singular trailing block at every one of these sizes —
+/// identity padding `diag(A, I)` keeps the padded operand invertible
+/// and the crop exact.
+#[test]
+fn distributed_inverse_matches_dense_lu_at_awkward_shapes() {
+    for (n, seed) in [(7usize, 71u64), (24, 72), (33, 73), (100, 74)] {
+        let a = diag_dominant(n, seed);
+        let reference = lu::invert(&a).unwrap();
+        let report = session().matrix(&a).inverse().collect().unwrap();
+        assert!(
+            report.c.as_slice().iter().all(|x| x.is_finite()),
+            "non-finite entry at n={n} — identity-padding regression"
+        );
+        assert!(
+            report.c.allclose(&reference, 1e-8),
+            "distributed inverse disagrees with dense LU at n={n} (max diff {:.3e})",
+            report.c.max_abs_diff(&reference)
+        );
+        // The planner's schedule for this size exactly halves down to
+        // its dense-LU crossover.
+        let inv_plan = &report.plan.inversions[0].plan;
+        for w in inv_plan.levels.windows(2) {
+            assert_eq!(w[0], 2 * w[1], "non-halving level in {:?}", inv_plan.levels);
+        }
+        assert_eq!(*inv_plan.levels.last().unwrap(), inv_plan.leaf);
+    }
+}
+
+/// Ledger shape of a solve: one job, exactly one `result/collect`, one
+/// planned inversion node, and — whenever the planner chose a real
+/// recursion (crossover below the padded dimension) — the recursion's
+/// internal multiply stages visible under the `inv1/` prefix, none of
+/// them a second collect.
+#[test]
+fn solve_ledger_has_one_collect_and_recursion_stages_under_the_inv_prefix() {
+    let n = 24;
+    let a = diag_dominant(n, 0x1ED6E5);
+    let b = DenseMatrix::random(n, 2, 0x1ED6E6);
+    let s = session();
+    let report = s.matrix(&a).solve(&s.matrix(&b)).collect().unwrap();
+
+    assert_eq!(report.plan.inversions.len(), 1);
+    assert_eq!(report.plan.inversions[0].label, "inv1");
+    let labels: Vec<&str> = report.job.stages.iter().map(|st| st.label.as_str()).collect();
+    assert_eq!(
+        labels.iter().filter(|l| **l == "result/collect").count(),
+        1,
+        "solve must collect exactly once: {labels:?}"
+    );
+    if report.plan.inversions[0].plan.depth() > 0 {
+        assert!(
+            labels.iter().any(|l| l.starts_with("inv1/")),
+            "recursion planned but no inv1/ stages in the ledger: {labels:?}"
+        );
+    }
+}
+
+/// Returns `a` with column 0 scaled by `f` — `f = 0.0` is exactly
+/// singular, and a tiny `f` is numerically singular (every pivot
+/// candidate in the first elimination column sits below LU's
+/// `n·ε·max|A|` round-off floor).
+fn scaled_first_column(a: &DenseMatrix, f: f64) -> DenseMatrix {
+    let mut m = a.clone();
+    for i in 0..m.rows() {
+        m.set(i, 0, m.get(i, 0) * f);
+    }
+    m
+}
+
+/// Singular and near-singular inputs surface as
+/// [`StarkError::SingularMatrix`] from every public path — the dense
+/// leaf (small n), the distributed recursion (n past the padding
+/// boundary), inversion, and solve. Never a panic, never a NaN-poisoned
+/// result, and the session keeps working afterwards.
+#[test]
+fn singular_inputs_are_typed_errors_on_every_path_and_never_wedge() {
+    for (n, what) in [(6usize, "dense leaf"), (24, "distributed recursion")] {
+        for (f, kind) in [(0.0, "singular"), (1e-30, "near-singular")] {
+            let a = scaled_first_column(&diag_dominant(n, 0xDE6E + n as u64), f);
+            let s = session();
+            let err = s.matrix(&a).inverse().collect().unwrap_err();
+            match err {
+                StarkError::SingularMatrix { pivot, .. } => {
+                    assert!(pivot.abs() < 1e-9, "reported pivot {pivot:e} is not tiny");
+                }
+                other => panic!("{kind} {what} inverse: expected SingularMatrix, got {other}"),
+            }
+            let b = DenseMatrix::random(n, 2, 7);
+            match s.matrix(&a).solve(&s.matrix(&b)).collect().unwrap_err() {
+                StarkError::SingularMatrix { .. } => {}
+                other => panic!("{kind} {what} solve: expected SingularMatrix, got {other}"),
+            }
+            // No wedge: the same session still runs clean work.
+            let good = diag_dominant(n, 0xC1EA + n as u64);
+            let after = s.matrix(&good).inverse().collect().unwrap();
+            assert!(after.c.as_slice().iter().all(|x| x.is_finite()));
+        }
+    }
+}
